@@ -1,0 +1,56 @@
+//! A fast tour of the paper's design-space axes (Fig. 7 in miniature):
+//! the I_sat/I_max ratio, the mismatch sigma_VT, beta resolution and
+//! counter resolution. The full studies live in the bench targets.
+//!
+//!     cargo run --release --example design_space
+
+use velm::bench::Table;
+use velm::dse::{self, lmin, FastSim};
+
+fn main() {
+    let threads = dse::default_threads();
+
+    println!("1. regression error vs I_sat^z/I_max^z (L = 64, paper optimum ~ 0.75)");
+    let ratios = vec![0.1, 0.25, 0.5, 0.75, 1.0, 1.5, 2.5];
+    let errs = dse::par_map(ratios.clone(), threads, |r| {
+        lmin::mean_error(&FastSim { ratio: r, ..Default::default() }, 64, 600, 3, 17)
+    });
+    let mut t = Table::new(&["ratio", "sinc RMSE"]);
+    for (r, e) in ratios.iter().zip(&errs) {
+        t.row(&[format!("{r:.2}"), format!("{e:.4}")]);
+    }
+    t.print();
+
+    println!("\n2. regression error vs sigma_VT at the optimal ratio (paper: 15-25 mV best)");
+    let sigmas = vec![0.002, 0.005, 0.010, 0.016, 0.020, 0.025, 0.035, 0.045];
+    let errs = dse::par_map(sigmas.clone(), threads, |s| {
+        lmin::mean_error(&FastSim { sigma_vt: s, ..Default::default() }, 64, 600, 3, 23)
+    });
+    let mut t = Table::new(&["sigma_VT (mV)", "sinc RMSE"]);
+    for (s, e) in sigmas.iter().zip(&errs) {
+        t.row(&[format!("{:.0}", s * 1e3), format!("{e:.4}")]);
+    }
+    t.print();
+
+    println!("\n3. L_min to reach error 0.08 at the 0.75 ratio, per sigma_VT");
+    let sigmas = vec![0.005, 0.016, 0.025, 0.045];
+    let lmins = dse::par_map(sigmas.clone(), threads, |s| {
+        lmin::l_min(
+            &FastSim { sigma_vt: s, ..Default::default() },
+            &lmin::default_l_grid(),
+            0.08,
+            600,
+            3,
+            31,
+        )
+    });
+    let mut t = Table::new(&["sigma_VT (mV)", "L_min"]);
+    for (s, l) in sigmas.iter().zip(&lmins) {
+        t.row(&[
+            format!("{:.0}", s * 1e3),
+            l.map_or(">256".to_string(), |v| v.to_string()),
+        ]);
+    }
+    t.print();
+    println!("\nfull sweeps: cargo bench --bench fig7_design_space");
+}

@@ -1,0 +1,60 @@
+//! Multi-class digit classification through the chip — the paper's
+//! stated future work ("classify multi-class image datasets such as
+//! MNIST"), on the synthetic 8x8 digits stand-in.
+//!
+//!     cargo run --release --example mnist_multiclass
+//!
+//! One-vs-all output weights (Section II), 10-bit fixed-point second
+//! stage, chip-in-the-loop training.
+
+use velm::chip::{dac, ChipModel};
+use velm::config::ChipConfig;
+use velm::datasets::digits;
+use velm::elm::multiclass::{eval_multiclass, train_multiclass};
+use velm::elm::{train::HiddenLayer, ChipHidden};
+
+fn main() -> anyhow::Result<()> {
+    let (ds, train_labels, test_labels) = digits::digits(1500, 500, 7);
+    println!(
+        "digits: {} train / {} test, d = {} (8x8), 10 classes",
+        ds.n_train(),
+        ds.n_test(),
+        ds.d()
+    );
+    let cfg = ChipConfig::default().with_dims(ds.d(), 128).with_b(10);
+    let mut hidden = ChipHidden::new(ChipModel::fabricate(cfg, 31));
+    let (head, h) = train_multiclass(&mut hidden, &ds.train_x, &train_labels, 10, 0.1)
+        .map_err(anyhow::Error::msg)?;
+    // train error from the assembled H
+    let mut wrong = 0usize;
+    for i in 0..ds.n_train() {
+        if head.predict(h.row(i)) != train_labels[i] {
+            wrong += 1;
+        }
+    }
+    println!("train error: {:.2}%", wrong as f64 / ds.n_train() as f64 * 100.0);
+    let err = eval_multiclass(&mut hidden, &head, &ds.test_x, &test_labels);
+    println!("test error (float head): {:.2}%", err * 100.0);
+
+    // deployed fixed-point path: 10-bit one-vs-all MACs over raw counts
+    let q = head.quantize(10);
+    let mut wrong = 0usize;
+    for (x, &y) in ds.test_x.iter().zip(&test_labels) {
+        let codes = dac::features_to_codes(x, &hidden.chip.cfg);
+        let counts = hidden.chip.forward(&codes);
+        if q.predict(&counts) != y {
+            wrong += 1;
+        }
+    }
+    println!(
+        "test error (10-bit second stage): {:.2}%",
+        wrong as f64 / ds.n_test() as f64 * 100.0
+    );
+    println!(
+        "chip ledger: {} conversions, {:.2} pJ/MAC simulated",
+        hidden.chip.ledger.conversions,
+        hidden.chip.ledger.pj_per_mac()
+    );
+    let _ = hidden.hidden_dim();
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Quickstart: fabricate a die, look at its mismatch, train a tiny
+//! classifier chip-in-the-loop, and classify a few samples.
+//!
+//!     cargo run --release --example quickstart
+
+use velm::chip::ChipModel;
+use velm::config::ChipConfig;
+use velm::datasets::synth;
+use velm::elm::{self, ChipHidden};
+use velm::util::prng::Prng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. "Tape out" a 128x128 die: the seed is the silicon.
+    let cfg = ChipConfig::default().with_b(10);
+    let mut chip = ChipModel::fabricate(cfg.clone(), 42);
+    println!("{}\n", cfg.summary());
+
+    // 2. Push one input vector through the mixed-signal first stage.
+    let mut rng = Prng::new(7);
+    let codes: Vec<u16> = (0..cfg.d).map(|_| rng.usize(1024) as u16).collect();
+    let h = chip.forward(&codes);
+    println!(
+        "one conversion: H[0..8] = {:?} (cap {}), T_c = {:.1} us, {:.3} pJ/MAC",
+        &h[..8],
+        cfg.cap(),
+        chip.ledger.sim_time * 1e6,
+        chip.ledger.pj_per_mac()
+    );
+
+    // 3. Chip-in-the-loop ELM training on a real (synthetic-UCI) task.
+    let ds = synth::brightdata(1).with_test_subsample(400, 1);
+    let mut cfg_ds = cfg.clone();
+    cfg_ds.d = ds.d();
+    let mut hidden = ChipHidden::new(ChipModel::fabricate(cfg_ds, 42));
+    let (model, _) =
+        elm::train_model(&mut hidden, &ds.train_x, &ds.train_y, 0.1, 10, false)
+            .map_err(anyhow::Error::msg)?;
+    let err = elm::eval_classification_fixed(&mut hidden, &model, &ds.test_x, &ds.test_y);
+    println!(
+        "\nbrightdata: test error {:.2}% with L = {} hidden neurons \
+         (paper, full UCI set: 1.26%)",
+        err * 100.0,
+        hidden.chip.cfg.l
+    );
+
+    // 4. Classify a couple of raw feature vectors through the deployed
+    //    fixed-point second stage.
+    for (x, y) in ds.test_x.iter().zip(&ds.test_y).take(3) {
+        let codes = velm::chip::dac::features_to_codes(x, &hidden.chip.cfg);
+        let hv = hidden.chip.forward(&codes);
+        let score = model
+            .second
+            .score(&hv, velm::elm::secondstage::codes_sum(&codes));
+        println!("sample -> score {score:+.3}, truth {y:+.0}");
+    }
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! End-to-end serving driver (the DESIGN.md §8 pipeline, all layers
+//! composed): fabricate a multi-die system, train each die in the loop,
+//! bring up the TCP front end, fire concurrent client load through real
+//! sockets, and report accuracy + latency/throughput, comparing the
+//! PJRT-batched hot path against the scalar chip simulator.
+//!
+//!     make artifacts && cargo run --release --example serve_e2e
+//!
+//! Works without artifacts too (falls back to the chip simulator).
+//! Results are recorded in EXPERIMENTS.md §E2E.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Instant;
+
+use velm::cli::Args;
+use velm::config::{ChipConfig, SystemConfig};
+use velm::coordinator::{server, Coordinator};
+use velm::datasets::synth;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
+    let n_requests = args.get_usize("requests", 2000).map_err(anyhow::Error::msg)?;
+    let n_clients = args.get_usize("clients", 8).map_err(anyhow::Error::msg)?;
+    let ds = synth::brightdata(1);
+    let mut chip_cfg = ChipConfig::default().with_b(10);
+    chip_cfg.d = ds.d();
+    let mut sys = SystemConfig::default();
+    sys.n_chips = args.get_usize("chips", 2).map_err(anyhow::Error::msg)?;
+    sys.artifact_dir = args.get_or("artifacts", "artifacts");
+    sys.pjrt_min_batch = args.get_usize("pjrt-min-batch", 4).map_err(anyhow::Error::msg)?;
+    sys.max_wait = std::time::Duration::from_micros(
+        args.get_u64("max-wait-us", 1000).map_err(anyhow::Error::msg)?,
+    );
+
+    // NOTE: the compiled hidden artifacts are 128-wide; brightdata is
+    // d=14, so the serving path below exercises the chip simulator for
+    // the hidden stage unless d matches. To exercise PJRT, we pad the
+    // feature space to the physical 128 channels (extra channels at -1
+    // = code 0, which the S2 switch shuts off — exact).
+    let pad = |x: &Vec<f64>| {
+        let mut p = vec![-1.0; 128];
+        p[..x.len()].copy_from_slice(x);
+        p
+    };
+    let train_x: Vec<Vec<f64>> = ds.train_x.iter().map(pad).collect();
+    let test_x: Vec<Vec<f64>> = ds.test_x.iter().map(pad).collect();
+    chip_cfg.d = 128;
+
+    println!(
+        "training {} dies chip-in-the-loop on {} samples ...",
+        sys.n_chips,
+        train_x.len()
+    );
+    let t_train = Instant::now();
+    let coord = Arc::new(Coordinator::start(
+        &sys, &chip_cfg, &train_x, &ds.train_y, 0.1, 10,
+    )?);
+    println!("trained in {:.1} s", t_train.elapsed().as_secs_f64());
+
+    // bring up the real TCP front end on an ephemeral port
+    let (addr, srv) = server::serve_n(Arc::clone(&coord), n_clients)?;
+    println!("serving on {addr}; firing {n_requests} requests from {n_clients} clients");
+
+    let t0 = Instant::now();
+    let correct: usize = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for c in 0..n_clients {
+            let test_x = &test_x;
+            let test_y = &ds.test_y;
+            handles.push(s.spawn(move || {
+                let stream = TcpStream::connect(addr).expect("connect");
+                stream.set_nodelay(true).expect("nodelay");
+                let mut writer = stream.try_clone().expect("clone");
+                let mut reader = BufReader::new(stream);
+                let mut correct = 0usize;
+                let per_client = n_requests / n_clients;
+                for k in 0..per_client {
+                    let idx = (c * per_client + k) % test_x.len();
+                    let line: Vec<String> =
+                        test_x[idx].iter().map(|v| format!("{v}")).collect();
+                    writeln!(writer, "CLASSIFY {}", line.join(",")).expect("write");
+                    let mut resp = String::new();
+                    reader.read_line(&mut resp).expect("read");
+                    let label: f64 = resp
+                        .trim()
+                        .split_whitespace()
+                        .nth(1)
+                        .and_then(|t| t.parse().ok())
+                        .unwrap_or(0.0);
+                    if (label - test_y[idx]).abs() < 1e-9 {
+                        correct += 1;
+                    }
+                }
+                writeln!(writer, "QUIT").ok();
+                correct
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).sum()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let served = (n_requests / n_clients) * n_clients;
+    println!("\n=== E2E results ===");
+    println!(
+        "accuracy: {:.2}% error over {served} requests",
+        (1.0 - correct as f64 / served as f64) * 100.0
+    );
+    println!(
+        "throughput: {:.0} classifications/s over TCP (paper chip: 31.6 kHz analog conversion rate)",
+        served as f64 / wall
+    );
+    println!("metrics: {}", coord.metrics.report());
+    println!(
+        "hidden-layer MAC throughput: {:.1} MMAC/s wall-clock (paper: 404.5 MMAC/s)",
+        served as f64 * (128.0 * 128.0) / wall / 1e6
+    );
+    srv.join();
+    Ok(())
+}

@@ -1,0 +1,109 @@
+"""AOT lowering: JAX/Pallas L2 graphs -> artifacts/*.hlo.txt for Rust.
+
+Run once at build time (`make artifacts`); Python never executes on the
+request path. The interchange format is HLO *text*, not a serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids that
+the xla_extension 0.5.1 behind the Rust `xla` crate rejects; the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Every artifact is one operating point x one shape. A `manifest.txt` is
+written next to the artifacts so `velm::runtime::ArtifactStore` can
+discover them without parsing HLO:
+
+    name|file|arg0=BxD;arg1=DxL;...|chip params as key=value,...
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .params import DEFAULT, ChipParams
+
+#: Batch shapes compiled for the serving hot path. The coordinator's
+#: dynamic batcher rounds batches up to the nearest compiled shape.
+HIDDEN_BATCHES = (1, 32, 128, 512)
+PREDICT_BATCHES = (1, 32, 128, 512)
+#: Max training-set rows per train artifact (zero-row padding is exact).
+TRAIN_ROWS = (1024, 5120)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _params_str(p: ChipParams) -> str:
+    keys = ("d", "l", "b_in", "b", "i_max", "i_rst", "c_b", "vdd",
+            "sat_ratio", "mode")
+    items = [f"{k}={getattr(p, k)}" for k in keys]
+    items.append(f"t_neu={p.t_neu}")
+    items.append(f"k_neu={p.k_neu}")
+    return ",".join(items)
+
+
+def build_all(out_dir: str, p: ChipParams = DEFAULT) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+
+    def emit(name: str, lowered, arg_shapes, params=""):
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        shapes = ";".join("x".join(str(s) for s in sh) for sh in arg_shapes)
+        manifest.append(f"{name}|{fname}|{shapes}|{params}")
+        print(f"  {fname}: {len(text)} chars")
+
+    d, l = p.d, p.l
+    for bsz in HIDDEN_BATCHES:
+        lowered = jax.jit(model.hidden_fn(p)).lower(_spec(bsz, d), _spec(d, l))
+        emit(f"hidden_b{bsz}_d{d}_l{l}", lowered, [(bsz, d), (d, l)],
+             _params_str(p))
+        lowered = jax.jit(model.hidden_fn(p, normalized=True)).lower(
+            _spec(bsz, d), _spec(d, l))
+        emit(f"hidden_norm_b{bsz}_d{d}_l{l}", lowered, [(bsz, d), (d, l)],
+             _params_str(p))
+
+    for n in TRAIN_ROWS:
+        lowered = jax.jit(model.train_fn).lower(
+            _spec(n, l), _spec(n, 1), _spec(1))
+        emit(f"train_n{n}_l{l}", lowered, [(n, l), (n, 1), (1,)])
+
+    for bsz in PREDICT_BATCHES:
+        lowered = jax.jit(model.predict_fn).lower(_spec(bsz, l), _spec(l, 1))
+        emit(f"predict_b{bsz}_l{l}", lowered, [(bsz, l), (l, 1)])
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="legacy single-file target; artifacts are written "
+                         "to its parent directory")
+    args = ap.parse_args()
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    entries = build_all(out_dir)
+    # Keep the Makefile's stamp target alive: point it at the manifest.
+    with open(args.out, "w") as f:
+        f.write("# stamp file; real artifacts listed in manifest.txt\n")
+        f.write("\n".join(entries) + "\n")
+    print(f"wrote {len(entries)} artifacts to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

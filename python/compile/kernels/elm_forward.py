@@ -1,0 +1,102 @@
+"""L1 Pallas kernel: mismatch VMM fused with the neuron/counter transfer.
+
+This is the chip's compute hot-spot — the d x L random projection that the
+paper performs in the analog current-mirror array — expressed as a tiled
+matmul for the MXU, with the cheap elementwise neuron transfer (eq. 8) and
+saturating counter (eq. 11) fused into the epilogue so the hidden matrix H
+never leaves VMEM at more precision than its counter bits carry.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the physical chip array is
+exactly 128 x 128, i.e. one MXU tile; a chip "conversion" is one (bm x bk)
+x (bk x bn) tile pass. BlockSpec expresses the HBM->VMEM schedule that the
+paper's pitch-matched row/column layout provides in silicon. The weight
+matrix is a runtime argument (mismatch is frozen at fabrication, sampled by
+the caller), while the operating point (i_max, i_rst, c_b, vdd, t_neu, 2^b)
+is baked per artifact variant — matching "one compiled executable per model
+variant" on the Rust side.
+
+interpret=True everywhere: the CPU image cannot execute Mosaic custom
+calls; real-TPU behaviour is estimated in DESIGN.md §9.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..params import ChipParams
+
+#: Default tile sizes: one MXU tile = one physical chip pass.
+BLOCK_B = 128
+BLOCK_D = 128
+BLOCK_L = 128
+
+
+def _epilogue(acc, p: ChipParams):
+    """Fused DAC-scale + neuron transfer + counter on an accumulated tile.
+
+    `acc` holds the raw code-dot-weight partial sums; the DAC scale
+    code -> current (eq. 4) is folded in here once instead of scaling the
+    whole input matrix in HBM.
+    """
+    z = acc * jnp.float32(p.code_scale)
+    if p.mode == "linear":
+        f = jnp.maximum(z, 0.0) * jnp.float32(p.k_neu)
+    else:
+        zc = jnp.clip(z, 0.0, jnp.float32(p.i_rst))
+        f = zc * (jnp.float32(p.i_rst) - zc) * jnp.float32(
+            1.0 / (p.i_rst * p.c_b * p.vdd)
+        )
+    return jnp.minimum(jnp.floor(f * jnp.float32(p.t_neu)), jnp.float32(p.cap))
+
+
+def _kernel(x_ref, w_ref, o_ref, *, nk: int, p: ChipParams):
+    """Grid point (i, j, k): accumulate X[i,k] @ W[k,j] into O[i,j].
+
+    O's index_map ignores k, so the same VMEM tile is revisited across the
+    k steps and doubles as the accumulator; the epilogue fires on the last
+    k step, in-place.
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _done():
+        o_ref[...] = _epilogue(o_ref[...], p)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "bb", "bd", "bl"))
+def hidden(codes, w, p: ChipParams, bb: int = BLOCK_B, bd: int = BLOCK_D,
+           bl: int = BLOCK_L):
+    """Chip first stage H = counter(f_sp(codes @ w)) as a Pallas call.
+
+    codes: f32[B, d] DAC codes in [0, 2^b_in); w: f32[d, L] mismatch
+    weights. B, d, L must be multiples of the block sizes — `model.py`
+    pads with zero rows/columns (zero codes contribute no current; extra
+    hidden columns are sliced off), which is exact for this transfer.
+    """
+    bsz, d = codes.shape
+    d2, l = w.shape
+    assert d == d2, f"codes/weights disagree on d: {d} vs {d2}"
+    assert bsz % bb == 0 and d % bd == 0 and l % bl == 0, (
+        f"shapes ({bsz},{d},{l}) not multiples of blocks ({bb},{bd},{bl})"
+    )
+    nk = d // bd
+    grid = (bsz // bb, l // bl, nk)
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=nk, p=p),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bd), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bd, bl), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bl), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, l), jnp.float32),
+        interpret=True,
+    )(codes.astype(jnp.float32), w.astype(jnp.float32))

@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for the chip forward pass (L1 correctness reference).
+
+Implements exactly the quantised math of `velm::chip::ChipModel` (Rust) and
+`kernels/elm_forward.py` (Pallas): 10-bit DAC -> mismatch VMM -> neuron
+transfer (eq. 8 / eq. 9) -> saturating counter (eq. 11). Used by pytest to
+check the Pallas kernel and by `model.py` as an interpret-free fallback.
+"""
+
+import jax.numpy as jnp
+
+from ..params import ChipParams
+
+
+def neuron_freq(z, p: ChipParams):
+    """Spiking frequency f_sp(I^z) [Hz] (eq. 8, or eq. 9 in linear mode).
+
+    The quadratic transfer is clamped to zero outside [0, I_rst]: below
+    zero there is no input current, above I_rst the reset current can no
+    longer recharge V_mem and the oscillator stalls (Fig. 5a).
+    """
+    z = jnp.asarray(z)
+    if p.mode == "linear":
+        return jnp.maximum(z, 0.0) * p.k_neu
+    zc = jnp.clip(z, 0.0, p.i_rst)
+    return zc * (p.i_rst - zc) / (p.i_rst * p.c_b * p.vdd)
+
+
+def counter(freq, p: ChipParams):
+    """Saturating spike count H = min(floor(f_sp T_neu), 2^b) (eq. 11)."""
+    return jnp.minimum(jnp.floor(freq * p.t_neu), float(p.cap))
+
+
+def dac_current(codes, p: ChipParams):
+    """Current-splitting DAC output per channel (eq. 4): code/2^b_in * I_max."""
+    return codes.astype(jnp.float32) * jnp.float32(p.code_scale)
+
+
+def hidden(codes, w, p: ChipParams):
+    """Full first-stage transfer: codes [B, d] x weights [d, L] -> H [B, L].
+
+    `w` is the log-normal mismatch weight matrix exp(dV_T / U_T) (eq. 12),
+    sampled at fabrication time by the caller.
+    """
+    i_in = dac_current(codes, p)          # [B, d] input currents
+    z = i_in @ w.astype(jnp.float32)      # [B, L] column currents (KCL)
+    return counter(neuron_freq(z, p), p)
+
+
+def normalize(h, codes):
+    """Eq. 26 normalisation: h_j * sum_i(x_i) / sum_j(h_j).
+
+    Makes the hidden vector robust to common-mode VDD / temperature shifts
+    (Section VI-F). Guards the h-sum against all-zero rows.
+    """
+    xs = jnp.sum(codes.astype(jnp.float32), axis=-1, keepdims=True)
+    hs = jnp.sum(h, axis=-1, keepdims=True)
+    return h * xs / jnp.maximum(hs, 1.0)

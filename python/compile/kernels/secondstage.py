@@ -1,0 +1,55 @@
+"""L1 Pallas kernel for the digital second stage: scores = H @ beta.
+
+The paper's second stage is an L-wide fixed-point MAC per output (the
+FPGA / future on-die multiplier array, Section VI-B). As a Pallas kernel
+it is a skinny matvec batched over requests — memory-bound, so the tiling
+keeps H rows resident in VMEM and broadcasts beta. Fused with an optional
+eq. 26 normalisation so normalised serving needs no extra HBM pass.
+
+interpret=True as everywhere (CPU image); the oracle is plain jnp.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_B = 128
+BLOCK_L = 128
+
+
+def _kernel(h_ref, beta_ref, xsum_ref, o_ref, *, normalize: bool):
+    h = h_ref[...]
+    if normalize:
+        hs = jnp.sum(h, axis=-1, keepdims=True)
+        g = xsum_ref[...] / jnp.maximum(hs, 1.0)
+        h = h * g
+    # [bb, L] @ [L, 1] -> [bb, 1]
+    o_ref[...] = jnp.dot(h, beta_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("normalize", "bb"))
+def predict(h, beta, xsum=None, normalize: bool = False, bb: int = BLOCK_B):
+    """Scores for a batch: h [B, L], beta [L, 1], xsum [B, 1] (eq. 26
+    numerator, required when normalize=True). B must be a multiple of bb;
+    L must fit one block (the physical chip is 128-wide)."""
+    bsz, l = h.shape
+    assert beta.shape == (l, 1), f"beta shape {beta.shape}"
+    assert bsz % bb == 0, f"batch {bsz} not a multiple of {bb}"
+    assert l <= BLOCK_L, f"L={l} exceeds one block"
+    if xsum is None:
+        xsum = jnp.zeros((bsz, 1), jnp.float32)
+    grid = (bsz // bb,)
+    return pl.pallas_call(
+        functools.partial(_kernel, normalize=normalize),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, l), lambda i: (i, 0)),
+            pl.BlockSpec((l, 1), lambda i: (0, 0)),
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, 1), jnp.float32),
+        interpret=True,
+    )(h.astype(jnp.float32), beta.astype(jnp.float32), xsum.astype(jnp.float32))

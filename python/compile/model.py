@@ -1,0 +1,136 @@
+"""L2 JAX model: the full ELM compute graphs, built on the L1 kernel.
+
+Three graphs get AOT-lowered (by `aot.py`) and executed from Rust:
+
+  hidden      codes [B,d], W [d,L]            -> H [B,L]      (first stage)
+  hidden_norm codes [B,d], W [d,L]            -> Hn [B,L]     (+ eq. 26)
+  train_beta  H [N,L], T [N,1], lam [1]       -> beta [L,1]   (ridge solve)
+  predict     H [B,L], beta [L,1]             -> scores [B,1] (second stage)
+
+The ridge solve is written as Gauss-Jordan elimination in pure jnp/lax —
+NOT jnp.linalg — because jax's CPU linalg lowers to LAPACK custom-calls
+that the xla_extension 0.5.1 runtime behind the Rust `xla` crate cannot
+execute. H^T H + I/C is SPD, so elimination without pivoting is stable.
+
+Zero-padding is exact end to end: zero code rows produce zero current
+(no H contribution), zero H rows contribute nothing to H^T H or H^T T,
+so one artifact per *maximum* shape serves all smaller workloads.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .params import ChipParams, DEFAULT
+from .kernels import elm_forward, ref
+
+
+def _pad_axis(x, axis: int, multiple: int):
+    """Zero-pad `x` along `axis` up to the next multiple of `multiple`."""
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths)
+
+
+def hidden(codes, w, p: ChipParams = DEFAULT, use_pallas: bool = True):
+    """First-stage transfer H = counter(f_sp(DAC(codes) @ w)) (eqs. 4,8,11).
+
+    Pads ragged shapes up to the kernel block sizes and slices the result
+    back; pallas and the jnp oracle are interchangeable here (pytest pins
+    them together), `use_pallas=False` is a build-time debugging escape.
+    """
+    bsz, _ = codes.shape
+    l = w.shape[1]
+    if not use_pallas:
+        return ref.hidden(codes, w, p)
+    bb = min(bsz, elm_forward.BLOCK_B)
+    cp = _pad_axis(_pad_axis(codes, 0, bb), 1, elm_forward.BLOCK_D)
+    wp = _pad_axis(_pad_axis(w, 0, elm_forward.BLOCK_D), 1, elm_forward.BLOCK_L)
+    h = elm_forward.hidden(cp, wp, p, bb=bb)
+    return h[:bsz, :l]
+
+
+def hidden_norm(codes, w, p: ChipParams = DEFAULT, use_pallas: bool = True):
+    """First stage followed by the eq. 26 robustness normalisation."""
+    h = hidden(codes, w, p, use_pallas)
+    return ref.normalize(h, codes)
+
+
+def gauss_jordan_solve(a, b):
+    """Solve a @ x = b for SPD `a` by vectorised Gauss-Jordan (pure HLO).
+
+    a: [L, L] SPD, b: [L, O]. Lowers to a fori_loop of rank-1 updates —
+    no LAPACK custom-calls, so the artifact runs on any PJRT backend.
+    """
+    l = a.shape[0]
+    m = jnp.concatenate([a, b], axis=1)  # [L, L+O] augmented system
+
+    def step(j, m):
+        pivot = lax.dynamic_index_in_dim(m, j, axis=0, keepdims=False)[j]
+        row = lax.dynamic_index_in_dim(m, j, axis=0, keepdims=False) / pivot
+        col = lax.dynamic_index_in_dim(m, j, axis=1, keepdims=False)
+        m = m - jnp.outer(col, row)
+        return lax.dynamic_update_index_in_dim(m, row, j, axis=0)
+
+    m = lax.fori_loop(0, l, step, m)
+    return m[:, l:]
+
+
+def train_beta(h, t, lam):
+    """Ridge-regularised ELM output weights (eq. 3 + Section II).
+
+    beta = (H^T H + I/C)^-1 H^T T with lam = 1/C passed as a length-1
+    array (scalars cross the Rust FFI most simply as rank-1 literals).
+    """
+    h = h.astype(jnp.float32)
+    t = t.astype(jnp.float32)
+    l = h.shape[1]
+    a = h.T @ h + lam[0] * jnp.eye(l, dtype=jnp.float32)
+    return gauss_jordan_solve(a, h.T @ t)
+
+
+def predict(h, beta):
+    """Second-stage scores o = H @ beta (eq. 1)."""
+    return h.astype(jnp.float32) @ beta.astype(jnp.float32)
+
+
+def quantize_beta(beta, bits: int):
+    """Symmetric uniform quantisation of beta to `bits` (Fig. 7b study).
+
+    Matches `velm::elm::secondstage::quantize` on the Rust side: scale to
+    the max magnitude, round to the signed grid, de-scale.
+    """
+    scale = jnp.maximum(jnp.max(jnp.abs(beta)), 1e-30)
+    levels = float(1 << (bits - 1)) - 1.0
+    return jnp.round(beta / scale * levels) / levels * scale
+
+
+# ---------------------------------------------------------------------------
+# Jitted entry points for AOT lowering (static shapes per variant).
+# ---------------------------------------------------------------------------
+
+def hidden_fn(p: ChipParams = DEFAULT, normalized: bool = False):
+    """Returns the (codes, w) -> H jittable for one operating point."""
+    f = hidden_norm if normalized else hidden
+
+    @jax.jit
+    def run(codes, w):
+        return (f(codes, w, p),)
+
+    return run
+
+
+@jax.jit
+def train_fn(h, t, lam):
+    return (train_beta(h, t, lam),)
+
+
+@jax.jit
+def predict_fn(h, beta):
+    return (predict(h, beta),)

@@ -1,0 +1,91 @@
+"""Shared chip operating-point parameters for the L1/L2 compute graphs.
+
+These mirror `velm::config::ChipConfig` on the Rust side (values from
+Table I and Section III-D of the paper). The AOT artifacts bake one
+operating point per executable — Python is build-time only, so runtime
+sweeps over VDD / temperature use the Rust behavioural simulator instead.
+
+Units are SI throughout (amps, seconds, farads, volts).
+"""
+
+from dataclasses import dataclass, replace
+
+
+#: Thermal voltage at 300 K (used by eq. 12 weight model on the Rust side).
+UT_300K = 0.02585
+
+#: Paper section III-D nominal conversion gain: 26 kHz/nA.
+K_NEU_NOMINAL = 26e3 / 1e-9
+
+
+@dataclass(frozen=True)
+class ChipParams:
+    """One operating point of the mixed-signal ELM chip (paper Table I).
+
+    The forward transfer implemented by both the Pallas kernel and the
+    jnp oracle is, per sample ``x`` (10-bit codes) and neuron ``j``::
+
+        i_in[i]  = x[i] / 2**b_in * i_max                     (eq. 4)
+        z[j]     = sum_i i_in[i] * w[i, j]                    (KCL column sum)
+        f_sp[j]  = z (i_rst - z) / (i_rst c_b vdd)            (eq. 8, clamped >= 0)
+        H[j]     = min(floor(f_sp * t_neu), 2**b)             (eq. 11)
+
+    ``mode`` selects the quadratic eq. 8 transfer or its small-signal
+    linearisation ``f = K_neu z`` (eq. 9) used for the design-space
+    simulations in Section III-D.
+    """
+
+    d: int = 128            # input channels (physical k)
+    l: int = 128            # hidden neurons (physical N)
+    b_in: int = 10          # input DAC bits
+    b: int = 14             # valid counter MSB (output resolution)
+    i_max: float = 1e-9     # full-scale input current per channel [A]
+    i_rst: float = 512e-9   # neuron reset current [A]
+    c_b: float = 1.0 / (K_NEU_NOMINAL * 1.0)  # feedback cap for K_neu = 26 kHz/nA
+    vdd: float = 1.0        # supply [V]
+    i_lk: float = 0.0       # leakage [A] (negligible, eq. 8 assumption)
+    sat_ratio: float = 0.75  # I_sat^z / I_max^z design point (Fig. 7a)
+    mode: str = "quadratic"  # "quadratic" (eq. 8) | "linear" (eq. 9)
+
+    @property
+    def k_neu(self) -> float:
+        """Current-to-frequency conversion gain 1/(C_b VDD) [Hz/A] (eq. 10)."""
+        return 1.0 / (self.c_b * self.vdd)
+
+    @property
+    def i_max_z(self) -> float:
+        """Maximum column current I_max^z = d * I_max [A]."""
+        return self.d * self.i_max
+
+    @property
+    def i_sat_z(self) -> float:
+        """Column current at which the counter saturates (Section III-D)."""
+        return self.sat_ratio * self.i_max_z
+
+    @property
+    def i_flx(self) -> float:
+        """Inflection current I_rst / 2 where f_sp peaks (Fig. 5a)."""
+        return self.i_rst / 2.0
+
+    @property
+    def t_neu(self) -> float:
+        """Counting window chosen so H = 2^b exactly at I_sat^z (eq. 19)."""
+        return (2.0**self.b) / (self.k_neu * self.i_sat_z)
+
+    @property
+    def cap(self) -> int:
+        """Counter saturation value 2^b (eq. 11)."""
+        return 1 << self.b
+
+    @property
+    def code_scale(self) -> float:
+        """Scale folding DAC code->current: i_in = code * code_scale."""
+        return self.i_max / (1 << self.b_in)
+
+    def with_(self, **kw) -> "ChipParams":
+        """Functional update (frozen dataclass)."""
+        return replace(self, **kw)
+
+
+#: Operating point used for the serving artifacts (Table I defaults).
+DEFAULT = ChipParams()

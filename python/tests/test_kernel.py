@@ -1,0 +1,134 @@
+"""L1 correctness: the Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, block sizes, dtypes and operating points; the
+CORE signal is that `elm_forward.hidden` and `ref.hidden` agree. Counts
+may legitimately differ by 1 LSB where the pre-floor spike estimate
+f_sp*T_neu lands within float-reassociation distance of an integer
+(blocked vs flat accumulation order), so the check is: pre-floor
+frequencies allclose AND counts within 1, with ties accounted for.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.params import ChipParams
+from compile.kernels import elm_forward, ref
+
+
+def make_params(d, l, mode="quadratic", b=14):
+    return ChipParams(d=d, l=l, mode=mode, b=b)
+
+
+def lognormal_w(rng, d, l, sigma_vt=0.016, ut=0.02585):
+    """Fabrication-time mismatch weights, eq. 12."""
+    return np.exp(rng.normal(0.0, sigma_vt, size=(d, l)) / ut).astype(np.float32)
+
+
+def check_match(h_ker, h_ref, freq_ref, p):
+    h_ker = np.asarray(h_ker)
+    h_ref = np.asarray(h_ref)
+    diff = np.abs(h_ker - h_ref)
+    assert diff.max() <= 1.0, f"count mismatch > 1 LSB: {diff.max()}"
+    if diff.max() > 0:
+        # any 1-LSB disagreements must sit on a floor boundary
+        est = np.asarray(freq_ref * p.t_neu)
+        near = np.abs(est - np.round(est)) < 1e-2 * np.maximum(est, 1.0)
+        assert np.all(near[diff > 0]), "off-boundary count mismatch"
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bsz=st.integers(1, 6),
+    dt=st.integers(1, 5),
+    lt=st.integers(1, 5),
+    mode=st.sampled_from(["quadratic", "linear"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_blocked(bsz, dt, lt, mode, seed):
+    """Random shapes as multiples of a small block (exercises the grid)."""
+    bb, bd, bl = 4, 8, 8
+    bsz, d, l = bsz * bb, dt * bd, lt * bl
+    rng = np.random.default_rng(seed)
+    p = make_params(d, l, mode)
+    codes = rng.integers(0, 1024, size=(bsz, d)).astype(np.float32)
+    w = lognormal_w(rng, d, l)
+    h_ker = elm_forward.hidden(jnp.asarray(codes), jnp.asarray(w), p,
+                               bb=bb, bd=bd, bl=bl)
+    z = ref.dac_current(jnp.asarray(codes), p) @ jnp.asarray(w)
+    freq = ref.neuron_freq(z, p)
+    h_ref = ref.hidden(jnp.asarray(codes), jnp.asarray(w), p)
+    check_match(h_ker, h_ref, freq, p)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       dtype=st.sampled_from([np.float32, np.float64, np.int32]))
+def test_kernel_input_dtypes(seed, dtype):
+    """Codes arriving as other dtypes are cast identically on both paths."""
+    rng = np.random.default_rng(seed)
+    d = l = 8
+    p = make_params(d, l)
+    codes = rng.integers(0, 1024, size=(4, d)).astype(dtype)
+    w = lognormal_w(rng, d, l)
+    h_ker = elm_forward.hidden(jnp.asarray(codes), jnp.asarray(w), p,
+                               bb=4, bd=8, bl=8)
+    z = ref.dac_current(jnp.asarray(codes), p) @ jnp.asarray(w)
+    h_ref = ref.hidden(jnp.asarray(codes), jnp.asarray(w), p)
+    check_match(h_ker, h_ref, ref.neuron_freq(z, p), p)
+
+
+def test_kernel_full_chip_shape():
+    """The physical 128x128 array at serving batch 32, one MXU tile."""
+    rng = np.random.default_rng(7)
+    p = make_params(128, 128)
+    codes = rng.integers(0, 1024, size=(32, 128)).astype(np.float32)
+    w = lognormal_w(rng, 128, 128)
+    h_ker = elm_forward.hidden(jnp.asarray(codes), jnp.asarray(w), p, bb=32)
+    z = ref.dac_current(jnp.asarray(codes), p) @ jnp.asarray(w)
+    h_ref = ref.hidden(jnp.asarray(codes), jnp.asarray(w), p)
+    check_match(h_ker, h_ref, ref.neuron_freq(z, p), p)
+    # sanity: the counter cap is respected and some neurons are active
+    assert np.asarray(h_ker).max() <= p.cap
+    assert np.asarray(h_ker).max() > 0
+
+
+def test_kernel_zero_input_gives_zero_counts():
+    """S2 switch behaviour: all-zero codes shut the row off (eq. 5)."""
+    p = make_params(8, 8)
+    codes = jnp.zeros((4, 8), jnp.float32)
+    w = jnp.ones((8, 8), jnp.float32)
+    h = elm_forward.hidden(codes, w, p, bb=4, bd=8, bl=8)
+    assert np.all(np.asarray(h) == 0.0)
+
+
+def test_kernel_saturation_at_cap():
+    """Currents far above I_sat^z pin every counter at 2^b (eq. 11)."""
+    p = make_params(8, 8, b=6)
+    codes = jnp.full((4, 8), 1023.0, jnp.float32)
+    w = jnp.full((8, 8), 500.0, jnp.float32)  # huge gain: z ~ 4 uA >> I_rst
+    h = elm_forward.hidden(codes, w, p, bb=4, bd=8, bl=8)
+    # z >> i_rst stalls the oscillator in quadratic mode -> 0, so use linear
+    p_lin = p.with_(mode="linear")
+    h_lin = elm_forward.hidden(codes, w, p_lin, bb=4, bd=8, bl=8)
+    assert np.all(np.asarray(h_lin) == p.cap)
+    # quadratic mode: oscillator stalls above I_rst (Fig. 5a right edge)
+    assert np.all(np.asarray(h) == 0.0)
+
+
+@pytest.mark.parametrize("bb,bd,bl", [(1, 8, 8), (2, 16, 8), (8, 8, 16)])
+def test_kernel_block_shape_invariance(bb, bd, bl):
+    """H is invariant to the VMEM tiling choice (same math, any schedule)."""
+    rng = np.random.default_rng(3)
+    d, l, bsz = 16, 16, 8
+    p = make_params(d, l)
+    codes = rng.integers(0, 1024, size=(bsz, d)).astype(np.float32)
+    w = lognormal_w(rng, d, l)
+    base = elm_forward.hidden(jnp.asarray(codes), jnp.asarray(w), p,
+                              bb=8, bd=16, bl=16)
+    other = elm_forward.hidden(jnp.asarray(codes), jnp.asarray(w), p,
+                               bb=bb, bd=bd, bl=bl)
+    z = ref.dac_current(jnp.asarray(codes), p) @ jnp.asarray(w)
+    check_match(other, np.asarray(base), ref.neuron_freq(z, p), p)

@@ -1,0 +1,80 @@
+"""Unit properties of the jnp oracle itself (paper equations 4, 8, 9, 11, 26)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.params import ChipParams
+from compile.kernels import ref
+
+P = ChipParams(d=8, l=8)
+
+
+def test_neuron_freq_peak_at_iflx():
+    """f_sp peaks at I_rst/2 = I_flx and is zero at 0 and I_rst (Fig. 5a)."""
+    z = np.linspace(0.0, P.i_rst, 2001)
+    f = np.asarray(ref.neuron_freq(z, P))
+    assert f[0] == 0.0
+    assert abs(f[-1]) < 1e-6
+    peak = z[np.argmax(f)]
+    assert abs(peak - P.i_flx) < P.i_rst / 1000
+    # eq. 8 peak value: I_rst / (4 C_b VDD)
+    fmax_theory = P.i_rst / (4 * P.c_b * P.vdd)
+    np.testing.assert_allclose(f.max(), fmax_theory, rtol=1e-3)
+
+
+def test_neuron_freq_linear_region():
+    """For I^z << I_rst, eq. 8 collapses to eq. 9: f = K_neu I^z."""
+    z = np.linspace(0.0, P.i_rst / 50, 100)
+    quad = np.asarray(ref.neuron_freq(z, P))
+    lin = z * P.k_neu
+    np.testing.assert_allclose(quad, lin, rtol=0.025)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(-1e-9, 1e-5))
+def test_neuron_freq_nonnegative_and_clamped(z):
+    f = float(ref.neuron_freq(jnp.float32(z), P))
+    assert f >= 0.0
+    assert f <= P.i_rst / (4 * P.c_b * P.vdd) * (1 + 1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 1023), st.integers(0, 1023))
+def test_dac_monotone(c1, c2):
+    """Eq. 4 DAC is monotone and exactly linear in the code."""
+    i1 = float(ref.dac_current(jnp.float32(c1), P))
+    i2 = float(ref.dac_current(jnp.float32(c2), P))
+    if c1 < c2:
+        assert i1 < i2
+    np.testing.assert_allclose(i1, c1 / 1024 * P.i_max, rtol=1e-6)
+
+
+def test_counter_saturates():
+    freq = jnp.asarray([0.0, 1.0 / P.t_neu, 1e12])
+    h = np.asarray(ref.counter(freq, P))
+    assert h[0] == 0.0
+    assert h[1] == 1.0
+    assert h[2] == P.cap
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_normalize_cancels_common_mode_gain(seed):
+    """Eq. 26: a common-mode gain g on every h_j cancels exactly."""
+    rng = np.random.default_rng(seed)
+    h = rng.uniform(1.0, 100.0, size=(4, 8)).astype(np.float32)
+    codes = rng.integers(1, 1024, size=(4, 8)).astype(np.float32)
+    g = 1.0 + rng.uniform(-0.3, 0.3)
+    n0 = np.asarray(ref.normalize(jnp.asarray(h), jnp.asarray(codes)))
+    n1 = np.asarray(ref.normalize(jnp.asarray(g * h), jnp.asarray(codes)))
+    np.testing.assert_allclose(n0, n1, rtol=1e-4)
+
+
+def test_normalize_zero_row_guard():
+    h = jnp.zeros((2, 4), jnp.float32)
+    codes = jnp.ones((2, 4), jnp.float32)
+    out = np.asarray(ref.normalize(h, codes))
+    assert np.all(np.isfinite(out))
+    assert np.all(out == 0.0)

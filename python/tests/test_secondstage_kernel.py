@@ -1,0 +1,52 @@
+"""Pallas second-stage kernel vs plain-jnp oracle (incl. eq. 26 fusion)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import secondstage
+from compile.kernels import ref
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nb=st.integers(1, 4),
+    l=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_predict_matches_matmul(nb, l, seed):
+    rng = np.random.default_rng(seed)
+    bb = 8
+    b = nb * bb
+    h = rng.uniform(0, 1000, size=(b, l)).astype(np.float32)
+    beta = rng.normal(size=(l, 1)).astype(np.float32)
+    out = np.asarray(secondstage.predict(jnp.asarray(h), jnp.asarray(beta), bb=bb))
+    np.testing.assert_allclose(out, h @ beta, rtol=2e-5, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_predict_normalized_matches_ref(seed):
+    rng = np.random.default_rng(seed)
+    b, l = 16, 32
+    h = rng.uniform(0, 1000, size=(b, l)).astype(np.float32)
+    codes = rng.integers(1, 1024, size=(b, 8)).astype(np.float32)
+    xsum = codes.sum(axis=1, keepdims=True).astype(np.float32)
+    beta = rng.normal(size=(l, 1)).astype(np.float32)
+    out = np.asarray(
+        secondstage.predict(
+            jnp.asarray(h), jnp.asarray(beta), jnp.asarray(xsum),
+            normalize=True, bb=8,
+        )
+    )
+    hn = np.asarray(ref.normalize(jnp.asarray(h), jnp.asarray(codes)))
+    np.testing.assert_allclose(out, hn @ beta, rtol=2e-4, atol=1e-2)
+
+
+def test_zero_hidden_rows_score_zero_when_normalized():
+    h = jnp.zeros((8, 16), jnp.float32)
+    beta = jnp.ones((16, 1), jnp.float32)
+    xsum = jnp.full((8, 1), 100.0, jnp.float32)
+    out = np.asarray(secondstage.predict(h, beta, xsum, normalize=True, bb=8))
+    assert np.all(out == 0.0)

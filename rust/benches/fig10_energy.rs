@@ -1,0 +1,87 @@
+//! Fig. 10: energy per conversion E_c vs I_max^z (and its T_neu view)
+//! for VDD in {0.8, 1.0, 1.2} V — the "operate briefly at high frequency"
+//! design rule, with the minimum near (slightly below) I_flx.
+//!
+//!     cargo bench --bench fig10_energy
+
+use velm::bench::{section, Table};
+use velm::chip::energy;
+use velm::config::ChipConfig;
+
+fn main() {
+    let base = ChipConfig::default().with_b(10); // paper: Fig 10 plotted with b = 10
+
+    section("Fig 10(a): E_c vs I_max^z for three VDDs");
+    let mut t = Table::new(&[
+        "I_max^z / I_flx(1V)", "E_c @0.8V (pJ)", "E_c @1.0V (pJ)", "E_c @1.2V (pJ)",
+    ]);
+    let i_flx_nom = base.i_flx();
+    let fracs: Vec<f64> = (1..=14).map(|k| k as f64 * 0.18).collect();
+    for &fr in &fracs {
+        let i = fr * i_flx_nom;
+        let cells: Vec<String> = [0.8, 1.0, 1.2]
+            .iter()
+            .map(|&v| {
+                let c = base.clone().with_vdd(v);
+                let e = energy::e_c(i, &c);
+                if e.is_finite() {
+                    format!("{:.2}", e * 1e12)
+                } else {
+                    "-".to_string() // I_sat beyond this VDD's I_rst
+                }
+            })
+            .collect();
+        t.row(&[format!("{fr:.2}"), cells[0].clone(), cells[1].clone(), cells[2].clone()]);
+    }
+    t.print();
+
+    section("minimum location and value per VDD");
+    let mut t = Table::new(&[
+        "VDD (V)", "argmin I_max^z / I_flx(VDD)", "min E_c (pJ)", "T_neu at min (us)",
+    ]);
+    for &v in &[0.8, 1.0, 1.2] {
+        let c = base.clone().with_vdd(v);
+        let grid: Vec<f64> = (1..=120).map(|k| k as f64 / 120.0 * 1.33 * c.i_rst()).collect();
+        let (mut best_i, mut best_e) = (0.0, f64::MAX);
+        for &i in &grid {
+            let e = energy::e_c(i, &c);
+            if e < best_e {
+                best_e = e;
+                best_i = i;
+            }
+        }
+        let f_sat = velm::chip::neuron::f_sp(c.sat_ratio * best_i, &c);
+        t.row(&[
+            format!("{v:.1}"),
+            format!("{:.2}", best_i / c.i_flx()),
+            format!("{:.2}", best_e * 1e12),
+            format!("{:.1}", c.cap() as f64 / f_sat * 1e6),
+        ]);
+    }
+    t.print();
+    println!(
+        "paper shape: minimum near I_flx (optimum slightly off peak due to the\n\
+         V_mem short-circuit blowup); lower VDD -> lower minimum energy but\n\
+         longer conversion time (Fig 10b)."
+    );
+
+    section("Fig 10(b): the same minimum in T_neu coordinates");
+    let mut t = Table::new(&["VDD (V)", "E_c at T_neu=0.2ms (pJ)", "E_c at T_neu~min (pJ)"]);
+    for &v in &[0.8, 1.0, 1.2] {
+        let c = base.clone().with_vdd(v);
+        // long-window (low current) point: I_max^z with f(I_sat) small
+        let slow_i = 0.05 * c.i_rst();
+        let fast_grid: Vec<f64> = (1..=60).map(|k| k as f64 / 60.0 * 1.3 * c.i_rst()).collect();
+        let e_min = fast_grid
+            .iter()
+            .map(|&i| energy::e_c(i, &c))
+            .fold(f64::MAX, f64::min);
+        t.row(&[
+            format!("{v:.1}"),
+            format!("{:.2}", energy::e_c(slow_i, &c) * 1e12),
+            format!("{:.2}", e_min * 1e12),
+        ]);
+    }
+    t.print();
+    println!("slow (long T_neu) operation costs several x the optimum — the Section IV-C rule.");
+}

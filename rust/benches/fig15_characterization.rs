@@ -1,0 +1,77 @@
+//! Fig. 15: die characterisation — neuron transfer-curve spread, the
+//! 128x128 mismatch surface, and the log-normal weight histogram with
+//! the sigma_VT extraction, across a batch of 9 dies (the paper
+//! measured 9 chips: 15.36-16.26 mV).
+//!
+//!     cargo bench --bench fig15_characterization
+
+use velm::bench::{bench, section, Table};
+use velm::chip::ChipModel;
+use velm::config::{thermal_voltage, ChipConfig};
+use velm::util::stats;
+
+fn sigma_from_surface(chip: &mut ChipModel) -> f64 {
+    let surf = chip.weight_surface(100);
+    let mut vals: Vec<f64> = surf.data.iter().cloned().filter(|&v| v > 0.0).collect();
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = vals[vals.len() / 2];
+    let logs: Vec<f64> = vals.iter().map(|v| (v / median).ln()).collect();
+    let (_, s) = stats::fit_gaussian(&logs);
+    s * thermal_voltage(chip.cfg.temp_k)
+}
+
+fn main() {
+    let cfg = ChipConfig::default();
+
+    section("Fig 15(a): transfer-curve spread across the 128 neurons");
+    let mut chip = ChipModel::fabricate(cfg.clone(), 1);
+    let sweep: Vec<u16> = (0..=10).map(|k| (k * 102) as u16).collect();
+    let curves = chip.transfer_curves(0, &sweep);
+    let top: Vec<f64> = curves.last().unwrap().iter().map(|&c| c as f64).collect();
+    println!(
+        "at Data_in = {}: count mean {:.0}, std {:.0} ({:.0}% relative spread across neurons)",
+        sweep.last().unwrap(),
+        stats::mean(&top),
+        stats::std(&top),
+        stats::std(&top) / stats::mean(&top) * 100.0
+    );
+    println!("paper: 'significant variation between the transfer curves' — the mismatch resource.");
+
+    section("Fig 15(b,c): weight surface + log-normal fit over 9 dies");
+    let mut t = Table::new(&["die", "sigma_dVT extracted (mV)"]);
+    let mut sigmas = Vec::new();
+    for die in 0..9u64 {
+        let mut chip = ChipModel::fabricate(cfg.clone(), 100 + die);
+        let s = sigma_from_surface(&mut chip);
+        sigmas.push(s * 1e3);
+        t.row(&[format!("{die}"), format!("{:.2}", s * 1e3)]);
+    }
+    t.print();
+    let lo = sigmas.iter().cloned().fold(f64::MAX, f64::min);
+    let hi = sigmas.iter().cloned().fold(f64::MIN, f64::max);
+    println!(
+        "extracted sigma_dVT range [{lo:.2}, {hi:.2}] mV around fabricated {:.1} mV\n\
+         (paper, 9 chips: 15.36 - 16.26 mV around ~16 mV)",
+        cfg.sigma_vt * 1e3
+    );
+
+    section("weight histogram shape (die 0, normalised by median)");
+    let mut chip = ChipModel::fabricate(cfg.clone(), 100);
+    let surf = chip.weight_surface(100);
+    let vals: Vec<f64> = surf.data.iter().cloned().filter(|&v| v > 0.0).collect();
+    let mut sorted = vals.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = sorted[sorted.len() / 2];
+    let norm: Vec<f64> = vals.iter().map(|v| v / median).collect();
+    let (centers, counts) = stats::histogram(&norm, 0.0, 4.0, 16);
+    for (c, n) in centers.iter().zip(&counts) {
+        println!("{c:5.2} | {}", "#".repeat(n / 40));
+    }
+    println!("right-skewed log-normal, as Fig 15(c).");
+
+    section("timing");
+    bench("128x128 weight_surface (128 conversions)", 1.0, || {
+        let mut chip = ChipModel::fabricate(cfg.clone(), 7);
+        std::hint::black_box(chip.weight_surface(100));
+    });
+}

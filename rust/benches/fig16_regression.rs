@@ -1,0 +1,54 @@
+//! Fig. 16: sinc regression through the full behavioural chip
+//! (5000 noisy training samples, sigma = 0.2, L = 128).
+//!
+//!     cargo bench --bench fig16_regression
+//!
+//! Paper: hardware error 0.021; software ELM ~0.01.
+
+use velm::bench::{bench, section};
+use velm::chip::ChipModel;
+use velm::config::ChipConfig;
+use velm::datasets::synth;
+use velm::elm::{self, softelm::SoftElm, ChipHidden};
+
+fn main() {
+    section("Fig 16: sinc(x) regression, chip vs software");
+    let ds = synth::sinc(5000, 500, 0.2, 3);
+    let cfg = ChipConfig::default().with_dims(1, 128).with_b(12);
+    let mut hw = ChipHidden::new(ChipModel::fabricate(cfg, 11));
+    let (model, _) = elm::train_model(&mut hw, &ds.train_x, &ds.train_y, 1e-4, 14, false)
+        .expect("train");
+    let hw_err = elm::eval_regression(&mut hw, &model, &ds.test_x, &ds.test_y);
+    let mut soft = SoftElm::with_scale(1, 128, 10.0, 12);
+    let (sw_model, _) = elm::train_model(&mut soft, &ds.train_x, &ds.train_y, 1e-4, 32, false)
+        .expect("train sw");
+    let sw_err = elm::eval_regression(&mut soft, &sw_model, &ds.test_x, &ds.test_y);
+    println!("hardware RMSE {hw_err:.4} (paper 0.021); software RMSE {sw_err:.4} (paper ~0.01)");
+    println!(
+        "hw/sw ratio {:.2} (paper {:.2}) — hardware within ~2-3x of software, same as the paper",
+        hw_err / sw_err,
+        0.021 / 0.01
+    );
+    // trial spread across dies
+    let mut errs = Vec::new();
+    for die in 0..5u64 {
+        let cfg = ChipConfig::default().with_dims(1, 128).with_b(12);
+        let mut hw = ChipHidden::new(ChipModel::fabricate(cfg, 100 + die));
+        let (m, _) = elm::train_model(&mut hw, &ds.train_x, &ds.train_y, 1e-4, 14, false)
+            .expect("train");
+        errs.push(elm::eval_regression(&mut hw, &m, &ds.test_x, &ds.test_y));
+    }
+    println!(
+        "across 5 dies: mean {:.4}, min {:.4}, max {:.4}",
+        velm::util::stats::mean(&errs),
+        errs.iter().cloned().fold(f64::MAX, f64::min),
+        errs.iter().cloned().fold(f64::MIN, f64::max)
+    );
+
+    section("timing");
+    bench("one chip conversion (d=1, L=128)", 0.3, || {
+        let _ = std::hint::black_box(
+            velm::elm::train::HiddenLayer::transform(&mut hw, &[0.37]),
+        );
+    });
+}

@@ -1,0 +1,125 @@
+//! Figs. 17 + 18 and Table IV context: robustness of the hidden layer to
+//! VDD and temperature variations, with and without the eq. 26
+//! normalisation (Section VI-F).
+//!
+//!     cargo bench --bench fig17_18_robustness
+//!
+//! Paper: VDD variation of h_j 22.7% raw -> 4.2% normalised; temperature
+//! error grows fast raw, slowly normalised.
+
+use velm::bench::{section, Table};
+use velm::chip::ChipModel;
+use velm::config::ChipConfig;
+use velm::datasets::synth;
+use velm::elm::secondstage::{codes_sum, normalize_h};
+#[allow(unused_imports)]
+use velm::elm::{self, ChipHidden};
+use velm::util::stats;
+
+/// Hidden outputs of neuron j for a probe input at several VDDs.
+fn vdd_sweep(cfg: &ChipConfig, seed: u64, code: u16, vdds: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let mut raw_spread = Vec::new();
+    let mut norm_spread = Vec::new();
+    let mut chip = ChipModel::fabricate(cfg.clone(), seed);
+    let codes = vec![code; cfg.d];
+    // collect per-neuron outputs at each VDD
+    let mut raw: Vec<Vec<f64>> = vec![Vec::new(); cfg.l];
+    let mut nrm: Vec<Vec<f64>> = vec![Vec::new(); cfg.l];
+    for &v in vdds {
+        chip.set_vdd(v);
+        let h = chip.forward(&codes);
+        let hn = normalize_h(&h, codes_sum(&codes));
+        for j in 0..cfg.l {
+            raw[j].push(h[j] as f64);
+            nrm[j].push(hn[j]);
+        }
+    }
+    for j in 0..cfg.l {
+        if raw[j].iter().any(|&x| x > 10.0) {
+            raw_spread.push(stats::max_rel_spread_pct(&raw[j]));
+            norm_spread.push(stats::max_rel_spread_pct(&nrm[j]));
+        }
+    }
+    (raw_spread, norm_spread)
+}
+
+/// A hidden layer with an appended constant feature: the second stage's
+/// trained intercept. With an intercept, a common-mode count gain (PTAT
+/// bias drift) moves raw scores off their operating point — which is why
+/// the paper's raw error climbs with temperature — while the eq. 26
+/// normalisation cancels the gain before the MAC.
+struct WithBias<T>(T);
+
+impl<T: velm::elm::train::HiddenLayer> velm::elm::train::HiddenLayer for WithBias<T> {
+    fn input_dim(&self) -> usize {
+        self.0.input_dim()
+    }
+    fn hidden_dim(&self) -> usize {
+        self.0.hidden_dim() + 1
+    }
+    fn transform(&mut self, x: &[f64]) -> Vec<f64> {
+        let mut h = self.0.transform(x);
+        h.push(1.0);
+        h
+    }
+}
+
+fn temperature_error(name: &str, normalize: bool, temps: &[f64]) -> Vec<f64> {
+    let ds = synth::by_name(name, 7).unwrap().with_test_subsample(400, 7);
+    let cfg = ChipConfig::default().with_dims(ds.d(), 128).with_b(10);
+    // train at nominal temperature (with intercept)
+    let chip = ChipModel::fabricate(cfg.clone(), 33);
+    let mut hidden = WithBias(if normalize {
+        ChipHidden::normalized(chip)
+    } else {
+        ChipHidden::new(chip)
+    });
+    let (model, _) =
+        elm::train_model(&mut hidden, &ds.train_x, &ds.train_y, 0.1, 10, normalize)
+            .expect("train");
+    // test across temperatures (float head; the intercept is the last beta)
+    temps
+        .iter()
+        .map(|&t| {
+            hidden.0.chip.set_temp(t);
+            elm::eval_classification(&mut hidden, &model, &ds.test_x, &ds.test_y) * 100.0
+        })
+        .collect()
+}
+
+fn main() {
+    let cfg = ChipConfig::default();
+    let vdds = [0.8, 1.0, 1.2];
+
+    section("Fig 17: hidden-output variation across VDD {0.8, 1.0, 1.2} V");
+    let (raw, norm) = vdd_sweep(&cfg, 13, 700, &vdds);
+    println!(
+        "raw h_j:        max spread {:.1}% (mean {:.1}%)   [paper: max 22.7%]",
+        raw.iter().cloned().fold(f64::MIN, f64::max),
+        stats::mean(&raw)
+    );
+    println!(
+        "normalised h_j: max spread {:.1}% (mean {:.1}%)   [paper: max 4.2%]",
+        norm.iter().cloned().fold(f64::MIN, f64::max),
+        stats::mean(&norm)
+    );
+
+    section("Fig 18: classification error vs temperature (train at 300 K)");
+    let temps = [280.0, 290.0, 300.0, 310.0, 320.0];
+    for name in ["australian", "brightdata"] {
+        let raw = temperature_error(name, false, &temps);
+        let nrm = temperature_error(name, true, &temps);
+        let mut t = Table::new(&["T (K)", "raw err %", "normalised err %"]);
+        for (i, &tk) in temps.iter().enumerate() {
+            t.row(&[format!("{tk:.0}"), format!("{:.2}", raw[i]), format!("{:.2}", nrm[i])]);
+        }
+        println!("\n{name}:");
+        t.print();
+        let raw_growth = (raw[0] - raw[2]).max(raw[4] - raw[2]);
+        let nrm_growth = (nrm[0] - nrm[2]).max(nrm[4] - nrm[2]);
+        println!(
+            "error growth at +-20K: raw {raw_growth:+.2} pts vs normalised {nrm_growth:+.2} pts \
+             (paper: raw grows rapidly, normalised slowly)"
+        );
+    }
+}

@@ -1,0 +1,71 @@
+//! Fig. 5 + Fig. 6: neuron transfer function — closed-form theory
+//! (eq. 8) vs the transient circuit simulation, across VDD.
+//!
+//!     cargo bench --bench fig5_6_neuron
+
+use velm::bench::{bench, section, Table};
+use velm::chip::{counter, neuron};
+use velm::config::ChipConfig;
+
+fn main() {
+    let cfg = ChipConfig::default();
+
+    section("Fig 5(a): f_sp vs I^z — quadratic with peak at I_flx");
+    let mut t = Table::new(&["I^z / I_rst", "f_sp theory (kHz)", "H (counts, b=14)"]);
+    for k in [0.05, 0.1, 0.2, 0.35, 0.5, 0.65, 0.8, 0.95, 1.0] {
+        let i = k * cfg.i_rst();
+        let f = neuron::f_sp(i, &cfg);
+        t.row(&[
+            format!("{k:.2}"),
+            format!("{:.1}", f / 1e3),
+            format!("{}", counter::count(f, &cfg)),
+        ]);
+    }
+    t.print();
+    println!(
+        "peak at I_flx = I_rst/2 = {:.1} nA, f_max = {:.1} kHz; counter caps at {}",
+        cfg.i_flx() * 1e9,
+        neuron::f_max(&cfg) / 1e3,
+        cfg.cap()
+    );
+
+    section("Fig 6(a): theory (eq. 8) vs transient simulation (log sweep)");
+    let mut t = Table::new(&["I^z (nA)", "theory (kHz)", "transient (kHz)", "dev %"]);
+    let mut worst: f64 = 0.0;
+    for k in 0..10 {
+        let i = cfg.i_rst() * (0.02 * 1.55f64.powi(k)).min(0.98);
+        let theory = neuron::f_sp(i, &cfg);
+        let sim = neuron::transient(i, 60.0 / theory, &cfg, 200);
+        let dev = (sim.freq - theory).abs() / theory * 100.0;
+        worst = worst.max(dev);
+        t.row(&[
+            format!("{:.2}", i * 1e9),
+            format!("{:.2}", theory / 1e3),
+            format!("{:.2}", sim.freq / 1e3),
+            format!("{dev:.2}"),
+        ]);
+    }
+    t.print();
+    println!("worst deviation {worst:.2}% — paper: 'close match' (Fig 6a)");
+
+    section("Fig 6(b): f_sp vs I^z for VDD in {0.8, 1.0, 1.2} V");
+    let mut t = Table::new(&["VDD (V)", "K_neu (kHz/nA)", "I_flx (nA)", "f_max (kHz)"]);
+    for vdd in [0.8, 1.0, 1.2] {
+        let c = cfg.clone().with_vdd(vdd);
+        t.row(&[
+            format!("{vdd:.1}"),
+            format!("{:.1}", c.k_neu() * 1e-12),
+            format!("{:.1}", c.i_flx() * 1e9),
+            format!("{:.1}", neuron::f_max(&c) / 1e3),
+        ]);
+    }
+    t.print();
+    println!("paper shape: higher VDD -> larger I_flx and f_max; lower VDD -> higher small-signal gain");
+
+    section("timing");
+    bench("transient 60 cycles @200 steps", 0.3, || {
+        let i = 0.3 * cfg.i_rst();
+        let f = neuron::f_sp(i, &cfg);
+        std::hint::black_box(neuron::transient(i, 60.0 / f, &cfg, 200));
+    });
+}

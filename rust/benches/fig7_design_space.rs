@@ -1,0 +1,101 @@
+//! Fig. 7 — the paper's central design-space exploration:
+//!  (a) L_min vs I_sat^z/I_max^z across sigma_VT (optimum ratio ~0.75,
+//!      best sigma_VT 15-25 mV);
+//!  (b) classification accuracy vs beta resolution (10 bits suffice);
+//!  (c) classification accuracy vs counter bits (b ~ 6 suffices).
+//!
+//!     cargo bench --bench fig7_design_space [-- --quick]
+
+use velm::bench::{section, Table};
+use velm::dse::{self, lmin, FastSim};
+use velm::elm::secondstage::QuantBeta;
+use velm::util::mat::{ridge_solve, Mat};
+use velm::util::prng::Prng;
+
+/// Classification error on a synthetic brightdata-style task through the
+/// FastSim first stage, with beta quantised to `beta_bits`.
+fn classify_error(sim: &FastSim, l: usize, beta_bits: u32, seed: u64) -> f64 {
+    let ds = velm::datasets::synth::brightdata(seed).with_test_subsample(500, seed);
+    let mut rng = Prng::new(seed ^ 0xF17);
+    let w = sim.sample_weights(ds.d(), l, &mut rng);
+    let scale = 1.0 / sim.cap();
+    let mut h_tr = sim.hidden(&ds.train_x, &w);
+    h_tr.scale(scale);
+    let t = Mat { rows: ds.train_y.len(), cols: 1, data: ds.train_y.clone() };
+    let beta = match ridge_solve(&h_tr, &t, 1e-4) {
+        Ok(b) => b,
+        Err(_) => return 1.0,
+    };
+    let q = QuantBeta::quantize(&beta.data, beta_bits);
+    let bq = q.dequantize();
+    let mut h_te = sim.hidden(&ds.test_x, &w);
+    h_te.scale(scale);
+    let scores = h_te.matvec(&bq);
+    velm::elm::train::misclassification(&scores, &ds.test_y)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let threads = dse::default_threads();
+    let trials = if quick { 2 } else { 5 };
+
+    section("Fig 7(a): L_min (error <= 0.08 on sinc regression) vs ratio x sigma_VT");
+    let ratios = [0.1, 0.25, 0.5, 0.75, 1.0, 1.5, 2.5];
+    let sigmas = [0.005, 0.015, 0.025, 0.045];
+    let mut t = Table::new(&["ratio \\ sigma_VT", "5 mV", "15 mV", "25 mV", "45 mV"]);
+    let jobs: Vec<(f64, f64)> = ratios
+        .iter()
+        .flat_map(|&r| sigmas.iter().map(move |&s| (r, s)))
+        .collect();
+    let res = dse::par_map(jobs, threads, |(r, s)| {
+        let sim = FastSim { ratio: r, sigma_vt: s, ..Default::default() };
+        lmin::l_min(&sim, &lmin::default_l_grid(), 0.08, 600, trials, 41)
+    });
+    for (ri, &r) in ratios.iter().enumerate() {
+        let mut cells = vec![format!("{r:.2}")];
+        for si in 0..sigmas.len() {
+            cells.push(
+                res[ri * sigmas.len() + si]
+                    .map_or(">256".to_string(), |v| v.to_string()),
+            );
+        }
+        t.row(&cells);
+    }
+    t.print();
+    println!("paper: optimum ratio ~0.75; L_min smallest for sigma_VT in 15-25 mV;");
+    println!("small sigma degrades sharply away from the optimum, large sigma is flat.");
+
+    section("Fig 7(b): classification error vs beta resolution (L = 128)");
+    let sim = FastSim::default();
+    let bits: Vec<u32> = vec![2, 3, 4, 6, 8, 10, 12, 16];
+    let errs = dse::par_map(bits.clone(), threads, |b| {
+        let e: f64 = (0..trials as u64)
+            .map(|k| classify_error(&sim, 128, b, 50 + k))
+            .sum::<f64>()
+            / trials as f64;
+        e
+    });
+    let mut t = Table::new(&["beta bits", "error %"]);
+    for (b, e) in bits.iter().zip(&errs) {
+        t.row(&[format!("{b}"), format!("{:.2}", e * 100.0)]);
+    }
+    t.print();
+    println!("paper: 10 bits is sufficient (error flat beyond ~10 bits).");
+
+    section("Fig 7(c): classification error vs counter bits b (ratio 0.75, beta 10b)");
+    let cbits: Vec<u32> = vec![1, 2, 3, 4, 5, 6, 8, 10];
+    let errs = dse::par_map(cbits.clone(), threads, |b| {
+        let sim = FastSim { b, ..Default::default() };
+        let e: f64 = (0..trials as u64)
+            .map(|k| classify_error(&sim, 128, 10, 60 + k))
+            .sum::<f64>()
+            / trials as f64;
+        e
+    });
+    let mut t = Table::new(&["counter bits", "error %"]);
+    for (b, e) in cbits.iter().zip(&errs) {
+        t.row(&[format!("{b}"), format!("{:.2}", e * 100.0)]);
+    }
+    t.print();
+    println!("paper: b ~ 6 is enough for classification.");
+}

@@ -1,0 +1,74 @@
+//! Fig. 9: speed trade-offs — active-mirror bandwidth boost, T_cm vs
+//! T_neu as functions of I_max and b, and the eq. 20 crossover contours.
+//!
+//!     cargo bench --bench fig9_speed
+
+use velm::bench::{section, Table};
+use velm::chip::{mirror, timing};
+use velm::config::ChipConfig;
+
+fn main() {
+    let cfg = ChipConfig::default();
+
+    section("Fig 9(a): active current mirror bandwidth boost");
+    let code_small = 32u16; // 4 MSBs zero -> S1 engages
+    let bw_plain = {
+        let mut c = cfg.clone();
+        c.active_mirror = false;
+        mirror::bandwidth_effective(code_small, &c)
+    };
+    let bw_active = mirror::bandwidth_effective(code_small, &cfg);
+    println!(
+        "code {code_small}: passive {:.1} kHz -> active {:.1} kHz = {:.2}x \
+         (paper SPICE: 5.84x)",
+        bw_plain / 1e3,
+        bw_active / 1e3,
+        bw_active / bw_plain
+    );
+
+    section("Fig 9(b): T_cm and T_neu vs I_max (d = 10)");
+    let mut t = Table::new(&[
+        "I_max (nA)", "T_cm passive (us)", "T_cm active (us)",
+        "T_neu b=8 (us)", "T_neu b=12 (us)",
+    ]);
+    for &i_max_na in &[0.25, 0.5, 1.0, 2.0, 4.0, 8.0] {
+        let mut c = cfg.clone().with_dims(10, 128).with_i_max(i_max_na * 1e-9);
+        let i_max_z = c.i_max_z();
+        c.active_mirror = false;
+        let tcm_passive = timing::t_cm_mid(&c);
+        c.active_mirror = true;
+        let tcm_active = 0.5 * (mirror::t_cm_max(&c) + mirror::t_cm_min(&c));
+        let tneu8 = {
+            let c8 = c.clone().with_b(8);
+            timing::t_neu_for(i_max_z, &c8)
+        };
+        let tneu12 = {
+            let c12 = c.clone().with_b(12);
+            timing::t_neu_for(i_max_z, &c12)
+        };
+        t.row(&[
+            format!("{i_max_na:.2}"),
+            format!("{:.2}", tcm_passive * 1e6),
+            format!("{:.2}", tcm_active * 1e6),
+            format!("{:.2}", tneu8 * 1e6),
+            format!("{:.2}", tneu12 * 1e6),
+        ]);
+    }
+    t.print();
+    println!("paper shape: all fall with I_max; T_neu grows 16x from b=8 to b=12");
+
+    section("Fig 9(c): eq. 20 contours (2^b where T_cm = T_neu) per VDD");
+    let mut t = Table::new(&["d", "b* @0.8V", "b* @1.0V", "b* @1.2V"]);
+    for &d in &[2usize, 8, 32, 128] {
+        let row: Vec<String> = [0.8, 1.0, 1.2]
+            .iter()
+            .map(|&v| format!("{:.1}", timing::contour_bits(d, &cfg.clone().with_vdd(v))))
+            .collect();
+        t.row(&[format!("{d}"), row[0].clone(), row[1].clone(), row[2].clone()]);
+    }
+    t.print();
+    println!(
+        "operating regime at (d=128, b=10, VDD=1): {:?} — paper: T_neu dominates",
+        timing::regime(&cfg.clone().with_b(10))
+    );
+}

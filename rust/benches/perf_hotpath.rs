@@ -1,0 +1,108 @@
+//! §Perf hot-path benchmarks (EXPERIMENTS.md §Perf): the scalar chip
+//! conversion, the training-path linear algebra, the PJRT batched hidden
+//! stage (when artifacts are built), and coordinator overhead.
+//!
+//!     make artifacts && cargo bench --bench perf_hotpath
+
+use std::path::Path;
+use std::time::Instant;
+
+use velm::bench::{bench, section};
+use velm::chip::ChipModel;
+use velm::config::{ChipConfig, SystemConfig};
+use velm::coordinator::Coordinator;
+use velm::runtime::PjrtEngine;
+use velm::util::mat::{ridge_solve, Mat};
+use velm::util::prng::Prng;
+
+fn main() {
+    let cfg = ChipConfig::default();
+    let mut rng = Prng::new(1);
+
+    section("L3 scalar chip conversion (d=128, L=128)");
+    let mut chip = ChipModel::fabricate(cfg.clone(), 1);
+    let codes: Vec<u16> = (0..cfg.d).map(|_| rng.usize(1024) as u16).collect();
+    let t = bench("chip.forward 128x128", 0.5, || {
+        std::hint::black_box(chip.forward(&codes));
+    });
+    println!(
+        "  => {:.1} MMAC/s scalar-sim throughput",
+        (cfg.d * cfg.l) as f64 / t.median_s / 1e6
+    );
+    let mut noisy_chip = ChipModel::fabricate(cfg.clone().with_noise(true), 1);
+    bench("chip.forward 128x128 (noise on)", 0.5, || {
+        std::hint::black_box(noisy_chip.forward(&codes));
+    });
+
+    section("training-path linear algebra");
+    let h = Mat::from_fn(1000, 128, |i, j| ((i * 31 + j * 17) % 97) as f64 / 97.0);
+    let t_mat = Mat::from_fn(1000, 1, |i, _| if i % 2 == 0 { 1.0 } else { -1.0 });
+    bench("gram 1000x128", 0.5, || {
+        std::hint::black_box(h.gram());
+    });
+    bench("ridge_solve 1000x128", 0.5, || {
+        std::hint::black_box(ridge_solve(&h, &t_mat, 1e-2).unwrap());
+    });
+    let a = Mat::from_fn(256, 256, |i, j| ((i * 7 + j * 13) % 101) as f64 / 101.0);
+    let b = Mat::from_fn(256, 256, |i, j| ((i * 11 + j * 3) % 103) as f64 / 103.0);
+    bench("matmul 256^3", 0.5, || {
+        std::hint::black_box(a.matmul(&b));
+    });
+
+    section("L1/L2 PJRT batched hidden stage");
+    let dir = Path::new("artifacts");
+    if velm::runtime::artifacts_available(dir) {
+        let mut engine = PjrtEngine::new(dir).expect("engine");
+        println!("platform: {}", engine.platform());
+        let mut chip = ChipModel::fabricate(cfg.clone(), 1);
+        let w: Vec<f32> = chip.weights().to_f32();
+        for &bsz in &[1usize, 32, 128, 512] {
+            let codes: Vec<f32> = (0..bsz * cfg.d)
+                .map(|k| ((k * 37) % 1024) as f32)
+                .collect();
+            // warm the executable cache before timing
+            let _ = engine
+                .hidden(&codes, bsz, cfg.d, cfg.l, &w, false)
+                .expect("hidden");
+            let t = bench(&format!("pjrt hidden b={bsz}"), 0.5, || {
+                std::hint::black_box(
+                    engine.hidden(&codes, bsz, cfg.d, cfg.l, &w, false).unwrap(),
+                );
+            });
+            println!(
+                "  => {:.1} MMAC/s batched",
+                (bsz * cfg.d * cfg.l) as f64 / t.median_s / 1e6
+            );
+        }
+    } else {
+        println!("artifacts not built; run `make artifacts` to bench the PJRT path");
+    }
+
+    section("coordinator end-to-end (2 dies, in-proc)");
+    let ds = velm::datasets::synth::brightdata(1);
+    let mut chip_cfg = cfg.clone();
+    chip_cfg.d = ds.d();
+    let sys = SystemConfig {
+        n_chips: 2,
+        artifact_dir: "/nonexistent".into(), // isolate coordinator overhead
+        ..Default::default()
+    };
+    let train: Vec<Vec<f64>> = ds.train_x.iter().take(200).cloned().collect();
+    let ty: Vec<f64> = ds.train_y.iter().take(200).cloned().collect();
+    let coord = Coordinator::start(&sys, &chip_cfg, &train, &ty, 0.1, 10).expect("coord");
+    let t0 = Instant::now();
+    let n = 2000;
+    let rxs: Vec<_> = (0..n)
+        .map(|i| coord.submit(ds.test_x[i % ds.test_x.len()].clone()).unwrap())
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "coordinator: {n} requests in {dt:.3} s = {:.0} req/s; {}",
+        n as f64 / dt,
+        coord.metrics.report()
+    );
+    coord.shutdown();
+}

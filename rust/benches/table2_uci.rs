@@ -1,0 +1,88 @@
+//! Table II: misclassification on the UCI-shaped binary tasks — hardware
+//! ELM (chip, L = 128, 10-bit beta) vs software float ELM (sigmoid,
+//! L = 1000) — plus the Section VI-D dimension-extension measurements
+//! (leukemia d = 7129; diabetes L = 16 -> 128 by weight reuse).
+//!
+//!     cargo bench --bench table2_uci [-- --full]
+
+use velm::bench::{section, Table};
+use velm::chip::ChipModel;
+use velm::config::ChipConfig;
+use velm::datasets::synth;
+use velm::elm::{self, softelm::SoftElm, ChipHidden};
+use velm::extension::VirtualChip;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let seed = 1u64;
+    section("Table II: hardware (L=128) vs software (L=1000) misclassification");
+    let paper: &[(&str, f64, f64)] = &[
+        ("diabetes", 22.05, 22.91),
+        ("australian", 13.82, 12.11),
+        ("brightdata", 0.69, 1.26),
+        ("adult", 15.41, 15.57),
+    ];
+    let mut table = Table::new(&[
+        "Dataset", "d", "Ntr", "Nte",
+        "SW% paper", "SW% ours", "HW% paper", "HW% ours", "gap paper", "gap ours",
+    ]);
+    for &(name, swp, hwp) in paper {
+        let mut ds = synth::by_name(name, seed).unwrap();
+        if !full {
+            ds = ds.with_test_subsample(800, seed);
+        }
+        let mut soft = SoftElm::new(ds.d(), 1000, seed + 10);
+        let (swm, _) = elm::train_model(&mut soft, &ds.train_x, &ds.train_y, 50.0, 32, false)
+            .expect("sw train");
+        let sw = elm::eval_classification(&mut soft, &swm, &ds.test_x, &ds.test_y) * 100.0;
+        let cfg = ChipConfig::default().with_dims(ds.d(), 128).with_b(10);
+        let mut hw = ChipHidden::new(ChipModel::fabricate(cfg, seed + 20));
+        let (hwm, _) = elm::train_model(&mut hw, &ds.train_x, &ds.train_y, 0.1, 10, false)
+            .expect("hw train");
+        let hwv =
+            elm::eval_classification_fixed(&mut hw, &hwm, &ds.test_x, &ds.test_y) * 100.0;
+        table.row(&[
+            name.to_string(),
+            format!("{}", ds.d()),
+            format!("{}", ds.n_train()),
+            format!("{}", ds.n_test()),
+            format!("{swp:.2}"),
+            format!("{sw:.2}"),
+            format!("{hwp:.2}"),
+            format!("{hwv:.2}"),
+            format!("{:+.2}", hwp - swp),
+            format!("{:+.2}", hwv - sw),
+        ]);
+    }
+    table.print();
+    println!("claim under test: HW tracks SW within a couple of points on every set.");
+
+    section("Section VI-D: leukemia (d = 7129) via input-dimension extension");
+    let ds = synth::leukemia(5);
+    let cfg = ChipConfig::default().with_dims(128, 128).with_b(10);
+    let mut vchip = VirtualChip::new(ChipModel::fabricate(cfg, 21), ds.d(), 128).unwrap();
+    let (m, _) = elm::train_model(&mut vchip, &ds.train_x, &ds.train_y, 0.1, 10, false)
+        .expect("leukemia train");
+    let err = elm::eval_classification(&mut vchip, &m, &ds.test_x, &ds.test_y) * 100.0;
+    println!(
+        "leukemia: {err:.1}% over {} passes/sample (paper HW 20.59%, SW 19.92%)",
+        vchip.plan.passes()
+    );
+
+    section("Section VI-D: diabetes hidden extension L = 16 -> 128");
+    let ds = synth::diabetes(6);
+    let small = ChipConfig::default().with_dims(ds.d(), 16).with_b(10);
+    let mut s16 = ChipHidden::new(ChipModel::fabricate(small.clone(), 22));
+    let (m16, _) = elm::train_model(&mut s16, &ds.train_x, &ds.train_y, 0.1, 10, false)
+        .expect("L16 train");
+    let e16 = elm::eval_classification(&mut s16, &m16, &ds.test_x, &ds.test_y) * 100.0;
+    let mut v128 = VirtualChip::new(ChipModel::fabricate(small, 22), ds.d(), 128).unwrap();
+    let (m128, _) = elm::train_model(&mut v128, &ds.train_x, &ds.train_y, 0.1, 10, false)
+        .expect("L128 train");
+    let e128 = elm::eval_classification(&mut v128, &m128, &ds.test_x, &ds.test_y) * 100.0;
+    println!("diabetes: L=16 {e16:.1}% -> virtual L=128 {e128:.1}% (paper: 27.1% -> 22.4%)");
+    // our calibrated small-die starting point is better than the paper's
+    // (27.1%); the claim that survives is "expansion never hurts and
+    // recovers the large-die error"
+    assert!(e128 <= e16 + 3.0, "hidden extension degraded accuracy (pct points)");
+}

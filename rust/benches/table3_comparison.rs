@@ -1,0 +1,147 @@
+//! Table III: speed/power operating points and the energy-efficiency
+//! headline — 0.47 pJ/MAC at a 31.6 kHz classification rate, 404.5
+//! MMAC/s, plus the 0.7 V low-power point and the 1 V maximum-speed
+//! point, all derived from the Section IV models on the behavioural die.
+//!
+//!     cargo bench --bench table3_comparison
+
+use velm::bench::{section, Table};
+use velm::chip::{timing, ChipModel};
+use velm::config::ChipConfig;
+use velm::util::prng::Prng;
+
+/// Measure one operating point on the behavioural die (the Keithley
+/// stand-in): conversion rate, supply power, energy efficiency, and the
+/// fraction of neurons actually oscillating (not stalled / not starved).
+fn measure(cfg: &ChipConfig, seed: u64, data_in: u16) -> (f64, f64, f64, f64) {
+    let mut chip = ChipModel::fabricate(cfg.clone(), seed);
+    let codes = vec![data_in; cfg.d];
+    chip.reset_ledger();
+    let mut active = 0usize;
+    let mut total = 0usize;
+    for _ in 0..20 {
+        let h = chip.forward(&codes);
+        active += h.iter().filter(|&&c| c > 0).count();
+        total += h.len();
+    }
+    let rate = chip.ledger.rate();
+    let power = chip.ledger.energy / chip.ledger.sim_time;
+    (rate, power, chip.ledger.pj_per_mac(), active as f64 / total as f64)
+}
+
+/// Configure the die like the Section VI-B measurement: d=128, L=100
+/// active, 2^b = 128 (b=7), Data_in = 1000, and pick I_max so the
+/// conversion rate lands near `target_rate` — considering only *valid*
+/// points where at least half the neurons are actually spiking (the
+/// paper's measurements obviously had working neurons).
+fn operating_point(vdd: f64, target_rate: f64, seed: u64) -> (ChipConfig, f64, f64, f64) {
+    let mut best: Option<(ChipConfig, f64, f64, f64)> = None;
+    let mut rng = Prng::new(seed);
+    let _ = &mut rng;
+    for k in 1..=60 {
+        let i_max = 0.02e-9 * 1.15f64.powi(k);
+        let cfg = ChipConfig::default()
+            .with_dims(128, 100)
+            .with_b(7)
+            .with_vdd(vdd)
+            .with_i_max(i_max);
+        let (rate, power, pj, active) = measure(&cfg, seed, 1000);
+        if active < 0.5 {
+            continue; // stalled or starved array: not a usable point
+        }
+        let better = match &best {
+            None => true,
+            Some((_, r, _, _)) => (rate - target_rate).abs() < (r - target_rate).abs(),
+        };
+        if better {
+            best = Some((cfg, rate, power, pj));
+        }
+    }
+    best.expect("no valid operating point found")
+}
+
+fn main() {
+    section("Table III operating points (d=128, L=100, b=7, Data_in=1000)");
+    let mut t = Table::new(&[
+        "point", "VDD", "rate (kHz)", "power (uW)", "pJ/MAC", "MMAC/s",
+        "paper rate", "paper power", "paper pJ/MAC",
+    ]);
+    // 0.7 V low-power point (paper: 4.5 kHz, 17.85 uW)
+    let (cfg, rate, power, pj) = operating_point(0.7, 4.5e3, 1);
+    t.row(&[
+        "low-power".into(),
+        "0.7".into(),
+        format!("{:.1}", rate / 1e3),
+        format!("{:.1}", power * 1e6),
+        format!("{pj:.2}"),
+        format!("{:.1}", rate * (cfg.d * cfg.l) as f64 / 1e6),
+        "4.5 kHz".into(),
+        "17.85 uW".into(),
+        "-".into(),
+    ]);
+    // 1 V energy-optimal point (paper headline: 31.6 kHz, 188.8 uW, 0.47)
+    let (cfg, rate, power, pj) = operating_point(1.0, 31.6e3, 2);
+    let headline_pj = pj;
+    t.row(&[
+        "optimal".into(),
+        "1.0".into(),
+        format!("{:.1}", rate / 1e3),
+        format!("{:.1}", power * 1e6),
+        format!("{pj:.2}"),
+        format!("{:.1}", rate * (cfg.d * cfg.l) as f64 / 1e6),
+        "31.6 kHz".into(),
+        "188.8 uW".into(),
+        "0.47".into(),
+    ]);
+    // 1 V maximum-speed point (paper: 146.25 kHz, 2.2 mW)
+    let (cfg, rate, power, pj) = operating_point(1.0, 146.25e3, 3);
+    t.row(&[
+        "max-speed".into(),
+        "1.0".into(),
+        format!("{:.1}", rate / 1e3),
+        format!("{:.1}", power * 1e6),
+        format!("{pj:.2}"),
+        format!("{:.1}", rate * (cfg.d * cfg.l) as f64 / 1e6),
+        "146.25 kHz".into(),
+        "2200 uW".into(),
+        "-".into(),
+    ]);
+    t.print();
+
+    section("whole-system estimate (with digital second stage)");
+    // Section VI-B: 7.1 pJ per 14x10-bit multiply at 1.5 V, L multiplies
+    let e_mult = 7.1e-12;
+    let l = 100usize;
+    let d = 128usize;
+    let e_first = headline_pj * 1e-12 * (d * l) as f64;
+    let e_total = e_first + velm::elm::secondstage::second_stage_energy(l, e_mult);
+    println!(
+        "first stage {:.3} pJ/MAC + second stage {} x 7.1 pJ => system {:.2} pJ/MAC \
+         (paper: 0.47 -> 0.54 pJ/MAC)",
+        headline_pj,
+        l,
+        e_total / (d * l) as f64 * 1e12
+    );
+
+    section("comparison-table context (fixed numbers from the paper)");
+    let mut t = Table::new(&["work", "tech", "algorithm", "pJ/MAC", "rate"]);
+    t.rowf(&["JSSC'13 [27]", "0.13 um digital", "SVM", "631", "0.5-2 Hz"]);
+    t.rowf(&["JSSC'07 [25]", "0.5 um FG analog", "SVM", "0.8", "40 Hz"]);
+    t.rowf(&["ISCAS'15 [18]", "0.35 um mixed", "ELM", "3.4", "50 Hz"]);
+    t.row(&[
+        "this work (model)".into(),
+        "0.35 um mixed".into(),
+        "ELM".into(),
+        format!("{headline_pj:.2}"),
+        "31.6 kHz".into(),
+    ]);
+    t.print();
+
+    section("eq. 20 sanity at the measured point");
+    let cfg = ChipConfig::default().with_dims(128, 100).with_b(7);
+    println!(
+        "regime at (d=128, b=7): {:?}; contour b* = {:.1} bits",
+        timing::regime(&cfg),
+        timing::contour_bits(128, &cfg)
+    );
+}

@@ -1,0 +1,134 @@
+//! Asynchronous saturating counter (eq. 11): the hidden-layer activation.
+//!
+//! The counter counts neuron spikes during T_neu and freezes at 2^b —
+//! the "hard nonlinearity in the form of saturation" that replaces the
+//! sigmoid of software ELM (Fig. 5b).
+
+use crate::config::ChipConfig;
+
+/// Ideal count from a spiking frequency over the configured window:
+/// `H = min(floor(f_sp * T_neu), 2^b)`.
+#[inline]
+pub fn count(freq: f64, cfg: &ChipConfig) -> u32 {
+    count_window(freq, cfg.t_neu(), cfg.cap())
+}
+
+/// Same with explicit window/cap (used by the extension passes and DSE).
+#[inline]
+pub fn count_window(freq: f64, t_neu: f64, cap: u32) -> u32 {
+    if freq <= 0.0 {
+        return 0;
+    }
+    let n = (freq * t_neu).floor();
+    if n >= cap as f64 {
+        cap
+    } else {
+        n as u32
+    }
+}
+
+/// Stateful counter mirroring the hardware block: clocked by spike
+/// events, frozen at the cap, readable/resettable via the scanner.
+#[derive(Clone, Debug)]
+pub struct Counter {
+    cap: u32,
+    value: u32,
+}
+
+impl Counter {
+    pub fn new(cfg: &ChipConfig) -> Self {
+        Counter { cap: cfg.cap(), value: 0 }
+    }
+
+    pub fn with_cap(cap: u32) -> Self {
+        Counter { cap, value: 0 }
+    }
+
+    /// One spike edge; saturates silently (the hardware stops clocking).
+    #[inline]
+    pub fn clock(&mut self) {
+        if self.value < self.cap {
+            self.value += 1;
+        }
+    }
+
+    /// Batch of spike edges.
+    pub fn clock_n(&mut self, n: u64) {
+        let room = (self.cap - self.value) as u64;
+        self.value += n.min(room) as u32;
+    }
+
+    pub fn read(&self) -> u32 {
+        self.value
+    }
+
+    pub fn saturated(&self) -> bool {
+        self.value == self.cap
+    }
+
+    pub fn reset(&mut self) {
+        self.value = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ChipConfig {
+        ChipConfig::default()
+    }
+
+    #[test]
+    fn count_floor_and_cap() {
+        let c = cfg();
+        assert_eq!(count(0.0, &c), 0);
+        assert_eq!(count(-5.0, &c), 0);
+        // exactly one spike period inside the window
+        let f1 = 1.0 / c.t_neu();
+        assert_eq!(count(f1 * 1.5, &c), 1);
+        assert_eq!(count(1e15, &c), c.cap());
+    }
+
+    #[test]
+    fn count_saturates_exactly_at_isat() {
+        // By construction T_neu = 2^b / (K_neu I_sat^z): a neuron driven
+        // at exactly I_sat^z in linear mode hits the cap.
+        let c = cfg().with_mode(crate::config::Transfer::Linear);
+        let f = crate::chip::neuron::f_sp(c.i_sat_z(), &c);
+        assert_eq!(count(f, &c), c.cap());
+        let f99 = crate::chip::neuron::f_sp(0.99 * c.i_sat_z(), &c);
+        assert!(count(f99, &c) < c.cap());
+    }
+
+    #[test]
+    fn stateful_counter_matches_ideal() {
+        let c = cfg();
+        let mut ctr = Counter::new(&c);
+        for _ in 0..1000 {
+            ctr.clock();
+        }
+        assert_eq!(ctr.read(), 1000);
+        ctr.clock_n(1u64 << 40); // silly overdrive
+        assert_eq!(ctr.read(), c.cap());
+        assert!(ctr.saturated());
+        ctr.reset();
+        assert_eq!(ctr.read(), 0);
+    }
+
+    #[test]
+    fn clock_n_equals_repeated_clock() {
+        let mut a = Counter::with_cap(100);
+        let mut b = Counter::with_cap(100);
+        a.clock_n(73);
+        for _ in 0..73 {
+            b.clock();
+        }
+        assert_eq!(a.read(), b.read());
+        a.clock_n(1000);
+        for _ in 0..1000 {
+            b.clock();
+        }
+        assert_eq!(a.read(), b.read());
+    }
+}

@@ -1,0 +1,128 @@
+//! Input Generation Circuit (IGC): the 10-bit current-splitting DAC of
+//! Fig. 3, with the S1 (active-mirror enable) and S2 (row shutdown)
+//! switch logic of eq. 5.
+
+use crate::config::ChipConfig;
+
+/// DAC output current for a digital code (eq. 4):
+/// `I_DAC = (2^-1 D9 + ... + 2^-10 D0) * I_ref`, with `I_ref = I_max`
+/// so a full-scale code maps to the configured per-channel maximum.
+#[inline]
+pub fn dac_current(code: u16, cfg: &ChipConfig) -> f64 {
+    debug_assert!((code as u32) < cfg.code_fs(), "code {code} out of range");
+    code as f64 / cfg.code_fs() as f64 * cfg.i_max
+}
+
+/// S1 (eq. 5): active current mirror engages when all 4 MSBs are zero —
+/// small currents settle too slowly through the passive mirror alone.
+#[inline]
+pub fn s1_active_mirror(code: u16, cfg: &ChipConfig) -> bool {
+    let msb_mask = ((1u32 << 4) - 1) << (cfg.b_in - 4);
+    (code as u32 & msb_mask) == 0 && code != 0
+}
+
+/// S2 (eq. 5): all-zero code grounds V_bias and shuts the row off.
+#[inline]
+pub fn s2_row_off(code: u16) -> bool {
+    code == 0
+}
+
+/// Quantise a normalised feature x in [-1, 1] to a DAC code.
+///
+/// The chip's mirrors are unidirectional (Section III-D "Input Mapping"):
+/// the compact set [-1, 1] maps onto [0, I_max] = codes [0, 2^b_in).
+#[inline]
+pub fn feature_to_code(x: f64, cfg: &ChipConfig) -> u16 {
+    let fs = (cfg.code_fs() - 1) as f64;
+    let clamped = x.clamp(-1.0, 1.0);
+    ((clamped + 1.0) / 2.0 * fs).round() as u16
+}
+
+/// Vector helper for a whole input sample.
+pub fn features_to_codes(xs: &[f64], cfg: &ChipConfig) -> Vec<u16> {
+    xs.iter().map(|&x| feature_to_code(x, cfg)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ChipConfig {
+        ChipConfig::default()
+    }
+
+    #[test]
+    fn dac_is_exactly_linear_in_code() {
+        let c = cfg();
+        for code in [0u16, 1, 2, 63, 64, 512, 1023] {
+            let i = dac_current(code, &c);
+            let expect = code as f64 / 1024.0 * c.i_max;
+            assert!((i - expect).abs() < 1e-24, "code {code}");
+        }
+    }
+
+    #[test]
+    fn dac_binary_weighting_matches_eq4() {
+        // eq. 4 term by term: bit k contributes 2^(k-10) * I_ref.
+        let c = cfg();
+        for bit in 0..10u16 {
+            let i = dac_current(1 << bit, &c);
+            let expect = 2f64.powi(bit as i32 - 10) * c.i_max;
+            assert!((i - expect).abs() / expect < 1e-12, "bit {bit}");
+        }
+    }
+
+    #[test]
+    fn dac_monotone() {
+        let c = cfg();
+        let mut prev = -1.0;
+        for code in 0..1024u16 {
+            let i = dac_current(code, &c);
+            assert!(i > prev);
+            prev = i;
+        }
+    }
+
+    #[test]
+    fn s1_engages_exactly_when_4_msbs_zero() {
+        let c = cfg();
+        // codes 1..63 have D9..D6 = 0 -> active mirror on
+        assert!(s1_active_mirror(1, &c));
+        assert!(s1_active_mirror(63, &c));
+        // code 64 sets D6 -> off
+        assert!(!s1_active_mirror(64, &c));
+        assert!(!s1_active_mirror(1023, &c));
+        // all-zero row is shut down by S2 instead
+        assert!(!s1_active_mirror(0, &c));
+    }
+
+    #[test]
+    fn s2_only_for_zero() {
+        assert!(s2_row_off(0));
+        assert!(!s2_row_off(1));
+        assert!(!s2_row_off(1023));
+    }
+
+    #[test]
+    fn feature_mapping_covers_code_space() {
+        let c = cfg();
+        assert_eq!(feature_to_code(-1.0, &c), 0);
+        assert_eq!(feature_to_code(1.0, &c), 1023);
+        assert_eq!(feature_to_code(0.0, &c), 512); // rounds 511.5 up
+        // clamping
+        assert_eq!(feature_to_code(-5.0, &c), 0);
+        assert_eq!(feature_to_code(5.0, &c), 1023);
+    }
+
+    #[test]
+    fn feature_mapping_monotone() {
+        let c = cfg();
+        let mut prev = 0u16;
+        for k in 0..=200 {
+            let x = -1.0 + 2.0 * k as f64 / 200.0;
+            let code = feature_to_code(x, &c);
+            assert!(code >= prev);
+            prev = code;
+        }
+    }
+}

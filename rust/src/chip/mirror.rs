@@ -1,0 +1,213 @@
+//! Current-mirror array: bandwidth/settling (Section IV-B) and thermal
+//! noise (Section IV-A, eqs. 13-16) of the sub-threshold copy operation.
+
+use crate::chip::dac;
+use crate::config::ChipConfig;
+use crate::util::prng::Prng;
+
+/// Electron charge [C].
+pub const Q_E: f64 = 1.602_176_634e-19;
+
+/// Mirror small-signal bandwidth for an input current [Hz]:
+/// `BW = kappa * I / (C * U_T)` — the single pole at the gate node
+/// (Section IV-B uses T_cm = 4/BW).
+#[inline]
+pub fn bandwidth(i_in: f64, cfg: &ChipConfig) -> f64 {
+    if i_in <= 0.0 {
+        return 0.0;
+    }
+    cfg.kappa * i_in / (cfg.c_mirror * cfg.u_t())
+}
+
+/// Effective bandwidth including the active-mirror assist (Fig. 9a):
+/// when S1 engages (4 MSBs zero) the boost factor (SPICE: 5.84x) applies.
+#[inline]
+pub fn bandwidth_effective(code: u16, cfg: &ChipConfig) -> f64 {
+    let bw = bandwidth(dac::dac_current(code, cfg), cfg);
+    if cfg.active_mirror && dac::s1_active_mirror(code, cfg) {
+        bw * cfg.active_boost
+    } else {
+        bw
+    }
+}
+
+/// Settling time to within 5% for one channel's code (eq. 17 family):
+/// `T_cm = 4 / BW`. Zero for a shut-off row (S2).
+#[inline]
+pub fn settling_time(code: u16, cfg: &ChipConfig) -> f64 {
+    if dac::s2_row_off(code) {
+        return 0.0;
+    }
+    4.0 / bandwidth_effective(code, cfg)
+}
+
+/// Worst-case settling across a loaded input vector: the conversion
+/// cannot start until the slowest channel has settled.
+pub fn settling_time_vector(codes: &[u16], cfg: &ChipConfig) -> f64 {
+    codes
+        .iter()
+        .map(|&c| settling_time(c, cfg))
+        .fold(0.0, f64::max)
+}
+
+/// Average-case settling at I_in = I_max/2 (eq. 17): `8 C U_T / (kappa I_max)`.
+pub fn t_cm_avg(cfg: &ChipConfig) -> f64 {
+    8.0 * cfg.c_mirror * cfg.u_t() / (cfg.kappa * cfg.i_max)
+}
+
+/// Max/min settling bounds of eq. 18 (LSB current through the boosted
+/// active mirror vs full-scale through the passive one).
+pub fn t_cm_max(cfg: &ChipConfig) -> f64 {
+    let i_lsb = cfg.i_max / cfg.code_fs() as f64;
+    4.0 * cfg.c_mirror * cfg.u_t() / (cfg.active_boost * cfg.kappa * i_lsb)
+}
+
+pub fn t_cm_min(cfg: &ChipConfig) -> f64 {
+    4.0 * cfg.c_mirror * cfg.u_t() / (cfg.kappa * cfg.i_max)
+}
+
+/// Input-referred thermal-noise power spectral-density integral (eq. 15):
+/// total mean-square noise current over the mirror's own bandwidth,
+/// `i_n^2 = q kappa I^2 (1 + 1/w0) / (2 C U_T)` [A^2].
+#[inline]
+pub fn noise_current_sq(i_in: f64, w0: f64, cfg: &ChipConfig) -> f64 {
+    Q_E * cfg.kappa * i_in * i_in * (1.0 + 1.0 / w0) / (2.0 * cfg.c_mirror * cfg.u_t())
+}
+
+/// Mirror SNR (eq. 16): independent of signal level —
+/// `SNR = 2 C U_T w0 / (q kappa (w0 + 1))`.
+#[inline]
+pub fn snr(w0: f64, cfg: &ChipConfig) -> f64 {
+    2.0 * cfg.c_mirror * cfg.u_t() * w0 / (Q_E * cfg.kappa * (w0 + 1.0))
+}
+
+/// Effective number of bits from the SNR power ratio.
+pub fn snr_bits(w0: f64, cfg: &ChipConfig) -> f64 {
+    // SNR_dB = 6.02 ENOB + 1.76
+    (10.0 * snr(w0, cfg).log10() - 1.76) / 6.02
+}
+
+/// One noisy mirror copy: returns `i_in * w` perturbed by the thermal
+/// noise of eq. 14 when noise injection is enabled.
+#[inline]
+pub fn copy_current(i_in: f64, w: f64, cfg: &ChipConfig, rng: &mut Prng) -> f64 {
+    let ideal = i_in * w;
+    if !cfg.noise_en || i_in <= 0.0 {
+        return ideal;
+    }
+    let sigma = noise_current_sq(i_in, w.max(1e-6), cfg).sqrt();
+    (ideal + rng.normal(0.0, sigma)).max(0.0)
+}
+
+/// Minimum gate capacitance for a target resolution in bits at gain w0
+/// (the Section IV-A sizing argument that fixes C = 0.4 pF for 8 bits).
+pub fn cap_for_bits(bits: f64, w0: f64, cfg: &ChipConfig) -> f64 {
+    let snr_target = 10f64.powf((6.02 * bits + 1.76) / 10.0);
+    snr_target * Q_E * cfg.kappa * (w0 + 1.0) / (2.0 * cfg.u_t() * w0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ChipConfig {
+        ChipConfig::default()
+    }
+
+    #[test]
+    fn bandwidth_proportional_to_current() {
+        let c = cfg();
+        let b1 = bandwidth(1e-9, &c);
+        let b2 = bandwidth(2e-9, &c);
+        assert!((b2 / b1 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn active_mirror_boosts_small_codes_only() {
+        let c = cfg();
+        // code 32: 4 MSBs zero -> boosted
+        let boosted = bandwidth_effective(32, &c);
+        let plain = bandwidth(dac::dac_current(32, &c), &c);
+        assert!((boosted / plain - c.active_boost).abs() < 1e-9);
+        // code 512: MSB set -> no boost
+        let big = bandwidth_effective(512, &c);
+        assert!((big - bandwidth(dac::dac_current(512, &c), &c)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn settling_bounds_bracket_everything() {
+        let c = cfg();
+        let tmax = t_cm_max(&c);
+        let tmin = t_cm_min(&c);
+        assert!(tmax > tmin);
+        for code in 1..1024u16 {
+            let t = settling_time(code, &c);
+            assert!(t >= tmin * (1.0 - 1e-12), "code {code}: {t} < {tmin}");
+            assert!(t <= tmax * (1.0 + 1e-12), "code {code}: {t} > {tmax}");
+        }
+        // shut-off row settles instantly (it never turns on)
+        assert_eq!(settling_time(0, &c), 0.0);
+    }
+
+    #[test]
+    fn vector_settling_is_worst_channel() {
+        let c = cfg();
+        let t = settling_time_vector(&[1023, 512, 1], &c);
+        assert!((t - settling_time(1, &c)).abs() < 1e-18);
+    }
+
+    #[test]
+    fn t_cm_avg_matches_eq17() {
+        let c = cfg();
+        let expect = 8.0 * 0.4e-12 * c.u_t() / (0.7 * 1e-9);
+        assert!((t_cm_avg(&c) - expect).abs() / expect < 1e-12);
+    }
+
+    #[test]
+    fn snr_gives_8_bits_at_point4_pf() {
+        // The Section IV-A design claim: C = 0.4 pF suffices for 8 bits
+        // at w0 = 1.
+        let c = cfg();
+        let bits = snr_bits(1.0, &c);
+        assert!(bits > 7.8, "ENOB {bits}");
+        // and the sizing inverse is consistent: ~0.4 pF for 8 bits
+        let c_needed = cap_for_bits(8.0, 1.0, &c);
+        assert!(
+            (c_needed / c.c_mirror - 1.0).abs() < 0.1,
+            "need {c_needed} have {}",
+            c.c_mirror
+        );
+    }
+
+    #[test]
+    fn snr_independent_of_signal_level() {
+        let c = cfg();
+        // eq. 16 has no I term; verify via the noise/signal ratio
+        for &i in &[1e-10, 1e-9, 5e-9] {
+            let ratio = i * i / noise_current_sq(i, 1.0, &c);
+            assert!((ratio / snr(1.0, &c) - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn noisy_copy_unbiased_and_bounded() {
+        let mut c = cfg();
+        c.noise_en = true;
+        let mut rng = Prng::new(9);
+        let n = 20_000;
+        let i_in = 1e-9;
+        let xs: Vec<f64> = (0..n).map(|_| copy_current(i_in, 1.0, &c, &mut rng)).collect();
+        let mean = crate::util::stats::mean(&xs);
+        assert!((mean / i_in - 1.0).abs() < 0.01, "bias {}", mean / i_in);
+        let snr_meas = i_in * i_in / crate::util::stats::var(&xs);
+        let snr_theory = snr(1.0, &c);
+        assert!((snr_meas / snr_theory - 1.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn noise_off_is_exact() {
+        let c = cfg();
+        let mut rng = Prng::new(1);
+        assert_eq!(copy_current(1e-9, 2.0, &c, &mut rng), 2e-9);
+    }
+}

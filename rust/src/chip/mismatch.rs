@@ -1,0 +1,156 @@
+//! Threshold-voltage mismatch: the computational resource of the paper.
+//!
+//! Each of the d x L current-mirror transistors carries a frozen offset
+//! dV_T ~ N(0, sigma_VT) sampled at "fabrication". The mirror gain seen by
+//! neuron j from channel i is `w_ij = exp(dV_T_ij / U_T)` (eq. 12) — a
+//! log-normal random weight, temperature-dependent through U_T = kT/q.
+//! Pelgrom's area law links sigma_VT to transistor size for the scaling
+//! discussion of Section III-D.
+
+use crate::config::{thermal_voltage, ChipConfig};
+use crate::util::mat::Mat;
+use crate::util::prng::Prng;
+
+/// Pelgrom mismatch model: sigma_VT = A_VT / sqrt(W L) (paper ref [1]).
+///
+/// `a_vt` in V*m (typical 0.35 um CMOS: ~9.5 mV*um = 9.5e-9 V*m), `w`/`l`
+/// transistor dimensions in meters. Used by the design-space discussion:
+/// deeply scaled processes need upsized transistors to stay in the
+/// optimal 15-25 mV band.
+pub fn pelgrom_sigma_vt(a_vt: f64, w: f64, l: f64) -> f64 {
+    a_vt / (w * l).sqrt()
+}
+
+/// Inverse Pelgrom: transistor area needed to hit a target sigma_VT.
+pub fn pelgrom_area_for_sigma(a_vt: f64, sigma_vt: f64) -> f64 {
+    (a_vt / sigma_vt) * (a_vt / sigma_vt)
+}
+
+/// The fabricated mismatch state of one die.
+#[derive(Clone, Debug)]
+pub struct MismatchMatrix {
+    pub d: usize,
+    pub l: usize,
+    /// Per-mirror threshold offsets dV_T [V], row-major d x L.
+    pub dvt: Vec<f64>,
+    /// Per-neuron relative K_neu error (lumped neuron-side mismatch,
+    /// Section VI-A: "mismatch obtained here also takes into account
+    /// mismatch in the neuronal tuning curves").
+    pub kneu_rel: Vec<f64>,
+}
+
+impl MismatchMatrix {
+    /// Sample a die. Every experiment seeds this explicitly, so a "chip"
+    /// is reproducible: same seed = same silicon.
+    pub fn fabricate(cfg: &ChipConfig, rng: &mut Prng) -> Self {
+        let dvt = (0..cfg.d * cfg.l)
+            .map(|_| rng.normal(0.0, cfg.sigma_vt))
+            .collect();
+        let kneu_rel = (0..cfg.l)
+            .map(|_| rng.normal(0.0, cfg.sigma_kneu_rel))
+            .collect();
+        MismatchMatrix { d: cfg.d, l: cfg.l, dvt, kneu_rel }
+    }
+
+    /// Mirror gain w_ij at temperature `t_k` (eq. 12).
+    #[inline]
+    pub fn weight(&self, i: usize, j: usize, t_k: f64) -> f64 {
+        (self.dvt[i * self.l + j] / thermal_voltage(t_k)).exp()
+    }
+
+    /// Full weight matrix at temperature `t_k` — what the PJRT hidden
+    /// artifact consumes, and the Fig. 15(b) surface.
+    pub fn weights_at(&self, t_k: f64) -> Mat {
+        let ut = thermal_voltage(t_k);
+        let data: Vec<f64> = self.dvt.iter().map(|v| (v / ut).exp()).collect();
+        Mat { rows: self.d, cols: self.l, data }
+    }
+
+    /// Per-neuron K_neu multiplier (1 + relative error).
+    #[inline]
+    pub fn kneu_gain(&self, j: usize) -> f64 {
+        1.0 + self.kneu_rel[j]
+    }
+
+    /// Virtually rotated weight lookup used by the Section V extension:
+    /// row rotation r (hidden extension, Fig. 12) and column rotation c
+    /// (input extension, Fig. 13). `W_{r,c}[i][j] = W[(i+r)%d][(j+c)%l]`.
+    #[inline]
+    pub fn weight_rotated(&self, i: usize, j: usize, r: usize, c: usize, t_k: f64) -> f64 {
+        self.weight((i + r) % self.d, (j + c) % self.l, t_k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    fn die(seed: u64) -> (ChipConfig, MismatchMatrix) {
+        let cfg = ChipConfig::default();
+        let mut rng = Prng::new(seed);
+        let m = MismatchMatrix::fabricate(&cfg, &mut rng);
+        (cfg, m)
+    }
+
+    #[test]
+    fn fabrication_is_deterministic() {
+        let (_, a) = die(1);
+        let (_, b) = die(1);
+        assert_eq!(a.dvt, b.dvt);
+    }
+
+    #[test]
+    fn weights_are_lognormal_with_fabricated_sigma() {
+        // The Fig. 15(c) extraction: fit a Gaussian to ln(w) and recover
+        // sigma_VT =~ 16 mV.
+        let (cfg, m) = die(2);
+        let w = m.weights_at(300.0);
+        let logs: Vec<f64> = w.data.iter().map(|x| x.ln()).collect();
+        let (mu, sigma) = stats::fit_gaussian(&logs);
+        let sigma_vt = sigma * thermal_voltage(300.0);
+        assert!(mu.abs() < 0.01, "log-mean {mu}");
+        assert!(
+            (sigma_vt - cfg.sigma_vt).abs() < 0.0005,
+            "recovered sigma_VT {}",
+            sigma_vt * 1e3
+        );
+    }
+
+    #[test]
+    fn temperature_shrinks_spread() {
+        // U_T grows with T, so ln w = dVT/U_T compresses: hotter die,
+        // tighter weights (the Fig. 18 mechanism).
+        let (_, m) = die(3);
+        let cold = m.weights_at(280.0);
+        let hot = m.weights_at(320.0);
+        let s_cold = stats::std(&cold.data.iter().map(|x| x.ln()).collect::<Vec<_>>());
+        let s_hot = stats::std(&hot.data.iter().map(|x| x.ln()).collect::<Vec<_>>());
+        assert!(s_hot < s_cold);
+        assert!((s_cold / s_hot - 320.0 / 280.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rotation_wraps_exactly() {
+        let (_, m) = die(4);
+        let t = 300.0;
+        assert_eq!(m.weight_rotated(0, 0, 0, 0, t).to_bits(), m.weight(0, 0, t).to_bits());
+        assert_eq!(
+            m.weight_rotated(m.d - 1, 0, 1, 0, t).to_bits(),
+            m.weight(0, 0, t).to_bits()
+        );
+        assert_eq!(
+            m.weight_rotated(0, m.l - 1, 0, 1, t).to_bits(),
+            m.weight(0, 0, t).to_bits()
+        );
+    }
+
+    #[test]
+    fn pelgrom_scaling() {
+        let a_vt = 9.5e-9; // V*m
+        let s = pelgrom_sigma_vt(a_vt, 0.35e-6, 0.35e-6);
+        assert!((s - a_vt / 0.35e-6).abs() < 1e-9);
+        let area = pelgrom_area_for_sigma(a_vt, s);
+        assert!((area - 0.35e-6 * 0.35e-6).abs() / area < 1e-9);
+    }
+}

@@ -1,0 +1,425 @@
+//! Behavioural model of the mixed-signal ELM chip — the "silicon" of this
+//! reproduction (DESIGN.md §4).
+//!
+//! [`ChipModel`] composes the substrates: DAC ([`dac`]), mismatch array
+//! ([`mismatch`]), current mirrors with settling + noise ([`mirror`]),
+//! oscillator neurons ([`neuron`]), saturating counters ([`counter`]),
+//! the SPI/rotation peripherals ([`spi`]) and the timing/energy ledgers
+//! ([`timing`], [`energy`]). A conversion is bit-faithful to eqs. 4-12 +
+//! eq. 11 and books simulated time and energy exactly as Section IV
+//! models them, so characterisation benches read physics off the ledger.
+
+pub mod counter;
+pub mod dac;
+pub mod energy;
+pub mod mirror;
+pub mod mismatch;
+pub mod neuron;
+pub mod reference;
+pub mod scanner;
+pub mod spi;
+pub mod timing;
+
+use crate::config::ChipConfig;
+use crate::util::mat::Mat;
+use crate::util::prng::Prng;
+
+/// Simulated-time / energy accounting for one die.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Ledger {
+    /// Simulated chip time spent converting [s].
+    pub sim_time: f64,
+    /// Energy drawn from both supplies [J].
+    pub energy: f64,
+    /// Completed conversions (one input vector -> one H row).
+    pub conversions: u64,
+    /// Multiply-accumulates performed (d x L per conversion).
+    pub macs: u64,
+}
+
+impl Ledger {
+    /// Energy efficiency over everything booked so far [pJ/MAC].
+    pub fn pj_per_mac(&self) -> f64 {
+        if self.macs == 0 {
+            return 0.0;
+        }
+        self.energy / self.macs as f64 * 1e12
+    }
+
+    /// Average classification rate [Hz].
+    pub fn rate(&self) -> f64 {
+        if self.sim_time == 0.0 {
+            return 0.0;
+        }
+        self.conversions as f64 / self.sim_time
+    }
+
+    /// Throughput [MMAC/s] over simulated time.
+    pub fn mmacs(&self) -> f64 {
+        if self.sim_time == 0.0 {
+            return 0.0;
+        }
+        self.macs as f64 / self.sim_time / 1e6
+    }
+}
+
+/// One fabricated die.
+pub struct ChipModel {
+    pub cfg: ChipConfig,
+    pub mismatch: mismatch::MismatchMatrix,
+    pub input_regs: spi::InputRegisters,
+    pub out_bank: spi::OutputBank,
+    pub ledger: Ledger,
+    /// The NEU_EN counting window actually programmed into the digital
+    /// control [s]. Set from the operating point at fabrication/configure
+    /// time and deliberately NOT recomputed when VDD or temperature
+    /// drift: the window is an FPGA timing setting, so drift shows up as
+    /// a common-mode count shift (the Fig. 17/18 mechanism) rather than
+    /// being silently compensated.
+    pub t_neu_set: f64,
+    noise_rng: Prng,
+    /// Weight matrix cached per (temperature) — invalidated by set_temp.
+    weight_cache: Option<(f64, Mat)>,
+}
+
+impl ChipModel {
+    /// "Tape-out": sample the mismatch from `seed` at the given operating
+    /// point. Same seed = same silicon, forever.
+    pub fn fabricate(cfg: ChipConfig, seed: u64) -> Self {
+        let mut rng = Prng::new(seed);
+        let mismatch = mismatch::MismatchMatrix::fabricate(&cfg, &mut rng);
+        let noise_rng = rng.split(0xA0A0);
+        ChipModel {
+            input_regs: spi::InputRegisters::new(cfg.d, cfg.b_in),
+            out_bank: spi::OutputBank::new(cfg.l),
+            mismatch,
+            noise_rng,
+            weight_cache: None,
+            ledger: Ledger::default(),
+            t_neu_set: cfg.t_neu(),
+            cfg,
+        }
+    }
+
+    /// Reprogram the counting window (an explicit recalibration — what
+    /// the paper does between operating points, not what drift does).
+    pub fn program_t_neu(&mut self, t_neu: f64) {
+        self.t_neu_set = t_neu;
+    }
+
+    /// Change supply voltage (the Fig. 17 robustness sweeps).
+    pub fn set_vdd(&mut self, vdd: f64) {
+        self.cfg.vdd = vdd;
+    }
+
+    /// Change die temperature (the Fig. 18 sweeps). Weights shift through
+    /// U_T; the cache is invalidated.
+    pub fn set_temp(&mut self, t_k: f64) {
+        self.cfg.temp_k = t_k;
+        self.weight_cache = None;
+    }
+
+    /// Mismatch weight matrix at the current temperature (cached).
+    pub fn weights(&mut self) -> &Mat {
+        let t = self.cfg.temp_k;
+        let stale = match &self.weight_cache {
+            Some((ct, _)) => (*ct - t).abs() > 1e-12,
+            None => true,
+        };
+        if stale {
+            self.weight_cache = Some((t, self.mismatch.weights_at(t)));
+        }
+        &self.weight_cache.as_ref().unwrap().1
+    }
+
+    /// Load an input vector through the SPI register file.
+    pub fn load_input(&mut self, codes: &[u16]) {
+        self.input_regs.load_vector(codes);
+    }
+
+    /// Run one conversion (NEU_EN window) on whatever the input registers
+    /// hold, booking time and energy. Returns the counter outputs.
+    pub fn convert(&mut self) -> Vec<u32> {
+        let codes: Vec<u16> = self.input_regs.read().to_vec();
+        let counts = self.convert_codes(&codes);
+        self.out_bank.latch(&counts);
+        counts
+    }
+
+    /// Core conversion path (also used by rotation passes): codes -> H.
+    ///
+    /// Perf note (EXPERIMENTS.md §Perf): derived operating-point values
+    /// (I_rst, K_neu, gains) are hoisted out of the per-neuron loop and
+    /// the neuron transfer is applied inline instead of through
+    /// `neuron::f_sp` (which rederives I_rst per call).
+    fn convert_codes(&mut self, codes: &[u16]) -> Vec<u32> {
+        let cfg = self.cfg.clone();
+        debug_assert_eq!(codes.len(), cfg.d);
+        // hoisted operating-point constants
+        let i_rst = cfg.i_rst();
+        let quad_gain = 1.0 / (i_rst * cfg.c_b * cfg.vdd);
+        let k_neu = cfg.k_neu();
+        let i_lk = cfg.i_lk;
+        let quadratic = cfg.mode == crate::config::Transfer::Quadratic;
+        let cap = cfg.cap();
+        // DAC currents per channel (eq. 4). The IGC reference comes from
+        // a PTAT bias generator (Fig. 3 "Reference"; chip::reference), so
+        // the full-scale current drifts proportionally to absolute
+        // temperature and carries a small residual VDD slope — the
+        // common-mode disturbances the Fig. 17/18 studies exercise and
+        // eq. 26 is designed to cancel.
+        let bias_gain = (cfg.temp_k / 300.0)
+            * (1.0 + 0.02 * (cfg.vdd - cfg.vdd_nom));
+        let i_in: Vec<f64> = codes
+            .iter()
+            .map(|&c| dac::dac_current(c, &cfg) * bias_gain)
+            .collect();
+        // column currents by KCL (eq. 12 weights), optionally noisy
+        let z = if cfg.noise_en {
+            let mut z = vec![0.0f64; cfg.l];
+            for (i, &ii) in i_in.iter().enumerate() {
+                if ii == 0.0 {
+                    continue; // S2: row shut off
+                }
+                for (j, zj) in z.iter_mut().enumerate() {
+                    let w = self.mismatch.weight(i, j, cfg.temp_k);
+                    *zj += mirror::copy_current(ii, w, &cfg, &mut self.noise_rng);
+                }
+            }
+            z
+        } else {
+            // hot path: cached weight matrix, dense accumulate
+            let w = self.weights();
+            let mut z = vec![0.0f64; cfg.l];
+            for (i, &ii) in i_in.iter().enumerate() {
+                if ii == 0.0 {
+                    continue;
+                }
+                let wrow = w.row(i);
+                for (zj, &wij) in z.iter_mut().zip(wrow) {
+                    *zj += ii * wij;
+                }
+            }
+            z
+        };
+        // neuron + counter (eqs. 8, 11) with lumped neuron mismatch;
+        // the window is the *programmed* one (drift-exposed, see field)
+        let t_neu = self.t_neu_set;
+        let counts: Vec<u32> = z
+            .iter()
+            .enumerate()
+            .map(|(j, &zj)| {
+                let i_eff = zj - i_lk;
+                let f = if quadratic {
+                    if i_eff <= 0.0 || i_eff >= i_rst {
+                        0.0
+                    } else {
+                        i_eff * (i_rst - i_eff) * quad_gain
+                    }
+                } else {
+                    i_eff.max(0.0) * k_neu
+                };
+                let f = neuron::with_neuron_mismatch(f, self.mismatch.kneu_gain(j));
+                counter::count_window(f, t_neu, cap)
+            })
+            .collect();
+        // ledgers: Section IV timing + energy
+        let t_c = mirror::settling_time_vector(codes, &cfg) + t_neu;
+        let mut e = cfg.p_avdd * t_c; // analog supply
+        for (j, &zj) in z.iter().enumerate() {
+            e += energy::e_conversion_neuron(zj, counts[j], t_neu, &cfg);
+        }
+        self.ledger.sim_time += t_c;
+        self.ledger.energy += e;
+        self.ledger.conversions += 1;
+        self.ledger.macs += (cfg.d * cfg.l) as u64;
+        counts
+    }
+
+    /// Load + convert in one call.
+    pub fn forward(&mut self, codes: &[u16]) -> Vec<u32> {
+        self.load_input(codes);
+        self.convert()
+    }
+
+    /// Convenience: normalised features in [-1, 1] -> codes -> H.
+    pub fn forward_features(&mut self, xs: &[f64]) -> Vec<u32> {
+        let codes = dac::features_to_codes(xs, &self.cfg);
+        self.forward(&codes)
+    }
+
+    /// Batch forward: one row of H per input row.
+    pub fn forward_batch(&mut self, xs: &[Vec<f64>]) -> Vec<Vec<u32>> {
+        xs.iter().map(|x| self.forward_features(x)).collect()
+    }
+
+    /// Fig. 15(a) characterisation: sweep Data_in on one channel (others
+    /// zero) and record all L transfer curves.
+    pub fn transfer_curves(&mut self, channel: usize, codes: &[u16]) -> Vec<Vec<u32>> {
+        codes
+            .iter()
+            .map(|&c| {
+                let mut v = vec![0u16; self.cfg.d];
+                v[channel] = c;
+                self.forward(&v)
+            })
+            .collect()
+    }
+
+    /// Fig. 15(b) characterisation: fixed code on each channel one by one;
+    /// returns the d x L matrix of counter outputs.
+    pub fn weight_surface(&mut self, code: u16) -> Mat {
+        let d = self.cfg.d;
+        let mut m = Mat::zeros(d, self.cfg.l);
+        for i in 0..d {
+            let mut v = vec![0u16; d];
+            v[i] = code;
+            let counts = self.forward(&v);
+            for (j, &c) in counts.iter().enumerate() {
+                m.set(i, j, c as f64);
+            }
+        }
+        m
+    }
+
+    /// Reset the time/energy ledger (start of a measurement).
+    pub fn reset_ledger(&mut self) {
+        self.ledger = Ledger::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Transfer;
+    use crate::util::stats;
+
+    fn small_cfg() -> ChipConfig {
+        ChipConfig::default().with_dims(16, 16)
+    }
+
+    #[test]
+    fn fabrication_deterministic_forward() {
+        let mut a = ChipModel::fabricate(small_cfg(), 42);
+        let mut b = ChipModel::fabricate(small_cfg(), 42);
+        let codes: Vec<u16> = (0..16).map(|i| (i * 60) as u16).collect();
+        assert_eq!(a.forward(&codes), b.forward(&codes));
+    }
+
+    #[test]
+    fn different_dies_differ() {
+        let mut a = ChipModel::fabricate(small_cfg(), 1);
+        let mut b = ChipModel::fabricate(small_cfg(), 2);
+        let codes = vec![500u16; 16];
+        assert_ne!(a.forward(&codes), b.forward(&codes));
+    }
+
+    #[test]
+    fn zero_input_zero_output_zero_fast() {
+        let mut c = ChipModel::fabricate(small_cfg(), 3);
+        let counts = c.forward(&vec![0u16; 16]);
+        assert!(counts.iter().all(|&h| h == 0));
+        // S2 shutdown means no settling wait: only T_neu books
+        assert!((c.ledger.sim_time - c.cfg.t_neu()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counts_monotone_in_common_code_until_saturation() {
+        // linear mode: more input current -> more counts (no rolloff)
+        let cfg = small_cfg().with_mode(Transfer::Linear).with_b(10);
+        let mut chip = ChipModel::fabricate(cfg, 4);
+        let mut prev_sum = 0u64;
+        for code in [64u16, 128, 256, 512, 1023] {
+            let counts = chip.forward(&vec![code; 16]);
+            let s: u64 = counts.iter().map(|&c| c as u64).sum();
+            assert!(s >= prev_sum, "code {code}");
+            prev_sum = s;
+        }
+    }
+
+    #[test]
+    fn ledger_books_time_energy_macs() {
+        let mut chip = ChipModel::fabricate(small_cfg(), 5);
+        let codes = vec![512u16; 16];
+        chip.forward(&codes);
+        chip.forward(&codes);
+        assert_eq!(chip.ledger.conversions, 2);
+        assert_eq!(chip.ledger.macs, 2 * 16 * 16);
+        assert!(chip.ledger.sim_time > 2.0 * chip.cfg.t_neu() * 0.99);
+        assert!(chip.ledger.energy > 0.0);
+        assert!(chip.ledger.pj_per_mac() > 0.0);
+        assert!(chip.ledger.rate() > 0.0);
+        chip.reset_ledger();
+        assert_eq!(chip.ledger.conversions, 0);
+    }
+
+    #[test]
+    fn transfer_curves_show_mismatch_spread() {
+        // Fig. 15(a): "significant variation between the transfer curves".
+        let mut chip = ChipModel::fabricate(small_cfg(), 6);
+        let curves = chip.transfer_curves(0, &[1023]);
+        let row: Vec<f64> = curves[0].iter().map(|&c| c as f64).collect();
+        assert!(stats::std(&row) > 0.05 * stats::mean(&row));
+    }
+
+    #[test]
+    fn weight_surface_recovers_lognormal_sigma() {
+        // Fig. 15(b,c): normalise counts by the median and fit ln() —
+        // sigma_VT comes back near the fabricated value.
+        let cfg = ChipConfig::default().with_dims(48, 48).with_b(14);
+        let sigma_fab = cfg.sigma_vt;
+        let mut chip = ChipModel::fabricate(cfg, 7);
+        let surf = chip.weight_surface(100);
+        let mut vals: Vec<f64> = surf.data.iter().cloned().filter(|&v| v > 0.0).collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = vals[vals.len() / 2];
+        let logs: Vec<f64> = vals.iter().map(|v| (v / median).ln()).collect();
+        let (_, s) = stats::fit_gaussian(&logs);
+        let sigma_meas = s * crate::config::thermal_voltage(300.0);
+        assert!(
+            (sigma_meas - sigma_fab).abs() < 0.25 * sigma_fab,
+            "measured {} fabricated {}",
+            sigma_meas * 1e3,
+            sigma_fab * 1e3
+        );
+    }
+
+    #[test]
+    fn noise_injection_perturbs_but_tracks() {
+        let cfg = small_cfg().with_noise(true);
+        let mut noisy = ChipModel::fabricate(cfg, 8);
+        let mut clean = ChipModel::fabricate(small_cfg(), 8);
+        let codes = vec![512u16; 16];
+        let hn = noisy.forward(&codes);
+        let hc = clean.forward(&codes);
+        let rel: Vec<f64> = hn
+            .iter()
+            .zip(&hc)
+            .filter(|(_, &c)| c > 20)
+            .map(|(&n, &c)| (n as f64 - c as f64).abs() / c as f64)
+            .collect();
+        assert!(!rel.is_empty());
+        // 8-bit SNR design: deviations stay well under a percent-ish
+        assert!(stats::mean(&rel) < 0.02, "mean rel dev {}", stats::mean(&rel));
+    }
+
+    #[test]
+    fn temperature_changes_hidden_outputs() {
+        let mut chip = ChipModel::fabricate(small_cfg(), 9);
+        let codes = vec![700u16; 16];
+        let h0 = chip.forward(&codes);
+        chip.set_temp(320.0);
+        let h1 = chip.forward(&codes);
+        assert_ne!(h0, h1);
+    }
+
+    #[test]
+    fn vdd_changes_hidden_outputs() {
+        let mut chip = ChipModel::fabricate(small_cfg(), 10);
+        let codes = vec![700u16; 16];
+        let h0 = chip.forward(&codes);
+        chip.set_vdd(0.8);
+        let h1 = chip.forward(&codes);
+        assert_ne!(h0, h1);
+    }
+}

@@ -1,0 +1,218 @@
+//! Hidden-layer neuron: the current-controlled oscillator of Fig. 4.
+//!
+//! Two implementations, deliberately independent:
+//!  * closed-form frequency `f_sp(I^z)` from the charge-balance analysis
+//!    (eqs. 7-10) — the "theory" curve of Fig. 6(a);
+//!  * an event/timestep transient simulation of the V_mem waveform —
+//!    the stand-in for the paper's SPICE "simulation" curve of Fig. 6(a)
+//!    (DESIGN.md §4 substitution table).
+//! The fig5_6_neuron bench overlays both.
+
+use crate::config::{ChipConfig, Transfer};
+
+/// Closed-form spiking frequency (eq. 8), clamped outside [0, I_rst]:
+/// `f_sp = I^z (I_rst - I^z) / (I_rst C_b VDD)`.
+/// In `Transfer::Linear` mode the eq. 9 small-signal form `K_neu I^z`
+/// is used (the Section III-D design-space simulations).
+#[inline]
+pub fn f_sp(i_z: f64, cfg: &ChipConfig) -> f64 {
+    match cfg.mode {
+        Transfer::Linear => i_z.max(0.0) * cfg.k_neu(),
+        Transfer::Quadratic => {
+            let i_rst = cfg.i_rst();
+            let i_eff = i_z - cfg.i_lk;
+            if i_eff <= 0.0 || i_eff >= i_rst {
+                return 0.0;
+            }
+            i_eff * (i_rst - i_eff) / (i_rst * cfg.c_b * cfg.vdd)
+        }
+    }
+}
+
+/// Oscillation period from the two-phase charge balance (eq. 7).
+/// Returns `None` where the oscillator stalls.
+pub fn t_sp(i_z: f64, cfg: &ChipConfig) -> Option<f64> {
+    let i_dis = i_z - cfg.i_lk; // discharge current
+    let i_chg = cfg.i_rst() - i_z + cfg.i_lk; // reset (recharge) current
+    if i_dis <= 0.0 || i_chg <= 0.0 {
+        return None;
+    }
+    let cv = cfg.c_b * cfg.vdd;
+    Some(cv / i_dis + cv / i_chg)
+}
+
+/// Peak frequency `f_max = I_rst / (4 C_b VDD)` reached at I_flx (Fig. 5a).
+pub fn f_max(cfg: &ChipConfig) -> f64 {
+    cfg.i_rst() / (4.0 * cfg.c_b * cfg.vdd)
+}
+
+/// Result of a transient run.
+#[derive(Clone, Copy, Debug)]
+pub struct TransientResult {
+    /// Spikes emitted during the window.
+    pub spikes: u64,
+    /// Estimated frequency from inter-spike timing [Hz].
+    pub freq: f64,
+}
+
+/// Timestep transient simulation of the V_mem relaxation oscillator.
+///
+/// Integrates the membrane node (C_a + C_b) under the input current
+/// (discharge phase) and I_rst - I^z (reset phase), with the inverter
+/// trip at VDD/2 and the C_b/(C_a+C_b) * VDD feedback kick of eq. 6.
+/// `steps_per_phase` controls integration resolution; the discretisation
+/// error against eq. 8 is what makes this an independent check.
+pub fn transient(i_z: f64, window: f64, cfg: &ChipConfig, steps_per_phase: usize) -> TransientResult {
+    let i_rst = cfg.i_rst();
+    let i_dis = i_z - cfg.i_lk;
+    let i_chg = i_rst - i_z + cfg.i_lk;
+    if i_dis <= 0.0 || i_chg <= 0.0 {
+        return TransientResult { spikes: 0, freq: 0.0 };
+    }
+    let c_tot = cfg.c_a + cfg.c_b;
+    let v_th = cfg.vdd / 2.0;
+    let dv_kick = cfg.c_b / c_tot * cfg.vdd; // eq. 6
+    // timestep: resolve the faster phase
+    let t1 = c_tot * dv_kick / i_dis;
+    let t2 = c_tot * dv_kick / i_chg;
+    let dt = t1.min(t2) / steps_per_phase as f64;
+
+    let mut v = v_th + dv_kick; // start at top of discharge ramp
+    let mut discharging = true;
+    let mut t = 0.0;
+    let mut spikes = 0u64;
+    let mut first_spike_t = None;
+    let mut last_spike_t = 0.0;
+    while t < window {
+        if discharging {
+            v -= i_dis / c_tot * dt;
+            if v <= v_th {
+                // inverters trip: output falls, feedback kicks V_mem down,
+                // reset transistor turns on. One spike per cycle.
+                spikes += 1;
+                if first_spike_t.is_none() {
+                    first_spike_t = Some(t);
+                }
+                last_spike_t = t;
+                v -= dv_kick;
+                discharging = false;
+            }
+        } else {
+            v += i_chg / c_tot * dt;
+            if v >= v_th {
+                v += dv_kick;
+                discharging = true;
+            }
+        }
+        t += dt;
+    }
+    let freq = match (first_spike_t, spikes) {
+        (Some(t0), s) if s >= 2 => (s - 1) as f64 / (last_spike_t - t0),
+        _ => spikes as f64 / window,
+    };
+    TransientResult { spikes, freq }
+}
+
+/// Apply the per-neuron lumped gain mismatch to a frequency.
+#[inline]
+pub fn with_neuron_mismatch(freq: f64, kneu_gain: f64) -> f64 {
+    (freq * kneu_gain).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ChipConfig {
+        ChipConfig::default()
+    }
+
+    #[test]
+    fn f_sp_zero_at_edges_and_peaks_at_iflx() {
+        let c = cfg();
+        assert_eq!(f_sp(0.0, &c), 0.0);
+        assert_eq!(f_sp(c.i_rst(), &c), 0.0);
+        assert_eq!(f_sp(-1e-9, &c), 0.0);
+        assert_eq!(f_sp(2.0 * c.i_rst(), &c), 0.0);
+        let peak = f_sp(c.i_flx(), &c);
+        assert!((peak / f_max(&c) - 1.0).abs() < 1e-12);
+        // peak is a maximum
+        assert!(f_sp(c.i_flx() * 0.9, &c) < peak);
+        assert!(f_sp(c.i_flx() * 1.1, &c) < peak);
+    }
+
+    #[test]
+    fn f_sp_linear_region_matches_kneu() {
+        let c = cfg();
+        let i = c.i_rst() / 100.0;
+        let f = f_sp(i, &c);
+        let lin = c.k_neu() * i;
+        assert!((f / lin - 1.0).abs() < 0.02, "quadratic vs K_neu {f} {lin}");
+    }
+
+    #[test]
+    fn t_sp_is_inverse_frequency() {
+        let c = cfg();
+        for frac in [0.05, 0.2, 0.5, 0.8] {
+            let i = frac * c.i_rst();
+            let t = t_sp(i, &c).unwrap();
+            let f = f_sp(i, &c);
+            assert!((t * f - 1.0).abs() < 1e-9, "frac {frac}");
+        }
+        assert!(t_sp(0.0, &c).is_none());
+        assert!(t_sp(c.i_rst(), &c).is_none());
+    }
+
+    #[test]
+    fn transient_matches_theory_within_discretisation() {
+        // Fig. 6(a): "comparison ... between theory and simulation show
+        // close match". 2% agreement at 200 steps/phase.
+        let c = cfg();
+        for frac in [0.05, 0.1, 0.3, 0.5, 0.7, 0.9] {
+            let i = frac * c.i_rst();
+            let theory = f_sp(i, &c);
+            let window = 60.0 / theory; // ~60 cycles
+            let sim = transient(i, window, &c, 200);
+            let err = (sim.freq - theory).abs() / theory;
+            assert!(err < 0.02, "frac {frac}: sim {} vs theory {theory}", sim.freq);
+        }
+    }
+
+    #[test]
+    fn transient_stalls_outside_operating_range() {
+        let c = cfg();
+        assert_eq!(transient(0.0, 1e-3, &c, 50).spikes, 0);
+        assert_eq!(transient(c.i_rst() * 1.01, 1e-3, &c, 50).spikes, 0);
+    }
+
+    #[test]
+    fn vdd_scaling_matches_fig6b() {
+        // Lower VDD: higher f_sp at small I^z (K_neu up) but smaller
+        // I_flx and f_max; higher VDD: the opposite.
+        let nom = cfg();
+        let lo = cfg().with_vdd(0.8);
+        let hi = cfg().with_vdd(1.2);
+        let i_small = 1e-9;
+        assert!(f_sp(i_small, &lo) > f_sp(i_small, &nom));
+        assert!(f_sp(i_small, &hi) < f_sp(i_small, &nom));
+        assert!(lo.i_flx() < nom.i_flx());
+        assert!(hi.i_flx() > nom.i_flx());
+        assert!(f_max(&lo) < f_max(&nom));
+        assert!(f_max(&hi) > f_max(&nom));
+    }
+
+    #[test]
+    fn linear_mode_has_no_rolloff() {
+        let c = cfg().with_mode(Transfer::Linear);
+        let f1 = f_sp(c.i_rst(), &c);
+        let f2 = f_sp(2.0 * c.i_rst(), &c);
+        assert!(f2 > f1);
+        assert!((f2 / f1 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn neuron_mismatch_gain() {
+        assert_eq!(with_neuron_mismatch(100.0, 1.05), 105.0);
+        assert_eq!(with_neuron_mismatch(100.0, -0.5), 0.0);
+    }
+}

@@ -1,0 +1,93 @@
+//! Column scanner (Fig. 2): serial readout of the L counter values to
+//! the FPGA over CLK_cnt, with readout-time accounting. On the real chip
+//! the scanner runs while the next conversion's inputs load, so readout
+//! only bounds throughput when it exceeds T_c — which the timing test
+//! below checks for the paper's operating points.
+
+/// Scanner configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Scanner {
+    /// Read clock frequency [Hz] (FPGA-side CLK_cnt).
+    pub clk_hz: f64,
+    /// Bits shifted per counter value (the 14-bit output format).
+    pub bits: u32,
+}
+
+impl Default for Scanner {
+    fn default() -> Self {
+        Scanner { clk_hz: 50e6, bits: 14 }
+    }
+}
+
+impl Scanner {
+    /// Serial time to scan out L counters [s].
+    pub fn readout_time(&self, l: usize) -> f64 {
+        l as f64 * self.bits as f64 / self.clk_hz
+    }
+
+    /// Does readout hide under a conversion time T_c (pipelined case)?
+    pub fn hides_under(&self, l: usize, t_c: f64) -> bool {
+        self.readout_time(l) <= t_c
+    }
+
+    /// Serialize a counter bank to the bitstream the FPGA would see
+    /// (MSB-first per counter, scan order j = 0..L).
+    pub fn serialize(&self, counts: &[u32]) -> Vec<bool> {
+        let mut bits = Vec::with_capacity(counts.len() * self.bits as usize);
+        for &c in counts {
+            assert!(c < (1u32 << self.bits), "count {c} overflows {} bits", self.bits);
+            for k in (0..self.bits).rev() {
+                bits.push(c >> k & 1 == 1);
+            }
+        }
+        bits
+    }
+
+    /// FPGA-side deserialization.
+    pub fn deserialize(&self, bits: &[bool]) -> Vec<u32> {
+        assert_eq!(bits.len() % self.bits as usize, 0, "ragged bitstream");
+        bits.chunks(self.bits as usize)
+            .map(|chunk| chunk.iter().fold(0u32, |acc, &b| acc << 1 | b as u32))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ChipConfig;
+
+    #[test]
+    fn roundtrip_bitstream() {
+        let s = Scanner::default();
+        let counts = vec![0u32, 1, 8191, 16383, 1000];
+        let bits = s.serialize(&counts);
+        assert_eq!(bits.len(), 5 * 14);
+        assert_eq!(s.deserialize(&bits), counts);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows")]
+    fn rejects_overflow() {
+        Scanner::default().serialize(&[1 << 14]);
+    }
+
+    #[test]
+    fn readout_hides_under_conversion_at_paper_point() {
+        // 128 counters x 14 bits at 50 MHz = 35.84 us; the 31.6 kHz
+        // operating point has T_c = 31.6 us -> readout must overlap the
+        // *next* load phase; at 100 MHz it fully hides.
+        let s = Scanner::default();
+        let t_ro = s.readout_time(128);
+        assert!((t_ro - 128.0 * 14.0 / 50e6).abs() < 1e-12);
+        let fast = Scanner { clk_hz: 100e6, ..s };
+        assert!(fast.hides_under(128, 1.0 / 31.6e3));
+    }
+
+    #[test]
+    fn readout_never_bounds_default_config() {
+        let cfg = ChipConfig::default();
+        let s = Scanner::default();
+        assert!(s.hides_under(cfg.l, cfg.t_neu()));
+    }
+}

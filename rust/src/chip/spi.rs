@@ -1,0 +1,204 @@
+//! Peripheral digital circuits: the SPI input path of Fig. 2(b) and the
+//! rotation register banks of Figs. 12/13 that implement the Section V
+//! dimension-extension technique.
+//!
+//! Modelled at frame level with a bit-accurate encoder: a frame is
+//! `A<6:0> | Data_in<9:0>` shifted MSB-first, exactly the 1-to-128
+//! demultiplexor addressing described in Section III.
+
+/// Serial frame: 7 address bits + b_in data bits, MSB first.
+pub fn encode_frame(addr: u8, data: u16, b_in: u32) -> Vec<bool> {
+    assert!(addr < 128, "address must fit 7 bits");
+    assert!((data as u32) < (1 << b_in), "data must fit {b_in} bits");
+    let mut bits = Vec::with_capacity(7 + b_in as usize);
+    for k in (0..7).rev() {
+        bits.push(addr >> k & 1 == 1);
+    }
+    for k in (0..b_in).rev() {
+        bits.push(data >> k & 1 == 1);
+    }
+    bits
+}
+
+/// Decode a frame produced by [`encode_frame`].
+pub fn decode_frame(bits: &[bool], b_in: u32) -> (u8, u16) {
+    assert_eq!(bits.len(), 7 + b_in as usize, "bad frame length");
+    let mut addr = 0u8;
+    for &b in &bits[..7] {
+        addr = addr << 1 | b as u8;
+    }
+    let mut data = 0u16;
+    for &b in &bits[7..] {
+        data = data << 1 | b as u16;
+    }
+    (addr, data)
+}
+
+/// Input shift-register file (one 10-bit register per channel) with the
+/// Fig. 12 `Rotation_Control` circular-shift mode for hidden-layer
+/// extension.
+#[derive(Clone, Debug)]
+pub struct InputRegisters {
+    regs: Vec<u16>,
+    b_in: u32,
+    /// Rotations applied since the last load (for introspection/tests).
+    pub rotation: usize,
+}
+
+impl InputRegisters {
+    pub fn new(d: usize, b_in: u32) -> Self {
+        InputRegisters { regs: vec![0; d], b_in, rotation: 0 }
+    }
+
+    /// SPI write of one channel (demultiplexed by the 7-bit address).
+    pub fn load_frame_bits(&mut self, bits: &[bool]) {
+        let (addr, data) = decode_frame(bits, self.b_in);
+        self.load(addr as usize, data);
+    }
+
+    pub fn load(&mut self, channel: usize, data: u16) {
+        assert!(channel < self.regs.len(), "channel {channel} out of range");
+        assert!((data as u32) < (1 << self.b_in));
+        self.regs[channel] = data;
+        self.rotation = 0;
+    }
+
+    /// Load a whole input vector (serial in the hardware; batched here).
+    pub fn load_vector(&mut self, codes: &[u16]) {
+        assert_eq!(codes.len(), self.regs.len(), "vector length != channels");
+        for &c in codes {
+            assert!((c as u32) < (1 << self.b_in));
+        }
+        self.regs.copy_from_slice(codes);
+        self.rotation = 0;
+    }
+
+    /// One `Rotation_Control` pulse (Fig. 12): circular shift by one —
+    /// channel i takes the value previously on channel i+1, realising the
+    /// row rotation `W -> W_{1,0}` from the neurons' point of view.
+    pub fn rotate(&mut self) {
+        self.regs.rotate_left(1);
+        self.rotation += 1;
+    }
+
+    pub fn read(&self) -> &[u16] {
+        &self.regs
+    }
+}
+
+/// Output-side register banks of Fig. 13: a rotation bank fed by the
+/// counters plus an accumulator bank, for input-dimension extension.
+#[derive(Clone, Debug)]
+pub struct OutputBank {
+    rot: Vec<u32>,
+    acc: Vec<u32>,
+}
+
+impl OutputBank {
+    pub fn new(l: usize) -> Self {
+        OutputBank { rot: vec![0; l], acc: vec![0; l] }
+    }
+
+    /// Latch counter outputs into the rotation bank (end of NEU_EN).
+    pub fn latch(&mut self, counts: &[u32]) {
+        assert_eq!(counts.len(), self.rot.len());
+        self.rot.copy_from_slice(counts);
+    }
+
+    /// One `CLK_r` pulse: circular rotation of the bank by one position
+    /// (undoes the column rotation `W -> W_{0,c}` before accumulation).
+    pub fn clk_r(&mut self) {
+        self.rot.rotate_left(1);
+    }
+
+    /// One `CLK_a` pulse: add the rotation bank into the accumulator.
+    pub fn clk_a(&mut self) {
+        for (a, &r) in self.acc.iter_mut().zip(&self.rot) {
+            *a += r;
+        }
+    }
+
+    /// Read out the accumulated hidden outputs and clear (column scanner).
+    pub fn read_and_clear(&mut self) -> Vec<u32> {
+        let out = self.acc.clone();
+        self.acc.iter_mut().for_each(|a| *a = 0);
+        out
+    }
+
+    pub fn peek_acc(&self) -> &[u32] {
+        &self.acc
+    }
+
+    pub fn peek_rot(&self) -> &[u32] {
+        &self.rot
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip_all_bits() {
+        for addr in [0u8, 1, 63, 127] {
+            for data in [0u16, 1, 512, 1023] {
+                let bits = encode_frame(addr, data, 10);
+                assert_eq!(bits.len(), 17);
+                assert_eq!(decode_frame(&bits, 10), (addr, data));
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn frame_rejects_wide_data() {
+        encode_frame(0, 1024, 10);
+    }
+
+    #[test]
+    fn register_file_loads_by_address() {
+        let mut r = InputRegisters::new(8, 10);
+        r.load_frame_bits(&encode_frame(3, 777, 10));
+        assert_eq!(r.read()[3], 777);
+        assert_eq!(r.read()[0], 0);
+    }
+
+    #[test]
+    fn rotation_is_circular() {
+        let mut r = InputRegisters::new(4, 10);
+        r.load_vector(&[10, 20, 30, 40]);
+        r.rotate();
+        assert_eq!(r.read(), &[20, 30, 40, 10]);
+        r.rotate();
+        r.rotate();
+        r.rotate();
+        assert_eq!(r.read(), &[10, 20, 30, 40]);
+        assert_eq!(r.rotation, 4);
+    }
+
+    #[test]
+    fn load_resets_rotation_counter() {
+        let mut r = InputRegisters::new(2, 10);
+        r.load_vector(&[1, 2]);
+        r.rotate();
+        assert_eq!(r.rotation, 1);
+        r.load_vector(&[3, 4]);
+        assert_eq!(r.rotation, 0);
+    }
+
+    #[test]
+    fn output_bank_rotate_accumulate() {
+        // Fig. 13 timing: latch, rotate c times, accumulate.
+        let mut ob = OutputBank::new(4);
+        ob.latch(&[1, 2, 3, 4]);
+        ob.clk_a();
+        assert_eq!(ob.peek_acc(), &[1, 2, 3, 4]);
+        ob.latch(&[10, 20, 30, 40]);
+        ob.clk_r(); // one rotation: [20,30,40,10]
+        ob.clk_a();
+        assert_eq!(ob.peek_acc(), &[21, 32, 43, 14]);
+        let out = ob.read_and_clear();
+        assert_eq!(out, vec![21, 32, 43, 14]);
+        assert_eq!(ob.peek_acc(), &[0, 0, 0, 0]);
+    }
+}

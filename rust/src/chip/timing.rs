@@ -1,0 +1,136 @@
+//! Conversion-time model of Section IV-B: T_c = T_cm + T_neu, the
+//! T_cm/T_neu crossover contours of eq. 20 (Fig. 9c), and the
+//! classification-rate / throughput bookkeeping used by Table III.
+
+use crate::chip::mirror;
+use crate::config::ChipConfig;
+
+/// Neuron counting window for a given I_max^z (eq. 19):
+/// `T_neu = 2^b / (sat_ratio * K_neu * I_max^z)`.
+pub fn t_neu_for(i_max_z: f64, cfg: &ChipConfig) -> f64 {
+    cfg.cap() as f64 / (cfg.sat_ratio * cfg.k_neu() * i_max_z)
+}
+
+/// Mean settling estimate used in the Fig. 9(b) study:
+/// midpoint of the eq. 18 bounds.
+pub fn t_cm_mid(cfg: &ChipConfig) -> f64 {
+    0.5 * (mirror::t_cm_max(cfg) + mirror::t_cm_min(cfg))
+}
+
+/// Full conversion time for a concrete loaded input vector:
+/// worst-channel settling plus the counting window.
+pub fn t_c(codes: &[u16], cfg: &ChipConfig) -> f64 {
+    mirror::settling_time_vector(codes, cfg) + cfg.t_neu()
+}
+
+/// Design-space conversion time: `max` approximation of Section IV-B
+/// when one term dominates, else the sum.
+pub fn t_c_design(cfg: &ChipConfig) -> f64 {
+    t_cm_mid(cfg) + cfg.t_neu()
+}
+
+/// The eq. 20 contour: counter dynamic range 2^b at which T_cm = T_neu
+/// for input dimension d: `2^b = 6 d C U_t K_neu / kappa`.
+pub fn contour_cap(d: usize, cfg: &ChipConfig) -> f64 {
+    6.0 * d as f64 * cfg.c_mirror * cfg.u_t() * cfg.k_neu() / cfg.kappa
+}
+
+/// Contour expressed in bits (log2 of the cap).
+pub fn contour_bits(d: usize, cfg: &ChipConfig) -> f64 {
+    contour_cap(d, cfg).log2()
+}
+
+/// Which side of the contour an operating point sits on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Regime {
+    /// T_neu > T_cm (above the contour line).
+    NeuronLimited,
+    /// T_cm > T_neu (below the contour line).
+    MirrorLimited,
+}
+
+pub fn regime(cfg: &ChipConfig) -> Regime {
+    if cfg.cap() as f64 >= contour_cap(cfg.d, cfg) {
+        Regime::NeuronLimited
+    } else {
+        Regime::MirrorLimited
+    }
+}
+
+/// Classifications per second at a conversion time.
+pub fn classification_rate(t_c: f64) -> f64 {
+    1.0 / t_c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ChipConfig {
+        ChipConfig::default()
+    }
+
+    #[test]
+    fn t_neu_inverse_in_imax() {
+        let c = cfg();
+        let t1 = t_neu_for(100e-9, &c);
+        let t2 = t_neu_for(200e-9, &c);
+        assert!((t1 / t2 - 2.0).abs() < 1e-12);
+        // consistency with the ChipConfig derived value
+        assert!((t_neu_for(c.i_max_z(), &c) - c.t_neu()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn t_neu_doubles_per_counter_bit() {
+        // Fig. 9(b): "T_neu increases exponentially with increase in b".
+        let c8 = cfg().with_b(8);
+        let c12 = cfg().with_b(12);
+        let r = t_neu_for(128e-9, &c12) / t_neu_for(128e-9, &c8);
+        assert!((r - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn contour_matches_eq20_algebra() {
+        let c = cfg();
+        // at the contour, T_cm,avg (eq. 17) equals T_neu (eq. 19)
+        let d = 10;
+        let cap = contour_cap(d, &c);
+        let i_max_z = d as f64 * c.i_max;
+        let t_cm = 8.0 * c.c_mirror * c.u_t() / (c.kappa * c.i_max);
+        let t_neu = cap / (0.75 * c.k_neu() * i_max_z);
+        assert!((t_cm / t_neu - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn contour_linear_in_d() {
+        let c = cfg();
+        assert!((contour_cap(20, &c) / contour_cap(10, &c) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn contour_shifts_with_vdd() {
+        // Fig. 9(c) plots three contours for VDD 0.8/1/1.2: K_neu falls
+        // with VDD so the contour cap falls too.
+        let lo = cfg().with_vdd(0.8);
+        let hi = cfg().with_vdd(1.2);
+        assert!(contour_cap(64, &lo) > contour_cap(64, &hi));
+    }
+
+    #[test]
+    fn paper_regime_at_default_point() {
+        // Section IV-B: "for b = 8-10 bits and VDD = 1 V, T_neu dominates
+        // T_cm for the maximum dimension of 128".
+        let c = cfg().with_b(10);
+        assert_eq!(regime(&c), Regime::NeuronLimited);
+    }
+
+    #[test]
+    fn conversion_time_composition() {
+        let c = cfg();
+        let codes = vec![512u16; c.d];
+        let t = t_c(&codes, &c);
+        assert!(t > c.t_neu());
+        assert!(t < c.t_neu() + mirror::t_cm_max(&c) + 1e-9);
+        assert!(classification_rate(t) > 0.0);
+    }
+}

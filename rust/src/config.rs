@@ -1,0 +1,407 @@
+//! Configuration system: chip operating point + serving system settings.
+//!
+//! `ChipConfig` mirrors `python/compile/params.py` (the values baked into
+//! the AOT artifacts) and adds everything the behavioural simulator needs
+//! beyond the transfer function: mismatch sigma, noise, settling, energy
+//! coefficients, temperature. Values default to Table I + Section III-D
+//! of the paper. A minimal `key = value` file format (TOML subset) is
+//! supported because the offline vendor set has no serde/toml.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Boltzmann-over-charge thermal voltage at temperature `t_k` [V].
+pub fn thermal_voltage(t_k: f64) -> f64 {
+    // U_T = kT/q; 25.85 mV at 300 K.
+    0.02585 * t_k / 300.0
+}
+
+/// Neuron transfer shape: eq. 8 (quadratic) or its eq. 9 linearisation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transfer {
+    Quadratic,
+    Linear,
+}
+
+impl fmt::Display for Transfer {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Transfer::Quadratic => write!(f, "quadratic"),
+            Transfer::Linear => write!(f, "linear"),
+        }
+    }
+}
+
+/// One operating point of the mixed-signal ELM chip (paper Table I).
+///
+/// All units SI. Derived quantities (`k_neu`, `t_neu`, `i_rst`, ...) are
+/// methods so that VDD / temperature sweeps stay consistent.
+#[derive(Clone, Debug)]
+pub struct ChipConfig {
+    /// Physical input channels k (Table I: 128).
+    pub d: usize,
+    /// Physical hidden neurons N (Table I: 128).
+    pub l: usize,
+    /// Input DAC bits b_in (Table I: 10).
+    pub b_in: u32,
+    /// Valid counter MSB b, configurable 6..=14 (Section III-B).
+    pub b: u32,
+    /// Full-scale input current per channel I_max [A].
+    pub i_max: f64,
+    /// Neuron reset current at nominal VDD [A].
+    pub i_rst_nom: f64,
+    /// Leakage current I_lk [A] (eq. 7; ~0).
+    pub i_lk: f64,
+    /// Neuron feedback capacitor C_b [F] (50..300 fF configurable).
+    pub c_b: f64,
+    /// Neuron input capacitor C_a [F].
+    pub c_a: f64,
+    /// Current-mirror gate capacitor C = 0.4 pF (eq. 16 SNR sizing).
+    pub c_mirror: f64,
+    /// Sub-threshold slope factor kappa (Section IV-B: 0.7).
+    pub kappa: f64,
+    /// Supply voltage VDD [V].
+    pub vdd: f64,
+    /// Nominal VDD the chip was characterised at [V].
+    pub vdd_nom: f64,
+    /// Square-law knee for the I_rst(VDD) model [V] (DESIGN.md §4).
+    pub v_theta: f64,
+    /// Die temperature [K].
+    pub temp_k: f64,
+    /// Threshold-voltage mismatch sigma [V] (paper-measured: 16 mV).
+    pub sigma_vt: f64,
+    /// I_sat^z / I_max^z design ratio (Fig. 7a optimum 0.75).
+    pub sat_ratio: f64,
+    /// Neuron transfer shape.
+    pub mode: Transfer,
+    /// Thermal-noise injection in the mirror copies (eq. 14).
+    pub noise_en: bool,
+    /// Active current mirror for small codes (Fig. 3; 5.84x bandwidth).
+    pub active_mirror: bool,
+    /// Switching-energy coefficient alpha_1 [F] (measured fit 0.3 pF).
+    pub alpha1: f64,
+    /// Short-circuit coefficient alpha_2 * I_sc [A] (measured 0.076 uA).
+    pub alpha2_isc: f64,
+    /// Analog supply power P_avdd [W] (measured 3.4 uW).
+    pub p_avdd: f64,
+    /// Active-mirror bandwidth boost factor (SPICE-measured 5.84).
+    pub active_boost: f64,
+    /// Per-neuron relative spread of K_neu from C_b/VDD local variation.
+    /// Lumped with mirror mismatch in measurements (Section VI-A).
+    pub sigma_kneu_rel: f64,
+}
+
+impl Default for ChipConfig {
+    fn default() -> Self {
+        ChipConfig {
+            d: 128,
+            l: 128,
+            b_in: 10,
+            b: 14,
+            i_max: 1e-9,
+            i_rst_nom: 512e-9,
+            i_lk: 0.0,
+            c_b: 1.0 / (26e3 / 1e-9), // K_neu = 26 kHz/nA at VDD = 1 V
+            c_a: 300e-15,
+            c_mirror: 0.4e-12,
+            kappa: 0.7,
+            vdd: 1.0,
+            vdd_nom: 1.0,
+            v_theta: 0.5,
+            temp_k: 300.0,
+            sigma_vt: 0.016,
+            sat_ratio: 0.75,
+            mode: Transfer::Quadratic,
+            noise_en: false,
+            active_mirror: true,
+            alpha1: 0.3e-12,
+            alpha2_isc: 0.076e-6,
+            p_avdd: 3.4e-6,
+            active_boost: 5.84,
+            sigma_kneu_rel: 0.0,
+        }
+    }
+}
+
+impl ChipConfig {
+    /// Thermal voltage at the configured die temperature [V].
+    pub fn u_t(&self) -> f64 {
+        thermal_voltage(self.temp_k)
+    }
+
+    /// Reset current at the configured VDD [A].
+    ///
+    /// Modelled as a saturated transistor square law around the nominal
+    /// point, reproducing Fig. 6(b): lower VDD -> smaller I_rst -> smaller
+    /// I_flx and f_max (DESIGN.md §4 substitution table).
+    pub fn i_rst(&self) -> f64 {
+        let num = (self.vdd - self.v_theta).max(0.0);
+        let den = self.vdd_nom - self.v_theta;
+        self.i_rst_nom * (num / den) * (num / den)
+    }
+
+    /// Current-to-frequency gain K_neu = 1/(C_b VDD) [Hz/A] (eq. 10).
+    pub fn k_neu(&self) -> f64 {
+        1.0 / (self.c_b * self.vdd)
+    }
+
+    /// Peak-frequency current I_flx = I_rst/2 (Fig. 5a).
+    pub fn i_flx(&self) -> f64 {
+        self.i_rst() / 2.0
+    }
+
+    /// Maximum column current I_max^z = d * I_max [A].
+    pub fn i_max_z(&self) -> f64 {
+        self.d as f64 * self.i_max
+    }
+
+    /// Counter-saturation column current I_sat^z (Section III-D).
+    pub fn i_sat_z(&self) -> f64 {
+        self.sat_ratio * self.i_max_z()
+    }
+
+    /// Counting window T_neu chosen so H = 2^b at I_sat^z (eq. 19).
+    pub fn t_neu(&self) -> f64 {
+        self.cap() as f64 / (self.k_neu() * self.i_sat_z())
+    }
+
+    /// Counter saturation value 2^b (eq. 11).
+    pub fn cap(&self) -> u32 {
+        1u32 << self.b
+    }
+
+    /// DAC code full scale 2^b_in.
+    pub fn code_fs(&self) -> u32 {
+        1u32 << self.b_in
+    }
+
+    /// Builder-style setters for sweeps.
+    pub fn with_vdd(mut self, vdd: f64) -> Self {
+        self.vdd = vdd;
+        self
+    }
+    pub fn with_temp(mut self, t_k: f64) -> Self {
+        self.temp_k = t_k;
+        self
+    }
+    pub fn with_dims(mut self, d: usize, l: usize) -> Self {
+        self.d = d;
+        self.l = l;
+        self
+    }
+    pub fn with_b(mut self, b: u32) -> Self {
+        self.b = b;
+        self
+    }
+    pub fn with_sigma_vt(mut self, s: f64) -> Self {
+        self.sigma_vt = s;
+        self
+    }
+    pub fn with_mode(mut self, m: Transfer) -> Self {
+        self.mode = m;
+        self
+    }
+    pub fn with_noise(mut self, en: bool) -> Self {
+        self.noise_en = en;
+        self
+    }
+    pub fn with_sat_ratio(mut self, r: f64) -> Self {
+        self.sat_ratio = r;
+        self
+    }
+    pub fn with_i_max(mut self, i: f64) -> Self {
+        self.i_max = i;
+        self
+    }
+
+    /// Parse a `key = value` file (lines; `#` comments; TOML subset).
+    pub fn from_kv(text: &str) -> Result<Self, String> {
+        let mut cfg = ChipConfig::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() || line.starts_with('[') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let (k, v) = (k.trim(), v.trim());
+            let fv = || -> Result<f64, String> {
+                v.parse::<f64>()
+                    .map_err(|e| format!("line {}: bad float {v}: {e}", lineno + 1))
+            };
+            match k {
+                "d" => cfg.d = fv()? as usize,
+                "l" => cfg.l = fv()? as usize,
+                "b_in" => cfg.b_in = fv()? as u32,
+                "b" => cfg.b = fv()? as u32,
+                "i_max" => cfg.i_max = fv()?,
+                "i_rst_nom" => cfg.i_rst_nom = fv()?,
+                "i_lk" => cfg.i_lk = fv()?,
+                "c_b" => cfg.c_b = fv()?,
+                "c_a" => cfg.c_a = fv()?,
+                "c_mirror" => cfg.c_mirror = fv()?,
+                "kappa" => cfg.kappa = fv()?,
+                "vdd" => cfg.vdd = fv()?,
+                "vdd_nom" => cfg.vdd_nom = fv()?,
+                "v_theta" => cfg.v_theta = fv()?,
+                "temp_k" => cfg.temp_k = fv()?,
+                "sigma_vt" => cfg.sigma_vt = fv()?,
+                "sat_ratio" => cfg.sat_ratio = fv()?,
+                "alpha1" => cfg.alpha1 = fv()?,
+                "alpha2_isc" => cfg.alpha2_isc = fv()?,
+                "p_avdd" => cfg.p_avdd = fv()?,
+                "active_boost" => cfg.active_boost = fv()?,
+                "sigma_kneu_rel" => cfg.sigma_kneu_rel = fv()?,
+                "noise_en" => cfg.noise_en = v == "true",
+                "active_mirror" => cfg.active_mirror = v == "true",
+                "mode" => {
+                    cfg.mode = match v.trim_matches('"') {
+                        "quadratic" => Transfer::Quadratic,
+                        "linear" => Transfer::Linear,
+                        other => return Err(format!("line {}: bad mode {other}", lineno + 1)),
+                    }
+                }
+                other => return Err(format!("line {}: unknown key {other}", lineno + 1)),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Table I style summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "Chip: {}x{} channels, {}-bit in / {}-bit out, VDD={} V, T={} K\n\
+             K_neu={:.3} kHz/nA, I_rst={:.1} nA, I_max^z={:.1} nA, \
+             I_sat^z/I_max^z={:.2}, T_neu={:.2} us, sigma_VT={:.1} mV, mode={}",
+            self.d,
+            self.l,
+            self.b_in,
+            self.b,
+            self.vdd,
+            self.temp_k,
+            self.k_neu() * 1e-12, // Hz/A -> kHz/nA
+            self.i_rst() * 1e9,
+            self.i_max_z() * 1e9,
+            self.sat_ratio,
+            self.t_neu() * 1e6,
+            self.sigma_vt * 1e3,
+            self.mode,
+        )
+    }
+}
+
+/// Serving-system settings for the L3 coordinator.
+#[derive(Clone, Debug)]
+pub struct SystemConfig {
+    /// Number of simulated dies behind the router.
+    pub n_chips: usize,
+    /// Dynamic batcher: max requests per batch.
+    pub max_batch: usize,
+    /// Dynamic batcher: max time to hold a partial batch.
+    pub max_wait: std::time::Duration,
+    /// Artifact directory produced by `make artifacts`.
+    pub artifact_dir: String,
+    /// Use the PJRT engine for batches at least this large (else the
+    /// scalar Rust simulator runs the conversion).
+    pub pjrt_min_batch: usize,
+    /// Base fabrication seed; chip i uses `seed + i`.
+    pub seed: u64,
+    /// Apply eq. 26 normalisation on the serving path.
+    pub normalize: bool,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            n_chips: 2,
+            max_batch: 128,
+            max_wait: std::time::Duration::from_millis(2),
+            artifact_dir: "artifacts".to_string(),
+            pjrt_min_batch: 8,
+            seed: 0xE1_37,
+            normalize: false,
+        }
+    }
+}
+
+/// Generic key-value map parse used by the CLI `--set k=v` overrides.
+pub fn parse_overrides(pairs: &[String]) -> Result<BTreeMap<String, String>, String> {
+    let mut map = BTreeMap::new();
+    for p in pairs {
+        let (k, v) = p
+            .split_once('=')
+            .ok_or_else(|| format!("override '{p}' is not key=value"))?;
+        map.insert(k.trim().to_string(), v.trim().to_string());
+    }
+    Ok(map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_nominals() {
+        let c = ChipConfig::default();
+        // K_neu = 26 kHz/nA (Section III-D)
+        assert!((c.k_neu() - 26e3 / 1e-9).abs() / (26e3 / 1e-9) < 1e-12);
+        assert_eq!(c.cap(), 16384); // 14-bit output format (Table I)
+        assert_eq!(c.code_fs(), 1024); // 10-bit input format
+        assert!((c.i_sat_z() - 0.75 * 128e-9).abs() < 1e-15);
+        // T_neu = 2^b / (K_neu I_sat^z)
+        let t = 16384.0 / (26e3 / 1e-9 * 96e-9);
+        assert!((c.t_neu() - t).abs() / t < 1e-12);
+    }
+
+    #[test]
+    fn i_rst_square_law() {
+        let c = ChipConfig::default();
+        assert!((c.i_rst() - c.i_rst_nom).abs() < 1e-18);
+        let lo = c.clone().with_vdd(0.8);
+        let hi = c.clone().with_vdd(1.2);
+        assert!(lo.i_rst() < c.i_rst());
+        assert!(hi.i_rst() > c.i_rst());
+        // 0.8 V: ((0.3)/(0.5))^2 = 0.36 of nominal
+        assert!((lo.i_rst() / c.i_rst_nom - 0.36).abs() < 1e-12);
+    }
+
+    #[test]
+    fn thermal_voltage_scales_linearly() {
+        assert!((thermal_voltage(300.0) - 0.02585).abs() < 1e-12);
+        assert!((thermal_voltage(320.0) / thermal_voltage(300.0) - 320.0 / 300.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kv_roundtrip() {
+        let text = "
+            # operating point
+            d = 64
+            l = 32
+            b = 8
+            vdd = 0.8
+            mode = \"linear\"
+            noise_en = true
+        ";
+        let c = ChipConfig::from_kv(text).unwrap();
+        assert_eq!(c.d, 64);
+        assert_eq!(c.l, 32);
+        assert_eq!(c.b, 8);
+        assert_eq!(c.mode, Transfer::Linear);
+        assert!(c.noise_en);
+        assert!((c.vdd - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kv_rejects_unknown_key() {
+        assert!(ChipConfig::from_kv("nonsense = 3").is_err());
+    }
+
+    #[test]
+    fn overrides_parse() {
+        let m = parse_overrides(&["a=1".into(), "b = x".into()]).unwrap();
+        assert_eq!(m["a"], "1");
+        assert_eq!(m["b"], "x");
+        assert!(parse_overrides(&["broken".into()]).is_err());
+    }
+}

@@ -1,0 +1,96 @@
+//! Dynamic batching: collect requests from a channel into batches bounded
+//! by size and by holding time — the standard serving trade-off between
+//! per-request latency and per-batch amortisation (here: hitting the
+//! compiled PJRT batch shapes).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+use super::request::ClassifyRequest;
+
+/// Blockingly collect the next batch from `rx`.
+///
+/// Waits (forever) for the first request; then drains until `max_batch`
+/// requests are held or `max_wait` has elapsed since the first one.
+/// Returns `None` once the channel is closed and drained — the worker's
+/// shutdown signal.
+pub fn collect_batch(
+    rx: &Receiver<ClassifyRequest>,
+    max_batch: usize,
+    max_wait: Duration,
+) -> Option<Vec<ClassifyRequest>> {
+    let first = rx.recv().ok()?;
+    let deadline = Instant::now() + max_wait;
+    let mut batch = vec![first];
+    while batch.len() < max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(req) => batch.push(req),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    fn req(id: u64) -> ClassifyRequest {
+        let (tx, _rx) = mpsc::channel();
+        ClassifyRequest { id, features: vec![], submitted: Instant::now(), reply: tx }
+    }
+
+    #[test]
+    fn collects_up_to_max_batch() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10 {
+            tx.send(req(i)).unwrap();
+        }
+        let b = collect_batch(&rx, 4, Duration::from_millis(50)).unwrap();
+        assert_eq!(b.len(), 4);
+        assert_eq!(b[0].id, 0);
+        assert_eq!(b[3].id, 3);
+        // the rest are still queued
+        let b2 = collect_batch(&rx, 100, Duration::from_millis(5)).unwrap();
+        assert_eq!(b2.len(), 6);
+    }
+
+    #[test]
+    fn flushes_partial_batch_on_deadline() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(req(1)).unwrap();
+        let t0 = Instant::now();
+        let b = collect_batch(&rx, 64, Duration::from_millis(20)).unwrap();
+        assert_eq!(b.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(18));
+        drop(tx);
+    }
+
+    #[test]
+    fn returns_none_when_closed() {
+        let (tx, rx) = mpsc::channel::<ClassifyRequest>();
+        drop(tx);
+        assert!(collect_batch(&rx, 8, Duration::from_millis(5)).is_none());
+    }
+
+    #[test]
+    fn preserves_order_and_no_duplicates() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..50 {
+            tx.send(req(i)).unwrap();
+        }
+        drop(tx);
+        let mut seen = Vec::new();
+        while let Some(b) = collect_batch(&rx, 7, Duration::from_millis(1)) {
+            seen.extend(b.iter().map(|r| r.id));
+        }
+        assert_eq!(seen, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,140 @@
+//! Serving metrics: lock-free counters + a log2-bucketed latency
+//! histogram (atomics only on the hot path; percentile math at snapshot).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of log2 latency buckets: bucket i covers [2^i, 2^(i+1)) us.
+const BUCKETS: usize = 32;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub batches: AtomicU64,
+    pub pjrt_batches: AtomicU64,
+    pub sim_batches: AtomicU64,
+    /// Sum of batch sizes (for mean batch occupancy).
+    pub batched_requests: AtomicU64,
+    latency_us: [AtomicU64; BUCKETS],
+    latency_sum_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn record_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, size: usize, pjrt: bool) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
+        if pjrt {
+            self.pjrt_batches.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.sim_batches.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn record_response(&self, latency: Duration) {
+        self.responses.fetch_add(1, Ordering::Relaxed);
+        let us = latency.as_micros().max(1) as u64;
+        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
+        let bucket = (63 - us.leading_zeros() as usize).min(BUCKETS - 1);
+        self.latency_us[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Approximate percentile from the log2 histogram (upper bucket edge).
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        let total: u64 = self.latency_us.iter().map(|b| b.load(Ordering::Relaxed)).sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, b) in self.latency_us.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << BUCKETS
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        let n = self.responses.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// One-line human snapshot.
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} responses={} batches={} (pjrt={}, sim={}, mean size {:.1}) \
+             latency mean={:.0}us p50<{}us p99<{}us",
+            self.requests.load(Ordering::Relaxed),
+            self.responses.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.pjrt_batches.load(Ordering::Relaxed),
+            self.sim_batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            self.mean_latency_us(),
+            self.latency_percentile_us(50.0),
+            self.latency_percentile_us(99.0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.record_request();
+        m.record_request();
+        m.record_batch(2, true);
+        m.record_response(Duration::from_micros(100));
+        m.record_response(Duration::from_micros(200));
+        assert_eq!(m.requests.load(Ordering::Relaxed), 2);
+        assert_eq!(m.responses.load(Ordering::Relaxed), 2);
+        assert_eq!(m.pjrt_batches.load(Ordering::Relaxed), 1);
+        assert!((m.mean_batch_size() - 2.0).abs() < 1e-12);
+        assert!((m.mean_latency_us() - 150.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles_bracket_recorded_latencies() {
+        let m = Metrics::new();
+        for us in [10u64, 20, 40, 80, 160, 320, 640, 1280, 2560, 100_000] {
+            m.record_response(Duration::from_micros(us));
+        }
+        let p50 = m.latency_percentile_us(50.0);
+        assert!((64..=256).contains(&p50), "p50 {p50}");
+        let p99 = m.latency_percentile_us(99.0);
+        assert!(p99 >= 100_000, "p99 {p99}");
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.latency_percentile_us(99.0), 0);
+        assert_eq!(m.mean_latency_us(), 0.0);
+        assert_eq!(m.mean_batch_size(), 0.0);
+        assert!(m.report().contains("requests=0"));
+    }
+}

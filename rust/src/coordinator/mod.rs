@@ -1,0 +1,222 @@
+//! L3 serving coordinator: the paper's classifier chip recast as a
+//! request pipeline (DESIGN.md §8).
+//!
+//! ```text
+//! client -> Coordinator::submit -> Router (least-loaded die)
+//!        -> per-worker dynamic batcher -> hidden layer
+//!           (PJRT batched artifact | scalar chip sim)
+//!        -> fixed-point second stage -> response + metrics
+//! ```
+//!
+//! Threads + channels from std only (no tokio in the offline vendor
+//! set); one OS thread per die mirrors one physical chip per board.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+pub mod worker;
+pub mod workload;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::chip::ChipModel;
+use crate::config::{ChipConfig, SystemConfig};
+use crate::elm::secondstage::SecondStage;
+use crate::elm::train::{assemble_h, solve_head};
+use crate::elm::ChipHidden;
+
+pub use metrics::Metrics;
+pub use request::{Backend, ClassifyRequest, ClassifyResponse};
+pub use router::Router;
+
+/// A running serving system: router + one thread per fabricated die.
+pub struct Coordinator {
+    router: Router,
+    pub metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    workers: Vec<JoinHandle<()>>,
+    pub d: usize,
+}
+
+impl Coordinator {
+    /// Fabricate `sys.n_chips` dies, train each die's head on the given
+    /// training set (per-die mismatch means per-die weights — exactly the
+    /// chip-in-the-loop training of Section VI-C), then start serving.
+    pub fn start(
+        sys: &SystemConfig,
+        chip_cfg: &ChipConfig,
+        train_x: &[Vec<f64>],
+        train_y: &[f64],
+        lambda: f64,
+        beta_bits: u32,
+    ) -> Result<Coordinator> {
+        let metrics = Arc::new(Metrics::new());
+        let mut senders = Vec::new();
+        let mut setups = Vec::new();
+        for i in 0..sys.n_chips {
+            let seed = sys.seed + i as u64;
+            let chip = ChipModel::fabricate(chip_cfg.clone(), seed);
+            // chip-in-the-loop training on this die
+            let mut hidden = if sys.normalize {
+                ChipHidden::normalized(chip)
+            } else {
+                ChipHidden::new(chip)
+            };
+            let h = assemble_h(&mut hidden, train_x);
+            let head = solve_head(&h, train_y, lambda)
+                .map_err(|e| anyhow::anyhow!("training die {i}: {e}"))?;
+            let second = SecondStage::new(&head.beta, beta_bits, sys.normalize);
+            let (tx, rx) = mpsc::channel();
+            senders.push(tx);
+            setups.push((i, hidden.chip, second, rx));
+        }
+        let router = Router::new(senders);
+        let mut workers = Vec::new();
+        for (i, chip, second, rx) in setups {
+            let setup = worker::WorkerSetup {
+                index: i,
+                chip,
+                second,
+                artifact_dir: worker::usable_artifact_dir(sys),
+                rx,
+                metrics: Arc::clone(&metrics),
+                outstanding: router.outstanding.clone(),
+                max_batch: sys.max_batch,
+                max_wait: sys.max_wait,
+                pjrt_min_batch: sys.pjrt_min_batch,
+                normalize: sys.normalize,
+            };
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("velm-worker-{i}"))
+                    .spawn(move || worker::run(setup))
+                    .context("spawning worker")?,
+            );
+        }
+        let d = train_x.first().map_or(chip_cfg.d, |x| x.len());
+        Ok(Coordinator { router, metrics, next_id: AtomicU64::new(0), workers, d })
+    }
+
+    /// Submit one request; returns the receiver for its response.
+    pub fn submit(&self, features: Vec<f64>) -> Result<mpsc::Receiver<ClassifyResponse>> {
+        anyhow::ensure!(
+            features.len() == self.d,
+            "expected {} features, got {}",
+            self.d,
+            features.len()
+        );
+        let (tx, rx) = mpsc::channel();
+        let req = ClassifyRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            features,
+            submitted: Instant::now(),
+            reply: tx,
+        };
+        self.metrics.record_request();
+        self.router
+            .route(req)
+            .map_err(|e| anyhow::anyhow!("routing: {e}"))?;
+        Ok(rx)
+    }
+
+    /// Convenience: submit and wait.
+    pub fn classify(&self, features: Vec<f64>) -> Result<ClassifyResponse> {
+        let rx = self.submit(features)?;
+        rx.recv().context("worker dropped the request")
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.router.n_workers()
+    }
+
+    /// Graceful shutdown: close the queues and join the worker threads.
+    pub fn shutdown(self) {
+        let Coordinator { router, workers, .. } = self;
+        drop(router); // drops senders -> workers drain and exit
+        for w in workers {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Transfer;
+    use crate::util::prng::Prng;
+
+    fn tiny_system() -> (SystemConfig, ChipConfig, Vec<Vec<f64>>, Vec<f64>) {
+        let sys = SystemConfig {
+            n_chips: 2,
+            max_batch: 8,
+            max_wait: std::time::Duration::from_millis(1),
+            artifact_dir: "/nonexistent".into(), // force chip-sim path
+            pjrt_min_batch: 4,
+            seed: 99,
+            normalize: false,
+        };
+        let chip = ChipConfig::default()
+            .with_dims(6, 24)
+            .with_b(10)
+            .with_mode(Transfer::Quadratic);
+        let mut rng = Prng::new(5);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..120 {
+            let y = if rng.bool(0.5) { 1.0 } else { -1.0 };
+            xs.push((0..6).map(|_| (0.4 * y + rng.normal(0.0, 0.15)).clamp(-1.0, 1.0)).collect());
+            ys.push(y);
+        }
+        (sys, chip, xs, ys)
+    }
+
+    #[test]
+    fn end_to_end_classify_over_threads() {
+        let (sys, chip, xs, ys) = tiny_system();
+        let coord = Coordinator::start(&sys, &chip, &xs, &ys, 1e-2, 10).unwrap();
+        assert_eq!(coord.n_workers(), 2);
+        let mut correct = 0;
+        for (x, &y) in xs.iter().take(60).zip(&ys) {
+            let resp = coord.classify(x.clone()).unwrap();
+            if (resp.label as f64 - y).abs() < 1e-9 {
+                correct += 1;
+            }
+            assert_eq!(resp.backend, Backend::ChipSim);
+        }
+        assert!(correct >= 50, "only {correct}/60 correct");
+        assert!(coord.metrics.responses.load(Ordering::Relaxed) >= 60);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn concurrent_submissions_all_answered() {
+        let (sys, chip, xs, ys) = tiny_system();
+        let coord = Coordinator::start(&sys, &chip, &xs, &ys, 1e-2, 10).unwrap();
+        let rxs: Vec<_> = (0..40)
+            .map(|i| coord.submit(xs[i % xs.len()].clone()).unwrap())
+            .collect();
+        let mut ids = Vec::new();
+        for rx in rxs {
+            ids.push(rx.recv().unwrap().id);
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 40, "lost or duplicated responses");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn rejects_wrong_dimension() {
+        let (sys, chip, xs, ys) = tiny_system();
+        let coord = Coordinator::start(&sys, &chip, &xs, &ys, 1e-2, 10).unwrap();
+        assert!(coord.submit(vec![0.0; 3]).is_err());
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,80 @@
+//! Request/response types flowing through the serving pipeline.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Which engine produced the hidden layer for a response.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Scalar behavioural chip simulator (per-sample conversion).
+    ChipSim,
+    /// Batched AOT JAX/Pallas artifact via PJRT.
+    Pjrt,
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Backend::ChipSim => write!(f, "chip-sim"),
+            Backend::Pjrt => write!(f, "pjrt"),
+        }
+    }
+}
+
+/// One classification request: features in [-1, 1]^d.
+#[derive(Debug)]
+pub struct ClassifyRequest {
+    pub id: u64,
+    pub features: Vec<f64>,
+    pub submitted: Instant,
+    pub reply: mpsc::Sender<ClassifyResponse>,
+}
+
+/// The answer.
+#[derive(Clone, Debug)]
+pub struct ClassifyResponse {
+    pub id: u64,
+    /// Raw second-stage score (eq. 1 output o).
+    pub score: f64,
+    /// Thresholded label (+1 / -1).
+    pub label: i8,
+    /// Which worker/die served it.
+    pub worker: usize,
+    pub backend: Backend,
+    /// Wall-clock latency from submit to reply.
+    pub latency: std::time::Duration,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_display() {
+        assert_eq!(Backend::ChipSim.to_string(), "chip-sim");
+        assert_eq!(Backend::Pjrt.to_string(), "pjrt");
+    }
+
+    #[test]
+    fn request_response_roundtrip_over_channel() {
+        let (tx, rx) = mpsc::channel();
+        let req = ClassifyRequest {
+            id: 7,
+            features: vec![0.1, -0.2],
+            submitted: Instant::now(),
+            reply: tx,
+        };
+        let resp = ClassifyResponse {
+            id: req.id,
+            score: 0.5,
+            label: 1,
+            worker: 0,
+            backend: Backend::ChipSim,
+            latency: req.submitted.elapsed(),
+        };
+        req.reply.send(resp.clone()).unwrap();
+        let got = rx.recv().unwrap();
+        assert_eq!(got.id, 7);
+        assert_eq!(got.label, 1);
+    }
+}

@@ -1,0 +1,145 @@
+//! Request router: spreads classification requests across the worker
+//! (die) pool by least outstanding work, falling back to round-robin on
+//! ties — each worker owns one fabricated chip and its own trained head.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+
+use super::request::ClassifyRequest;
+
+/// Shared outstanding-work counters, decremented by workers on reply.
+#[derive(Clone)]
+pub struct Outstanding(pub Arc<Vec<AtomicUsize>>);
+
+impl Outstanding {
+    pub fn new(n: usize) -> Self {
+        Outstanding(Arc::new((0..n).map(|_| AtomicUsize::new(0)).collect()))
+    }
+
+    pub fn inc(&self, w: usize) {
+        self.0[w].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn dec(&self, w: usize) {
+        self.0[w].fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn load(&self, w: usize) -> usize {
+        self.0[w].load(Ordering::Relaxed)
+    }
+}
+
+pub struct Router {
+    senders: Vec<Sender<ClassifyRequest>>,
+    pub outstanding: Outstanding,
+    rr: AtomicU64,
+}
+
+impl Router {
+    pub fn new(senders: Vec<Sender<ClassifyRequest>>) -> Self {
+        let outstanding = Outstanding::new(senders.len());
+        Router { senders, outstanding, rr: AtomicU64::new(0) }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Pick the least-loaded worker (round-robin tiebreak) and enqueue.
+    pub fn route(&self, req: ClassifyRequest) -> Result<usize, String> {
+        let n = self.senders.len();
+        if n == 0 {
+            return Err("no workers".into());
+        }
+        let start = (self.rr.fetch_add(1, Ordering::Relaxed) as usize) % n;
+        let mut best = start;
+        let mut best_load = usize::MAX;
+        for k in 0..n {
+            let w = (start + k) % n;
+            let load = self.outstanding.load(w);
+            if load < best_load {
+                best = w;
+                best_load = load;
+            }
+        }
+        self.outstanding.inc(best);
+        self.senders[best]
+            .send(req)
+            .map_err(|_| format!("worker {best} is gone"))?;
+        Ok(best)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    fn req(id: u64) -> ClassifyRequest {
+        let (tx, _rx) = mpsc::channel();
+        ClassifyRequest { id, features: vec![], submitted: Instant::now(), reply: tx }
+    }
+
+    #[test]
+    fn spreads_load_evenly_when_idle() {
+        let (t0, r0) = mpsc::channel();
+        let (t1, r1) = mpsc::channel();
+        let router = Router::new(vec![t0, t1]);
+        let mut counts = [0usize; 2];
+        for i in 0..10 {
+            let w = router.route(req(i)).unwrap();
+            counts[w] += 1;
+            // simulate completion so load stays balanced
+            router.outstanding.dec(w);
+        }
+        assert_eq!(counts[0] + counts[1], 10);
+        assert!(counts[0] >= 4 && counts[1] >= 4, "{counts:?}");
+        assert_eq!(r0.try_iter().count() + r1.try_iter().count(), 10);
+    }
+
+    #[test]
+    fn prefers_less_loaded_worker() {
+        let (t0, _r0) = mpsc::channel();
+        let (t1, _r1) = mpsc::channel();
+        let router = Router::new(vec![t0, t1]);
+        // worker 0 is busy with 5 outstanding
+        for _ in 0..5 {
+            router.outstanding.inc(0);
+        }
+        for i in 0..5 {
+            let w = router.route(req(i)).unwrap();
+            assert_eq!(w, 1, "request {i} should go to idle worker");
+            router.outstanding.dec(w);
+        }
+    }
+
+    #[test]
+    fn conservation_under_routing() {
+        // every routed request lands in exactly one queue
+        let (t0, r0) = mpsc::channel();
+        let (t1, r1) = mpsc::channel();
+        let (t2, r2) = mpsc::channel();
+        let router = Router::new(vec![t0, t1, t2]);
+        for i in 0..100 {
+            router.route(req(i)).unwrap();
+        }
+        let mut ids: Vec<u64> = r0
+            .try_iter()
+            .chain(r1.try_iter())
+            .chain(r2.try_iter())
+            .map(|r| r.id)
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn dead_worker_reports_error() {
+        let (t0, r0) = mpsc::channel();
+        drop(r0);
+        let router = Router::new(vec![t0]);
+        assert!(router.route(req(1)).is_err());
+    }
+}

@@ -1,0 +1,118 @@
+//! Line-protocol TCP front end for the coordinator (std::net, one thread
+//! per connection — no tokio in the offline vendor set).
+//!
+//! Protocol (newline-terminated ASCII):
+//!   `CLASSIFY x1,x2,...,xd`  ->  `OK <label> <score>`
+//!   `STATS`                  ->  `OK <metrics one-liner>`
+//!   `PING`                   ->  `OK pong`
+//!   `QUIT`                   ->  closes the connection
+//! Errors come back as `ERR <reason>`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::Coordinator;
+
+/// Handle one protocol line. Exposed for unit testing without sockets.
+pub fn handle_line(coord: &Coordinator, line: &str) -> Option<String> {
+    let line = line.trim();
+    if line.is_empty() {
+        return Some("ERR empty command".into());
+    }
+    let (cmd, rest) = line.split_once(' ').unwrap_or((line, ""));
+    match cmd.to_ascii_uppercase().as_str() {
+        "PING" => Some("OK pong".into()),
+        "STATS" => Some(format!("OK {}", coord.metrics.report())),
+        "QUIT" => None,
+        "CLASSIFY" => {
+            let features: std::result::Result<Vec<f64>, _> =
+                rest.split(',').map(|t| t.trim().parse::<f64>()).collect();
+            match features {
+                Err(e) => Some(format!("ERR bad features: {e}")),
+                Ok(f) => match coord.classify(f) {
+                    Ok(resp) => Some(format!("OK {} {:.6}", resp.label, resp.score)),
+                    Err(e) => Some(format!("ERR {e:#}")),
+                },
+            }
+        }
+        other => Some(format!("ERR unknown command {other}")),
+    }
+}
+
+fn serve_conn(coord: Arc<Coordinator>, stream: TcpStream) {
+    let _ = stream.set_nodelay(true); // request/response pattern: defeat Nagle
+    let peer = stream.peer_addr().ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        match handle_line(&coord, &line) {
+            Some(resp) => {
+                if writeln!(writer, "{resp}").is_err() {
+                    break;
+                }
+            }
+            None => break, // QUIT
+        }
+    }
+    let _ = peer;
+}
+
+/// Serve forever on `addr` (e.g. "127.0.0.1:7177"). Blocks the caller;
+/// spawns one thread per connection.
+pub fn serve(coord: Arc<Coordinator>, addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    eprintln!("velm serving on {addr}");
+    for stream in listener.incoming() {
+        match stream {
+            Ok(s) => {
+                let c = Arc::clone(&coord);
+                std::thread::spawn(move || serve_conn(c, s));
+            }
+            Err(e) => eprintln!("accept error: {e}"),
+        }
+    }
+    Ok(())
+}
+
+/// Serve a bounded number of connections (for tests / examples), then
+/// return. Binds to an ephemeral port and reports it via the return.
+pub fn serve_n(coord: Arc<Coordinator>, conns: usize) -> Result<(std::net::SocketAddr, JoinHandleVec)> {
+    let listener = TcpListener::bind("127.0.0.1:0").context("binding ephemeral")?;
+    let addr = listener.local_addr()?;
+    let mut handles = Vec::new();
+    let accept_thread = std::thread::spawn(move || {
+        let mut taken = Vec::new();
+        for stream in listener.incoming().take(conns) {
+            if let Ok(s) = stream {
+                let c = Arc::clone(&coord);
+                taken.push(std::thread::spawn(move || serve_conn(c, s)));
+            }
+        }
+        for t in taken {
+            let _ = t.join();
+        }
+    });
+    handles.push(accept_thread);
+    Ok((addr, JoinHandleVec(handles)))
+}
+
+/// Joinable bundle returned by [`serve_n`].
+pub struct JoinHandleVec(pub Vec<std::thread::JoinHandle<()>>);
+
+impl JoinHandleVec {
+    pub fn join(self) {
+        for h in self.0 {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! Chip worker: one thread owning one fabricated die, its trained head
+//! and (optionally) a PJRT engine. Batches arrive from the router via
+//! the dynamic batcher; the hidden layer runs on the batched AOT
+//! artifact when the batch is large enough, else on the scalar chip
+//! simulator; the fixed-point second stage produces the score.
+
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::chip::{dac, ChipModel};
+use crate::config::SystemConfig;
+use crate::elm::secondstage::{codes_sum, SecondStage};
+use crate::runtime::PjrtEngine;
+
+use super::batcher::collect_batch;
+use super::metrics::Metrics;
+use super::request::{Backend, ClassifyRequest, ClassifyResponse};
+use super::router::Outstanding;
+
+/// Everything one worker needs, bundled for the spawn.
+pub struct WorkerSetup {
+    pub index: usize,
+    pub chip: ChipModel,
+    pub second: SecondStage,
+    /// Artifact directory; the engine itself is created *inside* the
+    /// worker thread (PJRT handles are not `Send`).
+    pub artifact_dir: Option<String>,
+    pub rx: Receiver<ClassifyRequest>,
+    pub metrics: Arc<Metrics>,
+    pub outstanding: Outstanding,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub pjrt_min_batch: usize,
+    pub normalize: bool,
+}
+
+/// Worker main loop; returns when the request channel closes.
+pub fn run(mut s: WorkerSetup) {
+    // PJRT engine lives entirely on this thread (handles are not Send)
+    let mut engine: Option<PjrtEngine> = s.artifact_dir.as_deref().and_then(open_engine);
+    // weight matrix for the PJRT path, frozen at spawn temperature
+    let w_f32: Vec<f32> = s.chip.weights().to_f32();
+    let d = s.chip.cfg.d;
+    let l = s.chip.cfg.l;
+    while let Some(batch) = collect_batch(&s.rx, s.max_batch, s.max_wait) {
+        let n = batch.len();
+        let use_pjrt = engine.is_some() && n >= s.pjrt_min_batch;
+        s.metrics.record_batch(n, use_pjrt);
+        // DAC quantisation happens once, shared by both paths
+        let codes: Vec<Vec<u16>> = batch
+            .iter()
+            .map(|r| dac::features_to_codes(&r.features, &s.chip.cfg))
+            .collect();
+        let hidden: Vec<Vec<u32>> = if use_pjrt {
+            let engine = engine.as_mut().unwrap();
+            let flat: Vec<f32> = codes
+                .iter()
+                .flat_map(|c| c.iter().map(|&v| v as f32))
+                .collect();
+            match engine.hidden(&flat, n, d, l, &w_f32, false) {
+                Ok(out) => out
+                    .chunks(l)
+                    .map(|row| row.iter().map(|&v| v.max(0.0) as u32).collect())
+                    .collect(),
+                Err(e) => {
+                    // artifact trouble: fall back to the simulator
+                    eprintln!("worker {}: pjrt failed ({e:#}); falling back", s.index);
+                    codes.iter().map(|c| s.chip.forward(c)).collect()
+                }
+            }
+        } else {
+            codes.iter().map(|c| s.chip.forward(c)).collect()
+        };
+        let backend = if use_pjrt { Backend::Pjrt } else { Backend::ChipSim };
+        for ((req, code), h) in batch.iter().zip(&codes).zip(&hidden) {
+            let score = s.second.score(h, codes_sum(code));
+            let resp = ClassifyResponse {
+                id: req.id,
+                score,
+                label: if score >= 0.0 { 1 } else { -1 },
+                worker: s.index,
+                backend,
+                latency: req.submitted.elapsed(),
+            };
+            s.metrics.record_response(resp.latency);
+            s.outstanding.dec(s.index);
+            // receiver may have hung up; that's the client's business
+            let _ = req.reply.send(resp);
+        }
+    }
+}
+
+/// Open the PJRT engine for a directory, logging (not failing) on error.
+fn open_engine(dir: &str) -> Option<PjrtEngine> {
+    let path = std::path::Path::new(dir);
+    if !crate::runtime::artifacts_available(path) {
+        return None;
+    }
+    match PjrtEngine::new(path) {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("pjrt engine unavailable ({err:#}); serving via chip sim");
+            None
+        }
+    }
+}
+
+/// Artifact dir to pass into a worker, if it looks usable.
+pub fn usable_artifact_dir(sys: &SystemConfig) -> Option<String> {
+    let dir = std::path::Path::new(&sys.artifact_dir);
+    if crate::runtime::artifacts_available(dir) {
+        Some(sys.artifact_dir.clone())
+    } else {
+        None
+    }
+}

@@ -1,0 +1,147 @@
+//! Workload generation for serving experiments: open-loop Poisson
+//! arrivals and closed-loop clients, driving the coordinator the way the
+//! paper's FPGA drives the chip — plus a latency-under-load sweep used
+//! by the perf bench and EXPERIMENTS.md §E2E.
+
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::Coordinator;
+use crate::util::prng::Prng;
+
+/// Result of one load level.
+#[derive(Clone, Debug)]
+pub struct LoadPoint {
+    pub offered_rps: f64,
+    pub achieved_rps: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub mean_batch: f64,
+}
+
+/// Exponential inter-arrival sample for a Poisson process at `rate` Hz.
+pub fn exp_interarrival(rate: f64, rng: &mut Prng) -> Duration {
+    let u = rng.f64().max(f64::MIN_POSITIVE);
+    Duration::from_secs_f64((-u.ln() / rate).min(1.0))
+}
+
+/// Open-loop Poisson load: submit `n` requests at `rate` req/s drawn
+/// from `samples`, wait for all responses, report latency percentiles.
+pub fn poisson_load(
+    coord: &Coordinator,
+    samples: &[Vec<f64>],
+    rate: f64,
+    n: usize,
+    seed: u64,
+) -> LoadPoint {
+    let mut rng = Prng::new(seed);
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(n);
+    for k in 0..n {
+        let x = samples[k % samples.len()].clone();
+        rxs.push(coord.submit(x).expect("submit"));
+        std::thread::sleep(exp_interarrival(rate, &mut rng));
+    }
+    for rx in rxs {
+        let _ = rx.recv();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    LoadPoint {
+        offered_rps: rate,
+        achieved_rps: n as f64 / wall,
+        p50_us: coord.metrics.latency_percentile_us(50.0),
+        p99_us: coord.metrics.latency_percentile_us(99.0),
+        mean_batch: coord.metrics.mean_batch_size(),
+    }
+}
+
+/// Closed-loop saturation: `clients` threads submitting back-to-back for
+/// `per_client` requests each; measures the system's peak throughput.
+pub fn closed_loop(
+    coord: &Coordinator,
+    samples: &[Vec<f64>],
+    clients: usize,
+    per_client: usize,
+) -> LoadPoint {
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let coord = &*coord;
+            let samples = &samples;
+            s.spawn(move || {
+                for k in 0..per_client {
+                    let x = samples[(c * per_client + k) % samples.len()].clone();
+                    let rx = coord.submit(x).expect("submit");
+                    let _ = rx.recv();
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let n = clients * per_client;
+    LoadPoint {
+        offered_rps: f64::INFINITY,
+        achieved_rps: n as f64 / wall,
+        p50_us: coord.metrics.latency_percentile_us(50.0),
+        p99_us: coord.metrics.latency_percentile_us(99.0),
+        mean_batch: coord.metrics.mean_batch_size(),
+    }
+}
+
+/// Sanity counter: requests in == responses out (conservation).
+pub fn conservation_ok(coord: &Coordinator) -> bool {
+    coord.metrics.requests.load(Ordering::Relaxed)
+        == coord.metrics.responses.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ChipConfig, SystemConfig};
+    use crate::datasets::synth;
+
+    fn tiny_coord() -> (Coordinator, Vec<Vec<f64>>) {
+        let ds = synth::brightdata(1).with_test_subsample(40, 1);
+        let mut cfg = ChipConfig::default().with_b(10);
+        cfg.d = ds.d();
+        let sys = SystemConfig {
+            n_chips: 2,
+            artifact_dir: "/nonexistent".into(),
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        };
+        let c = Coordinator::start(&sys, &cfg, &ds.train_x, &ds.train_y, 0.1, 10).unwrap();
+        (c, ds.test_x)
+    }
+
+    #[test]
+    fn interarrival_mean_matches_rate() {
+        let mut rng = Prng::new(1);
+        let n = 20_000;
+        let total: f64 = (0..n)
+            .map(|_| exp_interarrival(1000.0, &mut rng).as_secs_f64())
+            .sum();
+        let mean = total / n as f64;
+        assert!((mean - 1e-3).abs() < 1e-4, "mean {mean}");
+    }
+
+    #[test]
+    fn closed_loop_completes_and_conserves() {
+        let (coord, samples) = tiny_coord();
+        let lp = closed_loop(&coord, &samples, 4, 25);
+        assert!(lp.achieved_rps > 0.0);
+        assert!(lp.p99_us >= lp.p50_us);
+        assert!(conservation_ok(&coord));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn poisson_load_reports_sane_numbers() {
+        let (coord, samples) = tiny_coord();
+        let lp = poisson_load(&coord, &samples, 2000.0, 60, 7);
+        assert!(lp.achieved_rps > 0.0);
+        assert!(lp.mean_batch >= 1.0);
+        assert!(conservation_ok(&coord));
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,181 @@
+//! Synthetic multi-class digit images (MNIST stand-in for the paper's
+//! stated future work: "apply this chip to classify multi-class image
+//! datasets such as MNIST"). 8x8 grayscale prototypes per class with
+//! elastic jitter, pixel noise and per-sample gain — small enough to run
+//! through the 128-channel chip (64 pixels -> 64 channels, or 2x2
+//! upsampled to exercise all 128+ via the extension path).
+
+use super::Dataset;
+use crate::util::prng::Prng;
+
+pub const SIDE: usize = 8;
+pub const DIM: usize = SIDE * SIDE;
+
+/// Hand-drawn 8x8 prototypes for digits 0..=9 (0 = off, 1 = on).
+const GLYPHS: [[u8; DIM]; 10] = [
+    // 0
+    [0,0,1,1,1,1,0,0, 0,1,1,0,0,1,1,0, 0,1,0,0,0,0,1,0, 0,1,0,0,0,0,1,0,
+     0,1,0,0,0,0,1,0, 0,1,0,0,0,0,1,0, 0,1,1,0,0,1,1,0, 0,0,1,1,1,1,0,0],
+    // 1
+    [0,0,0,1,1,0,0,0, 0,0,1,1,1,0,0,0, 0,1,0,1,1,0,0,0, 0,0,0,1,1,0,0,0,
+     0,0,0,1,1,0,0,0, 0,0,0,1,1,0,0,0, 0,0,0,1,1,0,0,0, 0,1,1,1,1,1,1,0],
+    // 2
+    [0,0,1,1,1,1,0,0, 0,1,0,0,0,1,1,0, 0,0,0,0,0,1,1,0, 0,0,0,0,1,1,0,0,
+     0,0,0,1,1,0,0,0, 0,0,1,1,0,0,0,0, 0,1,1,0,0,0,0,0, 0,1,1,1,1,1,1,0],
+    // 3
+    [0,1,1,1,1,1,0,0, 0,0,0,0,0,1,1,0, 0,0,0,0,0,1,1,0, 0,0,1,1,1,1,0,0,
+     0,0,0,0,0,1,1,0, 0,0,0,0,0,1,1,0, 0,0,0,0,0,1,1,0, 0,1,1,1,1,1,0,0],
+    // 4
+    [0,0,0,0,1,1,0,0, 0,0,0,1,1,1,0,0, 0,0,1,0,1,1,0,0, 0,1,0,0,1,1,0,0,
+     0,1,1,1,1,1,1,0, 0,0,0,0,1,1,0,0, 0,0,0,0,1,1,0,0, 0,0,0,0,1,1,0,0],
+    // 5
+    [0,1,1,1,1,1,1,0, 0,1,1,0,0,0,0,0, 0,1,1,0,0,0,0,0, 0,1,1,1,1,1,0,0,
+     0,0,0,0,0,1,1,0, 0,0,0,0,0,1,1,0, 0,1,0,0,0,1,1,0, 0,0,1,1,1,1,0,0],
+    // 6
+    [0,0,1,1,1,1,0,0, 0,1,1,0,0,0,0,0, 0,1,1,0,0,0,0,0, 0,1,1,1,1,1,0,0,
+     0,1,1,0,0,1,1,0, 0,1,1,0,0,1,1,0, 0,1,1,0,0,1,1,0, 0,0,1,1,1,1,0,0],
+    // 7
+    [0,1,1,1,1,1,1,0, 0,0,0,0,0,1,1,0, 0,0,0,0,1,1,0,0, 0,0,0,0,1,1,0,0,
+     0,0,0,1,1,0,0,0, 0,0,0,1,1,0,0,0, 0,0,1,1,0,0,0,0, 0,0,1,1,0,0,0,0],
+    // 8
+    [0,0,1,1,1,1,0,0, 0,1,1,0,0,1,1,0, 0,1,1,0,0,1,1,0, 0,0,1,1,1,1,0,0,
+     0,1,1,0,0,1,1,0, 0,1,1,0,0,1,1,0, 0,1,1,0,0,1,1,0, 0,0,1,1,1,1,0,0],
+    // 9
+    [0,0,1,1,1,1,0,0, 0,1,1,0,0,1,1,0, 0,1,1,0,0,1,1,0, 0,0,1,1,1,1,1,0,
+     0,0,0,0,0,1,1,0, 0,0,0,0,0,1,1,0, 0,0,0,0,1,1,0,0, 0,0,1,1,1,0,0,0],
+];
+
+/// One jittered sample of a digit class, normalised to [-1, 1] pixels.
+pub fn sample_digit(class: usize, rng: &mut Prng) -> Vec<f64> {
+    assert!(class < 10);
+    let glyph = &GLYPHS[class];
+    // global shift by up to 1 pixel in each axis
+    let dx = rng.usize(3) as isize - 1;
+    let dy = rng.usize(3) as isize - 1;
+    let gain = rng.range(0.75, 1.0);
+    let mut img = vec![0.0f64; DIM];
+    for y in 0..SIDE as isize {
+        for x in 0..SIDE as isize {
+            let (sx, sy) = (x - dx, y - dy);
+            if (0..SIDE as isize).contains(&sx) && (0..SIDE as isize).contains(&sy) {
+                img[(y * SIDE as isize + x) as usize] =
+                    glyph[(sy * SIDE as isize + sx) as usize] as f64 * gain;
+            }
+        }
+    }
+    // pixel noise + [-1,1] normalisation
+    img.iter()
+        .map(|&v| ((v + rng.normal(0.0, 0.12)).clamp(0.0, 1.0)) * 2.0 - 1.0)
+        .collect()
+}
+
+/// A 10-class digits dataset: features [-1,1]^64, integer labels.
+pub fn digits(n_train: usize, n_test: usize, seed: u64) -> (Dataset, Vec<usize>, Vec<usize>) {
+    let mut rng = Prng::new(seed ^ 0xD161);
+    let n = n_train + n_test;
+    let mut xs = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for k in 0..n {
+        let c = k % 10;
+        xs.push(sample_digit(c, &mut rng));
+        labels.push(c);
+    }
+    // shuffle while keeping xs/labels aligned
+    let idx = rng.permutation(n);
+    let xs2: Vec<Vec<f64>> = idx.iter().map(|&i| xs[i].clone()).collect();
+    let l2: Vec<usize> = idx.iter().map(|&i| labels[i]).collect();
+    xs = xs2;
+    labels = l2;
+    let ds = Dataset {
+        name: "digits".into(),
+        train_x: xs[..n_train].to_vec(),
+        train_y: labels[..n_train].iter().map(|&c| c as f64).collect(),
+        test_x: xs[n_train..].to_vec(),
+        test_y: labels[n_train..].iter().map(|&c| c as f64).collect(),
+    };
+    (ds, labels[..n_train].to_vec(), labels[n_train..].to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_ranges() {
+        let (ds, ltr, lte) = digits(200, 100, 1);
+        assert_eq!(ds.d(), 64);
+        assert_eq!(ds.n_train(), 200);
+        assert_eq!(ds.n_test(), 100);
+        assert_eq!(ltr.len(), 200);
+        assert_eq!(lte.len(), 100);
+        ds.validate().unwrap();
+        assert!(ltr.iter().all(|&c| c < 10));
+    }
+
+    #[test]
+    fn all_ten_classes_present() {
+        let (_, ltr, _) = digits(200, 50, 2);
+        for c in 0..10 {
+            assert!(ltr.contains(&c), "class {c} missing");
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let (a, _, _) = digits(50, 20, 3);
+        let (b, _, _) = digits(50, 20, 3);
+        assert_eq!(a.train_x, b.train_x);
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // shift-aware nearest-prototype classifies noisy samples well
+        // (samples carry +-1 pixel jitter, so match against all shifts)
+        let mut rng = Prng::new(4);
+        let shifted_protos: Vec<Vec<Vec<f64>>> = (0..10)
+            .map(|c| {
+                let mut variants = Vec::new();
+                for dy in -1isize..=1 {
+                    for dx in -1isize..=1 {
+                        let mut img = vec![-1.0f64; DIM];
+                        for y in 0..SIDE as isize {
+                            for x in 0..SIDE as isize {
+                                let (sx, sy) = (x - dx, y - dy);
+                                if (0..SIDE as isize).contains(&sx)
+                                    && (0..SIDE as isize).contains(&sy)
+                                {
+                                    img[(y * SIDE as isize + x) as usize] = GLYPHS[c]
+                                        [(sy * SIDE as isize + sx) as usize]
+                                        as f64
+                                        * 2.0
+                                        - 1.0;
+                                }
+                            }
+                        }
+                        variants.push(img);
+                    }
+                }
+                variants
+            })
+            .collect();
+        let dist = |a: &[f64], b: &[f64]| -> f64 {
+            a.iter().zip(b).map(|(p, x)| (p - x) * (p - x)).sum()
+        };
+        let mut correct = 0;
+        for _ in 0..200 {
+            let c = rng.usize(10);
+            let s = sample_digit(c, &mut rng);
+            let best = (0..10)
+                .min_by(|&a, &b| {
+                    let da = shifted_protos[a].iter().map(|p| dist(p, &s)).fold(f64::MAX, f64::min);
+                    let db = shifted_protos[b].iter().map(|p| dist(p, &s)).fold(f64::MAX, f64::min);
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best == c {
+                correct += 1;
+            }
+        }
+        assert!(correct > 150, "prototype accuracy {correct}/200");
+    }
+}

@@ -1,0 +1,167 @@
+//! Datasets: train/test containers, a CSV loader for real UCI files, and
+//! deterministic synthetic generators ([`synth`]) standing in for the
+//! paper's UCI downloads on this offline image (DESIGN.md §4).
+
+pub mod digits;
+pub mod synth;
+
+/// A supervised dataset with a fixed train/test split. Features are
+/// normalised to [-1, 1] (the chip's input mapping, Section III-D);
+/// classification targets are +-1, regression targets are raw floats.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub train_x: Vec<Vec<f64>>,
+    pub train_y: Vec<f64>,
+    pub test_x: Vec<Vec<f64>>,
+    pub test_y: Vec<f64>,
+}
+
+impl Dataset {
+    pub fn d(&self) -> usize {
+        self.train_x.first().map_or(0, |x| x.len())
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.train_x.len()
+    }
+
+    pub fn n_test(&self) -> usize {
+        self.test_x.len()
+    }
+
+    /// Subsample the test set (for quick bench modes); deterministic.
+    pub fn with_test_subsample(mut self, max: usize, seed: u64) -> Self {
+        if self.test_x.len() <= max {
+            return self;
+        }
+        let mut rng = crate::util::prng::Prng::new(seed);
+        let idx = rng.permutation(self.test_x.len());
+        let keep: Vec<usize> = idx.into_iter().take(max).collect();
+        self.test_x = keep.iter().map(|&i| self.test_x[i].clone()).collect();
+        self.test_y = keep.iter().map(|&i| self.test_y[i]).collect();
+        self
+    }
+
+    /// Class balance of the training targets (fraction labelled +1);
+    /// NaN-free even for regression sets.
+    pub fn train_pos_fraction(&self) -> f64 {
+        if self.train_y.is_empty() {
+            return 0.0;
+        }
+        self.train_y.iter().filter(|&&y| y > 0.0).count() as f64 / self.train_y.len() as f64
+    }
+
+    /// Sanity checks used by the property tests.
+    pub fn validate(&self) -> Result<(), String> {
+        let d = self.d();
+        if d == 0 {
+            return Err("empty feature dimension".into());
+        }
+        for (k, x) in self.train_x.iter().chain(self.test_x.iter()).enumerate() {
+            if x.len() != d {
+                return Err(format!("ragged sample {k}"));
+            }
+            if x.iter().any(|v| !v.is_finite() || v.abs() > 1.0 + 1e-9) {
+                return Err(format!("sample {k} outside [-1,1]"));
+            }
+        }
+        if self.train_x.len() != self.train_y.len() || self.test_x.len() != self.test_y.len() {
+            return Err("feature/target length mismatch".into());
+        }
+        Ok(())
+    }
+}
+
+/// Parse a simple CSV (no quoting) with the label in the last column.
+/// Features are min-max rescaled to [-1, 1] using *training* statistics.
+/// Lets users drop real UCI files into `data/` to replace the synthetic
+/// stand-ins.
+pub fn load_csv(
+    name: &str,
+    train_csv: &str,
+    test_csv: &str,
+) -> Result<Dataset, String> {
+    fn parse(text: &str) -> Result<(Vec<Vec<f64>>, Vec<f64>), String> {
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let vals: Result<Vec<f64>, _> =
+                line.split(',').map(|t| t.trim().parse::<f64>()).collect();
+            let vals = vals.map_err(|e| format!("line {}: {e}", ln + 1))?;
+            if vals.len() < 2 {
+                return Err(format!("line {}: need features + label", ln + 1));
+            }
+            let (x, y) = vals.split_at(vals.len() - 1);
+            xs.push(x.to_vec());
+            ys.push(y[0]);
+        }
+        Ok((xs, ys))
+    }
+    let (mut train_x, train_y) = parse(train_csv)?;
+    let (mut test_x, test_y) = parse(test_csv)?;
+    let d = train_x.first().map_or(0, |x| x.len());
+    // min-max from train split only
+    let mut lo = vec![f64::MAX; d];
+    let mut hi = vec![f64::MIN; d];
+    for x in &train_x {
+        for (j, &v) in x.iter().enumerate() {
+            lo[j] = lo[j].min(v);
+            hi[j] = hi[j].max(v);
+        }
+    }
+    let rescale = |xs: &mut Vec<Vec<f64>>| {
+        for x in xs {
+            for (j, v) in x.iter_mut().enumerate() {
+                let span = hi[j] - lo[j];
+                *v = if span == 0.0 {
+                    0.0
+                } else {
+                    ((*v - lo[j]) / span * 2.0 - 1.0).clamp(-1.0, 1.0)
+                };
+            }
+        }
+    };
+    rescale(&mut train_x);
+    rescale(&mut test_x);
+    let ds = Dataset { name: name.to_string(), train_x, train_y, test_x, test_y };
+    ds.validate()?;
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip_and_rescale() {
+        let train = "0,10,1\n5,20,-1\n10,30,1\n";
+        let test = "5,25,-1\n";
+        let ds = load_csv("toy", train, test).unwrap();
+        assert_eq!(ds.d(), 2);
+        assert_eq!(ds.n_train(), 3);
+        assert_eq!(ds.n_test(), 1);
+        assert_eq!(ds.train_x[0], vec![-1.0, -1.0]);
+        assert_eq!(ds.train_x[2], vec![1.0, 1.0]);
+        assert_eq!(ds.test_x[0], vec![0.0, 0.5]);
+        assert_eq!(ds.train_y, vec![1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn csv_rejects_garbage() {
+        assert!(load_csv("bad", "1,notanumber,1\n", "").is_err());
+        assert!(load_csv("bad", "1\n", "").is_err());
+    }
+
+    #[test]
+    fn subsample_is_deterministic_and_bounded() {
+        let ds = synth::brightdata(1).with_test_subsample(100, 7);
+        assert_eq!(ds.n_test(), 100);
+        let ds2 = synth::brightdata(1).with_test_subsample(100, 7);
+        assert_eq!(ds.test_y, ds2.test_y);
+    }
+}

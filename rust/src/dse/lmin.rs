@@ -1,0 +1,109 @@
+//! Fig. 7(a): L_min — the smallest hidden-layer size reaching a target
+//! regression error — as a function of the I_sat^z/I_max^z ratio and the
+//! mismatch sigma_VT. The paper's key design-space result: the optimum
+//! ratio sits near 0.75 and sigma_VT in 15-25 mV minimises L_min.
+
+use crate::dse::FastSim;
+use crate::util::mat::{ridge_solve, Mat};
+use crate::util::prng::Prng;
+use crate::util::stats;
+
+/// One regression trial: fit the sinc task through the fast chip
+/// simulation with L hidden neurons; returns test RMSE vs the clean
+/// function (the paper's d=1 noisy-samples regression, Section III-D).
+pub fn regression_error(sim: &FastSim, l: usize, n_train: usize, seed: u64) -> f64 {
+    let ds = crate::datasets::synth::sinc(n_train, 256, 0.2, seed);
+    let mut rng = Prng::new(seed ^ 0x11F0);
+    let w = sim.sample_weights(1, l, &mut rng);
+    let h_tr = sim.hidden(&ds.train_x, &w);
+    // scale H to O(1) before the solve for conditioning
+    let scale = 1.0 / sim.cap();
+    let mut h_tr_s = h_tr;
+    h_tr_s.scale(scale);
+    let t = Mat { rows: ds.train_y.len(), cols: 1, data: ds.train_y.clone() };
+    let beta = match ridge_solve(&h_tr_s, &t, 1e-6) {
+        Ok(b) => b,
+        Err(_) => return f64::MAX,
+    };
+    let mut h_te = sim.hidden(&ds.test_x, &w);
+    h_te.scale(scale);
+    let pred = h_te.matmul(&beta);
+    stats::rmse(&pred.col(0), &ds.test_y)
+}
+
+/// Mean regression error over `trials` independent dies.
+pub fn mean_error(sim: &FastSim, l: usize, n_train: usize, trials: usize, seed: u64) -> f64 {
+    let errs: Vec<f64> = (0..trials)
+        .map(|t| regression_error(sim, l, n_train, seed + 997 * t as u64))
+        .collect();
+    stats::mean(&errs)
+}
+
+/// Find L_min: smallest L in `l_grid` (ascending) whose mean error is at
+/// or below `threshold` (the paper uses 0.08). Returns `None` when even
+/// the largest L misses the target — plotted as saturation in Fig. 7(a).
+pub fn l_min(
+    sim: &FastSim,
+    l_grid: &[usize],
+    threshold: f64,
+    n_train: usize,
+    trials: usize,
+    seed: u64,
+) -> Option<usize> {
+    for &l in l_grid {
+        if mean_error(sim, l, n_train, trials, seed) <= threshold {
+            return Some(l);
+        }
+    }
+    None
+}
+
+/// The standard L grid used by the Fig. 7(a) bench.
+pub fn default_l_grid() -> Vec<usize> {
+    vec![5, 8, 12, 16, 24, 32, 48, 64, 96, 128, 192, 256]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_decreases_with_l() {
+        let sim = FastSim::default();
+        let e_small = mean_error(&sim, 6, 400, 2, 1);
+        let e_big = mean_error(&sim, 96, 400, 2, 1);
+        assert!(e_big < e_small, "L=6: {e_small}, L=96: {e_big}");
+        assert!(e_big < 0.12, "large-L error {e_big}");
+    }
+
+    #[test]
+    fn lmin_finds_threshold_crossing() {
+        let sim = FastSim::default();
+        let grid = vec![4, 16, 64, 128];
+        let lm = l_min(&sim, &grid, 0.12, 400, 2, 2);
+        assert!(lm.is_some());
+        assert!(lm.unwrap() >= 4 && lm.unwrap() <= 128);
+    }
+
+    #[test]
+    fn degenerate_ratio_needs_more_neurons() {
+        // Fig. 7(a): a far-too-small ratio (everything saturates) must be
+        // worse than the 0.75 optimum at the same L.
+        let good = FastSim { ratio: 0.75, ..Default::default() };
+        let bad = FastSim { ratio: 0.05, ..Default::default() };
+        let e_good = mean_error(&good, 48, 400, 2, 3);
+        let e_bad = mean_error(&bad, 48, 400, 2, 3);
+        assert!(e_bad > e_good, "good {e_good} bad {e_bad}");
+    }
+
+    #[test]
+    fn tiny_sigma_hurts() {
+        // sigma_VT -> 0 collapses all neurons to the same feature: only
+        // ~1 effective basis function, so error stays high.
+        let flat = FastSim { sigma_vt: 0.0005, ..Default::default() };
+        let good = FastSim { sigma_vt: 0.020, ..Default::default() };
+        let e_flat = mean_error(&flat, 64, 400, 2, 4);
+        let e_good = mean_error(&good, 64, 400, 2, 4);
+        assert!(e_flat > 2.0 * e_good, "flat {e_flat} good {e_good}");
+    }
+}

@@ -1,0 +1,189 @@
+//! Design-space exploration engine (Section III-D / IV): parallel grid
+//! sweeps over operating-point parameters, and the MATLAB-style fast ELM
+//! simulation the paper used for Fig. 7 (linear neuron, eq. 11 counter,
+//! log-normal mismatch with swept sigma_VT).
+
+pub mod lmin;
+
+use crate::util::mat::Mat;
+use crate::util::prng::Prng;
+
+/// Parallel map over work items using scoped std threads (no tokio in
+/// the offline vendor set). Order of results matches the input order.
+pub fn par_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let threads = threads.max(1);
+    let n = items.len();
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let work: Vec<(usize, T)> = items.into_iter().enumerate().collect();
+    let queue = std::sync::Mutex::new(work);
+    let slots_mx = std::sync::Mutex::new(&mut slots);
+    std::thread::scope(|s| {
+        for _ in 0..threads.min(n.max(1)) {
+            s.spawn(|| loop {
+                let item = queue.lock().unwrap().pop();
+                match item {
+                    Some((i, t)) => {
+                        let r = f(t);
+                        slots_mx.lock().unwrap()[i] = Some(r);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    slots.into_iter().map(|s| s.expect("worker died")).collect()
+}
+
+/// Default parallelism for sweeps.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// The paper's Section III-D fast simulation of the first stage:
+/// linear neuron (eq. 9) + saturating counter (eq. 11), fixed
+/// K_neu = 26 kHz/nA and T_neu = 56 us, mismatch the only variation.
+/// The I_sat^z/I_max^z ratio is swept by scaling the input current range.
+#[derive(Clone, Copy, Debug)]
+pub struct FastSim {
+    /// Mismatch sigma_VT [V] (swept 5..45 mV in Fig. 7a).
+    pub sigma_vt: f64,
+    /// I_sat^z / I_max^z ratio (Fig. 7a x-axis).
+    pub ratio: f64,
+    /// Counter bits b (Fig. 7c x-axis).
+    pub b: u32,
+    /// Conversion gain [Hz/A] (nominal 26 kHz/nA).
+    pub k_neu: f64,
+    /// Counting window [s] (nominal 56 us).
+    pub t_neu: f64,
+}
+
+impl Default for FastSim {
+    fn default() -> Self {
+        FastSim {
+            sigma_vt: 0.016,
+            ratio: 0.75,
+            b: 14,
+            k_neu: 26e3 / 1e-9,
+            t_neu: 56e-6,
+        }
+    }
+}
+
+impl FastSim {
+    /// Counter cap 2^b.
+    pub fn cap(&self) -> f64 {
+        (1u64 << self.b) as f64
+    }
+
+    /// The saturation column current implied by (K_neu, T_neu, cap).
+    pub fn i_sat_z(&self) -> f64 {
+        self.cap() / (self.k_neu * self.t_neu)
+    }
+
+    /// Per-channel full-scale current for the configured ratio and d.
+    pub fn i_max(&self, d: usize) -> f64 {
+        self.i_sat_z() / self.ratio / d as f64
+    }
+
+    /// Sample a d x L log-normal weight matrix (eq. 12) at 300 K.
+    pub fn sample_weights(&self, d: usize, l: usize, rng: &mut Prng) -> Mat {
+        let ut = crate::config::thermal_voltage(300.0);
+        let data = (0..d * l)
+            .map(|_| rng.lognormal(0.0, self.sigma_vt / ut))
+            .collect();
+        Mat { rows: d, cols: l, data }
+    }
+
+    /// Hidden matrix for features in [-1,1]^d: maps to [0, I_max],
+    /// projects through `w`, applies eq. 11. Returns H as floats.
+    pub fn hidden(&self, xs: &[Vec<f64>], w: &Mat) -> Mat {
+        let d = w.rows;
+        let l = w.cols;
+        let i_max = self.i_max(d);
+        let cap = self.cap();
+        let rows: Vec<Vec<f64>> = xs
+            .iter()
+            .map(|x| {
+                assert_eq!(x.len(), d);
+                let mut z = vec![0.0f64; l];
+                for (i, &xi) in x.iter().enumerate() {
+                    let ii = (xi.clamp(-1.0, 1.0) + 1.0) / 2.0 * i_max;
+                    if ii == 0.0 {
+                        continue;
+                    }
+                    let row = w.row(i);
+                    for (zj, &wij) in z.iter_mut().zip(row) {
+                        *zj += ii * wij;
+                    }
+                }
+                z.iter()
+                    .map(|&zj| (self.k_neu * zj * self.t_neu).floor().clamp(0.0, cap))
+                    .collect()
+            })
+            .collect();
+        Mat::from_rows(&rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order_and_results() {
+        let items: Vec<u64> = (0..100).collect();
+        let out = par_map(items.clone(), 8, |x| x * x);
+        for (i, &o) in out.iter().enumerate() {
+            assert_eq!(o, (i as u64) * (i as u64));
+        }
+    }
+
+    #[test]
+    fn par_map_single_thread_matches() {
+        let items: Vec<u64> = (0..20).collect();
+        let a = par_map(items.clone(), 1, |x| x + 1);
+        let b = par_map(items, 7, |x| x + 1);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn fastsim_saturates_at_ratio() {
+        // an input at exactly the saturation ratio pins the counter
+        let sim = FastSim::default();
+        let d = 4;
+        let w = Mat::from_fn(d, 3, |_, _| 1.0); // no mismatch
+        // features all at +1 => z = d * i_max = i_sat/ratio => above i_sat
+        let h = sim.hidden(&[vec![1.0; d]], &w);
+        assert!(h.data.iter().all(|&v| v == sim.cap()));
+        // tiny inputs stay linear
+        let h2 = sim.hidden(&[vec![-0.9; d]], &w);
+        assert!(h2.data.iter().all(|&v| v < sim.cap()));
+    }
+
+    #[test]
+    fn fastsim_weights_spread_scales_with_sigma() {
+        let mut rng = Prng::new(1);
+        let narrow = FastSim { sigma_vt: 0.005, ..Default::default() }
+            .sample_weights(32, 32, &mut rng);
+        let mut rng = Prng::new(1);
+        let wide = FastSim { sigma_vt: 0.045, ..Default::default() }
+            .sample_weights(32, 32, &mut rng);
+        let s = |m: &Mat| {
+            crate::util::stats::std(&m.data.iter().map(|x| x.ln()).collect::<Vec<_>>())
+        };
+        assert!(s(&wide) > 5.0 * s(&narrow));
+    }
+
+    #[test]
+    fn fastsim_isat_matches_paper_numbers() {
+        // K_neu = 26 kHz/nA, T_neu = 56 us, b = 14 -> I_sat^z ~ 11.25 nA
+        let sim = FastSim::default();
+        let isat = sim.i_sat_z();
+        assert!((isat - 16384.0 / (26e3 / 1e-9 * 56e-6)).abs() / isat < 1e-12);
+    }
+}

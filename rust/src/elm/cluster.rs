@@ -1,0 +1,181 @@
+//! Unsupervised use of the chip (paper conclusion + refs [33], [34]):
+//! the mismatch array as a random-projection dimension reducer in front
+//! of k-means clustering. The saturating nonlinearity is bypassed by
+//! operating the neuron in its linear region (Transfer::Linear and
+//! currents far below saturation), exactly as the conclusion suggests
+//! ("if the nonlinear saturation in the neuron is not applied").
+
+use crate::util::prng::Prng;
+
+/// Plain Lloyd's k-means on dense points.
+#[derive(Clone, Debug)]
+pub struct KMeans {
+    pub centroids: Vec<Vec<f64>>,
+    pub iterations: usize,
+    pub inertia: f64,
+}
+
+fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+impl KMeans {
+    /// Fit k clusters; k-means++ style seeding from `rng`.
+    pub fn fit(points: &[Vec<f64>], k: usize, max_iter: usize, rng: &mut Prng) -> Self {
+        assert!(k >= 1 && points.len() >= k);
+        // k-means++ seeding
+        let mut centroids: Vec<Vec<f64>> = Vec::with_capacity(k);
+        centroids.push(points[rng.usize(points.len())].clone());
+        while centroids.len() < k {
+            let d2: Vec<f64> = points
+                .iter()
+                .map(|p| {
+                    centroids
+                        .iter()
+                        .map(|c| dist2(p, c))
+                        .fold(f64::MAX, f64::min)
+                })
+                .collect();
+            let total: f64 = d2.iter().sum();
+            let mut pick = rng.f64() * total;
+            let mut idx = 0;
+            for (i, &w) in d2.iter().enumerate() {
+                pick -= w;
+                if pick <= 0.0 {
+                    idx = i;
+                    break;
+                }
+            }
+            centroids.push(points[idx].clone());
+        }
+        // Lloyd iterations
+        let mut assign = vec![0usize; points.len()];
+        let mut iterations = 0;
+        for it in 0..max_iter {
+            iterations = it + 1;
+            let mut changed = false;
+            for (i, p) in points.iter().enumerate() {
+                let (best, _) = centroids
+                    .iter()
+                    .enumerate()
+                    .map(|(c, cen)| (c, dist2(p, cen)))
+                    .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                    .unwrap();
+                if assign[i] != best {
+                    assign[i] = best;
+                    changed = true;
+                }
+            }
+            let dim = points[0].len();
+            let mut sums = vec![vec![0.0; dim]; k];
+            let mut counts = vec![0usize; k];
+            for (i, p) in points.iter().enumerate() {
+                counts[assign[i]] += 1;
+                for (s, &v) in sums[assign[i]].iter_mut().zip(p) {
+                    *s += v;
+                }
+            }
+            for c in 0..k {
+                if counts[c] > 0 {
+                    for s in &mut sums[c] {
+                        *s /= counts[c] as f64;
+                    }
+                    centroids[c] = sums[c].clone();
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        let inertia = points
+            .iter()
+            .enumerate()
+            .map(|(i, p)| dist2(p, &centroids[assign[i]]))
+            .sum();
+        KMeans { centroids, iterations, inertia }
+    }
+
+    pub fn assign(&self, p: &[f64]) -> usize {
+        self.centroids
+            .iter()
+            .enumerate()
+            .map(|(c, cen)| (c, dist2(p, cen)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap()
+            .0
+    }
+}
+
+/// Clustering accuracy against ground-truth labels under the best
+/// cluster->label matching (greedy; fine for small k).
+pub fn clustering_accuracy(assignments: &[usize], labels: &[usize], k: usize) -> f64 {
+    assert_eq!(assignments.len(), labels.len());
+    let mut counts = vec![vec![0usize; k]; k];
+    for (&a, &l) in assignments.iter().zip(labels) {
+        counts[a][l] += 1;
+    }
+    // greedy matching
+    let mut used = vec![false; k];
+    let mut correct = 0usize;
+    for a in 0..k {
+        let mut best = (0usize, 0usize);
+        for l in 0..k {
+            if !used[l] && counts[a][l] >= best.1 {
+                best = (l, counts[a][l]);
+            }
+        }
+        used[best.0] = true;
+        correct += best.1;
+    }
+    correct as f64 / labels.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blobs(seed: u64, n_per: usize) -> (Vec<Vec<f64>>, Vec<usize>) {
+        let mut rng = Prng::new(seed);
+        let centers = [[0.7, 0.7], [-0.7, 0.0], [0.3, -0.8]];
+        let mut pts = Vec::new();
+        let mut labels = Vec::new();
+        for (c, cen) in centers.iter().enumerate() {
+            for _ in 0..n_per {
+                pts.push(vec![
+                    cen[0] + rng.normal(0.0, 0.1),
+                    cen[1] + rng.normal(0.0, 0.1),
+                ]);
+                labels.push(c);
+            }
+        }
+        (pts, labels)
+    }
+
+    #[test]
+    fn recovers_well_separated_blobs() {
+        let (pts, labels) = blobs(1, 60);
+        let mut rng = Prng::new(2);
+        let km = KMeans::fit(&pts, 3, 50, &mut rng);
+        let assign: Vec<usize> = pts.iter().map(|p| km.assign(p)).collect();
+        let acc = clustering_accuracy(&assign, &labels, 3);
+        assert!(acc > 0.95, "accuracy {acc}");
+        assert!(km.iterations < 50);
+    }
+
+    #[test]
+    fn inertia_decreases_with_more_clusters() {
+        let (pts, _) = blobs(3, 40);
+        let mut rng = Prng::new(4);
+        let k1 = KMeans::fit(&pts, 1, 30, &mut rng);
+        let mut rng = Prng::new(4);
+        let k3 = KMeans::fit(&pts, 3, 30, &mut rng);
+        assert!(k3.inertia < k1.inertia);
+    }
+
+    #[test]
+    fn accuracy_matching_is_permutation_invariant() {
+        let labels = vec![0, 0, 1, 1, 2, 2];
+        let perfect_permuted = vec![2, 2, 0, 0, 1, 1];
+        assert!((clustering_accuracy(&perfect_permuted, &labels, 3) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,209 @@
+//! ELM algorithm layer: training (eq. 3), the digital second stage, the
+//! software float baseline, and the high-level classifier/regressor API
+//! gluing a hidden layer (chip / virtual chip / PJRT) to the head.
+
+pub mod cluster;
+pub mod multiclass;
+pub mod online;
+pub mod secondstage;
+pub mod softelm;
+pub mod train;
+
+use crate::chip::{dac, ChipModel};
+use crate::elm::secondstage::{codes_sum, normalize_h, SecondStage};
+use crate::elm::train::{
+    assemble_h, misclassification, predict, rmse, solve_head, HiddenLayer, TrainedHead,
+};
+use crate::util::mat::Mat;
+
+/// The chip as an ELM hidden layer (with optional eq. 26 normalisation).
+pub struct ChipHidden {
+    pub chip: ChipModel,
+    pub normalize: bool,
+}
+
+impl ChipHidden {
+    pub fn new(chip: ChipModel) -> Self {
+        ChipHidden { chip, normalize: false }
+    }
+
+    pub fn normalized(chip: ChipModel) -> Self {
+        ChipHidden { chip, normalize: true }
+    }
+}
+
+impl HiddenLayer for ChipHidden {
+    fn input_dim(&self) -> usize {
+        self.chip.cfg.d
+    }
+
+    fn hidden_dim(&self) -> usize {
+        self.chip.cfg.l
+    }
+
+    fn transform(&mut self, x: &[f64]) -> Vec<f64> {
+        let codes = dac::features_to_codes(x, &self.chip.cfg);
+        let h = self.chip.forward(&codes);
+        // counts are rescaled by the counter cap so H is O(1): the ridge
+        // lambda then means the same thing across chip, FastSim and
+        // software backends. A global scale is invisible to the
+        // classifier (beta absorbs it) and to eq. 26.
+        let scale = 1.0 / self.chip.cfg.cap() as f64;
+        if self.normalize {
+            normalize_h(&h, codes_sum(&codes))
+                .into_iter()
+                .map(|v| v * scale)
+                .collect()
+        } else {
+            h.iter().map(|&v| v as f64 * scale).collect()
+        }
+    }
+}
+
+/// A trained end-to-end model: float head for analysis plus the
+/// fixed-point second stage actually deployed (Fig. 7b: 10 bits).
+pub struct ElmModel {
+    pub head: TrainedHead,
+    pub second: SecondStage,
+    pub beta_bits: u32,
+}
+
+impl ElmModel {
+    pub fn from_head(head: TrainedHead, beta_bits: u32, normalize: bool) -> Self {
+        let second = SecondStage::new(&head.beta, beta_bits, normalize);
+        ElmModel { head, second, beta_bits }
+    }
+}
+
+/// Train a model on a hidden layer: assemble H, solve the ridge system.
+pub fn train_model<T: HiddenLayer + ?Sized>(
+    layer: &mut T,
+    xs: &[Vec<f64>],
+    ys: &[f64],
+    lambda: f64,
+    beta_bits: u32,
+    normalize: bool,
+) -> Result<(ElmModel, Mat), String> {
+    let h = assemble_h(layer, xs);
+    let head = solve_head(&h, ys, lambda)?;
+    Ok((ElmModel::from_head(head, beta_bits, normalize), h))
+}
+
+/// Classification error of a trained model on a dataset, using the
+/// *float* head (upper bound on fixed-point performance).
+pub fn eval_classification<T: HiddenLayer + ?Sized>(
+    layer: &mut T,
+    model: &ElmModel,
+    xs: &[Vec<f64>],
+    ys: &[f64],
+) -> f64 {
+    let h = assemble_h(layer, xs);
+    misclassification(&predict(&h, &model.head), ys)
+}
+
+/// Classification error through the quantised second stage — the number
+/// the hardware actually achieves (Table II).
+pub fn eval_classification_fixed(
+    hidden: &mut ChipHidden,
+    model: &ElmModel,
+    xs: &[Vec<f64>],
+    ys: &[f64],
+) -> f64 {
+    let mut wrong = 0usize;
+    for (x, &y) in xs.iter().zip(ys) {
+        let codes = dac::features_to_codes(x, &hidden.chip.cfg);
+        let h = hidden.chip.forward(&codes);
+        let label = model.second.classify(&h, codes_sum(&codes), 0.0);
+        if (label as f64 - y).abs() > 1e-9 {
+            wrong += 1;
+        }
+    }
+    wrong as f64 / xs.len() as f64
+}
+
+/// Regression RMSE against (possibly clean) targets.
+pub fn eval_regression<T: HiddenLayer + ?Sized>(
+    layer: &mut T,
+    model: &ElmModel,
+    xs: &[Vec<f64>],
+    ys: &[f64],
+) -> f64 {
+    let h = assemble_h(layer, xs);
+    rmse(&predict(&h, &model.head), ys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ChipConfig, Transfer};
+    use crate::util::prng::Prng;
+
+    fn chip_hidden(d: usize, l: usize, seed: u64) -> ChipHidden {
+        let cfg = ChipConfig::default()
+            .with_dims(d, l)
+            .with_b(10)
+            .with_mode(Transfer::Quadratic);
+        ChipHidden::new(ChipModel::fabricate(cfg, seed))
+    }
+
+    fn blobs(seed: u64, n: usize, d: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+        // two well-separated gaussian blobs in [-1,1]^d
+        let mut rng = Prng::new(seed);
+        let mut xs = Vec::with_capacity(n);
+        let mut ys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let y = if rng.bool(0.5) { 1.0 } else { -1.0 };
+            let center = 0.35 * y;
+            xs.push((0..d).map(|_| (center + rng.normal(0.0, 0.18)).clamp(-1.0, 1.0)).collect());
+            ys.push(y);
+        }
+        (xs, ys)
+    }
+
+    #[test]
+    fn chip_hidden_shapes() {
+        let mut ch = chip_hidden(8, 12, 1);
+        assert_eq!(ch.input_dim(), 8);
+        assert_eq!(ch.hidden_dim(), 12);
+        assert_eq!(ch.transform(&vec![0.0; 8]).len(), 12);
+    }
+
+    #[test]
+    fn chip_elm_separates_blobs() {
+        let mut ch = chip_hidden(8, 64, 2);
+        let (xs, ys) = blobs(3, 300, 8);
+        let (model, h) = train_model(&mut ch, &xs, &ys, 1e-2, 10, false).unwrap();
+        let train_err = misclassification(&predict(&h, &model.head), &ys);
+        assert!(train_err < 0.05, "train err {train_err}");
+        let (xt, yt) = blobs(4, 200, 8);
+        let test_err = eval_classification(&mut ch, &model, &xt, &yt);
+        assert!(test_err < 0.1, "test err {test_err}");
+    }
+
+    #[test]
+    fn fixed_point_close_to_float() {
+        // Fig. 7(b): 10-bit beta is enough — fixed-point error is within
+        // a few points of the float head.
+        let mut ch = chip_hidden(8, 64, 5);
+        let (xs, ys) = blobs(6, 300, 8);
+        let (model, _) = train_model(&mut ch, &xs, &ys, 1e-2, 10, false).unwrap();
+        let (xt, yt) = blobs(7, 200, 8);
+        let float_err = eval_classification(&mut ch, &model, &xt, &yt);
+        let fixed_err = eval_classification_fixed(&mut ch, &model, &xt, &yt);
+        assert!(
+            (fixed_err - float_err).abs() <= 0.05,
+            "float {float_err} fixed {fixed_err}"
+        );
+    }
+
+    #[test]
+    fn normalized_training_still_learns() {
+        let cfg = ChipConfig::default().with_dims(8, 64).with_b(10);
+        let mut ch = ChipHidden::normalized(ChipModel::fabricate(cfg, 8));
+        let (xs, ys) = blobs(9, 300, 8);
+        let (model, h) = train_model(&mut ch, &xs, &ys, 1e-2, 10, true).unwrap();
+        let err = misclassification(&predict(&h, &model.head), &ys);
+        assert!(err < 0.08, "normalized train err {err}");
+        let _ = model;
+    }
+}

@@ -1,0 +1,225 @@
+//! Multi-class ELM by one-vs-all output weights (Section II: "the method
+//! can be easily extended to multiple outputs by considering each output
+//! one by one" [21]) — the paper's stated next step is multi-class image
+//! data (MNIST) in the conclusion.
+
+use crate::elm::secondstage::QuantBeta;
+use crate::elm::train::HiddenLayer;
+use crate::util::mat::{ridge_solve, Mat};
+
+/// One-vs-all trained head: beta is L x C, column c scores class c.
+#[derive(Clone, Debug)]
+pub struct MultiHead {
+    pub beta: Mat,
+    pub classes: usize,
+    pub lambda: f64,
+}
+
+/// Quantised one-vs-all head for the deployed fixed-point second stage.
+#[derive(Clone, Debug)]
+pub struct QuantMultiHead {
+    pub cols: Vec<QuantBeta>,
+}
+
+impl MultiHead {
+    /// Train on hidden matrix H (N x L) with integer class labels
+    /// `0..classes`. Targets are +1 for the class, -1 for the rest.
+    pub fn train(h: &Mat, labels: &[usize], classes: usize, lambda: f64) -> Result<Self, String> {
+        assert_eq!(h.rows, labels.len());
+        assert!(classes >= 2);
+        if let Some(&bad) = labels.iter().find(|&&c| c >= classes) {
+            return Err(format!("label {bad} out of range for {classes} classes"));
+        }
+        let t = Mat::from_fn(h.rows, classes, |i, c| {
+            if labels[i] == c {
+                1.0
+            } else {
+                -1.0
+            }
+        });
+        let beta = ridge_solve(h, &t, lambda)?;
+        Ok(MultiHead { beta, classes, lambda })
+    }
+
+    /// Class scores for one hidden vector.
+    pub fn scores(&self, h: &[f64]) -> Vec<f64> {
+        assert_eq!(h.len(), self.beta.rows);
+        (0..self.classes)
+            .map(|c| (0..h.len()).map(|j| h[j] * self.beta.get(j, c)).sum())
+            .collect()
+    }
+
+    /// Argmax class prediction.
+    pub fn predict(&self, h: &[f64]) -> usize {
+        let s = self.scores(h);
+        s.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(c, _)| c)
+            .unwrap()
+    }
+
+    /// Quantise each column independently (each output has its own
+    /// digital MAC in hardware).
+    pub fn quantize(&self, bits: u32) -> QuantMultiHead {
+        let cols = (0..self.classes)
+            .map(|c| QuantBeta::quantize(&self.beta.col(c), bits))
+            .collect();
+        QuantMultiHead { cols }
+    }
+}
+
+impl QuantMultiHead {
+    /// Fixed-point argmax over counter outputs.
+    pub fn predict(&self, h: &[u32]) -> usize {
+        let mut best = (0usize, f64::MIN);
+        for (c, q) in self.cols.iter().enumerate() {
+            let acc: i64 = h
+                .iter()
+                .zip(&q.codes)
+                .map(|(&hj, &bj)| hj as i64 * bj as i64)
+                .sum();
+            let s = acc as f64 * q.scale;
+            if s > best.1 {
+                best = (c, s);
+            }
+        }
+        best.0
+    }
+}
+
+/// Train a multi-class model through any hidden layer.
+pub fn train_multiclass<T: HiddenLayer + ?Sized>(
+    layer: &mut T,
+    xs: &[Vec<f64>],
+    labels: &[usize],
+    classes: usize,
+    lambda: f64,
+) -> Result<(MultiHead, Mat), String> {
+    let h = crate::elm::train::assemble_h(layer, xs);
+    let head = MultiHead::train(&h, labels, classes, lambda)?;
+    Ok((head, h))
+}
+
+/// Multi-class error rate through a hidden layer (float head).
+pub fn eval_multiclass<T: HiddenLayer + ?Sized>(
+    layer: &mut T,
+    head: &MultiHead,
+    xs: &[Vec<f64>],
+    labels: &[usize],
+) -> f64 {
+    let mut wrong = 0usize;
+    for (x, &y) in xs.iter().zip(labels) {
+        if head.predict(&layer.transform(x)) != y {
+            wrong += 1;
+        }
+    }
+    wrong as f64 / xs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    struct Rbf {
+        centers: Vec<Vec<f64>>,
+    }
+    impl HiddenLayer for Rbf {
+        fn input_dim(&self) -> usize {
+            self.centers[0].len()
+        }
+        fn hidden_dim(&self) -> usize {
+            self.centers.len()
+        }
+        fn transform(&mut self, x: &[f64]) -> Vec<f64> {
+            self.centers
+                .iter()
+                .map(|c| {
+                    let d2: f64 = c.iter().zip(x).map(|(a, b)| (a - b) * (a - b)).sum();
+                    (-4.0 * d2).exp()
+                })
+                .collect()
+        }
+    }
+
+    fn three_blobs(seed: u64, n: usize) -> (Vec<Vec<f64>>, Vec<usize>) {
+        let mut rng = Prng::new(seed);
+        let centers = [[0.6, 0.6], [-0.6, 0.6], [0.0, -0.6]];
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..n {
+            let c = rng.usize(3);
+            xs.push(vec![
+                (centers[c][0] + rng.normal(0.0, 0.15)).clamp(-1.0, 1.0),
+                (centers[c][1] + rng.normal(0.0, 0.15)).clamp(-1.0, 1.0),
+            ]);
+            ys.push(c);
+        }
+        (xs, ys)
+    }
+
+    fn rbf_layer(seed: u64, l: usize) -> Rbf {
+        let mut rng = Prng::new(seed);
+        Rbf {
+            centers: (0..l)
+                .map(|_| vec![rng.range(-1.0, 1.0), rng.range(-1.0, 1.0)])
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn learns_three_classes() {
+        let (xs, ys) = three_blobs(1, 300);
+        let mut layer = rbf_layer(2, 60);
+        let (head, h) = train_multiclass(&mut layer, &xs, &ys, 3, 1e-3).unwrap();
+        // train accuracy via the assembled H
+        let mut wrong = 0;
+        for i in 0..xs.len() {
+            if head.predict(h.row(i)) != ys[i] {
+                wrong += 1;
+            }
+        }
+        assert!(wrong < 15, "train wrong {wrong}/300");
+        let (xt, yt) = three_blobs(3, 150);
+        let err = eval_multiclass(&mut layer, &head, &xt, &yt);
+        assert!(err < 0.1, "test err {err}");
+    }
+
+    #[test]
+    fn quantized_head_tracks_float() {
+        let (xs, ys) = three_blobs(4, 200);
+        let mut layer = rbf_layer(5, 50);
+        let (head, _) = train_multiclass(&mut layer, &xs, &ys, 3, 1e-3).unwrap();
+        let q = head.quantize(10);
+        let mut disagree = 0;
+        for x in &xs {
+            let h = layer.transform(x);
+            let hf = head.predict(&h);
+            // counter-style integerisation of the activation
+            let hu: Vec<u32> = h.iter().map(|&v| (v * 1000.0) as u32).collect();
+            let hq = q.predict(&hu);
+            if hf != hq {
+                disagree += 1;
+            }
+        }
+        assert!(disagree < 20, "quantised head disagrees on {disagree}/200");
+    }
+
+    #[test]
+    fn rejects_bad_labels() {
+        let h = Mat::from_fn(4, 3, |i, j| (i + j) as f64);
+        assert!(MultiHead::train(&h, &[0, 1, 2, 3], 3, 0.1).is_err());
+    }
+
+    #[test]
+    fn scores_shape_and_argmax_consistency() {
+        let h = Mat::from_fn(10, 4, |i, j| ((i * j) % 5) as f64);
+        let head = MultiHead::train(&h, &[0, 1, 2, 0, 1, 2, 0, 1, 2, 0], 3, 0.1).unwrap();
+        let hv = h.row(0);
+        let s = head.scores(hv);
+        assert_eq!(s.len(), 3);
+        let am = head.predict(hv);
+        assert!(s[am] >= s[0] && s[am] >= s[1] && s[am] >= s[2]);
+    }
+}

@@ -1,0 +1,150 @@
+//! Online / adaptive output-weight training (OS-ELM, paper ref [15]
+//! "Online and adaptive pseudoinverse solutions for ELM weights"):
+//! recursive least squares over the hidden activations, so the second
+//! stage can keep learning while the chip serves — no batch re-solve.
+//!
+//! State: P = (H^T H + lam I)^-1 maintained by the Sherman-Morrison
+//! update; beta follows each (h, t) pair in O(L^2).
+
+use crate::util::mat::Mat;
+
+/// Recursive ridge solver over streaming (hidden, target) pairs.
+#[derive(Clone, Debug)]
+pub struct OnlineElm {
+    /// Inverse covariance, L x L.
+    p: Mat,
+    /// Current output weights.
+    pub beta: Vec<f64>,
+    /// Samples absorbed.
+    pub seen: u64,
+}
+
+impl OnlineElm {
+    /// Start from the prior `beta = 0`, `P = I / lam` (pure ridge prior).
+    pub fn new(l: usize, lambda: f64) -> Self {
+        assert!(lambda > 0.0, "lambda must be positive");
+        let mut p = Mat::eye(l);
+        p.scale(1.0 / lambda);
+        OnlineElm { p, beta: vec![0.0; l], seen: 0 }
+    }
+
+    /// Warm-start from a batch solution (the usual OS-ELM init phase).
+    pub fn from_batch(h: &Mat, t: &[f64], lambda: f64) -> Result<Self, String> {
+        let l = h.cols;
+        let mut a = h.gram();
+        a.add_diag(lambda);
+        // P = A^-1 via Cholesky solves against the identity
+        let eye = Mat::eye(l);
+        let p = crate::util::mat::cholesky_solve(&a, &eye)?;
+        let beta = crate::util::mat::ridge_solve(h, &Mat { rows: t.len(), cols: 1, data: t.to_vec() }, lambda)?;
+        Ok(OnlineElm { p, beta: beta.data, seen: h.rows as u64 })
+    }
+
+    /// Absorb one sample: h (length L), target t. O(L^2).
+    pub fn update(&mut self, h: &[f64], t: f64) {
+        let l = self.beta.len();
+        assert_eq!(h.len(), l);
+        // k = P h / (1 + h' P h)
+        let ph = self.p.matvec(h);
+        let denom = 1.0 + h.iter().zip(&ph).map(|(a, b)| a * b).sum::<f64>();
+        let k: Vec<f64> = ph.iter().map(|v| v / denom).collect();
+        // innovation
+        let pred: f64 = h.iter().zip(&self.beta).map(|(a, b)| a * b).sum();
+        let err = t - pred;
+        for j in 0..l {
+            self.beta[j] += k[j] * err;
+        }
+        // P <- P - k (h' P) ; h'P = ph' (P symmetric)
+        for i in 0..l {
+            let ki = k[i];
+            if ki == 0.0 {
+                continue;
+            }
+            let row = self.p.row_mut(i);
+            for j in 0..l {
+                row[j] -= ki * ph[j];
+            }
+        }
+        self.seen += 1;
+    }
+
+    /// Score a hidden vector with the current weights.
+    pub fn predict(&self, h: &[f64]) -> f64 {
+        h.iter().zip(&self.beta).map(|(a, b)| a * b).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::mat::ridge_solve;
+    use crate::util::prng::Prng;
+
+    fn make_problem(seed: u64, n: usize, l: usize) -> (Mat, Vec<f64>) {
+        let mut rng = Prng::new(seed);
+        let h = Mat::from_fn(n, l, |_, _| rng.gaussian());
+        let w_true: Vec<f64> = (0..l).map(|_| rng.gaussian()).collect();
+        let t: Vec<f64> = (0..n)
+            .map(|i| {
+                h.row(i).iter().zip(&w_true).map(|(a, b)| a * b).sum::<f64>()
+                    + rng.normal(0.0, 0.05)
+            })
+            .collect();
+        (h, t)
+    }
+
+    #[test]
+    fn converges_to_batch_ridge() {
+        let (h, t) = make_problem(1, 200, 12);
+        let lam = 0.5;
+        let batch = ridge_solve(&h, &Mat { rows: 200, cols: 1, data: t.clone() }, lam).unwrap();
+        let mut online = OnlineElm::new(12, lam);
+        for i in 0..200 {
+            online.update(h.row(i), t[i]);
+        }
+        for j in 0..12 {
+            assert!(
+                (online.beta[j] - batch.get(j, 0)).abs() < 1e-6,
+                "beta {j}: online {} batch {}",
+                online.beta[j],
+                batch.get(j, 0)
+            );
+        }
+    }
+
+    #[test]
+    fn warm_start_plus_stream_equals_full_batch() {
+        let (h, t) = make_problem(2, 120, 8);
+        let lam = 0.2;
+        // init on first 60, stream the rest
+        let h0 = Mat::from_rows(&(0..60).map(|i| h.row(i).to_vec()).collect::<Vec<_>>());
+        let mut online = OnlineElm::from_batch(&h0, &t[..60], lam).unwrap();
+        for i in 60..120 {
+            online.update(h.row(i), t[i]);
+        }
+        let batch = ridge_solve(&h, &Mat { rows: 120, cols: 1, data: t.clone() }, lam).unwrap();
+        for j in 0..8 {
+            assert!((online.beta[j] - batch.get(j, 0)).abs() < 1e-6, "beta {j}");
+        }
+        assert_eq!(online.seen, 120);
+    }
+
+    #[test]
+    fn prediction_error_shrinks_with_data() {
+        let (h, t) = make_problem(3, 300, 10);
+        let mut online = OnlineElm::new(10, 0.1);
+        let mut early = 0.0;
+        let mut late = 0.0;
+        for i in 0..300 {
+            let e = (online.predict(h.row(i)) - t[i]).abs();
+            if i < 30 {
+                early += e;
+            }
+            if i >= 270 {
+                late += e;
+            }
+            online.update(h.row(i), t[i]);
+        }
+        assert!(late < 0.3 * early, "early {early} late {late}");
+    }
+}

@@ -1,0 +1,195 @@
+//! Digital second stage of the ELM (the FPGA of Fig. 2): fixed-point
+//! output-weight MAC with configurable beta resolution (the Fig. 7b
+//! study) and the eq. 26 normalisation divider (Section VI-F).
+
+/// Quantised output-weight vector: symmetric uniform grid over the max
+/// magnitude, `bits` total (1 sign + bits-1 magnitude). Matches
+/// `model.quantize_beta` on the Python side.
+#[derive(Clone, Debug)]
+pub struct QuantBeta {
+    /// Integer codes in [-(2^(bits-1)-1), 2^(bits-1)-1].
+    pub codes: Vec<i32>,
+    /// LSB scale back to float.
+    pub scale: f64,
+    pub bits: u32,
+}
+
+impl QuantBeta {
+    pub fn quantize(beta: &[f64], bits: u32) -> Self {
+        assert!(bits >= 2, "need at least sign + 1 bit");
+        let max = beta.iter().fold(0.0f64, |m, &b| m.max(b.abs())).max(1e-30);
+        let levels = ((1u32 << (bits - 1)) - 1) as f64;
+        let codes = beta
+            .iter()
+            .map(|&b| (b / max * levels).round() as i32)
+            .collect();
+        QuantBeta { codes, scale: max / levels, bits }
+    }
+
+    /// De-quantised weights (for error analysis).
+    pub fn dequantize(&self) -> Vec<f64> {
+        self.codes.iter().map(|&c| c as f64 * self.scale).collect()
+    }
+
+    /// Worst-case quantisation error bound: half an LSB.
+    pub fn lsb(&self) -> f64 {
+        self.scale
+    }
+}
+
+/// The second-stage engine: integer MAC over counter outputs, matching
+/// the "14-bit x 10-bit array multiplier" sized in Section VI-B.
+#[derive(Clone, Debug)]
+pub struct SecondStage {
+    pub beta: QuantBeta,
+    /// Apply the eq. 26 normalisation before the MAC.
+    pub normalize: bool,
+}
+
+impl SecondStage {
+    pub fn new(beta: &[f64], bits: u32, normalize: bool) -> Self {
+        SecondStage { beta: QuantBeta::quantize(beta, bits), normalize }
+    }
+
+    /// Score one hidden vector of counter outputs. `codes_sum` is
+    /// `sum_i x_i` needed by eq. 26 (the input-side scanner provides it).
+    pub fn score(&self, h: &[u32], codes_sum: f64) -> f64 {
+        assert_eq!(h.len(), self.beta.codes.len());
+        if self.normalize {
+            // eq. 26: h_norm_j = h_j * sum_i(x_i) / sum_j(h_j); the
+            // divider runs once per vector (the paper's "L divisions").
+            let hs: f64 = h.iter().map(|&v| v as f64).sum();
+            if hs == 0.0 {
+                return 0.0;
+            }
+            let g = codes_sum / hs;
+            let acc: f64 = h
+                .iter()
+                .zip(&self.beta.codes)
+                .map(|(&hj, &bj)| hj as f64 * g * bj as f64)
+                .sum();
+            acc * self.beta.scale
+        } else {
+            // pure integer MAC (i64 accumulator cannot overflow: 2^14
+            // counts x 2^9 beta x 2^14 neurons < 2^37)
+            let acc: i64 = h
+                .iter()
+                .zip(&self.beta.codes)
+                .map(|(&hj, &bj)| hj as i64 * bj as i64)
+                .sum();
+            acc as f64 * self.beta.scale
+        }
+    }
+
+    /// Binary decision at threshold `thr` (targets are +-1).
+    pub fn classify(&self, h: &[u32], codes_sum: f64, thr: f64) -> i8 {
+        if self.score(h, codes_sum) >= thr {
+            1
+        } else {
+            -1
+        }
+    }
+}
+
+/// Normalised hidden vector as floats (training-side eq. 26, matching
+/// `ref.normalize` on the Python side).
+pub fn normalize_h(h: &[u32], codes_sum: f64) -> Vec<f64> {
+    let hs: f64 = h.iter().map(|&v| v as f64).sum();
+    if hs == 0.0 {
+        return vec![0.0; h.len()];
+    }
+    let g = codes_sum / hs;
+    h.iter().map(|&v| v as f64 * g).collect()
+}
+
+/// Sum of DAC codes for eq. 26's `sum_i x_i` term.
+pub fn codes_sum(codes: &[u16]) -> f64 {
+    codes.iter().map(|&c| c as f64).sum()
+}
+
+/// Convenience: the per-sample energy of the digital second stage, from
+/// the Section VI-B estimate (7.1 pJ per 14x10-bit multiply at 1.5 V).
+pub fn second_stage_energy(l: usize, e_mult: f64) -> f64 {
+    l as f64 * e_mult
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_roundtrip_error_bounded() {
+        let beta: Vec<f64> = (0..32).map(|i| ((i * 37) % 17) as f64 / 8.5 - 1.0).collect();
+        for bits in [4u32, 8, 10, 14] {
+            let q = QuantBeta::quantize(&beta, bits);
+            let back = q.dequantize();
+            let max_err = beta
+                .iter()
+                .zip(&back)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f64, f64::max);
+            assert!(max_err <= 0.5 * q.lsb() * (1.0 + 1e-12), "bits {bits}");
+        }
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let beta: Vec<f64> = (0..64).map(|i| (i as f64 * 0.7).sin()).collect();
+        let err = |bits| {
+            let q = QuantBeta::quantize(&beta, bits);
+            let back = q.dequantize();
+            beta.iter()
+                .zip(&back)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+        };
+        assert!(err(10) < err(6));
+        assert!(err(6) < err(3));
+    }
+
+    #[test]
+    fn integer_mac_matches_float_within_lsb() {
+        let beta = vec![0.5, -0.25, 1.0, -1.0];
+        let ss = SecondStage::new(&beta, 10, false);
+        let h = vec![100u32, 200, 50, 25];
+        let float_score: f64 = h
+            .iter()
+            .zip(&beta)
+            .map(|(&hj, &bj)| hj as f64 * bj)
+            .sum();
+        let q_score = ss.score(&h, 0.0);
+        let bound = ss.beta.lsb() * 0.5 * h.iter().map(|&x| x as f64).sum::<f64>();
+        assert!((q_score - float_score).abs() <= bound, "{q_score} vs {float_score}");
+    }
+
+    #[test]
+    fn normalized_score_invariant_to_common_gain() {
+        let beta = vec![0.3, -0.7, 0.2, 0.9];
+        let ss = SecondStage::new(&beta, 10, true);
+        let h = vec![100u32, 220, 40, 90];
+        let h_gained: Vec<u32> = h.iter().map(|&v| v * 3).collect();
+        let s0 = ss.score(&h, 1000.0);
+        let s1 = ss.score(&h_gained, 1000.0);
+        assert!((s0 - s1).abs() < 1e-9 * s0.abs().max(1.0));
+    }
+
+    #[test]
+    fn classify_thresholds() {
+        let ss = SecondStage::new(&[1.0], 10, false);
+        assert_eq!(ss.classify(&[5], 0.0, 0.0), 1);
+        let ssn = SecondStage::new(&[-1.0], 10, false);
+        assert_eq!(ssn.classify(&[5], 0.0, 0.0), -1);
+    }
+
+    #[test]
+    fn normalize_h_matches_python_ref_semantics() {
+        let h = vec![10u32, 20, 30, 40];
+        let codes_sum = 500.0;
+        let n = normalize_h(&h, codes_sum);
+        let hs = 100.0;
+        for (j, &hj) in h.iter().enumerate() {
+            assert!((n[j] - hj as f64 * codes_sum / hs).abs() < 1e-12);
+        }
+        assert_eq!(normalize_h(&[0, 0], 100.0), vec![0.0, 0.0]);
+    }
+}

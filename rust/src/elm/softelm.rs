@@ -1,0 +1,112 @@
+//! Software floating-point ELM baseline (Huang et al. [12]): uniform
+//! random input weights + bias, sigmoid activation, L = 1000 hidden
+//! neurons. This is the "Software" column of Table II that the chip is
+//! compared against.
+
+use crate::elm::train::HiddenLayer;
+use crate::util::mat::Mat;
+use crate::util::prng::Prng;
+
+/// The canonical software ELM hidden layer.
+pub struct SoftElm {
+    /// Input weights d x L, U(-1, 1).
+    pub w: Mat,
+    /// Biases, U(-1, 1).
+    pub b: Vec<f64>,
+    /// Input rescale applied before projection. The classic sinc setup
+    /// feeds raw x in [-10, 10]; our datasets normalise features to
+    /// [-1, 1] for the chip, so regression baselines set this to the
+    /// de-normalisation factor to recover [12]'s configuration.
+    pub input_scale: f64,
+}
+
+impl SoftElm {
+    pub fn new(d: usize, l: usize, seed: u64) -> Self {
+        Self::with_scale(d, l, 1.0, seed)
+    }
+
+    pub fn with_scale(d: usize, l: usize, input_scale: f64, seed: u64) -> Self {
+        let mut rng = Prng::new(seed);
+        let w = Mat::random_uniform(d, l, -1.0, 1.0, &mut rng);
+        let b = (0..l).map(|_| rng.range(-1.0, 1.0)).collect();
+        SoftElm { w, b, input_scale }
+    }
+}
+
+/// Logistic sigmoid.
+#[inline]
+pub fn sigmoid(z: f64) -> f64 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+impl HiddenLayer for SoftElm {
+    fn input_dim(&self) -> usize {
+        self.w.rows
+    }
+
+    fn hidden_dim(&self) -> usize {
+        self.w.cols
+    }
+
+    fn transform(&mut self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.w.rows);
+        let l = self.w.cols;
+        let mut z = self.b.clone();
+        for (i, &xi) in x.iter().enumerate() {
+            let xi = xi * self.input_scale;
+            if xi == 0.0 {
+                continue;
+            }
+            let row = self.w.row(i);
+            for j in 0..l {
+                z[j] += xi * row[j];
+            }
+        }
+        z.iter().map(|&v| sigmoid(v)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elm::train::{assemble_h, misclassification, predict, solve_head};
+
+    #[test]
+    fn sigmoid_shape() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-12);
+        assert!(sigmoid(10.0) > 0.999);
+        assert!(sigmoid(-10.0) < 0.001);
+    }
+
+    #[test]
+    fn transform_bounded() {
+        let mut elm = SoftElm::new(5, 50, 1);
+        let h = elm.transform(&[0.5, -0.5, 0.1, 0.9, -1.0]);
+        assert_eq!(h.len(), 50);
+        assert!(h.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = SoftElm::new(3, 10, 7);
+        let mut b = SoftElm::new(3, 10, 7);
+        assert_eq!(a.transform(&[0.1, 0.2, 0.3]), b.transform(&[0.1, 0.2, 0.3]));
+    }
+
+    #[test]
+    fn baseline_learns_xor_like_task() {
+        let mut rng = Prng::new(11);
+        let xs: Vec<Vec<f64>> = (0..400)
+            .map(|_| vec![rng.range(-1.0, 1.0), rng.range(-1.0, 1.0)])
+            .collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|x| if x[0] * x[1] > 0.0 { 1.0 } else { -1.0 })
+            .collect();
+        let mut elm = SoftElm::new(2, 200, 12);
+        let h = assemble_h(&mut elm, &xs);
+        let head = solve_head(&h, &ys, 1e-4).unwrap();
+        let err = misclassification(&predict(&h, &head), &ys);
+        assert!(err < 0.08, "XOR train error {err}");
+    }
+}

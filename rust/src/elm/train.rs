@@ -1,0 +1,218 @@
+//! ELM training (Section II): assemble the hidden matrix H by pushing the
+//! training set through a hidden-layer transform (chip, virtual chip, or
+//! PJRT engine) and solve the ridge system of eq. 3 for the output
+//! weights, with cross-validated C.
+
+use crate::util::mat::{ridge_solve, Mat};
+use crate::util::prng::Prng;
+
+/// Anything that maps a feature vector in [-1,1]^d to hidden outputs.
+/// Implemented by the physical chip, the rotation-extended virtual chip
+/// and the PJRT serving engine — training code is agnostic.
+pub trait HiddenLayer {
+    /// Input dimension d the transform accepts.
+    fn input_dim(&self) -> usize;
+    /// Hidden width L it produces.
+    fn hidden_dim(&self) -> usize;
+    /// One sample -> one hidden activation row (float; counters cast up).
+    fn transform(&mut self, x: &[f64]) -> Vec<f64>;
+}
+
+/// Assemble H (N x L) for a feature matrix (N x d).
+pub fn assemble_h<T: HiddenLayer + ?Sized>(layer: &mut T, xs: &[Vec<f64>]) -> Mat {
+    let rows: Vec<Vec<f64>> = xs.iter().map(|x| layer.transform(x)).collect();
+    Mat::from_rows(&rows)
+}
+
+/// Trained ELM head: float beta plus the lambda that produced it.
+#[derive(Clone, Debug)]
+pub struct TrainedHead {
+    pub beta: Vec<f64>,
+    pub lambda: f64,
+}
+
+/// Solve eq. 3 on an assembled H for scalar targets.
+pub fn solve_head(h: &Mat, targets: &[f64], lambda: f64) -> Result<TrainedHead, String> {
+    assert_eq!(h.rows, targets.len());
+    let t = Mat { rows: targets.len(), cols: 1, data: targets.to_vec() };
+    let beta = ridge_solve(h, &t, lambda)?;
+    Ok(TrainedHead { beta: beta.data, lambda })
+}
+
+/// Predicted scores H beta.
+pub fn predict(h: &Mat, head: &TrainedHead) -> Vec<f64> {
+    h.matvec(&head.beta)
+}
+
+/// Misclassification rate for +-1 targets at threshold 0.
+pub fn misclassification(scores: &[f64], targets: &[f64]) -> f64 {
+    assert_eq!(scores.len(), targets.len());
+    let wrong = scores
+        .iter()
+        .zip(targets)
+        .filter(|(s, t)| (s.signum() - t.signum()).abs() > 1e-9)
+        .count();
+    wrong as f64 / targets.len() as f64
+}
+
+/// RMSE for regression targets.
+pub fn rmse(scores: &[f64], targets: &[f64]) -> f64 {
+    crate::util::stats::rmse(scores, targets)
+}
+
+/// K-fold cross-validation of the ridge constant over a grid
+/// (the paper: "C is typically optimized as a hyperparameter using
+/// cross-validation"). Returns (best lambda, its CV loss).
+pub fn cross_validate_lambda(
+    h: &Mat,
+    targets: &[f64],
+    grid: &[f64],
+    folds: usize,
+    classification: bool,
+    seed: u64,
+) -> (f64, f64) {
+    assert!(folds >= 2 && h.rows >= folds);
+    let mut rng = Prng::new(seed);
+    let perm = rng.permutation(h.rows);
+    let mut best = (grid[0], f64::MAX);
+    for &lam in grid {
+        let mut loss_acc = 0.0;
+        for f in 0..folds {
+            let val_idx: Vec<usize> = perm
+                .iter()
+                .enumerate()
+                .filter(|(k, _)| k % folds == f)
+                .map(|(_, &i)| i)
+                .collect();
+            let tr_idx: Vec<usize> = perm
+                .iter()
+                .enumerate()
+                .filter(|(k, _)| k % folds != f)
+                .map(|(_, &i)| i)
+                .collect();
+            let h_tr = Mat::from_rows(&tr_idx.iter().map(|&i| h.row(i).to_vec()).collect::<Vec<_>>());
+            let t_tr: Vec<f64> = tr_idx.iter().map(|&i| targets[i]).collect();
+            let h_va = Mat::from_rows(&val_idx.iter().map(|&i| h.row(i).to_vec()).collect::<Vec<_>>());
+            let t_va: Vec<f64> = val_idx.iter().map(|&i| targets[i]).collect();
+            match solve_head(&h_tr, &t_tr, lam) {
+                Ok(head) => {
+                    let scores = predict(&h_va, &head);
+                    loss_acc += if classification {
+                        misclassification(&scores, &t_va)
+                    } else {
+                        rmse(&scores, &t_va)
+                    };
+                }
+                Err(_) => loss_acc += f64::MAX / folds as f64,
+            }
+        }
+        let loss = loss_acc / folds as f64;
+        if loss < best.1 {
+            best = (lam, loss);
+        }
+    }
+    best
+}
+
+/// Standard lambda grid used across the benches.
+pub fn default_lambda_grid() -> Vec<f64> {
+    vec![1e-6, 1e-4, 1e-2, 1.0, 1e2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A toy deterministic hidden layer for unit tests.
+    struct ToyLayer {
+        w: Mat,
+    }
+    impl HiddenLayer for ToyLayer {
+        fn input_dim(&self) -> usize {
+            self.w.rows
+        }
+        fn hidden_dim(&self) -> usize {
+            self.w.cols
+        }
+        fn transform(&mut self, x: &[f64]) -> Vec<f64> {
+            let z = self.w.transpose().matvec(x);
+            z.iter().map(|v| v.tanh()).collect()
+        }
+    }
+
+    fn toy(seed: u64, d: usize, l: usize) -> ToyLayer {
+        let mut rng = Prng::new(seed);
+        ToyLayer { w: Mat::random_uniform(d, l, -1.0, 1.0, &mut rng) }
+    }
+
+    fn toy_dataset(seed: u64, n: usize, d: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+        // nonlinear rule with a margin band removed so random features
+        // can realise it reliably
+        let mut rng = Prng::new(seed);
+        let mut xs: Vec<Vec<f64>> = Vec::with_capacity(n);
+        let mut ys = Vec::with_capacity(n);
+        while xs.len() < n {
+            let x: Vec<f64> = (0..d).map(|_| rng.range(-1.0, 1.0)).collect();
+            let v = x[0] * x[1] + 0.5 * x[2];
+            if v.abs() < 0.15 {
+                continue;
+            }
+            ys.push(if v > 0.0 { 1.0 } else { -1.0 });
+            xs.push(x);
+        }
+        (xs, ys)
+    }
+
+    #[test]
+    fn assemble_shapes() {
+        let mut layer = toy(1, 4, 10);
+        let (xs, _) = toy_dataset(2, 20, 4);
+        let h = assemble_h(&mut layer, &xs);
+        assert_eq!((h.rows, h.cols), (20, 10));
+    }
+
+    #[test]
+    fn elm_learns_nonlinear_rule() {
+        let mut layer = toy(3, 4, 150);
+        let (xs, ys) = toy_dataset(4, 300, 4);
+        let h = assemble_h(&mut layer, &xs);
+        let head = solve_head(&h, &ys, 1e-4).unwrap();
+        let err = misclassification(&predict(&h, &head), &ys);
+        assert!(err < 0.12, "train error {err}");
+    }
+
+    #[test]
+    fn generalization_on_holdout() {
+        let mut layer = toy(5, 4, 150);
+        let (xs, ys) = toy_dataset(6, 500, 4);
+        let (xt, yt) = toy_dataset(7, 200, 4);
+        let h = assemble_h(&mut layer, &xs);
+        let head = solve_head(&h, &ys, 1e-3).unwrap();
+        let ht = assemble_h(&mut layer, &xt);
+        let err = misclassification(&predict(&ht, &head), &yt);
+        assert!(err < 0.22, "test error {err}");
+    }
+
+    #[test]
+    fn cross_validation_picks_reasonable_lambda() {
+        let mut layer = toy(8, 4, 40);
+        let (xs, ys) = toy_dataset(9, 200, 4);
+        let h = assemble_h(&mut layer, &xs);
+        let (lam, loss) = cross_validate_lambda(&h, &ys, &default_lambda_grid(), 4, true, 10);
+        assert!(default_lambda_grid().contains(&lam));
+        assert!(loss < 0.3, "cv loss {loss}");
+        // extreme regularisation must be worse than the chosen one
+        let head_best = solve_head(&h, &ys, lam).unwrap();
+        let head_huge = solve_head(&h, &ys, 1e9).unwrap();
+        let e_best = misclassification(&predict(&h, &head_best), &ys);
+        let e_huge = misclassification(&predict(&h, &head_huge), &ys);
+        assert!(e_best <= e_huge);
+    }
+
+    #[test]
+    fn misclassification_counts() {
+        let s = vec![1.0, -2.0, 0.5, -0.1];
+        let t = vec![1.0, -1.0, -1.0, 1.0];
+        assert!((misclassification(&s, &t) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,23 @@
+//! # velm — VLSI Extreme Learning Machine, full-stack reproduction
+//!
+//! Reproduction of *"VLSI Extreme Learning Machine: A Design Space
+//! Exploration"* (Yao & Basu, 2016) as a three-layer Rust + JAX/Pallas
+//! stack: a behavioural model of the mixed-signal chip ([`chip`]), the
+//! ELM algorithm layer ([`elm`]), the Section V dimension-extension
+//! technique ([`extension`]), a PJRT runtime executing the AOT-compiled
+//! JAX model ([`runtime`]) and a serving coordinator ([`coordinator`]).
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod bench;
+pub mod chip;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod datasets;
+pub mod dse;
+pub mod elm;
+pub mod extension;
+pub mod runtime;
+pub mod testing;
+pub mod util;

@@ -1,0 +1,225 @@
+//! `velm` CLI: the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   characterize  Table I summary + Fig. 15-style die characterisation
+//!   train         chip-in-the-loop training on a named dataset
+//!   classify      train then evaluate train/test error (Table II row)
+//!   serve         start the TCP serving front end
+//!   sweep         quick design-space sweeps (ratio | beta-bits | counter-bits)
+//!   info          artifact + configuration report
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use velm::chip::ChipModel;
+use velm::cli::Args;
+use velm::config::{ChipConfig, SystemConfig, Transfer};
+use velm::coordinator::{server, Coordinator};
+use velm::datasets::synth;
+use velm::dse::{self, FastSim};
+use velm::elm::{self, train::HiddenLayer, ChipHidden};
+use velm::extension::VirtualChip;
+use velm::util::stats;
+
+fn usage() -> &'static str {
+    "velm — VLSI ELM reproduction (Yao & Basu 2016)\n\
+     USAGE: velm <command> [--options]\n\
+     COMMANDS:\n\
+       characterize [--seed N] [--d N] [--l N]       die characterisation (Fig. 15)\n\
+       train --dataset NAME [--l N] [--seed N]       chip-in-the-loop training\n\
+       classify --dataset NAME [--l N] [--normalize] train + test error (Table II)\n\
+       serve [--addr HOST:PORT] [--dataset NAME] [--chips N]  TCP serving front end\n\
+       sweep --what ratio|beta-bits|counter-bits     quick design-space sweep (Fig. 7)\n\
+       info [--artifacts DIR]                        configuration + artifact report\n\
+     Common options: --b BITS (counter), --sigma-vt MV, --vdd V, --lambda F\n"
+}
+
+fn chip_cfg_from(args: &Args) -> Result<ChipConfig> {
+    let mut cfg = ChipConfig::default();
+    cfg.d = args.get_usize("d", cfg.d).map_err(anyhow::Error::msg)?;
+    cfg.l = args.get_usize("l", cfg.l).map_err(anyhow::Error::msg)?;
+    cfg.b = args.get_usize("b", cfg.b as usize).map_err(anyhow::Error::msg)? as u32;
+    cfg.vdd = args.get_f64("vdd", cfg.vdd).map_err(anyhow::Error::msg)?;
+    cfg.sigma_vt = args
+        .get_f64("sigma-vt", cfg.sigma_vt * 1e3)
+        .map_err(anyhow::Error::msg)?
+        / 1e3;
+    if args.flag("linear") {
+        cfg.mode = Transfer::Linear;
+    }
+    if args.flag("noise") {
+        cfg.noise_en = true;
+    }
+    Ok(cfg)
+}
+
+fn cmd_characterize(args: &Args) -> Result<()> {
+    let cfg = chip_cfg_from(args)?;
+    let seed = args.get_u64("seed", 1).map_err(anyhow::Error::msg)?;
+    println!("{}", cfg.summary());
+    let mut chip = ChipModel::fabricate(cfg.clone(), seed);
+    // Fig. 15(c): weight surface -> log-normal fit
+    let surf = chip.weight_surface(100);
+    let mut vals: Vec<f64> = surf.data.iter().cloned().filter(|&v| v > 0.0).collect();
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = vals[vals.len() / 2];
+    let logs: Vec<f64> = vals.iter().map(|v| (v / median).ln()).collect();
+    let (_, s) = stats::fit_gaussian(&logs);
+    println!(
+        "die {seed}: weight spread fits log-normal, sigma_dVT ~ {:.2} mV (fabricated {:.2} mV; paper: ~16 mV)",
+        s * velm::config::thermal_voltage(cfg.temp_k) * 1e3,
+        cfg.sigma_vt * 1e3
+    );
+    println!(
+        "ledger: {} conversions, {:.3} ms simulated, {:.3} pJ/MAC, {:.1} MMAC/s",
+        chip.ledger.conversions,
+        chip.ledger.sim_time * 1e3,
+        chip.ledger.pj_per_mac(),
+        chip.ledger.mmacs()
+    );
+    Ok(())
+}
+
+fn cmd_classify(args: &Args, train_only: bool) -> Result<()> {
+    let name = args.get("dataset").context("--dataset required")?.to_string();
+    let seed = args.get_u64("seed", 1).map_err(anyhow::Error::msg)?;
+    let lambda = args.get_f64("lambda", 0.1).map_err(anyhow::Error::msg)?;
+    let beta_bits = args.get_usize("beta-bits", 10).map_err(anyhow::Error::msg)? as u32;
+    let ds = synth::by_name(&name, seed).with_context(|| format!("unknown dataset {name}"))?;
+    let mut cfg = chip_cfg_from(args)?;
+    cfg.b = args.get_usize("b", 10).map_err(anyhow::Error::msg)? as u32;
+    let normalize = args.flag("normalize");
+    println!(
+        "dataset {name}: d={}, {} train / {} test",
+        ds.d(),
+        ds.n_train(),
+        ds.n_test()
+    );
+    // choose physical vs virtual chip by dimension
+    let use_virtual = ds.d() > cfg.d || args.get("virtual-l").is_some();
+    if use_virtual {
+        let l_virt = args.get_usize("virtual-l", cfg.l).map_err(anyhow::Error::msg)?;
+        let chip = ChipModel::fabricate(cfg.clone(), seed);
+        let mut vchip =
+            VirtualChip::new(chip, ds.d(), l_virt).map_err(anyhow::Error::msg)?;
+        println!(
+            "virtual chip: {}x{} physical -> {}x{} via {} rotation passes/sample",
+            cfg.d,
+            cfg.l,
+            ds.d(),
+            l_virt,
+            vchip.plan.passes()
+        );
+        let (model, h) = elm::train_model(&mut vchip, &ds.train_x, &ds.train_y, lambda, beta_bits, false)
+            .map_err(anyhow::Error::msg)?;
+        let train_err =
+            elm::train::misclassification(&elm::train::predict(&h, &model.head), &ds.train_y);
+        println!("train error: {:.2}%", train_err * 100.0);
+        if !train_only {
+            let err = elm::eval_classification(&mut vchip, &model, &ds.test_x, &ds.test_y);
+            println!("test error: {:.2}%", err * 100.0);
+        }
+    } else {
+        cfg.d = ds.d();
+        let chip = ChipModel::fabricate(cfg.clone(), seed);
+        let mut hidden = if normalize {
+            ChipHidden::normalized(chip)
+        } else {
+            ChipHidden::new(chip)
+        };
+        let (model, h) =
+            elm::train_model(&mut hidden, &ds.train_x, &ds.train_y, lambda, beta_bits, normalize)
+                .map_err(anyhow::Error::msg)?;
+        let train_err =
+            elm::train::misclassification(&elm::train::predict(&h, &model.head), &ds.train_y);
+        println!("train error: {:.2}% (L={})", train_err * 100.0, hidden.hidden_dim());
+        if !train_only {
+            let err = elm::eval_classification_fixed(&mut hidden, &model, &ds.test_x, &ds.test_y);
+            println!("test error (fixed-point 2nd stage): {:.2}%", err * 100.0);
+            println!(
+                "chip ledger: {:.3} pJ/MAC at {:.1} conversions/s simulated",
+                hidden.chip.ledger.pj_per_mac(),
+                hidden.chip.ledger.rate()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7177");
+    let name = args.get_or("dataset", "brightdata");
+    let seed = args.get_u64("seed", 1).map_err(anyhow::Error::msg)?;
+    let ds = synth::by_name(&name, seed).with_context(|| format!("unknown dataset {name}"))?;
+    let mut cfg = chip_cfg_from(args)?;
+    cfg.d = ds.d();
+    cfg.b = args.get_usize("b", 10).map_err(anyhow::Error::msg)? as u32;
+    let mut sys = SystemConfig::default();
+    sys.n_chips = args.get_usize("chips", sys.n_chips).map_err(anyhow::Error::msg)?;
+    sys.artifact_dir = args.get_or("artifacts", &sys.artifact_dir);
+    println!("training {} dies on {name} ...", sys.n_chips);
+    let coord = Coordinator::start(&sys, &cfg, &ds.train_x, &ds.train_y, 0.1, 10)?;
+    server::serve(Arc::new(coord), &addr)
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let what = args.get_or("what", "ratio");
+    match what.as_str() {
+        "ratio" => {
+            // mini Fig. 7(a): error at fixed L across the ratio axis
+            let l = args.get_usize("l", 64).map_err(anyhow::Error::msg)?;
+            println!("I_sat^z/I_max^z sweep at L={l} (sinc regression, lower is better)");
+            let ratios = [0.1, 0.25, 0.5, 0.75, 1.0, 1.5, 2.5];
+            let errs = dse::par_map(ratios.to_vec(), dse::default_threads(), |r| {
+                let sim = FastSim { ratio: r, ..Default::default() };
+                velm::dse::lmin::mean_error(&sim, l, 600, 3, 11)
+            });
+            for (r, e) in ratios.iter().zip(errs) {
+                println!("  ratio {r:5.2}: err {e:.4}");
+            }
+        }
+        "beta-bits" | "counter-bits" => {
+            println!("see `cargo bench --bench fig7_design_space` for the full study");
+        }
+        other => bail!("unknown sweep '{other}'"),
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let cfg = ChipConfig::default();
+    println!("{}", cfg.summary());
+    let dir = args.get_or("artifacts", "artifacts");
+    let path = std::path::Path::new(&dir);
+    if velm::runtime::artifacts_available(path) {
+        let store = velm::runtime::ArtifactStore::load(path)?;
+        println!("artifacts in {dir}: {}", store.entries.len());
+        for meta in store.entries.values() {
+            println!("  {} {:?}", meta.name, meta.arg_shapes);
+        }
+    } else {
+        println!("artifacts not built in {dir} (run `make artifacts`)");
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
+    match args.command.as_deref() {
+        Some("characterize") => cmd_characterize(&args),
+        Some("train") => cmd_classify(&args, true),
+        Some("classify") => cmd_classify(&args, false),
+        Some("serve") => cmd_serve(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("info") => cmd_info(&args),
+        Some("help") | None => {
+            print!("{}", usage());
+            Ok(())
+        }
+        Some(other) => {
+            eprint!("{}", usage());
+            bail!("unknown command '{other}'");
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Artifact discovery: parses the `manifest.txt` written by
+//! `python/compile/aot.py` so the runtime knows each HLO module's name,
+//! file, argument shapes and baked chip parameters without parsing HLO.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One AOT-compiled computation.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub path: PathBuf,
+    /// Argument shapes in order, e.g. [[32,128],[128,128]].
+    pub arg_shapes: Vec<Vec<usize>>,
+    /// Baked chip parameters (hidden artifacts only), key -> value.
+    pub params: BTreeMap<String, String>,
+}
+
+impl ArtifactMeta {
+    /// Total element count of argument `i`.
+    pub fn arg_elems(&self, i: usize) -> usize {
+        self.arg_shapes[i].iter().product()
+    }
+
+    /// Leading (batch) dimension of argument 0.
+    pub fn batch(&self) -> usize {
+        self.arg_shapes[0][0]
+    }
+}
+
+/// Parsed manifest: name -> meta.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactStore {
+    pub entries: BTreeMap<String, ArtifactMeta>,
+    pub dir: PathBuf,
+}
+
+impl ArtifactStore {
+    /// Load `<dir>/manifest.txt`. Errors if the directory/manifest is
+    /// missing — run `make artifacts` first.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {manifest:?}; run `make artifacts`"))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (separated out for tests).
+    pub fn parse(dir: &Path, text: &str) -> Result<Self> {
+        let mut entries = BTreeMap::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split('|').collect();
+            if parts.len() != 4 {
+                bail!("manifest line {}: expected 4 |-fields, got {}", ln + 1, parts.len());
+            }
+            let name = parts[0].to_string();
+            let path = dir.join(parts[1]);
+            let arg_shapes: Result<Vec<Vec<usize>>> = parts[2]
+                .split(';')
+                .map(|s| {
+                    s.split('x')
+                        .map(|t| {
+                            t.parse::<usize>()
+                                .with_context(|| format!("manifest line {}: bad dim {t}", ln + 1))
+                        })
+                        .collect()
+                })
+                .collect();
+            let mut params = BTreeMap::new();
+            if !parts[3].is_empty() {
+                for kv in parts[3].split(',') {
+                    if let Some((k, v)) = kv.split_once('=') {
+                        params.insert(k.to_string(), v.to_string());
+                    }
+                }
+            }
+            entries.insert(
+                name.clone(),
+                ArtifactMeta { name, path, arg_shapes: arg_shapes?, params },
+            );
+        }
+        Ok(ArtifactStore { entries, dir: dir.to_path_buf() })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest ({} known)", self.entries.len()))
+    }
+
+    /// Hidden-stage artifact names available, sorted by batch size.
+    pub fn hidden_variants(&self, normalized: bool, d: usize, l: usize) -> Vec<&ArtifactMeta> {
+        let prefix = if normalized { "hidden_norm_b" } else { "hidden_b" };
+        let suffix = format!("_d{d}_l{l}");
+        let mut v: Vec<&ArtifactMeta> = self
+            .entries
+            .values()
+            .filter(|m| m.name.starts_with(prefix) && m.name.ends_with(&suffix))
+            .filter(|m| {
+                // exclude hidden_norm when asking for plain hidden
+                normalized || !m.name.starts_with("hidden_norm")
+            })
+            .collect();
+        v.sort_by_key(|m| m.batch());
+        v
+    }
+
+    /// Smallest hidden variant whose batch dim fits `n` rows (or the
+    /// largest available if none fits — the caller then splits).
+    pub fn pick_hidden(&self, normalized: bool, d: usize, l: usize, n: usize) -> Option<&ArtifactMeta> {
+        let v = self.hidden_variants(normalized, d, l);
+        v.iter().find(|m| m.batch() >= n).copied().or(v.last().copied())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+hidden_b1_d128_l128|hidden_b1_d128_l128.hlo.txt|1x128;128x128|d=128,mode=quadratic,t_neu=6.5e-06
+hidden_b32_d128_l128|hidden_b32_d128_l128.hlo.txt|32x128;128x128|d=128,mode=quadratic,t_neu=6.5e-06
+hidden_norm_b32_d128_l128|hidden_norm_b32_d128_l128.hlo.txt|32x128;128x128|d=128
+train_n1024_l128|train_n1024_l128.hlo.txt|1024x128;1024x1;1|
+";
+
+    #[test]
+    fn parses_manifest_fields() {
+        let s = ArtifactStore::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(s.entries.len(), 4);
+        let h = s.get("hidden_b32_d128_l128").unwrap();
+        assert_eq!(h.arg_shapes, vec![vec![32, 128], vec![128, 128]]);
+        assert_eq!(h.batch(), 32);
+        assert_eq!(h.params["mode"], "quadratic");
+        let t = s.get("train_n1024_l128").unwrap();
+        assert_eq!(t.arg_shapes[2], vec![1]);
+        assert!(t.params.is_empty());
+    }
+
+    #[test]
+    fn hidden_variant_selection() {
+        let s = ArtifactStore::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        let plain = s.hidden_variants(false, 128, 128);
+        assert_eq!(plain.len(), 2);
+        assert_eq!(plain[0].batch(), 1);
+        // picking: n=8 -> batch 32; n=100 (too big) -> largest (32)
+        assert_eq!(s.pick_hidden(false, 128, 128, 8).unwrap().batch(), 32);
+        assert_eq!(s.pick_hidden(false, 128, 128, 100).unwrap().batch(), 32);
+        assert_eq!(s.pick_hidden(false, 128, 128, 1).unwrap().batch(), 1);
+        // normalized picks the norm variant
+        assert!(s.pick_hidden(true, 128, 128, 4).unwrap().name.starts_with("hidden_norm"));
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(ArtifactStore::parse(Path::new("/x"), "only|three|fields").is_err());
+        assert!(ArtifactStore::parse(Path::new("/x"), "n|f|1xZ|").is_err());
+    }
+
+    #[test]
+    fn unknown_artifact_error_is_helpful() {
+        let s = ArtifactStore::parse(Path::new("/x"), SAMPLE).unwrap();
+        let err = format!("{:#}", s.get("nope").unwrap_err());
+        assert!(err.contains("nope"));
+    }
+}

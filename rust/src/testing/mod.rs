@@ -1,0 +1,86 @@
+//! Minimal property-testing harness (the offline vendor set has no
+//! proptest). A property is a closure over a seeded [`Prng`]; the runner
+//! executes many cases and reports the failing seed so a failure is
+//! reproducible with `check_one`.
+
+use crate::util::prng::Prng;
+
+/// Run `cases` random cases of `prop`; panics with the failing seed on
+/// the first counterexample. `prop` returns `Err(reason)` to fail.
+pub fn check<F>(name: &str, cases: u64, prop: F)
+where
+    F: Fn(&mut Prng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Prng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}): {msg}\n\
+                 reproduce with testing::check_one(\"{name}\", {seed:#x}, prop)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn check_one<F>(name: &str, seed: u64, prop: F)
+where
+    F: Fn(&mut Prng) -> Result<(), String>,
+{
+    let mut rng = Prng::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property '{name}' failed (seed {seed:#x}): {msg}");
+    }
+}
+
+/// Helper: assert closeness with context.
+pub fn close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+/// Helper: assert a predicate with context.
+pub fn ensure(cond: bool, what: &str) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(what.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let count = AtomicU64::new(0);
+        check("count", 25, |_rng| {
+            count.fetch_add(1, Ordering::Relaxed);
+            Ok(())
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 10, |rng| {
+            let x = rng.f64();
+            ensure(x < 0.5, "x too big") // will fail quickly
+        });
+    }
+
+    #[test]
+    fn helpers() {
+        assert!(close(1.0, 1.0001, 1e-3, "x").is_ok());
+        assert!(close(1.0, 2.0, 1e-3, "x").is_err());
+        assert!(ensure(true, "ok").is_ok());
+        assert!(ensure(false, "bad").is_err());
+    }
+}

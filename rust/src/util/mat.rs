@@ -1,0 +1,379 @@
+//! Dense linear algebra substrate (row-major `f64`).
+//!
+//! No BLAS/LAPACK exists in the offline vendor set, so training-path
+//! numerics (H assembly, Gram matrices, the ridge solve of eq. 3) are
+//! built here: cache-blocked matmul with a packed-transpose inner kernel,
+//! Cholesky factorisation for the SPD ridge system, and triangular solves.
+//! The PJRT `train` artifact solves the same system on the XLA side;
+//! integration tests pin the two against each other.
+
+use crate::util::prng::Prng;
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.data[i * cols + j] = f(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    /// I.i.d. uniform entries in `[lo, hi)` (software-ELM baseline weights).
+    pub fn random_uniform(rows: usize, cols: usize, lo: f64, hi: f64, rng: &mut Prng) -> Self {
+        let data = (0..rows * cols).map(|_| rng.range(lo, hi)).collect();
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self.get(i, j)).collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    /// Matrix product `self * other`, blocked for cache reuse.
+    ///
+    /// Inner loop runs along contiguous rows of both `self` and a packed
+    /// transpose-free layout: classic ikj order with row-slice FMA, which
+    /// the compiler auto-vectorises. Good enough to keep the training path
+    /// off the profile (see EXPERIMENTS.md §Perf).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        const BK: usize = 64;
+        for k0 in (0..k).step_by(BK) {
+            let k1 = (k0 + BK).min(k);
+            for i in 0..m {
+                let a_row = &self.data[i * k..(i + 1) * k];
+                let o_row = &mut out.data[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    let a = a_row[kk];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let b_row = &other.data[kk * n..(kk + 1) * n];
+                    for (o, &b) in o_row.iter_mut().zip(b_row) {
+                        *o += a * b;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// `self * v` for a length-`cols` vector.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.cols);
+        (0..self.rows)
+            .map(|i| {
+                self.row(i)
+                    .iter()
+                    .zip(v)
+                    .map(|(a, b)| a * b)
+                    .sum::<f64>()
+            })
+            .collect()
+    }
+
+    /// Gram matrix `selfᵀ * self` exploiting symmetry (training hot spot).
+    pub fn gram(&self) -> Mat {
+        let (n, l) = (self.rows, self.cols);
+        let mut g = Mat::zeros(l, l);
+        for r in 0..n {
+            let row = self.row(r);
+            for i in 0..l {
+                let ri = row[i];
+                if ri == 0.0 {
+                    continue;
+                }
+                let grow = &mut g.data[i * l..(i + 1) * l];
+                for j in i..l {
+                    grow[j] += ri * row[j];
+                }
+            }
+        }
+        for i in 0..l {
+            for j in 0..i {
+                g.data[i * l + j] = g.data[j * l + i];
+            }
+        }
+        g
+    }
+
+    pub fn add_diag(&mut self, v: f64) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            self.data[i * self.cols + i] += v;
+        }
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Lossy narrowing for the PJRT FFI boundary.
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data: data.iter().map(|&x| x as f64).collect() }
+    }
+}
+
+/// Cholesky factorisation `A = L Lᵀ` of an SPD matrix; returns lower `L`.
+///
+/// Errors if a pivot collapses (matrix not positive definite) — the ridge
+/// term `I/C` guarantees this never triggers on the training path.
+pub fn cholesky(a: &Mat) -> Result<Mat, String> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.get(i, j);
+            for k in 0..j {
+                sum -= l.get(i, k) * l.get(j, k);
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return Err(format!("cholesky: non-PD pivot {sum} at {i}"));
+                }
+                l.set(i, j, sum.sqrt());
+            } else {
+                l.set(i, j, sum / l.get(j, j));
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve `A x = b` for SPD `A` via Cholesky (forward + back substitution).
+pub fn cholesky_solve(a: &Mat, b: &Mat) -> Result<Mat, String> {
+    let l = cholesky(a)?;
+    let n = a.rows;
+    let m = b.cols;
+    // forward: L y = b
+    let mut y = b.clone();
+    for i in 0..n {
+        for c in 0..m {
+            let mut v = y.get(i, c);
+            for k in 0..i {
+                v -= l.get(i, k) * y.get(k, c);
+            }
+            y.set(i, c, v / l.get(i, i));
+        }
+    }
+    // backward: Lᵀ x = y
+    let mut x = y;
+    for i in (0..n).rev() {
+        for c in 0..m {
+            let mut v = x.get(i, c);
+            for k in i + 1..n {
+                v -= l.get(k, i) * x.get(k, c);
+            }
+            x.set(i, c, v / l.get(i, i));
+        }
+    }
+    Ok(x)
+}
+
+/// Ridge-regularised least squares: `beta = (HᵀH + lam I)⁻¹ Hᵀ T` (eq. 3).
+///
+/// This is the ELM output-weight solve; `lam = 1/C` in the paper's ridge
+/// notation. `t` may have multiple columns (one-vs-all multi-output).
+pub fn ridge_solve(h: &Mat, t: &Mat, lam: f64) -> Result<Mat, String> {
+    assert_eq!(h.rows, t.rows, "H and T row mismatch");
+    let mut a = h.gram();
+    a.add_diag(lam);
+    let ht_t = h.transpose().matmul(t);
+    cholesky_solve(&a, &ht_t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_mat(r: usize, c: usize, seed: u64) -> Mat {
+        let mut p = Prng::new(seed);
+        Mat::from_fn(r, c, |_, _| p.gaussian())
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = rand_mat(7, 7, 1);
+        let i = Mat::eye(7);
+        assert!(a.matmul(&i).max_abs_diff(&a) < 1e-12);
+        assert!(i.matmul(&a).max_abs_diff(&a) < 1e-12);
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let a = rand_mat(13, 29, 2);
+        let b = rand_mat(29, 17, 3);
+        let fast = a.matmul(&b);
+        let naive = Mat::from_fn(13, 17, |i, j| {
+            (0..29).map(|k| a.get(i, k) * b.get(k, j)).sum()
+        });
+        assert!(fast.max_abs_diff(&naive) < 1e-10);
+    }
+
+    #[test]
+    fn gram_equals_explicit_transpose_product() {
+        let h = rand_mat(40, 12, 4);
+        let g = h.gram();
+        let explicit = h.transpose().matmul(&h);
+        assert!(g.max_abs_diff(&explicit) < 1e-10);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let a = rand_mat(9, 5, 5);
+        let v: Vec<f64> = (0..5).map(|i| i as f64 - 2.0).collect();
+        let mv = a.matvec(&v);
+        let col = Mat { rows: 5, cols: 1, data: v.clone() };
+        let mm = a.matmul(&col);
+        for i in 0..9 {
+            assert!((mv[i] - mm.get(i, 0)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let b = rand_mat(10, 10, 6);
+        let mut a = b.gram();
+        a.add_diag(1.0);
+        let l = cholesky(&a).unwrap();
+        let rec = l.matmul(&l.transpose());
+        assert!(rec.max_abs_diff(&a) < 1e-9);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = Mat::eye(3);
+        a.set(2, 2, -1.0);
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn solve_recovers_known_solution() {
+        let b = rand_mat(12, 12, 7);
+        let mut a = b.gram();
+        a.add_diag(0.5);
+        let x_true = rand_mat(12, 3, 8);
+        let rhs = a.matmul(&x_true);
+        let x = cholesky_solve(&a, &rhs).unwrap();
+        assert!(x.max_abs_diff(&x_true) < 1e-8);
+    }
+
+    #[test]
+    fn ridge_gradient_vanishes() {
+        let h = rand_mat(50, 10, 9);
+        let t = rand_mat(50, 1, 10);
+        let lam = 0.3;
+        let beta = ridge_solve(&h, &t, lam).unwrap();
+        // gradient: Hᵀ(H beta - T) + lam beta == 0
+        let resid = {
+            let hb = h.matmul(&beta);
+            Mat::from_fn(50, 1, |i, j| hb.get(i, j) - t.get(i, j))
+        };
+        let mut grad = h.transpose().matmul(&resid);
+        for i in 0..10 {
+            let g = grad.get(i, 0) + lam * beta.get(i, 0);
+            grad.set(i, 0, g);
+        }
+        assert!(grad.frob_norm() < 1e-8, "gradient {}", grad.frob_norm());
+    }
+
+    #[test]
+    fn ridge_shrinks_with_lambda() {
+        let h = rand_mat(30, 8, 11);
+        let t = rand_mat(30, 1, 12);
+        let b_small = ridge_solve(&h, &t, 1e-6).unwrap();
+        let b_big = ridge_solve(&h, &t, 1e3).unwrap();
+        assert!(b_big.frob_norm() < b_small.frob_norm());
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let a = rand_mat(4, 3, 13);
+        let f = a.to_f32();
+        let back = Mat::from_f32(4, 3, &f);
+        assert!(a.max_abs_diff(&back) < 1e-6);
+    }
+}

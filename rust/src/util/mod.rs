@@ -1,0 +1,5 @@
+//! Shared substrates: deterministic PRNG, statistics, dense linear algebra.
+
+pub mod mat;
+pub mod prng;
+pub mod stats;

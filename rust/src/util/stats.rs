@@ -1,0 +1,145 @@
+//! Small statistics toolbox used by characterisation benches (Fig. 15),
+//! the robustness studies (Figs. 17/18) and the bench harness.
+
+/// Arithmetic mean; 0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance.
+pub fn var(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std(xs: &[f64]) -> f64 {
+    var(xs).sqrt()
+}
+
+/// p-th percentile (0..=100) by linear interpolation on sorted copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty slice");
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (s.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (rank - lo as f64) * (s[hi] - s[lo])
+    }
+}
+
+/// Median.
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Median absolute deviation (robust spread, used by the bench harness).
+pub fn mad(xs: &[f64]) -> f64 {
+    let m = median(xs);
+    let devs: Vec<f64> = xs.iter().map(|x| (x - m).abs()).collect();
+    median(&devs)
+}
+
+/// Equal-width histogram over `[lo, hi]`; returns (bin centers, counts).
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> (Vec<f64>, Vec<usize>) {
+    assert!(bins > 0 && hi > lo);
+    let width = (hi - lo) / bins as f64;
+    let mut counts = vec![0usize; bins];
+    for &x in xs {
+        if x < lo || x > hi {
+            continue;
+        }
+        let mut b = ((x - lo) / width) as usize;
+        if b >= bins {
+            b = bins - 1;
+        }
+        counts[b] += 1;
+    }
+    let centers = (0..bins)
+        .map(|i| lo + (i as f64 + 0.5) * width)
+        .collect();
+    (centers, counts)
+}
+
+/// Fit a Gaussian to data by moments; returns (mu, sigma).
+///
+/// Used on `ln(w)` to recover the fabricated sigma_VT from measured
+/// weights, reproducing the Fig. 15(c) "sigma_dVT ~ 16 mV" extraction.
+pub fn fit_gaussian(xs: &[f64]) -> (f64, f64) {
+    (mean(xs), std(xs))
+}
+
+/// Root-mean-square error between two equal-length series.
+pub fn rmse(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let se: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+    (se / a.len() as f64).sqrt()
+}
+
+/// Maximum relative spread `(max-min)/mid` in percent — the Fig. 17 metric
+/// ("maximum variation of 22.7%" across VDD corners).
+pub fn max_rel_spread_pct(xs: &[f64]) -> f64 {
+    let max = xs.iter().cloned().fold(f64::MIN, f64::max);
+    let min = xs.iter().cloned().fold(f64::MAX, f64::min);
+    let mid = 0.5 * (max + min);
+    if mid == 0.0 {
+        0.0
+    } else {
+        (max - min) / mid * 100.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basic() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_median() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_counts_everything_in_range() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64 / 100.0).collect();
+        let (centers, counts) = histogram(&xs, 0.0, 1.0, 10);
+        assert_eq!(centers.len(), 10);
+        assert_eq!(counts.iter().sum::<usize>(), 100);
+        // float edge effects can move a boundary sample by one bin
+        assert!(counts.iter().all(|&c| (9..=11).contains(&c)), "{counts:?}");
+    }
+
+    #[test]
+    fn gaussian_fit_recovers_parameters() {
+        let mut p = crate::util::prng::Prng::new(17);
+        let xs: Vec<f64> = (0..100_000).map(|_| p.normal(3.0, 0.5)).collect();
+        let (mu, sigma) = fit_gaussian(&xs);
+        assert!((mu - 3.0).abs() < 0.01);
+        assert!((sigma - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn spread_metric() {
+        let xs = [90.0, 100.0, 110.0];
+        assert!((max_rel_spread_pct(&xs) - 20.0).abs() < 1e-9);
+    }
+}

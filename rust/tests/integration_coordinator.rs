@@ -1,0 +1,124 @@
+//! Integration: the serving stack over real TCP sockets, including
+//! accuracy through the full protocol and graceful error handling.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use velm::config::{ChipConfig, SystemConfig};
+use velm::coordinator::{server, Coordinator};
+use velm::datasets::synth;
+
+fn start_system(n_chips: usize) -> (Arc<Coordinator>, velm::datasets::Dataset) {
+    let ds = synth::brightdata(1).with_test_subsample(60, 1);
+    let mut cfg = ChipConfig::default().with_b(10);
+    cfg.d = ds.d();
+    let sys = SystemConfig {
+        n_chips,
+        artifact_dir: "/nonexistent".into(),
+        max_wait: std::time::Duration::from_millis(1),
+        ..Default::default()
+    };
+    let coord =
+        Coordinator::start(&sys, &cfg, &ds.train_x, &ds.train_y, 0.1, 10).expect("start");
+    (Arc::new(coord), ds)
+}
+
+#[test]
+fn tcp_protocol_roundtrip() {
+    let (coord, ds) = start_system(1);
+    let (addr, srv) = server::serve_n(Arc::clone(&coord), 1).expect("serve");
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+
+    writeln!(writer, "PING").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim(), "OK pong");
+
+    line.clear();
+    let feats: Vec<String> = ds.test_x[0].iter().map(|v| v.to_string()).collect();
+    writeln!(writer, "CLASSIFY {}", feats.join(",")).unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("OK "), "got {line}");
+    let label: i32 = line.split_whitespace().nth(1).unwrap().parse().unwrap();
+    assert!(label == 1 || label == -1);
+
+    line.clear();
+    writeln!(writer, "STATS").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("requests="), "got {line}");
+
+    line.clear();
+    writeln!(writer, "CLASSIFY 0.1,bogus").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR"), "got {line}");
+
+    line.clear();
+    writeln!(writer, "NOSUCH").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR unknown"), "got {line}");
+
+    writeln!(writer, "QUIT").unwrap();
+    srv.join();
+}
+
+#[test]
+fn tcp_accuracy_matches_direct_path() {
+    let (coord, ds) = start_system(2);
+    // direct path accuracy
+    let mut direct_correct = 0usize;
+    for (x, &y) in ds.test_x.iter().zip(&ds.test_y) {
+        let resp = coord.classify(x.clone()).unwrap();
+        if (resp.label as f64 - y).abs() < 1e-9 {
+            direct_correct += 1;
+        }
+    }
+    // protocol path accuracy must be identical (same dies, same heads)
+    let (addr, srv) = server::serve_n(Arc::clone(&coord), 1).expect("serve");
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut tcp_correct = 0usize;
+    for (x, &y) in ds.test_x.iter().zip(&ds.test_y) {
+        let feats: Vec<String> = x.iter().map(|v| v.to_string()).collect();
+        writeln!(writer, "CLASSIFY {}", feats.join(",")).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let label: f64 = line.split_whitespace().nth(1).unwrap().parse().unwrap();
+        if (label - y).abs() < 1e-9 {
+            tcp_correct += 1;
+        }
+    }
+    writeln!(writer, "QUIT").unwrap();
+    srv.join();
+    assert_eq!(direct_correct, tcp_correct);
+    assert!(direct_correct as f64 / ds.n_test() as f64 > 0.85);
+}
+
+#[test]
+fn handle_line_unit_surface() {
+    let (coord, _) = start_system(1);
+    assert_eq!(server::handle_line(&coord, "PING"), Some("OK pong".into()));
+    assert_eq!(server::handle_line(&coord, "QUIT"), None);
+    assert!(server::handle_line(&coord, "")
+        .unwrap()
+        .starts_with("ERR"));
+    assert!(server::handle_line(&coord, "CLASSIFY 1,2")
+        .unwrap()
+        .starts_with("ERR")); // wrong dimension
+}
+
+#[test]
+fn load_spreads_across_dies() {
+    let (coord, ds) = start_system(3);
+    let mut by_worker = [0usize; 3];
+    for i in 0..90 {
+        let resp = coord.classify(ds.test_x[i % ds.n_test()].clone()).unwrap();
+        by_worker[resp.worker] += 1;
+    }
+    for (w, &n) in by_worker.iter().enumerate() {
+        assert!(n > 5, "worker {w} starved: {by_worker:?}");
+    }
+}

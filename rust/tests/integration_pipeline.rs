@@ -1,0 +1,168 @@
+//! Integration: chip -> ELM -> second stage across modules, and the
+//! extension pipeline end to end.
+
+use velm::chip::{dac, ChipModel};
+use velm::config::{ChipConfig, Transfer};
+use velm::datasets::synth;
+use velm::elm::secondstage::codes_sum;
+use velm::elm::{self, train::HiddenLayer, ChipHidden};
+use velm::extension::VirtualChip;
+
+#[test]
+fn brightdata_full_pipeline_beats_chance_by_far() {
+    let ds = synth::brightdata(1).with_test_subsample(400, 1);
+    let cfg = ChipConfig::default().with_dims(ds.d(), 128).with_b(10);
+    let mut hidden = ChipHidden::new(ChipModel::fabricate(cfg, 7));
+    let (model, _) =
+        elm::train_model(&mut hidden, &ds.train_x, &ds.train_y, 0.1, 10, false).unwrap();
+    let err = elm::eval_classification_fixed(&mut hidden, &model, &ds.test_x, &ds.test_y);
+    assert!(err < 0.10, "brightdata err {err}");
+}
+
+#[test]
+fn diabetes_pipeline_lands_near_bayes_floor() {
+    let ds = synth::diabetes(2);
+    let cfg = ChipConfig::default().with_dims(ds.d(), 128).with_b(10);
+    let mut hidden = ChipHidden::new(ChipModel::fabricate(cfg, 8));
+    let (model, _) =
+        elm::train_model(&mut hidden, &ds.train_x, &ds.train_y, 0.1, 10, false).unwrap();
+    let err = elm::eval_classification_fixed(&mut hidden, &model, &ds.test_x, &ds.test_y);
+    // flip rate ~19.5%; the chip should sit within ~12 points of it
+    assert!(err > 0.10 && err < 0.34, "diabetes err {err}");
+}
+
+#[test]
+fn quadratic_and_linear_modes_both_train() {
+    let ds = synth::australian(3).with_test_subsample(200, 3);
+    for mode in [Transfer::Quadratic, Transfer::Linear] {
+        let cfg = ChipConfig::default().with_dims(ds.d(), 96).with_b(10).with_mode(mode);
+        let mut hidden = ChipHidden::new(ChipModel::fabricate(cfg, 9));
+        let (model, _) =
+            elm::train_model(&mut hidden, &ds.train_x, &ds.train_y, 0.1, 10, false).unwrap();
+        let err = elm::eval_classification(&mut hidden, &model, &ds.test_x, &ds.test_y);
+        assert!(err < 0.35, "mode {mode:?} err {err}");
+    }
+}
+
+#[test]
+fn noise_injection_costs_little_accuracy() {
+    // the Section IV-A claim behind C = 0.4 pF: thermal noise at the
+    // designed SNR must not visibly hurt classification
+    let ds = synth::australian(4).with_test_subsample(200, 4);
+    let mk = |noise: bool| {
+        let cfg = ChipConfig::default()
+            .with_dims(ds.d(), 96)
+            .with_b(10)
+            .with_noise(noise);
+        let mut hidden = ChipHidden::new(ChipModel::fabricate(cfg, 10));
+        let (model, _) =
+            elm::train_model(&mut hidden, &ds.train_x, &ds.train_y, 0.1, 10, false).unwrap();
+        elm::eval_classification(&mut hidden, &model, &ds.test_x, &ds.test_y)
+    };
+    let clean = mk(false);
+    let noisy = mk(true);
+    assert!(
+        noisy - clean < 0.05,
+        "noise cost too high: clean {clean} noisy {noisy}"
+    );
+}
+
+#[test]
+fn virtual_chip_trains_on_high_dimensional_data() {
+    // miniature leukemia: d = 300 through a 64-channel die
+    let ds = synth::classification(
+        "mini-leukemia",
+        300,
+        60,
+        40,
+        synth::FeatureStyle::SparseInformative { informative: 20 },
+        0.08,
+        5,
+    );
+    let cfg = ChipConfig::default().with_dims(64, 64).with_b(10);
+    let mut vchip = VirtualChip::new(ChipModel::fabricate(cfg, 11), ds.d(), 64).unwrap();
+    assert_eq!(vchip.plan.input_chunks(), 5);
+    let (model, h) =
+        elm::train_model(&mut vchip, &ds.train_x, &ds.train_y, 0.1, 10, false).unwrap();
+    let train_err =
+        elm::train::misclassification(&elm::train::predict(&h, &model.head), &ds.train_y);
+    assert!(train_err < 0.15, "train err {train_err}");
+    let test_err = elm::eval_classification(&mut vchip, &model, &ds.test_x, &ds.test_y);
+    assert!(test_err < 0.5, "test err {test_err}");
+}
+
+#[test]
+fn hidden_extension_improves_small_die() {
+    let ds = synth::diabetes(6).with_test_subsample(200, 6);
+    let small = ChipConfig::default().with_dims(ds.d(), 12).with_b(10);
+    let mut s = ChipHidden::new(ChipModel::fabricate(small.clone(), 22));
+    let (m_small, _) =
+        elm::train_model(&mut s, &ds.train_x, &ds.train_y, 0.1, 10, false).unwrap();
+    let e_small = elm::eval_classification(&mut s, &m_small, &ds.test_x, &ds.test_y);
+    let mut v = VirtualChip::new(ChipModel::fabricate(small, 22), ds.d(), 96).unwrap();
+    let (m_big, _) =
+        elm::train_model(&mut v, &ds.train_x, &ds.train_y, 0.1, 10, false).unwrap();
+    let e_big = elm::eval_classification(&mut v, &m_big, &ds.test_x, &ds.test_y);
+    assert!(
+        e_big <= e_small + 0.02,
+        "expansion didn't help: L=12 {e_small} vs virtual L=96 {e_big}"
+    );
+}
+
+#[test]
+fn normalization_reduces_vdd_sensitivity_end_to_end() {
+    // Fig 17/Table IV mechanism through the full pipeline
+    let ds = synth::sinc(800, 200, 0.2, 7);
+    let run = |normalize: bool| {
+        let cfg = ChipConfig::default().with_dims(1, 96).with_b(12);
+        let chip = ChipModel::fabricate(cfg, 13);
+        let mut hidden = if normalize {
+            ChipHidden::normalized(chip)
+        } else {
+            ChipHidden::new(chip)
+        };
+        let (model, _) =
+            elm::train_model(&mut hidden, &ds.train_x, &ds.train_y, 1e-4, 14, normalize)
+                .unwrap();
+        let mut errs = Vec::new();
+        for vdd in [0.8, 1.0, 1.2] {
+            hidden.chip.set_vdd(vdd);
+            errs.push(elm::eval_regression(&mut hidden, &model, &ds.test_x, &ds.test_y));
+        }
+        errs
+    };
+    let raw = run(false);
+    let norm = run(true);
+    let spread = |e: &[f64]| e.iter().cloned().fold(f64::MIN, f64::max) - e[1];
+    assert!(
+        spread(&norm) < spread(&raw),
+        "normalisation must shrink off-nominal degradation: raw {raw:?} norm {norm:?}"
+    );
+}
+
+#[test]
+fn second_stage_fixed_point_matches_float_scores() {
+    let cfg = ChipConfig::default().with_dims(8, 32).with_b(10);
+    let mut chip = ChipModel::fabricate(cfg.clone(), 15);
+    let beta: Vec<f64> = (0..32).map(|i| ((i * 13) % 7) as f64 / 3.5 - 1.0).collect();
+    let second = velm::elm::secondstage::SecondStage::new(&beta, 10, false);
+    let x: Vec<f64> = (0..8).map(|i| i as f64 / 4.0 - 1.0).collect();
+    let codes = dac::features_to_codes(&x, &cfg);
+    let h = chip.forward(&codes);
+    let float: f64 = h.iter().zip(&beta).map(|(&hj, &bj)| hj as f64 * bj).sum();
+    let fixed = second.score(&h, codes_sum(&codes));
+    let bound = second.beta.lsb() * 0.5 * h.iter().map(|&v| v as f64).sum::<f64>();
+    assert!(
+        (fixed - float).abs() <= bound,
+        "fixed {fixed} float {float} bound {bound}"
+    );
+}
+
+#[test]
+fn chip_hidden_layer_trait_dims() {
+    let cfg = ChipConfig::default().with_dims(10, 20);
+    let mut hidden = ChipHidden::new(ChipModel::fabricate(cfg, 16));
+    assert_eq!(hidden.input_dim(), 10);
+    assert_eq!(hidden.hidden_dim(), 20);
+    assert_eq!(hidden.transform(&vec![0.5; 10]).len(), 20);
+}

@@ -1,0 +1,184 @@
+//! Integration: the AOT JAX/Pallas artifacts executed from Rust via PJRT
+//! must agree with the behavioural chip simulator — the two independent
+//! implementations of the same quantised math (DESIGN.md §2).
+//!
+//! These tests skip (with a message) when `make artifacts` hasn't run.
+
+use std::path::Path;
+
+use velm::chip::{dac, ChipModel};
+use velm::config::ChipConfig;
+use velm::runtime::{artifacts_available, PjrtEngine};
+use velm::util::mat::{ridge_solve, Mat};
+use velm::util::prng::Prng;
+
+fn engine_or_skip() -> Option<PjrtEngine> {
+    let dir = Path::new("artifacts");
+    if !artifacts_available(dir) {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(PjrtEngine::new(dir).expect("engine"))
+}
+
+/// The chip forward and the artifact may differ by 1 count where the
+/// pre-floor estimate sits on an integer boundary (f32 vs f64).
+fn assert_counts_close(a: &[u32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len());
+    let mut big = 0usize;
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let diff = (x as f64 - y as f64).abs();
+        if diff > 1.0 {
+            big += 1;
+            assert!(big < 3, "{what}: count {i} differs by {diff} ({x} vs {y})");
+        }
+    }
+}
+
+#[test]
+fn pjrt_hidden_matches_chip_simulator() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let cfg = ChipConfig::default(); // must match aot.py DEFAULT
+    let mut chip = ChipModel::fabricate(cfg.clone(), 42);
+    let mut rng = Prng::new(9);
+    for bsz in [1usize, 5, 32] {
+        let samples: Vec<Vec<u16>> = (0..bsz)
+            .map(|_| (0..cfg.d).map(|_| rng.usize(1024) as u16).collect())
+            .collect();
+        let flat: Vec<f32> = samples
+            .iter()
+            .flat_map(|s| s.iter().map(|&c| c as f32))
+            .collect();
+        let w = chip.weights().to_f32();
+        let out = engine
+            .hidden(&flat, bsz, cfg.d, cfg.l, &w, false)
+            .expect("pjrt hidden");
+        for (k, s) in samples.iter().enumerate() {
+            let h_sim = chip.forward(s);
+            assert_counts_close(&h_sim, &out[k * cfg.l..(k + 1) * cfg.l], "hidden");
+        }
+    }
+}
+
+#[test]
+fn pjrt_hidden_norm_matches_rust_normalization() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let cfg = ChipConfig::default();
+    let mut chip = ChipModel::fabricate(cfg.clone(), 43);
+    let mut rng = Prng::new(10);
+    let codes: Vec<u16> = (0..cfg.d).map(|_| rng.usize(1024) as u16).collect();
+    let flat: Vec<f32> = codes.iter().map(|&c| c as f32).collect();
+    let w = chip.weights().to_f32();
+    let out = engine
+        .hidden(&flat, 1, cfg.d, cfg.l, &w, true)
+        .expect("pjrt hidden_norm");
+    let h_sim = chip.forward(&codes);
+    let h_norm = velm::elm::secondstage::normalize_h(
+        &h_sim,
+        velm::elm::secondstage::codes_sum(&codes),
+    );
+    for (j, (&ours, &theirs)) in h_norm.iter().zip(&out).enumerate() {
+        let rel = (ours - theirs as f64).abs() / ours.abs().max(1.0);
+        assert!(rel < 0.02, "norm {j}: {ours} vs {theirs}");
+    }
+}
+
+#[test]
+fn pjrt_train_matches_rust_ridge() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let (n, l) = (200usize, 128usize);
+    let mut rng = Prng::new(11);
+    let h = Mat::from_fn(n, l, |_, _| rng.range(0.0, 1.0));
+    let t: Vec<f64> = (0..n).map(|_| if rng.bool(0.5) { 1.0 } else { -1.0 }).collect();
+    let lam = 0.1f64;
+    let rust_beta = ridge_solve(&h, &Mat { rows: n, cols: 1, data: t.clone() }, lam).unwrap();
+    let h32 = h.to_f32();
+    let t32: Vec<f32> = t.iter().map(|&v| v as f32).collect();
+    let xla_beta = engine
+        .train_beta(&h32, n, l, &t32, lam as f32)
+        .expect("pjrt train");
+    assert_eq!(xla_beta.len(), l);
+    for j in 0..l {
+        let a = rust_beta.get(j, 0);
+        let b = xla_beta[j] as f64;
+        assert!(
+            (a - b).abs() < 1e-2 * a.abs().max(0.1),
+            "beta {j}: rust {a} xla {b}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_predict_matches_matvec() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let (n, l) = (40usize, 128usize);
+    let mut rng = Prng::new(12);
+    let h: Vec<f32> = (0..n * l).map(|_| rng.range(0.0, 100.0) as f32).collect();
+    let beta: Vec<f32> = (0..l).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+    let scores = engine.predict(&h, n, l, &beta).expect("pjrt predict");
+    assert_eq!(scores.len(), n);
+    for i in 0..n {
+        let expect: f32 = (0..l).map(|j| h[i * l + j] * beta[j]).sum();
+        assert!(
+            (scores[i] - expect).abs() < 1e-2 * expect.abs().max(1.0),
+            "score {i}: {} vs {expect}",
+            scores[i]
+        );
+    }
+}
+
+#[test]
+fn artifact_errors_are_reported_not_panicked() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    assert!(engine.execute_f32("no_such_artifact", &[]).is_err());
+    // wrong shape is an error, not UB
+    let err = engine.execute_f32("predict_b1_l128", &[&[0.0f32; 3], &[0.0f32; 128]]);
+    assert!(err.is_err());
+}
+
+#[test]
+fn end_to_end_train_and_serve_through_pjrt_only() {
+    // full loop: hidden on PJRT -> train on PJRT -> predict on PJRT,
+    // cross-checked against the all-Rust path on the same die.
+    let Some(mut engine) = engine_or_skip() else { return };
+    let cfg = ChipConfig::default();
+    let mut chip = ChipModel::fabricate(cfg.clone(), 77);
+    let ds = velm::datasets::synth::brightdata(1).with_test_subsample(100, 1);
+    let pad = |x: &Vec<f64>| {
+        let mut p = vec![-1.0; cfg.d];
+        p[..x.len()].copy_from_slice(x);
+        p
+    };
+    let n = 300.min(ds.n_train());
+    let codes_of = |x: &Vec<f64>| dac::features_to_codes(&pad(x), &cfg);
+    let w = chip.weights().to_f32();
+    // hidden via PJRT
+    let flat: Vec<f32> = ds.train_x[..n]
+        .iter()
+        .flat_map(|x| codes_of(x).iter().map(|&c| c as f32).collect::<Vec<f32>>())
+        .collect();
+    let mut h = engine.hidden(&flat, n, cfg.d, cfg.l, &w, false).expect("hidden");
+    // scale counts to O(1) before the f32 solve (lambda parity with the
+    // Rust path; conditioning for f32 Gauss-Jordan)
+    let scale = 1.0f32 / cfg.cap() as f32;
+    h.iter_mut().for_each(|v| *v *= scale);
+    // train via PJRT
+    let t: Vec<f32> = ds.train_y[..n].iter().map(|&v| v as f32).collect();
+    let beta = engine.train_beta(&h, n, cfg.l, &t, 0.1).expect("train");
+    // predict via PJRT on the test slice
+    let m = ds.n_test();
+    let flat_te: Vec<f32> = ds.test_x
+        .iter()
+        .flat_map(|x| codes_of(x).iter().map(|&c| c as f32).collect::<Vec<f32>>())
+        .collect();
+    let mut h_te = engine.hidden(&flat_te, m, cfg.d, cfg.l, &w, false).expect("hidden te");
+    h_te.iter_mut().for_each(|v| *v *= scale);
+    let scores = engine.predict(&h_te, m, cfg.l, &beta).expect("predict");
+    let err = scores
+        .iter()
+        .zip(&ds.test_y)
+        .filter(|(s, &y)| (s.signum() as f64 - y).abs() > 1e-9)
+        .count() as f64
+        / m as f64;
+    assert!(err < 0.15, "pjrt-only pipeline err {err}");
+}

@@ -1,0 +1,212 @@
+//! Property-based tests over module invariants, run through the in-house
+//! `testing::check` harness (proptest is unavailable offline).
+
+use velm::chip::{counter, dac, mirror, neuron, spi, ChipModel};
+use velm::config::{ChipConfig, Transfer};
+use velm::extension::RotationPlan;
+use velm::testing::{check, close, ensure};
+use velm::util::mat::{ridge_solve, Mat};
+
+#[test]
+fn prop_dac_linear_and_monotone() {
+    let cfg = ChipConfig::default();
+    check("dac-linear", 200, |rng| {
+        let a = rng.usize(1024) as u16;
+        let b = rng.usize(1024) as u16;
+        let ia = dac::dac_current(a, &cfg);
+        let ib = dac::dac_current(b, &cfg);
+        ensure((a < b) == (ia < ib) || a == b, "monotonicity")?;
+        close(ia + ib, dac::dac_current(a, &cfg) + dac::dac_current(b, &cfg), 1e-24, "determinism")
+    });
+}
+
+#[test]
+fn prop_feature_code_roundtrip_error_bounded() {
+    let cfg = ChipConfig::default();
+    check("feature-code-roundtrip", 300, |rng| {
+        let x = rng.range(-1.0, 1.0);
+        let code = dac::feature_to_code(x, &cfg);
+        let back = code as f64 / 1023.0 * 2.0 - 1.0;
+        close(x, back, 1.01 / 1023.0, "quantisation error > 1 LSB")
+    });
+}
+
+#[test]
+fn prop_counter_never_exceeds_cap_and_is_monotone() {
+    check("counter-cap-monotone", 200, |rng| {
+        let cap = 1 + rng.usize(1 << 14) as u32;
+        let t_neu = rng.range(1e-6, 1e-3);
+        let f1 = rng.range(0.0, 1e9);
+        let f2 = rng.range(0.0, 1e9);
+        let c1 = counter::count_window(f1, t_neu, cap);
+        let c2 = counter::count_window(f2, t_neu, cap);
+        ensure(c1 <= cap && c2 <= cap, "cap exceeded")?;
+        ensure((f1 <= f2) == (c1 <= c2) || c1 == c2, "monotonicity")
+    });
+}
+
+#[test]
+fn prop_neuron_frequency_bounded_by_fmax() {
+    let cfg = ChipConfig::default();
+    check("f_sp-bounded", 300, |rng| {
+        let i = rng.range(-1e-7, 1e-6);
+        let f = neuron::f_sp(i, &cfg);
+        ensure(f >= 0.0, "negative frequency")?;
+        ensure(
+            f <= neuron::f_max(&cfg) * (1.0 + 1e-9),
+            "above f_max",
+        )
+    });
+}
+
+#[test]
+fn prop_settling_time_decreases_with_code() {
+    let cfg = ChipConfig {
+        active_mirror: false, // boost makes settling non-monotone at the S1 edge
+        ..ChipConfig::default()
+    };
+    check("settling-monotone", 200, |rng| {
+        let a = 1 + rng.usize(1023) as u16;
+        let b = 1 + rng.usize(1023) as u16;
+        let ta = mirror::settling_time(a, &cfg);
+        let tb = mirror::settling_time(b, &cfg);
+        ensure((a < b) == (ta > tb) || a == b, format!("codes {a},{b}: {ta},{tb}").as_str())
+    });
+}
+
+#[test]
+fn prop_spi_frame_roundtrip() {
+    check("spi-frame", 300, |rng| {
+        let addr = rng.usize(128) as u8;
+        let data = rng.usize(1024) as u16;
+        let bits = spi::encode_frame(addr, data, 10);
+        let (a2, d2) = spi::decode_frame(&bits, 10);
+        ensure(a2 == addr && d2 == data, "frame corrupted")
+    });
+}
+
+#[test]
+fn prop_rotation_plan_covers_all_physical_weights() {
+    // at full virtual size (kN x kN), every physical weight must be
+    // reachable through the rotation scheme — the Fig. 11 claim
+    check("rotation-coverage", 30, |rng| {
+        let k = 2 + rng.usize(5);
+        let n = 2 + rng.usize(5);
+        let plan = RotationPlan::new(k, n, k * n, k * n).map_err(|e| e)?;
+        let cfg = ChipConfig::default().with_dims(k, n);
+        let chip = ChipModel::fabricate(cfg, rng.next_u64());
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..plan.d {
+            for j in 0..plan.l {
+                seen.insert(
+                    plan.virtual_weight(&chip.mismatch, i, j, 300.0).to_bits(),
+                );
+            }
+        }
+        ensure(
+            seen.len() == k * n,
+            &format!("covered {} of {} physical weights", seen.len(), k * n),
+        )
+    });
+}
+
+#[test]
+fn prop_virtual_chip_deterministic_and_dimension_correct() {
+    check("virtual-chip-shape", 20, |rng| {
+        let k = 4 + rng.usize(4);
+        let n = 4 + rng.usize(4);
+        let d = 1 + rng.usize(k * n);
+        let l = 1 + rng.usize(k * n);
+        let cfg = ChipConfig::default().with_dims(k, n).with_b(10);
+        let seed = rng.next_u64();
+        let mut a = velm::extension::VirtualChip::new(
+            ChipModel::fabricate(cfg.clone(), seed), d, l,
+        )
+        .map_err(|e| e)?;
+        let mut b = velm::extension::VirtualChip::new(
+            ChipModel::fabricate(cfg, seed), d, l,
+        )
+        .map_err(|e| e)?;
+        let codes: Vec<u16> = (0..d).map(|_| rng.usize(1024) as u16).collect();
+        let ha = a.forward(&codes);
+        let hb = b.forward(&codes);
+        ensure(ha.len() == l, "wrong virtual width")?;
+        ensure(ha == hb, "nondeterministic virtual forward")
+    });
+}
+
+#[test]
+fn prop_ridge_residual_optimality() {
+    // beta from ridge_solve must beat random perturbations of itself on
+    // the regularised objective
+    check("ridge-optimal", 40, |rng| {
+        let n = 20 + rng.usize(30);
+        let l = 3 + rng.usize(8);
+        let h = Mat::from_fn(n, l, |_, _| rng.gaussian());
+        let t = Mat::from_fn(n, 1, |_, _| rng.gaussian());
+        let lam = rng.range(1e-4, 1.0);
+        let beta = ridge_solve(&h, &t, lam).map_err(|e| e)?;
+        let obj = |b: &Mat| {
+            let r = h.matmul(b);
+            let mut s = 0.0;
+            for i in 0..n {
+                let d = r.get(i, 0) - t.get(i, 0);
+                s += d * d;
+            }
+            s + lam * b.frob_norm() * b.frob_norm()
+        };
+        let base = obj(&beta);
+        for _ in 0..5 {
+            let mut pert = beta.clone();
+            let j = rng.usize(l);
+            pert.set(j, 0, pert.get(j, 0) + rng.normal(0.0, 0.1));
+            ensure(obj(&pert) >= base - 1e-9, "perturbation beat the optimum")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_chip_forward_deterministic_without_noise() {
+    check("chip-deterministic", 20, |rng| {
+        let cfg = ChipConfig::default().with_dims(8, 8);
+        let seed = rng.next_u64();
+        let codes: Vec<u16> = (0..8).map(|_| rng.usize(1024) as u16).collect();
+        let mut a = ChipModel::fabricate(cfg.clone(), seed);
+        let mut b = ChipModel::fabricate(cfg, seed);
+        ensure(a.forward(&codes) == b.forward(&codes), "nondeterministic forward")
+    });
+}
+
+#[test]
+fn prop_linear_mode_superposition_upper_bound() {
+    // in linear mode (pre-saturation), H(x1 + x2) >= H(x1) and the
+    // column current is additive: counts can only grow with extra input
+    check("linear-superposition", 30, |rng| {
+        let cfg = ChipConfig::default()
+            .with_dims(8, 8)
+            .with_mode(Transfer::Linear)
+            .with_b(14);
+        let mut chip = ChipModel::fabricate(cfg, rng.next_u64());
+        let base: Vec<u16> = (0..8).map(|_| rng.usize(512) as u16).collect();
+        let more: Vec<u16> = base.iter().map(|&c| c + rng.usize(511) as u16).collect();
+        let h1 = chip.forward(&base);
+        let h2 = chip.forward(&more);
+        for j in 0..8 {
+            ensure(h2[j] >= h1[j], &format!("count shrank at {j}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dataset_generators_valid_for_any_seed() {
+    check("datasets-valid", 8, |rng| {
+        let seed = rng.next_u64();
+        velm::datasets::synth::diabetes(seed).validate()?;
+        velm::datasets::synth::brightdata(seed)
+            .with_test_subsample(50, seed)
+            .validate()?;
+        velm::datasets::synth::sinc(100, 50, 0.2, seed).validate().map_err(|e| e)
+    });
+}

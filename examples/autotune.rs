@@ -1,0 +1,146 @@
+//! Closed-loop autotune-then-serve (DESIGN.md §10): run the Fig. 7
+//! design-space exploration on a workload, extract the Pareto front over
+//! error / energy / latency / throughput, pick an operating point (knee
+//! by default, weighted with `--weights`), and boot the serving
+//! coordinator at exactly that point.
+//!
+//!     cargo run --release --example autotune [-- --dataset brightdata]
+//!
+//! This is the paper's methodology used as a *self-configuration* step:
+//! the sweep that produced Fig. 7 now chooses how the fleet runs.
+
+use std::time::Instant;
+
+use velm::bench::Table;
+use velm::cli::Args;
+use velm::config::{ChipConfig, SystemConfig};
+use velm::coordinator::Coordinator;
+use velm::datasets::{synth, Dataset};
+use velm::dse::{self, Explorer, Objective, SearchSpace};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
+    let name = args.get_or("dataset", "brightdata");
+    let seed = args.get_u64("seed", 1).map_err(anyhow::Error::msg)?;
+    let ds = synth::by_name(&name, seed)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {name}"))?;
+
+    // Tune on a validation split carved out of the *training* data, so
+    // the final test-set accuracy below is reported on rows the tuner
+    // never saw (no operating-point selection leakage).
+    let n_fit = ds.n_train() * 4 / 5;
+    let tune_ds = Dataset {
+        name: format!("{name}-tune"),
+        train_x: ds.train_x[..n_fit].to_vec(),
+        train_y: ds.train_y[..n_fit].to_vec(),
+        test_x: ds.train_x[n_fit..].to_vec(),
+        test_y: ds.train_y[n_fit..].to_vec(),
+    };
+
+    // --- explore: a compact space so the example runs in seconds ---
+    let space = SearchSpace {
+        sigma_vt: (0.005, 0.045),
+        ratio: (0.5, 1.25),
+        sigma_steps: 4,
+        ratio_steps: 3,
+        b: vec![8, 10],
+        l: vec![32, 64],
+        batch: vec![1, 8, 32],
+    };
+    let mut objective = Objective::new(&tune_ds, 2, seed);
+    objective.max_train = 400;
+    objective.max_val = 200;
+    println!(
+        "exploring {} candidates/round x 2 rounds on {name} (d={}, {} fit / {} validation) ...",
+        space.grid_size(),
+        ds.d(),
+        tune_ds.n_train(),
+        tune_ds.n_test()
+    );
+    let t0 = Instant::now();
+    let explorer = Explorer {
+        space,
+        objective,
+        rounds: 2,
+        threads: dse::default_threads(),
+    };
+    let result = explorer.run();
+    println!(
+        "explored {} points in {:.1} s ({} cache hits)",
+        result.evals.len(),
+        t0.elapsed().as_secs_f64(),
+        result.cache_hits
+    );
+
+    // --- select: print the front, take the knee (or weighted pick) ---
+    let knee = result.knee.expect("non-empty space");
+    let selected = match args.get_f64_list("weights").map_err(anyhow::Error::msg)? {
+        Some(w) => {
+            if w.len() != 4 {
+                anyhow::bail!(
+                    "--weights wants 4 values (error,energy,latency,throughput), got {}",
+                    w.len()
+                );
+            }
+            result.select(&[w[0], w[1], w[2], w[3]]).unwrap_or(knee)
+        }
+        None => knee,
+    };
+    let mut table = Table::new(&[
+        "sigma_VT (mV)",
+        "ratio",
+        "b",
+        "L",
+        "batch",
+        "error",
+        "pJ/MAC",
+        "kcls/s",
+        "",
+    ]);
+    let mut front = result.front.clone();
+    front.sort_by(|a, b| a.error.partial_cmp(&b.error).unwrap());
+    for e in front.iter().take(12) {
+        table.row(&[
+            format!("{:.1}", e.point.sigma_vt * 1e3),
+            format!("{:.2}", e.point.ratio),
+            format!("{}", e.point.b),
+            format!("{}", e.point.l),
+            format!("{}", e.point.batch),
+            format!("{:.4}", e.error),
+            format!("{:.3}", e.energy_pj_per_mac),
+            format!("{:.1}", e.throughput_cps / 1e3),
+            if e.point == selected.point { "<- selected".into() } else { String::new() },
+        ]);
+    }
+    println!("Pareto front (top rows by error, {} total):", front.len());
+    table.print();
+    println!("selected: {}", selected.point);
+    println!("{}", ChipConfig::from_operating_point(&selected.point, ds.d()).summary());
+
+    // --- deploy: boot the coordinator at the selected point ---
+    let sys = SystemConfig {
+        n_chips: 2,
+        artifact_dir: args.get_or("artifacts", "artifacts"),
+        ..Default::default()
+    };
+    println!("\ntraining {} dies at the selected operating point ...", sys.n_chips);
+    let coord = Coordinator::start_tuned(&sys, &selected.point, &ds.train_x, &ds.train_y, 0.1, 10)?;
+    let n_eval = ds.n_test().min(400);
+    let mut correct = 0usize;
+    let t1 = Instant::now();
+    for (x, &y) in ds.test_x.iter().take(n_eval).zip(&ds.test_y) {
+        let resp = coord.classify(x.clone())?;
+        if (resp.label as f64 - y).abs() < 1e-9 {
+            correct += 1;
+        }
+    }
+    let wall = t1.elapsed().as_secs_f64();
+    println!(
+        "served {n_eval} requests at the tuned point: {:.2}% error, {:.0} cls/s wall-clock",
+        (1.0 - correct as f64 / n_eval as f64) * 100.0,
+        n_eval as f64 / wall
+    );
+    println!("metrics: {}", coord.metrics.report());
+    coord.shutdown();
+    Ok(())
+}

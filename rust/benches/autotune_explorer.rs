@@ -1,0 +1,86 @@
+//! Autotuner performance: cost of one design-point evaluation, one
+//! refinement round, and the cache's effect on repeated tunes — the
+//! numbers that set how often a fleet can re-tune per workload shift.
+//!
+//!     cargo bench --bench autotune_explorer [-- --quick]
+
+use velm::bench::{bench, section, Table};
+use velm::datasets::synth;
+use velm::dse::{self, EvalCache, Explorer, Objective, OperatingPoint, SearchSpace};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let ds = synth::sinc(600, 256, 0.2, 1);
+    let trials = if quick { 1 } else { 2 };
+
+    section("single-point evaluation (FastSim fit + energy/timing models)");
+    let paper_point = OperatingPoint {
+        sigma_vt: 0.016,
+        ratio: 0.75,
+        b: 14,
+        l: 64,
+        batch: 16,
+    };
+    let mut objective = Objective::new(&ds, trials, 3);
+    objective.max_train = if quick { 200 } else { 400 };
+    bench("objective.evaluate (L=64)", 0.5, || {
+        std::hint::black_box(objective.evaluate(&paper_point));
+    });
+
+    section("one refinement round vs cached re-tune");
+    let space = SearchSpace {
+        sigma_vt: (0.005, 0.045),
+        ratio: (0.75, 0.75),
+        sigma_steps: if quick { 3 } else { 5 },
+        ratio_steps: 1,
+        b: vec![10, 14],
+        l: vec![32, 64],
+        batch: vec![1, 16],
+    };
+    let threads = dse::default_threads();
+    let explorer = Explorer {
+        space,
+        objective: Objective::new(&ds, trials, 3),
+        rounds: 1,
+        threads,
+    };
+    let cache = EvalCache::new();
+    let t0 = std::time::Instant::now();
+    let result = explorer.run_with_cache(&cache);
+    let cold = t0.elapsed().as_secs_f64();
+    println!(
+        "cold tune: {} points in {:.2} s on {threads} threads",
+        result.evals.len(),
+        cold
+    );
+
+    // warm: the whole tune again through the shared cache
+    let t1 = std::time::Instant::now();
+    let warm_result = explorer.run_with_cache(&cache);
+    let warm = t1.elapsed().as_secs_f64();
+    println!(
+        "warm tune: {} points in {:.4} s ({} cumulative hits) — {:.0}x faster",
+        warm_result.evals.len(),
+        warm,
+        cache.hits(),
+        if warm > 0.0 { cold / warm } else { f64::INFINITY }
+    );
+
+    section("front summary");
+    let mut t = Table::new(&["sigma_VT (mV)", "ratio", "b", "L", "batch", "error", "pJ/MAC"]);
+    for e in result.front.iter().take(8) {
+        t.row(&[
+            format!("{:.1}", e.point.sigma_vt * 1e3),
+            format!("{:.2}", e.point.ratio),
+            format!("{}", e.point.b),
+            format!("{}", e.point.l),
+            format!("{}", e.point.batch),
+            format!("{:.4}", e.error),
+            format!("{:.3}", e.energy_pj_per_mac),
+        ]);
+    }
+    t.print();
+    if let Some(k) = result.knee {
+        println!("knee: {}", k.point);
+    }
+}

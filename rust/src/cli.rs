@@ -74,6 +74,36 @@ impl Args {
             Some(v) => v.parse().map_err(|e| format!("--{name}: {e}")),
         }
     }
+
+    /// Comma-separated list option of any parseable type. `None` when
+    /// the option is absent; parse errors name the option and token.
+    pub fn get_list<T: std::str::FromStr>(&self, name: &str) -> Result<Option<Vec<T>>, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse::<T>()
+                        .map_err(|e| format!("--{name}: '{t}': {e}"))
+                })
+                .collect::<Result<Vec<_>, _>>()
+                .map(Some),
+        }
+    }
+
+    /// `get_list::<usize>`, e.g. `--l 32,64,128`.
+    pub fn get_usize_list(&self, name: &str) -> Result<Option<Vec<usize>>, String> {
+        self.get_list(name)
+    }
+
+    /// `get_list::<f64>`, e.g. `--weights 1,0.5,0.2,0`.
+    pub fn get_f64_list(&self, name: &str) -> Result<Option<Vec<f64>>, String> {
+        self.get_list(name)
+    }
 }
 
 #[cfg(test)]
@@ -108,6 +138,18 @@ mod tests {
         assert_eq!(a.get_f64("x", 0.0).unwrap(), 2.5);
         assert_eq!(a.get_f64("missing", 7.0).unwrap(), 7.0);
         assert!(Args::parse(toks("cmd --x abc")).unwrap().get_f64("x", 0.0).is_err());
+    }
+
+    #[test]
+    fn list_getters_parse_and_report_errors() {
+        let a = Args::parse(toks("tune --l 32,64,128 --weights 1,0.5,0")).unwrap();
+        assert_eq!(a.get_usize_list("l").unwrap(), Some(vec![32, 64, 128]));
+        assert_eq!(a.get_f64_list("weights").unwrap(), Some(vec![1.0, 0.5, 0.0]));
+        assert_eq!(a.get_list::<u32>("l").unwrap(), Some(vec![32u32, 64, 128]));
+        assert_eq!(a.get_usize_list("missing").unwrap(), None);
+        let bad = Args::parse(toks("tune --l 32,abc")).unwrap();
+        let err = bad.get_usize_list("l").unwrap_err();
+        assert!(err.contains("--l") && err.contains("abc"));
     }
 
     #[test]

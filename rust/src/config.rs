@@ -16,6 +16,25 @@ pub fn thermal_voltage(t_k: f64) -> f64 {
     0.02585 * t_k / 300.0
 }
 
+/// Iterate the `key = value` lines of a TOML-subset config text:
+/// strips `#` comments, skips blanks and `[section]` headers, yields
+/// (1-based line number, key, value) or a per-line error. Shared by
+/// `ChipConfig::from_kv` and `dse::OperatingPoint::from_kv` so the two
+/// parsers cannot drift.
+pub fn kv_lines(text: &str) -> impl Iterator<Item = Result<(usize, &str, &str), String>> + '_ {
+    text.lines().enumerate().filter_map(|(lineno, raw)| {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() || line.starts_with('[') {
+            return None;
+        }
+        Some(
+            line.split_once('=')
+                .map(|(k, v)| (lineno + 1, k.trim(), v.trim()))
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1)),
+        )
+    })
+}
+
 /// Neuron transfer shape: eq. 8 (quadratic) or its eq. 9 linearisation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Transfer {
@@ -214,21 +233,28 @@ impl ChipConfig {
         self
     }
 
+    /// Instantiate the chip side of an autotuned operating point (the
+    /// dse explorer's selection): mismatch sigma, saturation ratio,
+    /// counter bits and hidden width from the point; input dimension
+    /// from the workload. Everything else stays at Table I nominals.
+    /// The serving-side half of the point (batch size) is applied by
+    /// `Coordinator::start_tuned`.
+    pub fn from_operating_point(op: &crate::dse::OperatingPoint, d: usize) -> Self {
+        ChipConfig::default()
+            .with_dims(d, op.l.max(1))
+            .with_b(op.b)
+            .with_sigma_vt(op.sigma_vt)
+            .with_sat_ratio(op.ratio)
+    }
+
     /// Parse a `key = value` file (lines; `#` comments; TOML subset).
     pub fn from_kv(text: &str) -> Result<Self, String> {
         let mut cfg = ChipConfig::default();
-        for (lineno, raw) in text.lines().enumerate() {
-            let line = raw.split('#').next().unwrap_or("").trim();
-            if line.is_empty() || line.starts_with('[') {
-                continue;
-            }
-            let (k, v) = line
-                .split_once('=')
-                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
-            let (k, v) = (k.trim(), v.trim());
+        for item in kv_lines(text) {
+            let (lineno, k, v) = item?;
             let fv = || -> Result<f64, String> {
                 v.parse::<f64>()
-                    .map_err(|e| format!("line {}: bad float {v}: {e}", lineno + 1))
+                    .map_err(|e| format!("line {lineno}: bad float {v}: {e}"))
             };
             match k {
                 "d" => cfg.d = fv()? as usize,
@@ -259,10 +285,10 @@ impl ChipConfig {
                     cfg.mode = match v.trim_matches('"') {
                         "quadratic" => Transfer::Quadratic,
                         "linear" => Transfer::Linear,
-                        other => return Err(format!("line {}: bad mode {other}", lineno + 1)),
+                        other => return Err(format!("line {lineno}: bad mode {other}")),
                     }
                 }
-                other => return Err(format!("line {}: unknown key {other}", lineno + 1)),
+                other => return Err(format!("line {lineno}: unknown key {other}")),
             }
         }
         Ok(cfg)
@@ -390,6 +416,25 @@ mod tests {
         assert_eq!(c.mode, Transfer::Linear);
         assert!(c.noise_en);
         assert!((c.vdd - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_operating_point_applies_all_axes() {
+        let op = crate::dse::OperatingPoint {
+            sigma_vt: 0.022,
+            ratio: 0.6,
+            b: 8,
+            l: 96,
+            batch: 32,
+        };
+        let c = ChipConfig::from_operating_point(&op, 14);
+        assert_eq!((c.d, c.l, c.b), (14, 96, 8));
+        assert!((c.sigma_vt - 0.022).abs() < 1e-15);
+        assert!((c.sat_ratio - 0.6).abs() < 1e-15);
+        // derived quantities stay consistent: T_neu set so H = 2^b at
+        // I_sat^z = ratio * d * I_max
+        let t = c.cap() as f64 / (c.k_neu() * 0.6 * 14.0 * c.i_max);
+        assert!((c.t_neu() - t).abs() / t < 1e-12);
     }
 
     #[test]

@@ -104,6 +104,29 @@ impl Coordinator {
         Ok(Coordinator { router, metrics, next_id: AtomicU64::new(0), workers, d })
     }
 
+    /// Start serving at an autotuned [`OperatingPoint`]
+    /// (`velm tune` / `dse::Explorer` output): the point fixes the chip
+    /// config (sigma_VT, saturation ratio, counter bits, hidden width)
+    /// via `ChipConfig::from_operating_point` and the dynamic batcher's
+    /// max batch — the closed loop from Fig. 7's methodology to the
+    /// serving fleet.
+    ///
+    /// [`OperatingPoint`]: crate::dse::OperatingPoint
+    pub fn start_tuned(
+        sys: &SystemConfig,
+        op: &crate::dse::OperatingPoint,
+        train_x: &[Vec<f64>],
+        train_y: &[f64],
+        lambda: f64,
+        beta_bits: u32,
+    ) -> Result<Coordinator> {
+        let d = train_x.first().map_or(1, |x| x.len());
+        let chip_cfg = ChipConfig::from_operating_point(op, d);
+        let mut sys = sys.clone();
+        sys.max_batch = op.batch.max(1);
+        Coordinator::start(&sys, &chip_cfg, train_x, train_y, lambda, beta_bits)
+    }
+
     /// Submit one request; returns the receiver for its response.
     pub fn submit(&self, features: Vec<f64>) -> Result<mpsc::Receiver<ClassifyResponse>> {
         anyhow::ensure!(
@@ -209,6 +232,29 @@ mod tests {
         ids.sort_unstable();
         ids.dedup();
         assert_eq!(ids.len(), 40, "lost or duplicated responses");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn start_tuned_applies_operating_point() {
+        let (sys, _, xs, ys) = tiny_system();
+        let op = crate::dse::OperatingPoint {
+            sigma_vt: 0.016,
+            ratio: 0.75,
+            b: 10,
+            l: 24,
+            batch: 4,
+        };
+        let coord = Coordinator::start_tuned(&sys, &op, &xs, &ys, 1e-2, 10).unwrap();
+        assert_eq!(coord.d, 6); // input dim follows the workload
+        let mut correct = 0;
+        for (x, &y) in xs.iter().take(40).zip(&ys) {
+            let resp = coord.classify(x.clone()).unwrap();
+            if (resp.label as f64 - y).abs() < 1e-9 {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 30, "only {correct}/40 correct at tuned point");
         coord.shutdown();
     }
 

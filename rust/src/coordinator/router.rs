@@ -136,6 +136,61 @@ mod tests {
     }
 
     #[test]
+    fn round_robin_tiebreak_spreads_all_equal_loads() {
+        // with every load equal, the rotating start index must spread
+        // requests across ALL workers instead of piling onto worker 0
+        let (t0, _r0) = mpsc::channel();
+        let (t1, _r1) = mpsc::channel();
+        let (t2, _r2) = mpsc::channel();
+        let router = Router::new(vec![t0, t1, t2]);
+        let mut counts = [0usize; 3];
+        for i in 0..9 {
+            let w = router.route(req(i)).unwrap();
+            counts[w] += 1;
+            router.outstanding.dec(w); // complete immediately: stay tied
+        }
+        assert_eq!(counts, [3, 3, 3], "{counts:?}");
+    }
+
+    #[test]
+    fn routes_to_global_minimum_under_skewed_load() {
+        // loads [3, 1, 2]: every new request must land on worker 1
+        // until it catches up with worker 2
+        let (t0, _r0) = mpsc::channel();
+        let (t1, _r1) = mpsc::channel();
+        let (t2, _r2) = mpsc::channel();
+        let router = Router::new(vec![t0, t1, t2]);
+        for _ in 0..3 {
+            router.outstanding.inc(0);
+        }
+        router.outstanding.inc(1);
+        router.outstanding.inc(2);
+        router.outstanding.inc(2);
+        for i in 0..8 {
+            // worker 1 is the unique minimum every time because each
+            // request completes (dec) before the next arrives
+            let w = router.route(req(i)).unwrap();
+            assert_eq!(w, 1, "request {i} should go to the least-loaded worker");
+            router.outstanding.dec(w);
+        }
+    }
+
+    #[test]
+    fn outstanding_tracks_inflight_work() {
+        let (t0, _r0) = mpsc::channel();
+        let (t1, _r1) = mpsc::channel();
+        let router = Router::new(vec![t0, t1]);
+        for i in 0..6 {
+            router.route(req(i)).unwrap();
+        }
+        let total: usize = (0..2).map(|w| router.outstanding.load(w)).sum();
+        assert_eq!(total, 6, "every routed request must be counted in-flight");
+        router.outstanding.dec(0);
+        let total: usize = (0..2).map(|w| router.outstanding.load(w)).sum();
+        assert_eq!(total, 5);
+    }
+
+    #[test]
     fn dead_worker_reports_error() {
         let (t0, r0) = mpsc::channel();
         drop(r0);

@@ -1,0 +1,197 @@
+//! Memoisation of design-point evaluations: the explorer's refinement
+//! rounds revisit grid points (the shrunk region is seeded on the old
+//! knee) and repeated tunes of the same workload re-ask the same
+//! questions (share a cache via `Explorer::run_with_cache`), so
+//! evaluations are cached under a *quantised* key — two floating-point
+//! operating points that round to the same 0.1 mV / 1e-3-ratio cell
+//! share one evaluation, while different workloads, seeds or objective
+//! settings (the context tag) never do.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::dse::explorer::OperatingPoint;
+use crate::dse::objective::Evaluation;
+
+/// Quantised operating point + evaluation-context tag: the cache key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PointKey {
+    /// sigma_VT in 0.1 mV steps.
+    pub sigma_q: u32,
+    /// Saturation ratio in 1e-3 steps.
+    pub ratio_q: u32,
+    pub b: u32,
+    pub l: usize,
+    pub batch: usize,
+    /// Evaluation-context tag (`Objective::cache_tag`): different
+    /// seeds, workloads or objective settings never share entries.
+    pub tag: u64,
+}
+
+impl PointKey {
+    pub fn quantize(op: &OperatingPoint, tag: u64) -> Self {
+        PointKey {
+            sigma_q: (op.sigma_vt * 1e4).round() as u32,
+            ratio_q: (op.ratio * 1e3).round() as u32,
+            b: op.b,
+            l: op.l,
+            batch: op.batch,
+            tag,
+        }
+    }
+}
+
+/// Thread-safe evaluation memo with hit/miss counters. Shared by the
+/// explorer's `par_map` workers: the map lock is held only for the
+/// lookup and the insert, never during an evaluation, so concurrent
+/// misses evaluate in parallel (a point raced by two workers is simply
+/// computed twice — evaluations are deterministic, so both insert the
+/// same value).
+pub struct EvalCache {
+    map: Mutex<HashMap<PointKey, Evaluation>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl EvalCache {
+    pub fn new() -> Self {
+        EvalCache {
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Return the cached evaluation for `op` under the given context
+    /// tag ([`Objective::cache_tag`](crate::dse::Objective::cache_tag)
+    /// in the explorer), or compute it with `f` (outside the lock) and
+    /// remember it.
+    pub fn get_or_eval(
+        &self,
+        op: &OperatingPoint,
+        tag: u64,
+        f: impl FnOnce(&OperatingPoint) -> Evaluation,
+    ) -> Evaluation {
+        let key = PointKey::quantize(op, tag);
+        if let Some(e) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return *e;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let e = f(op);
+        self.map.lock().unwrap().insert(key, e);
+        e
+    }
+}
+
+impl Default for EvalCache {
+    fn default() -> Self {
+        EvalCache::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn op(sigma_mv: f64) -> OperatingPoint {
+        OperatingPoint {
+            sigma_vt: sigma_mv * 1e-3,
+            ratio: 0.75,
+            b: 10,
+            l: 64,
+            batch: 1,
+        }
+    }
+
+    fn fake_eval(p: &OperatingPoint, error: f64) -> Evaluation {
+        Evaluation {
+            point: *p,
+            error,
+            energy_pj_per_mac: 1.0,
+            latency_s: 1e-4,
+            throughput_cps: 1e4,
+        }
+    }
+
+    #[test]
+    fn second_lookup_is_a_hit_and_skips_eval() {
+        let cache = EvalCache::new();
+        let mut calls = 0;
+        let p = op(16.0);
+        let a = cache.get_or_eval(&p, 1, |q| {
+            calls += 1;
+            fake_eval(q, 0.1)
+        });
+        let b = cache.get_or_eval(&p, 1, |q| {
+            calls += 1;
+            fake_eval(q, 0.9) // would differ if recomputed
+        });
+        assert_eq!(calls, 1);
+        assert_eq!(a.error, b.error);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn quantisation_merges_nearby_points() {
+        let cache = EvalCache::new();
+        // 16.00 mV and 16.02 mV round to the same 0.1 mV cell
+        cache.get_or_eval(&op(16.00), 1, |q| fake_eval(q, 0.1));
+        cache.get_or_eval(&op(16.02), 1, |q| fake_eval(q, 0.2));
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.hits(), 1);
+        // 16.3 mV is a different cell
+        cache.get_or_eval(&op(16.3), 1, |q| fake_eval(q, 0.3));
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn seed_and_discrete_axes_separate_keys() {
+        let cache = EvalCache::new();
+        let p = op(16.0);
+        cache.get_or_eval(&p, 1, |q| fake_eval(q, 0.1));
+        cache.get_or_eval(&p, 2, |q| fake_eval(q, 0.1));
+        let mut p2 = p;
+        p2.b = 8;
+        cache.get_or_eval(&p2, 1, |q| fake_eval(q, 0.1));
+        let mut p3 = p;
+        p3.batch = 64;
+        cache.get_or_eval(&p3, 1, |q| fake_eval(q, 0.1));
+        assert_eq!(cache.len(), 4);
+        assert_eq!(cache.hits(), 0);
+    }
+
+    #[test]
+    fn concurrent_access_from_par_map() {
+        let cache = EvalCache::new();
+        let points: Vec<OperatingPoint> = (0..64).map(|k| op(5.0 + (k % 8) as f64)).collect();
+        let out = crate::dse::par_map(points, 8, |p| {
+            cache.get_or_eval(&p, 9, |q| fake_eval(q, q.sigma_vt))
+        });
+        assert_eq!(out.len(), 64);
+        // 8 distinct sigma cells; racing workers may compute a cell twice
+        // but the cache never grows past the distinct-key count
+        assert_eq!(cache.len(), 8);
+        assert_eq!(cache.hits() + cache.misses(), 64);
+        assert!(cache.misses() >= 8);
+    }
+}

@@ -1,0 +1,461 @@
+//! The "explore" half of the autotuner: a grid sweep over the Fig. 7
+//! design axes (sigma_VT × I_sat/I_max ratio × counter bits b × hidden
+//! width L × serving batch size) with adaptive refinement — after each
+//! round the continuous axes (sigma_VT, ratio) shrink around the current
+//! knee point, so later rounds spend their evaluations near the optimum.
+//! Evaluations run through [`par_map`](crate::dse::par_map) and are
+//! memoised in an [`EvalCache`], making refinement overlap and repeated
+//! tunes free.
+
+use std::fmt;
+
+use crate::dse::cache::{EvalCache, PointKey};
+use crate::dse::objective::{Evaluation, Objective};
+use crate::dse::{par_map, pareto};
+
+/// One candidate configuration of chip + serving stack: everything the
+/// design-space exploration is allowed to choose. Flows into
+/// `ChipConfig::from_operating_point` and `Coordinator::start_tuned`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OperatingPoint {
+    /// Threshold-voltage mismatch sigma [V] (Fig. 7a sweep: 5–45 mV;
+    /// a *design* choice through transistor sizing, paper Section III).
+    pub sigma_vt: f64,
+    /// I_sat^z / I_max^z saturation ratio (Fig. 7a optimum ~0.75).
+    pub ratio: f64,
+    /// Counter bits b (Fig. 7c: 6–14).
+    pub b: u32,
+    /// Hidden-layer width L (physical or rotation-extended).
+    pub l: usize,
+    /// Serving batch size handed to the coordinator's dynamic batcher.
+    pub batch: usize,
+}
+
+impl OperatingPoint {
+    /// Serialise as the `key = value` subset `ChipConfig::from_kv`
+    /// understands (plus the serving-side `batch`).
+    pub fn to_kv(&self) -> String {
+        format!(
+            "sigma_vt = {}\nsat_ratio = {}\nb = {}\nl = {}\nbatch = {}\n",
+            self.sigma_vt, self.ratio, self.b, self.l, self.batch
+        )
+    }
+
+    /// Parse the `to_kv` format back (unknown keys are errors).
+    /// Comment/section handling is shared with `ChipConfig::from_kv`
+    /// ([`kv_lines`](crate::config::kv_lines)), and later sections
+    /// override earlier ones — so parsing a whole `velm tune --out`
+    /// file yields its final `[selected]` section.
+    pub fn from_kv(text: &str) -> Result<Self, String> {
+        let mut op = OperatingPoint {
+            sigma_vt: 0.016,
+            ratio: 0.75,
+            b: 14,
+            l: 128,
+            batch: 1,
+        };
+        let mut any_key = false;
+        for item in crate::config::kv_lines(text) {
+            let (lineno, k, v) = item?;
+            let fv = || -> Result<f64, String> {
+                v.parse::<f64>()
+                    .map_err(|e| format!("line {lineno}: bad value {v}: {e}"))
+            };
+            match k {
+                "sigma_vt" => op.sigma_vt = fv()?,
+                "sat_ratio" => op.ratio = fv()?,
+                "b" => op.b = fv()? as u32,
+                "l" => op.l = fv()? as usize,
+                "batch" => op.batch = fv()? as usize,
+                other => return Err(format!("line {lineno}: unknown key {other}")),
+            }
+            any_key = true;
+        }
+        if !any_key {
+            // an empty / comments-only / headers-only file almost
+            // certainly isn't the point the caller meant to load
+            return Err("no operating-point keys found".into());
+        }
+        Ok(op)
+    }
+}
+
+impl fmt::Display for OperatingPoint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "sigma_VT={:.1} mV, ratio={:.3}, b={}, L={}, batch={}",
+            self.sigma_vt * 1e3,
+            self.ratio,
+            self.b,
+            self.l,
+            self.batch
+        )
+    }
+}
+
+/// The searchable region: continuous ranges for sigma_VT and the
+/// saturation ratio (gridded `*_steps` wide per round), explicit grids
+/// for the discrete axes. Defaults mirror the paper's Fig. 7 sweeps.
+#[derive(Clone, Debug)]
+pub struct SearchSpace {
+    /// sigma_VT range [V] (Fig. 7a sweeps 5–45 mV).
+    pub sigma_vt: (f64, f64),
+    /// I_sat^z/I_max^z range (Fig. 7a sweeps 0.1–2.5; the extremes are
+    /// never competitive, so the default clips to the active region).
+    pub ratio: (f64, f64),
+    /// Grid points per round on the sigma axis (endpoints included).
+    pub sigma_steps: usize,
+    /// Grid points per round on the ratio axis (endpoints included).
+    pub ratio_steps: usize,
+    /// Counter-bit candidates.
+    pub b: Vec<u32>,
+    /// Hidden-width candidates.
+    pub l: Vec<usize>,
+    /// Serving batch-size candidates.
+    pub batch: Vec<usize>,
+}
+
+impl Default for SearchSpace {
+    fn default() -> Self {
+        SearchSpace {
+            sigma_vt: (0.005, 0.045),
+            ratio: (0.25, 1.5),
+            sigma_steps: 5,
+            ratio_steps: 4,
+            b: vec![6, 8, 10, 14],
+            l: vec![32, 64, 128],
+            batch: vec![1, 16, 64],
+        }
+    }
+}
+
+impl SearchSpace {
+    /// Candidate count of one round's grid.
+    pub fn grid_size(&self) -> usize {
+        self.sigma_steps.max(1)
+            * self.ratio_steps.max(1)
+            * self.b.len()
+            * self.l.len()
+            * self.batch.len()
+    }
+}
+
+/// Search region of one refinement round (continuous axes only).
+#[derive(Clone, Copy, Debug)]
+pub struct RegionSnapshot {
+    pub sigma_lo: f64,
+    pub sigma_hi: f64,
+    pub ratio_lo: f64,
+    pub ratio_hi: f64,
+}
+
+impl RegionSnapshot {
+    pub fn sigma_span(&self) -> f64 {
+        self.sigma_hi - self.sigma_lo
+    }
+
+    pub fn ratio_span(&self) -> f64 {
+        self.ratio_hi - self.ratio_lo
+    }
+}
+
+/// Inclusive linear grid over `[lo, hi]` with `n` points (n=1 -> midpoint).
+fn linspace(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+    let n = n.max(1);
+    if n == 1 {
+        return vec![0.5 * (lo + hi)];
+    }
+    (0..n)
+        .map(|k| lo + (hi - lo) * k as f64 / (n - 1) as f64)
+        .collect()
+}
+
+/// Everything one `run()` produced: the evaluated points, the front, the
+/// knee, the per-round search regions (shrinking — the refinement
+/// audit trail) and the cache counters.
+#[derive(Clone, Debug)]
+pub struct ExploreResult {
+    /// All distinct evaluated points, in evaluation order.
+    pub evals: Vec<Evaluation>,
+    /// The non-dominated subset of `evals`.
+    pub front: Vec<Evaluation>,
+    /// Knee of the front (None only when the space was empty).
+    pub knee: Option<Evaluation>,
+    /// Search region at the start of each round.
+    pub regions: Vec<RegionSnapshot>,
+    /// Cache counters — cumulative when a shared cache was passed to
+    /// [`Explorer::run_with_cache`].
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+impl ExploreResult {
+    /// "Pick for me" with explicit priorities over
+    /// `[error, energy, latency, -throughput]` (see
+    /// [`Evaluation::objectives`]). Scalarises over the already
+    /// extracted front — any weighting's optimum is a front member.
+    pub fn select(&self, weights: &[f64; 4]) -> Option<Evaluation> {
+        let objs: Vec<Vec<f64>> = self.front.iter().map(|e| e.objectives().to_vec()).collect();
+        let idx: Vec<usize> = (0..objs.len()).collect();
+        pareto::select_weighted(&objs, &idx, weights).map(|i| self.front[i])
+    }
+}
+
+/// The closed-loop explorer: grid → evaluate (parallel, memoised) →
+/// front → knee → shrink region → repeat.
+pub struct Explorer<'a> {
+    pub space: SearchSpace,
+    pub objective: Objective<'a>,
+    /// Refinement rounds (1 = plain grid sweep).
+    pub rounds: usize,
+    /// Worker threads for the evaluation fan-out.
+    pub threads: usize,
+}
+
+impl Explorer<'_> {
+    /// Run the exploration with a fresh per-run cache. Deterministic
+    /// for a fixed objective seed. Refinement rounds share the cache;
+    /// to also make *repeated tunes* free, hold an [`EvalCache`]
+    /// yourself and call [`run_with_cache`](Explorer::run_with_cache).
+    pub fn run(&self) -> ExploreResult {
+        self.run_with_cache(&EvalCache::new())
+    }
+
+    /// Run the exploration against a caller-owned cache, so successive
+    /// tunes of the same workload (same objective settings and seed —
+    /// enforced by [`Objective::cache_tag`] inside the key) skip every
+    /// previously evaluated point.
+    pub fn run_with_cache(&self, cache: &EvalCache) -> ExploreResult {
+        let tag = self.objective.cache_tag();
+        let mut evals: Vec<Evaluation> = Vec::new();
+        let mut seen: std::collections::HashSet<PointKey> = std::collections::HashSet::new();
+        let mut regions: Vec<RegionSnapshot> = Vec::new();
+        let (mut s_lo, mut s_hi) = self.space.sigma_vt;
+        let (mut r_lo, mut r_hi) = self.space.ratio;
+        let rounds = self.rounds.max(1);
+        for round in 0..rounds {
+            regions.push(RegionSnapshot {
+                sigma_lo: s_lo,
+                sigma_hi: s_hi,
+                ratio_lo: r_lo,
+                ratio_hi: r_hi,
+            });
+            let mut candidates: Vec<OperatingPoint> = Vec::new();
+            for &s in &linspace(s_lo, s_hi, self.space.sigma_steps) {
+                for &r in &linspace(r_lo, r_hi, self.space.ratio_steps) {
+                    for &b in &self.space.b {
+                        for &l in &self.space.l {
+                            for &batch in &self.space.batch {
+                                candidates.push(OperatingPoint {
+                                    sigma_vt: s,
+                                    ratio: r,
+                                    b,
+                                    l,
+                                    batch,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+            let objective = &self.objective;
+            let round_evals = par_map(candidates, self.threads.max(1), move |op| {
+                cache.get_or_eval(&op, tag, |p| objective.evaluate(p))
+            });
+            for e in round_evals {
+                // refinement rounds (and prior runs through a shared
+                // cache) revisit grid points; keep one copy
+                if seen.insert(PointKey::quantize(&e.point, tag)) {
+                    evals.push(e);
+                }
+            }
+            // shrink the continuous axes around the current knee: halve
+            // the span, clamp to the original space. The last round's
+            // shrink would never be used — skip its dominance pass.
+            if round + 1 == rounds {
+                break;
+            }
+            let objs: Vec<Vec<f64>> = evals.iter().map(|e| e.objectives().to_vec()).collect();
+            let front = pareto::front_indices(&objs);
+            if let Some(k) = pareto::knee_index(&objs, &front) {
+                let knee = evals[k].point;
+                let s_half = 0.25 * (s_hi - s_lo);
+                let r_half = 0.25 * (r_hi - r_lo);
+                s_lo = (knee.sigma_vt - s_half).max(self.space.sigma_vt.0);
+                s_hi = (knee.sigma_vt + s_half).min(self.space.sigma_vt.1);
+                r_lo = (knee.ratio - r_half).max(self.space.ratio.0);
+                r_hi = (knee.ratio + r_half).min(self.space.ratio.1);
+            }
+        }
+        let objs: Vec<Vec<f64>> = evals.iter().map(|e| e.objectives().to_vec()).collect();
+        let front_idx = pareto::front_indices(&objs);
+        let front: Vec<Evaluation> = front_idx.iter().map(|&i| evals[i]).collect();
+        let knee = pareto::knee_index(&objs, &front_idx).map(|i| evals[i]);
+        ExploreResult {
+            evals,
+            front,
+            knee,
+            regions,
+            cache_hits: cache.hits(),
+            cache_misses: cache.misses(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth;
+    use crate::dse::objective::Objective;
+
+    fn tiny_space() -> SearchSpace {
+        SearchSpace {
+            sigma_vt: (0.005, 0.045),
+            ratio: (0.75, 0.75),
+            sigma_steps: 3,
+            ratio_steps: 1,
+            b: vec![10],
+            l: vec![24],
+            batch: vec![1, 8],
+        }
+    }
+
+    fn tiny_objective(ds: &crate::datasets::Dataset) -> Objective<'_> {
+        let mut o = Objective::new(ds, 1, 7);
+        o.max_train = 120;
+        o
+    }
+
+    #[test]
+    fn linspace_endpoints_and_midpoint() {
+        assert_eq!(linspace(0.0, 1.0, 3), vec![0.0, 0.5, 1.0]);
+        assert_eq!(linspace(2.0, 4.0, 1), vec![3.0]);
+        let g = linspace(0.005, 0.045, 5);
+        assert_eq!(g.len(), 5);
+        assert!((g[0] - 0.005).abs() < 1e-15 && (g[4] - 0.045).abs() < 1e-15);
+    }
+
+    #[test]
+    fn operating_point_kv_round_trip() {
+        let op = OperatingPoint {
+            sigma_vt: 0.02,
+            ratio: 0.6,
+            b: 8,
+            l: 96,
+            batch: 32,
+        };
+        let parsed = OperatingPoint::from_kv(&op.to_kv()).unwrap();
+        assert_eq!(parsed, op);
+        assert!(OperatingPoint::from_kv("junk = 1").is_err());
+        assert!(OperatingPoint::from_kv("no-equals-here").is_err());
+        // an empty or headers/comments-only file is an error, not the
+        // silent default point
+        assert!(OperatingPoint::from_kv("").is_err());
+        assert!(OperatingPoint::from_kv("# note\n[selected]\n").is_err());
+        // a `velm tune --out` style file parses to its last section
+        let other = OperatingPoint { sigma_vt: 0.01, ratio: 1.0, b: 6, l: 8, batch: 2 };
+        let file = format!(
+            "# front then selected\n[front.0]\n{}\n[selected]\n{}",
+            other.to_kv(),
+            op.to_kv()
+        );
+        assert_eq!(OperatingPoint::from_kv(&file).unwrap(), op);
+    }
+
+    #[test]
+    fn refinement_shrinks_search_region() {
+        let ds = synth::sinc(200, 64, 0.2, 3);
+        let ex = Explorer {
+            space: tiny_space(),
+            objective: tiny_objective(&ds),
+            rounds: 3,
+            threads: 2,
+        };
+        let r = ex.run();
+        assert_eq!(r.regions.len(), 3);
+        for w in r.regions.windows(2) {
+            assert!(
+                w[1].sigma_span() < w[0].sigma_span(),
+                "sigma region did not shrink: {:?}",
+                r.regions
+            );
+            assert!(w[1].sigma_lo >= tiny_space().sigma_vt.0 - 1e-12);
+            assert!(w[1].sigma_hi <= tiny_space().sigma_vt.1 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn front_non_empty_and_within_space() {
+        let ds = synth::sinc(200, 64, 0.2, 4);
+        let ex = Explorer {
+            space: tiny_space(),
+            objective: tiny_objective(&ds),
+            rounds: 2,
+            threads: 2,
+        };
+        let r = ex.run();
+        assert!(!r.front.is_empty());
+        assert!(r.knee.is_some());
+        for e in &r.front {
+            assert!(e.point.sigma_vt >= 0.005 - 1e-12 && e.point.sigma_vt <= 0.045 + 1e-12);
+            assert_eq!(e.point.b, 10);
+        }
+        // refinement revisits the knee's grid point -> cache hits
+        assert!(r.cache_hits > 0, "expected cache hits across rounds");
+        // evals are distinct points
+        let mut keys: Vec<_> = r
+            .evals
+            .iter()
+            .map(|e| PointKey::quantize(&e.point, 7))
+            .collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), r.evals.len());
+    }
+
+    #[test]
+    fn shared_cache_makes_repeated_tunes_free() {
+        let ds = synth::sinc(200, 64, 0.2, 6);
+        let ex = Explorer {
+            space: tiny_space(),
+            objective: tiny_objective(&ds),
+            rounds: 2,
+            threads: 2,
+        };
+        let cache = EvalCache::new();
+        let r1 = ex.run_with_cache(&cache);
+        let (h1, m1) = (r1.cache_hits, r1.cache_misses);
+        let r2 = ex.run_with_cache(&cache);
+        // second tune evaluates nothing new and reproduces the result
+        assert_eq!(r2.cache_misses, m1, "repeat tune recomputed points");
+        assert!(r2.cache_hits > h1);
+        assert_eq!(r1.evals.len(), r2.evals.len());
+        assert_eq!(r1.knee.map(|k| k.point), r2.knee.map(|k| k.point));
+        // a differently configured objective must NOT share entries
+        let mut other = tiny_objective(&ds);
+        other.lambda *= 10.0;
+        let ex2 = Explorer { space: tiny_space(), objective: other, rounds: 1, threads: 2 };
+        let before = cache.len();
+        ex2.run_with_cache(&cache);
+        assert!(cache.len() > before, "different lambda aliased cached evals");
+    }
+
+    #[test]
+    fn select_honours_weights() {
+        let ds = synth::sinc(200, 64, 0.2, 5);
+        let ex = Explorer {
+            space: tiny_space(),
+            objective: tiny_objective(&ds),
+            rounds: 1,
+            threads: 2,
+        };
+        let r = ex.run();
+        // batch 1 and batch 8 trade latency against throughput; weighting
+        // one or the other must flip the selection's batch
+        let fast = r.select(&[0.0, 0.0, 1.0, 0.0]).expect("latency pick");
+        let wide = r.select(&[0.0, 0.0, 0.0, 1.0]).expect("throughput pick");
+        assert_eq!(fast.point.batch, 1);
+        assert_eq!(wide.point.batch, 8);
+    }
+}

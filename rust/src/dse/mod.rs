@@ -1,15 +1,30 @@
 //! Design-space exploration engine (Section III-D / IV): parallel grid
-//! sweeps over operating-point parameters, and the MATLAB-style fast ELM
+//! sweeps over operating-point parameters, the MATLAB-style fast ELM
 //! simulation the paper used for Fig. 7 (linear neuron, eq. 11 counter,
-//! log-normal mismatch with swept sigma_VT).
+//! log-normal mismatch with swept sigma_VT), and the closed-loop
+//! autotuner built on top of it ([`explorer`] → [`pareto`] →
+//! `ChipConfig::from_operating_point` → `Coordinator::start_tuned`;
+//! DESIGN.md §10).
 
+pub mod cache;
+pub mod explorer;
 pub mod lmin;
+pub mod objective;
+pub mod pareto;
+
+pub use cache::EvalCache;
+pub use explorer::{ExploreResult, Explorer, OperatingPoint, RegionSnapshot, SearchSpace};
+pub use objective::{Evaluation, Objective};
 
 use crate::util::mat::Mat;
 use crate::util::prng::Prng;
 
 /// Parallel map over work items using scoped std threads (no tokio in
 /// the offline vendor set). Order of results matches the input order.
+///
+/// Each result has its own slot cell, so finishing workers never contend
+/// on a whole-results lock — only the work queue is shared, and it is
+/// held just long enough to pop one item.
 pub fn par_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
 where
     T: Send,
@@ -18,10 +33,10 @@ where
 {
     let threads = threads.max(1);
     let n = items.len();
-    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let slots: Vec<std::sync::Mutex<Option<R>>> =
+        (0..n).map(|_| std::sync::Mutex::new(None)).collect();
     let work: Vec<(usize, T)> = items.into_iter().enumerate().collect();
     let queue = std::sync::Mutex::new(work);
-    let slots_mx = std::sync::Mutex::new(&mut slots);
     std::thread::scope(|s| {
         for _ in 0..threads.min(n.max(1)) {
             s.spawn(|| loop {
@@ -29,14 +44,17 @@ where
                 match item {
                     Some((i, t)) => {
                         let r = f(t);
-                        slots_mx.lock().unwrap()[i] = Some(r);
+                        *slots[i].lock().unwrap() = Some(r);
                     }
                     None => break,
                 }
             });
         }
     });
-    slots.into_iter().map(|s| s.expect("worker died")).collect()
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("worker died"))
+        .collect()
 }
 
 /// Default parallelism for sweeps.

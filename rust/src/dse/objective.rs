@@ -1,0 +1,352 @@
+//! Multi-objective scoring of one operating point — the "measure" stage
+//! between explore and select. Validation error runs through the paper's
+//! Section III-D fast simulation ([`FastSim`]); energy and timing come
+//! from the Section IV models (`chip::energy`, `chip::timing`) on the
+//! `ChipConfig` the operating point implies; serving latency/throughput
+//! add the digital second stage and the batcher's fixed dispatch cost,
+//! making the batch size a real trade-off axis (Ghaderi-style runtime
+//! power/accuracy knob, here chosen offline per workload).
+
+use crate::chip::{energy, timing};
+use crate::config::ChipConfig;
+use crate::datasets::Dataset;
+use crate::dse::explorer::OperatingPoint;
+use crate::dse::FastSim;
+use crate::elm::train::misclassification;
+use crate::util::mat::{ridge_solve, Mat};
+use crate::util::prng::Prng;
+use crate::util::stats;
+
+/// Per-sample digital second-stage MAC time folded into serving latency
+/// [s/MAC] (a 10-bit multiply-add per hidden unit at ~500 MHz).
+pub const T_MAC_DIGITAL: f64 = 2e-9;
+
+/// Fixed per-batch dispatch overhead of the serving pipeline [s]
+/// (batcher wakeup + routing + response fan-out, measured order).
+pub const T_BATCH_OVERHEAD: f64 = 20e-6;
+
+/// Error reported when the ridge system is unsolvable at a point
+/// (degenerate H). Large but finite so front normalisation stays sane.
+pub const UNSOLVABLE_ERROR: f64 = 1e3;
+
+/// The [`FastSim`] a given operating point implies (nominal K_neu/T_neu,
+/// swept mismatch / ratio / counter bits).
+pub fn fastsim_for(op: &OperatingPoint) -> FastSim {
+    FastSim {
+        sigma_vt: op.sigma_vt,
+        ratio: op.ratio,
+        b: op.b,
+        ..FastSim::default()
+    }
+}
+
+/// One scored design point. All fields are plain numbers so evaluations
+/// are `Copy` and cache cheaply.
+#[derive(Clone, Copy, Debug)]
+pub struct Evaluation {
+    pub point: OperatingPoint,
+    /// Mean validation error over the objective's trials
+    /// (misclassification rate for ±1 targets, RMSE for regression).
+    pub error: f64,
+    /// Section IV-C energy efficiency at this operating point [pJ/MAC].
+    pub energy_pj_per_mac: f64,
+    /// Modelled serving latency of one full batch [s].
+    pub latency_s: f64,
+    /// Modelled serving throughput [classifications/s].
+    pub throughput_cps: f64,
+}
+
+impl Evaluation {
+    /// Minimisation-oriented objective vector for the Pareto machinery:
+    /// `[error, energy pJ/MAC, latency, -throughput]`.
+    pub fn objectives(&self) -> [f64; 4] {
+        [
+            self.error,
+            self.energy_pj_per_mac,
+            self.latency_s,
+            -self.throughput_cps,
+        ]
+    }
+}
+
+/// The workload-specific evaluator: fit on (a subsample of) the train
+/// split through the fast chip simulation, score on the dataset's
+/// `test_*` split, and read energy/timing off the Section IV models.
+///
+/// The `test_*` split is the tuner's **validation** set: whatever you
+/// pass here steers operating-point selection. When you will report
+/// final accuracy on a held-out test set afterwards, tune on a
+/// `Dataset` whose `test_*` rows are carved out of the training data
+/// instead (see `examples/autotune.rs`), or the selection leaks into
+/// the reported number. (For the Fig. 7 sinc reproduction, scoring
+/// against the clean-function targets *is* the paper's protocol.)
+pub struct Objective<'a> {
+    pub dataset: &'a Dataset,
+    /// Independent dies (weight draws) averaged per point.
+    pub trials: usize,
+    /// Ridge constant for the validation fits.
+    pub lambda: f64,
+    /// Base seed: part of the cache key, so two objectives with
+    /// different seeds never share evaluations.
+    pub seed: u64,
+    /// Score with misclassification (±1 targets) instead of RMSE.
+    pub classification: bool,
+    /// Training rows used per fit (subsampled deterministically).
+    pub max_train: usize,
+    /// Validation rows used per trial.
+    pub max_val: usize,
+}
+
+impl<'a> Objective<'a> {
+    /// Defaults: 600-row fits, 256-row validation, lambda 1e-4;
+    /// classification auto-detected from the targets.
+    pub fn new(dataset: &'a Dataset, trials: usize, seed: u64) -> Self {
+        let classification = !dataset.train_y.is_empty()
+            && dataset
+                .train_y
+                .iter()
+                .all(|&y| (y - 1.0).abs() < 1e-9 || (y + 1.0).abs() < 1e-9);
+        Objective {
+            dataset,
+            trials: trials.max(1),
+            lambda: 1e-4,
+            seed,
+            classification,
+            max_train: 600,
+            max_val: 256,
+        }
+    }
+
+    /// Cache tag: the seed mixed with every objective setting that
+    /// changes evaluation results, so a shared [`EvalCache`] can never
+    /// alias two differently configured objectives (or workloads).
+    ///
+    /// [`EvalCache`]: crate::dse::cache::EvalCache
+    pub fn cache_tag(&self) -> u64 {
+        let mut tag = self.seed ^ 0x5EED_CAFE_F00D_D00D;
+        let mut mix = |v: u64| {
+            tag = (tag ^ v).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            tag ^= tag >> 29;
+        };
+        mix(self.lambda.to_bits());
+        mix(self.trials as u64);
+        mix(self.max_train as u64);
+        mix(self.max_val as u64);
+        mix(self.classification as u64);
+        for b in self.dataset.name.bytes() {
+            mix(b as u64);
+        }
+        mix(self.dataset.n_train() as u64);
+        mix(self.dataset.n_test() as u64);
+        // content fingerprint: name + shape alone would alias two
+        // different generations of the same synthetic family (e.g.
+        // sinc at two noise levels), so fold in sampled rows too
+        let sample = |xs: &[Vec<f64>], ys: &[f64], mix: &mut dyn FnMut(u64)| {
+            let n = xs.len();
+            for k in [0, n / 3, n / 2, n.saturating_sub(1)] {
+                if k < n {
+                    for &v in xs[k].iter().take(4) {
+                        mix(v.to_bits());
+                    }
+                    mix(ys[k].to_bits());
+                }
+            }
+        };
+        sample(&self.dataset.train_x, &self.dataset.train_y, &mut mix);
+        sample(&self.dataset.test_x, &self.dataset.test_y, &mut mix);
+        tag
+    }
+
+    /// One die: sample eq. 12 weights at the point's sigma_VT, push the
+    /// fit split through eq. 11 counters, solve the ridge head, score on
+    /// the validation split.
+    fn trial_error(&self, op: &OperatingPoint, trial_seed: u64) -> f64 {
+        let ds = self.dataset;
+        let d = ds.d();
+        if d == 0 || ds.n_test() == 0 {
+            return UNSOLVABLE_ERROR;
+        }
+        let sim = fastsim_for(op);
+        let mut rng = Prng::new(trial_seed ^ 0x0B1E_C7ED);
+        let w = sim.sample_weights(d, op.l.max(1), &mut rng);
+        let n = ds.n_train();
+        let take = n.min(self.max_train.max(1));
+        let idx: Vec<usize> = if take == n {
+            (0..n).collect()
+        } else {
+            rng.permutation(n)[..take].to_vec()
+        };
+        let fit_x: Vec<Vec<f64>> = idx.iter().map(|&i| ds.train_x[i].clone()).collect();
+        let fit_y: Vec<f64> = idx.iter().map(|&i| ds.train_y[i]).collect();
+        // same O(1) activation scaling as the serving path (lambda parity)
+        let scale = 1.0 / sim.cap();
+        let mut h = sim.hidden(&fit_x, &w);
+        h.scale(scale);
+        let t = Mat { rows: fit_y.len(), cols: 1, data: fit_y };
+        let beta = match ridge_solve(&h, &t, self.lambda) {
+            Ok(b) => b,
+            Err(_) => return UNSOLVABLE_ERROR,
+        };
+        // subsample (not truncate) the validation rows: test sets can be
+        // ordered (sinc is ascending in x), and a prefix would score an
+        // unrepresentative slice of the domain
+        let n_test = ds.n_test();
+        let m = n_test.min(self.max_val.max(1));
+        let vidx: Vec<usize> = if m == n_test {
+            (0..n_test).collect()
+        } else {
+            rng.permutation(n_test)[..m].to_vec()
+        };
+        let val_x: Vec<Vec<f64>> = vidx.iter().map(|&i| ds.test_x[i].clone()).collect();
+        let val_y: Vec<f64> = vidx.iter().map(|&i| ds.test_y[i]).collect();
+        let mut hv = sim.hidden(&val_x, &w);
+        hv.scale(scale);
+        let pred = hv.matmul(&beta);
+        if self.classification {
+            misclassification(&pred.col(0), &val_y)
+        } else {
+            stats::rmse(&pred.col(0), &val_y)
+        }
+    }
+
+    /// Score one operating point on all objectives.
+    pub fn evaluate(&self, op: &OperatingPoint) -> Evaluation {
+        let errs: Vec<f64> = (0..self.trials)
+            .map(|t| self.trial_error(op, self.seed.wrapping_add(7919 * t as u64)))
+            .collect();
+        let error = stats::mean(&errs);
+        let d = self.dataset.d().max(1);
+        let cfg = ChipConfig::from_operating_point(op, d);
+        // conversion time: mirror settling + counting window (eq. 19/20)
+        let t_conv = timing::t_c_design(&cfg);
+        // digital supply power at the mid-scale spike rate (half the
+        // counter cap over one window), eq. 23 approximation
+        let f_mid = 0.5 * cfg.cap() as f64 / cfg.t_neu();
+        let p_total = energy::p_vdd_approx(cfg.l, f_mid, &cfg) + cfg.p_avdd;
+        let energy_pj_per_mac = energy::pj_per_mac(p_total, t_conv, cfg.d, cfg.l);
+        // serving model: one batch drains serially through the die, plus
+        // the digital second stage per sample and a fixed dispatch cost
+        let batch = op.batch.max(1) as f64;
+        let t_digital = cfg.l as f64 * T_MAC_DIGITAL;
+        let latency_s = T_BATCH_OVERHEAD + batch * (t_conv + t_digital);
+        let throughput_cps = batch / latency_s;
+        Evaluation {
+            point: *op,
+            error,
+            energy_pj_per_mac,
+            latency_s,
+            throughput_cps,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth;
+
+    fn op(sigma_vt: f64, ratio: f64, b: u32, l: usize, batch: usize) -> OperatingPoint {
+        OperatingPoint {
+            sigma_vt,
+            ratio,
+            b,
+            l,
+            batch,
+        }
+    }
+
+    #[test]
+    fn classification_autodetected() {
+        let cls = synth::brightdata(1);
+        let reg = synth::sinc(100, 50, 0.2, 1);
+        assert!(Objective::new(&cls, 1, 1).classification);
+        assert!(!Objective::new(&reg, 1, 1).classification);
+    }
+
+    #[test]
+    fn degenerate_sigma_scores_worse() {
+        // sigma_VT -> 0 collapses the random features (Fig. 7a mechanism)
+        let ds = synth::sinc(400, 128, 0.2, 2);
+        let mut o = Objective::new(&ds, 2, 3);
+        o.max_train = 300;
+        let flat = o.evaluate(&op(0.0005, 0.75, 14, 64, 1));
+        let good = o.evaluate(&op(0.020, 0.75, 14, 64, 1));
+        assert!(
+            flat.error > 1.5 * good.error,
+            "flat {} good {}",
+            flat.error,
+            good.error
+        );
+    }
+
+    #[test]
+    fn energy_grows_with_counter_bits() {
+        // T_neu doubles per bit at fixed spike rate -> more pJ/MAC
+        let ds = synth::sinc(100, 50, 0.2, 4);
+        let mut o = Objective::new(&ds, 1, 5);
+        o.max_train = 80;
+        let e8 = o.evaluate(&op(0.016, 0.75, 8, 32, 1));
+        let e14 = o.evaluate(&op(0.016, 0.75, 14, 32, 1));
+        assert!(
+            e14.energy_pj_per_mac > e8.energy_pj_per_mac,
+            "b=14 {} vs b=8 {}",
+            e14.energy_pj_per_mac,
+            e8.energy_pj_per_mac
+        );
+        assert!(e14.latency_s > e8.latency_s);
+    }
+
+    #[test]
+    fn batch_trades_latency_for_throughput() {
+        let ds = synth::sinc(100, 50, 0.2, 6);
+        let mut o = Objective::new(&ds, 1, 7);
+        o.max_train = 80;
+        let b1 = o.evaluate(&op(0.016, 0.75, 10, 32, 1));
+        let b64 = o.evaluate(&op(0.016, 0.75, 10, 32, 64));
+        assert!(b64.latency_s > b1.latency_s);
+        assert!(b64.throughput_cps > b1.throughput_cps);
+        // identical chip physics: error and energy unchanged by batch
+        assert_eq!(b1.error, b64.error);
+        assert_eq!(b1.energy_pj_per_mac, b64.energy_pj_per_mac);
+    }
+
+    #[test]
+    fn objectives_vector_orientation() {
+        let ds = synth::sinc(100, 50, 0.2, 8);
+        let mut o = Objective::new(&ds, 1, 9);
+        o.max_train = 80;
+        let e = o.evaluate(&op(0.016, 0.75, 10, 32, 16));
+        let v = e.objectives();
+        assert_eq!(v[0], e.error);
+        assert_eq!(v[3], -e.throughput_cps);
+        assert!(e.throughput_cps > 0.0 && e.latency_s > 0.0);
+        assert!(e.energy_pj_per_mac > 0.0);
+    }
+
+    #[test]
+    fn cache_tag_separates_workloads_and_settings() {
+        // same synthetic family, same shape, different data -> new tag
+        let a = synth::sinc(100, 50, 0.2, 1);
+        let b = synth::sinc(100, 50, 0.3, 2);
+        let oa = Objective::new(&a, 1, 9);
+        let ob = Objective::new(&b, 1, 9);
+        assert_ne!(oa.cache_tag(), ob.cache_tag());
+        // deterministic for identical configuration
+        let mut oc = Objective::new(&a, 1, 9);
+        assert_eq!(oa.cache_tag(), oc.cache_tag());
+        // any result-affecting setting changes the tag
+        oc.lambda = 1.0;
+        assert_ne!(oa.cache_tag(), oc.cache_tag());
+    }
+
+    #[test]
+    fn evaluation_is_deterministic() {
+        let ds = synth::sinc(200, 64, 0.2, 10);
+        let mut o = Objective::new(&ds, 2, 11);
+        o.max_train = 150;
+        let a = o.evaluate(&op(0.016, 0.75, 10, 48, 4));
+        let b = o.evaluate(&op(0.016, 0.75, 10, 48, 4));
+        assert_eq!(a.error, b.error);
+        assert_eq!(a.energy_pj_per_mac, b.energy_pj_per_mac);
+    }
+}

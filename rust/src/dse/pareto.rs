@@ -1,0 +1,176 @@
+//! Non-dominated front extraction and operating-point selection: the
+//! "select" half of the autotuner loop. Objective vectors are
+//! minimisation-oriented (the objective module negates throughput), the
+//! front is the classic Pareto set, and two pickers turn a front into a
+//! single deployable point: the knee (closest to the normalised ideal)
+//! and a weighted scalarisation for callers with explicit priorities.
+
+/// `a` Pareto-dominates `b`: no worse in every objective, strictly
+/// better in at least one. All objectives are minimised.
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strictly_better = false;
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly_better = true;
+        }
+    }
+    strictly_better
+}
+
+/// Indices of the non-dominated rows of `objs` (O(n^2): fronts here are
+/// hundreds of points, not millions). Duplicated points are all kept —
+/// neither dominates the other.
+pub fn front_indices(objs: &[Vec<f64>]) -> Vec<usize> {
+    (0..objs.len())
+        .filter(|&i| {
+            !objs
+                .iter()
+                .enumerate()
+                .any(|(j, o)| j != i && dominates(o, &objs[i]))
+        })
+        .collect()
+}
+
+/// Per-dimension (min, max) over the given rows.
+fn bounds(objs: &[Vec<f64>], idx: &[usize]) -> (Vec<f64>, Vec<f64>) {
+    let dims = objs[idx[0]].len();
+    let mut lo = vec![f64::MAX; dims];
+    let mut hi = vec![f64::MIN; dims];
+    for &i in idx {
+        for (k, &v) in objs[i].iter().enumerate() {
+            lo[k] = lo[k].min(v);
+            hi[k] = hi[k].max(v);
+        }
+    }
+    (lo, hi)
+}
+
+/// Min-max normalise one row against front bounds; collapsed dimensions
+/// (zero span) contribute 0 so they cannot skew distances.
+fn normalised(o: &[f64], lo: &[f64], hi: &[f64]) -> Vec<f64> {
+    o.iter()
+        .enumerate()
+        .map(|(k, &v)| {
+            let span = hi[k] - lo[k];
+            if span <= 0.0 {
+                0.0
+            } else {
+                (v - lo[k]) / span
+            }
+        })
+        .collect()
+}
+
+/// Knee point of the front: the member closest (L2, in normalised
+/// objective space) to the ideal corner where every objective attains
+/// its front-wide minimum. `None` iff `front` is empty.
+pub fn knee_index(objs: &[Vec<f64>], front: &[usize]) -> Option<usize> {
+    if front.is_empty() {
+        return None;
+    }
+    let (lo, hi) = bounds(objs, front);
+    front
+        .iter()
+        .copied()
+        .min_by(|&a, &b| {
+            let da: f64 = normalised(&objs[a], &lo, &hi).iter().map(|v| v * v).sum();
+            let db: f64 = normalised(&objs[b], &lo, &hi).iter().map(|v| v * v).sum();
+            da.partial_cmp(&db).unwrap_or(std::cmp::Ordering::Equal)
+        })
+}
+
+/// "Pick for me": the front member minimising the weighted sum of
+/// normalised objectives. Weights need not be normalised; a zero weight
+/// makes that objective a don't-care. `None` iff `front` is empty.
+pub fn select_weighted(objs: &[Vec<f64>], front: &[usize], weights: &[f64]) -> Option<usize> {
+    if front.is_empty() {
+        return None;
+    }
+    let (lo, hi) = bounds(objs, front);
+    front.iter().copied().min_by(|&a, &b| {
+        let score = |i: usize| -> f64 {
+            normalised(&objs[i], &lo, &hi)
+                .iter()
+                .zip(weights)
+                .map(|(v, w)| v * w)
+                .sum()
+        };
+        score(a)
+            .partial_cmp(&score(b))
+            .unwrap_or(std::cmp::Ordering::Equal)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(rows: &[&[f64]]) -> Vec<Vec<f64>> {
+        rows.iter().map(|r| r.to_vec()).collect()
+    }
+
+    #[test]
+    fn dominance_basics() {
+        assert!(dominates(&[1.0, 1.0], &[2.0, 2.0]));
+        assert!(dominates(&[1.0, 2.0], &[1.0, 3.0]));
+        assert!(!dominates(&[1.0, 3.0], &[2.0, 2.0])); // trade-off
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0])); // equal: no strict edge
+    }
+
+    #[test]
+    fn front_excludes_dominated_points() {
+        // (3,3) is dominated by (1,2) and (2,1); the extremes survive.
+        let objs = v(&[&[1.0, 2.0], &[2.0, 1.0], &[3.0, 3.0], &[0.5, 4.0]]);
+        let front = front_indices(&objs);
+        assert_eq!(front, vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn front_keeps_duplicates_and_single_point() {
+        let objs = v(&[&[1.0, 1.0], &[1.0, 1.0], &[2.0, 2.0]]);
+        assert_eq!(front_indices(&objs), vec![0, 1]);
+        let one = v(&[&[5.0, 5.0]]);
+        assert_eq!(front_indices(&one), vec![0]);
+    }
+
+    #[test]
+    fn knee_prefers_the_elbow() {
+        // L-shaped front: extremes are (0,10) and (10,0); (1,1) is the
+        // obvious compromise.
+        let objs = v(&[&[0.0, 10.0], &[10.0, 0.0], &[1.0, 1.0]]);
+        let front = front_indices(&objs);
+        assert_eq!(front.len(), 3);
+        assert_eq!(knee_index(&objs, &front), Some(2));
+    }
+
+    #[test]
+    fn knee_ignores_collapsed_dimensions() {
+        // second objective identical everywhere: knee decided by the first
+        let objs = v(&[&[3.0, 7.0], &[1.0, 7.0], &[2.0, 7.0]]);
+        let front = front_indices(&objs);
+        assert_eq!(knee_index(&objs, &front), Some(1));
+    }
+
+    #[test]
+    fn weighted_selection_follows_weights() {
+        let objs = v(&[&[0.0, 10.0], &[10.0, 0.0], &[4.0, 4.0]]);
+        let front = front_indices(&objs);
+        // care only about objective 0 -> pick its minimiser
+        assert_eq!(select_weighted(&objs, &front, &[1.0, 0.0]), Some(0));
+        // care only about objective 1
+        assert_eq!(select_weighted(&objs, &front, &[0.0, 1.0]), Some(1));
+        // balanced -> the compromise wins (0.4+0.4 < 1.0)
+        assert_eq!(select_weighted(&objs, &front, &[1.0, 1.0]), Some(2));
+    }
+
+    #[test]
+    fn empty_front_yields_none() {
+        let objs: Vec<Vec<f64>> = vec![];
+        assert_eq!(knee_index(&objs, &[]), None);
+        assert_eq!(select_weighted(&objs, &[], &[1.0]), None);
+    }
+}

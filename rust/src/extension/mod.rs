@@ -300,6 +300,63 @@ mod tests {
     }
 
     #[test]
+    fn input_register_rotation_round_trips() {
+        // k Rotation_Control pulses are a full period: the registers
+        // must return to the loaded vector exactly (Fig. 12 circuit)
+        let mut chip = die(8, 8, 20);
+        let codes = codes_pattern(8, 21);
+        chip.load_input(&codes);
+        for _ in 0..8 {
+            chip.input_regs.rotate();
+        }
+        assert_eq!(chip.input_regs.read(), &codes[..]);
+        assert_eq!(chip.input_regs.rotation, 8);
+        // a single rotation shifts left by one (channel i sees i+1)
+        chip.load_input(&codes);
+        chip.input_regs.rotate();
+        let got = chip.input_regs.read().to_vec();
+        let mut expect = codes.clone();
+        expect.rotate_left(1);
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn output_bank_rotation_round_trips() {
+        // N CLK_r pulses restore the latched counts (Fig. 13 bank)
+        let mut bank = crate::chip::spi::OutputBank::new(6);
+        let counts: Vec<u32> = vec![5, 9, 0, 31, 2, 17];
+        bank.latch(&counts);
+        for _ in 0..6 {
+            bank.clk_r();
+        }
+        assert_eq!(bank.peek_rot(), &counts[..]);
+        // accumulate twice without rotation: acc = 2x counts
+        bank.clk_a();
+        bank.clk_a();
+        let doubled: Vec<u32> = counts.iter().map(|&c| 2 * c).collect();
+        assert_eq!(bank.read_and_clear(), doubled);
+        assert!(bank.peek_acc().iter().all(|&a| a == 0));
+    }
+
+    #[test]
+    fn virtual_weight_identity_block_matches_physical() {
+        // block m=0, chunk c=0 applies no rotation: the virtual weight
+        // must be exactly the physical mismatch weight
+        let chip = die(6, 6, 22);
+        let plan = RotationPlan::new(6, 6, 6, 6).unwrap();
+        let t = chip.cfg.temp_k;
+        for i in 0..6 {
+            for j in 0..6 {
+                assert_eq!(
+                    plan.virtual_weight(&chip.mismatch, i, j, t).to_bits(),
+                    chip.mismatch.weight(i, j, t).to_bits(),
+                    "({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn more_virtual_neurons_do_not_repeat_columns() {
         // sanity on the feature expansion: virtual H columns should not
         // be bitwise duplicates across blocks for a generic input

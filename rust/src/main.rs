@@ -6,12 +6,14 @@
 //!   classify      train then evaluate train/test error (Table II row)
 //!   serve         start the TCP serving front end
 //!   sweep         quick design-space sweeps (ratio | beta-bits | counter-bits)
+//!   tune          closed-loop autotuner: Pareto front + knee operating point
 //!   info          artifact + configuration report
 
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use velm::bench::Table;
 use velm::chip::ChipModel;
 use velm::cli::Args;
 use velm::config::{ChipConfig, SystemConfig, Transfer};
@@ -29,8 +31,11 @@ fn usage() -> &'static str {
        characterize [--seed N] [--d N] [--l N]       die characterisation (Fig. 15)\n\
        train --dataset NAME [--l N] [--seed N]       chip-in-the-loop training\n\
        classify --dataset NAME [--l N] [--normalize] train + test error (Table II)\n\
-       serve [--addr HOST:PORT] [--dataset NAME] [--chips N]  TCP serving front end\n\
+       serve [--addr HOST:PORT] [--dataset NAME] [--chips N]\n\
+             [--point FILE]                          TCP front end (tuned point via FILE)\n\
        sweep --what ratio|beta-bits|counter-bits     quick design-space sweep (Fig. 7)\n\
+       tune [--dataset NAME] [--rounds N] [--trials N] [--l LIST] [--b LIST]\n\
+            [--batch LIST] [--weights E,J,T,X] [--out FILE]   Pareto autotune\n\
        info [--artifacts DIR]                        configuration + artifact report\n\
      Common options: --b BITS (counter), --sigma-vt MV, --vdd V, --lambda F\n"
 }
@@ -152,12 +157,40 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let name = args.get_or("dataset", "brightdata");
     let seed = args.get_u64("seed", 1).map_err(anyhow::Error::msg)?;
     let ds = synth::by_name(&name, seed).with_context(|| format!("unknown dataset {name}"))?;
-    let mut cfg = chip_cfg_from(args)?;
-    cfg.d = ds.d();
-    cfg.b = args.get_usize("b", 10).map_err(anyhow::Error::msg)? as u32;
     let mut sys = SystemConfig::default();
     sys.n_chips = args.get_usize("chips", sys.n_chips).map_err(anyhow::Error::msg)?;
     sys.artifact_dir = args.get_or("artifacts", &sys.artifact_dir);
+    // `--point FILE` closes the tune -> serve loop: apply a serialized
+    // `velm tune --out` operating point (chip config + batch size)
+    let cfg = match args.get("point") {
+        Some(path) => {
+            // the point file owns the whole chip config: explicit chip
+            // flags would be silently shadowed, so call that out
+            for opt in ["b", "sigma-vt", "vdd", "d", "l"] {
+                if args.get(opt).is_some() {
+                    eprintln!("note: --{opt} ignored; chip config comes from --point");
+                }
+            }
+            for flag in ["linear", "noise"] {
+                if args.flag(flag) {
+                    eprintln!("note: --{flag} ignored; chip config comes from --point");
+                }
+            }
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading operating point {path}"))?;
+            let op = velm::dse::OperatingPoint::from_kv(&text)
+                .map_err(anyhow::Error::msg)?;
+            sys.max_batch = op.batch.max(1);
+            println!("operating point from {path}: {op}");
+            ChipConfig::from_operating_point(&op, ds.d())
+        }
+        None => {
+            let mut cfg = chip_cfg_from(args)?;
+            cfg.d = ds.d();
+            cfg.b = args.get_usize("b", 10).map_err(anyhow::Error::msg)? as u32;
+            cfg
+        }
+    };
     println!("training {} dies on {name} ...", sys.n_chips);
     let coord = Coordinator::start(&sys, &cfg, &ds.train_x, &ds.train_y, 0.1, 10)?;
     server::serve(Arc::new(coord), &addr)
@@ -187,6 +220,131 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_tune(args: &Args) -> Result<()> {
+    let name = args.get_or("dataset", "sinc");
+    let seed = args.get_u64("seed", 1).map_err(anyhow::Error::msg)?;
+    let ds = synth::by_name(&name, seed).with_context(|| format!("unknown dataset {name}"))?;
+    let rounds = args.get_usize("rounds", 2).map_err(anyhow::Error::msg)?;
+    let trials = args.get_usize("trials", 3).map_err(anyhow::Error::msg)?;
+    let threads = args
+        .get_usize("threads", dse::default_threads())
+        .map_err(anyhow::Error::msg)?;
+
+    let mut space = dse::SearchSpace::default();
+    if let Some(ls) = args.get_usize_list("l").map_err(anyhow::Error::msg)? {
+        space.l = ls;
+    }
+    if let Some(bs) = args.get_list::<u32>("b").map_err(anyhow::Error::msg)? {
+        space.b = bs;
+    }
+    if let Some(batches) = args.get_usize_list("batch").map_err(anyhow::Error::msg)? {
+        space.batch = batches;
+    }
+    let mut objective = dse::Objective::new(&ds, trials, seed);
+    objective.lambda = args.get_f64("lambda", objective.lambda).map_err(anyhow::Error::msg)?;
+
+    println!(
+        "tuning on {name} (d={}, {} train / {} test): {} rounds x {} candidates, {} threads",
+        ds.d(),
+        ds.n_train(),
+        ds.n_test(),
+        rounds,
+        space.grid_size(),
+        threads
+    );
+    let explorer = dse::Explorer { space, objective, rounds, threads };
+    let result = explorer.run();
+    let knee = result.knee.context("empty design space")?;
+
+    let mut table = Table::new(&[
+        "sigma_VT (mV)",
+        "ratio",
+        "b",
+        "L",
+        "batch",
+        "error",
+        "pJ/MAC",
+        "latency (us)",
+        "kcls/s",
+        "",
+    ]);
+    let mut front = result.front.clone();
+    front.sort_by(|a, b| a.error.partial_cmp(&b.error).unwrap());
+    for e in &front {
+        let is_knee = e.point == knee.point;
+        table.row(&[
+            format!("{:.1}", e.point.sigma_vt * 1e3),
+            format!("{:.3}", e.point.ratio),
+            format!("{}", e.point.b),
+            format!("{}", e.point.l),
+            format!("{}", e.point.batch),
+            format!("{:.4}", e.error),
+            format!("{:.3}", e.energy_pj_per_mac),
+            format!("{:.1}", e.latency_s * 1e6),
+            format!("{:.1}", e.throughput_cps / 1e3),
+            if is_knee { "<- knee".to_string() } else { String::new() },
+        ]);
+    }
+    println!("Pareto front ({} of {} evaluated points):", front.len(), result.evals.len());
+    table.print();
+
+    let first = result.regions.first().context("no rounds ran")?;
+    let last = result.regions.last().context("no rounds ran")?;
+    println!(
+        "refinement: sigma_VT region {:.1}-{:.1} mV -> {:.1}-{:.1} mV; \
+         cache {} hits / {} misses",
+        first.sigma_lo * 1e3,
+        first.sigma_hi * 1e3,
+        last.sigma_lo * 1e3,
+        last.sigma_hi * 1e3,
+        result.cache_hits,
+        result.cache_misses
+    );
+
+    // "pick for me": explicit weights over [error, energy, latency,
+    // -throughput], else the knee
+    let selected = match args.get_f64_list("weights").map_err(anyhow::Error::msg)? {
+        Some(w) => {
+            anyhow::ensure!(
+                w.len() == 4,
+                "--weights wants 4 values (error,energy,latency,throughput)"
+            );
+            result
+                .select(&[w[0], w[1], w[2], w[3]])
+                .context("empty front")?
+        }
+        None => knee,
+    };
+    println!("selected operating point: {}", selected.point);
+    println!("{}", ChipConfig::from_operating_point(&selected.point, ds.d()).summary());
+    println!(
+        "deploy with Coordinator::start_tuned, or `velm tune --out p.kv` \
+         then `velm serve --point p.kv`"
+    );
+
+    if let Some(path) = args.get("out") {
+        // front sections first, [selected] last: OperatingPoint::from_kv
+        // applied to the whole file then yields the selected point
+        let mut text = String::new();
+        text.push_str("# velm tune result: Pareto front, then the selected point.\n");
+        text.push_str("# Parse with OperatingPoint::from_kv (last section wins).\n");
+        for (k, e) in front.iter().enumerate() {
+            text.push_str(&format!(
+                "\n[front.{k}]  # error {:.6}, pJ/MAC {:.4}, latency {:.2} us\n",
+                e.error,
+                e.energy_pj_per_mac,
+                e.latency_s * 1e6
+            ));
+            text.push_str(&e.point.to_kv());
+        }
+        text.push_str("\n[selected]\n");
+        text.push_str(&selected.point.to_kv());
+        std::fs::write(path, text).with_context(|| format!("writing {path}"))?;
+        println!("front serialized to {path}");
+    }
+    Ok(())
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
     let cfg = ChipConfig::default();
     println!("{}", cfg.summary());
@@ -212,6 +370,7 @@ fn main() -> Result<()> {
         Some("classify") => cmd_classify(&args, false),
         Some("serve") => cmd_serve(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("tune") => cmd_tune(&args),
         Some("info") => cmd_info(&args),
         Some("help") | None => {
             print!("{}", usage());

@@ -1,0 +1,198 @@
+//! Real PJRT engine (feature `pjrt`): loads the HLO-text artifacts
+//! produced by `make artifacts` and executes them on the XLA CPU client
+//! from the serving hot path. Python never runs here — the artifacts are
+//! the only hand-off (see /opt/xla-example/load_hlo for the wiring
+//! reference). Requires the external `xla` crate; see DESIGN.md §7.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{ArtifactMeta, ArtifactStore};
+
+/// A compiled-executable cache over one PJRT CPU client.
+///
+/// One engine per worker thread (the xla crate's handles are not shared
+/// across threads here); compilation happens once per artifact name.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    pub store: ArtifactStore,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtEngine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn new(dir: &Path) -> Result<Self> {
+        let store = ArtifactStore::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtEngine { client, store, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let meta = self.store.get(name)?.clone();
+            let proto = xla::HloModuleProto::from_text_file(
+                meta.path
+                    .to_str()
+                    .context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing HLO text {:?}", meta.path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact '{name}'"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute an artifact on f32 buffers. `inputs[i]` must match the
+    /// manifest shape of argument i. Returns the flattened f32 output
+    /// (all artifacts return a 1-tuple of one array).
+    pub fn execute_f32(&mut self, name: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        let meta = self.store.get(name)?.clone();
+        if inputs.len() != meta.arg_shapes.len() {
+            bail!(
+                "artifact '{name}' wants {} args, got {}",
+                meta.arg_shapes.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, buf) in inputs.iter().enumerate() {
+            if buf.len() != meta.arg_elems(i) {
+                bail!(
+                    "artifact '{name}' arg {i}: want {} elems ({:?}), got {}",
+                    meta.arg_elems(i),
+                    meta.arg_shapes[i],
+                    buf.len()
+                );
+            }
+            let dims: Vec<i64> = meta.arg_shapes[i].iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(buf)
+                .reshape(&dims)
+                .with_context(|| format!("reshaping arg {i} to {dims:?}"))?;
+            literals.push(lit);
+        }
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing '{name}'"))?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().context("unwrapping output tuple")?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Hidden stage: codes [n, d] (row-major) + weights [d, l] -> counts
+    /// [n, l]. Pads the batch up to the chosen compiled variant and
+    /// slices back (zero rows are exact through the transfer).
+    pub fn hidden(
+        &mut self,
+        codes: &[f32],
+        n: usize,
+        d: usize,
+        l: usize,
+        weights: &[f32],
+        normalized: bool,
+    ) -> Result<Vec<f32>> {
+        assert_eq!(codes.len(), n * d);
+        assert_eq!(weights.len(), d * l);
+        let meta = self
+            .store
+            .pick_hidden(normalized, d, l, n)
+            .with_context(|| format!("no hidden artifact for d={d} l={l}"))?
+            .clone();
+        let bsz = meta.batch();
+        let mut out = Vec::with_capacity(n * l);
+        for chunk in codes.chunks(bsz * d) {
+            let rows = chunk.len() / d;
+            let padded;
+            let input = if rows == bsz {
+                chunk
+            } else {
+                padded = {
+                    let mut p = vec![0f32; bsz * d];
+                    p[..chunk.len()].copy_from_slice(chunk);
+                    p
+                };
+                &padded[..]
+            };
+            let res = self.execute_f32(&meta.name, &[input, weights])?;
+            out.extend_from_slice(&res[..rows * l]);
+        }
+        Ok(out)
+    }
+
+    /// Ridge training on-device: H [n, l], T [n], lambda -> beta [l].
+    /// Zero-pads rows up to the smallest train artifact that fits.
+    pub fn train_beta(&mut self, h: &[f32], n: usize, l: usize, t: &[f32], lambda: f32) -> Result<Vec<f32>> {
+        assert_eq!(h.len(), n * l);
+        assert_eq!(t.len(), n);
+        let (name, rows) = {
+            let mut variants: Vec<&ArtifactMeta> = self
+                .store
+                .entries
+                .values()
+                .filter(|m| m.name.starts_with("train_n") && m.name.ends_with(&format!("_l{l}")))
+                .collect();
+            variants.sort_by_key(|m| m.batch());
+            let meta = variants
+                .iter()
+                .find(|m| m.batch() >= n)
+                .with_context(|| format!("no train artifact with n >= {n}"))?;
+            (meta.name.clone(), meta.batch())
+        };
+        let mut hp = vec![0f32; rows * l];
+        hp[..h.len()].copy_from_slice(h);
+        let mut tp = vec![0f32; rows];
+        tp[..t.len()].copy_from_slice(t);
+        self.execute_f32(&name, &[&hp, &tp, &[lambda]])
+    }
+
+    /// Second stage on-device: H [n, l] x beta [l] -> scores [n].
+    pub fn predict(&mut self, h: &[f32], n: usize, l: usize, beta: &[f32]) -> Result<Vec<f32>> {
+        assert_eq!(h.len(), n * l);
+        assert_eq!(beta.len(), l);
+        let (name, bsz) = {
+            let mut variants: Vec<&ArtifactMeta> = self
+                .store
+                .entries
+                .values()
+                .filter(|m| m.name.starts_with("predict_b") && m.name.ends_with(&format!("_l{l}")))
+                .collect();
+            variants.sort_by_key(|m| m.batch());
+            let meta = variants
+                .iter()
+                .find(|m| m.batch() >= n)
+                .or(variants.last())
+                .with_context(|| format!("no predict artifact for l={l}"))?;
+            (meta.name.clone(), meta.batch())
+        };
+        let mut out = Vec::with_capacity(n);
+        for chunk in h.chunks(bsz * l) {
+            let rows = chunk.len() / l;
+            let padded;
+            let input = if rows == bsz {
+                chunk
+            } else {
+                padded = {
+                    let mut p = vec![0f32; bsz * l];
+                    p[..chunk.len()].copy_from_slice(chunk);
+                    p
+                };
+                &padded[..]
+            };
+            let res = self.execute_f32(&name, &[input, beta])?;
+            out.extend_from_slice(&res[..rows]);
+        }
+        Ok(out)
+    }
+}

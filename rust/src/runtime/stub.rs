@@ -1,0 +1,75 @@
+//! Stub PJRT engine (default build): the external `xla` crate is not in
+//! the offline vendor set, so without `--features pjrt` the engine
+//! cannot execute artifacts. Construction fails with a clear message;
+//! every caller (worker::open_engine, tests, benches) already falls back
+//! to the behavioural chip simulator when the engine is unavailable.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::ArtifactStore;
+
+const UNAVAILABLE: &str =
+    "velm was built without the `pjrt` feature; rebuild with `--features pjrt` \
+     (requires the external `xla` crate) to execute AOT artifacts";
+
+/// Same public surface as the real engine so call sites compile
+/// unchanged; `new` always fails, so the methods are unreachable in
+/// practice but keep identical signatures.
+pub struct PjrtEngine {
+    pub store: ArtifactStore,
+}
+
+impl PjrtEngine {
+    /// Always fails: artifacts cannot execute without the `pjrt` feature.
+    pub fn new(_dir: &Path) -> Result<Self> {
+        bail!("{UNAVAILABLE}");
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (built without `pjrt`)".to_string()
+    }
+
+    pub fn execute_f32(&mut self, _name: &str, _inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        bail!("{UNAVAILABLE}");
+    }
+
+    pub fn hidden(
+        &mut self,
+        _codes: &[f32],
+        _n: usize,
+        _d: usize,
+        _l: usize,
+        _weights: &[f32],
+        _normalized: bool,
+    ) -> Result<Vec<f32>> {
+        bail!("{UNAVAILABLE}");
+    }
+
+    pub fn train_beta(
+        &mut self,
+        _h: &[f32],
+        _n: usize,
+        _l: usize,
+        _t: &[f32],
+        _lambda: f32,
+    ) -> Result<Vec<f32>> {
+        bail!("{UNAVAILABLE}");
+    }
+
+    pub fn predict(&mut self, _h: &[f32], _n: usize, _l: usize, _beta: &[f32]) -> Result<Vec<f32>> {
+        bail!("{UNAVAILABLE}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_engine_reports_missing_feature() {
+        let err = PjrtEngine::new(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err}").contains("pjrt"));
+    }
+}

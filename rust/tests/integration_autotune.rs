@@ -1,0 +1,135 @@
+//! Integration: the closed autotune loop — explore the Fig. 7 design
+//! space on a workload, check the selected operating point lands where
+//! the paper says it should (sigma_VT in the 15–25 mV optimum band),
+//! and boot the serving coordinator at that point.
+
+use velm::config::{ChipConfig, SystemConfig};
+use velm::coordinator::Coordinator;
+use velm::datasets::synth;
+use velm::dse::{self, Explorer, Objective, OperatingPoint, SearchSpace};
+use velm::util::prng::Prng;
+
+/// The paper's Fig. 7(a) axes on the sinc regression task: full sigma
+/// range, ratio pinned at the known 0.75 optimum, one L, two batches.
+fn sinc_space() -> SearchSpace {
+    SearchSpace {
+        sigma_vt: (0.005, 0.045),
+        ratio: (0.75, 0.75),
+        sigma_steps: 5,
+        ratio_steps: 1,
+        b: vec![14],
+        l: vec![64],
+        batch: vec![1, 16],
+    }
+}
+
+#[test]
+fn tune_knee_lands_in_paper_sigma_band() {
+    // Fig. 7(a): "sigma_VT in 15-25 mV is optimal". Energy and timing
+    // are sigma-independent, so the knee's sigma is decided purely by
+    // validation error — the explorer must rediscover the paper's band.
+    let ds = synth::sinc(600, 256, 0.2, 5);
+    let objective = Objective::new(&ds, 3, 11);
+    let explorer = Explorer {
+        space: sinc_space(),
+        objective,
+        rounds: 2,
+        threads: dse::default_threads(),
+    };
+    let result = explorer.run();
+    assert!(!result.front.is_empty(), "empty Pareto front");
+    let knee = result.knee.expect("knee point");
+    let sigma_mv = knee.point.sigma_vt * 1e3;
+    assert!(
+        (15.0 - 1e-6..=25.0 + 1e-6).contains(&sigma_mv),
+        "knee sigma_VT {sigma_mv:.1} mV outside the paper's 15-25 mV optimum"
+    );
+    // the front never keeps a point that another front point dominates
+    for a in &result.front {
+        for b in &result.front {
+            let (oa, ob) = (a.objectives(), b.objectives());
+            assert!(
+                !velm::dse::pareto::dominates(&oa, &ob),
+                "front contains dominated point: {:?} dominated by {:?}",
+                b.point,
+                a.point
+            );
+        }
+    }
+    // adaptive refinement shrank the sigma search region
+    assert!(result.regions.len() >= 2);
+    assert!(
+        result.regions[1].sigma_span() < result.regions[0].sigma_span(),
+        "refinement did not shrink: {:?}",
+        result.regions
+    );
+    // refinement revisited cached grid points
+    assert!(result.cache_hits > 0, "no cache hits across rounds");
+}
+
+#[test]
+fn tuned_point_boots_coordinator_and_serves() {
+    // two separable blobs, then serve at an explorer-shaped point
+    let mut rng = Prng::new(42);
+    let mut xs: Vec<Vec<f64>> = Vec::new();
+    let mut ys: Vec<f64> = Vec::new();
+    for _ in 0..160 {
+        let y = if rng.bool(0.5) { 1.0 } else { -1.0 };
+        xs.push((0..6).map(|_| (0.4 * y + rng.normal(0.0, 0.15)).clamp(-1.0, 1.0)).collect());
+        ys.push(y);
+    }
+    let op = OperatingPoint {
+        sigma_vt: 0.018,
+        ratio: 0.75,
+        b: 10,
+        l: 32,
+        batch: 8,
+    };
+    let sys = SystemConfig {
+        n_chips: 2,
+        artifact_dir: "/nonexistent".into(),
+        max_wait: std::time::Duration::from_millis(1),
+        ..Default::default()
+    };
+    let coord = Coordinator::start_tuned(&sys, &op, &xs, &ys, 1e-2, 10).expect("start_tuned");
+    assert_eq!(coord.n_workers(), 2);
+    let mut correct = 0;
+    for (x, &y) in xs.iter().take(60).zip(&ys) {
+        let resp = coord.classify(x.clone()).expect("classify");
+        if (resp.label as f64 - y).abs() < 1e-9 {
+            correct += 1;
+        }
+    }
+    assert!(correct >= 50, "only {correct}/60 correct at the tuned point");
+    coord.shutdown();
+
+    // the chip config the coordinator trained with matches the point
+    let cfg = ChipConfig::from_operating_point(&op, 6);
+    assert_eq!((cfg.d, cfg.l, cfg.b), (6, 32, 10));
+    assert!((cfg.sigma_vt - 0.018).abs() < 1e-15);
+}
+
+#[test]
+fn repeated_tune_is_cache_cheap() {
+    // a second explorer over the same workload+seed re-evaluates nothing
+    // new in round 1 of 1 — but within one run, refinement rounds reuse
+    // overlapping grid points. Run 3 rounds on a 1-point discrete space:
+    // rounds 2 and 3 must be mostly hits.
+    let ds = synth::sinc(200, 64, 0.2, 7);
+    let mut objective = Objective::new(&ds, 1, 13);
+    objective.max_train = 120;
+    let space = SearchSpace {
+        sigma_vt: (0.015, 0.025),
+        ratio: (0.75, 0.75),
+        sigma_steps: 3,
+        ratio_steps: 1,
+        b: vec![10],
+        l: vec![32],
+        batch: vec![1],
+    };
+    let explorer = Explorer { space, objective, rounds: 3, threads: 2 };
+    let result = explorer.run();
+    assert!(result.cache_hits > 0);
+    // every distinct point was evaluated exactly once
+    assert_eq!(result.cache_misses as usize, result.evals.len());
+}

@@ -1,0 +1,222 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The offline vendor set has no crates.io access, so this shim carries
+//! exactly the subset of anyhow's API that velm uses: the type-erased
+//! [`Error`] with a context chain, [`Result`], the [`Context`] extension
+//! trait for `Result`/`Option`, and the `anyhow!`/`bail!`/`ensure!`
+//! macros. Semantics match upstream where it matters:
+//!
+//!   * `Display` prints the outermost message; the alternate form
+//!     (`{:#}`) prints the whole chain joined by `": "`.
+//!   * `Debug` (what `fn main() -> Result<()>` prints on exit) shows the
+//!     outermost message followed by a `Caused by:` list.
+//!   * Any `std::error::Error + Send + Sync + 'static` converts into
+//!     [`Error`] via `?`, capturing its `source()` chain.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result` defaulted to the type-erased [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Type-erased error: an outermost-first chain of messages.
+pub struct Error {
+    /// `chain[0]` is the outermost context; later entries are causes.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Push a new outermost context onto the chain.
+    fn wrap<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The message chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The outermost message.
+    pub fn root_message(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like upstream anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket conversion
+// coherent alongside the std identity `From<Error> for Error`.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Context-attachment extension for `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    /// Wrap with a lazily built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] built like `anyhow!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `bail!` unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("opening config")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "opening config");
+        assert_eq!(format!("{e:#}"), "opening config: missing thing");
+    }
+
+    #[test]
+    fn debug_shows_cause_chain() {
+        let e: Error = Err::<(), _>(io_err()).context("layer").unwrap_err();
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("layer"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("missing thing"));
+    }
+
+    #[test]
+    fn option_context_and_with_context() {
+        let a: Result<u8> = None.context("nothing here");
+        assert_eq!(format!("{}", a.unwrap_err()), "nothing here");
+        let b: Result<u8> = None.with_context(|| format!("missing {}", 7));
+        assert_eq!(format!("{}", b.unwrap_err()), "missing 7");
+        assert_eq!(Some(3u8).context("ok").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_build_and_bail() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("unlucky {}", x);
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(7).unwrap_err()), "unlucky 7");
+        assert_eq!(format!("{}", f(11).unwrap_err()), "x too big: 11");
+        let e = anyhow!("plain {}", 1);
+        assert_eq!(format!("{e}"), "plain 1");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn g() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/here/velm")?;
+            Ok(s)
+        }
+        assert!(g().is_err());
+    }
+
+    #[test]
+    fn error_msg_as_function_value() {
+        let r: Result<()> = Err("stringy".to_string()).map_err(Error::msg);
+        assert_eq!(format!("{}", r.unwrap_err()), "stringy");
+    }
+}

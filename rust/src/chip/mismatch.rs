@@ -72,6 +72,19 @@ impl MismatchMatrix {
         1.0 + self.kneu_rel[j]
     }
 
+    /// Drift-injection hook for the fleet subsystem (DESIGN.md §12):
+    /// superimpose an *additional* N(0, `extra_sigma`) threshold shift on
+    /// every mirror, modelling aging / stress-induced mismatch-profile
+    /// change — the drift mode eq. 26 renormalisation cannot cancel
+    /// (it is not common-mode), so it forces a head retrain.
+    /// Deterministic in `seed` so drifted dies stay reproducible.
+    pub fn age(&mut self, extra_sigma: f64, seed: u64) {
+        let mut rng = Prng::new(seed ^ 0xA6E_D1E);
+        for v in self.dvt.iter_mut() {
+            *v += rng.normal(0.0, extra_sigma);
+        }
+    }
+
     /// Virtually rotated weight lookup used by the Section V extension:
     /// row rotation r (hidden extension, Fig. 12) and column rotation c
     /// (input extension, Fig. 13). `W_{r,c}[i][j] = W[(i+r)%d][(j+c)%l]`.

@@ -119,6 +119,15 @@ impl ChipModel {
         self.weight_cache = None;
     }
 
+    /// Drift-injection hook (fleet subsystem, DESIGN.md §12): age the
+    /// mismatch profile by an extra N(0, sigma) threshold shift per
+    /// mirror. Unlike VDD/temperature drift this changes the *relative*
+    /// weights, so eq. 26 renormalisation cannot cancel it.
+    pub fn age_mismatch(&mut self, extra_sigma: f64, seed: u64) {
+        self.mismatch.age(extra_sigma, seed);
+        self.weight_cache = None;
+    }
+
     /// Mismatch weight matrix at the current temperature (cached).
     pub fn weights(&mut self) -> &Mat {
         let t = self.cfg.temp_k;
@@ -411,6 +420,20 @@ mod tests {
         chip.set_temp(320.0);
         let h1 = chip.forward(&codes);
         assert_ne!(h0, h1);
+    }
+
+    #[test]
+    fn aging_changes_hidden_outputs_deterministically() {
+        let mut a = ChipModel::fabricate(small_cfg(), 11);
+        let mut b = ChipModel::fabricate(small_cfg(), 11);
+        let codes = vec![700u16; 16];
+        let h0 = a.forward(&codes);
+        a.age_mismatch(0.004, 77);
+        b.age_mismatch(0.004, 77);
+        let ha = a.forward(&codes);
+        let hb = b.forward(&codes);
+        assert_ne!(h0, ha, "aging must perturb the outputs");
+        assert_eq!(ha, hb, "same aging seed must give the same drifted die");
     }
 
     #[test]

@@ -335,6 +335,12 @@ pub struct SystemConfig {
     pub seed: u64,
     /// Apply eq. 26 normalisation on the serving path.
     pub normalize: bool,
+    /// Hot standby dies: fabricated and trained like actives but held
+    /// out of rotation until a quarantine promotes them (DESIGN.md §12).
+    pub standby_chips: usize,
+    /// Fleet-health settings: probe cadence, drift thresholds,
+    /// recovery/quarantine policy.
+    pub fleet: crate::fleet::FleetConfig,
 }
 
 impl Default for SystemConfig {
@@ -347,6 +353,8 @@ impl Default for SystemConfig {
             pjrt_min_batch: 8,
             seed: 0xE1_37,
             normalize: false,
+            standby_chips: 0,
+            fleet: crate::fleet::FleetConfig::default(),
         }
     }
 }
@@ -438,8 +446,15 @@ mod tests {
     }
 
     #[test]
-    fn kv_rejects_unknown_key() {
-        assert!(ChipConfig::from_kv("nonsense = 3").is_err());
+    fn kv_rejects_unknown_key_naming_it() {
+        // a typoed key must fail loudly, with the key and its line in
+        // the message — never be silently ignored
+        let err = ChipConfig::from_kv("nonsense = 3").unwrap_err();
+        assert!(err.contains("unknown key"), "{err}");
+        assert!(err.contains("nonsense"), "{err}");
+        assert!(err.contains("line 1"), "{err}");
+        let err = ChipConfig::from_kv("d = 4\nsigma_vtt = 0.01").unwrap_err();
+        assert!(err.contains("sigma_vtt") && err.contains("line 2"), "{err}");
     }
 
     #[test]

@@ -1,39 +1,60 @@
-//! Dynamic batching: collect requests from a channel into batches bounded
+//! Dynamic batching: collect messages from a channel into batches bounded
 //! by size and by holding time — the standard serving trade-off between
 //! per-request latency and per-batch amortisation (here: hitting the
-//! compiled PJRT batch shapes).
+//! compiled PJRT batch shapes). Fleet-health control messages ride the
+//! same channel (so control stays ordered with respect to control: a
+//! probe queued after a drift injection observes the drifted die) and
+//! are split out of the classify batch for the worker to run after the
+//! batch — traffic-vs-control ordering is batch-granular.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
 
-use super::request::ClassifyRequest;
+use super::request::{ClassifyRequest, ControlMsg, WorkerMsg};
+
+/// One drained unit of worker input: a classify batch (possibly empty)
+/// plus any control messages that arrived in the same window.
+pub struct Batch {
+    pub requests: Vec<ClassifyRequest>,
+    pub control: Vec<ControlMsg>,
+}
 
 /// Blockingly collect the next batch from `rx`.
 ///
-/// Waits (forever) for the first request; then drains until `max_batch`
-/// requests are held or `max_wait` has elapsed since the first one.
+/// Waits (forever) for the first message; then drains until `max_batch`
+/// classify requests are held or `max_wait` has elapsed since the first
+/// message. A control-only window returns an empty-request batch — the
+/// "empty-queue tick" that lets probes run on an idle worker.
 /// Returns `None` once the channel is closed and drained — the worker's
 /// shutdown signal.
 pub fn collect_batch(
-    rx: &Receiver<ClassifyRequest>,
+    rx: &Receiver<WorkerMsg>,
     max_batch: usize,
     max_wait: Duration,
-) -> Option<Vec<ClassifyRequest>> {
+) -> Option<Batch> {
     let first = rx.recv().ok()?;
     let deadline = Instant::now() + max_wait;
-    let mut batch = vec![first];
-    while batch.len() < max_batch {
+    let mut batch = Batch { requests: Vec::new(), control: Vec::new() };
+    push(&mut batch, first);
+    while batch.requests.len() < max_batch {
         let now = Instant::now();
         if now >= deadline {
             break;
         }
         match rx.recv_timeout(deadline - now) {
-            Ok(req) => batch.push(req),
+            Ok(msg) => push(&mut batch, msg),
             Err(RecvTimeoutError::Timeout) => break,
             Err(RecvTimeoutError::Disconnected) => break,
         }
     }
     Some(batch)
+}
+
+fn push(batch: &mut Batch, msg: WorkerMsg) {
+    match msg {
+        WorkerMsg::Classify(req) => batch.requests.push(req),
+        WorkerMsg::Control(ctl) => batch.control.push(ctl),
+    }
 }
 
 #[cfg(test)]
@@ -42,40 +63,81 @@ mod tests {
     use std::sync::mpsc;
     use std::time::Instant;
 
-    fn req(id: u64) -> ClassifyRequest {
+    fn req(id: u64) -> WorkerMsg {
         let (tx, _rx) = mpsc::channel();
-        ClassifyRequest { id, features: vec![], submitted: Instant::now(), reply: tx }
+        WorkerMsg::Classify(ClassifyRequest {
+            id,
+            features: vec![],
+            submitted: Instant::now(),
+            reply: tx,
+        })
+    }
+
+    fn ctl() -> WorkerMsg {
+        WorkerMsg::Control(ControlMsg::SetEnv {
+            vdd: None,
+            temp_k: Some(310.0),
+            age_sigma_vt: None,
+            seed: 1,
+        })
     }
 
     #[test]
-    fn collects_up_to_max_batch() {
+    fn max_size_flush_collects_up_to_max_batch() {
         let (tx, rx) = mpsc::channel();
         for i in 0..10 {
             tx.send(req(i)).unwrap();
         }
-        let b = collect_batch(&rx, 4, Duration::from_millis(50)).unwrap();
-        assert_eq!(b.len(), 4);
-        assert_eq!(b[0].id, 0);
-        assert_eq!(b[3].id, 3);
+        let t0 = Instant::now();
+        let b = collect_batch(&rx, 4, Duration::from_millis(200)).unwrap();
+        assert_eq!(b.requests.len(), 4);
+        assert_eq!(b.requests[0].id, 0);
+        assert_eq!(b.requests[3].id, 3);
+        // a full batch flushes immediately, well before the deadline
+        assert!(t0.elapsed() < Duration::from_millis(150));
         // the rest are still queued
         let b2 = collect_batch(&rx, 100, Duration::from_millis(5)).unwrap();
-        assert_eq!(b2.len(), 6);
+        assert_eq!(b2.requests.len(), 6);
     }
 
     #[test]
-    fn flushes_partial_batch_on_deadline() {
+    fn timeout_flushes_partial_batch_on_deadline() {
         let (tx, rx) = mpsc::channel();
         tx.send(req(1)).unwrap();
         let t0 = Instant::now();
         let b = collect_batch(&rx, 64, Duration::from_millis(20)).unwrap();
-        assert_eq!(b.len(), 1);
+        assert_eq!(b.requests.len(), 1);
+        assert!(b.control.is_empty());
         assert!(t0.elapsed() >= Duration::from_millis(18));
         drop(tx);
     }
 
     #[test]
+    fn empty_queue_tick_delivers_control_without_requests() {
+        // an idle worker woken only by a control message gets an
+        // empty-request batch carrying the control — the probe tick
+        let (tx, rx) = mpsc::channel();
+        tx.send(ctl()).unwrap();
+        let b = collect_batch(&rx, 8, Duration::from_millis(5)).unwrap();
+        assert!(b.requests.is_empty());
+        assert_eq!(b.control.len(), 1);
+        assert!(matches!(b.control[0], ControlMsg::SetEnv { .. }));
+    }
+
+    #[test]
+    fn control_rides_along_with_a_classify_batch() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(req(0)).unwrap();
+        tx.send(ctl()).unwrap();
+        tx.send(req(1)).unwrap();
+        let b = collect_batch(&rx, 8, Duration::from_millis(10)).unwrap();
+        assert_eq!(b.requests.len(), 2);
+        assert_eq!(b.control.len(), 1);
+    }
+
+    #[test]
     fn returns_none_when_closed() {
-        let (tx, rx) = mpsc::channel::<ClassifyRequest>();
+        let (tx, rx) = mpsc::channel::<WorkerMsg>();
         drop(tx);
         assert!(collect_batch(&rx, 8, Duration::from_millis(5)).is_none());
     }
@@ -89,7 +151,7 @@ mod tests {
         drop(tx);
         let mut seen = Vec::new();
         while let Some(b) = collect_batch(&rx, 7, Duration::from_millis(1)) {
-            seen.extend(b.iter().map(|r| r.id));
+            seen.extend(b.requests.iter().map(|r| r.id));
         }
         assert_eq!(seen, (0..50).collect::<Vec<_>>());
     }

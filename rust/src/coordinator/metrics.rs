@@ -18,6 +18,17 @@ pub struct Metrics {
     pub batched_requests: AtomicU64,
     latency_us: [AtomicU64; BUCKETS],
     latency_sum_us: AtomicU64,
+    // fleet-health counters (DESIGN.md §12)
+    /// Probe passes executed across the fleet.
+    pub probes: AtomicU64,
+    /// Tier-1 counting-window renormalisations applied.
+    pub renorms: AtomicU64,
+    /// Tier-2 chip-in-the-loop head refits completed.
+    pub refits: AtomicU64,
+    /// Dies quarantined after failed recovery.
+    pub quarantines: AtomicU64,
+    /// Hot standbys promoted into rotation.
+    pub promotions: AtomicU64,
 }
 
 impl Metrics {
@@ -47,19 +58,30 @@ impl Metrics {
         self.latency_us[bucket].fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Approximate percentile from the log2 histogram (upper bucket edge).
+    /// Approximate percentile from the log2 histogram, interpolated
+    /// within the bucket: the k-th of `count` samples in bucket
+    /// [2^i, 2^(i+1)) is placed at `2^i * (1 + (k - 0.5)/count)` —
+    /// uniform-within-bucket assumption. (Reporting the upper bucket
+    /// edge, as this used to, biases the estimate up to 2x high.)
     pub fn latency_percentile_us(&self, p: f64) -> u64 {
         let total: u64 = self.latency_us.iter().map(|b| b.load(Ordering::Relaxed)).sum();
         if total == 0 {
             return 0;
         }
-        let target = ((p / 100.0) * total as f64).ceil() as u64;
+        let target = ((p / 100.0) * total as f64).ceil().max(1.0) as u64;
         let mut acc = 0u64;
         for (i, b) in self.latency_us.iter().enumerate() {
-            acc += b.load(Ordering::Relaxed);
-            if acc >= target {
-                return 1u64 << (i + 1);
+            let count = b.load(Ordering::Relaxed);
+            if count == 0 {
+                continue;
             }
+            if acc + count >= target {
+                let k = (target - acc) as f64; // k-th sample inside this bucket
+                let lower = (1u64 << i) as f64;
+                let frac = ((k - 0.5) / count as f64).clamp(0.0, 1.0);
+                return (lower + lower * frac).round() as u64;
+            }
+            acc += count;
         }
         1u64 << BUCKETS
     }
@@ -84,7 +106,8 @@ impl Metrics {
     pub fn report(&self) -> String {
         format!(
             "requests={} responses={} batches={} (pjrt={}, sim={}, mean size {:.1}) \
-             latency mean={:.0}us p50<{}us p99<{}us",
+             latency mean={:.0}us p50~{}us p99~{}us \
+             fleet probes={} renorms={} refits={} quarantines={} promotions={}",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
@@ -94,6 +117,11 @@ impl Metrics {
             self.mean_latency_us(),
             self.latency_percentile_us(50.0),
             self.latency_percentile_us(99.0),
+            self.probes.load(Ordering::Relaxed),
+            self.renorms.load(Ordering::Relaxed),
+            self.refits.load(Ordering::Relaxed),
+            self.quarantines.load(Ordering::Relaxed),
+            self.promotions.load(Ordering::Relaxed),
         )
     }
 }
@@ -123,10 +151,51 @@ mod tests {
         for us in [10u64, 20, 40, 80, 160, 320, 640, 1280, 2560, 100_000] {
             m.record_response(Duration::from_micros(us));
         }
+        // 5th of 10 samples is 160 us, in bucket [128, 256): the
+        // interpolated estimate must stay inside that bucket (tighter
+        // than the old upper-edge report of 256)
         let p50 = m.latency_percentile_us(50.0);
-        assert!((64..=256).contains(&p50), "p50 {p50}");
+        assert!((128..256).contains(&p50), "p50 {p50}");
+        // 100_000 us lives in bucket [65536, 131072): p99 must bracket
+        // it within the bucket instead of reporting the 131072 edge
         let p99 = m.latency_percentile_us(99.0);
-        assert!(p99 >= 100_000, "p99 {p99}");
+        assert!((65536..131072).contains(&p99), "p99 {p99}");
+    }
+
+    #[test]
+    fn interpolated_percentile_bias_is_bounded_by_half_bucket() {
+        // upper-edge reporting returned up to 2x the true latency; the
+        // interpolated estimate of a single-valued distribution lands at
+        // the bucket midpoint — at most ~1.5x the bucket's lower edge
+        let m = Metrics::new();
+        for _ in 0..100 {
+            m.record_response(Duration::from_micros(1000)); // bucket [512, 1024)
+        }
+        let p50 = m.latency_percentile_us(50.0);
+        let p99 = m.latency_percentile_us(99.0);
+        assert!((512..1024).contains(&p50), "p50 {p50}");
+        assert!((512..1024).contains(&p99), "p99 {p99}");
+        // and the uniform-within-bucket spread is monotone in p
+        assert!(p99 >= p50, "p99 {p99} < p50 {p50}");
+    }
+
+    #[test]
+    fn single_sample_percentile_sits_mid_bucket() {
+        let m = Metrics::new();
+        m.record_response(Duration::from_micros(3000)); // bucket [2048, 4096)
+        let p50 = m.latency_percentile_us(50.0);
+        assert_eq!(p50, 3072, "one sample interpolates to the bucket midpoint");
+    }
+
+    #[test]
+    fn fleet_counters_appear_in_report() {
+        let m = Metrics::new();
+        m.probes.fetch_add(3, Ordering::Relaxed);
+        m.renorms.fetch_add(1, Ordering::Relaxed);
+        let r = m.report();
+        assert!(r.contains("probes=3"), "{r}");
+        assert!(r.contains("renorms=1"), "{r}");
+        assert!(r.contains("quarantines=0"), "{r}");
     }
 
     #[test]

@@ -1,11 +1,14 @@
 //! L3 serving coordinator: the paper's classifier chip recast as a
-//! request pipeline (DESIGN.md §8).
+//! request pipeline (DESIGN.md §8, §12).
 //!
 //! ```text
-//! client -> Coordinator::submit -> Router (least-loaded die)
+//! client -> Coordinator::submit -> Router (least-loaded HEALTHY die)
 //!        -> per-worker dynamic batcher -> hidden layer
 //!           (PJRT batched artifact | scalar chip sim)
 //!        -> fixed-point second stage -> response + metrics
+//!
+//! fleet manager -> probe / renormalise / refit control messages
+//!               -> per-die lifecycle state read by the router
 //! ```
 //!
 //! Threads + channels from std only (no tokio in the offline vendor
@@ -19,8 +22,8 @@ pub mod server;
 pub mod worker;
 pub mod workload;
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -31,24 +34,34 @@ use crate::config::{ChipConfig, SystemConfig};
 use crate::elm::secondstage::SecondStage;
 use crate::elm::train::{assemble_h, solve_head};
 use crate::elm::ChipHidden;
+use crate::fleet::{
+    DieState, DriftSchedule, FleetManager, FleetSetup, FleetState, ProbeSet,
+};
 
 pub use metrics::Metrics;
 pub use request::{Backend, ClassifyRequest, ClassifyResponse};
 pub use router::Router;
 
-/// A running serving system: router + one thread per fabricated die.
+/// A running serving system: router + one thread per fabricated die
+/// (actives and hot standbys) + the fleet-health manager.
 pub struct Coordinator {
     router: Router,
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
     workers: Vec<JoinHandle<()>>,
     pub d: usize,
+    fleet: Arc<Mutex<FleetManager>>,
+    /// Background prober (only when `fleet.probe_period` is set).
+    auto_probe: Option<(Arc<AtomicBool>, JoinHandle<()>)>,
 }
 
 impl Coordinator {
-    /// Fabricate `sys.n_chips` dies, train each die's head on the given
-    /// training set (per-die mismatch means per-die weights — exactly the
-    /// chip-in-the-loop training of Section VI-C), then start serving.
+    /// Fabricate `sys.n_chips + sys.standby_chips` dies, train each
+    /// die's head on the given training set (per-die mismatch means
+    /// per-die weights — exactly the chip-in-the-loop training of
+    /// Section VI-C), enrol a fleet-health baseline per die, then start
+    /// serving. Standby dies are fully trained but held out of rotation
+    /// until a quarantine promotes them.
     pub fn start(
         sys: &SystemConfig,
         chip_cfg: &ChipConfig,
@@ -58,9 +71,17 @@ impl Coordinator {
         beta_bits: u32,
     ) -> Result<Coordinator> {
         let metrics = Arc::new(Metrics::new());
+        let n_total = sys.n_chips + sys.standby_chips;
+        let probe = Arc::new(ProbeSet::from_training(
+            train_x,
+            train_y,
+            sys.fleet.probe_n,
+            chip_cfg,
+        ));
         let mut senders = Vec::new();
         let mut setups = Vec::new();
-        for i in 0..sys.n_chips {
+        let mut baselines = Vec::new();
+        for i in 0..n_total {
             let seed = sys.seed + i as u64;
             let chip = ChipModel::fabricate(chip_cfg.clone(), seed);
             // chip-in-the-loop training on this die
@@ -73,11 +94,15 @@ impl Coordinator {
             let head = solve_head(&h, train_y, lambda)
                 .map_err(|e| anyhow::anyhow!("training die {i}: {e}"))?;
             let second = SecondStage::new(&head.beta, beta_bits, sys.normalize);
+            // fleet enrolment: baseline probe on the freshly trained die
+            let mut chip = hidden.chip;
+            baselines.push(crate::fleet::probe::run_probe(&mut chip, &second, &probe));
             let (tx, rx) = mpsc::channel();
             senders.push(tx);
-            setups.push((i, hidden.chip, second, rx));
+            setups.push((i, chip, second, rx));
         }
-        let router = Router::new(senders);
+        let state = FleetState::new(n_total, sys.n_chips);
+        let router = Router::with_health(senders.clone(), state.clone());
         let mut workers = Vec::new();
         for (i, chip, second, rx) in setups {
             let setup = worker::WorkerSetup {
@@ -100,8 +125,51 @@ impl Coordinator {
                     .context("spawning worker")?,
             );
         }
+        let manager = FleetManager::new(FleetSetup {
+            senders,
+            state,
+            outstanding: router.outstanding.clone(),
+            metrics: Arc::clone(&metrics),
+            cfg: sys.fleet.clone(),
+            probe,
+            baselines,
+            refit_x: Arc::new(train_x.to_vec()),
+            refit_y: Arc::new(train_y.to_vec()),
+            lambda,
+            beta_bits,
+        });
+        let fleet = Arc::new(Mutex::new(manager));
+        let auto_probe = sys.fleet.probe_period.map(|period| {
+            let stop = Arc::new(AtomicBool::new(false));
+            let stop2 = Arc::clone(&stop);
+            let fleet2 = Arc::clone(&fleet);
+            let handle = std::thread::Builder::new()
+                .name("velm-fleet-prober".into())
+                .spawn(move || {
+                    let slice = std::time::Duration::from_millis(5).min(period);
+                    let mut since_tick = std::time::Duration::ZERO;
+                    while !stop2.load(Ordering::Relaxed) {
+                        std::thread::sleep(slice);
+                        since_tick += slice;
+                        if since_tick >= period {
+                            fleet2.lock().unwrap().tick();
+                            since_tick = std::time::Duration::ZERO;
+                        }
+                    }
+                })
+                .expect("spawning fleet prober");
+            (stop, handle)
+        });
         let d = train_x.first().map_or(chip_cfg.d, |x| x.len());
-        Ok(Coordinator { router, metrics, next_id: AtomicU64::new(0), workers, d })
+        Ok(Coordinator {
+            router,
+            metrics,
+            next_id: AtomicU64::new(0),
+            workers,
+            d,
+            fleet,
+            auto_probe,
+        })
     }
 
     /// Start serving at an autotuned [`OperatingPoint`]
@@ -159,10 +227,69 @@ impl Coordinator {
         self.router.n_workers()
     }
 
-    /// Graceful shutdown: close the queues and join the worker threads.
+    // --- fleet-health surface (DESIGN.md §12) ---
+
+    /// Run one probe/recovery pass over the fleet (tests, CLI; the
+    /// background prober calls this on its own when a cadence is set).
+    pub fn fleet_tick(&self) {
+        self.fleet.lock().unwrap().tick();
+    }
+
+    /// One-line fleet status: per-die lifecycle gauges + recovery
+    /// counters (the TCP `HEALTH` command). Reads only shared atomics —
+    /// no manager lock — so it stays responsive while a tick is blocked
+    /// on a slow worker reply.
+    pub fn fleet_status(&self) -> String {
+        crate::fleet::lifecycle::status_line(&self.router.health, &self.metrics)
+    }
+
+    /// The fleet manager's bounded human-readable event log.
+    pub fn fleet_log(&self) -> Vec<String> {
+        self.fleet.lock().unwrap().log().to_vec()
+    }
+
+    /// Per-die lifecycle snapshot (lock-free, see `fleet_status`).
+    pub fn health_snapshot(&self) -> Vec<DieState> {
+        self.router.health.snapshot()
+    }
+
+    /// Operator drain (the TCP `DRAIN <die>` command): pull a die from
+    /// rotation; subsequent ticks recalibrate and re-admit it.
+    pub fn drain_die(&self, die: usize) -> Result<()> {
+        self.fleet
+            .lock()
+            .unwrap()
+            .drain(die)
+            .map_err(|e| anyhow::anyhow!("{e}"))
+    }
+
+    /// Install a drift-injection schedule (replayed by subsequent ticks).
+    pub fn set_drift_schedule(&self, schedule: DriftSchedule) {
+        self.fleet.lock().unwrap().set_schedule(schedule);
+    }
+
+    /// Immediately inject a drift event (Fig. 17/18-style perturbation)
+    /// into one die or the whole fleet.
+    pub fn inject_drift(
+        &self,
+        die: Option<usize>,
+        vdd: Option<f64>,
+        temp_k: Option<f64>,
+        age_sigma_vt: Option<f64>,
+    ) {
+        self.fleet.lock().unwrap().inject(die, vdd, temp_k, age_sigma_vt);
+    }
+
+    /// Graceful shutdown: stop the prober, close the queues and join
+    /// the worker threads.
     pub fn shutdown(self) {
-        let Coordinator { router, workers, .. } = self;
-        drop(router); // drops senders -> workers drain and exit
+        let Coordinator { router, workers, fleet, auto_probe, .. } = self;
+        if let Some((stop, handle)) = auto_probe {
+            stop.store(true, Ordering::Relaxed);
+            let _ = handle.join();
+        }
+        drop(router); // drops the router's senders
+        drop(fleet); // drops the manager's senders -> workers drain and exit
         for w in workers {
             let _ = w.join();
         }
@@ -184,6 +311,8 @@ mod tests {
             pjrt_min_batch: 4,
             seed: 99,
             normalize: false,
+            standby_chips: 0,
+            fleet: Default::default(),
         };
         let chip = ChipConfig::default()
             .with_dims(6, 24)
@@ -263,6 +392,72 @@ mod tests {
         let (sys, chip, xs, ys) = tiny_system();
         let coord = Coordinator::start(&sys, &chip, &xs, &ys, 1e-2, 10).unwrap();
         assert!(coord.submit(vec![0.0; 3]).is_err());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn stable_fleet_ticks_keep_dies_healthy_and_serving() {
+        let (sys, chip, xs, ys) = tiny_system();
+        let coord = Coordinator::start(&sys, &chip, &xs, &ys, 1e-2, 10).unwrap();
+        for _ in 0..3 {
+            coord.fleet_tick();
+        }
+        assert!(
+            coord.health_snapshot().iter().all(|&s| s == DieState::Healthy),
+            "{}",
+            coord.fleet_status()
+        );
+        assert!(coord.metrics.probes.load(Ordering::Relaxed) >= 6);
+        assert_eq!(coord.metrics.renorms.load(Ordering::Relaxed), 0);
+        let resp = coord.classify(xs[0].clone()).unwrap();
+        assert!(resp.label == 1 || resp.label == -1);
+        let status = coord.fleet_status();
+        assert!(status.contains("die0=Healthy"), "{status}");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn standby_dies_are_trained_but_not_routed() {
+        let (mut sys, chip, xs, ys) = tiny_system();
+        sys.standby_chips = 1;
+        let coord = Coordinator::start(&sys, &chip, &xs, &ys, 1e-2, 10).unwrap();
+        assert_eq!(coord.n_workers(), 3);
+        assert_eq!(coord.health_snapshot()[2], DieState::Standby);
+        for i in 0..30 {
+            let resp = coord.classify(xs[i % xs.len()].clone()).unwrap();
+            assert_ne!(resp.worker, 2, "standby die must not serve traffic");
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn operator_drain_recalibrates_and_readmits() {
+        let (sys, chip, xs, ys) = tiny_system();
+        let coord = Coordinator::start(&sys, &chip, &xs, &ys, 1e-2, 10).unwrap();
+        coord.drain_die(0).unwrap();
+        assert_eq!(coord.health_snapshot()[0], DieState::Draining);
+        // draining dies cannot be drained again
+        assert!(coord.drain_die(0).is_err());
+        assert!(coord.drain_die(99).is_err());
+        // traffic keeps flowing on die 1 while die 0 is out
+        for i in 0..10 {
+            let resp = coord.classify(xs[i].clone()).unwrap();
+            assert_eq!(resp.worker, 1);
+        }
+        // tick 1: drained (no outstanding) -> Recalibrating;
+        // tick 2: refit -> Healthy again
+        coord.fleet_tick();
+        coord.fleet_tick();
+        let snap = coord.health_snapshot();
+        assert_eq!(snap[0], DieState::Healthy, "{}", coord.fleet_status());
+        assert!(coord.metrics.refits.load(Ordering::Relaxed) >= 1);
+        // and it serves traffic again
+        let mut hit0 = false;
+        for i in 0..20 {
+            let resp = coord.classify(xs[i].clone()).unwrap();
+            hit0 |= resp.worker == 0;
+        }
+        assert!(hit0, "re-admitted die should see traffic");
         coord.shutdown();
     }
 }

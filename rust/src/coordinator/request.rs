@@ -1,7 +1,11 @@
-//! Request/response types flowing through the serving pipeline.
+//! Request/response types flowing through the serving pipeline, plus
+//! the fleet-health control messages workers interleave with traffic.
 
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::Instant;
+
+use crate::fleet::probe::{ProbeReport, ProbeSet};
 
 /// Which engine produced the hidden layer for a response.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -28,6 +32,52 @@ pub struct ClassifyRequest {
     pub features: Vec<f64>,
     pub submitted: Instant,
     pub reply: mpsc::Sender<ClassifyResponse>,
+}
+
+/// Everything a worker can receive: traffic, or a fleet-health control
+/// message (DESIGN.md §12). Control rides the same channel, so control
+/// messages execute in the order they were sent — a probe sent after a
+/// drift injection always observes the drifted die. (Classify requests
+/// collected into the same batch window are served *before* that
+/// window's control messages, so traffic-vs-control ordering is only
+/// batch-granular.)
+#[derive(Debug)]
+pub enum WorkerMsg {
+    Classify(ClassifyRequest),
+    Control(ControlMsg),
+}
+
+/// Fleet-health commands executed on the worker thread (which owns the
+/// die). Replies go back over per-command channels to the
+/// `fleet::FleetManager`.
+#[derive(Debug)]
+pub enum ControlMsg {
+    /// Classify the pinned probe set + read the reference columns.
+    Probe {
+        probe: Arc<ProbeSet>,
+        reply: mpsc::Sender<ProbeReport>,
+    },
+    /// Drift injection (tests/benches replaying Figs. 17/18): change
+    /// VDD / temperature, or age the mismatch profile.
+    SetEnv {
+        vdd: Option<f64>,
+        temp_k: Option<f64>,
+        age_sigma_vt: Option<f64>,
+        seed: u64,
+    },
+    /// Tier-1 recovery: cancel a measured common-mode gain by
+    /// reprogramming the counting window. Replies with the new T_neu.
+    Renormalize { gain: f64, reply: mpsc::Sender<f64> },
+    /// Tier-2 recovery: chip-in-the-loop head refit on the (drained)
+    /// die; replies with a post-refit probe report.
+    Refit {
+        xs: Arc<Vec<Vec<f64>>>,
+        ys: Arc<Vec<f64>>,
+        lambda: f64,
+        beta_bits: u32,
+        probe: Arc<ProbeSet>,
+        reply: mpsc::Sender<Result<ProbeReport, String>>,
+    },
 }
 
 /// The answer.

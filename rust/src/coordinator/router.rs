@@ -1,14 +1,20 @@
 //! Request router: spreads classification requests across the worker
 //! (die) pool by least outstanding work, falling back to round-robin on
 //! ties — each worker owns one fabricated chip and its own trained head.
+//! Routing is health-aware (DESIGN.md §12): only dies the fleet manager
+//! marks `Healthy` are candidates, so drained / recalibrating /
+//! quarantined dies and cold standbys never see traffic.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
 
-use super::request::ClassifyRequest;
+use crate::fleet::FleetState;
+
+use super::request::{ClassifyRequest, WorkerMsg};
 
 /// Shared outstanding-work counters, decremented by workers on reply.
+/// The fleet manager reads them to decide when a draining die is idle.
 #[derive(Clone)]
 pub struct Outstanding(pub Arc<Vec<AtomicUsize>>);
 
@@ -31,41 +37,58 @@ impl Outstanding {
 }
 
 pub struct Router {
-    senders: Vec<Sender<ClassifyRequest>>,
+    senders: Vec<Sender<WorkerMsg>>,
     pub outstanding: Outstanding,
+    /// Per-die lifecycle gauges; only `Healthy` dies are routable.
+    pub health: FleetState,
     rr: AtomicU64,
 }
 
 impl Router {
-    pub fn new(senders: Vec<Sender<ClassifyRequest>>) -> Self {
+    /// Router over an all-healthy pool (no standbys) — tests and callers
+    /// that don't run the fleet manager.
+    pub fn new(senders: Vec<Sender<WorkerMsg>>) -> Self {
+        let n = senders.len();
+        Router::with_health(senders, FleetState::new(n, n))
+    }
+
+    /// Router sharing the fleet manager's health state.
+    pub fn with_health(senders: Vec<Sender<WorkerMsg>>, health: FleetState) -> Self {
         let outstanding = Outstanding::new(senders.len());
-        Router { senders, outstanding, rr: AtomicU64::new(0) }
+        Router { senders, outstanding, health, rr: AtomicU64::new(0) }
     }
 
     pub fn n_workers(&self) -> usize {
         self.senders.len()
     }
 
-    /// Pick the least-loaded worker (round-robin tiebreak) and enqueue.
+    /// Pick the least-loaded *healthy* worker (round-robin tiebreak) and
+    /// enqueue. Errors when no die is in the `Healthy` state.
     pub fn route(&self, req: ClassifyRequest) -> Result<usize, String> {
         let n = self.senders.len();
         if n == 0 {
             return Err("no workers".into());
         }
         let start = (self.rr.fetch_add(1, Ordering::Relaxed) as usize) % n;
-        let mut best = start;
+        let mut best = usize::MAX;
         let mut best_load = usize::MAX;
         for k in 0..n {
             let w = (start + k) % n;
+            if !self.health.routable(w) {
+                continue;
+            }
             let load = self.outstanding.load(w);
             if load < best_load {
                 best = w;
                 best_load = load;
             }
         }
+        if best == usize::MAX {
+            return Err("no healthy workers".into());
+        }
         self.outstanding.inc(best);
         self.senders[best]
-            .send(req)
+            .send(WorkerMsg::Classify(req))
             .map_err(|_| format!("worker {best} is gone"))?;
         Ok(best)
     }
@@ -74,12 +97,22 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fleet::DieState;
     use std::sync::mpsc;
     use std::time::Instant;
 
     fn req(id: u64) -> ClassifyRequest {
         let (tx, _rx) = mpsc::channel();
         ClassifyRequest { id, features: vec![], submitted: Instant::now(), reply: tx }
+    }
+
+    fn queued_ids(rx: &mpsc::Receiver<WorkerMsg>) -> Vec<u64> {
+        rx.try_iter()
+            .filter_map(|m| match m {
+                WorkerMsg::Classify(r) => Some(r.id),
+                WorkerMsg::Control(_) => None,
+            })
+            .collect()
     }
 
     #[test]
@@ -96,7 +129,7 @@ mod tests {
         }
         assert_eq!(counts[0] + counts[1], 10);
         assert!(counts[0] >= 4 && counts[1] >= 4, "{counts:?}");
-        assert_eq!(r0.try_iter().count() + r1.try_iter().count(), 10);
+        assert_eq!(queued_ids(&r0).len() + queued_ids(&r1).len(), 10);
     }
 
     #[test]
@@ -125,12 +158,9 @@ mod tests {
         for i in 0..100 {
             router.route(req(i)).unwrap();
         }
-        let mut ids: Vec<u64> = r0
-            .try_iter()
-            .chain(r1.try_iter())
-            .chain(r2.try_iter())
-            .map(|r| r.id)
-            .collect();
+        let mut ids: Vec<u64> = queued_ids(&r0);
+        ids.extend(queued_ids(&r1));
+        ids.extend(queued_ids(&r2));
         ids.sort_unstable();
         assert_eq!(ids, (0..100).collect::<Vec<_>>());
     }
@@ -195,6 +225,60 @@ mod tests {
         let (t0, r0) = mpsc::channel();
         drop(r0);
         let router = Router::new(vec![t0]);
+        assert!(router.route(req(1)).is_err());
+    }
+
+    #[test]
+    fn skips_non_healthy_dies() {
+        let (t0, r0) = mpsc::channel();
+        let (t1, r1) = mpsc::channel();
+        let router = Router::new(vec![t0, t1]);
+        router.health.set(0, DieState::Draining);
+        for i in 0..6 {
+            let w = router.route(req(i)).unwrap();
+            assert_eq!(w, 1, "request {i} must avoid the draining die");
+            router.outstanding.dec(w);
+        }
+        assert!(queued_ids(&r0).is_empty());
+        assert_eq!(queued_ids(&r1).len(), 6);
+        // recovery re-admits the die into rotation
+        router.health.set(0, DieState::Healthy);
+        let mut hit0 = false;
+        for i in 0..6 {
+            let w = router.route(req(i)).unwrap();
+            hit0 |= w == 0;
+            router.outstanding.dec(w);
+        }
+        assert!(hit0, "re-admitted die must receive traffic again");
+    }
+
+    #[test]
+    fn standby_pool_is_never_routed_until_promoted() {
+        let (t0, _r0) = mpsc::channel();
+        let (t1, r1) = mpsc::channel();
+        let health = FleetState::new(2, 1); // die 1 is a hot standby
+        let router = Router::with_health(vec![t0, t1], health);
+        for i in 0..4 {
+            assert_eq!(router.route(req(i)).unwrap(), 0);
+            router.outstanding.dec(0);
+        }
+        assert!(queued_ids(&r1).is_empty());
+        // promotion makes it routable
+        router.health.set(1, DieState::Healthy);
+        let mut hit1 = false;
+        for i in 0..6 {
+            let w = router.route(req(i)).unwrap();
+            hit1 |= w == 1;
+            router.outstanding.dec(w);
+        }
+        assert!(hit1);
+    }
+
+    #[test]
+    fn no_healthy_workers_is_an_error() {
+        let (t0, _r0) = mpsc::channel();
+        let router = Router::new(vec![t0]);
+        router.health.set(0, DieState::Quarantined);
         assert!(router.route(req(1)).is_err());
     }
 }

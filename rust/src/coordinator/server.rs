@@ -4,6 +4,8 @@
 //! Protocol (newline-terminated ASCII):
 //!   `CLASSIFY x1,x2,...,xd`  ->  `OK <label> <score>`
 //!   `STATS`                  ->  `OK <metrics one-liner>`
+//!   `HEALTH`                 ->  `OK <per-die lifecycle gauges + fleet counters>`
+//!   `DRAIN <die>`            ->  `OK draining die <die>` (recalibrated + re-admitted by the fleet manager)
 //!   `PING`                   ->  `OK pong`
 //!   `QUIT`                   ->  closes the connection
 //! Errors come back as `ERR <reason>`.
@@ -26,6 +28,14 @@ pub fn handle_line(coord: &Coordinator, line: &str) -> Option<String> {
     match cmd.to_ascii_uppercase().as_str() {
         "PING" => Some("OK pong".into()),
         "STATS" => Some(format!("OK {}", coord.metrics.report())),
+        "HEALTH" => Some(format!("OK {}", coord.fleet_status())),
+        "DRAIN" => match rest.trim().parse::<usize>() {
+            Err(_) => Some(format!("ERR DRAIN wants a die index, got '{rest}'")),
+            Ok(die) => match coord.drain_die(die) {
+                Ok(()) => Some(format!("OK draining die {die}")),
+                Err(e) => Some(format!("ERR {e:#}")),
+            },
+        },
         "QUIT" => None,
         "CLASSIFY" => {
             let features: std::result::Result<Vec<f64>, _> =

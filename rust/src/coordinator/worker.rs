@@ -3,6 +3,9 @@
 //! the dynamic batcher; the hidden layer runs on the batched AOT
 //! artifact when the batch is large enough, else on the scalar chip
 //! simulator; the fixed-point second stage produces the score.
+//! Fleet-health control messages (probe / drift injection / renormalise
+//! / refit — DESIGN.md §12) ride the same channel and execute here,
+//! because this thread owns the die.
 
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
@@ -11,11 +14,12 @@ use std::time::Duration;
 use crate::chip::{dac, ChipModel};
 use crate::config::SystemConfig;
 use crate::elm::secondstage::{codes_sum, SecondStage};
+use crate::fleet::{calibrate, probe};
 use crate::runtime::PjrtEngine;
 
 use super::batcher::collect_batch;
 use super::metrics::Metrics;
-use super::request::{Backend, ClassifyRequest, ClassifyResponse};
+use super::request::{Backend, ClassifyRequest, ClassifyResponse, ControlMsg, WorkerMsg};
 use super::router::Outstanding;
 
 /// Everything one worker needs, bundled for the spawn.
@@ -26,7 +30,7 @@ pub struct WorkerSetup {
     /// Artifact directory; the engine itself is created *inside* the
     /// worker thread (PJRT handles are not `Send`).
     pub artifact_dir: Option<String>,
-    pub rx: Receiver<ClassifyRequest>,
+    pub rx: Receiver<WorkerMsg>,
     pub metrics: Arc<Metrics>,
     pub outstanding: Outstanding,
     pub max_batch: usize,
@@ -39,54 +43,118 @@ pub struct WorkerSetup {
 pub fn run(mut s: WorkerSetup) {
     // PJRT engine lives entirely on this thread (handles are not Send)
     let mut engine: Option<PjrtEngine> = s.artifact_dir.as_deref().and_then(open_engine);
-    // weight matrix for the PJRT path, frozen at spawn temperature
+    // weight matrix for the PJRT path, frozen at spawn conditions
     let w_f32: Vec<f32> = s.chip.weights().to_f32();
+    // The AOT artifact bakes the nominal corner (spawn-time weights,
+    // fabricated T_neu, nominal VDD). Once drift injection or a
+    // renormalisation changes the die underneath it, the artifact no
+    // longer matches the chip's physics — scoring small batches on the
+    // sim and large ones on a stale artifact would split one die into
+    // two inconsistent classifiers. So the first such control message
+    // pins this die to the simulator for good.
+    let mut artifact_stale = false;
     let d = s.chip.cfg.d;
     let l = s.chip.cfg.l;
     while let Some(batch) = collect_batch(&s.rx, s.max_batch, s.max_wait) {
-        let n = batch.len();
-        let use_pjrt = engine.is_some() && n >= s.pjrt_min_batch;
-        s.metrics.record_batch(n, use_pjrt);
-        // DAC quantisation happens once, shared by both paths
-        let codes: Vec<Vec<u16>> = batch
+        if !batch.requests.is_empty() {
+            serve_batch(&mut s, &mut engine, &w_f32, d, l, &batch.requests, artifact_stale);
+        }
+        for ctl in batch.control {
+            handle_control(&mut s, &mut artifact_stale, ctl);
+        }
+    }
+}
+
+/// Serve one classify batch through PJRT or the chip simulator.
+fn serve_batch(
+    s: &mut WorkerSetup,
+    engine: &mut Option<PjrtEngine>,
+    w_f32: &[f32],
+    d: usize,
+    l: usize,
+    requests: &[ClassifyRequest],
+    artifact_stale: bool,
+) {
+    let n = requests.len();
+    let use_pjrt = engine.is_some() && !artifact_stale && n >= s.pjrt_min_batch;
+    s.metrics.record_batch(n, use_pjrt);
+    // DAC quantisation happens once, shared by both paths
+    let codes: Vec<Vec<u16>> = requests
+        .iter()
+        .map(|r| dac::features_to_codes(&r.features, &s.chip.cfg))
+        .collect();
+    let hidden: Vec<Vec<u32>> = if use_pjrt {
+        let engine = engine.as_mut().unwrap();
+        let flat: Vec<f32> = codes
             .iter()
-            .map(|r| dac::features_to_codes(&r.features, &s.chip.cfg))
+            .flat_map(|c| c.iter().map(|&v| v as f32))
             .collect();
-        let hidden: Vec<Vec<u32>> = if use_pjrt {
-            let engine = engine.as_mut().unwrap();
-            let flat: Vec<f32> = codes
-                .iter()
-                .flat_map(|c| c.iter().map(|&v| v as f32))
-                .collect();
-            match engine.hidden(&flat, n, d, l, &w_f32, false) {
-                Ok(out) => out
-                    .chunks(l)
-                    .map(|row| row.iter().map(|&v| v.max(0.0) as u32).collect())
-                    .collect(),
-                Err(e) => {
-                    // artifact trouble: fall back to the simulator
-                    eprintln!("worker {}: pjrt failed ({e:#}); falling back", s.index);
-                    codes.iter().map(|c| s.chip.forward(c)).collect()
-                }
+        match engine.hidden(&flat, n, d, l, w_f32, false) {
+            Ok(out) => out
+                .chunks(l)
+                .map(|row| row.iter().map(|&v| v.max(0.0) as u32).collect())
+                .collect(),
+            Err(e) => {
+                // artifact trouble: fall back to the simulator
+                eprintln!("worker {}: pjrt failed ({e:#}); falling back", s.index);
+                codes.iter().map(|c| s.chip.forward(c)).collect()
             }
-        } else {
-            codes.iter().map(|c| s.chip.forward(c)).collect()
+        }
+    } else {
+        codes.iter().map(|c| s.chip.forward(c)).collect()
+    };
+    let backend = if use_pjrt { Backend::Pjrt } else { Backend::ChipSim };
+    for ((req, code), h) in requests.iter().zip(&codes).zip(&hidden) {
+        let score = s.second.score(h, codes_sum(code));
+        let resp = ClassifyResponse {
+            id: req.id,
+            score,
+            label: if score >= 0.0 { 1 } else { -1 },
+            worker: s.index,
+            backend,
+            latency: req.submitted.elapsed(),
         };
-        let backend = if use_pjrt { Backend::Pjrt } else { Backend::ChipSim };
-        for ((req, code), h) in batch.iter().zip(&codes).zip(&hidden) {
-            let score = s.second.score(h, codes_sum(code));
-            let resp = ClassifyResponse {
-                id: req.id,
-                score,
-                label: if score >= 0.0 { 1 } else { -1 },
-                worker: s.index,
-                backend,
-                latency: req.submitted.elapsed(),
-            };
-            s.metrics.record_response(resp.latency);
-            s.outstanding.dec(s.index);
-            // receiver may have hung up; that's the client's business
-            let _ = req.reply.send(resp);
+        s.metrics.record_response(resp.latency);
+        s.outstanding.dec(s.index);
+        // receiver may have hung up; that's the client's business
+        let _ = req.reply.send(resp);
+    }
+}
+
+/// Execute one fleet-health control message on the die this thread owns.
+fn handle_control(s: &mut WorkerSetup, artifact_stale: &mut bool, ctl: ControlMsg) {
+    match ctl {
+        ControlMsg::Probe { probe: set, reply } => {
+            let rep = probe::run_probe(&mut s.chip, &s.second, &set);
+            let _ = reply.send(rep);
+        }
+        ControlMsg::SetEnv { vdd, temp_k, age_sigma_vt, seed } => {
+            if let Some(v) = vdd {
+                s.chip.set_vdd(v);
+            }
+            if let Some(t) = temp_k {
+                s.chip.set_temp(t);
+            }
+            if let Some(sigma) = age_sigma_vt {
+                s.chip.age_mismatch(sigma, seed);
+            }
+            *artifact_stale = true; // the artifact's corner is gone
+        }
+        ControlMsg::Renormalize { gain, reply } => {
+            let t_neu = calibrate::renormalize(&mut s.chip, gain);
+            *artifact_stale = true; // artifact counts keep the old T_neu
+            let _ = reply.send(t_neu);
+        }
+        ControlMsg::Refit { xs, ys, lambda, beta_bits, probe: set, reply } => {
+            let res = calibrate::refit_head(&mut s.chip, s.normalize, &xs, &ys, lambda, beta_bits)
+                .map(|second| {
+                    s.second = second;
+                    probe::run_probe(&mut s.chip, &s.second, &set)
+                });
+            // the refit head was solved against the *current* (drifted)
+            // die, which the frozen artifact does not model
+            *artifact_stale = true;
+            let _ = reply.send(res);
         }
     }
 }

@@ -1,0 +1,215 @@
+//! Two-tier die recovery (DESIGN.md §12).
+//!
+//! **Tier 1 — renormalisation** (cheap, die stays in rotation): the
+//! common-mode drift gain measured on the reference columns is cancelled
+//! by reprogramming the counting window `T_neu` — the same knob the
+//! paper adjusts between operating points (`ChipModel::program_t_neu`).
+//! This restores the count *scale* into the counter's dynamic range
+//! (un-saturating columns pushed over 2^b by a hot bias), which is what
+//! the eq. 26 reference normalisation buys at system level.
+//!
+//! **Tier 2 — chip-in-the-loop head refit** (die drained first): when
+//! the mismatch *profile* changed (aging, large temperature excursions
+//! compressing eq. 12 weights through U_T), no common-mode correction
+//! helps; the output weights are re-solved on the drifted die via the
+//! OS-ELM path (`elm::online` RLS warm-started from a batch solve).
+
+use crate::chip::{dac, ChipModel};
+use crate::elm::online::OnlineElm;
+use crate::elm::secondstage::{codes_sum, normalize_h, SecondStage};
+use crate::util::mat::Mat;
+
+/// Common-mode gain of `current` reference counts over the enrolment
+/// `baseline` (total-count ratio). Clamped away from zero so a dead die
+/// cannot produce an infinite correction.
+pub fn common_mode_gain(baseline: &[f64], current: &[f64]) -> f64 {
+    let b: f64 = baseline.iter().sum();
+    let c: f64 = current.iter().sum();
+    if b <= 0.0 {
+        return 1.0;
+    }
+    (c / b).max(1e-6)
+}
+
+/// Mismatch-profile residual: relative RMS deviation of the reference
+/// columns after removing the common-mode gain. Near zero for pure
+/// VDD/temperature bias drift; grows when the per-mirror weights move
+/// relative to each other (aging, U_T compression).
+pub fn profile_residual(baseline: &[f64], current: &[f64]) -> f64 {
+    let g = common_mode_gain(baseline, current);
+    let mut acc = 0.0;
+    let mut n = 0usize;
+    for (&b, &c) in baseline.iter().zip(current) {
+        if b > 1.0 {
+            // near-dead columns carry quantisation noise, not signal
+            let dev = c / g / b - 1.0;
+            acc += dev * dev;
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        (acc / n as f64).sqrt()
+    }
+}
+
+/// Tier-1 renormalisation: reprogram the counting window to cancel a
+/// measured common-mode gain. The per-step correction is clamped to
+/// [1/8, 8] so a pathological reading (dead die) cannot blow the window
+/// up; escalation to tier 2 handles those. Returns the new `T_neu`.
+pub fn renormalize(chip: &mut ChipModel, gain: f64) -> f64 {
+    let correction = gain.clamp(1.0 / 8.0, 8.0);
+    let t = chip.t_neu_set / correction;
+    chip.program_t_neu(t);
+    t
+}
+
+/// Tier-2 refit: re-solve the output weights chip-in-the-loop on the
+/// drifted die. Assembles H exactly as the serving/training path does
+/// (counter counts rescaled by 2^b, optional eq. 26 normalisation),
+/// warm-starts the OS-ELM recursive solver on the first half and streams
+/// the second half through RLS updates — the same machinery can keep
+/// absorbing labelled traffic afterwards. Returns the refitted second
+/// stage ready to deploy.
+pub fn refit_head(
+    chip: &mut ChipModel,
+    normalize: bool,
+    xs: &[Vec<f64>],
+    ys: &[f64],
+    lambda: f64,
+    beta_bits: u32,
+) -> Result<SecondStage, String> {
+    if xs.is_empty() || xs.len() != ys.len() {
+        return Err("refit needs a non-empty x/y set of equal length".into());
+    }
+    let scale = 1.0 / chip.cfg.cap() as f64;
+    let rows: Vec<Vec<f64>> = xs
+        .iter()
+        .map(|x| {
+            let codes = dac::features_to_codes(x, &chip.cfg);
+            let h = chip.forward(&codes);
+            if normalize {
+                normalize_h(&h, codes_sum(&codes))
+                    .into_iter()
+                    .map(|v| v * scale)
+                    .collect()
+            } else {
+                h.iter().map(|&v| v as f64 * scale).collect()
+            }
+        })
+        .collect();
+    let hmat = Mat::from_rows(&rows);
+    let n0 = (hmat.rows / 2).max(1);
+    let h0 = Mat::from_rows(&(0..n0).map(|i| hmat.row(i).to_vec()).collect::<Vec<_>>());
+    let mut rls = OnlineElm::from_batch(&h0, &ys[..n0], lambda)?;
+    for i in n0..hmat.rows {
+        rls.update(hmat.row(i), ys[i]);
+    }
+    Ok(SecondStage::new(&rls.beta, beta_bits, normalize))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ChipConfig;
+    use crate::elm::secondstage::SecondStage;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn gain_and_residual_decompose_drift_modes() {
+        let base = vec![100.0, 200.0, 300.0, 400.0];
+        // pure common-mode: every column up 20%
+        let cm: Vec<f64> = base.iter().map(|v| v * 1.2).collect();
+        assert!((common_mode_gain(&base, &cm) - 1.2).abs() < 1e-12);
+        assert!(profile_residual(&base, &cm) < 1e-12);
+        // profile change: columns move in opposite directions, same total
+        let prof = vec![150.0, 150.0, 350.0, 350.0];
+        assert!((common_mode_gain(&base, &prof) - 1.0).abs() < 1e-12);
+        assert!(profile_residual(&base, &prof) > 0.1);
+    }
+
+    #[test]
+    fn gain_is_clamped_for_dead_reference() {
+        let base = vec![100.0, 100.0];
+        assert!(common_mode_gain(&base, &[0.0, 0.0]) >= 1e-6);
+        assert!((common_mode_gain(&[0.0, 0.0], &base) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn renormalize_rescales_the_window_and_clamps() {
+        let cfg = ChipConfig::default().with_dims(8, 8).with_b(10);
+        let mut chip = crate::chip::ChipModel::fabricate(cfg, 1);
+        let t0 = chip.t_neu_set;
+        let t1 = renormalize(&mut chip, 1.25);
+        assert!((t1 - t0 / 1.25).abs() / t0 < 1e-12);
+        assert!((chip.t_neu_set - t1).abs() < 1e-30);
+        // pathological gain cannot blow the window past the clamp
+        let t2 = renormalize(&mut chip, 1e-6);
+        assert!((t2 - t1 * 8.0).abs() / t1 < 1e-9);
+    }
+
+    #[test]
+    fn renormalize_restores_reference_counts_after_common_mode_drift() {
+        // heat the die (PTAT bias gain up), renormalise by the measured
+        // reference ratio, and the reference counts return near baseline
+        let cfg = ChipConfig::default().with_dims(8, 24).with_b(10);
+        let mut chip = crate::chip::ChipModel::fabricate(cfg, 2);
+        let ref_codes = vec![(chip.cfg.code_fs() / 4) as u16; 8];
+        let base: Vec<f64> = chip.forward(&ref_codes).iter().map(|&c| c as f64).collect();
+        chip.set_temp(345.0);
+        let hot: Vec<f64> = chip.forward(&ref_codes).iter().map(|&c| c as f64).collect();
+        let g = common_mode_gain(&base, &hot);
+        assert!(g > 1.05, "heating must raise the common mode, gain {g}");
+        renormalize(&mut chip, g);
+        let fixed: Vec<f64> = chip.forward(&ref_codes).iter().map(|&c| c as f64).collect();
+        let g2 = common_mode_gain(&base, &fixed);
+        assert!(
+            (g2 - 1.0).abs() < (g - 1.0).abs() * 0.5,
+            "renorm must cancel most of the gain: before {g}, after {g2}"
+        );
+    }
+
+    #[test]
+    fn refit_recovers_accuracy_on_an_aged_die() {
+        // train a head, age the mismatch so the head goes stale, refit
+        // chip-in-the-loop and accuracy comes back
+        let cfg = ChipConfig::default().with_dims(6, 48).with_b(10);
+        let mut chip = crate::chip::ChipModel::fabricate(cfg, 3);
+        let mut rng = Prng::new(9);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..160 {
+            let y = if rng.bool(0.5) { 1.0 } else { -1.0 };
+            xs.push(
+                (0..6)
+                    .map(|_| (0.4 * y + rng.normal(0.0, 0.15)).clamp(-1.0, 1.0))
+                    .collect::<Vec<f64>>(),
+            );
+            ys.push(y);
+        }
+        let second = refit_head(&mut chip, false, &xs, &ys, 1e-2, 10).unwrap();
+        let err = |chip: &mut crate::chip::ChipModel, s: &SecondStage| {
+            let mut wrong = 0usize;
+            for (x, &y) in xs.iter().zip(&ys) {
+                let codes = crate::chip::dac::features_to_codes(x, &chip.cfg);
+                let h = chip.forward(&codes);
+                let label = s.classify(&h, codes_sum(&codes), 0.0);
+                if (label as f64 - y).abs() > 1e-9 {
+                    wrong += 1;
+                }
+            }
+            wrong as f64 / xs.len() as f64
+        };
+        let e0 = err(&mut chip, &second);
+        assert!(e0 < 0.1, "pre-drift err {e0}");
+        chip.age_mismatch(0.02, 55); // heavy profile change
+        let e_stale = err(&mut chip, &second);
+        let refit = refit_head(&mut chip, false, &xs, &ys, 1e-2, 10).unwrap();
+        let e_refit = err(&mut chip, &refit);
+        assert!(
+            e_refit < 0.1 && e_refit <= e_stale,
+            "stale {e_stale} refit {e_refit}"
+        );
+    }
+}

@@ -1,0 +1,204 @@
+//! Drift detection (DESIGN.md §12): EWMA-smoothed thresholds over the
+//! probe telemetry, separating the two drift modes the recovery tiers
+//! address — common-mode reference shift (fixable by renormalisation,
+//! the eq. 26 mechanism) versus mismatch-profile change or unexplained
+//! probe-error growth (needs a chip-in-the-loop head refit).
+
+use super::calibrate::{common_mode_gain, profile_residual};
+use super::lifecycle::FleetConfig;
+use super::probe::ProbeReport;
+
+/// What the detector concluded from the latest probe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DriftVerdict {
+    /// Telemetry within thresholds of the enrolment baseline.
+    Stable,
+    /// Reference columns moved together: renormalise (tier 1).
+    CommonMode,
+    /// Relative weights moved or accuracy fell without a common-mode
+    /// explanation: drain and refit (tier 2).
+    Profile,
+}
+
+/// The smoothed observation backing a verdict (for logs and escalation).
+#[derive(Clone, Copy, Debug)]
+pub struct DriftObservation {
+    pub verdict: DriftVerdict,
+    /// EWMA common-mode gain vs the baseline reference read.
+    pub gain: f64,
+    /// EWMA per-column residual after removing the gain.
+    pub residual: f64,
+    /// EWMA probe error.
+    pub err: f64,
+}
+
+/// Per-die drift detector: enrolment baseline + EWMA state.
+#[derive(Clone, Debug)]
+pub struct DriftDetector {
+    baseline_err: f64,
+    baseline_ref: Vec<f64>,
+    ewma_err: f64,
+    ewma_gain: f64,
+    ewma_residual: f64,
+    alpha: f64,
+    err_margin: f64,
+    cm_threshold: f64,
+    profile_threshold: f64,
+}
+
+impl DriftDetector {
+    /// Start from an enrolment (or post-recalibration) baseline probe.
+    pub fn new(baseline: &ProbeReport, cfg: &FleetConfig) -> Self {
+        DriftDetector {
+            baseline_err: baseline.err,
+            baseline_ref: baseline.ref_counts.clone(),
+            ewma_err: baseline.err,
+            ewma_gain: 1.0,
+            ewma_residual: 0.0,
+            alpha: cfg.ewma_alpha,
+            err_margin: cfg.err_margin,
+            cm_threshold: cfg.cm_threshold,
+            profile_threshold: cfg.profile_threshold,
+        }
+    }
+
+    /// Absorb one probe report and classify the die's drift state.
+    ///
+    /// Priority: a common-mode shift is reported first (it is cheap to
+    /// fix and can mask profile signals until cancelled); with the
+    /// common mode in band, either a profile residual or unexplained
+    /// probe-error growth escalates to `Profile`.
+    pub fn update(&mut self, rep: &ProbeReport) -> DriftObservation {
+        let gain = common_mode_gain(&self.baseline_ref, &rep.ref_counts);
+        let residual = profile_residual(&self.baseline_ref, &rep.ref_counts);
+        let a = self.alpha;
+        self.ewma_err = a * rep.err + (1.0 - a) * self.ewma_err;
+        self.ewma_gain = a * gain + (1.0 - a) * self.ewma_gain;
+        self.ewma_residual = a * residual + (1.0 - a) * self.ewma_residual;
+        let verdict = if (self.ewma_gain - 1.0).abs() > self.cm_threshold {
+            DriftVerdict::CommonMode
+        } else if self.ewma_residual > self.profile_threshold
+            || self.ewma_err - self.baseline_err > self.err_margin
+        {
+            DriftVerdict::Profile
+        } else {
+            DriftVerdict::Stable
+        };
+        DriftObservation {
+            verdict,
+            gain: self.ewma_gain,
+            residual: self.ewma_residual,
+            err: self.ewma_err,
+        }
+    }
+
+    /// Probe error the die was enrolled (or last recalibrated) at.
+    pub fn baseline_err(&self) -> f64 {
+        self.baseline_err
+    }
+
+    /// Smoothed probe-error excess over the baseline.
+    pub fn err_excess(&self) -> f64 {
+        self.ewma_err - self.baseline_err
+    }
+
+    /// Called after a renormalisation was applied: the measured gain has
+    /// been cancelled in hardware, so the smoothed gain restarts at
+    /// unity instead of re-triggering on its own memory.
+    pub fn note_renormalized(&mut self) {
+        self.ewma_gain = 1.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> FleetConfig {
+        FleetConfig {
+            ewma_alpha: 0.5,
+            err_margin: 0.1,
+            cm_threshold: 0.05,
+            profile_threshold: 0.08,
+            ..Default::default()
+        }
+    }
+
+    fn baseline() -> ProbeReport {
+        ProbeReport { err: 0.05, ref_counts: vec![100.0, 200.0, 300.0, 400.0], t_neu: 56e-6 }
+    }
+
+    fn report(err: f64, ref_counts: Vec<f64>) -> ProbeReport {
+        ProbeReport { err, ref_counts, t_neu: 56e-6 }
+    }
+
+    #[test]
+    fn stable_on_baseline_repeat() {
+        let mut d = DriftDetector::new(&baseline(), &cfg());
+        for _ in 0..5 {
+            let obs = d.update(&baseline());
+            assert_eq!(obs.verdict, DriftVerdict::Stable, "{obs:?}");
+        }
+    }
+
+    #[test]
+    fn common_mode_shift_flags_common_mode() {
+        let mut d = DriftDetector::new(&baseline(), &cfg());
+        let hot = report(0.05, vec![125.0, 250.0, 375.0, 500.0]); // +25% everywhere
+        let mut verdicts = Vec::new();
+        for _ in 0..3 {
+            verdicts.push(d.update(&hot).verdict);
+        }
+        assert!(
+            verdicts.contains(&DriftVerdict::CommonMode),
+            "verdicts {verdicts:?}"
+        );
+    }
+
+    #[test]
+    fn profile_change_flags_profile() {
+        let mut d = DriftDetector::new(&baseline(), &cfg());
+        // same total (gain 1), columns scrambled
+        let scrambled = report(0.05, vec![200.0, 100.0, 400.0, 300.0]);
+        let mut last = DriftVerdict::Stable;
+        for _ in 0..3 {
+            last = d.update(&scrambled).verdict;
+        }
+        assert_eq!(last, DriftVerdict::Profile);
+    }
+
+    #[test]
+    fn error_growth_without_reference_shift_flags_profile() {
+        let mut d = DriftDetector::new(&baseline(), &cfg());
+        let bad = report(0.4, baseline().ref_counts);
+        let mut last = DriftVerdict::Stable;
+        for _ in 0..4 {
+            last = d.update(&bad).verdict;
+        }
+        assert_eq!(last, DriftVerdict::Profile);
+    }
+
+    #[test]
+    fn ewma_smooths_single_tick_blips() {
+        let mut d = DriftDetector::new(&baseline(), &cfg());
+        // one noisy probe, then back to baseline: no sticky verdict
+        let _ = d.update(&report(0.15, vec![104.0, 208.0, 312.0, 416.0]));
+        let mut last = DriftVerdict::Profile;
+        for _ in 0..4 {
+            last = d.update(&baseline()).verdict;
+        }
+        assert_eq!(last, DriftVerdict::Stable);
+    }
+
+    #[test]
+    fn note_renormalized_resets_gain_memory() {
+        let mut d = DriftDetector::new(&baseline(), &cfg());
+        let hot = report(0.05, vec![150.0, 300.0, 450.0, 600.0]);
+        let obs = d.update(&hot);
+        assert_eq!(obs.verdict, DriftVerdict::CommonMode);
+        d.note_renormalized();
+        // hardware now corrected: baseline-level reads stay stable
+        let obs2 = d.update(&baseline());
+        assert_eq!(obs2.verdict, DriftVerdict::Stable, "{obs2:?}");
+    }
+}

@@ -1,0 +1,586 @@
+//! Die lifecycle management (DESIGN.md §12): the per-die state machine
+//!
+//! ```text
+//! Healthy -> Degraded -> Draining -> Recalibrating -> Healthy
+//!                                                  \-> Quarantined
+//! ```
+//!
+//! plus `Standby` for hot spares promoted when a die is quarantined.
+//! Only `Healthy` dies are routable; the shared [`FleetState`] is read
+//! lock-free by `coordinator::Router` on every route decision.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{ControlMsg, WorkerMsg};
+use crate::coordinator::router::Outstanding;
+
+use super::detector::{DriftDetector, DriftVerdict};
+use super::probe::{DriftSchedule, ProbeReport, ProbeSet};
+
+/// Lifecycle state of one die.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DieState {
+    /// In rotation, serving traffic.
+    Healthy,
+    /// Drift flagged; out of rotation pending confirmation.
+    Degraded,
+    /// Out of rotation, waiting for in-flight work to finish.
+    Draining,
+    /// Drained; chip-in-the-loop head refit in progress.
+    Recalibrating,
+    /// Recovery failed; permanently out of rotation.
+    Quarantined,
+    /// Trained hot spare, promoted when a die is quarantined.
+    Standby,
+}
+
+impl DieState {
+    fn to_u8(self) -> u8 {
+        match self {
+            DieState::Healthy => 0,
+            DieState::Degraded => 1,
+            DieState::Draining => 2,
+            DieState::Recalibrating => 3,
+            DieState::Quarantined => 4,
+            DieState::Standby => 5,
+        }
+    }
+
+    fn from_u8(v: u8) -> DieState {
+        match v {
+            0 => DieState::Healthy,
+            1 => DieState::Degraded,
+            2 => DieState::Draining,
+            3 => DieState::Recalibrating,
+            4 => DieState::Quarantined,
+            _ => DieState::Standby,
+        }
+    }
+}
+
+impl fmt::Display for DieState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            DieState::Healthy => "Healthy",
+            DieState::Degraded => "Degraded",
+            DieState::Draining => "Draining",
+            DieState::Recalibrating => "Recalibrating",
+            DieState::Quarantined => "Quarantined",
+            DieState::Standby => "Standby",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Shared per-die health gauges: written by the fleet manager, read
+/// lock-free by the router on every route decision.
+#[derive(Clone)]
+pub struct FleetState(Arc<Vec<AtomicU8>>);
+
+impl FleetState {
+    /// `n` dies total; the first `n_active` start Healthy, the rest are
+    /// hot standbys.
+    pub fn new(n: usize, n_active: usize) -> Self {
+        FleetState(Arc::new(
+            (0..n)
+                .map(|i| {
+                    AtomicU8::new(if i < n_active {
+                        DieState::Healthy.to_u8()
+                    } else {
+                        DieState::Standby.to_u8()
+                    })
+                })
+                .collect(),
+        ))
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    pub fn get(&self, i: usize) -> DieState {
+        DieState::from_u8(self.0[i].load(Ordering::Relaxed))
+    }
+
+    pub fn set(&self, i: usize, s: DieState) {
+        self.0[i].store(s.to_u8(), Ordering::Relaxed);
+    }
+
+    /// May the router send traffic to die `i`?
+    pub fn routable(&self, i: usize) -> bool {
+        self.get(i) == DieState::Healthy
+    }
+
+    pub fn snapshot(&self) -> Vec<DieState> {
+        (0..self.len()).map(|i| self.get(i)).collect()
+    }
+
+    /// One-line per-die gauge readout: `die0=Healthy die1=Draining ...`.
+    pub fn summary(&self) -> String {
+        (0..self.len())
+            .map(|i| format!("die{i}={}", self.get(i)))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// Fleet-health settings carried by `config::SystemConfig`.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Training samples pinned into the probe set.
+    pub probe_n: usize,
+    /// Background probe cadence; `None` = probe only on explicit
+    /// `Coordinator::fleet_tick` calls (tests, CLI).
+    pub probe_period: Option<Duration>,
+    /// EWMA smoothing factor for the drift detector (1.0 = no memory).
+    pub ewma_alpha: f64,
+    /// Smoothed probe-error increase over baseline flagged as drift.
+    pub err_margin: f64,
+    /// Smoothed common-mode reference shift that triggers tier-1
+    /// renormalisation.
+    pub cm_threshold: f64,
+    /// Smoothed per-column reference residual that flags a
+    /// mismatch-profile change (tier-2 refit).
+    pub profile_threshold: f64,
+    /// Renormalisation attempts (since last stable probe) before an
+    /// uncured error escalates to the refit path anyway.
+    pub max_renorms: u32,
+    /// Post-refit probe error above which the die is quarantined
+    /// instead of re-admitted.
+    pub quarantine_err: f64,
+    /// How long to wait for a worker's probe/calibration reply before
+    /// counting a miss.
+    pub reply_timeout: Duration,
+    /// Consecutive unanswered probes before the die is declared dead
+    /// and quarantined — a single slow reply (worker backlogged under
+    /// load) only logs and retries next tick.
+    pub max_probe_misses: u32,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            probe_n: 32,
+            probe_period: None,
+            ewma_alpha: 0.6,
+            err_margin: 0.08,
+            cm_threshold: 0.05,
+            profile_threshold: 0.08,
+            max_renorms: 2,
+            quarantine_err: 0.35,
+            reply_timeout: Duration::from_secs(5),
+            max_probe_misses: 3,
+        }
+    }
+}
+
+/// One-line fleet status from the shared gauges and counters. Both
+/// inputs are atomics, so this needs no manager lock — the TCP `HEALTH`
+/// command stays responsive even while a tick is blocked on a slow
+/// worker reply.
+pub fn status_line(state: &FleetState, metrics: &Metrics) -> String {
+    format!(
+        "{} probes={} renorms={} refits={} quarantines={} promotions={}",
+        state.summary(),
+        metrics.probes.load(Ordering::Relaxed),
+        metrics.renorms.load(Ordering::Relaxed),
+        metrics.refits.load(Ordering::Relaxed),
+        metrics.quarantines.load(Ordering::Relaxed),
+        metrics.promotions.load(Ordering::Relaxed),
+    )
+}
+
+/// Everything the manager needs at construction (mirrors
+/// `worker::WorkerSetup`).
+pub struct FleetSetup {
+    pub senders: Vec<mpsc::Sender<WorkerMsg>>,
+    pub state: FleetState,
+    pub outstanding: Outstanding,
+    pub metrics: Arc<Metrics>,
+    pub cfg: FleetConfig,
+    pub probe: Arc<ProbeSet>,
+    /// Enrolment baseline probe per die (captured at training time).
+    pub baselines: Vec<ProbeReport>,
+    /// Refit set (the training data) for tier-2 recovery.
+    pub refit_x: Arc<Vec<Vec<f64>>>,
+    pub refit_y: Arc<Vec<f64>>,
+    pub lambda: f64,
+    pub beta_bits: u32,
+}
+
+/// The fleet-health driver: probes dies, runs the drift detectors and
+/// walks the per-die state machine, issuing renormalisation / refit
+/// commands to the workers. Stepped by `tick()` — from the background
+/// prober thread when a cadence is configured, or explicitly from tests
+/// and the CLI.
+pub struct FleetManager {
+    senders: Vec<mpsc::Sender<WorkerMsg>>,
+    pub state: FleetState,
+    outstanding: Outstanding,
+    metrics: Arc<Metrics>,
+    cfg: FleetConfig,
+    probe: Arc<ProbeSet>,
+    detectors: Vec<DriftDetector>,
+    renorm_tries: Vec<u32>,
+    /// Consecutive unanswered probes per die (reset on any reply).
+    probe_misses: Vec<u32>,
+    refit_x: Arc<Vec<Vec<f64>>>,
+    refit_y: Arc<Vec<f64>>,
+    lambda: f64,
+    beta_bits: u32,
+    schedule: DriftSchedule,
+    tick_no: u64,
+    log: Vec<String>,
+}
+
+impl FleetManager {
+    pub fn new(s: FleetSetup) -> Self {
+        let detectors = s
+            .baselines
+            .iter()
+            .map(|b| DriftDetector::new(b, &s.cfg))
+            .collect();
+        let n = s.senders.len();
+        FleetManager {
+            senders: s.senders,
+            state: s.state,
+            outstanding: s.outstanding,
+            metrics: s.metrics,
+            cfg: s.cfg,
+            probe: s.probe,
+            detectors,
+            renorm_tries: vec![0; n],
+            probe_misses: vec![0; n],
+            refit_x: s.refit_x,
+            refit_y: s.refit_y,
+            lambda: s.lambda,
+            beta_bits: s.beta_bits,
+            schedule: DriftSchedule::new(),
+            tick_no: 0,
+            log: Vec::new(),
+        }
+    }
+
+    /// Install a drift-injection schedule (tests / benches / examples).
+    pub fn set_schedule(&mut self, s: DriftSchedule) {
+        self.schedule = s;
+    }
+
+    /// Ticks completed so far.
+    pub fn ticks(&self) -> u64 {
+        self.tick_no
+    }
+
+    /// Human-readable event log (bounded).
+    pub fn log(&self) -> &[String] {
+        &self.log
+    }
+
+    /// One-line status: per-die gauges for the `HEALTH` command / CLI.
+    pub fn status_line(&self) -> String {
+        status_line(&self.state, &self.metrics)
+    }
+
+    fn note(&mut self, msg: String) {
+        if self.log.len() >= 256 {
+            self.log.remove(0);
+        }
+        self.log.push(msg);
+    }
+
+    /// Apply a drift event to one die or the whole fleet (the L1
+    /// injection hook: VDD / temperature / mismatch aging).
+    pub fn inject(
+        &mut self,
+        die: Option<usize>,
+        vdd: Option<f64>,
+        temp_k: Option<f64>,
+        age_sigma_vt: Option<f64>,
+    ) {
+        let targets: Vec<usize> = match die {
+            Some(i) if i < self.senders.len() => vec![i],
+            Some(i) => {
+                // loudly refuse rather than silently measuring an
+                // un-drifted fleet in a drift experiment
+                let t = self.tick_no;
+                let n = self.senders.len();
+                self.note(format!(
+                    "tick {t}: drift injection IGNORED: no die {i} (fleet has {n})"
+                ));
+                vec![]
+            }
+            None => (0..self.senders.len()).collect(),
+        };
+        for i in targets {
+            let _ = self.senders[i].send(WorkerMsg::Control(ControlMsg::SetEnv {
+                vdd,
+                temp_k,
+                age_sigma_vt,
+                seed: 0xD21F7 ^ (i as u64) ^ self.tick_no.wrapping_mul(0x9E37),
+            }));
+        }
+    }
+
+    /// Operator-initiated drain (the server's `DRAIN <die>` command):
+    /// pull the die from rotation; the next ticks walk it through
+    /// Draining -> Recalibrating -> Healthy | Quarantined.
+    pub fn drain(&mut self, die: usize) -> Result<(), String> {
+        if die >= self.state.len() {
+            return Err(format!("no such die {die} (fleet has {})", self.state.len()));
+        }
+        match self.state.get(die) {
+            DieState::Healthy | DieState::Degraded => {
+                self.state.set(die, DieState::Draining);
+                let t = self.tick_no;
+                self.note(format!("tick {t}: die {die} draining (operator request)"));
+                Ok(())
+            }
+            s => Err(format!("die {die} is {s}, not drainable")),
+        }
+    }
+
+    /// Synchronous probe of one die through its worker thread.
+    fn probe_die(&self, die: usize) -> Result<ProbeReport, String> {
+        let (tx, rx) = mpsc::channel();
+        self.senders[die]
+            .send(WorkerMsg::Control(ControlMsg::Probe {
+                probe: Arc::clone(&self.probe),
+                reply: tx,
+            }))
+            .map_err(|_| format!("worker {die} is gone"))?;
+        self.metrics.probes.fetch_add(1, Ordering::Relaxed);
+        rx.recv_timeout(self.cfg.reply_timeout)
+            .map_err(|_| format!("worker {die} did not answer the probe"))
+    }
+
+    /// Tier-1: tell the worker to cancel a measured common-mode gain by
+    /// reprogramming its counting window; waits for the acknowledgement
+    /// so a following probe observes the corrected die.
+    fn renormalize_die(&self, die: usize, gain: f64) -> Result<f64, String> {
+        let (tx, rx) = mpsc::channel();
+        self.senders[die]
+            .send(WorkerMsg::Control(ControlMsg::Renormalize { gain, reply: tx }))
+            .map_err(|_| format!("worker {die} is gone"))?;
+        rx.recv_timeout(self.cfg.reply_timeout)
+            .map_err(|_| format!("worker {die} did not acknowledge renormalisation"))
+    }
+
+    /// Tier-2: chip-in-the-loop head refit on the (drained) die; the
+    /// worker replies with a post-refit probe report.
+    fn refit_die(&self, die: usize) -> Result<ProbeReport, String> {
+        let (tx, rx) = mpsc::channel();
+        self.senders[die]
+            .send(WorkerMsg::Control(ControlMsg::Refit {
+                xs: Arc::clone(&self.refit_x),
+                ys: Arc::clone(&self.refit_y),
+                lambda: self.lambda,
+                beta_bits: self.beta_bits,
+                probe: Arc::clone(&self.probe),
+                reply: tx,
+            }))
+            .map_err(|_| format!("worker {die} is gone"))?;
+        rx.recv_timeout(self.cfg.reply_timeout)
+            .map_err(|_| format!("worker {die} did not answer the refit"))?
+    }
+
+    /// Quarantine a die and promote the first available standby.
+    fn quarantine(&mut self, die: usize, why: String) {
+        self.state.set(die, DieState::Quarantined);
+        self.metrics.quarantines.fetch_add(1, Ordering::Relaxed);
+        let t = self.tick_no;
+        self.note(format!("tick {t}: die {die} QUARANTINED: {why}"));
+        if let Some(spare) = (0..self.state.len()).find(|&i| self.state.get(i) == DieState::Standby)
+        {
+            self.state.set(spare, DieState::Healthy);
+            self.metrics.promotions.fetch_add(1, Ordering::Relaxed);
+            self.note(format!("tick {t}: standby die {spare} promoted to Healthy"));
+        }
+    }
+
+    /// One probe/recovery pass over the whole fleet.
+    pub fn tick(&mut self) {
+        // 1. due drift injections (tests/benches replaying Figs. 17/18)
+        let due: Vec<super::probe::DriftEvent> =
+            self.schedule.due(self.tick_no).into_iter().cloned().collect();
+        for ev in due {
+            self.inject(ev.die, ev.vdd, ev.temp_k, ev.age_sigma_vt);
+        }
+        // 2. per-die state machine
+        for die in 0..self.senders.len() {
+            match self.state.get(die) {
+                DieState::Standby | DieState::Quarantined => {}
+                DieState::Healthy | DieState::Degraded => self.step_monitored(die),
+                DieState::Draining => {
+                    if self.outstanding.load(die) == 0 {
+                        self.state.set(die, DieState::Recalibrating);
+                        let t = self.tick_no;
+                        self.note(format!("tick {t}: die {die} drained, recalibrating"));
+                    }
+                }
+                DieState::Recalibrating => self.step_recalibrate(die),
+            }
+        }
+        self.tick_no += 1;
+    }
+
+    /// Probe a monitored (Healthy/Degraded) die and act on the verdict.
+    fn step_monitored(&mut self, die: usize) {
+        let was = self.state.get(die);
+        let rep = match self.probe_die(die) {
+            Ok(r) => {
+                self.probe_misses[die] = 0;
+                r
+            }
+            Err(e) => {
+                // a backlogged worker answers late, a dead one never
+                // does: tolerate a few misses before giving up on it
+                self.probe_misses[die] += 1;
+                let misses = self.probe_misses[die];
+                let limit = self.cfg.max_probe_misses;
+                if misses >= limit {
+                    self.quarantine(die, format!("{e} ({misses} consecutive misses)"));
+                } else {
+                    let t = self.tick_no;
+                    self.note(format!(
+                        "tick {t}: die {die} probe unanswered ({misses}/{limit}), retrying"
+                    ));
+                }
+                return;
+            }
+        };
+        let obs = self.detectors[die].update(&rep);
+        let t = self.tick_no;
+        match obs.verdict {
+            DriftVerdict::Stable => {
+                self.renorm_tries[die] = 0;
+                if was == DieState::Degraded {
+                    // transient: telemetry recovered before the drain
+                    self.state.set(die, DieState::Healthy);
+                    self.note(format!("tick {t}: die {die} re-admitted (drift cleared)"));
+                }
+            }
+            DriftVerdict::CommonMode => {
+                let escalate = self.renorm_tries[die] >= self.cfg.max_renorms
+                    && self.detectors[die].err_excess() > self.cfg.err_margin;
+                if escalate {
+                    // renormalisation is not curing it: treat as profile
+                    self.degrade(die, was, format!("renorm x{} ineffective", self.renorm_tries[die]));
+                } else {
+                    // tier 1: cancel the gain, die stays in rotation
+                    match self.renormalize_die(die, obs.gain) {
+                        Ok(t_neu) => {
+                            self.renorm_tries[die] += 1;
+                            self.detectors[die].note_renormalized();
+                            self.metrics.renorms.fetch_add(1, Ordering::Relaxed);
+                            self.note(format!(
+                                "tick {t}: die {die} renormalised (gain {:.3}, T_neu {:.2} us)",
+                                obs.gain,
+                                t_neu * 1e6
+                            ));
+                        }
+                        Err(e) => self.quarantine(die, e),
+                    }
+                }
+            }
+            DriftVerdict::Profile => {
+                self.degrade(
+                    die,
+                    was,
+                    format!("profile residual {:.3}, err {:.3}", obs.residual, obs.err),
+                );
+            }
+        }
+    }
+
+    /// Profile-drift path: Healthy -> Degraded (confirm next tick),
+    /// Degraded -> Draining (pull from rotation).
+    fn degrade(&mut self, die: usize, was: DieState, why: String) {
+        let t = self.tick_no;
+        match was {
+            DieState::Healthy => {
+                self.state.set(die, DieState::Degraded);
+                self.note(format!("tick {t}: die {die} degraded: {why}"));
+            }
+            _ => {
+                self.state.set(die, DieState::Draining);
+                self.note(format!("tick {t}: die {die} draining: {why}"));
+            }
+        }
+    }
+
+    /// Refit a drained die and re-admit or quarantine it.
+    fn step_recalibrate(&mut self, die: usize) {
+        let t = self.tick_no;
+        match self.refit_die(die) {
+            Ok(rep) if rep.err <= self.cfg.quarantine_err => {
+                self.detectors[die] = DriftDetector::new(&rep, &self.cfg);
+                self.renorm_tries[die] = 0;
+                self.probe_misses[die] = 0;
+                self.state.set(die, DieState::Healthy);
+                self.metrics.refits.fetch_add(1, Ordering::Relaxed);
+                self.note(format!(
+                    "tick {t}: die {die} recalibrated (probe err {:.3}), re-admitted",
+                    rep.err
+                ));
+            }
+            Ok(rep) => {
+                self.quarantine(die, format!("post-refit probe err {:.3}", rep.err));
+            }
+            Err(e) => {
+                self.quarantine(die, format!("refit failed: {e}"));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_roundtrips_through_u8() {
+        for s in [
+            DieState::Healthy,
+            DieState::Degraded,
+            DieState::Draining,
+            DieState::Recalibrating,
+            DieState::Quarantined,
+            DieState::Standby,
+        ] {
+            assert_eq!(DieState::from_u8(s.to_u8()), s);
+        }
+    }
+
+    #[test]
+    fn fleet_state_routes_only_healthy() {
+        let st = FleetState::new(3, 2);
+        assert_eq!(st.len(), 3);
+        assert!(st.routable(0) && st.routable(1));
+        assert!(!st.routable(2), "standby must not be routable");
+        st.set(1, DieState::Draining);
+        assert!(!st.routable(1));
+        st.set(1, DieState::Healthy);
+        assert!(st.routable(1));
+        assert_eq!(st.snapshot()[2], DieState::Standby);
+        assert!(st.summary().contains("die0=Healthy"));
+        assert!(st.summary().contains("die2=Standby"));
+    }
+
+    #[test]
+    fn default_config_is_sane() {
+        let c = FleetConfig::default();
+        assert!(c.probe_n > 0);
+        assert!(c.probe_period.is_none());
+        assert!(c.ewma_alpha > 0.0 && c.ewma_alpha <= 1.0);
+        assert!(c.cm_threshold > 0.0 && c.profile_threshold > 0.0);
+        assert!(c.quarantine_err > c.err_margin);
+    }
+}

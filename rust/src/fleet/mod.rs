@@ -1,0 +1,27 @@
+//! Fleet health subsystem (DESIGN.md §12): drift telemetry, online
+//! recalibration and die lifecycle management for the L3 serving fleet.
+//!
+//! The paper's Section VI / Figs. 17–18 show the analog array drifting
+//! under VDD and temperature shifts; `chip` models exactly that (PTAT
+//! bias gain, I_rst(VDD), U_T weight compression). This module closes
+//! the loop in production: every die is periodically **probed**
+//! ([`probe`]) with a pinned classification set plus a reference-column
+//! read; a per-die **detector** ([`detector`]) separates common-mode
+//! drift (cancellable, the eq. 26 mechanism) from mismatch-profile
+//! change (not cancellable); two **calibration** tiers ([`calibrate`])
+//! recover the die — cheap counting-window renormalisation in rotation,
+//! or a drained chip-in-the-loop head refit through the OS-ELM RLS
+//! path; and the **lifecycle** manager ([`lifecycle`]) walks each die
+//! through `Healthy -> Degraded -> Draining -> Recalibrating ->
+//! Healthy | Quarantined`, promoting hot standbys so capacity survives
+//! quarantines. The router reads the shared [`FleetState`] lock-free
+//! and only routes to `Healthy` dies.
+
+pub mod calibrate;
+pub mod detector;
+pub mod lifecycle;
+pub mod probe;
+
+pub use detector::{DriftDetector, DriftObservation, DriftVerdict};
+pub use lifecycle::{DieState, FleetConfig, FleetManager, FleetSetup, FleetState};
+pub use probe::{DriftEvent, DriftSchedule, ProbeReport, ProbeSet};

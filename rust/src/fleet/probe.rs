@@ -1,0 +1,219 @@
+//! Per-die health probing (DESIGN.md §12): a pinned probe set classified
+//! periodically on every die, plus a reference-column read — the serving
+//! fleet's analogue of the paper's Fig. 17/18 monitoring. The reference
+//! read drives the same common-mode mechanism eq. 26 exploits: the PTAT
+//! bias / VDD residual scales every column together, so the ratio of
+//! reference counts to their enrolment baseline measures common-mode
+//! drift, while per-column deviations left after removing that gain
+//! measure mismatch-profile change.
+
+use crate::chip::{dac, ChipModel};
+use crate::config::ChipConfig;
+use crate::elm::secondstage::{codes_sum, SecondStage};
+
+/// The pinned inputs every probe pass replays: labelled samples for the
+/// probe error plus a fixed mid-scale reference vector for the
+/// reference-column read.
+#[derive(Clone, Debug)]
+pub struct ProbeSet {
+    /// Labelled probe samples (features in [-1, 1]^d).
+    pub xs: Vec<Vec<f64>>,
+    /// +-1 targets for the probe samples.
+    pub ys: Vec<f64>,
+    /// DAC codes of the reference read (one fixed code on every channel,
+    /// low enough to sit in the neuron's monotone region pre-drift).
+    pub ref_codes: Vec<u16>,
+}
+
+impl ProbeSet {
+    /// Pin the first `n` training samples as the probe set and derive
+    /// the reference read from the chip geometry (quarter full scale on
+    /// every channel keeps the columns well below saturation at the
+    /// nominal corner, so drift headroom is visible in both directions).
+    pub fn from_training(xs: &[Vec<f64>], ys: &[f64], n: usize, cfg: &ChipConfig) -> Self {
+        let n = n.min(xs.len()).min(ys.len());
+        let ref_code = (cfg.code_fs() / 4) as u16;
+        ProbeSet {
+            xs: xs[..n].to_vec(),
+            ys: ys[..n].to_vec(),
+            ref_codes: vec![ref_code; cfg.d],
+        }
+    }
+}
+
+/// One probe pass over one die: health telemetry the detector consumes.
+#[derive(Clone, Debug)]
+pub struct ProbeReport {
+    /// Misclassification rate on the pinned probe set.
+    pub err: f64,
+    /// Reference-column counter outputs (as floats for the gain math).
+    pub ref_counts: Vec<f64>,
+    /// The counting window programmed at probe time [s] — renormalisation
+    /// shows up here.
+    pub t_neu: f64,
+}
+
+impl ProbeReport {
+    /// Mean reference count (the common-mode level).
+    pub fn ref_mean(&self) -> f64 {
+        if self.ref_counts.is_empty() {
+            return 0.0;
+        }
+        self.ref_counts.iter().sum::<f64>() / self.ref_counts.len() as f64
+    }
+}
+
+/// Run one probe pass: classify the pinned set through the die's own
+/// second stage (exactly the serving path), then read the reference
+/// columns. Runs on the thread that owns the chip — the worker for live
+/// dies, `Coordinator::start` for enrolment baselines.
+pub fn run_probe(chip: &mut ChipModel, second: &SecondStage, probe: &ProbeSet) -> ProbeReport {
+    let mut wrong = 0usize;
+    for (x, &y) in probe.xs.iter().zip(&probe.ys) {
+        let codes = dac::features_to_codes(x, &chip.cfg);
+        let h = chip.forward(&codes);
+        let label = second.classify(&h, codes_sum(&codes), 0.0);
+        if (label as f64 - y).abs() > 1e-9 {
+            wrong += 1;
+        }
+    }
+    let ref_counts: Vec<f64> = chip
+        .forward(&probe.ref_codes)
+        .iter()
+        .map(|&c| c as f64)
+        .collect();
+    ProbeReport {
+        err: wrong as f64 / probe.xs.len().max(1) as f64,
+        ref_counts,
+        t_neu: chip.t_neu_set,
+    }
+}
+
+/// One environmental disturbance applied to the fleet at a given probe
+/// tick — the drift-injection hook tests and benches use to replay the
+/// Fig. 17 (VDD) and Fig. 18 (temperature) studies, plus the aging mode
+/// (`age_sigma_vt`) that changes the mismatch *profile* rather than the
+/// common mode.
+#[derive(Clone, Debug)]
+pub struct DriftEvent {
+    /// Manager tick at which the event fires.
+    pub at_tick: u64,
+    /// Affected die, or `None` for the whole fleet.
+    pub die: Option<usize>,
+    /// New supply voltage [V], if any.
+    pub vdd: Option<f64>,
+    /// New die temperature [K], if any.
+    pub temp_k: Option<f64>,
+    /// Extra threshold-mismatch sigma [V] superimposed on the array.
+    pub age_sigma_vt: Option<f64>,
+}
+
+/// A deterministic sequence of drift events keyed by probe tick.
+#[derive(Clone, Debug, Default)]
+pub struct DriftSchedule {
+    pub events: Vec<DriftEvent>,
+}
+
+impl DriftSchedule {
+    pub fn new() -> Self {
+        DriftSchedule { events: Vec::new() }
+    }
+
+    /// Builder-style push.
+    pub fn with(mut self, ev: DriftEvent) -> Self {
+        self.events.push(ev);
+        self
+    }
+
+    /// Fig. 18-style linear temperature ramp: `steps` events starting at
+    /// `start_tick`, sweeping `t0` -> `t1` kelvin on `die` (None = all).
+    pub fn temperature_ramp(die: Option<usize>, start_tick: u64, steps: u64, t0: f64, t1: f64) -> Self {
+        let mut events = Vec::new();
+        for k in 0..steps.max(1) {
+            let frac = if steps <= 1 { 1.0 } else { k as f64 / (steps - 1) as f64 };
+            events.push(DriftEvent {
+                at_tick: start_tick + k,
+                die,
+                vdd: None,
+                temp_k: Some(t0 + (t1 - t0) * frac),
+                age_sigma_vt: None,
+            });
+        }
+        DriftSchedule { events }
+    }
+
+    /// Events due at `tick`.
+    pub fn due(&self, tick: u64) -> Vec<&DriftEvent> {
+        self.events.iter().filter(|e| e.at_tick == tick).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chip::ChipModel;
+    use crate::config::ChipConfig;
+
+    fn die(seed: u64) -> (ChipModel, SecondStage, ProbeSet) {
+        let cfg = ChipConfig::default().with_dims(8, 24).with_b(10);
+        let mut chip = ChipModel::fabricate(cfg.clone(), seed);
+        // a head trained on nothing still probes: beta all-ones
+        let second = SecondStage::new(&vec![1.0; 24], 10, false);
+        let xs: Vec<Vec<f64>> = (0..10)
+            .map(|k| (0..8).map(|j| ((k + j) as f64 / 20.0) - 0.4).collect())
+            .collect();
+        let ys: Vec<f64> = (0..10).map(|k| if k % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let probe = ProbeSet::from_training(&xs, &ys, 8, &chip.cfg);
+        let _ = chip.forward(&probe.ref_codes); // warm the cache path
+        (chip, second, probe)
+    }
+
+    #[test]
+    fn probe_set_pins_first_n_and_ref_codes() {
+        let cfg = ChipConfig::default().with_dims(5, 7);
+        let xs = vec![vec![0.1; 5]; 20];
+        let ys = vec![1.0; 20];
+        let p = ProbeSet::from_training(&xs, &ys, 6, &cfg);
+        assert_eq!(p.xs.len(), 6);
+        assert_eq!(p.ys.len(), 6);
+        assert_eq!(p.ref_codes, vec![(cfg.code_fs() / 4) as u16; 5]);
+    }
+
+    #[test]
+    fn probe_is_deterministic_on_a_stable_die() {
+        let (mut chip, second, probe) = die(3);
+        let a = run_probe(&mut chip, &second, &probe);
+        let b = run_probe(&mut chip, &second, &probe);
+        assert_eq!(a.ref_counts, b.ref_counts);
+        assert!((a.err - b.err).abs() < 1e-12);
+        assert!(a.ref_mean() > 0.0, "reference columns must count");
+    }
+
+    #[test]
+    fn probe_sees_temperature_drift_in_reference_counts() {
+        let (mut chip, second, probe) = die(4);
+        let cold = run_probe(&mut chip, &second, &probe);
+        chip.set_temp(340.0);
+        let hot = run_probe(&mut chip, &second, &probe);
+        // PTAT bias gain raises the common-mode reference level
+        assert!(
+            hot.ref_mean() > cold.ref_mean() * 1.02,
+            "hot {} vs cold {}",
+            hot.ref_mean(),
+            cold.ref_mean()
+        );
+    }
+
+    #[test]
+    fn ramp_schedule_covers_all_ticks() {
+        let s = DriftSchedule::temperature_ramp(Some(0), 2, 4, 300.0, 330.0);
+        assert_eq!(s.events.len(), 4);
+        assert!(s.due(0).is_empty());
+        assert_eq!(s.due(2).len(), 1);
+        assert_eq!(s.due(5).len(), 1);
+        let last = s.due(5)[0];
+        assert_eq!(last.temp_k, Some(330.0));
+        let first = s.due(2)[0];
+        assert_eq!(first.temp_k, Some(300.0));
+    }
+}

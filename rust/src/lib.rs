@@ -18,6 +18,7 @@ pub mod datasets;
 pub mod dse;
 pub mod elm;
 pub mod extension;
+pub mod fleet;
 pub mod runtime;
 pub mod testing;
 pub mod util;

@@ -7,6 +7,7 @@
 //!   serve         start the TCP serving front end
 //!   sweep         quick design-space sweeps (ratio | beta-bits | counter-bits)
 //!   tune          closed-loop autotuner: Pareto front + knee operating point
+//!   fleet         fleet-health demo: inject drift, watch detect/recover
 //!   info          artifact + configuration report
 
 use std::sync::Arc;
@@ -36,6 +37,8 @@ fn usage() -> &'static str {
        sweep --what ratio|beta-bits|counter-bits     quick design-space sweep (Fig. 7)\n\
        tune [--dataset NAME] [--rounds N] [--trials N] [--l LIST] [--b LIST]\n\
             [--batch LIST] [--weights E,J,T,X] [--out FILE]   Pareto autotune\n\
+       fleet [--dataset NAME] [--chips N] [--standby N] [--ticks N]\n\
+             [--temp K] [--age-sigma MV]             drift-recovery demo (Fig. 18 ramp)\n\
        info [--artifacts DIR]                        configuration + artifact report\n\
      Common options: --b BITS (counter), --sigma-vt MV, --vdd V, --lambda F\n"
 }
@@ -345,6 +348,83 @@ fn cmd_tune(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Fleet-health demo: boot a fleet with hot standbys, replay a Fig. 18
+/// style temperature ramp (plus optional mismatch aging) into die 0,
+/// tick the fleet manager and report detection, recovery and the
+/// accuracy before/under/after drift — all without stopping the fleet.
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let name = args.get_or("dataset", "brightdata");
+    let seed = args.get_u64("seed", 1).map_err(anyhow::Error::msg)?;
+    let ds = synth::by_name(&name, seed)
+        .with_context(|| format!("unknown dataset {name}"))?
+        .with_test_subsample(150, seed);
+    let chips = args.get_usize("chips", 2).map_err(anyhow::Error::msg)?;
+    let standby = args.get_usize("standby", 1).map_err(anyhow::Error::msg)?;
+    let ticks = args.get_usize("ticks", 8).map_err(anyhow::Error::msg)? as u64;
+    let t_end = args.get_f64("temp", 350.0).map_err(anyhow::Error::msg)?;
+    let age_mv = args.get_f64("age-sigma", 0.0).map_err(anyhow::Error::msg)?;
+
+    let mut cfg = chip_cfg_from(args)?;
+    cfg.d = ds.d();
+    cfg.b = args.get_usize("b", 10).map_err(anyhow::Error::msg)? as u32;
+    let mut sys = SystemConfig::default();
+    sys.n_chips = chips;
+    sys.standby_chips = standby;
+    sys.max_wait = std::time::Duration::from_millis(1);
+
+    println!(
+        "fleet demo on {name}: {} active + {} standby dies, drifting die 0 to {t_end} K",
+        chips, standby
+    );
+    let coord = Coordinator::start(&sys, &cfg, &ds.train_x, &ds.train_y, 0.1, 10)?;
+
+    let accuracy = |label: &str| -> Result<f64> {
+        let mut correct = 0usize;
+        for (x, &y) in ds.test_x.iter().zip(&ds.test_y) {
+            let resp = coord.classify(x.clone())?;
+            if (resp.label as f64 - y).abs() < 1e-9 {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / ds.n_test() as f64;
+        println!("{label}: {:.1}% over {} requests", acc * 100.0, ds.n_test());
+        Ok(acc)
+    };
+
+    let pre = accuracy("pre-drift accuracy")?;
+    let mut schedule =
+        velm::fleet::DriftSchedule::temperature_ramp(Some(0), 1, 3, 310.0, t_end);
+    if age_mv > 0.0 {
+        schedule = schedule.with(velm::fleet::DriftEvent {
+            at_tick: 1,
+            die: Some(0),
+            vdd: None,
+            temp_k: None,
+            age_sigma_vt: Some(age_mv / 1e3),
+        });
+    }
+    coord.set_drift_schedule(schedule);
+    for t in 0..ticks {
+        coord.fleet_tick();
+        println!("tick {t}: {}", coord.fleet_status());
+    }
+    let post = accuracy("post-recovery accuracy")?;
+
+    println!("\nfleet event log:");
+    for line in coord.fleet_log() {
+        println!("  {line}");
+    }
+    println!("\n{}", coord.metrics.report());
+    println!(
+        "accuracy: {:.1}% -> {:.1}% ({}); fleet served throughout",
+        pre * 100.0,
+        post * 100.0,
+        if post + 0.02 >= pre { "recovered" } else { "NOT recovered" }
+    );
+    coord.shutdown();
+    Ok(())
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
     let cfg = ChipConfig::default();
     println!("{}", cfg.summary());
@@ -371,6 +451,7 @@ fn main() -> Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("tune") => cmd_tune(&args),
+        Some("fleet") => cmd_fleet(&args),
         Some("info") => cmd_info(&args),
         Some("help") | None => {
             print!("{}", usage());

@@ -111,6 +111,42 @@ fn handle_line_unit_surface() {
 }
 
 #[test]
+fn handle_line_health_reports_per_die_gauges() {
+    let (coord, _) = start_system(2);
+    let resp = server::handle_line(&coord, "HEALTH").expect("HEALTH answers");
+    assert!(resp.starts_with("OK "), "{resp}");
+    assert!(resp.contains("die0=Healthy"), "{resp}");
+    assert!(resp.contains("die1=Healthy"), "{resp}");
+    assert!(resp.contains("renorms=0") && resp.contains("refits=0"), "{resp}");
+    // case-insensitive like the other verbs
+    assert!(server::handle_line(&coord, "health").unwrap().starts_with("OK "));
+}
+
+#[test]
+fn handle_line_drain_pulls_die_and_health_reflects_it() {
+    let (coord, _) = start_system(2);
+    let resp = server::handle_line(&coord, "DRAIN 0").expect("DRAIN answers");
+    assert_eq!(resp, "OK draining die 0");
+    let health = server::handle_line(&coord, "HEALTH").unwrap();
+    assert!(health.contains("die0=Draining"), "{health}");
+    assert!(health.contains("die1=Healthy"), "{health}");
+    // a draining die cannot be drained twice
+    assert!(server::handle_line(&coord, "DRAIN 0").unwrap().starts_with("ERR"));
+    // bad operands are protocol errors, not panics
+    assert!(server::handle_line(&coord, "DRAIN").unwrap().starts_with("ERR"));
+    assert!(server::handle_line(&coord, "DRAIN abc").unwrap().starts_with("ERR"));
+    assert!(server::handle_line(&coord, "DRAIN 99").unwrap().starts_with("ERR"));
+    // traffic still flows on the remaining healthy die
+    let ds = synth::brightdata(1).with_test_subsample(5, 1);
+    for x in &ds.test_x {
+        let feats: Vec<String> = x.iter().map(|v| v.to_string()).collect();
+        let line = server::handle_line(&coord, &format!("CLASSIFY {}", feats.join(",")))
+            .unwrap();
+        assert!(line.starts_with("OK "), "{line}");
+    }
+}
+
+#[test]
 fn load_spreads_across_dies() {
     let (coord, ds) = start_system(3);
     let mut by_worker = [0usize; 3];

@@ -1,0 +1,214 @@
+//! Integration: the fleet health subsystem end to end (DESIGN.md §12).
+//!
+//! Under an injected Fig. 18-style drift schedule the fleet must detect
+//! the drift, renormalise or retrain the affected die, never route
+//! traffic to a non-Healthy die, and finish within 2 percentage points
+//! of its pre-drift accuracy — while an untreated control fleet under
+//! the same drift degrades measurably more.
+
+use std::collections::HashSet;
+use std::time::Duration;
+
+use velm::config::{ChipConfig, SystemConfig, Transfer};
+use velm::coordinator::Coordinator;
+use velm::fleet::{DieState, DriftEvent, DriftSchedule, FleetConfig};
+use velm::util::prng::Prng;
+
+/// Well-separated two-class blobs with deterministic exactly-balanced
+/// labels of configurable period: `label_period = 1` alternates
+/// +1,-1,+1,-1 (any prefix of even length is exactly balanced — the
+/// probe set pins a prefix, and a dead die answering a constant label
+/// must err on half of it); `label_period = 2` gives +1,+1,-1,-1,...,
+/// which stays 50/50 on each die under *any* two-worker round-robin
+/// parity (so a dead die's errors cannot alias away with the routing).
+/// Every die trains to near-zero error, so pre/post accuracy
+/// comparisons are not seed-sensitive.
+fn blobs(seed: u64, n: usize, d: usize, label_period: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let mut rng = Prng::new(seed);
+    let mut xs = Vec::with_capacity(n);
+    let mut ys = Vec::with_capacity(n);
+    for k in 0..n {
+        let y = if (k / label_period) % 2 == 0 { 1.0 } else { -1.0 };
+        xs.push(
+            (0..d)
+                .map(|_| (0.45 * y + rng.normal(0.0, 0.12)).clamp(-1.0, 1.0))
+                .collect::<Vec<f64>>(),
+        );
+        ys.push(y);
+    }
+    (xs, ys)
+}
+
+fn fleet_config() -> FleetConfig {
+    FleetConfig {
+        probe_n: 40,
+        probe_period: None, // ticked explicitly
+        ewma_alpha: 0.7,
+        err_margin: 0.05,
+        cm_threshold: 0.04,
+        profile_threshold: 0.06,
+        max_renorms: 2,
+        quarantine_err: 0.35,
+        reply_timeout: Duration::from_secs(10),
+        max_probe_misses: 3,
+    }
+}
+
+fn system(n_chips: usize, standby: usize) -> SystemConfig {
+    SystemConfig {
+        n_chips,
+        standby_chips: standby,
+        max_wait: Duration::from_millis(1),
+        artifact_dir: "/nonexistent".into(), // chip-sim path
+        seed: 4242,
+        fleet: fleet_config(),
+        ..Default::default()
+    }
+}
+
+fn chip() -> ChipConfig {
+    ChipConfig::default()
+        .with_dims(6, 64)
+        .with_b(10)
+        .with_mode(Transfer::Quadratic)
+}
+
+fn error_rate(coord: &Coordinator, xs: &[Vec<f64>], ys: &[f64]) -> f64 {
+    let mut wrong = 0usize;
+    for (x, &y) in xs.iter().zip(ys) {
+        let resp = coord.classify(x.clone()).expect("classify");
+        if (resp.label as f64 - y).abs() > 1e-9 {
+            wrong += 1;
+        }
+    }
+    wrong as f64 / xs.len() as f64
+}
+
+#[test]
+fn fig18_drift_detected_recovered_and_beats_untreated_control() {
+    let (xs, ys) = blobs(11, 240, 6, 1);
+    let (xt, yt) = blobs(12, 100, 6, 2);
+
+    // --- treated fleet: 2 active + 1 hot standby, manager ticking ---
+    let coord = Coordinator::start(&system(2, 1), &chip(), &xs, &ys, 1e-2, 10).unwrap();
+    let pre_err = error_rate(&coord, &xt, &yt);
+    assert!(pre_err < 0.1, "pre-drift err {pre_err}");
+
+    // Fig. 18-style thermal ramp on die 0 (ticks 1..=3), then a supply
+    // brown-out at tick 5 that kills the die outright (Fig. 17 axis):
+    // the ramp is recoverable by renormalisation, the brown-out is not
+    // recoverable at all — quarantine + standby promotion territory.
+    let schedule = DriftSchedule::temperature_ramp(Some(0), 1, 3, 315.0, 350.0).with(DriftEvent {
+        at_tick: 5,
+        die: Some(0),
+        vdd: Some(0.30),
+        temp_k: None,
+        age_sigma_vt: None,
+    });
+    coord.set_drift_schedule(schedule);
+
+    let mut die0_left_rotation = false;
+    let mut states_seen: HashSet<String> = HashSet::new();
+    for _ in 0..18 {
+        coord.fleet_tick();
+        let snap = coord.health_snapshot();
+        die0_left_rotation |= snap[0] != DieState::Healthy;
+        states_seen.insert(snap[0].to_string());
+        // routing invariant: between ticks the states are frozen, and
+        // every response must come from a die that is Healthy right now
+        let healthy: HashSet<usize> = (0..snap.len())
+            .filter(|&i| snap[i] == DieState::Healthy)
+            .collect();
+        assert!(!healthy.is_empty(), "fleet lost all capacity: {snap:?}");
+        for k in 0..10 {
+            let resp = coord.classify(xt[k % xt.len()].clone()).expect("no downtime");
+            assert!(
+                healthy.contains(&resp.worker),
+                "request served by non-Healthy die {} (healthy: {healthy:?}, snap {snap:?})",
+                resp.worker
+            );
+        }
+    }
+
+    // the thermal ramp must have been caught and renormalised, the
+    // brown-out must have walked the die to quarantine, and the hot
+    // standby must be serving in its place
+    let m = &coord.metrics;
+    use std::sync::atomic::Ordering::Relaxed;
+    assert!(die0_left_rotation, "drift never pulled die 0 from rotation");
+    assert!(m.renorms.load(Relaxed) >= 1, "no renormalisation: {}", coord.fleet_status());
+    assert_eq!(m.quarantines.load(Relaxed), 1, "{}", coord.fleet_status());
+    assert_eq!(m.promotions.load(Relaxed), 1, "{}", coord.fleet_status());
+    let snap = coord.health_snapshot();
+    assert_eq!(snap[0], DieState::Quarantined, "{snap:?}");
+    assert_eq!(snap[2], DieState::Healthy, "standby not promoted: {snap:?}");
+    assert!(states_seen.contains("Quarantined"), "{states_seen:?}");
+
+    // end-of-run accuracy back within 2 points of pre-drift
+    let post_err = error_rate(&coord, &xt, &yt);
+    assert!(
+        post_err <= pre_err + 0.02,
+        "fleet did not recover: pre {pre_err} post {post_err}"
+    );
+
+    // --- control fleet: identical drift end-state, no fleet manager ---
+    let control = Coordinator::start(&system(2, 1), &chip(), &xs, &ys, 1e-2, 10).unwrap();
+    control.inject_drift(Some(0), Some(0.30), Some(350.0), None);
+    std::thread::sleep(Duration::from_millis(50)); // let the worker absorb it
+    let control_err = error_rate(&control, &xt, &yt);
+    assert!(
+        control_err >= post_err + 0.08,
+        "untreated control should degrade measurably more: control {control_err}, treated {post_err}"
+    );
+    control.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn aging_profile_drift_walks_the_state_machine_to_a_successful_refit() {
+    let (xs, ys) = blobs(21, 240, 6, 1);
+    let (xt, yt) = blobs(22, 100, 6, 2);
+    let coord = Coordinator::start(&system(1, 0), &chip(), &xs, &ys, 1e-2, 10).unwrap();
+    let pre_err = error_rate(&coord, &xt, &yt);
+    assert!(pre_err < 0.1, "pre-drift err {pre_err}");
+
+    // mismatch aging + mild heating: the per-column residual survives
+    // renormalisation, so the detector must escalate to the refit tier
+    coord.set_drift_schedule(DriftSchedule::new().with(DriftEvent {
+        at_tick: 1,
+        die: Some(0),
+        vdd: None,
+        temp_k: Some(312.0),
+        age_sigma_vt: Some(0.018),
+    }));
+
+    let mut walked: Vec<DieState> = Vec::new();
+    for _ in 0..12 {
+        coord.fleet_tick();
+        let s = coord.health_snapshot()[0];
+        if walked.last() != Some(&s) {
+            walked.push(s);
+        }
+    }
+    use std::sync::atomic::Ordering::Relaxed;
+    assert_eq!(
+        coord.health_snapshot()[0],
+        DieState::Healthy,
+        "die must be re-admitted after refit; walk {walked:?}, log:\n{}",
+        coord.fleet_log().join("\n")
+    );
+    assert!(
+        walked.contains(&DieState::Draining) && walked.contains(&DieState::Recalibrating),
+        "state machine must pass through drain + recalibrate: {walked:?}"
+    );
+    assert!(coord.metrics.refits.load(Relaxed) >= 1, "{}", coord.fleet_status());
+    assert!(coord.metrics.probes.load(Relaxed) >= 4);
+
+    // the refitted head serves at pre-drift accuracy on the drifted die
+    let post_err = error_rate(&coord, &xt, &yt);
+    assert!(
+        post_err <= pre_err + 0.02,
+        "refit did not recover accuracy: pre {pre_err} post {post_err}"
+    );
+    coord.shutdown();
+}

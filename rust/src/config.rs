@@ -338,6 +338,14 @@ pub struct SystemConfig {
     /// Hot standby dies: fabricated and trained like actives but held
     /// out of rotation until a quarantine promotes them (DESIGN.md §12).
     pub standby_chips: usize,
+    /// Virtual input dimension served by each die via the Section V
+    /// rotation extension (DESIGN.md §13); `None` = the physical d.
+    pub virtual_d: Option<usize>,
+    /// Virtual hidden width served per die; `None` = the physical L.
+    /// When either dim exceeds the die, every request costs
+    /// `RotationPlan::passes()` physical conversions — priced into the
+    /// router and batcher.
+    pub virtual_l: Option<usize>,
     /// Fleet-health settings: probe cadence, drift thresholds,
     /// recovery/quarantine policy.
     pub fleet: crate::fleet::FleetConfig,
@@ -354,6 +362,8 @@ impl Default for SystemConfig {
             seed: 0xE1_37,
             normalize: false,
             standby_chips: 0,
+            virtual_d: None,
+            virtual_l: None,
             fleet: crate::fleet::FleetConfig::default(),
         }
     }

@@ -21,22 +21,30 @@ pub struct Batch {
 
 /// Blockingly collect the next batch from `rx`.
 ///
-/// Waits (forever) for the first message; then drains until `max_batch`
-/// classify requests are held or `max_wait` has elapsed since the first
-/// message. A control-only window returns an empty-request batch — the
-/// "empty-queue tick" that lets probes run on an idle worker.
-/// Returns `None` once the channel is closed and drained — the worker's
-/// shutdown signal.
+/// Waits (forever) for the first message; then drains until the held
+/// classify requests cost `max_batch` *physical conversions* or
+/// `max_wait` has elapsed since the first message. `cost_per_request`
+/// is the die's pass cost (DESIGN.md §13): 1 on a physical die, so the
+/// bound counts requests; `RotationPlan::passes()` on a virtual die, so
+/// a P-pass die holds 1/P as many requests per batch and the per-batch
+/// conversion budget stays constant fleet-wide. At least one request is
+/// always collected. A control-only window returns an empty-request
+/// batch — the "empty-queue tick" that lets probes run on an idle
+/// worker. Returns `None` once the channel is closed and drained — the
+/// worker's shutdown signal.
 pub fn collect_batch(
     rx: &Receiver<WorkerMsg>,
     max_batch: usize,
     max_wait: Duration,
+    cost_per_request: usize,
 ) -> Option<Batch> {
+    let cost = cost_per_request.max(1);
+    let max_requests = (max_batch / cost).max(1);
     let first = rx.recv().ok()?;
     let deadline = Instant::now() + max_wait;
     let mut batch = Batch { requests: Vec::new(), control: Vec::new() };
     push(&mut batch, first);
-    while batch.requests.len() < max_batch {
+    while batch.requests.len() < max_requests {
         let now = Instant::now();
         if now >= deadline {
             break;
@@ -89,14 +97,14 @@ mod tests {
             tx.send(req(i)).unwrap();
         }
         let t0 = Instant::now();
-        let b = collect_batch(&rx, 4, Duration::from_millis(200)).unwrap();
+        let b = collect_batch(&rx, 4, Duration::from_millis(200), 1).unwrap();
         assert_eq!(b.requests.len(), 4);
         assert_eq!(b.requests[0].id, 0);
         assert_eq!(b.requests[3].id, 3);
         // a full batch flushes immediately, well before the deadline
         assert!(t0.elapsed() < Duration::from_millis(150));
         // the rest are still queued
-        let b2 = collect_batch(&rx, 100, Duration::from_millis(5)).unwrap();
+        let b2 = collect_batch(&rx, 100, Duration::from_millis(5), 1).unwrap();
         assert_eq!(b2.requests.len(), 6);
     }
 
@@ -105,7 +113,7 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         tx.send(req(1)).unwrap();
         let t0 = Instant::now();
-        let b = collect_batch(&rx, 64, Duration::from_millis(20)).unwrap();
+        let b = collect_batch(&rx, 64, Duration::from_millis(20), 1).unwrap();
         assert_eq!(b.requests.len(), 1);
         assert!(b.control.is_empty());
         assert!(t0.elapsed() >= Duration::from_millis(18));
@@ -118,7 +126,7 @@ mod tests {
         // empty-request batch carrying the control — the probe tick
         let (tx, rx) = mpsc::channel();
         tx.send(ctl()).unwrap();
-        let b = collect_batch(&rx, 8, Duration::from_millis(5)).unwrap();
+        let b = collect_batch(&rx, 8, Duration::from_millis(5), 1).unwrap();
         assert!(b.requests.is_empty());
         assert_eq!(b.control.len(), 1);
         assert!(matches!(b.control[0], ControlMsg::SetEnv { .. }));
@@ -130,16 +138,31 @@ mod tests {
         tx.send(req(0)).unwrap();
         tx.send(ctl()).unwrap();
         tx.send(req(1)).unwrap();
-        let b = collect_batch(&rx, 8, Duration::from_millis(10)).unwrap();
+        let b = collect_batch(&rx, 8, Duration::from_millis(10), 1).unwrap();
         assert_eq!(b.requests.len(), 2);
         assert_eq!(b.control.len(), 1);
+    }
+
+    #[test]
+    fn pass_cost_shrinks_the_request_window() {
+        // a 4-pass virtual die with an 8-conversion budget holds at
+        // most 2 requests per batch
+        let (tx, rx) = mpsc::channel();
+        for i in 0..5 {
+            tx.send(req(i)).unwrap();
+        }
+        let b = collect_batch(&rx, 8, Duration::from_millis(50), 4).unwrap();
+        assert_eq!(b.requests.len(), 2);
+        // even a cost above the whole budget still moves one request
+        let b = collect_batch(&rx, 8, Duration::from_millis(5), 100).unwrap();
+        assert_eq!(b.requests.len(), 1);
     }
 
     #[test]
     fn returns_none_when_closed() {
         let (tx, rx) = mpsc::channel::<WorkerMsg>();
         drop(tx);
-        assert!(collect_batch(&rx, 8, Duration::from_millis(5)).is_none());
+        assert!(collect_batch(&rx, 8, Duration::from_millis(5), 1).is_none());
     }
 
     #[test]
@@ -150,7 +173,7 @@ mod tests {
         }
         drop(tx);
         let mut seen = Vec::new();
-        while let Some(b) = collect_batch(&rx, 7, Duration::from_millis(1)) {
+        while let Some(b) = collect_batch(&rx, 7, Duration::from_millis(1), 1) {
             seen.extend(b.requests.iter().map(|r| r.id));
         }
         assert_eq!(seen, (0..50).collect::<Vec<_>>());

@@ -16,6 +16,10 @@ pub struct Metrics {
     pub sim_batches: AtomicU64,
     /// Sum of batch sizes (for mean batch occupancy).
     pub batched_requests: AtomicU64,
+    /// Physical die conversions booked while serving — a virtual
+    /// request books `RotationPlan::passes()` of them (DESIGN.md §13),
+    /// so `conversions / responses` is the fleet's mean pass cost.
+    pub conversions: AtomicU64,
     latency_us: [AtomicU64; BUCKETS],
     latency_sum_us: AtomicU64,
     // fleet-health counters (DESIGN.md §12)
@@ -48,6 +52,10 @@ impl Metrics {
         } else {
             self.sim_batches.fetch_add(1, Ordering::Relaxed);
         }
+    }
+
+    pub fn record_conversions(&self, n: u64) {
+        self.conversions.fetch_add(n, Ordering::Relaxed);
     }
 
     pub fn record_response(&self, latency: Duration) {
@@ -106,7 +114,7 @@ impl Metrics {
     pub fn report(&self) -> String {
         format!(
             "requests={} responses={} batches={} (pjrt={}, sim={}, mean size {:.1}) \
-             latency mean={:.0}us p50~{}us p99~{}us \
+             conversions={} latency mean={:.0}us p50~{}us p99~{}us \
              fleet probes={} renorms={} refits={} quarantines={} promotions={}",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
@@ -114,6 +122,7 @@ impl Metrics {
             self.pjrt_batches.load(Ordering::Relaxed),
             self.sim_batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
+            self.conversions.load(Ordering::Relaxed),
             self.mean_latency_us(),
             self.latency_percentile_us(50.0),
             self.latency_percentile_us(99.0),
@@ -185,6 +194,15 @@ mod tests {
         m.record_response(Duration::from_micros(3000)); // bucket [2048, 4096)
         let p50 = m.latency_percentile_us(50.0);
         assert_eq!(p50, 3072, "one sample interpolates to the bucket midpoint");
+    }
+
+    #[test]
+    fn conversions_accumulate_and_report() {
+        let m = Metrics::new();
+        m.record_conversions(9);
+        m.record_conversions(9);
+        assert_eq!(m.conversions.load(Ordering::Relaxed), 18);
+        assert!(m.report().contains("conversions=18"), "{}", m.report());
     }
 
     #[test]

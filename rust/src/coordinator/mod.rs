@@ -1,10 +1,12 @@
 //! L3 serving coordinator: the paper's classifier chip recast as a
-//! request pipeline (DESIGN.md §8, §12).
+//! request pipeline (DESIGN.md §8, §12, §13).
 //!
 //! ```text
-//! client -> Coordinator::submit -> Router (least-loaded HEALTHY die)
-//!        -> per-worker dynamic batcher -> hidden layer
-//!           (PJRT batched artifact | scalar chip sim)
+//! client -> Coordinator::submit -> Router (least pass-weighted
+//!           outstanding work over HEALTHY dies)
+//!        -> per-worker dynamic batcher (conversion budget)
+//!        -> hidden layer (PJRT batched artifact | chip sim,
+//!           through the Section V rotation plan on virtual dies)
 //!        -> fixed-point second stage -> response + metrics
 //!
 //! fleet manager -> probe / renormalise / refit control messages
@@ -33,7 +35,7 @@ use crate::chip::ChipModel;
 use crate::config::{ChipConfig, SystemConfig};
 use crate::elm::secondstage::SecondStage;
 use crate::elm::train::{assemble_h, solve_head};
-use crate::elm::ChipHidden;
+use crate::extension::{RotationPlan, ServeChip, ServeHidden};
 use crate::fleet::{
     DieState, DriftSchedule, FleetManager, FleetSetup, FleetState, ProbeSet,
 };
@@ -50,6 +52,10 @@ pub struct Coordinator {
     next_id: AtomicU64,
     workers: Vec<JoinHandle<()>>,
     pub d: usize,
+    /// Physical conversions each request costs on a die: 1 for physical
+    /// serving, `RotationPlan::passes()` when the fleet serves virtual
+    /// dims (DESIGN.md §13).
+    pub passes: usize,
     fleet: Arc<Mutex<FleetManager>>,
     /// Background prober (only when `fleet.probe_period` is set).
     auto_probe: Option<(Arc<AtomicBool>, JoinHandle<()>)>,
@@ -62,6 +68,13 @@ impl Coordinator {
     /// Section VI-C), enrol a fleet-health baseline per die, then start
     /// serving. Standby dies are fully trained but held out of rotation
     /// until a quarantine promotes them.
+    ///
+    /// When `sys.virtual_d` / `sys.virtual_l` exceed the fabricated
+    /// dims, every die is wrapped in the Section V rotation plan
+    /// (DESIGN.md §13): training, probing, recalibration and serving
+    /// all flow through the virtual forward, and each request costs
+    /// [`RotationPlan::passes`] physical conversions — priced into the
+    /// router's load accounting and the batcher's conversion budget.
     pub fn start(
         sys: &SystemConfig,
         chip_cfg: &ChipConfig,
@@ -72,6 +85,28 @@ impl Coordinator {
     ) -> Result<Coordinator> {
         let metrics = Arc::new(Metrics::new());
         let n_total = sys.n_chips + sys.standby_chips;
+        // validate the virtual geometry once, before fabricating anything.
+        // Virtual dims are *extensions* of the die: serving below the
+        // fabricated dims would silently mask neurons (and disable the
+        // PJRT fast path) when the right move is fabricating smaller dies
+        let vd = sys.virtual_d.unwrap_or(chip_cfg.d);
+        let vl = sys.virtual_l.unwrap_or(chip_cfg.l);
+        anyhow::ensure!(
+            vd >= chip_cfg.d && vl >= chip_cfg.l,
+            "virtual dims {vd}x{vl} must extend the fabricated die {}x{}",
+            chip_cfg.d,
+            chip_cfg.l
+        );
+        let plan = RotationPlan::new(chip_cfg.d, chip_cfg.l, vd, vl)
+            .map_err(|e| anyhow::anyhow!("virtual dims: {e}"))?;
+        let passes = plan.passes();
+        if let Some(x) = train_x.first() {
+            anyhow::ensure!(
+                x.len() == vd,
+                "training set dimension {} != served dimension {vd}",
+                x.len()
+            );
+        }
         let probe = Arc::new(ProbeSet::from_training(
             train_x,
             train_y,
@@ -84,30 +119,30 @@ impl Coordinator {
         for i in 0..n_total {
             let seed = sys.seed + i as u64;
             let chip = ChipModel::fabricate(chip_cfg.clone(), seed);
-            // chip-in-the-loop training on this die
-            let mut hidden = if sys.normalize {
-                ChipHidden::normalized(chip)
-            } else {
-                ChipHidden::new(chip)
-            };
+            let die = ServeChip::new(chip, vd, vl)
+                .map_err(|e| anyhow::anyhow!("wrapping die {i}: {e}"))?;
+            // chip-in-the-loop training on this die, through the serving
+            // plan (virtual dies train on their virtual projection)
+            let mut hidden = ServeHidden { die, normalize: sys.normalize };
             let h = assemble_h(&mut hidden, train_x);
             let head = solve_head(&h, train_y, lambda)
                 .map_err(|e| anyhow::anyhow!("training die {i}: {e}"))?;
             let second = SecondStage::new(&head.beta, beta_bits, sys.normalize);
             // fleet enrolment: baseline probe on the freshly trained die
-            let mut chip = hidden.chip;
-            baselines.push(crate::fleet::probe::run_probe(&mut chip, &second, &probe));
+            let mut die = hidden.die;
+            baselines.push(crate::fleet::probe::run_probe(&mut die, &second, &probe));
             let (tx, rx) = mpsc::channel();
             senders.push(tx);
-            setups.push((i, chip, second, rx));
+            setups.push((i, die, second, rx));
         }
         let state = FleetState::new(n_total, sys.n_chips);
-        let router = Router::with_health(senders.clone(), state.clone());
+        let router =
+            Router::with_costs(senders.clone(), state.clone(), vec![passes; n_total]);
         let mut workers = Vec::new();
-        for (i, chip, second, rx) in setups {
+        for (i, die, second, rx) in setups {
             let setup = worker::WorkerSetup {
                 index: i,
-                chip,
+                die,
                 second,
                 artifact_dir: worker::usable_artifact_dir(sys),
                 rx,
@@ -160,13 +195,15 @@ impl Coordinator {
                 .expect("spawning fleet prober");
             (stop, handle)
         });
-        let d = train_x.first().map_or(chip_cfg.d, |x| x.len());
+        // the ensure above pinned train_x's width to vd, so vd IS the
+        // dimension submit() must validate against
         Ok(Coordinator {
             router,
             metrics,
             next_id: AtomicU64::new(0),
             workers,
-            d,
+            d: vd,
+            passes,
             fleet,
             auto_probe,
         })
@@ -312,6 +349,8 @@ mod tests {
             seed: 99,
             normalize: false,
             standby_chips: 0,
+            virtual_d: None,
+            virtual_l: None,
             fleet: Default::default(),
         };
         let chip = ChipConfig::default()
@@ -393,6 +432,93 @@ mod tests {
         let coord = Coordinator::start(&sys, &chip, &xs, &ys, 1e-2, 10).unwrap();
         assert!(coord.submit(vec![0.0; 3]).is_err());
         coord.shutdown();
+    }
+
+    #[test]
+    fn virtual_fleet_serves_and_prices_passes() {
+        // 2 dies fabricated at 3x8 serving the d=6, L=24 projection:
+        // every response costs hidden_blocks x input_chunks = 6 passes
+        let (mut sys, _, xs, ys) = tiny_system();
+        sys.virtual_d = Some(6);
+        sys.virtual_l = Some(24);
+        let chip = ChipConfig::default()
+            .with_dims(3, 8)
+            .with_b(10)
+            .with_mode(Transfer::Quadratic);
+        let coord = Coordinator::start(&sys, &chip, &xs, &ys, 1e-2, 10).unwrap();
+        assert_eq!(coord.d, 6);
+        assert_eq!(coord.passes, 6);
+        let mut correct = 0;
+        for (x, &y) in xs.iter().take(40).zip(&ys) {
+            let resp = coord.classify(x.clone()).unwrap();
+            assert_eq!(resp.backend, Backend::ChipSim);
+            assert_eq!(resp.passes, 6);
+            if (resp.label as f64 - y).abs() < 1e-9 {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 30, "only {correct}/40 correct on the virtual fleet");
+        // the metrics ledger books exactly passes() conversions/request
+        let responses = coord.metrics.responses.load(Ordering::Relaxed);
+        assert_eq!(
+            coord.metrics.conversions.load(Ordering::Relaxed),
+            responses * 6
+        );
+        coord.shutdown();
+    }
+
+    #[test]
+    fn virtual_fleet_survives_probe_ticks_and_recovers_health() {
+        let (mut sys, _, xs, ys) = tiny_system();
+        sys.virtual_d = Some(6);
+        sys.virtual_l = Some(24);
+        let chip = ChipConfig::default()
+            .with_dims(3, 8)
+            .with_b(10)
+            .with_mode(Transfer::Quadratic);
+        let coord = Coordinator::start(&sys, &chip, &xs, &ys, 1e-2, 10).unwrap();
+        for _ in 0..3 {
+            coord.fleet_tick();
+        }
+        assert!(
+            coord.health_snapshot().iter().all(|&s| s == DieState::Healthy),
+            "{}",
+            coord.fleet_status()
+        );
+        assert!(coord.metrics.probes.load(Ordering::Relaxed) >= 6);
+        // the refit path flows through the virtual forward: drain a die
+        // and let the state machine walk it back to Healthy
+        coord.drain_die(0).unwrap();
+        coord.fleet_tick();
+        coord.fleet_tick();
+        assert_eq!(
+            coord.health_snapshot()[0],
+            DieState::Healthy,
+            "virtual die not re-admitted: {}\n{}",
+            coord.fleet_status(),
+            coord.fleet_log().join("\n")
+        );
+        assert!(coord.metrics.refits.load(Ordering::Relaxed) >= 1);
+        let resp = coord.classify(xs[0].clone()).unwrap();
+        assert!(resp.label == 1 || resp.label == -1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn invalid_virtual_dims_fail_fast() {
+        let (mut sys, chip, xs, ys) = tiny_system();
+        // chip is 6x24: d beyond k*N cannot be served by rotation
+        sys.virtual_d = Some(6 * 24 + 1);
+        assert!(Coordinator::start(&sys, &chip, &xs, &ys, 1e-2, 10).is_err());
+        // training set dimension must match the served dimension
+        let mut sys2 = tiny_system().0;
+        sys2.virtual_d = Some(12);
+        assert!(Coordinator::start(&sys2, &chip, &xs, &ys, 1e-2, 10).is_err());
+        // virtual dims below the fabricated die would silently mask
+        // neurons — refuse instead of serving a crippled projection
+        let mut sys3 = tiny_system().0;
+        sys3.virtual_l = Some(12); // chip is 6x24
+        assert!(Coordinator::start(&sys3, &chip, &xs, &ys, 1e-2, 10).is_err());
     }
 
     #[test]

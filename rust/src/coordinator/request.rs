@@ -91,6 +91,10 @@ pub struct ClassifyResponse {
     /// Which worker/die served it.
     pub worker: usize,
     pub backend: Backend,
+    /// Physical conversions this request cost on the die — 1 on a
+    /// physical die, `RotationPlan::passes()` on a virtual one
+    /// (DESIGN.md §13).
+    pub passes: usize,
     /// Wall-clock latency from submit to reply.
     pub latency: std::time::Duration,
 }
@@ -120,6 +124,7 @@ mod tests {
             label: 1,
             worker: 0,
             backend: Backend::ChipSim,
+            passes: 1,
             latency: req.submitted.elapsed(),
         };
         req.reply.send(resp.clone()).unwrap();

@@ -3,7 +3,11 @@
 //! ties — each worker owns one fabricated chip and its own trained head.
 //! Routing is health-aware (DESIGN.md §12): only dies the fleet manager
 //! marks `Healthy` are candidates, so drained / recalibrating /
-//! quarantined dies and cold standbys never see traffic.
+//! quarantined dies and cold standbys never see traffic. Load is
+//! *pass-weighted* (DESIGN.md §13): a request on a die serving a
+//! virtual projection costs `RotationPlan::passes()` physical
+//! conversions, so one outstanding request there counts as `passes`
+//! units against the die when comparing loads.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
@@ -41,6 +45,10 @@ pub struct Router {
     pub outstanding: Outstanding,
     /// Per-die lifecycle gauges; only `Healthy` dies are routable.
     pub health: FleetState,
+    /// Physical conversions one request costs on each die (1 for a
+    /// physical die, the rotation plan's passes for a virtual one);
+    /// outstanding work is compared in these units.
+    costs: Vec<usize>,
     rr: AtomicU64,
 }
 
@@ -52,18 +60,30 @@ impl Router {
         Router::with_health(senders, FleetState::new(n, n))
     }
 
-    /// Router sharing the fleet manager's health state.
+    /// Router sharing the fleet manager's health state (unit pass cost).
     pub fn with_health(senders: Vec<Sender<WorkerMsg>>, health: FleetState) -> Self {
+        let costs = vec![1; senders.len()];
+        Router::with_costs(senders, health, costs)
+    }
+
+    /// Router with explicit per-die pass costs (DESIGN.md §13).
+    pub fn with_costs(
+        senders: Vec<Sender<WorkerMsg>>,
+        health: FleetState,
+        costs: Vec<usize>,
+    ) -> Self {
+        assert_eq!(senders.len(), costs.len());
         let outstanding = Outstanding::new(senders.len());
-        Router { senders, outstanding, health, rr: AtomicU64::new(0) }
+        Router { senders, outstanding, health, costs, rr: AtomicU64::new(0) }
     }
 
     pub fn n_workers(&self) -> usize {
         self.senders.len()
     }
 
-    /// Pick the least-loaded *healthy* worker (round-robin tiebreak) and
-    /// enqueue. Errors when no die is in the `Healthy` state.
+    /// Pick the *healthy* worker with the least outstanding work in
+    /// physical-conversion units (round-robin tiebreak) and enqueue.
+    /// Errors when no die is in the `Healthy` state.
     pub fn route(&self, req: ClassifyRequest) -> Result<usize, String> {
         let n = self.senders.len();
         if n == 0 {
@@ -77,7 +97,7 @@ impl Router {
             if !self.health.routable(w) {
                 continue;
             }
-            let load = self.outstanding.load(w);
+            let load = self.outstanding.load(w).saturating_mul(self.costs[w]);
             if load < best_load {
                 best = w;
                 best_load = load;
@@ -218,6 +238,44 @@ mod tests {
         router.outstanding.dec(0);
         let total: usize = (0..2).map(|w| router.outstanding.load(w)).sum();
         assert_eq!(total, 5);
+    }
+
+    #[test]
+    fn pass_weighted_routing_prices_virtual_work() {
+        // worker 0 serves a 9-pass virtual projection, worker 1 a
+        // physical die: a single outstanding virtual request outweighs
+        // up to 8 outstanding physical ones
+        let (t0, _r0) = mpsc::channel();
+        let (t1, _r1) = mpsc::channel();
+        let router =
+            Router::with_costs(vec![t0, t1], FleetState::new(2, 2), vec![9, 1]);
+        router.outstanding.inc(0); // one virtual request in flight = 9 units
+        for i in 0..8 {
+            // physical load grows 0..=7 units, always below 9
+            assert_eq!(router.route(req(i)).unwrap(), 1, "request {i}");
+        }
+        // once the physical die owes more conversions than the virtual
+        // one, the virtual die wins again
+        for _ in 0..2 {
+            router.outstanding.inc(1); // 10 physical units vs 9 virtual
+        }
+        assert_eq!(router.route(req(99)).unwrap(), 0);
+    }
+
+    #[test]
+    fn unit_costs_reduce_to_plain_least_outstanding() {
+        // with every cost 1 the weighted router is exactly the old one
+        let (t0, _r0) = mpsc::channel();
+        let (t1, _r1) = mpsc::channel();
+        let router =
+            Router::with_costs(vec![t0, t1], FleetState::new(2, 2), vec![1, 1]);
+        for _ in 0..3 {
+            router.outstanding.inc(0);
+        }
+        for i in 0..4 {
+            assert_eq!(router.route(req(i)).unwrap(), 1);
+            router.outstanding.dec(1);
+        }
     }
 
     #[test]

@@ -1,8 +1,11 @@
-//! Chip worker: one thread owning one fabricated die, its trained head
-//! and (optionally) a PJRT engine. Batches arrive from the router via
-//! the dynamic batcher; the hidden layer runs on the batched AOT
-//! artifact when the batch is large enough, else on the scalar chip
-//! simulator; the fixed-point second stage produces the score.
+//! Chip worker: one thread owning one fabricated die (physical, or
+//! wrapped in the Section V rotation plan when the fleet serves virtual
+//! dims — DESIGN.md §13), its trained head and (optionally) a PJRT
+//! engine. Batches arrive from the router via the dynamic batcher; the
+//! hidden layer runs on the batched AOT artifact when the batch is
+//! large enough (physical dies only — the artifact's shape is the
+//! fabricated array), else on the scalar chip simulator through the
+//! serving plan; the fixed-point second stage produces the score.
 //! Fleet-health control messages (probe / drift injection / renormalise
 //! / refit — DESIGN.md §12) ride the same channel and execute here,
 //! because this thread owns the die.
@@ -11,9 +14,10 @@ use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::chip::{dac, ChipModel};
+use crate::chip::dac;
 use crate::config::SystemConfig;
 use crate::elm::secondstage::{codes_sum, SecondStage};
+use crate::extension::ServeChip;
 use crate::fleet::{calibrate, probe};
 use crate::runtime::PjrtEngine;
 
@@ -25,7 +29,7 @@ use super::router::Outstanding;
 /// Everything one worker needs, bundled for the spawn.
 pub struct WorkerSetup {
     pub index: usize,
-    pub chip: ChipModel,
+    pub die: ServeChip,
     pub second: SecondStage,
     /// Artifact directory; the engine itself is created *inside* the
     /// worker thread (PJRT handles are not `Send`).
@@ -39,12 +43,63 @@ pub struct WorkerSetup {
     pub normalize: bool,
 }
 
+/// Once-per-worker log latches: a hot serving loop must not flood
+/// stderr at batch or request rate, so each condition warns on its
+/// first occurrence only.
+#[derive(Default)]
+pub(crate) struct LogOnce {
+    /// PJRT engine failed and the batch fell back to the simulator.
+    pub pjrt_fallback: bool,
+    /// A malformed request was dropped instead of answered.
+    pub dropped_request: bool,
+}
+
+/// The batched hidden-layer engine as the worker drives it. `PjrtEngine`
+/// is the production implementation; the seam exists so the fallback
+/// path (engine present but failing) is testable without artifacts.
+pub(crate) trait BatchEngine {
+    #[allow(clippy::too_many_arguments)]
+    fn hidden(
+        &mut self,
+        flat: &[f32],
+        n: usize,
+        d: usize,
+        l: usize,
+        weights: &[f32],
+        normalized: bool,
+    ) -> anyhow::Result<Vec<f32>>;
+}
+
+impl BatchEngine for PjrtEngine {
+    fn hidden(
+        &mut self,
+        flat: &[f32],
+        n: usize,
+        d: usize,
+        l: usize,
+        weights: &[f32],
+        normalized: bool,
+    ) -> anyhow::Result<Vec<f32>> {
+        PjrtEngine::hidden(self, flat, n, d, l, weights, normalized)
+    }
+}
+
 /// Worker main loop; returns when the request channel closes.
 pub fn run(mut s: WorkerSetup) {
-    // PJRT engine lives entirely on this thread (handles are not Send)
-    let mut engine: Option<PjrtEngine> = s.artifact_dir.as_deref().and_then(open_engine);
+    // PJRT engine lives entirely on this thread (handles are not Send).
+    // Only a physical die can use it: the AOT artifact is compiled at
+    // the fabricated k x N shape, which a rotation plan outgrows.
+    let mut engine: Option<PjrtEngine> = if s.die.is_physical() {
+        s.artifact_dir.as_deref().and_then(open_engine)
+    } else {
+        None
+    };
     // weight matrix for the PJRT path, frozen at spawn conditions
-    let w_f32: Vec<f32> = s.chip.weights().to_f32();
+    let w_f32: Vec<f32> = if engine.is_some() {
+        s.die.chip_mut().weights().to_f32()
+    } else {
+        Vec::new()
+    };
     // The AOT artifact bakes the nominal corner (spawn-time weights,
     // fabricated T_neu, nominal VDD). Once drift injection or a
     // renormalisation changes the die underneath it, the artifact no
@@ -53,11 +108,18 @@ pub fn run(mut s: WorkerSetup) {
     // two inconsistent classifiers. So the first such control message
     // pins this die to the simulator for good.
     let mut artifact_stale = false;
-    let d = s.chip.cfg.d;
-    let l = s.chip.cfg.l;
-    while let Some(batch) = collect_batch(&s.rx, s.max_batch, s.max_wait) {
+    let mut logs = LogOnce::default();
+    let passes = s.die.passes();
+    while let Some(batch) = collect_batch(&s.rx, s.max_batch, s.max_wait, passes) {
         if !batch.requests.is_empty() {
-            serve_batch(&mut s, &mut engine, &w_f32, d, l, &batch.requests, artifact_stale);
+            serve_batch(
+                &mut s,
+                &mut engine,
+                &mut logs,
+                &w_f32,
+                &batch.requests,
+                artifact_stale,
+            );
         }
         for ctl in batch.control {
             handle_control(&mut s, &mut artifact_stale, ctl);
@@ -65,59 +127,124 @@ pub fn run(mut s: WorkerSetup) {
     }
 }
 
-/// Serve one classify batch through PJRT or the chip simulator.
-fn serve_batch(
+/// Serve one classify batch through PJRT or the chip simulator. The
+/// response `backend` and the batch metrics reflect the path that
+/// *actually* served — when the engine errors mid-batch the batch falls
+/// back to the simulator and is labelled and counted as `ChipSim`.
+pub(crate) fn serve_batch<E: BatchEngine>(
     s: &mut WorkerSetup,
-    engine: &mut Option<PjrtEngine>,
+    engine: &mut Option<E>,
+    logs: &mut LogOnce,
     w_f32: &[f32],
-    d: usize,
-    l: usize,
     requests: &[ClassifyRequest],
     artifact_stale: bool,
 ) {
     let n = requests.len();
-    let use_pjrt = engine.is_some() && !artifact_stale && n >= s.pjrt_min_batch;
-    s.metrics.record_batch(n, use_pjrt);
+    let d = s.die.input_dim();
+    let l = s.die.hidden_dim();
+    let cap = s.die.chip().cfg.cap();
+    // a malformed request must never reach the engine: the flattened
+    // PJRT input assumes n x d, and a wrong-length row would shift every
+    // row after it (the engine asserts on the total length). Send such
+    // batches through the sim path, which Errs per request instead.
+    let all_well_formed = requests.iter().all(|r| r.features.len() == d);
+    let want_pjrt = engine.is_some()
+        && s.die.is_physical()
+        && !artifact_stale
+        && all_well_formed
+        && n >= s.pjrt_min_batch;
     // DAC quantisation happens once, shared by both paths
     let codes: Vec<Vec<u16>> = requests
         .iter()
-        .map(|r| dac::features_to_codes(&r.features, &s.chip.cfg))
+        .map(|r| dac::features_to_codes(&r.features, &s.die.chip().cfg))
         .collect();
-    let hidden: Vec<Vec<u32>> = if use_pjrt {
+    let conversions_before = s.die.chip().ledger.conversions;
+    let mut served_pjrt = false;
+    let hidden: Vec<Result<Vec<u32>, String>> = if want_pjrt {
         let engine = engine.as_mut().unwrap();
         let flat: Vec<f32> = codes
             .iter()
             .flat_map(|c| c.iter().map(|&v| v as f32))
             .collect();
         match engine.hidden(&flat, n, d, l, w_f32, false) {
-            Ok(out) => out
-                .chunks(l)
-                .map(|row| row.iter().map(|&v| v.max(0.0) as u32).collect())
-                .collect(),
+            Ok(out) => {
+                served_pjrt = true;
+                out.chunks(l)
+                    .map(|row| {
+                        // clamp to the counter saturation value: the sim
+                        // path saturates at 2^b (counter::count_window),
+                        // so a hot artifact output must not exceed it
+                        Ok(row
+                            .iter()
+                            .map(|&v| (v.max(0.0) as u32).min(cap))
+                            .collect())
+                    })
+                    .collect()
+            }
             Err(e) => {
                 // artifact trouble: fall back to the simulator
-                eprintln!("worker {}: pjrt failed ({e:#}); falling back", s.index);
-                codes.iter().map(|c| s.chip.forward(c)).collect()
+                if !logs.pjrt_fallback {
+                    eprintln!(
+                        "worker {}: pjrt failed ({e:#}); falling back to chip sim",
+                        s.index
+                    );
+                    logs.pjrt_fallback = true;
+                }
+                codes.iter().map(|c| s.die.forward(c)).collect()
             }
         }
     } else {
-        codes.iter().map(|c| s.chip.forward(c)).collect()
+        codes.iter().map(|c| s.die.forward(c)).collect()
     };
-    let backend = if use_pjrt { Backend::Pjrt } else { Backend::ChipSim };
+    // count the batch on the path that served it, after any fallback
+    s.metrics.record_batch(n, served_pjrt);
+    // book physical conversions before any reply goes out (a client must
+    // never observe its response ahead of the conversions it cost): the
+    // ledger delta for sim conversions — all forwards above are done —
+    // or one per request for the artifact path, which bypasses the ledger
+    let booked = if served_pjrt {
+        n as u64
+    } else {
+        s.die.chip().ledger.conversions - conversions_before
+    };
+    s.metrics.record_conversions(booked);
+    let backend = if served_pjrt { Backend::Pjrt } else { Backend::ChipSim };
+    let passes = s.die.passes();
     for ((req, code), h) in requests.iter().zip(&codes).zip(&hidden) {
-        let score = s.second.score(h, codes_sum(code));
-        let resp = ClassifyResponse {
-            id: req.id,
-            score,
-            label: if score >= 0.0 { 1 } else { -1 },
-            worker: s.index,
-            backend,
-            latency: req.submitted.elapsed(),
-        };
-        s.metrics.record_response(resp.latency);
-        s.outstanding.dec(s.index);
-        // receiver may have hung up; that's the client's business
-        let _ = req.reply.send(resp);
+        match h {
+            Ok(h) => {
+                let score = s.second.score(h, codes_sum(code));
+                let resp = ClassifyResponse {
+                    id: req.id,
+                    score,
+                    label: if score >= 0.0 { 1 } else { -1 },
+                    worker: s.index,
+                    backend,
+                    passes,
+                    latency: req.submitted.elapsed(),
+                };
+                s.metrics.record_response(resp.latency);
+                s.outstanding.dec(s.index);
+                // receiver may have hung up; that's the client's business
+                let _ = req.reply.send(resp);
+            }
+            Err(e) => {
+                // a malformed request must not kill the thread that owns
+                // the die: drop the reply (the client's recv fails) but
+                // keep the outstanding ledger balanced so drains finish.
+                // Warn once per worker — a misbehaving client would
+                // otherwise flood stderr at request rate.
+                if !logs.dropped_request {
+                    eprintln!(
+                        "worker {}: dropping malformed request {} ({e}); \
+                         further drops are silent",
+                        s.index, req.id
+                    );
+                    logs.dropped_request = true;
+                }
+                s.outstanding.dec(s.index);
+            }
+        }
     }
 }
 
@@ -125,31 +252,32 @@ fn serve_batch(
 fn handle_control(s: &mut WorkerSetup, artifact_stale: &mut bool, ctl: ControlMsg) {
     match ctl {
         ControlMsg::Probe { probe: set, reply } => {
-            let rep = probe::run_probe(&mut s.chip, &s.second, &set);
+            let rep = probe::run_probe(&mut s.die, &s.second, &set);
             let _ = reply.send(rep);
         }
         ControlMsg::SetEnv { vdd, temp_k, age_sigma_vt, seed } => {
+            let chip = s.die.chip_mut();
             if let Some(v) = vdd {
-                s.chip.set_vdd(v);
+                chip.set_vdd(v);
             }
             if let Some(t) = temp_k {
-                s.chip.set_temp(t);
+                chip.set_temp(t);
             }
             if let Some(sigma) = age_sigma_vt {
-                s.chip.age_mismatch(sigma, seed);
+                chip.age_mismatch(sigma, seed);
             }
             *artifact_stale = true; // the artifact's corner is gone
         }
         ControlMsg::Renormalize { gain, reply } => {
-            let t_neu = calibrate::renormalize(&mut s.chip, gain);
+            let t_neu = calibrate::renormalize(s.die.chip_mut(), gain);
             *artifact_stale = true; // artifact counts keep the old T_neu
             let _ = reply.send(t_neu);
         }
         ControlMsg::Refit { xs, ys, lambda, beta_bits, probe: set, reply } => {
-            let res = calibrate::refit_head(&mut s.chip, s.normalize, &xs, &ys, lambda, beta_bits)
+            let res = calibrate::refit_head(&mut s.die, s.normalize, &xs, &ys, lambda, beta_bits)
                 .map(|second| {
                     s.second = second;
-                    probe::run_probe(&mut s.chip, &s.second, &set)
+                    probe::run_probe(&mut s.die, &s.second, &set)
                 });
             // the refit head was solved against the *current* (drifted)
             // die, which the frozen artifact does not model
@@ -181,5 +309,223 @@ pub fn usable_artifact_dir(sys: &SystemConfig) -> Option<String> {
         Some(sys.artifact_dir.clone())
     } else {
         None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chip::ChipModel;
+    use crate::config::ChipConfig;
+    use std::sync::atomic::Ordering;
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    const D: usize = 4;
+    const L: usize = 8;
+
+    /// Engine that always errors — the broken-artifact scenario.
+    struct FailEngine;
+    impl BatchEngine for FailEngine {
+        fn hidden(
+            &mut self,
+            _flat: &[f32],
+            _n: usize,
+            _d: usize,
+            _l: usize,
+            _w: &[f32],
+            _norm: bool,
+        ) -> anyhow::Result<Vec<f32>> {
+            anyhow::bail!("artifact corrupted")
+        }
+    }
+
+    /// Engine returning values far beyond the counter range — exercises
+    /// the cap clamp on the PJRT mapping.
+    struct HotEngine;
+    impl BatchEngine for HotEngine {
+        fn hidden(
+            &mut self,
+            _flat: &[f32],
+            n: usize,
+            _d: usize,
+            l: usize,
+            _w: &[f32],
+            _norm: bool,
+        ) -> anyhow::Result<Vec<f32>> {
+            Ok(vec![1e12; n * l])
+        }
+    }
+
+    fn setup() -> WorkerSetup {
+        let cfg = ChipConfig::default().with_dims(D, L).with_b(10);
+        let chip = ChipModel::fabricate(cfg, 1);
+        let (_tx, rx) = mpsc::channel();
+        WorkerSetup {
+            index: 0,
+            die: ServeChip::physical(chip),
+            // beta all-ones: QuantBeta codes are all the max level, so
+            // score == sum(h) exactly — the clamp is directly observable
+            second: SecondStage::new(&vec![1.0; L], 10, false),
+            artifact_dir: None,
+            rx,
+            metrics: Arc::new(Metrics::new()),
+            outstanding: Outstanding::new(1),
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            pjrt_min_batch: 1,
+            normalize: false,
+        }
+    }
+
+    fn requests(s: &WorkerSetup, n: usize) -> (Vec<ClassifyRequest>, Vec<mpsc::Receiver<ClassifyResponse>>) {
+        let mut reqs = Vec::new();
+        let mut rxs = Vec::new();
+        for i in 0..n {
+            let (tx, rx) = mpsc::channel();
+            s.outstanding.inc(0);
+            reqs.push(ClassifyRequest {
+                id: i as u64,
+                features: vec![0.3; D],
+                submitted: Instant::now(),
+                reply: tx,
+            });
+            rxs.push(rx);
+        }
+        (reqs, rxs)
+    }
+
+    #[test]
+    fn failing_engine_falls_back_and_labels_chip_sim() {
+        // bugfix: the fallback batch must be labelled AND counted as the
+        // simulator, not as PJRT, and the warning fires once per engine
+        let mut s = setup();
+        let mut engine = Some(FailEngine);
+        let mut logs = LogOnce::default();
+        let (reqs, rxs) = requests(&s, 4);
+        serve_batch(&mut s, &mut engine, &mut logs, &[], &reqs, false);
+        assert!(logs.pjrt_fallback, "first fallback must log");
+        for rx in &rxs {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.backend, Backend::ChipSim, "fallback mislabeled");
+            assert_eq!(resp.passes, 1);
+        }
+        assert_eq!(s.metrics.pjrt_batches.load(Ordering::Relaxed), 0);
+        assert_eq!(s.metrics.sim_batches.load(Ordering::Relaxed), 1);
+        // the sim path books real ledger conversions into the metrics
+        assert_eq!(s.metrics.conversions.load(Ordering::Relaxed), 4);
+        assert_eq!(s.outstanding.load(0), 0);
+        // a second failing batch stays silent (once per engine)
+        let (reqs, _rxs) = requests(&s, 4);
+        serve_batch(&mut s, &mut engine, &mut logs, &[], &reqs, false);
+        assert!(logs.pjrt_fallback);
+        assert_eq!(s.metrics.sim_batches.load(Ordering::Relaxed), 2);
+        assert_eq!(s.metrics.pjrt_batches.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn pjrt_hidden_is_clamped_to_the_counter_cap() {
+        // bugfix: a hot artifact output can never exceed 2^b; with an
+        // all-ones head the score is exactly sum(h) = L * cap
+        let mut s = setup();
+        let cap = s.die.chip().cfg.cap(); // 2^10
+        let mut engine = Some(HotEngine);
+        let mut logs = LogOnce::default();
+        let (reqs, rxs) = requests(&s, 2);
+        serve_batch(&mut s, &mut engine, &mut logs, &[], &reqs, false);
+        for rx in &rxs {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.backend, Backend::Pjrt);
+            assert!(
+                (resp.score - (L as u32 * cap) as f64).abs() < 1e-3,
+                "unclamped score {}",
+                resp.score
+            );
+        }
+        assert_eq!(s.metrics.pjrt_batches.load(Ordering::Relaxed), 1);
+        assert_eq!(s.metrics.sim_batches.load(Ordering::Relaxed), 0);
+        // one physical conversion per request on the artifact path
+        assert_eq!(s.metrics.conversions.load(Ordering::Relaxed), 2);
+        assert!(!logs.pjrt_fallback);
+    }
+
+    #[test]
+    fn small_batches_and_stale_artifacts_use_the_simulator() {
+        let mut s = setup();
+        s.pjrt_min_batch = 8;
+        let mut engine = Some(HotEngine);
+        let mut logs = LogOnce::default();
+        let (reqs, rxs) = requests(&s, 2); // below pjrt_min_batch
+        serve_batch(&mut s, &mut engine, &mut logs, &[], &reqs, false);
+        assert_eq!(rxs[0].recv().unwrap().backend, Backend::ChipSim);
+        s.pjrt_min_batch = 1;
+        let (reqs, rxs) = requests(&s, 2);
+        serve_batch(&mut s, &mut engine, &mut logs, &[], &reqs, true); // stale
+        assert_eq!(rxs[0].recv().unwrap().backend, Backend::ChipSim);
+        assert_eq!(s.metrics.pjrt_batches.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn malformed_request_is_dropped_without_killing_the_worker() {
+        // a wrong-dimension request (past the submit-side validation,
+        // e.g. a future protocol bug) must not panic the die's thread
+        let mut s = setup();
+        let mut engine: Option<FailEngine> = None;
+        let mut logs = LogOnce::default();
+        let (mut reqs, rxs) = requests(&s, 2);
+        reqs[1].features = vec![0.1; D + 3]; // malformed
+        serve_batch(&mut s, &mut engine, &mut logs, &[], &reqs, false);
+        // drop the batch as run() does, releasing the unanswered reply
+        drop(reqs);
+        // the good request is answered, the bad one dropped
+        assert!(rxs[0].recv().is_ok());
+        assert!(rxs[1].recv().is_err(), "malformed request must get no reply");
+        // outstanding stays balanced so a drain can complete
+        assert_eq!(s.outstanding.load(0), 0);
+        assert_eq!(s.metrics.responses.load(Ordering::Relaxed), 1);
+        assert!(logs.dropped_request, "drop must latch its once-per-worker log");
+    }
+
+    #[test]
+    fn malformed_request_never_reaches_the_engine() {
+        // a wrong-length row would shift every row after it in the
+        // flattened PJRT input (and the real engine asserts on total
+        // length): the whole batch must take the sim path instead
+        let mut s = setup();
+        let mut engine = Some(HotEngine);
+        let mut logs = LogOnce::default();
+        let (mut reqs, rxs) = requests(&s, 3);
+        reqs[2].features = vec![0.1; D - 1]; // malformed
+        serve_batch(&mut s, &mut engine, &mut logs, &[], &reqs, false);
+        drop(reqs);
+        // good requests answered by the simulator, bad one dropped
+        assert_eq!(rxs[0].recv().unwrap().backend, Backend::ChipSim);
+        assert_eq!(rxs[1].recv().unwrap().backend, Backend::ChipSim);
+        assert!(rxs[2].recv().is_err());
+        assert_eq!(s.metrics.pjrt_batches.load(Ordering::Relaxed), 0);
+        assert_eq!(s.outstanding.load(0), 0);
+    }
+
+    #[test]
+    fn virtual_die_serves_with_pass_cost_in_responses_and_conversions() {
+        let cfg = ChipConfig::default().with_dims(D, L).with_b(10);
+        let chip = ChipModel::fabricate(cfg, 2);
+        let mut s = setup();
+        s.die = ServeChip::new(chip, 2 * D, 2 * L).unwrap(); // 4 passes
+        s.second = SecondStage::new(&vec![1.0; 2 * L], 10, false);
+        let mut engine: Option<FailEngine> = None;
+        let mut logs = LogOnce::default();
+        let (mut reqs, rxs) = requests(&s, 3);
+        for r in &mut reqs {
+            r.features = vec![0.3; 2 * D];
+        }
+        serve_batch(&mut s, &mut engine, &mut logs, &[], &reqs, false);
+        for rx in &rxs {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.backend, Backend::ChipSim);
+            assert_eq!(resp.passes, 4);
+        }
+        // the ledger delta books exactly passes() conversions/request
+        assert_eq!(s.metrics.conversions.load(Ordering::Relaxed), 12);
     }
 }

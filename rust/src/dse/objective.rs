@@ -95,6 +95,21 @@ pub struct Objective<'a> {
     pub max_train: usize,
     /// Validation rows used per trial.
     pub max_val: usize,
+    /// Fabricated die geometry `(k, N)` realising the point. When the
+    /// workload dimension d or the point's L exceeds it, the Section V
+    /// rotation serves the excess at `ceil(d/k) * ceil(L/N)` physical
+    /// conversions per sample (DESIGN.md §13), priced into latency and
+    /// energy — so the explorer can trade rotation passes against the
+    /// accuracy a wider virtual L buys. `None` = dies are fabricated at
+    /// the virtual dims (one pass, the pre-existing behaviour).
+    ///
+    /// Approximation: validation error still uses the fast simulation's
+    /// i.i.d. d x L weight draw. The deployed rotation reuses one k x N
+    /// matrix as rotated blocks (correlated columns) and accumulates
+    /// the activation per chunk (`sum_c g(W_c x_c)`, the §6 caveat), so
+    /// the modelled error is an optimistic bound on the rotated fleet's
+    /// — see ROADMAP "Open items" for the rotation-faithful FastSim.
+    pub phys: Option<(usize, usize)>,
 }
 
 impl<'a> Objective<'a> {
@@ -114,6 +129,33 @@ impl<'a> Objective<'a> {
             classification,
             max_train: 600,
             max_val: 256,
+            phys: None,
+        }
+    }
+
+    /// Rotation passes one sample costs at this point (1 when the dims
+    /// fit the fabricated die, or no die geometry is pinned).
+    pub fn passes_for(&self, op: &OperatingPoint) -> usize {
+        let d = self.dataset.d().max(1);
+        let l = op.l.max(1);
+        match self.phys {
+            Some((k, n)) if k > 0 && n > 0 => d.div_ceil(k) * l.div_ceil(n),
+            _ => 1,
+        }
+    }
+
+    /// Whether the pinned die can realise this point at all — the
+    /// Section V reuse bound (`RotationPlan::new`): d, L <= k*N.
+    /// Infeasible points score [`UNSOLVABLE_ERROR`] so the explorer can
+    /// never select a knee the fleet would refuse to serve.
+    pub fn feasible(&self, op: &OperatingPoint) -> bool {
+        match self.phys {
+            Some((k, n)) => {
+                let d = self.dataset.d().max(1);
+                let l = op.l.max(1);
+                d <= k * n && l <= k * n
+            }
+            None => true,
         }
     }
 
@@ -133,6 +175,14 @@ impl<'a> Objective<'a> {
         mix(self.max_train as u64);
         mix(self.max_val as u64);
         mix(self.classification as u64);
+        match self.phys {
+            None => mix(0),
+            Some((k, n)) => {
+                mix(1);
+                mix(k as u64);
+                mix(n as u64);
+            }
+        }
         for b in self.dataset.name.bytes() {
             mix(b as u64);
         }
@@ -211,23 +261,39 @@ impl<'a> Objective<'a> {
 
     /// Score one operating point on all objectives.
     pub fn evaluate(&self, op: &OperatingPoint) -> Evaluation {
-        let errs: Vec<f64> = (0..self.trials)
-            .map(|t| self.trial_error(op, self.seed.wrapping_add(7919 * t as u64)))
-            .collect();
-        let error = stats::mean(&errs);
+        let error = if self.feasible(op) {
+            let errs: Vec<f64> = (0..self.trials)
+                .map(|t| self.trial_error(op, self.seed.wrapping_add(7919 * t as u64)))
+                .collect();
+            stats::mean(&errs)
+        } else {
+            UNSOLVABLE_ERROR
+        };
         let d = self.dataset.d().max(1);
-        let cfg = ChipConfig::from_operating_point(op, d);
-        // conversion time: mirror settling + counting window (eq. 19/20)
-        let t_conv = timing::t_c_design(&cfg);
+        let l = op.l.max(1);
+        // the fabricated die: clamped to the physical geometry when the
+        // point's dims outgrow it (the rotation serves the excess)
+        let passes = self.passes_for(op);
+        let (phys_d, phys_l) = match self.phys {
+            Some((k, n)) if passes > 1 => (d.min(k), l.min(n)),
+            _ => (d, l),
+        };
+        let mut cfg = ChipConfig::from_operating_point(op, phys_d);
+        cfg.l = phys_l;
+        // conversion time: mirror settling + counting window (eq. 19/20),
+        // serialised over the rotation passes a virtual sample costs
+        let t_conv = timing::t_c_design(&cfg) * passes as f64;
         // digital supply power at the mid-scale spike rate (half the
         // counter cap over one window), eq. 23 approximation
         let f_mid = 0.5 * cfg.cap() as f64 / cfg.t_neu();
         let p_total = energy::p_vdd_approx(cfg.l, f_mid, &cfg) + cfg.p_avdd;
-        let energy_pj_per_mac = energy::pj_per_mac(p_total, t_conv, cfg.d, cfg.l);
+        // energy per *virtual* MAC: the die burns power over all passes
+        // while the sample's useful work stays d x L
+        let energy_pj_per_mac = energy::pj_per_mac(p_total, t_conv, d, l);
         // serving model: one batch drains serially through the die, plus
         // the digital second stage per sample and a fixed dispatch cost
         let batch = op.batch.max(1) as f64;
-        let t_digital = cfg.l as f64 * T_MAC_DIGITAL;
+        let t_digital = l as f64 * T_MAC_DIGITAL;
         let latency_s = T_BATCH_OVERHEAD + batch * (t_conv + t_digital);
         let throughput_cps = batch / latency_s;
         Evaluation {
@@ -321,6 +387,79 @@ mod tests {
         assert_eq!(v[3], -e.throughput_cps);
         assert!(e.throughput_cps > 0.0 && e.latency_s > 0.0);
         assert!(e.energy_pj_per_mac > 0.0);
+    }
+
+    #[test]
+    fn rotation_passes_price_latency_and_energy_not_error() {
+        // brightdata is d=14; a 7x16 die serves L=32 via 2x2=4 rotation
+        // passes: the error model is unchanged (FastSim's i.i.d. d x L
+        // approximation — see the `phys` doc), conversion time is not
+        let ds = synth::brightdata(3);
+        let mut free = Objective::new(&ds, 1, 7);
+        free.max_train = 120;
+        let mut rotated = Objective::new(&ds, 1, 7);
+        rotated.max_train = 120;
+        rotated.phys = Some((7, 16));
+        let p = op(0.016, 0.75, 10, 32, 8);
+        assert_eq!(rotated.passes_for(&p), 4);
+        assert_eq!(free.passes_for(&p), 1);
+        let ef = free.evaluate(&p);
+        let er = rotated.evaluate(&p);
+        assert_eq!(ef.error, er.error, "rotation must not change the fit");
+        assert!(
+            er.latency_s > 2.0 * ef.latency_s,
+            "passes not priced: free {} rotated {}",
+            ef.latency_s,
+            er.latency_s
+        );
+        assert!(er.throughput_cps < ef.throughput_cps);
+        assert!(
+            er.energy_pj_per_mac > ef.energy_pj_per_mac,
+            "virtual MACs must cost more energy: free {} rotated {}",
+            ef.energy_pj_per_mac,
+            er.energy_pj_per_mac
+        );
+        // dims that fit the die are a single pass and price identically
+        let fits = op(0.016, 0.75, 10, 16, 8);
+        let mut within = Objective::new(&ds, 1, 7);
+        within.max_train = 120;
+        within.phys = Some((14, 16));
+        assert_eq!(within.passes_for(&fits), 1);
+    }
+
+    #[test]
+    fn infeasible_rotation_dims_score_unsolvable() {
+        // a 2x4 die has k*N = 8 reusable weights; brightdata's d=14
+        // cannot be rotated onto it (RotationPlan::new would refuse),
+        // so the objective must poison the point instead of pricing it
+        let ds = synth::brightdata(3);
+        let mut o = Objective::new(&ds, 1, 7);
+        o.max_train = 120;
+        o.phys = Some((2, 4));
+        let p = op(0.016, 0.75, 10, 8, 8);
+        assert!(!o.feasible(&p));
+        assert_eq!(o.evaluate(&p).error, UNSOLVABLE_ERROR);
+        // and an L beyond k*N poisons even when d fits
+        let mut o2 = Objective::new(&ds, 1, 7);
+        o2.max_train = 120;
+        o2.phys = Some((14, 4));
+        let wide = op(0.016, 0.75, 10, 14 * 4 + 1, 8);
+        assert!(!o2.feasible(&wide));
+        assert_eq!(o2.evaluate(&wide).error, UNSOLVABLE_ERROR);
+        // feasible points keep a real error
+        assert!(o2.feasible(&op(0.016, 0.75, 10, 8, 8)));
+    }
+
+    #[test]
+    fn phys_geometry_changes_the_cache_tag() {
+        let ds = synth::sinc(100, 50, 0.2, 1);
+        let a = Objective::new(&ds, 1, 9);
+        let mut b = Objective::new(&ds, 1, 9);
+        b.phys = Some((8, 32));
+        assert_ne!(a.cache_tag(), b.cache_tag());
+        let mut c = Objective::new(&ds, 1, 9);
+        c.phys = Some((8, 64));
+        assert_ne!(b.cache_tag(), c.cache_tag());
     }
 
     #[test]

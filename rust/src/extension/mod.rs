@@ -89,9 +89,19 @@ impl VirtualChip {
 
     /// Virtual forward: d codes in, L accumulated counts out, running
     /// `passes()` physical conversions through the SPI rotation circuits.
-    pub fn forward(&mut self, codes: &[u16]) -> Vec<u32> {
+    ///
+    /// A dimension mismatch is an `Err`, not a panic: the caller may be
+    /// a worker thread that owns a die, and a malformed request must
+    /// not take the die down with it.
+    pub fn forward(&mut self, codes: &[u16]) -> Result<Vec<u32>, String> {
         let p = self.plan;
-        assert_eq!(codes.len(), p.d, "expected {} virtual codes", p.d);
+        if codes.len() != p.d {
+            return Err(format!(
+                "virtual forward expected {} codes, got {}",
+                p.d,
+                codes.len()
+            ));
+        }
         let mut out = vec![0u32; p.l];
         for m in 0..p.hidden_blocks() {
             // accumulator bank gathers over input chunks for this block
@@ -127,12 +137,18 @@ impl VirtualChip {
                 }
             }
         }
-        out
+        Ok(out)
     }
 
     /// Features in [-1,1]^d -> virtual hidden counts.
-    pub fn forward_features(&mut self, xs: &[f64]) -> Vec<u32> {
-        assert_eq!(xs.len(), self.plan.d);
+    pub fn forward_features(&mut self, xs: &[f64]) -> Result<Vec<u32>, String> {
+        if xs.len() != self.plan.d {
+            return Err(format!(
+                "virtual forward expected {} features, got {}",
+                self.plan.d,
+                xs.len()
+            ));
+        }
         let codes: Vec<u16> = xs
             .iter()
             .map(|&x| dac::feature_to_code(x, &self.chip.cfg))
@@ -151,12 +167,179 @@ impl HiddenLayer for VirtualChip {
     }
 
     fn transform(&mut self, x: &[f64]) -> Vec<f64> {
-        // same O(1) activation scaling as ChipHidden (lambda parity)
+        // same O(1) activation scaling as ChipHidden (lambda parity).
+        // Training assembles H from its own feature matrix, so a
+        // dimension mismatch here is a caller bug, not request input.
         let scale = 1.0 / self.chip.cfg.cap() as f64;
         self.forward_features(x)
+            .expect("training features match the rotation plan")
             .iter()
             .map(|&v| v as f64 * scale)
             .collect()
+    }
+}
+
+/// A die as the serving fleet holds it: the bare physical chip when the
+/// requested dims fit exactly (fast path, no rotation peripherals in
+/// the loop), or a [`VirtualChip`] when the Section V rotation serves a
+/// larger projection. Probing, recalibration and serving all flow
+/// through [`ServeChip::forward`], so fleet health keeps working on
+/// virtual dies (DESIGN.md §13).
+pub enum ServeChip {
+    Physical(ChipModel),
+    Virtual(VirtualChip),
+}
+
+impl ServeChip {
+    /// Wrap `chip` so it serves a d x l projection; picks the physical
+    /// fast path when the dims match the die exactly.
+    pub fn new(chip: ChipModel, d: usize, l: usize) -> Result<Self, String> {
+        if d == chip.cfg.d && l == chip.cfg.l {
+            Ok(ServeChip::Physical(chip))
+        } else {
+            Ok(ServeChip::Virtual(VirtualChip::new(chip, d, l)?))
+        }
+    }
+
+    /// A physical die served at its fabricated dimensions.
+    pub fn physical(chip: ChipModel) -> Self {
+        ServeChip::Physical(chip)
+    }
+
+    /// Whether requests run a single physical conversion (no rotation).
+    /// Only physical dies may use the fixed-shape AOT artifact.
+    pub fn is_physical(&self) -> bool {
+        matches!(self, ServeChip::Physical(_))
+    }
+
+    pub fn chip(&self) -> &ChipModel {
+        match self {
+            ServeChip::Physical(c) => c,
+            ServeChip::Virtual(v) => &v.chip,
+        }
+    }
+
+    pub fn chip_mut(&mut self) -> &mut ChipModel {
+        match self {
+            ServeChip::Physical(c) => c,
+            ServeChip::Virtual(v) => &mut v.chip,
+        }
+    }
+
+    /// The rotation schedule, if this die serves virtually.
+    pub fn plan(&self) -> Option<RotationPlan> {
+        match self {
+            ServeChip::Physical(_) => None,
+            ServeChip::Virtual(v) => Some(v.plan),
+        }
+    }
+
+    /// Physical conversions per served request.
+    pub fn passes(&self) -> usize {
+        self.plan().map_or(1, |p| p.passes())
+    }
+
+    /// Input dimension requests must carry.
+    pub fn input_dim(&self) -> usize {
+        match self {
+            ServeChip::Physical(c) => c.cfg.d,
+            ServeChip::Virtual(v) => v.plan.d,
+        }
+    }
+
+    /// Hidden width responses are scored over.
+    pub fn hidden_dim(&self) -> usize {
+        match self {
+            ServeChip::Physical(c) => c.cfg.l,
+            ServeChip::Virtual(v) => v.plan.l,
+        }
+    }
+
+    /// One served conversion: d codes -> hidden counts, through the
+    /// rotation schedule when the die is virtual. Dimension mismatches
+    /// are `Err` on both arms so a malformed request cannot panic the
+    /// worker thread that owns the die.
+    pub fn forward(&mut self, codes: &[u16]) -> Result<Vec<u32>, String> {
+        match self {
+            ServeChip::Physical(c) => {
+                if codes.len() != c.cfg.d {
+                    return Err(format!(
+                        "forward expected {} codes, got {}",
+                        c.cfg.d,
+                        codes.len()
+                    ));
+                }
+                Ok(c.forward(codes))
+            }
+            ServeChip::Virtual(v) => v.forward(codes),
+        }
+    }
+
+    /// Features in [-1,1]^d -> hidden counts (probe/refit path).
+    pub fn forward_features(&mut self, xs: &[f64]) -> Result<Vec<u32>, String> {
+        match self {
+            ServeChip::Virtual(v) => v.forward_features(xs),
+            ServeChip::Physical(c) => {
+                if xs.len() != c.cfg.d {
+                    return Err(format!(
+                        "forward expected {} features, got {}",
+                        c.cfg.d,
+                        xs.len()
+                    ));
+                }
+                Ok(c.forward_features(xs))
+            }
+        }
+    }
+
+    /// One training/refit row of H: features -> hidden counts ->
+    /// counter-cap scaling with optional eq. 26 normalisation. The
+    /// single assembly path shared by [`ServeHidden`] (fleet training)
+    /// and `fleet::calibrate::refit_head`, so the two can never diverge
+    /// bit-wise.
+    pub fn assemble_row(&mut self, x: &[f64], normalize: bool) -> Result<Vec<f64>, String> {
+        let codes: Vec<u16> = x
+            .iter()
+            .map(|&v| dac::feature_to_code(v, &self.chip().cfg))
+            .collect();
+        let h = self.forward(&codes)?;
+        let scale = 1.0 / self.chip().cfg.cap() as f64;
+        Ok(if normalize {
+            crate::elm::secondstage::normalize_h(
+                &h,
+                crate::elm::secondstage::codes_sum(&codes),
+            )
+            .into_iter()
+            .map(|v| v * scale)
+            .collect()
+        } else {
+            h.iter().map(|&v| v as f64 * scale).collect()
+        })
+    }
+}
+
+/// Training-side view of a [`ServeChip`]: the `HiddenLayer` the
+/// coordinator trains each die through, with the same counter-cap
+/// activation scaling and optional eq. 26 normalisation as
+/// `elm::ChipHidden` — so physical and virtual dies train identically.
+pub struct ServeHidden {
+    pub die: ServeChip,
+    pub normalize: bool,
+}
+
+impl HiddenLayer for ServeHidden {
+    fn input_dim(&self) -> usize {
+        self.die.input_dim()
+    }
+
+    fn hidden_dim(&self) -> usize {
+        self.die.hidden_dim()
+    }
+
+    fn transform(&mut self, x: &[f64]) -> Vec<f64> {
+        self.die
+            .assemble_row(x, self.normalize)
+            .expect("training features match the serving plan")
     }
 }
 
@@ -236,7 +419,7 @@ mod tests {
         let codes = codes_pattern(8, 2);
         let direct = chip.forward(&codes);
         let mut v = VirtualChip::new(die(8, 8, 1), 8, 8).unwrap();
-        assert_eq!(v.forward(&codes), direct);
+        assert_eq!(v.forward(&codes).unwrap(), direct);
     }
 
     #[test]
@@ -244,7 +427,7 @@ mod tests {
         // L = 3N on a single-chunk input (Section VI-D: L=16 -> 128 case)
         let mut v = VirtualChip::new(die(8, 8, 3), 8, 24).unwrap();
         let codes = codes_pattern(8, 4);
-        let got = v.forward(&codes);
+        let got = v.forward(&codes).unwrap();
         let expect = reference_forward(&v.chip, &v.plan, &codes);
         assert_eq!(got, expect);
     }
@@ -254,7 +437,7 @@ mod tests {
         // d = 3k feeding the physical N neurons (leukemia-style d >> k)
         let mut v = VirtualChip::new(die(8, 8, 5), 24, 8).unwrap();
         let codes = codes_pattern(24, 6);
-        let got = v.forward(&codes);
+        let got = v.forward(&codes).unwrap();
         let expect = reference_forward(&v.chip, &v.plan, &codes);
         assert_eq!(got, expect);
     }
@@ -264,7 +447,7 @@ mod tests {
         // ragged d and L exercising padding + both rotations at once
         let mut v = VirtualChip::new(die(8, 8, 7), 19, 21).unwrap();
         let codes = codes_pattern(19, 8);
-        let got = v.forward(&codes);
+        let got = v.forward(&codes).unwrap();
         let expect = reference_forward(&v.chip, &v.plan, &codes);
         assert_eq!(got, expect);
     }
@@ -295,7 +478,7 @@ mod tests {
         let mut v = VirtualChip::new(die(8, 8, 10), 24, 24).unwrap();
         let codes = codes_pattern(24, 11);
         v.chip.reset_ledger();
-        let _ = v.forward(&codes);
+        let _ = v.forward(&codes).unwrap();
         assert_eq!(v.chip.ledger.conversions as usize, v.plan.passes());
     }
 
@@ -362,7 +545,57 @@ mod tests {
         // be bitwise duplicates across blocks for a generic input
         let mut v = VirtualChip::new(die(8, 8, 12), 8, 16).unwrap();
         let codes = codes_pattern(8, 13);
-        let h = v.forward(&codes);
+        let h = v.forward(&codes).unwrap();
         assert_ne!(&h[0..8], &h[8..16]);
+    }
+
+    #[test]
+    fn dimension_mismatch_is_an_error_not_a_panic() {
+        let mut v = VirtualChip::new(die(8, 8, 14), 16, 16).unwrap();
+        assert!(v.forward(&codes_pattern(8, 15)).is_err());
+        assert!(v.forward_features(&vec![0.0; 3]).is_err());
+        let mut p = ServeChip::physical(die(8, 8, 14));
+        assert!(p.forward(&codes_pattern(5, 16)).is_err());
+        assert!(p.forward_features(&vec![0.0; 9]).is_err());
+    }
+
+    #[test]
+    fn serve_chip_picks_physical_fast_path_for_trivial_plans() {
+        let s = ServeChip::new(die(8, 8, 17), 8, 8).unwrap();
+        assert!(s.is_physical());
+        assert_eq!(s.passes(), 1);
+        assert!(s.plan().is_none());
+        let v = ServeChip::new(die(8, 8, 17), 24, 24).unwrap();
+        assert!(!v.is_physical());
+        assert_eq!(v.passes(), 9);
+        assert_eq!((v.input_dim(), v.hidden_dim()), (24, 24));
+        assert!(ServeChip::new(die(8, 8, 17), 8 * 8 + 1, 8).is_err());
+    }
+
+    #[test]
+    fn serve_chip_forward_matches_virtual_chip() {
+        let codes = codes_pattern(24, 18);
+        let mut v = VirtualChip::new(die(8, 8, 19), 24, 16).unwrap();
+        let mut s = ServeChip::new(die(8, 8, 19), 24, 16).unwrap();
+        assert_eq!(s.forward(&codes).unwrap(), v.forward(&codes).unwrap());
+    }
+
+    #[test]
+    fn serve_hidden_trains_like_chip_hidden_on_physical_dies() {
+        // the coordinator's training view must be bit-identical to the
+        // pre-existing ChipHidden path when the die serves physically
+        let x: Vec<f64> = (0..8).map(|i| i as f64 / 8.0 - 0.4).collect();
+        let mut a = crate::elm::ChipHidden::new(die(8, 8, 20));
+        let mut b = ServeHidden { die: ServeChip::physical(die(8, 8, 20)), normalize: false };
+        assert_eq!(
+            crate::elm::train::HiddenLayer::transform(&mut a, &x),
+            crate::elm::train::HiddenLayer::transform(&mut b, &x)
+        );
+        let mut an = crate::elm::ChipHidden::normalized(die(8, 8, 20));
+        let mut bn = ServeHidden { die: ServeChip::physical(die(8, 8, 20)), normalize: true };
+        assert_eq!(
+            crate::elm::train::HiddenLayer::transform(&mut an, &x),
+            crate::elm::train::HiddenLayer::transform(&mut bn, &x)
+        );
     }
 }

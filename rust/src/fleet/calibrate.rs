@@ -14,9 +14,10 @@
 //! helps; the output weights are re-solved on the drifted die via the
 //! OS-ELM path (`elm::online` RLS warm-started from a batch solve).
 
-use crate::chip::{dac, ChipModel};
+use crate::chip::ChipModel;
 use crate::elm::online::OnlineElm;
-use crate::elm::secondstage::{codes_sum, normalize_h, SecondStage};
+use crate::elm::secondstage::SecondStage;
+use crate::extension::ServeChip;
 use crate::util::mat::Mat;
 
 /// Common-mode gain of `current` reference counts over the enrolment
@@ -67,13 +68,13 @@ pub fn renormalize(chip: &mut ChipModel, gain: f64) -> f64 {
 
 /// Tier-2 refit: re-solve the output weights chip-in-the-loop on the
 /// drifted die. Assembles H exactly as the serving/training path does
-/// (counter counts rescaled by 2^b, optional eq. 26 normalisation),
-/// warm-starts the OS-ELM recursive solver on the first half and streams
-/// the second half through RLS updates — the same machinery can keep
-/// absorbing labelled traffic afterwards. Returns the refitted second
-/// stage ready to deploy.
+/// (counter counts rescaled by 2^b, optional eq. 26 normalisation, the
+/// rotation plan when the die serves virtually), warm-starts the OS-ELM
+/// recursive solver on the first half and streams the second half
+/// through RLS updates — the same machinery can keep absorbing labelled
+/// traffic afterwards. Returns the refitted second stage ready to deploy.
 pub fn refit_head(
-    chip: &mut ChipModel,
+    die: &mut ServeChip,
     normalize: bool,
     xs: &[Vec<f64>],
     ys: &[f64],
@@ -83,22 +84,16 @@ pub fn refit_head(
     if xs.is_empty() || xs.len() != ys.len() {
         return Err("refit needs a non-empty x/y set of equal length".into());
     }
-    let scale = 1.0 / chip.cfg.cap() as f64;
+    // H rows come from the exact serving/training assembly path
+    // (`ServeChip::assemble_row`): rotation plan, counter-cap scaling
+    // and eq. 26 normalisation included
     let rows: Vec<Vec<f64>> = xs
         .iter()
         .map(|x| {
-            let codes = dac::features_to_codes(x, &chip.cfg);
-            let h = chip.forward(&codes);
-            if normalize {
-                normalize_h(&h, codes_sum(&codes))
-                    .into_iter()
-                    .map(|v| v * scale)
-                    .collect()
-            } else {
-                h.iter().map(|&v| v as f64 * scale).collect()
-            }
+            die.assemble_row(x, normalize)
+                .map_err(|e| format!("refit forward: {e}"))
         })
-        .collect();
+        .collect::<Result<Vec<Vec<f64>>, String>>()?;
     let hmat = Mat::from_rows(&rows);
     let n0 = (hmat.rows / 2).max(1);
     let h0 = Mat::from_rows(&(0..n0).map(|i| hmat.row(i).to_vec()).collect::<Vec<_>>());
@@ -113,7 +108,7 @@ pub fn refit_head(
 mod tests {
     use super::*;
     use crate::config::ChipConfig;
-    use crate::elm::secondstage::SecondStage;
+    use crate::elm::secondstage::{codes_sum, SecondStage};
     use crate::util::prng::Prng;
 
     #[test]
@@ -170,45 +165,80 @@ mod tests {
         );
     }
 
-    #[test]
-    fn refit_recovers_accuracy_on_an_aged_die() {
-        // train a head, age the mismatch so the head goes stale, refit
-        // chip-in-the-loop and accuracy comes back
-        let cfg = ChipConfig::default().with_dims(6, 48).with_b(10);
-        let mut chip = crate::chip::ChipModel::fabricate(cfg, 3);
-        let mut rng = Prng::new(9);
+    fn labelled_blobs(d: usize, n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Prng::new(seed);
         let mut xs = Vec::new();
         let mut ys = Vec::new();
-        for _ in 0..160 {
+        for _ in 0..n {
             let y = if rng.bool(0.5) { 1.0 } else { -1.0 };
             xs.push(
-                (0..6)
+                (0..d)
                     .map(|_| (0.4 * y + rng.normal(0.0, 0.15)).clamp(-1.0, 1.0))
                     .collect::<Vec<f64>>(),
             );
             ys.push(y);
         }
-        let second = refit_head(&mut chip, false, &xs, &ys, 1e-2, 10).unwrap();
-        let err = |chip: &mut crate::chip::ChipModel, s: &SecondStage| {
-            let mut wrong = 0usize;
-            for (x, &y) in xs.iter().zip(&ys) {
-                let codes = crate::chip::dac::features_to_codes(x, &chip.cfg);
-                let h = chip.forward(&codes);
-                let label = s.classify(&h, codes_sum(&codes), 0.0);
-                if (label as f64 - y).abs() > 1e-9 {
-                    wrong += 1;
-                }
+        (xs, ys)
+    }
+
+    fn die_error(
+        die: &mut ServeChip,
+        s: &SecondStage,
+        xs: &[Vec<f64>],
+        ys: &[f64],
+    ) -> f64 {
+        let cfg = die.chip().cfg.clone();
+        let mut wrong = 0usize;
+        for (x, &y) in xs.iter().zip(ys) {
+            let codes = crate::chip::dac::features_to_codes(x, &cfg);
+            let h = die.forward(&codes).unwrap();
+            let label = s.classify(&h, codes_sum(&codes), 0.0);
+            if (label as f64 - y).abs() > 1e-9 {
+                wrong += 1;
             }
-            wrong as f64 / xs.len() as f64
-        };
-        let e0 = err(&mut chip, &second);
+        }
+        wrong as f64 / xs.len() as f64
+    }
+
+    #[test]
+    fn refit_recovers_accuracy_on_an_aged_die() {
+        // train a head, age the mismatch so the head goes stale, refit
+        // chip-in-the-loop and accuracy comes back
+        let cfg = ChipConfig::default().with_dims(6, 48).with_b(10);
+        let mut die = ServeChip::physical(crate::chip::ChipModel::fabricate(cfg, 3));
+        let (xs, ys) = labelled_blobs(6, 160, 9);
+        let second = refit_head(&mut die, false, &xs, &ys, 1e-2, 10).unwrap();
+        let e0 = die_error(&mut die, &second, &xs, &ys);
         assert!(e0 < 0.1, "pre-drift err {e0}");
-        chip.age_mismatch(0.02, 55); // heavy profile change
-        let e_stale = err(&mut chip, &second);
-        let refit = refit_head(&mut chip, false, &xs, &ys, 1e-2, 10).unwrap();
-        let e_refit = err(&mut chip, &refit);
+        die.chip_mut().age_mismatch(0.02, 55); // heavy profile change
+        let e_stale = die_error(&mut die, &second, &xs, &ys);
+        let refit = refit_head(&mut die, false, &xs, &ys, 1e-2, 10).unwrap();
+        let e_refit = die_error(&mut die, &refit, &xs, &ys);
         assert!(
             e_refit < 0.1 && e_refit <= e_stale,
+            "stale {e_stale} refit {e_refit}"
+        );
+    }
+
+    #[test]
+    fn refit_works_through_the_rotation_plan_on_a_virtual_die() {
+        // the drifted die serves a d=2k, L=2N virtual projection: the
+        // chip-in-the-loop refit must assemble H through the rotation
+        // plan and still recover the aged die
+        let cfg = ChipConfig::default().with_dims(3, 24).with_b(10);
+        let mut die =
+            ServeChip::new(crate::chip::ChipModel::fabricate(cfg, 4), 6, 48).unwrap();
+        assert_eq!(die.passes(), 4);
+        let (xs, ys) = labelled_blobs(6, 160, 10);
+        let second = refit_head(&mut die, false, &xs, &ys, 1e-2, 10).unwrap();
+        let e0 = die_error(&mut die, &second, &xs, &ys);
+        assert!(e0 < 0.12, "pre-drift err {e0}");
+        die.chip_mut().age_mismatch(0.02, 56);
+        let e_stale = die_error(&mut die, &second, &xs, &ys);
+        let refit = refit_head(&mut die, false, &xs, &ys, 1e-2, 10).unwrap();
+        let e_refit = die_error(&mut die, &refit, &xs, &ys);
+        assert!(
+            e_refit < 0.12 && e_refit <= e_stale,
             "stale {e_stale} refit {e_refit}"
         );
     }

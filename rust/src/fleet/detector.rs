@@ -69,6 +69,22 @@ impl DriftDetector {
     /// common mode in band, either a profile residual or unexplained
     /// probe-error growth escalates to `Profile`.
     pub fn update(&mut self, rep: &ProbeReport) -> DriftObservation {
+        if rep.ref_counts.len() != self.baseline_ref.len() {
+            // A shape-broken reference read (failed forward, probe/die
+            // mismatch) is not drift telemetry: feeding it into the gain
+            // pipeline would read as an enormous common-mode collapse
+            // and trigger a maximal — and bogus — T_neu renormalisation
+            // on a die that never drifted. Escalate straight to the
+            // refit tier instead: the die drains, refits and re-probes,
+            // or quarantines if the probe stays broken.
+            self.ewma_err = self.alpha * rep.err + (1.0 - self.alpha) * self.ewma_err;
+            return DriftObservation {
+                verdict: DriftVerdict::Profile,
+                gain: self.ewma_gain,
+                residual: self.ewma_residual,
+                err: self.ewma_err,
+            };
+        }
         let gain = common_mode_gain(&self.baseline_ref, &rep.ref_counts);
         let residual = profile_residual(&self.baseline_ref, &rep.ref_counts);
         let a = self.alpha;
@@ -188,6 +204,25 @@ mod tests {
             last = d.update(&baseline()).verdict;
         }
         assert_eq!(last, DriftVerdict::Stable);
+    }
+
+    #[test]
+    fn shape_broken_reference_read_escalates_instead_of_renormalizing() {
+        // an empty (or wrong-length) reference read means the probe
+        // could not run on the die — it must go to the refit tier, not
+        // read as a ~0 common-mode gain that renormalisation "fixes"
+        let mut d = DriftDetector::new(&baseline(), &cfg());
+        let broken = report(0.05, vec![]);
+        let obs = d.update(&broken);
+        assert_eq!(obs.verdict, DriftVerdict::Profile, "{obs:?}");
+        assert!(
+            (obs.gain - 1.0).abs() < 1e-12,
+            "broken read must not move the gain estimate: {obs:?}"
+        );
+        let short = report(0.05, vec![100.0, 200.0]);
+        assert_eq!(d.update(&short).verdict, DriftVerdict::Profile);
+        // a healthy read afterwards still evaluates normally
+        assert_eq!(d.update(&baseline()).verdict, DriftVerdict::Stable);
     }
 
     #[test]

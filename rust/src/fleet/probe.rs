@@ -7,9 +7,10 @@
 //! drift, while per-column deviations left after removing that gain
 //! measure mismatch-profile change.
 
-use crate::chip::{dac, ChipModel};
+use crate::chip::dac;
 use crate::config::ChipConfig;
 use crate::elm::secondstage::{codes_sum, SecondStage};
+use crate::extension::ServeChip;
 
 /// The pinned inputs every probe pass replays: labelled samples for the
 /// probe error plus a fixed mid-scale reference vector for the
@@ -30,13 +31,17 @@ impl ProbeSet {
     /// the reference read from the chip geometry (quarter full scale on
     /// every channel keeps the columns well below saturation at the
     /// nominal corner, so drift headroom is visible in both directions).
+    /// The reference read spans the *served* input dimension (taken from
+    /// the training rows), so it flows through the same rotation plan as
+    /// traffic on a virtual die.
     pub fn from_training(xs: &[Vec<f64>], ys: &[f64], n: usize, cfg: &ChipConfig) -> Self {
         let n = n.min(xs.len()).min(ys.len());
         let ref_code = (cfg.code_fs() / 4) as u16;
+        let d = xs.first().map_or(cfg.d, |x| x.len());
         ProbeSet {
             xs: xs[..n].to_vec(),
             ys: ys[..n].to_vec(),
-            ref_codes: vec![ref_code; cfg.d],
+            ref_codes: vec![ref_code; d],
         }
     }
 }
@@ -64,28 +69,38 @@ impl ProbeReport {
 }
 
 /// Run one probe pass: classify the pinned set through the die's own
-/// second stage (exactly the serving path), then read the reference
-/// columns. Runs on the thread that owns the chip — the worker for live
-/// dies, `Coordinator::start` for enrolment baselines.
-pub fn run_probe(chip: &mut ChipModel, second: &SecondStage, probe: &ProbeSet) -> ProbeReport {
+/// second stage (exactly the serving path — the rotation plan included
+/// when the die serves virtually), then read the reference columns.
+/// Runs on the thread that owns the chip — the worker for live dies,
+/// `Coordinator::start` for enrolment baselines. A probe whose shape no
+/// longer matches the die counts as wrong / reads empty instead of
+/// panicking, so a misconfigured probe degrades the die rather than
+/// killing its worker.
+pub fn run_probe(die: &mut ServeChip, second: &SecondStage, probe: &ProbeSet) -> ProbeReport {
+    let cfg = die.chip().cfg.clone();
     let mut wrong = 0usize;
     for (x, &y) in probe.xs.iter().zip(&probe.ys) {
-        let codes = dac::features_to_codes(x, &chip.cfg);
-        let h = chip.forward(&codes);
-        let label = second.classify(&h, codes_sum(&codes), 0.0);
-        if (label as f64 - y).abs() > 1e-9 {
-            wrong += 1;
+        let codes = dac::features_to_codes(x, &cfg);
+        match die.forward(&codes) {
+            Ok(h) => {
+                let label = second.classify(&h, codes_sum(&codes), 0.0);
+                if (label as f64 - y).abs() > 1e-9 {
+                    wrong += 1;
+                }
+            }
+            Err(_) => wrong += 1,
         }
     }
-    let ref_counts: Vec<f64> = chip
+    let ref_counts: Vec<f64> = die
         .forward(&probe.ref_codes)
+        .unwrap_or_default()
         .iter()
         .map(|&c| c as f64)
         .collect();
     ProbeReport {
         err: wrong as f64 / probe.xs.len().max(1) as f64,
         ref_counts,
-        t_neu: chip.t_neu_set,
+        t_neu: die.chip().t_neu_set,
     }
 }
 
@@ -154,7 +169,7 @@ mod tests {
     use crate::chip::ChipModel;
     use crate::config::ChipConfig;
 
-    fn die(seed: u64) -> (ChipModel, SecondStage, ProbeSet) {
+    fn die(seed: u64) -> (ServeChip, SecondStage, ProbeSet) {
         let cfg = ChipConfig::default().with_dims(8, 24).with_b(10);
         let mut chip = ChipModel::fabricate(cfg.clone(), seed);
         // a head trained on nothing still probes: beta all-ones
@@ -165,7 +180,7 @@ mod tests {
         let ys: Vec<f64> = (0..10).map(|k| if k % 2 == 0 { 1.0 } else { -1.0 }).collect();
         let probe = ProbeSet::from_training(&xs, &ys, 8, &chip.cfg);
         let _ = chip.forward(&probe.ref_codes); // warm the cache path
-        (chip, second, probe)
+        (ServeChip::physical(chip), second, probe)
     }
 
     #[test]
@@ -193,7 +208,7 @@ mod tests {
     fn probe_sees_temperature_drift_in_reference_counts() {
         let (mut chip, second, probe) = die(4);
         let cold = run_probe(&mut chip, &second, &probe);
-        chip.set_temp(340.0);
+        chip.chip_mut().set_temp(340.0);
         let hot = run_probe(&mut chip, &second, &probe);
         // PTAT bias gain raises the common-mode reference level
         assert!(
@@ -202,6 +217,31 @@ mod tests {
             hot.ref_mean(),
             cold.ref_mean()
         );
+    }
+
+    #[test]
+    fn probe_flows_through_the_rotation_plan_on_a_virtual_die() {
+        // a 4x8 die serving a 12x24 virtual projection: probe samples
+        // and reference read carry virtual dims, the report spans the
+        // virtual hidden width, and the pass is deterministic
+        let cfg = ChipConfig::default().with_dims(4, 8).with_b(10);
+        let mk = || {
+            ServeChip::new(ChipModel::fabricate(cfg.clone(), 31), 12, 24).unwrap()
+        };
+        let second = SecondStage::new(&vec![1.0; 24], 10, false);
+        let xs: Vec<Vec<f64>> = (0..6)
+            .map(|k| (0..12).map(|j| ((k + j) as f64 / 24.0) - 0.3).collect())
+            .collect();
+        let ys: Vec<f64> = (0..6).map(|k| if k % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let probe = ProbeSet::from_training(&xs, &ys, 6, &cfg);
+        assert_eq!(probe.ref_codes.len(), 12, "reference read spans virtual d");
+        let mut a = mk();
+        let mut b = mk();
+        let ra = run_probe(&mut a, &second, &probe);
+        let rb = run_probe(&mut b, &second, &probe);
+        assert_eq!(ra.ref_counts.len(), 24, "reference counts span virtual L");
+        assert_eq!(ra.ref_counts, rb.ref_counts);
+        assert!(ra.ref_mean() > 0.0);
     }
 
     #[test]

@@ -33,10 +33,15 @@ fn usage() -> &'static str {
        train --dataset NAME [--l N] [--seed N]       chip-in-the-loop training\n\
        classify --dataset NAME [--l N] [--normalize] train + test error (Table II)\n\
        serve [--addr HOST:PORT] [--dataset NAME] [--chips N]\n\
-             [--point FILE]                          TCP front end (tuned point via FILE)\n\
+             [--point FILE] [--phys-d K] [--phys-l N] [--virtual-l L]\n\
+                                                     TCP front end (tuned point via FILE;\n\
+                                                     virtual dies via --phys-d/--phys-l/\n\
+                                                     --virtual-l)\n\
        sweep --what ratio|beta-bits|counter-bits     quick design-space sweep (Fig. 7)\n\
        tune [--dataset NAME] [--rounds N] [--trials N] [--l LIST] [--b LIST]\n\
-            [--batch LIST] [--weights E,J,T,X] [--out FILE]   Pareto autotune\n\
+            [--batch LIST] [--weights E,J,T,X] [--out FILE]\n\
+            [--phys-d K --phys-l N]                  Pareto autotune (pass-aware with a\n\
+                                                     pinned k x N die geometry)\n\
        fleet [--dataset NAME] [--chips N] [--standby N] [--ticks N]\n\
              [--temp K] [--age-sigma MV]             drift-recovery demo (Fig. 18 ramp)\n\
        info [--artifacts DIR]                        configuration + artifact report\n\
@@ -165,7 +170,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     sys.artifact_dir = args.get_or("artifacts", &sys.artifact_dir);
     // `--point FILE` closes the tune -> serve loop: apply a serialized
     // `velm tune --out` operating point (chip config + batch size)
-    let cfg = match args.get("point") {
+    let mut cfg = match args.get("point") {
         Some(path) => {
             // the point file owns the whole chip config: explicit chip
             // flags would be silently shadowed, so call that out
@@ -194,6 +199,54 @@ fn cmd_serve(args: &Args) -> Result<()> {
             cfg
         }
     };
+    // virtual-die serving (DESIGN.md §13): --phys-d fabricates K-channel
+    // dies and serves the workload's d by input rotation; --virtual-l
+    // serves an L-wide hidden layer beyond the physical array
+    let phys_d = args.get_usize("phys-d", 0).map_err(anyhow::Error::msg)?;
+    if phys_d > 0 {
+        anyhow::ensure!(
+            phys_d <= ds.d(),
+            "--phys-d {phys_d} exceeds the workload dimension {}",
+            ds.d()
+        );
+        cfg.d = phys_d;
+        sys.virtual_d = Some(ds.d());
+    }
+    let virtual_l = args.get_usize("virtual-l", 0).map_err(anyhow::Error::msg)?;
+    if virtual_l > 0 {
+        sys.virtual_l = Some(virtual_l);
+    }
+    // --phys-l N: fabricate N-wide dies; whatever L the point/config
+    // asked for beyond that is served by hidden-block rotation. This is
+    // the serve half of `velm tune --phys-d K --phys-l N` — the die
+    // geometry the pass-aware objective priced, not the point's virtual L
+    let phys_l = args.get_usize("phys-l", 0).map_err(anyhow::Error::msg)?;
+    if phys_l > 0 {
+        let served_l = sys.virtual_l.unwrap_or(cfg.l);
+        anyhow::ensure!(
+            phys_l <= served_l,
+            "--phys-l {phys_l} exceeds the served hidden width {served_l}"
+        );
+        sys.virtual_l = Some(served_l);
+        cfg.l = phys_l;
+    }
+    if sys.virtual_d.is_some() || sys.virtual_l.is_some() {
+        let plan = velm::extension::RotationPlan::new(
+            cfg.d,
+            cfg.l,
+            sys.virtual_d.unwrap_or(cfg.d),
+            sys.virtual_l.unwrap_or(cfg.l),
+        )
+        .map_err(anyhow::Error::msg)?;
+        println!(
+            "virtual dies: {}x{} physical -> {}x{} served, {} rotation passes/request",
+            plan.k,
+            plan.n,
+            plan.d,
+            plan.l,
+            plan.passes()
+        );
+    }
     println!("training {} dies on {name} ...", sys.n_chips);
     let coord = Coordinator::start(&sys, &cfg, &ds.train_x, &ds.train_y, 0.1, 10)?;
     server::serve(Arc::new(coord), &addr)
@@ -245,6 +298,19 @@ fn cmd_tune(args: &Args) -> Result<()> {
     }
     let mut objective = dse::Objective::new(&ds, trials, seed);
     objective.lambda = args.get_f64("lambda", objective.lambda).map_err(anyhow::Error::msg)?;
+    // pass-aware tuning (DESIGN.md §13): pin the fabricated die geometry
+    // so candidate L beyond the physical width is priced at its
+    // rotation-pass cost instead of assuming a die fabricated that wide
+    let phys_d = args.get_usize("phys-d", 0).map_err(anyhow::Error::msg)?;
+    let phys_l = args.get_usize("phys-l", 0).map_err(anyhow::Error::msg)?;
+    if phys_d > 0 || phys_l > 0 {
+        anyhow::ensure!(
+            phys_d > 0 && phys_l > 0,
+            "--phys-d and --phys-l must be given together"
+        );
+        objective.phys = Some((phys_d, phys_l));
+        println!("pass-aware objective: physical die {phys_d}x{phys_l}");
+    }
 
     println!(
         "tuning on {name} (d={}, {} train / {} test): {} rounds x {} candidates, {} threads",

@@ -1,0 +1,172 @@
+//! Integration: Section V virtual-die serving end to end (DESIGN.md
+//! §13). A fleet fabricated at k x N serves a d=3k, L=3N workload:
+//! chip-in-the-loop training, per-die heads, TCP serving, fleet-health
+//! probe cycles and pass-exact conversion accounting — with the served
+//! scores matching an offline rotation-extended chip on the same seed.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use velm::chip::{dac, ChipModel};
+use velm::config::{ChipConfig, SystemConfig, Transfer};
+use velm::coordinator::{server, Backend, Coordinator};
+use velm::elm::secondstage::{codes_sum, SecondStage};
+use velm::elm::train::{assemble_h, solve_head};
+use velm::extension::{ServeChip, ServeHidden};
+use velm::fleet::DieState;
+use velm::util::prng::Prng;
+
+const K: usize = 4; // physical input channels
+const N: usize = 16; // physical hidden neurons
+const D: usize = 3 * K; // served input dimension
+const L: usize = 3 * N; // served hidden width
+const PASSES: u64 = 9; // ceil(D/K) * ceil(L/N)
+
+fn blobs(seed: u64, n: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let mut rng = Prng::new(seed);
+    let mut xs = Vec::with_capacity(n);
+    let mut ys = Vec::with_capacity(n);
+    for k in 0..n {
+        let y = if k % 2 == 0 { 1.0 } else { -1.0 };
+        xs.push(
+            (0..D)
+                .map(|_| (0.45 * y + rng.normal(0.0, 0.12)).clamp(-1.0, 1.0))
+                .collect::<Vec<f64>>(),
+        );
+        ys.push(y);
+    }
+    (xs, ys)
+}
+
+fn chip_cfg() -> ChipConfig {
+    ChipConfig::default()
+        .with_dims(K, N)
+        .with_b(10)
+        .with_mode(Transfer::Quadratic)
+}
+
+fn system() -> SystemConfig {
+    SystemConfig {
+        n_chips: 2,
+        virtual_d: Some(D),
+        virtual_l: Some(L),
+        max_wait: Duration::from_millis(1),
+        artifact_dir: "/nonexistent".into(), // chip-sim path
+        seed: 808,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn virtual_fleet_trains_serves_probes_and_matches_offline_rotation() {
+    let (xs, ys) = blobs(51, 240);
+    let (xt, yt) = blobs(52, 80);
+    let sys = system();
+    let coord = Coordinator::start(&sys, &chip_cfg(), &xs, &ys, 1e-2, 10).unwrap();
+    assert_eq!(coord.d, D);
+    assert_eq!(coord.passes, PASSES as usize);
+
+    // offline twins: same fabrication seeds, same chip-in-the-loop
+    // training through the same rotation plan -> identical heads, so
+    // the serving path must reproduce their scores exactly
+    let mut twins: Vec<(ServeChip, SecondStage)> = (0..sys.n_chips)
+        .map(|i| {
+            let chip = ChipModel::fabricate(chip_cfg(), sys.seed + i as u64);
+            let mut hidden = ServeHidden {
+                die: ServeChip::new(chip, D, L).unwrap(),
+                normalize: false,
+            };
+            let h = assemble_h(&mut hidden, &xs);
+            let head = solve_head(&h, &ys, 1e-2).unwrap();
+            (hidden.die, SecondStage::new(&head.beta, 10, false))
+        })
+        .collect();
+
+    let mut correct = 0usize;
+    for (x, &y) in xt.iter().zip(&yt) {
+        let resp = coord.classify(x.clone()).unwrap();
+        assert_eq!(resp.backend, Backend::ChipSim);
+        assert_eq!(resp.passes, PASSES as usize);
+        let (die, second) = &mut twins[resp.worker];
+        let codes = dac::features_to_codes(x, &die.chip().cfg);
+        let h = die.forward(&codes).unwrap();
+        let offline = second.score(&h, codes_sum(&codes));
+        assert!(
+            (resp.score - offline).abs() < 1e-9,
+            "served score {} != offline rotation score {offline} (die {})",
+            resp.score,
+            resp.worker
+        );
+        if (resp.label as f64 - y).abs() < 1e-9 {
+            correct += 1;
+        }
+    }
+    assert!(correct >= 72, "only {correct}/80 correct on the virtual fleet");
+
+    // the metrics ledger books exactly passes() conversions per request
+    let responses = coord.metrics.responses.load(Ordering::Relaxed);
+    assert_eq!(responses, 80);
+    assert_eq!(
+        coord.metrics.conversions.load(Ordering::Relaxed),
+        responses * PASSES
+    );
+
+    // the fleet-health loop runs through the virtual forward: probe
+    // cycles keep the dies healthy and traffic keeps flowing
+    for _ in 0..2 {
+        coord.fleet_tick();
+    }
+    assert!(
+        coord.health_snapshot().iter().all(|&s| s == DieState::Healthy),
+        "{}",
+        coord.fleet_status()
+    );
+    assert!(coord.metrics.probes.load(Ordering::Relaxed) >= 4);
+    let resp = coord.classify(xt[0].clone()).unwrap();
+    assert!(resp.label == 1 || resp.label == -1);
+
+    // TCP front end: the same virtual fleet behind the line protocol
+    let coord = Arc::new(coord);
+    let (addr, srv) = server::serve_n(Arc::clone(&coord), 1).unwrap();
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    writeln!(writer, "HEALTH").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("OK"), "{line}");
+    assert!(line.contains("die0=Healthy"), "{line}");
+    let mut tcp_correct = 0usize;
+    for (x, &y) in xt.iter().take(40).zip(&yt) {
+        let fields: Vec<String> = x.iter().map(|v| format!("{v}")).collect();
+        writeln!(writer, "CLASSIFY {}", fields.join(",")).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let label: f64 = line
+            .trim()
+            .split_whitespace()
+            .nth(1)
+            .and_then(|t| t.parse().ok())
+            .unwrap_or(0.0);
+        if (label - y).abs() < 1e-9 {
+            tcp_correct += 1;
+        }
+    }
+    writeln!(writer, "QUIT").unwrap();
+    srv.join();
+    assert!(tcp_correct >= 34, "only {tcp_correct}/40 correct over TCP");
+
+    // pass accounting holds across the TCP traffic too
+    let responses = coord.metrics.responses.load(Ordering::Relaxed);
+    assert_eq!(
+        coord.metrics.conversions.load(Ordering::Relaxed),
+        responses * PASSES
+    );
+    if let Ok(c) = Arc::try_unwrap(coord) {
+        c.shutdown();
+    }
+}

@@ -128,8 +128,8 @@ fn prop_virtual_chip_deterministic_and_dimension_correct() {
         )
         .map_err(|e| e)?;
         let codes: Vec<u16> = (0..d).map(|_| rng.usize(1024) as u16).collect();
-        let ha = a.forward(&codes);
-        let hb = b.forward(&codes);
+        let ha = a.forward(&codes)?;
+        let hb = b.forward(&codes)?;
         ensure(ha.len() == l, "wrong virtual width")?;
         ensure(ha == hb, "nondeterministic virtual forward")
     });

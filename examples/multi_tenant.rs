@@ -1,0 +1,117 @@
+//! Multi-tenant serving (DESIGN.md §14): one die fleet, many models.
+//!
+//!     cargo run --release --example multi_tenant
+//!
+//! The σVT-mismatch random projection is task-agnostic (the same
+//! observation behind the shared random-feature arrays of
+//! arXiv:1512.07783), so one fleet of fabricated dies can serve any
+//! number of trained output heads. This demo boots a two-die fleet on a
+//! binary task, then registers two more tenants over the SAME dies —
+//! 10-class digit classification and a brightness regression — serves
+//! all three concurrently, streams OS-ELM updates into one tenant, and
+//! finally drifts a die and shows the tenant-aware refit restoring
+//! every model at once.
+
+use velm::config::{ChipConfig, SystemConfig};
+use velm::coordinator::Coordinator;
+use velm::datasets::digits::digits;
+use velm::registry::TenantSpec;
+
+fn main() -> anyhow::Result<()> {
+    // --- boot: a fleet trained on "digit < 5" (the default tenant) ---
+    let (ds, labels, _) = digits(240, 1, 5);
+    let ys: Vec<f64> = labels.iter().map(|&c| if c < 5 { 1.0 } else { -1.0 }).collect();
+    let cfg = ChipConfig::default().with_dims(64, 96).with_b(10);
+    let sys = SystemConfig {
+        n_chips: 2,
+        artifact_dir: "/nonexistent".into(),
+        max_wait: std::time::Duration::from_millis(1),
+        ..Default::default()
+    };
+    println!("booting 2 dies on the binary digit task ...");
+    let coord = Coordinator::start(&sys, &cfg, &ds.train_x, &ys, 0.1, 10)?;
+
+    // --- register two more models on the same physical dies ---
+    // each registration drives the tenant's training set through every
+    // die ONCE and solves all of its heads from that shared H (one
+    // Cholesky for the 10 one-vs-all digit heads)
+    let digits_spec = TenantSpec::from_dataset("digits", "digits", 7, coord.d)
+        .map_err(anyhow::Error::msg)?;
+    let score = coord.register_tenant(digits_spec)?;
+    println!("tenant 'digits' registered: 10 heads, mean train error {:.1}%", score * 100.0);
+    let bright_spec = TenantSpec::from_dataset("bright", "brightness", 7, coord.d)
+        .map_err(anyhow::Error::msg)?;
+    let score = coord.register_tenant(bright_spec)?;
+    println!("tenant 'bright' registered: regression, mean train RMSE {score:.4}");
+    println!("MODELS: {}", coord.models());
+
+    // --- serve all three models from the one fleet ---
+    let (eval, eval_labels, _) = {
+        let (d, l, t) = digits(1, 60, 991);
+        (d.test_x, t, l)
+    };
+    let mut default_correct = 0usize;
+    let mut digit_correct = 0usize;
+    let mut bright_acc = 0.0f64;
+    for (x, &label) in eval.iter().zip(&eval_labels) {
+        let d = coord.classify(x.clone())?; // default head
+        if (d.label == 1) == (label < 5) {
+            default_correct += 1;
+        }
+        let m = coord.classify_tenant(Some("digits"), x.clone())?;
+        if m.label as usize == label {
+            digit_correct += 1;
+        }
+        let b = coord.classify_tenant(Some("bright"), x.clone())?;
+        let target = x.iter().sum::<f64>() / x.len() as f64;
+        bright_acc += (b.score - target) * (b.score - target);
+    }
+    println!(
+        "served {} rows x 3 models: default {}/{} correct, digits {}/{} correct, \
+         bright RMSE {:.4}",
+        eval.len(),
+        default_correct,
+        eval.len(),
+        digit_correct,
+        eval.len(),
+        (bright_acc / eval.len() as f64).sqrt()
+    );
+
+    // --- OS-ELM: stream labelled traffic into the digits tenant ---
+    // each update costs one conversion per die + a shared-P RLS step
+    // covering all 10 heads
+    let (more, more_labels, _) = {
+        let (d, l, _) = digits(40, 1, 1234);
+        (d.train_x, l, ())
+    };
+    for (x, &label) in more.iter().zip(&more_labels) {
+        let targets: Vec<f64> =
+            (0..10).map(|c| if c == label { 1.0 } else { -1.0 }).collect();
+        coord.tenant_update("digits", x, &targets)?;
+    }
+    println!("streamed {} OS-ELM updates into tenant 'digits'", more.len());
+
+    // --- drift + tenant-aware recovery ---
+    println!("\naging die 0 and draining it for recalibration ...");
+    coord.inject_drift(Some(0), None, None, Some(0.015));
+    coord.drain_die(0)?;
+    coord.fleet_tick(); // drained -> recalibrating
+    coord.fleet_tick(); // refit: default head AND both tenants re-solve
+    println!("fleet: {}", coord.fleet_status());
+    let mut digit_correct = 0usize;
+    for (x, &label) in eval.iter().zip(&eval_labels) {
+        let m = coord.classify_tenant(Some("digits"), x.clone())?;
+        if m.label as usize == label {
+            digit_correct += 1;
+        }
+    }
+    println!(
+        "post-refit digits accuracy: {}/{} (every registered head re-solved \
+         chip-in-the-loop)",
+        digit_correct,
+        eval.len()
+    );
+    println!("\n{}", coord.metrics.report());
+    coord.shutdown();
+    Ok(())
+}

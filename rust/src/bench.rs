@@ -156,7 +156,7 @@ mod tests {
     fn table_alignment_roundtrip() {
         let mut t = Table::new(&["a", "bbbb"]);
         t.rowf(&["1", "2"]);
-        t.row(&vec!["x".to_string(), "yy".to_string()]);
+        t.row(&["x".to_string(), "yy".to_string()]);
         t.print(); // visual; just must not panic
         assert_eq!(t.rows.len(), 2);
     }

@@ -326,7 +326,7 @@ mod tests {
     #[test]
     fn zero_input_zero_output_zero_fast() {
         let mut c = ChipModel::fabricate(small_cfg(), 3);
-        let counts = c.forward(&vec![0u16; 16]);
+        let counts = c.forward(&[0u16; 16]);
         assert!(counts.iter().all(|&h| h == 0));
         // S2 shutdown means no settling wait: only T_neu books
         assert!((c.ledger.sim_time - c.cfg.t_neu()).abs() < 1e-12);
@@ -339,7 +339,7 @@ mod tests {
         let mut chip = ChipModel::fabricate(cfg, 4);
         let mut prev_sum = 0u64;
         for code in [64u16, 128, 256, 512, 1023] {
-            let counts = chip.forward(&vec![code; 16]);
+            let counts = chip.forward(&[code; 16]);
             let s: u64 = counts.iter().map(|&c| c as u64).sum();
             assert!(s >= prev_sum, "code {code}");
             prev_sum = s;

@@ -10,8 +10,11 @@ pub struct Args {
     pub command: Option<String>,
     /// Remaining positionals.
     pub positional: Vec<String>,
-    /// `--key value` pairs.
-    pub options: BTreeMap<String, String>,
+    /// Every occurrence of each `--key value` pair, in order. Scalar
+    /// getters take the last occurrence; `get_all` returns them all —
+    /// for repeatable options like `velm serve --tenant a=x --tenant
+    /// b=y`.
+    pub options: BTreeMap<String, Vec<String>>,
     /// Bare `--flag` tokens.
     pub flags: Vec<String>,
 }
@@ -27,9 +30,9 @@ impl Args {
                     return Err("bare '--' not supported".into());
                 }
                 if let Some((k, v)) = name.split_once('=') {
-                    args.options.insert(k.to_string(), v.to_string());
-                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
-                    args.options.insert(name.to_string(), it.next().unwrap());
+                    args.options.entry(k.to_string()).or_default().push(v.to_string());
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
+                    args.options.entry(name.to_string()).or_default().push(it.next().unwrap());
                 } else {
                     args.flags.push(name.to_string());
                 }
@@ -47,11 +50,20 @@ impl Args {
     }
 
     pub fn get(&self, name: &str) -> Option<&str> {
-        self.options.get(name).map(|s| s.as_str())
+        self.options
+            .get(name)
+            .and_then(|v| v.last())
+            .map(|s| s.as_str())
     }
 
     pub fn get_or(&self, name: &str, default: &str) -> String {
         self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Every value a repeatable option was given, in order (empty when
+    /// absent) — e.g. `--tenant a=x --tenant b=y`.
+    pub fn get_all(&self, name: &str) -> Vec<String> {
+        self.options.get(name).cloned().unwrap_or_default()
     }
 
     pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
@@ -150,6 +162,23 @@ mod tests {
         let bad = Args::parse(toks("tune --l 32,abc")).unwrap();
         let err = bad.get_usize_list("l").unwrap_err();
         assert!(err.contains("--l") && err.contains("abc"));
+    }
+
+    #[test]
+    fn repeated_options_keep_every_occurrence() {
+        let a = Args::parse(toks("serve --tenant a=digits --tenant b=brightness --chips 2"))
+            .unwrap();
+        // last-wins for the scalar getter, all occurrences via get_all
+        assert_eq!(a.get("tenant"), Some("b=brightness"));
+        assert_eq!(
+            a.get_all("tenant"),
+            vec!["a=digits".to_string(), "b=brightness".to_string()]
+        );
+        assert_eq!(a.get_all("chips"), vec!["2".to_string()]);
+        assert!(a.get_all("missing").is_empty());
+        // equals form contributes too
+        let b = Args::parse(toks("x --t=1 --t 2")).unwrap();
+        assert_eq!(b.get_all("t"), vec!["1".to_string(), "2".to_string()]);
     }
 
     #[test]

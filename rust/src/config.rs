@@ -331,6 +331,10 @@ pub struct SystemConfig {
     /// Use the PJRT engine for batches at least this large (else the
     /// scalar Rust simulator runs the conversion).
     pub pjrt_min_batch: usize,
+    /// Consecutive PJRT engine failures after which a worker drops its
+    /// engine entirely (stops paying the flatten+attempt cost per
+    /// batch) and serves from the chip simulator for good.
+    pub pjrt_max_failures: u32,
     /// Base fabrication seed; chip i uses `seed + i`.
     pub seed: u64,
     /// Apply eq. 26 normalisation on the serving path.
@@ -346,6 +350,13 @@ pub struct SystemConfig {
     /// `RotationPlan::passes()` physical conversions — priced into the
     /// router and batcher.
     pub virtual_l: Option<usize>,
+    /// Heterogeneous fleet (DESIGN.md §13): per-die fabricated
+    /// geometry `(k, N)`, one entry per die (actives then standbys).
+    /// Empty = every die is fabricated at the `ChipConfig` dims. All
+    /// dies serve the same virtual projection, so a smaller die runs
+    /// more rotation passes per request — the router and batcher price
+    /// each die at its own pass cost.
+    pub die_geoms: Vec<(usize, usize)>,
     /// Fleet-health settings: probe cadence, drift thresholds,
     /// recovery/quarantine policy.
     pub fleet: crate::fleet::FleetConfig,
@@ -359,11 +370,13 @@ impl Default for SystemConfig {
             max_wait: std::time::Duration::from_millis(2),
             artifact_dir: "artifacts".to_string(),
             pjrt_min_batch: 8,
+            pjrt_max_failures: 3,
             seed: 0xE1_37,
             normalize: false,
             standby_chips: 0,
             virtual_d: None,
             virtual_l: None,
+            die_geoms: Vec::new(),
             fleet: crate::fleet::FleetConfig::default(),
         }
     }

@@ -1,11 +1,16 @@
 //! Dynamic batching: collect messages from a channel into batches bounded
 //! by size and by holding time — the standard serving trade-off between
 //! per-request latency and per-batch amortisation (here: hitting the
-//! compiled PJRT batch shapes). Fleet-health control messages ride the
-//! same channel (so control stays ordered with respect to control: a
-//! probe queued after a drift injection observes the drifted die) and
-//! are split out of the classify batch for the worker to run after the
-//! batch — traffic-vs-control ordering is batch-granular.
+//! compiled PJRT batch shapes). Batching is tenant-blind (DESIGN.md
+//! §14): the hidden layer is task-agnostic, so rows addressed to
+//! different tenants coalesce into one batch and cost one hidden-layer
+//! pass; the worker applies each row's own head afterwards. Fleet-health
+//! and registry control messages ride the same channel (so control stays
+//! ordered with respect to control: a probe queued after a drift
+//! injection observes the drifted die, a request routed after a REGISTER
+//! ack finds the head installed) and are split out of the classify batch
+//! for the worker to run after the batch — traffic-vs-control ordering
+//! is batch-granular.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
@@ -72,10 +77,20 @@ mod tests {
     use std::time::Instant;
 
     fn req(id: u64) -> WorkerMsg {
+        tenant_req(id, None)
+    }
+
+    fn tenant_req(id: u64, tenant: Option<&str>) -> WorkerMsg {
         let (tx, _rx) = mpsc::channel();
         WorkerMsg::Classify(ClassifyRequest {
             id,
             features: vec![],
+            tenant: tenant.map(|name| crate::coordinator::request::TenantTag {
+                name: std::sync::Arc::from(name),
+                metrics: std::sync::Arc::new(
+                    crate::coordinator::metrics::TenantMetrics::default(),
+                ),
+            }),
             submitted: Instant::now(),
             reply: tx,
         })
@@ -156,6 +171,30 @@ mod tests {
         // even a cost above the whole budget still moves one request
         let b = collect_batch(&rx, 8, Duration::from_millis(5), 100).unwrap();
         assert_eq!(b.requests.len(), 1);
+    }
+
+    #[test]
+    fn cross_tenant_rows_coalesce_into_one_batch() {
+        // the hidden layer is tenant-agnostic: rows for the default
+        // head and two different tenants share one batch (one
+        // hidden-layer pass on the worker), in arrival order
+        let (tx, rx) = mpsc::channel();
+        tx.send(tenant_req(0, None)).unwrap();
+        tx.send(tenant_req(1, Some("digits"))).unwrap();
+        tx.send(tenant_req(2, Some("brightness"))).unwrap();
+        tx.send(tenant_req(3, Some("digits"))).unwrap();
+        let b = collect_batch(&rx, 8, Duration::from_millis(10), 1).unwrap();
+        assert_eq!(b.requests.len(), 4, "tenants must not split the batch");
+        assert!(b.requests[0].tenant.is_none());
+        assert_eq!(
+            b.requests[1].tenant.as_ref().unwrap().name.as_ref(),
+            "digits"
+        );
+        assert_eq!(
+            b.requests[2].tenant.as_ref().unwrap().name.as_ref(),
+            "brightness"
+        );
+        assert_eq!(b.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
     }
 
     #[test]

@@ -1,11 +1,59 @@
 //! Serving metrics: lock-free counters + a log2-bucketed latency
-//! histogram (atomics only on the hot path; percentile math at snapshot).
+//! histogram (atomics only on the hot path; percentile math at
+//! snapshot), plus per-tenant request/latency/score gauges
+//! (DESIGN.md §14). Tenant handles are `Arc<TenantMetrics>` resolved
+//! once at submit and carried inside the request, so the hot path
+//! never locks the tenant directory.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Number of log2 latency buckets: bucket i covers [2^i, 2^(i+1)) us.
 const BUCKETS: usize = 32;
+
+/// Per-tenant serving gauges: all atomics, shared between the submit
+/// path (requests), the workers (responses/latency) and the registry
+/// (train score after register/refit).
+#[derive(Debug, Default)]
+pub struct TenantMetrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    latency_sum_us: AtomicU64,
+    /// Mean chip-in-the-loop train score across dies (classification:
+    /// error rate; regression: RMSE), stored as f64 bits.
+    score_bits: AtomicU64,
+}
+
+impl TenantMetrics {
+    pub fn record_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_response(&self, latency: Duration) {
+        self.responses.fetch_add(1, Ordering::Relaxed);
+        self.latency_sum_us
+            .fetch_add(latency.as_micros().max(1) as u64, Ordering::Relaxed);
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        let n = self.responses.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Record the tenant's train score (set at register and refit).
+    pub fn set_score(&self, score: f64) {
+        self.score_bits.store(score.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn score(&self) -> f64 {
+        f64::from_bits(self.score_bits.load(Ordering::Relaxed))
+    }
+}
 
 #[derive(Default)]
 pub struct Metrics {
@@ -33,6 +81,11 @@ pub struct Metrics {
     pub quarantines: AtomicU64,
     /// Hot standbys promoted into rotation.
     pub promotions: AtomicU64,
+    /// Per-tenant gauges, keyed by tenant name (DESIGN.md §14). The
+    /// mutex guards only registration/removal and the report snapshot —
+    /// hot-path recording goes through the `Arc<TenantMetrics>` carried
+    /// in each request.
+    tenants: Mutex<BTreeMap<String, Arc<TenantMetrics>>>,
 }
 
 impl Metrics {
@@ -56,6 +109,38 @@ impl Metrics {
 
     pub fn record_conversions(&self, n: u64) {
         self.conversions.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Create (or return) the gauge handle for a tenant.
+    pub fn register_tenant(&self, name: &str) -> Arc<TenantMetrics> {
+        let mut map = self.tenants.lock().unwrap();
+        Arc::clone(
+            map.entry(name.to_string())
+                .or_insert_with(|| Arc::new(TenantMetrics::default())),
+        )
+    }
+
+    /// Drop a tenant's gauges from the report (outstanding request tags
+    /// keep their handle alive until answered).
+    pub fn drop_tenant(&self, name: &str) {
+        self.tenants.lock().unwrap().remove(name);
+    }
+
+    /// The gauge handle for a tenant, if registered — never inserts
+    /// (the fleet manager uses this so a refit racing an unregister
+    /// cannot resurrect a dropped tenant's gauges).
+    pub fn tenant_handle(&self, name: &str) -> Option<Arc<TenantMetrics>> {
+        self.tenants.lock().unwrap().get(name).map(Arc::clone)
+    }
+
+    /// Snapshot of the per-tenant gauge handles.
+    pub fn tenant_snapshot(&self) -> Vec<(String, Arc<TenantMetrics>)> {
+        self.tenants
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), Arc::clone(v)))
+            .collect()
     }
 
     pub fn record_response(&self, latency: Duration) {
@@ -110,12 +195,26 @@ impl Metrics {
         self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
     }
 
-    /// One-line human snapshot.
+    /// One-line human snapshot (plus a ` tenant[..]` clause per
+    /// registered tenant).
     pub fn report(&self) -> String {
+        let tenants: String = self
+            .tenant_snapshot()
+            .iter()
+            .map(|(name, m)| {
+                format!(
+                    " tenant[{name}: req={} resp={} mean={:.0}us train_score={:.4}]",
+                    m.requests.load(Ordering::Relaxed),
+                    m.responses.load(Ordering::Relaxed),
+                    m.mean_latency_us(),
+                    m.score(),
+                )
+            })
+            .collect();
         format!(
             "requests={} responses={} batches={} (pjrt={}, sim={}, mean size {:.1}) \
              conversions={} latency mean={:.0}us p50~{}us p99~{}us \
-             fleet probes={} renorms={} refits={} quarantines={} promotions={}",
+             fleet probes={} renorms={} refits={} quarantines={} promotions={}{tenants}",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
@@ -214,6 +313,32 @@ mod tests {
         assert!(r.contains("probes=3"), "{r}");
         assert!(r.contains("renorms=1"), "{r}");
         assert!(r.contains("quarantines=0"), "{r}");
+    }
+
+    #[test]
+    fn tenant_gauges_register_record_and_report() {
+        let m = Metrics::new();
+        let t = m.register_tenant("digits");
+        t.record_request();
+        t.record_response(Duration::from_micros(200));
+        t.record_response(Duration::from_micros(400));
+        t.set_score(0.0625);
+        assert_eq!(t.requests.load(Ordering::Relaxed), 1);
+        assert_eq!(t.responses.load(Ordering::Relaxed), 2);
+        assert!((t.mean_latency_us() - 300.0).abs() < 1e-9);
+        assert!((t.score() - 0.0625).abs() < 1e-15);
+        let r = m.report();
+        assert!(r.contains("tenant[digits:"), "{r}");
+        assert!(r.contains("resp=2"), "{r}");
+        assert!(r.contains("train_score=0.0625"), "{r}");
+        // re-registering returns the same handle
+        let t2 = m.register_tenant("digits");
+        assert_eq!(t2.requests.load(Ordering::Relaxed), 1);
+        m.drop_tenant("digits");
+        assert!(!m.report().contains("tenant[digits"), "{}", m.report());
+        // the outstanding handle still works after the drop
+        t.record_request();
+        assert_eq!(t.requests.load(Ordering::Relaxed), 2);
     }
 
     #[test]

@@ -1,16 +1,21 @@
 //! L3 serving coordinator: the paper's classifier chip recast as a
-//! request pipeline (DESIGN.md §8, §12, §13).
+//! request pipeline (DESIGN.md §8, §12, §13, §14).
 //!
 //! ```text
-//! client -> Coordinator::submit -> Router (least pass-weighted
-//!           outstanding work over HEALTHY dies)
+//! client -> Coordinator::submit (tenant tag resolved once)
+//!        -> Router (least pass-weighted outstanding work over
+//!           HEALTHY dies; per-die pass costs on heterogeneous fleets)
 //!        -> per-worker dynamic batcher (conversion budget)
 //!        -> hidden layer (PJRT batched artifact | chip sim,
 //!           through the Section V rotation plan on virtual dies)
-//!        -> fixed-point second stage -> response + metrics
+//!           — computed ONCE per row, shared by every tenant
+//!        -> the row's tenant head (fixed-point second stage)
+//!        -> response + metrics (global + per-tenant)
 //!
 //! fleet manager -> probe / renormalise / refit control messages
 //!               -> per-die lifecycle state read by the router
+//! registry      -> register / unregister / OS-ELM update control
+//!                  messages on the same ordered channel
 //! ```
 //!
 //! Threads + channels from std only (no tokio in the offline vendor
@@ -35,46 +40,72 @@ use crate::chip::ChipModel;
 use crate::config::{ChipConfig, SystemConfig};
 use crate::elm::secondstage::SecondStage;
 use crate::elm::train::{assemble_h, solve_head};
-use crate::extension::{RotationPlan, ServeChip, ServeHidden};
+use crate::extension::{ServeChip, ServeHidden};
 use crate::fleet::{
     DieState, DriftSchedule, FleetManager, FleetSetup, FleetState, ProbeSet,
 };
+use crate::registry::{ModelRegistry, TenantInfo, TenantSpec};
 
 pub use metrics::Metrics;
-pub use request::{Backend, ClassifyRequest, ClassifyResponse};
+pub use request::{Backend, ClassifyRequest, ClassifyResponse, TenantTag};
 pub use router::Router;
 
+use request::{ControlMsg, WorkerMsg};
+
 /// A running serving system: router + one thread per fabricated die
-/// (actives and hot standbys) + the fleet-health manager.
+/// (actives and hot standbys) + the fleet-health manager + the
+/// multi-tenant model registry.
 pub struct Coordinator {
     router: Router,
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
     workers: Vec<JoinHandle<()>>,
     pub d: usize,
-    /// Physical conversions each request costs on a die: 1 for physical
-    /// serving, `RotationPlan::passes()` when the fleet serves virtual
-    /// dims (DESIGN.md §13).
+    /// Worst-case physical conversions a request costs on any die of
+    /// the fleet: 1 on an all-physical fleet, the rotation plan's
+    /// passes on virtual dies; heterogeneous fleets mix per-die costs
+    /// and this reports the maximum (DESIGN.md §13).
     pub passes: usize,
     fleet: Arc<Mutex<FleetManager>>,
+    /// Worker channels, kept for registry broadcasts (register /
+    /// unregister / OS-ELM updates ride the ordered control channel).
+    senders: Vec<mpsc::Sender<WorkerMsg>>,
+    /// The tenant directory (DESIGN.md §14). Cold path only: the serve
+    /// path resolves heads from worker-owned tables.
+    registry: Mutex<ModelRegistry>,
+    /// Serialises register/unregister end-to-end (training included) so
+    /// two concurrent REGISTERs of one name cannot both pass the
+    /// duplicate check and leave dies serving different models under
+    /// it. The directory mutex above stays short-held, so the submit
+    /// path never blocks behind a registration in progress.
+    registration_gate: Mutex<()>,
     /// Background prober (only when `fleet.probe_period` is set).
     auto_probe: Option<(Arc<AtomicBool>, JoinHandle<()>)>,
 }
 
 impl Coordinator {
     /// Fabricate `sys.n_chips + sys.standby_chips` dies, train each
-    /// die's head on the given training set (per-die mismatch means
-    /// per-die weights — exactly the chip-in-the-loop training of
+    /// die's default head on the given training set (per-die mismatch
+    /// means per-die weights — exactly the chip-in-the-loop training of
     /// Section VI-C), enrol a fleet-health baseline per die, then start
     /// serving. Standby dies are fully trained but held out of rotation
     /// until a quarantine promotes them.
     ///
     /// When `sys.virtual_d` / `sys.virtual_l` exceed the fabricated
-    /// dims, every die is wrapped in the Section V rotation plan
+    /// dims, dies are wrapped in the Section V rotation plan
     /// (DESIGN.md §13): training, probing, recalibration and serving
     /// all flow through the virtual forward, and each request costs
-    /// [`RotationPlan::passes`] physical conversions — priced into the
-    /// router's load accounting and the batcher's conversion budget.
+    /// that die's [`RotationPlan::passes`] physical conversions —
+    /// priced into the router's load accounting and the batcher's
+    /// conversion budget. `sys.die_geoms` fabricates a *heterogeneous*
+    /// pool (per-die k x N) behind the same router: every die serves
+    /// the same projection, each at its own pass cost.
+    ///
+    /// Additional workloads share the fleet through the model registry:
+    /// [`Coordinator::register_tenant`] installs per-tenant heads on
+    /// every die without re-fabricating anything (DESIGN.md §14).
+    ///
+    /// [`RotationPlan::passes`]: crate::extension::RotationPlan::passes
     pub fn start(
         sys: &SystemConfig,
         chip_cfg: &ChipConfig,
@@ -85,21 +116,18 @@ impl Coordinator {
     ) -> Result<Coordinator> {
         let metrics = Arc::new(Metrics::new());
         let n_total = sys.n_chips + sys.standby_chips;
-        // validate the virtual geometry once, before fabricating anything.
-        // Virtual dims are *extensions* of the die: serving below the
-        // fabricated dims would silently mask neurons (and disable the
-        // PJRT fast path) when the right move is fabricating smaller dies
+        anyhow::ensure!(
+            sys.die_geoms.is_empty() || sys.die_geoms.len() == n_total,
+            "die_geoms has {} entries but the fleet has {n_total} dies \
+             (actives + standbys)",
+            sys.die_geoms.len()
+        );
+        // the served projection: virtual dims are *extensions* of each
+        // die. Serving below a die's fabricated dims would silently mask
+        // neurons (and disable the PJRT fast path) when the right move
+        // is fabricating smaller dies.
         let vd = sys.virtual_d.unwrap_or(chip_cfg.d);
         let vl = sys.virtual_l.unwrap_or(chip_cfg.l);
-        anyhow::ensure!(
-            vd >= chip_cfg.d && vl >= chip_cfg.l,
-            "virtual dims {vd}x{vl} must extend the fabricated die {}x{}",
-            chip_cfg.d,
-            chip_cfg.l
-        );
-        let plan = RotationPlan::new(chip_cfg.d, chip_cfg.l, vd, vl)
-            .map_err(|e| anyhow::anyhow!("virtual dims: {e}"))?;
-        let passes = plan.passes();
         if let Some(x) = train_x.first() {
             anyhow::ensure!(
                 x.len() == vd,
@@ -116,11 +144,23 @@ impl Coordinator {
         let mut senders = Vec::new();
         let mut setups = Vec::new();
         let mut baselines = Vec::new();
+        let mut costs = Vec::new();
         for i in 0..n_total {
+            let (ki, li) =
+                sys.die_geoms.get(i).copied().unwrap_or((chip_cfg.d, chip_cfg.l));
+            anyhow::ensure!(
+                vd >= ki && vl >= li,
+                "die {i} geometry {ki}x{li} exceeds the served projection {vd}x{vl} \
+                 (virtual dims must extend every die)"
+            );
+            let mut cfg_i = chip_cfg.clone();
+            cfg_i.d = ki;
+            cfg_i.l = li;
             let seed = sys.seed + i as u64;
-            let chip = ChipModel::fabricate(chip_cfg.clone(), seed);
+            let chip = ChipModel::fabricate(cfg_i, seed);
             let die = ServeChip::new(chip, vd, vl)
-                .map_err(|e| anyhow::anyhow!("wrapping die {i}: {e}"))?;
+                .map_err(|e| anyhow::anyhow!("wrapping die {i} ({ki}x{li}): {e}"))?;
+            costs.push(die.passes());
             // chip-in-the-loop training on this die, through the serving
             // plan (virtual dies train on their virtual projection)
             let mut hidden = ServeHidden { die, normalize: sys.normalize };
@@ -135,15 +175,16 @@ impl Coordinator {
             senders.push(tx);
             setups.push((i, die, second, rx));
         }
+        let passes = costs.iter().copied().max().unwrap_or(1);
         let state = FleetState::new(n_total, sys.n_chips);
-        let router =
-            Router::with_costs(senders.clone(), state.clone(), vec![passes; n_total]);
+        let router = Router::with_costs(senders.clone(), state.clone(), costs);
         let mut workers = Vec::new();
         for (i, die, second, rx) in setups {
             let setup = worker::WorkerSetup {
                 index: i,
                 die,
                 second,
+                tenants: std::collections::BTreeMap::new(),
                 artifact_dir: worker::usable_artifact_dir(sys),
                 rx,
                 metrics: Arc::clone(&metrics),
@@ -151,6 +192,7 @@ impl Coordinator {
                 max_batch: sys.max_batch,
                 max_wait: sys.max_wait,
                 pjrt_min_batch: sys.pjrt_min_batch,
+                pjrt_max_failures: sys.pjrt_max_failures,
                 normalize: sys.normalize,
             };
             workers.push(
@@ -161,7 +203,7 @@ impl Coordinator {
             );
         }
         let manager = FleetManager::new(FleetSetup {
-            senders,
+            senders: senders.clone(),
             state,
             outstanding: router.outstanding.clone(),
             metrics: Arc::clone(&metrics),
@@ -205,6 +247,9 @@ impl Coordinator {
             d: vd,
             passes,
             fleet,
+            senders,
+            registry: Mutex::new(ModelRegistry::new()),
+            registration_gate: Mutex::new(()),
             auto_probe,
         })
     }
@@ -232,18 +277,46 @@ impl Coordinator {
         Coordinator::start(&sys, &chip_cfg, train_x, train_y, lambda, beta_bits)
     }
 
-    /// Submit one request; returns the receiver for its response.
+    /// Submit one request against the default head; returns the
+    /// receiver for its response.
     pub fn submit(&self, features: Vec<f64>) -> Result<mpsc::Receiver<ClassifyResponse>> {
+        self.submit_tenant(None, features)
+    }
+
+    /// Submit one request addressed to a tenant's model (`None` or
+    /// `"default"` = the boot head). The tenant tag — name + metrics
+    /// handle — is resolved here once; workers then resolve the actual
+    /// head from their own lock-free tables (DESIGN.md §14).
+    pub fn submit_tenant(
+        &self,
+        tenant: Option<&str>,
+        features: Vec<f64>,
+    ) -> Result<mpsc::Receiver<ClassifyResponse>> {
         anyhow::ensure!(
             features.len() == self.d,
             "expected {} features, got {}",
             self.d,
             features.len()
         );
+        let tag = match tenant {
+            None | Some("default") => None,
+            Some(name) => {
+                let reg = self.registry.lock().unwrap();
+                let info = reg.get(name).ok_or_else(|| {
+                    anyhow::anyhow!("unknown tenant {name} (REGISTER it first)")
+                })?;
+                info.metrics.record_request();
+                Some(TenantTag {
+                    name: Arc::clone(&info.tag),
+                    metrics: Arc::clone(&info.metrics),
+                })
+            }
+        };
         let (tx, rx) = mpsc::channel();
         let req = ClassifyRequest {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             features,
+            tenant: tag,
             submitted: Instant::now(),
             reply: tx,
         };
@@ -254,14 +327,201 @@ impl Coordinator {
         Ok(rx)
     }
 
-    /// Convenience: submit and wait.
+    /// Convenience: submit against the default head and wait.
     pub fn classify(&self, features: Vec<f64>) -> Result<ClassifyResponse> {
-        let rx = self.submit(features)?;
+        self.classify_tenant(None, features)
+    }
+
+    /// Convenience: submit against a tenant's model and wait.
+    pub fn classify_tenant(
+        &self,
+        tenant: Option<&str>,
+        features: Vec<f64>,
+    ) -> Result<ClassifyResponse> {
+        let rx = self.submit_tenant(tenant, features)?;
         rx.recv().context("worker dropped the request")
     }
 
     pub fn n_workers(&self) -> usize {
         self.router.n_workers()
+    }
+
+    // --- model registry surface (DESIGN.md §14) ---
+
+    /// Register a tenant fleet-wide: every die (actives *and* hot
+    /// standbys, so promotions keep serving all models) trains the
+    /// tenant's heads chip-in-the-loop from one shared H — one pass of
+    /// the tenant's training set per die, one Cholesky for all of its
+    /// heads. Returns the mean train-set score across dies (error rate
+    /// for classification, RMSE for regression). On any die failure
+    /// the partial installs are rolled back.
+    pub fn register_tenant(&self, spec: TenantSpec) -> Result<f64> {
+        spec.validate().map_err(|e| anyhow::anyhow!(e))?;
+        anyhow::ensure!(
+            spec.d() == self.d,
+            "tenant {} trains at dimension {}, fleet serves {}",
+            spec.name,
+            spec.d(),
+            self.d
+        );
+        anyhow::ensure!(
+            spec.name != "default",
+            "'default' names the boot head and cannot be re-registered"
+        );
+        anyhow::ensure!(
+            !spec.name.is_empty() && !spec.name.contains(char::is_whitespace),
+            "tenant names must be non-empty and whitespace-free"
+        );
+        // serialise with other register/unregister calls: the duplicate
+        // check below must stay valid until the directory insert
+        let _gate = self.registration_gate.lock().unwrap();
+        anyhow::ensure!(
+            !self.registry.lock().unwrap().contains(&spec.name),
+            "tenant {} is already registered (UNREGISTER it first)",
+            spec.name
+        );
+        let spec = Arc::new(spec);
+        let mut rxs = Vec::new();
+        let mut failure: Option<String> = None;
+        for (i, tx) in self.senders.iter().enumerate() {
+            let (rtx, rrx) = mpsc::channel();
+            let sent = tx.send(WorkerMsg::Control(ControlMsg::Register {
+                spec: Arc::clone(&spec),
+                reply: rtx,
+            }));
+            if sent.is_err() {
+                // keep going into the rollback below — dies already
+                // sent to must not keep heads the registry won't record
+                failure = Some(format!("worker {i} is gone"));
+                break;
+            }
+            rxs.push(rrx);
+        }
+        let mut die_scores = Vec::new();
+        for (i, rrx) in rxs.into_iter().enumerate() {
+            match rrx.recv() {
+                Ok(Ok(score)) => die_scores.push(score),
+                Ok(Err(e)) => failure = Some(format!("die {i}: {e}")),
+                Err(_) => failure = Some(format!("die {i} dropped the registration")),
+            }
+        }
+        if let Some(why) = failure {
+            // no die may serve a tenant the registry does not record
+            self.broadcast_unregister(&spec.name);
+            anyhow::bail!("registering tenant {}: {why}", spec.name);
+        }
+        let mean = die_scores.iter().sum::<f64>() / die_scores.len().max(1) as f64;
+        let tenant_metrics = self.metrics.register_tenant(&spec.name);
+        tenant_metrics.set_score(mean);
+        self.registry.lock().unwrap().insert(TenantInfo {
+            tag: Arc::from(spec.name.as_str()),
+            spec: Arc::clone(&spec),
+            die_scores,
+            metrics: tenant_metrics,
+        });
+        Ok(mean)
+    }
+
+    /// Drop a tenant fleet-wide. In-flight requests carrying its tag
+    /// may race the removal; workers drop those without replying (the
+    /// client sees a closed channel), and tenant isolation holds — no
+    /// other tenant's heads are touched.
+    pub fn unregister_tenant(&self, name: &str) -> Result<()> {
+        anyhow::ensure!(name != "default", "the boot head cannot be unregistered");
+        let _gate = self.registration_gate.lock().unwrap();
+        let removed = self.registry.lock().unwrap().remove(name);
+        anyhow::ensure!(removed.is_some(), "unknown tenant {name}");
+        self.broadcast_unregister(name);
+        self.metrics.drop_tenant(name);
+        Ok(())
+    }
+
+    fn broadcast_unregister(&self, name: &str) -> usize {
+        let tenant: Arc<str> = Arc::from(name);
+        let mut rxs = Vec::new();
+        for tx in &self.senders {
+            let (rtx, rrx) = mpsc::channel();
+            if tx
+                .send(WorkerMsg::Control(ControlMsg::Unregister {
+                    tenant: Arc::clone(&tenant),
+                    reply: rtx,
+                }))
+                .is_ok()
+            {
+                rxs.push(rrx);
+            }
+        }
+        rxs.into_iter().filter(|rx| matches!(rx.recv(), Ok(true))).count()
+    }
+
+    /// OS-ELM incremental update for one tenant: each die drives the
+    /// labelled sample through its own hidden layer and streams it into
+    /// all of the tenant's heads (shared-P RLS — DESIGN.md §14).
+    /// `targets` carries one value per head: the scalar for binary /
+    /// regression tenants, the ±1 one-vs-all row for multi-class.
+    pub fn tenant_update(&self, name: &str, x: &[f64], targets: &[f64]) -> Result<()> {
+        anyhow::ensure!(
+            x.len() == self.d,
+            "expected {} features, got {}",
+            self.d,
+            x.len()
+        );
+        let (tag, heads) = {
+            let reg = self.registry.lock().unwrap();
+            let info = reg
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown tenant {name}"))?;
+            (Arc::clone(&info.tag), info.spec.task.heads())
+        };
+        anyhow::ensure!(
+            targets.len() == heads,
+            "tenant {name} has {heads} heads, update carries {} targets",
+            targets.len()
+        );
+        let x = Arc::new(x.to_vec());
+        let targets = Arc::new(targets.to_vec());
+        let mut rxs = Vec::new();
+        for (i, tx) in self.senders.iter().enumerate() {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(WorkerMsg::Control(ControlMsg::OnlineUpdate {
+                tenant: Arc::clone(&tag),
+                x: Arc::clone(&x),
+                targets: Arc::clone(&targets),
+                reply: rtx,
+            }))
+            .map_err(|_| anyhow::anyhow!("worker {i} is gone"))?;
+            rxs.push(rrx);
+        }
+        for (i, rrx) in rxs.into_iter().enumerate() {
+            rrx.recv()
+                .with_context(|| format!("die {i} dropped the update"))?
+                .map_err(|e| anyhow::anyhow!("die {i}: {e}"))?;
+        }
+        Ok(())
+    }
+
+    /// One-line tenant directory (the TCP `MODELS` command): the boot
+    /// head plus every registered tenant with its mean train score.
+    pub fn models(&self) -> String {
+        let n = self.n_workers();
+        let default_line =
+            format!("default task=classification/2 heads=1 dies={n} train_score=boot");
+        let reg = self.registry.lock().unwrap();
+        if reg.is_empty() {
+            default_line
+        } else {
+            format!("{default_line}; {}", reg.listing())
+        }
+    }
+
+    /// Names of the registered tenants (without the boot head).
+    pub fn tenant_names(&self) -> Vec<String> {
+        self.registry
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, _)| name.clone())
+            .collect()
     }
 
     // --- fleet-health surface (DESIGN.md §12) ---
@@ -320,13 +580,14 @@ impl Coordinator {
     /// Graceful shutdown: stop the prober, close the queues and join
     /// the worker threads.
     pub fn shutdown(self) {
-        let Coordinator { router, workers, fleet, auto_probe, .. } = self;
+        let Coordinator { router, workers, fleet, senders, auto_probe, .. } = self;
         if let Some((stop, handle)) = auto_probe {
             stop.store(true, Ordering::Relaxed);
             let _ = handle.join();
         }
         drop(router); // drops the router's senders
-        drop(fleet); // drops the manager's senders -> workers drain and exit
+        drop(fleet); // drops the manager's senders
+        drop(senders); // drops the registry's senders -> workers drain and exit
         for w in workers {
             let _ = w.join();
         }
@@ -346,11 +607,13 @@ mod tests {
             max_wait: std::time::Duration::from_millis(1),
             artifact_dir: "/nonexistent".into(), // force chip-sim path
             pjrt_min_batch: 4,
+            pjrt_max_failures: 3,
             seed: 99,
             normalize: false,
             standby_chips: 0,
             virtual_d: None,
             virtual_l: None,
+            die_geoms: Vec::new(),
             fleet: Default::default(),
         };
         let chip = ChipConfig::default()
@@ -465,6 +728,43 @@ mod tests {
             responses * 6
         );
         coord.shutdown();
+    }
+
+    #[test]
+    fn heterogeneous_fleet_prices_each_die_at_its_own_cost() {
+        // die 0 is fabricated at the full 6x24 projection (1 pass per
+        // request), die 1 at 3x8 (6 passes): both serve, and every
+        // response carries its own die's real pass cost
+        let (mut sys, chip, xs, ys) = tiny_system();
+        sys.virtual_d = Some(6);
+        sys.virtual_l = Some(24);
+        sys.die_geoms = vec![(6, 24), (3, 8)];
+        let coord = Coordinator::start(&sys, &chip, &xs, &ys, 1e-2, 10).unwrap();
+        assert_eq!(coord.passes, 6, "fleet-level cost reports the worst die");
+        let mut seen = [false; 2];
+        let mut booked = 0u64;
+        for (i, x) in xs.iter().take(60).enumerate() {
+            let resp = coord.classify(x.clone()).unwrap();
+            let expect = if resp.worker == 0 { 1 } else { 6 };
+            assert_eq!(resp.passes, expect, "request {i} on die {}", resp.worker);
+            seen[resp.worker] = true;
+            booked += expect as u64;
+        }
+        assert!(seen[0] && seen[1], "both geometries must serve traffic");
+        assert_eq!(coord.metrics.conversions.load(Ordering::Relaxed), booked);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn heterogeneous_geometry_validation_fails_fast() {
+        let (mut sys, chip, xs, ys) = tiny_system();
+        // wrong arity: 2 dies, 1 geometry
+        sys.die_geoms = vec![(6, 24)];
+        assert!(Coordinator::start(&sys, &chip, &xs, &ys, 1e-2, 10).is_err());
+        // a die larger than the served projection would be masked
+        let (mut sys2, chip2, ..) = tiny_system();
+        sys2.die_geoms = vec![(6, 24), (6, 48)]; // projection is 6x24
+        assert!(Coordinator::start(&sys2, &chip2, &xs, &ys, 1e-2, 10).is_err());
     }
 
     #[test]
@@ -584,6 +884,105 @@ mod tests {
             hit0 |= resp.worker == 0;
         }
         assert!(hit0, "re-admitted die should see traffic");
+        coord.shutdown();
+    }
+
+    // --- registry surface ---
+
+    fn regression_targets(xs: &[Vec<f64>]) -> Vec<f64> {
+        xs.iter().map(|x| 0.5 * x[0] - 0.25 * x[1]).collect()
+    }
+
+    #[test]
+    fn register_serve_and_unregister_a_tenant() {
+        let (sys, chip, xs, ys) = tiny_system();
+        let coord = Coordinator::start(&sys, &chip, &xs, &ys, 1e-2, 10).unwrap();
+        let reg_y = regression_targets(&xs);
+        let spec =
+            TenantSpec::regression("slope", xs.clone(), &reg_y, 1e-3, 12).unwrap();
+        let rmse = coord.register_tenant(spec).unwrap();
+        assert!(rmse < 0.2, "train rmse {rmse}");
+        assert_eq!(coord.tenant_names(), vec!["slope".to_string()]);
+        let models = coord.models();
+        assert!(models.contains("slope task=regression"), "{models}");
+        // tenant traffic answers in target units, default still works
+        for (x, &t) in xs.iter().take(20).zip(&reg_y) {
+            let resp = coord.classify_tenant(Some("slope"), x.clone()).unwrap();
+            assert_eq!(resp.label, 0);
+            assert_eq!(resp.tenant.as_deref(), Some("slope"));
+            assert!((resp.score - t).abs() < 0.4, "score {} target {t}", resp.score);
+            let d = coord.classify(x.clone()).unwrap();
+            assert!(d.tenant.is_none());
+        }
+        // per-tenant metrics accumulated
+        let report = coord.metrics.report();
+        assert!(report.contains("tenant[slope:"), "{report}");
+        // unknown tenants are refused at submit
+        assert!(coord.classify_tenant(Some("nosuch"), xs[0].clone()).is_err());
+        // duplicate registration is refused
+        let dup = TenantSpec::regression("slope", xs.clone(), &reg_y, 1e-3, 12).unwrap();
+        assert!(coord.register_tenant(dup).is_err());
+        // unregister removes it everywhere
+        coord.unregister_tenant("slope").unwrap();
+        assert!(coord.tenant_names().is_empty());
+        assert!(coord.classify_tenant(Some("slope"), xs[0].clone()).is_err());
+        assert!(coord.unregister_tenant("slope").is_err());
+        assert!(coord.unregister_tenant("default").is_err());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn register_refuses_bad_specs() {
+        let (sys, chip, xs, ys) = tiny_system();
+        let coord = Coordinator::start(&sys, &chip, &xs, &ys, 1e-2, 10).unwrap();
+        // wrong dimension
+        let bad = TenantSpec::regression("w", vec![vec![0.0; 3]; 4], &[0.0; 4], 1e-3, 10)
+            .unwrap();
+        assert!(coord.register_tenant(bad).is_err());
+        // reserved / malformed names
+        let reg_y = regression_targets(&xs);
+        let named =
+            TenantSpec::regression("default", xs.clone(), &reg_y, 1e-3, 10).unwrap();
+        assert!(coord.register_tenant(named).is_err());
+        let spaced =
+            TenantSpec::regression("two words", xs.clone(), &reg_y, 1e-3, 10).unwrap();
+        assert!(coord.register_tenant(spaced).is_err());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn tenant_online_update_moves_the_heads() {
+        let (sys, chip, xs, ys) = tiny_system();
+        let coord = Coordinator::start(&sys, &chip, &xs, &ys, 1e-2, 10).unwrap();
+        // a deliberately tiny training set leaves room to learn online
+        let reg_y = regression_targets(&xs);
+        let spec = TenantSpec::regression(
+            "slope",
+            xs[..8].to_vec(),
+            &reg_y[..8],
+            1e-2,
+            12,
+        )
+        .unwrap();
+        coord.register_tenant(spec).unwrap();
+        let probe_x = xs[20].clone();
+        let before = coord.classify_tenant(Some("slope"), probe_x.clone()).unwrap();
+        // stream the rest of the set through OS-ELM updates
+        for (x, &t) in xs.iter().zip(&reg_y).skip(8).take(60) {
+            coord.tenant_update("slope", x, &[t]).unwrap();
+        }
+        let after = coord.classify_tenant(Some("slope"), probe_x.clone()).unwrap();
+        let target = 0.5 * probe_x[0] - 0.25 * probe_x[1];
+        assert!(
+            (after.score - target).abs() <= (before.score - target).abs() + 0.05,
+            "online updates must not wreck the head: before {} after {} target {target}",
+            before.score,
+            after.score
+        );
+        // arity and existence are validated
+        assert!(coord.tenant_update("slope", &xs[0], &[1.0, 2.0]).is_err());
+        assert!(coord.tenant_update("nosuch", &xs[0], &[1.0]).is_err());
+        assert!(coord.tenant_update("slope", &[0.0; 2], &[1.0]).is_err());
         coord.shutdown();
     }
 }

@@ -1,11 +1,15 @@
 //! Request/response types flowing through the serving pipeline, plus
-//! the fleet-health control messages workers interleave with traffic.
+//! the fleet-health and registry control messages workers interleave
+//! with traffic.
 
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::fleet::probe::{ProbeReport, ProbeSet};
+use crate::registry::TenantSpec;
+
+use super::metrics::TenantMetrics;
 
 /// Which engine produced the hidden layer for a response.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -25,19 +29,35 @@ impl std::fmt::Display for Backend {
     }
 }
 
-/// One classification request: features in [-1, 1]^d.
+/// The model a request is addressed to (DESIGN.md §14): the tenant's
+/// name plus its metrics handle, resolved once at submit so the hot
+/// path never touches the registry again. `None` end-to-end means the
+/// fleet's boot ("default") head.
+#[derive(Clone, Debug)]
+pub struct TenantTag {
+    pub name: Arc<str>,
+    pub metrics: Arc<TenantMetrics>,
+}
+
+/// One classification request: features in [-1, 1]^d, addressed to one
+/// tenant's head (or the default head when `tenant` is `None`).
 #[derive(Debug)]
 pub struct ClassifyRequest {
     pub id: u64,
     pub features: Vec<f64>,
+    /// Model id carried end-to-end; workers resolve the head from
+    /// their own tenant table (lock-free) using this tag.
+    pub tenant: Option<TenantTag>,
     pub submitted: Instant,
     pub reply: mpsc::Sender<ClassifyResponse>,
 }
 
-/// Everything a worker can receive: traffic, or a fleet-health control
-/// message (DESIGN.md §12). Control rides the same channel, so control
-/// messages execute in the order they were sent — a probe sent after a
-/// drift injection always observes the drifted die. (Classify requests
+/// Everything a worker can receive: traffic, or a fleet-health /
+/// registry control message (DESIGN.md §12, §14). Control rides the
+/// same channel, so control messages execute in the order they were
+/// sent — a probe sent after a drift injection always observes the
+/// drifted die, and a request routed after a REGISTER acknowledgement
+/// always finds the tenant's head installed. (Classify requests
 /// collected into the same batch window are served *before* that
 /// window's control messages, so traffic-vs-control ordering is only
 /// batch-granular.)
@@ -47,9 +67,10 @@ pub enum WorkerMsg {
     Control(ControlMsg),
 }
 
-/// Fleet-health commands executed on the worker thread (which owns the
-/// die). Replies go back over per-command channels to the
-/// `fleet::FleetManager`.
+/// Fleet-health and registry commands executed on the worker thread
+/// (which owns the die and its tenant table). Replies go back over
+/// per-command channels to the `fleet::FleetManager` or the
+/// coordinator's registry surface.
 #[derive(Debug)]
 pub enum ControlMsg {
     /// Classify the pinned probe set + read the reference columns.
@@ -69,14 +90,40 @@ pub enum ControlMsg {
     /// reprogramming the counting window. Replies with the new T_neu.
     Renormalize { gain: f64, reply: mpsc::Sender<f64> },
     /// Tier-2 recovery: chip-in-the-loop head refit on the (drained)
-    /// die; replies with a post-refit probe report.
+    /// die — the default head **and every registered tenant's heads**
+    /// re-solve against the drifted die (DESIGN.md §14); replies with a
+    /// post-refit probe report plus the per-tenant post-refit train
+    /// scores, so the fleet manager can refresh the tenant gauges.
     Refit {
         xs: Arc<Vec<Vec<f64>>>,
         ys: Arc<Vec<f64>>,
         lambda: f64,
         beta_bits: u32,
         probe: Arc<ProbeSet>,
-        reply: mpsc::Sender<Result<ProbeReport, String>>,
+        reply: mpsc::Sender<Result<(ProbeReport, Vec<(String, f64)>), String>>,
+    },
+    /// Registry: train this tenant's heads chip-in-the-loop on the die
+    /// (one shared H, all heads) and install them in the worker's
+    /// tenant table. Replies with the train-set score on this die.
+    Register {
+        spec: Arc<TenantSpec>,
+        reply: mpsc::Sender<Result<f64, String>>,
+    },
+    /// Registry: drop a tenant's heads from this die. Replies whether
+    /// the tenant was present.
+    Unregister {
+        tenant: Arc<str>,
+        reply: mpsc::Sender<bool>,
+    },
+    /// Registry: OS-ELM incremental update — drive one labelled sample
+    /// through the die and stream it into every head of the tenant
+    /// (shared-P RLS, DESIGN.md §14).
+    OnlineUpdate {
+        tenant: Arc<str>,
+        x: Arc<Vec<f64>>,
+        /// One target per head of the tenant's task.
+        targets: Arc<Vec<f64>>,
+        reply: mpsc::Sender<Result<(), String>>,
     },
 }
 
@@ -84,10 +131,15 @@ pub enum ControlMsg {
 #[derive(Clone, Debug)]
 pub struct ClassifyResponse {
     pub id: u64,
-    /// Raw second-stage score (eq. 1 output o).
+    /// Raw second-stage score (eq. 1 output o) for the default head;
+    /// training-unit score for tenant heads (regression outputs land in
+    /// target units).
     pub score: f64,
-    /// Thresholded label (+1 / -1).
+    /// Thresholded label: ±1 for binary heads, the argmax class for
+    /// multi-class tenants, 0 for regression.
     pub label: i8,
+    /// Which tenant's head produced it (`None` = the default head).
+    pub tenant: Option<Arc<str>>,
     /// Which worker/die served it.
     pub worker: usize,
     pub backend: Backend,
@@ -115,6 +167,7 @@ mod tests {
         let req = ClassifyRequest {
             id: 7,
             features: vec![0.1, -0.2],
+            tenant: None,
             submitted: Instant::now(),
             reply: tx,
         };
@@ -122,6 +175,7 @@ mod tests {
             id: req.id,
             score: 0.5,
             label: 1,
+            tenant: None,
             worker: 0,
             backend: Backend::ChipSim,
             passes: 1,
@@ -131,5 +185,34 @@ mod tests {
         let got = rx.recv().unwrap();
         assert_eq!(got.id, 7);
         assert_eq!(got.label, 1);
+        assert!(got.tenant.is_none());
+    }
+
+    #[test]
+    fn tenant_tag_rides_the_request() {
+        let (tx, _rx) = mpsc::channel();
+        let tag = TenantTag {
+            name: Arc::from("digits"),
+            metrics: Arc::new(TenantMetrics::default()),
+        };
+        let req = ClassifyRequest {
+            id: 1,
+            features: vec![0.0; 4],
+            tenant: Some(tag.clone()),
+            submitted: Instant::now(),
+            reply: tx,
+        };
+        assert_eq!(req.tenant.as_ref().unwrap().name.as_ref(), "digits");
+        // the tag shares the metrics handle, not a copy
+        tag.metrics.record_request();
+        assert_eq!(
+            req.tenant
+                .as_ref()
+                .unwrap()
+                .metrics
+                .requests
+                .load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
     }
 }

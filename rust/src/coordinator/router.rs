@@ -123,7 +123,13 @@ mod tests {
 
     fn req(id: u64) -> ClassifyRequest {
         let (tx, _rx) = mpsc::channel();
-        ClassifyRequest { id, features: vec![], submitted: Instant::now(), reply: tx }
+        ClassifyRequest {
+            id,
+            features: vec![],
+            tenant: None,
+            submitted: Instant::now(),
+            reply: tx,
+        }
     }
 
     fn queued_ids(rx: &mpsc::Receiver<WorkerMsg>) -> Vec<u64> {

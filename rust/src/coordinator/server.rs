@@ -2,8 +2,19 @@
 //! per connection — no tokio in the offline vendor set).
 //!
 //! Protocol (newline-terminated ASCII):
-//!   `CLASSIFY x1,x2,...,xd`  ->  `OK <label> <score>`
-//!   `STATS`                  ->  `OK <metrics one-liner>`
+//!   `CLASSIFY x1,x2,...,xd`  ->  `OK <label> <score>` (the default head)
+//!   `PREDICT <tenant> x1,..` ->  `OK <label> <score>` through the named
+//!                                tenant's model (DESIGN.md §14): ±1
+//!                                labels for binary, the argmax class
+//!                                for multi-class, label 0 + the raw
+//!                                score for regression
+//!   `REGISTER <name> <dataset> [seed]` -> train + install a tenant
+//!                                fleet-wide from a named dataset
+//!                                (`digits`, `digits-binary`,
+//!                                `brightness`, or any synth set)
+//!   `UNREGISTER <name>`      ->  drop a tenant fleet-wide
+//!   `MODELS`                 ->  `OK <tenant directory one-liner>`
+//!   `STATS`                  ->  `OK <metrics one-liner>` (incl. per-tenant)
 //!   `HEALTH`                 ->  `OK <per-die lifecycle gauges + fleet counters>`
 //!   `DRAIN <die>`            ->  `OK draining die <die>` (recalibrated + re-admitted by the fleet manager)
 //!   `PING`                   ->  `OK pong`
@@ -16,7 +27,16 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use crate::registry::TenantSpec;
+
 use super::Coordinator;
+
+/// Parse a comma-separated feature list.
+fn parse_features(text: &str) -> std::result::Result<Vec<f64>, String> {
+    text.split(',')
+        .map(|t| t.trim().parse::<f64>().map_err(|e| format!("bad features: {e}")))
+        .collect()
+}
 
 /// Handle one protocol line. Exposed for unit testing without sockets.
 pub fn handle_line(coord: &Coordinator, line: &str) -> Option<String> {
@@ -29,6 +49,7 @@ pub fn handle_line(coord: &Coordinator, line: &str) -> Option<String> {
         "PING" => Some("OK pong".into()),
         "STATS" => Some(format!("OK {}", coord.metrics.report())),
         "HEALTH" => Some(format!("OK {}", coord.fleet_status())),
+        "MODELS" => Some(format!("OK {}", coord.models())),
         "DRAIN" => match rest.trim().parse::<usize>() {
             Err(_) => Some(format!("ERR DRAIN wants a die index, got '{rest}'")),
             Ok(die) => match coord.drain_die(die) {
@@ -37,15 +58,58 @@ pub fn handle_line(coord: &Coordinator, line: &str) -> Option<String> {
             },
         },
         "QUIT" => None,
-        "CLASSIFY" => {
-            let features: std::result::Result<Vec<f64>, _> =
-                rest.split(',').map(|t| t.trim().parse::<f64>()).collect();
-            match features {
-                Err(e) => Some(format!("ERR bad features: {e}")),
-                Ok(f) => match coord.classify(f) {
+        "CLASSIFY" => match parse_features(rest) {
+            Err(e) => Some(format!("ERR {e}")),
+            Ok(f) => match coord.classify(f) {
+                Ok(resp) => Some(format!("OK {} {:.6}", resp.label, resp.score)),
+                Err(e) => Some(format!("ERR {e:#}")),
+            },
+        },
+        "PREDICT" => {
+            // PREDICT <tenant> x1,x2,...,xd
+            let Some((tenant, feats)) = rest.trim().split_once(' ') else {
+                return Some("ERR PREDICT wants: PREDICT <tenant> x1,x2,...".into());
+            };
+            match parse_features(feats.trim()) {
+                Err(e) => Some(format!("ERR {e}")),
+                Ok(f) => match coord.classify_tenant(Some(tenant.trim()), f) {
                     Ok(resp) => Some(format!("OK {} {:.6}", resp.label, resp.score)),
                     Err(e) => Some(format!("ERR {e:#}")),
                 },
+            }
+        }
+        "REGISTER" => {
+            // REGISTER <name> <dataset> [seed]
+            let mut parts = rest.split_whitespace();
+            let (Some(name), Some(dataset)) = (parts.next(), parts.next()) else {
+                return Some("ERR REGISTER wants: REGISTER <name> <dataset> [seed]".into());
+            };
+            let seed = match parts.next().map(|t| t.parse::<u64>()) {
+                None => 1,
+                Some(Ok(s)) => s,
+                Some(Err(e)) => return Some(format!("ERR bad seed: {e}")),
+            };
+            match TenantSpec::from_dataset(name, dataset, seed, coord.d) {
+                Err(e) => Some(format!("ERR {e}")),
+                Ok(spec) => {
+                    let task = spec.task;
+                    match coord.register_tenant(spec) {
+                        Ok(score) => Some(format!(
+                            "OK registered {name} ({task}, mean train score {score:.4})"
+                        )),
+                        Err(e) => Some(format!("ERR {e:#}")),
+                    }
+                }
+            }
+        }
+        "UNREGISTER" => {
+            let name = rest.trim();
+            if name.is_empty() {
+                return Some("ERR UNREGISTER wants a tenant name".into());
+            }
+            match coord.unregister_tenant(name) {
+                Ok(()) => Some(format!("OK unregistered {name}")),
+                Err(e) => Some(format!("ERR {e:#}")),
             }
         }
         other => Some(format!("ERR unknown command {other}")),

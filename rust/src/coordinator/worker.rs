@@ -1,15 +1,20 @@
 //! Chip worker: one thread owning one fabricated die (physical, or
 //! wrapped in the Section V rotation plan when the fleet serves virtual
-//! dims — DESIGN.md §13), its trained head and (optionally) a PJRT
-//! engine. Batches arrive from the router via the dynamic batcher; the
-//! hidden layer runs on the batched AOT artifact when the batch is
-//! large enough (physical dies only — the artifact's shape is the
-//! fabricated array), else on the scalar chip simulator through the
-//! serving plan; the fixed-point second stage produces the score.
-//! Fleet-health control messages (probe / drift injection / renormalise
-//! / refit — DESIGN.md §12) ride the same channel and execute here,
+//! dims — DESIGN.md §13), its trained default head, its tenant table
+//! (DESIGN.md §14) and (optionally) a PJRT engine. Batches arrive from
+//! the router via the dynamic batcher; the hidden layer runs on the
+//! batched AOT artifact when the batch is large enough (physical dies
+//! only — the artifact's shape is the fabricated array), else on the
+//! scalar chip simulator through the serving plan. The hidden
+//! computation is tenant-agnostic, so one pass covers every tenant's
+//! rows in the batch; each row is then scored by its own tenant's
+//! fixed-point head, resolved from the thread-owned tenant table — no
+//! lock on the serve path. Fleet-health and registry control messages
+//! (probe / drift injection / renormalise / refit / register /
+//! unregister / OS-ELM update) ride the same channel and execute here,
 //! because this thread owns the die.
 
+use std::collections::BTreeMap;
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 use std::time::Duration;
@@ -19,6 +24,7 @@ use crate::config::SystemConfig;
 use crate::elm::secondstage::{codes_sum, SecondStage};
 use crate::extension::ServeChip;
 use crate::fleet::{calibrate, probe};
+use crate::registry::TenantEntry;
 use crate::runtime::PjrtEngine;
 
 use super::batcher::collect_batch;
@@ -30,7 +36,12 @@ use super::router::Outstanding;
 pub struct WorkerSetup {
     pub index: usize,
     pub die: ServeChip,
+    /// The boot ("default") head — also the head fleet probes score.
     pub second: SecondStage,
+    /// Registered tenants' per-die heads, owned by this thread and
+    /// updated only through control messages — the lock-free registry
+    /// snapshot the serve path reads (DESIGN.md §14).
+    pub tenants: BTreeMap<String, TenantEntry>,
     /// Artifact directory; the engine itself is created *inside* the
     /// worker thread (PJRT handles are not `Send`).
     pub artifact_dir: Option<String>,
@@ -40,18 +51,26 @@ pub struct WorkerSetup {
     pub max_batch: usize,
     pub max_wait: Duration,
     pub pjrt_min_batch: usize,
+    /// Consecutive engine failures after which the engine is dropped
+    /// for good — stop paying the flatten+attempt cost on every batch.
+    pub pjrt_max_failures: u32,
     pub normalize: bool,
 }
 
-/// Once-per-worker log latches: a hot serving loop must not flood
-/// stderr at batch or request rate, so each condition warns on its
-/// first occurrence only.
+/// Once-per-worker log latches + the engine failure streak: a hot
+/// serving loop must not flood stderr at batch or request rate, so each
+/// condition warns on its first occurrence only.
 #[derive(Default)]
 pub(crate) struct LogOnce {
     /// PJRT engine failed and the batch fell back to the simulator.
     pub pjrt_fallback: bool,
     /// A malformed request was dropped instead of answered.
     pub dropped_request: bool,
+    /// A request named a tenant this die has no head for.
+    pub unknown_tenant: bool,
+    /// Consecutive engine failures (reset by any successful PJRT
+    /// batch); at `pjrt_max_failures` the engine is dropped entirely.
+    pub pjrt_fail_streak: u32,
 }
 
 /// The batched hidden-layer engine as the worker drives it. `PjrtEngine`
@@ -131,6 +150,9 @@ pub fn run(mut s: WorkerSetup) {
 /// response `backend` and the batch metrics reflect the path that
 /// *actually* served — when the engine errors mid-batch the batch falls
 /// back to the simulator and is labelled and counted as `ChipSim`.
+/// After `pjrt_max_failures` consecutive engine errors the engine is
+/// dropped entirely, so subsequent batches skip the flatten+attempt
+/// cost and go straight to the simulator.
 pub(crate) fn serve_batch<E: BatchEngine>(
     s: &mut WorkerSetup,
     engine: &mut Option<E>,
@@ -160,13 +182,14 @@ pub(crate) fn serve_batch<E: BatchEngine>(
         .collect();
     let conversions_before = s.die.chip().ledger.conversions;
     let mut served_pjrt = false;
+    let mut engine_failed = false;
     let hidden: Vec<Result<Vec<u32>, String>> = if want_pjrt {
-        let engine = engine.as_mut().unwrap();
+        let eng = engine.as_mut().unwrap();
         let flat: Vec<f32> = codes
             .iter()
             .flat_map(|c| c.iter().map(|&v| v as f32))
             .collect();
-        match engine.hidden(&flat, n, d, l, w_f32, false) {
+        match eng.hidden(&flat, n, d, l, w_f32, false) {
             Ok(out) => {
                 served_pjrt = true;
                 out.chunks(l)
@@ -183,6 +206,7 @@ pub(crate) fn serve_batch<E: BatchEngine>(
             }
             Err(e) => {
                 // artifact trouble: fall back to the simulator
+                engine_failed = true;
                 if !logs.pjrt_fallback {
                     eprintln!(
                         "worker {}: pjrt failed ({e:#}); falling back to chip sim",
@@ -196,6 +220,21 @@ pub(crate) fn serve_batch<E: BatchEngine>(
     } else {
         codes.iter().map(|c| s.die.forward(c)).collect()
     };
+    // engine hardening: a streak of failures means the artifact is not
+    // coming back — drop the engine instead of re-attempting per batch
+    if engine_failed {
+        logs.pjrt_fail_streak += 1;
+        if logs.pjrt_fail_streak >= s.pjrt_max_failures.max(1) {
+            *engine = None;
+            eprintln!(
+                "worker {}: dropping pjrt engine after {} consecutive failures; \
+                 serving via chip sim from here on",
+                s.index, logs.pjrt_fail_streak
+            );
+        }
+    } else if served_pjrt {
+        logs.pjrt_fail_streak = 0;
+    }
     // count the batch on the path that served it, after any fallback
     s.metrics.record_batch(n, served_pjrt);
     // book physical conversions before any reply goes out (a client must
@@ -210,23 +249,65 @@ pub(crate) fn serve_batch<E: BatchEngine>(
     s.metrics.record_conversions(booked);
     let backend = if served_pjrt { Backend::Pjrt } else { Backend::ChipSim };
     let passes = s.die.passes();
+    // training scaled H by 1/2^b, so tenant scores are rescaled into
+    // training units (sign/argmax-invariant; regression needs it)
+    let scale = 1.0 / cap as f64;
     for ((req, code), h) in requests.iter().zip(&codes).zip(&hidden) {
         match h {
             Ok(h) => {
-                let score = s.second.score(h, codes_sum(code));
-                let resp = ClassifyResponse {
-                    id: req.id,
-                    score,
-                    label: if score >= 0.0 { 1 } else { -1 },
-                    worker: s.index,
-                    backend,
-                    passes,
-                    latency: req.submitted.elapsed(),
+                let cs = codes_sum(code);
+                // resolve this row's head: the default head, or the
+                // tenant's entry from the thread-owned table
+                let outcome: Option<(i8, f64)> = match &req.tenant {
+                    None => {
+                        let score = s.second.score(h, cs);
+                        Some((if score >= 0.0 { 1 } else { -1 }, score))
+                    }
+                    Some(tag) => s
+                        .tenants
+                        .get(tag.name.as_ref())
+                        .map(|entry| entry.score_row(h, cs, scale)),
                 };
-                s.metrics.record_response(resp.latency);
-                s.outstanding.dec(s.index);
-                // receiver may have hung up; that's the client's business
-                let _ = req.reply.send(resp);
+                match outcome {
+                    Some((label, score)) => {
+                        let resp = ClassifyResponse {
+                            id: req.id,
+                            score,
+                            label,
+                            tenant: req.tenant.as_ref().map(|t| Arc::clone(&t.name)),
+                            worker: s.index,
+                            backend,
+                            passes,
+                            latency: req.submitted.elapsed(),
+                        };
+                        s.metrics.record_response(resp.latency);
+                        if let Some(tag) = &req.tenant {
+                            tag.metrics.record_response(resp.latency);
+                        }
+                        s.outstanding.dec(s.index);
+                        // receiver may have hung up; that's the client's business
+                        let _ = req.reply.send(resp);
+                    }
+                    None => {
+                        // tenant unknown on this die (an unregister
+                        // raced the request): drop the reply, keep the
+                        // ledger balanced, warn once
+                        if !logs.unknown_tenant {
+                            let name = req
+                                .tenant
+                                .as_ref()
+                                .map(|t| t.name.as_ref().to_string())
+                                .unwrap_or_default();
+                            eprintln!(
+                                "worker {}: dropping request {} for unknown tenant \
+                                 '{name}'; further drops are silent",
+                                s.index, req.id
+                            );
+                            logs.unknown_tenant = true;
+                        }
+                        s.outstanding.dec(s.index);
+                    }
+                }
             }
             Err(e) => {
                 // a malformed request must not kill the thread that owns
@@ -248,7 +329,8 @@ pub(crate) fn serve_batch<E: BatchEngine>(
     }
 }
 
-/// Execute one fleet-health control message on the die this thread owns.
+/// Execute one fleet-health or registry control message on the die this
+/// thread owns.
 fn handle_control(s: &mut WorkerSetup, artifact_stale: &mut bool, ctl: ControlMsg) {
     match ctl {
         ControlMsg::Probe { probe: set, reply } => {
@@ -274,14 +356,44 @@ fn handle_control(s: &mut WorkerSetup, artifact_stale: &mut bool, ctl: ControlMs
             let _ = reply.send(t_neu);
         }
         ControlMsg::Refit { xs, ys, lambda, beta_bits, probe: set, reply } => {
+            // tenant-aware recovery (DESIGN.md §14): the default head
+            // re-solves first, then every registered tenant's heads
+            // re-solve chip-in-the-loop against the same drifted die —
+            // a refit must never leave some models on stale weights
             let res = calibrate::refit_head(&mut s.die, s.normalize, &xs, &ys, lambda, beta_bits)
-                .map(|second| {
+                .and_then(|second| {
                     s.second = second;
-                    probe::run_probe(&mut s.die, &s.second, &set)
+                    let scores =
+                        calibrate::refit_tenants(&mut s.die, s.normalize, &mut s.tenants)?;
+                    Ok((probe::run_probe(&mut s.die, &s.second, &set), scores))
                 });
-            // the refit head was solved against the *current* (drifted)
+            // the refit heads were solved against the *current* (drifted)
             // die, which the frozen artifact does not model
             *artifact_stale = true;
+            let _ = reply.send(res);
+        }
+        ControlMsg::Register { spec, reply } => {
+            // chip-in-the-loop tenant training: one shared H on this
+            // die, every head of the tenant from one Cholesky
+            let res = crate::registry::fit_on_die(&mut s.die, s.normalize, &spec).map(
+                |(entry, score)| {
+                    s.tenants.insert(spec.name.clone(), entry);
+                    score
+                },
+            );
+            let _ = reply.send(res);
+        }
+        ControlMsg::Unregister { tenant, reply } => {
+            let _ = reply.send(s.tenants.remove(tenant.as_ref()).is_some());
+        }
+        ControlMsg::OnlineUpdate { tenant, x, targets, reply } => {
+            let res = match s.tenants.get_mut(tenant.as_ref()) {
+                None => Err(format!("no tenant {tenant} on die {}", s.index)),
+                Some(entry) => s
+                    .die
+                    .assemble_row(&x, s.normalize)
+                    .and_then(|row| entry.absorb(&row, &targets)),
+            };
             let _ = reply.send(res);
         }
     }
@@ -317,6 +429,9 @@ mod tests {
     use super::*;
     use crate::chip::ChipModel;
     use crate::config::ChipConfig;
+    use crate::coordinator::metrics::TenantMetrics;
+    use crate::coordinator::request::TenantTag;
+    use crate::registry::{fit_on_die, TenantSpec};
     use std::sync::atomic::Ordering;
     use std::sync::mpsc;
     use std::time::Instant;
@@ -366,7 +481,8 @@ mod tests {
             die: ServeChip::physical(chip),
             // beta all-ones: QuantBeta codes are all the max level, so
             // score == sum(h) exactly — the clamp is directly observable
-            second: SecondStage::new(&vec![1.0; L], 10, false),
+            second: SecondStage::new(&[1.0; L], 10, false),
+            tenants: BTreeMap::new(),
             artifact_dir: None,
             rx,
             metrics: Arc::new(Metrics::new()),
@@ -374,6 +490,7 @@ mod tests {
             max_batch: 8,
             max_wait: Duration::from_millis(1),
             pjrt_min_batch: 1,
+            pjrt_max_failures: 3,
             normalize: false,
         }
     }
@@ -387,12 +504,17 @@ mod tests {
             reqs.push(ClassifyRequest {
                 id: i as u64,
                 features: vec![0.3; D],
+                tenant: None,
                 submitted: Instant::now(),
                 reply: tx,
             });
             rxs.push(rx);
         }
         (reqs, rxs)
+    }
+
+    fn tag(name: &str) -> TenantTag {
+        TenantTag { name: Arc::from(name), metrics: Arc::new(TenantMetrics::default()) }
     }
 
     #[test]
@@ -421,6 +543,46 @@ mod tests {
         assert!(logs.pjrt_fallback);
         assert_eq!(s.metrics.sim_batches.load(Ordering::Relaxed), 2);
         assert_eq!(s.metrics.pjrt_batches.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn engine_is_dropped_after_consecutive_failures() {
+        // PJRT hardening: at pjrt_max_failures consecutive errors the
+        // worker stops re-attempting the engine entirely
+        let mut s = setup();
+        s.pjrt_max_failures = 2;
+        let mut engine = Some(FailEngine);
+        let mut logs = LogOnce::default();
+        let (reqs, _rxs) = requests(&s, 2);
+        serve_batch(&mut s, &mut engine, &mut logs, &[], &reqs, false);
+        assert!(engine.is_some(), "one failure must not drop the engine");
+        assert_eq!(logs.pjrt_fail_streak, 1);
+        let (reqs, _rxs) = requests(&s, 2);
+        serve_batch(&mut s, &mut engine, &mut logs, &[], &reqs, false);
+        assert!(engine.is_none(), "second consecutive failure drops it");
+        // further batches serve the simulator without an engine
+        let (reqs, rxs) = requests(&s, 2);
+        serve_batch(&mut s, &mut engine, &mut logs, &[], &reqs, false);
+        assert_eq!(rxs[0].recv().unwrap().backend, Backend::ChipSim);
+        assert_eq!(s.outstanding.load(0), 0);
+    }
+
+    #[test]
+    fn a_success_resets_the_failure_streak() {
+        let mut s = setup();
+        s.pjrt_max_failures = 2;
+        let mut logs = LogOnce::default();
+        // one failure...
+        let mut fail = Some(FailEngine);
+        let (reqs, _rxs) = requests(&s, 2);
+        serve_batch(&mut s, &mut fail, &mut logs, &[], &reqs, false);
+        assert_eq!(logs.pjrt_fail_streak, 1);
+        // ...then a success on a healthy engine resets the streak
+        let mut hot = Some(HotEngine);
+        let (reqs, _rxs) = requests(&s, 2);
+        serve_batch(&mut s, &mut hot, &mut logs, &[], &reqs, false);
+        assert_eq!(logs.pjrt_fail_streak, 0);
+        assert!(hot.is_some());
     }
 
     #[test]
@@ -512,7 +674,7 @@ mod tests {
         let chip = ChipModel::fabricate(cfg, 2);
         let mut s = setup();
         s.die = ServeChip::new(chip, 2 * D, 2 * L).unwrap(); // 4 passes
-        s.second = SecondStage::new(&vec![1.0; 2 * L], 10, false);
+        s.second = SecondStage::new(&[1.0; 2 * L], 10, false);
         let mut engine: Option<FailEngine> = None;
         let mut logs = LogOnce::default();
         let (mut reqs, rxs) = requests(&s, 3);
@@ -527,5 +689,64 @@ mod tests {
         }
         // the ledger delta books exactly passes() conversions/request
         assert_eq!(s.metrics.conversions.load(Ordering::Relaxed), 12);
+    }
+
+    /// Install a regression tenant whose single head is all-ones: its
+    /// training-unit score is exactly sum(h)/2^b, directly observable.
+    fn install_ones_regression(s: &mut WorkerSetup, name: &str) {
+        let spec = Arc::new(
+            TenantSpec::regression(name, vec![vec![0.0; D]; 2], &[0.0, 0.0], 1.0, 10).unwrap(),
+        );
+        let (mut entry, _) = fit_on_die(&mut s.die, false, &spec).unwrap();
+        entry.rls.betas = vec![vec![1.0; L]];
+        entry.rebuild_heads(false);
+        s.tenants.insert(name.to_string(), entry);
+    }
+
+    #[test]
+    fn cross_tenant_batch_scores_each_row_with_its_own_head() {
+        // one hidden-layer pass per batch, many heads: a default row
+        // and a tenant row in the same batch get different scores from
+        // the same hidden activations
+        let mut s = setup();
+        install_ones_regression(&mut s, "bright");
+        let cap = s.die.chip().cfg.cap();
+        let mut engine: Option<FailEngine> = None;
+        let mut logs = LogOnce::default();
+        let (mut reqs, rxs) = requests(&s, 2);
+        reqs[1].tenant = Some(tag("bright"));
+        serve_batch(&mut s, &mut engine, &mut logs, &[], &reqs, false);
+        let default_resp = rxs[0].recv().unwrap();
+        let tenant_resp = rxs[1].recv().unwrap();
+        assert!(default_resp.tenant.is_none());
+        assert_eq!(tenant_resp.tenant.as_deref(), Some("bright"));
+        assert_eq!(tenant_resp.label, 0, "regression label");
+        // same input row -> same hidden counts: the tenant score is the
+        // default (all-ones, unscaled) score divided by the counter cap
+        assert!(
+            (tenant_resp.score - default_resp.score / cap as f64).abs() < 1e-9,
+            "default {} tenant {}",
+            default_resp.score,
+            tenant_resp.score
+        );
+        // tenant metrics recorded via the tag handle
+        let m = &reqs[1].tenant.as_ref().unwrap().metrics;
+        assert_eq!(m.responses.load(Ordering::Relaxed), 1);
+        assert_eq!(s.metrics.responses.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn unknown_tenant_request_is_dropped_and_balanced() {
+        let mut s = setup();
+        let mut engine: Option<FailEngine> = None;
+        let mut logs = LogOnce::default();
+        let (mut reqs, rxs) = requests(&s, 2);
+        reqs[0].tenant = Some(tag("nosuch"));
+        serve_batch(&mut s, &mut engine, &mut logs, &[], &reqs, false);
+        drop(reqs);
+        assert!(rxs[0].recv().is_err(), "unknown tenant gets no reply");
+        assert!(rxs[1].recv().is_ok(), "default row still answered");
+        assert!(logs.unknown_tenant);
+        assert_eq!(s.outstanding.load(0), 0);
     }
 }

@@ -165,7 +165,7 @@ mod tests {
         let mut ch = chip_hidden(8, 12, 1);
         assert_eq!(ch.input_dim(), 8);
         assert_eq!(ch.hidden_dim(), 12);
-        assert_eq!(ch.transform(&vec![0.0; 8]).len(), 12);
+        assert_eq!(ch.transform(&[0.0; 8]).len(), 12);
     }
 
     #[test]

@@ -74,6 +74,97 @@ impl OnlineElm {
     }
 }
 
+/// Multi-head recursive ridge solver over **one shared H stream**: the
+/// inverse covariance P depends only on the hidden activations, never
+/// on the targets, so C heads trained on the same samples share a
+/// single P (and a single Sherman–Morrison update) while keeping one
+/// beta each. This is the online half of the registry's shared-H
+/// solving (DESIGN.md §14): an OS-ELM update for a 10-class tenant
+/// costs one O(L²) P update plus 10 O(L) innovations — not 10 full RLS
+/// states. Each head's trajectory is bit-identical to an independent
+/// [`OnlineElm`] fed the same stream.
+#[derive(Clone, Debug)]
+pub struct MultiOnlineElm {
+    /// Shared inverse covariance, L x L.
+    p: Mat,
+    /// One output-weight vector per head.
+    pub betas: Vec<Vec<f64>>,
+    /// Samples absorbed.
+    pub seen: u64,
+}
+
+impl MultiOnlineElm {
+    /// `heads` zero-initialised heads over an L-wide hidden layer with
+    /// the pure ridge prior `P = I / lam`.
+    pub fn new(l: usize, heads: usize, lambda: f64) -> Self {
+        assert!(lambda > 0.0, "lambda must be positive");
+        assert!(heads > 0, "need at least one head");
+        let mut p = Mat::eye(l);
+        p.scale(1.0 / lambda);
+        MultiOnlineElm { p, betas: vec![vec![0.0; l]; heads], seen: 0 }
+    }
+
+    /// Warm-start every head from one batch solve: P from one Cholesky
+    /// against the identity, betas from the shared-H multi-head solve
+    /// (`train::solve_heads` — the same factored system, one column per
+    /// head of `t`).
+    pub fn from_batch(h: &Mat, t: &Mat, lambda: f64) -> Result<Self, String> {
+        if h.rows != t.rows {
+            return Err(format!("H has {} rows but targets have {}", h.rows, t.rows));
+        }
+        let l = h.cols;
+        let mut a = h.gram();
+        a.add_diag(lambda);
+        let eye = Mat::eye(l);
+        let p = crate::util::mat::cholesky_solve(&a, &eye)?;
+        let heads = crate::elm::train::solve_heads(h, t, lambda)?;
+        let betas = heads.into_iter().map(|head| head.beta).collect();
+        Ok(MultiOnlineElm { p, betas, seen: h.rows as u64 })
+    }
+
+    /// Absorb one sample into every head: `targets` carries one value
+    /// per head. O(L²) for the shared P plus O(L) per head.
+    pub fn update(&mut self, h: &[f64], targets: &[f64]) {
+        let l = self.p.rows;
+        assert_eq!(h.len(), l);
+        assert_eq!(targets.len(), self.betas.len());
+        let ph = self.p.matvec(h);
+        let denom = 1.0 + h.iter().zip(&ph).map(|(a, b)| a * b).sum::<f64>();
+        let k: Vec<f64> = ph.iter().map(|v| v / denom).collect();
+        for (beta, &t) in self.betas.iter_mut().zip(targets) {
+            let pred: f64 = h.iter().zip(beta.iter()).map(|(a, b)| a * b).sum();
+            let err = t - pred;
+            for (b, &kj) in beta.iter_mut().zip(&k) {
+                *b += kj * err;
+            }
+        }
+        for i in 0..l {
+            let ki = k[i];
+            if ki == 0.0 {
+                continue;
+            }
+            let row = self.p.row_mut(i);
+            for (r, &phj) in row.iter_mut().zip(&ph) {
+                *r -= ki * phj;
+            }
+        }
+        self.seen += 1;
+    }
+
+    /// Scores of every head for one hidden vector.
+    pub fn predict(&self, h: &[f64]) -> Vec<f64> {
+        self.betas
+            .iter()
+            .map(|beta| h.iter().zip(beta.iter()).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    /// Score of one head only (avoids the Vec for hot single-head use).
+    pub fn predict_head(&self, h: &[f64], head: usize) -> f64 {
+        h.iter().zip(self.betas[head].iter()).map(|(a, b)| a * b).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -127,6 +218,65 @@ mod tests {
             assert!((online.beta[j] - batch.get(j, 0)).abs() < 1e-6, "beta {j}");
         }
         assert_eq!(online.seen, 120);
+    }
+
+    #[test]
+    fn multi_head_stream_matches_independent_online_elms() {
+        // the shared-P solver must be bit-identical to C independent
+        // RLS states fed the same (h, t_c) stream
+        let (h, _) = make_problem(4, 150, 10);
+        let mut rng = Prng::new(44);
+        let t = Mat::from_fn(150, 3, |_, _| rng.gaussian());
+        let lam = 0.3;
+        let mut multi = MultiOnlineElm::new(10, 3, lam);
+        let mut singles: Vec<OnlineElm> = (0..3).map(|_| OnlineElm::new(10, lam)).collect();
+        for i in 0..150 {
+            let targets: Vec<f64> = (0..3).map(|c| t.get(i, c)).collect();
+            multi.update(h.row(i), &targets);
+            for (c, s) in singles.iter_mut().enumerate() {
+                s.update(h.row(i), targets[c]);
+            }
+        }
+        assert_eq!(multi.seen, 150);
+        for (c, s) in singles.iter().enumerate() {
+            for j in 0..10 {
+                assert!(
+                    (multi.betas[c][j] - s.beta[j]).abs() < 1e-12,
+                    "head {c} beta {j}: {} vs {}",
+                    multi.betas[c][j],
+                    s.beta[j]
+                );
+            }
+        }
+        let p = multi.predict(h.row(0));
+        assert_eq!(p.len(), 3);
+        for (c, &pc) in p.iter().enumerate() {
+            assert!((pc - multi.predict_head(h.row(0), c)).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn multi_head_warm_start_plus_stream_equals_full_batch() {
+        let (h, _) = make_problem(5, 120, 8);
+        let mut rng = Prng::new(46);
+        let t = Mat::from_fn(120, 2, |_, _| rng.gaussian());
+        let lam = 0.2;
+        let h0 = Mat::from_rows(&(0..60).map(|i| h.row(i).to_vec()).collect::<Vec<_>>());
+        let t0 = Mat::from_fn(60, 2, |i, c| t.get(i, c));
+        let mut multi = MultiOnlineElm::from_batch(&h0, &t0, lam).unwrap();
+        for i in 60..120 {
+            multi.update(h.row(i), &[t.get(i, 0), t.get(i, 1)]);
+        }
+        let batch = ridge_solve(&h, &t, lam).unwrap();
+        for c in 0..2 {
+            for j in 0..8 {
+                assert!(
+                    (multi.betas[c][j] - batch.get(j, c)).abs() < 1e-6,
+                    "head {c} beta {j}"
+                );
+            }
+        }
+        assert_eq!(multi.seen, 120);
     }
 
     #[test]

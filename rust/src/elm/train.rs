@@ -39,6 +39,29 @@ pub fn solve_head(h: &Mat, targets: &[f64], lambda: f64) -> Result<TrainedHead, 
     Ok(TrainedHead { beta: beta.data, lambda })
 }
 
+/// Solve eq. 3 for **many heads over one shared H**: `targets` carries
+/// one column per head, and `ridge_solve` factors the L×L normal matrix
+/// once for all of them. This is the registry's shared-H multi-head
+/// solver (DESIGN.md §14): a tenant with C output heads (one-vs-all
+/// classification) costs one chip-in-the-loop H assembly and one
+/// Cholesky, not C of either. Column c of the result is bit-identical
+/// to `solve_head(h, targets.col(c), lambda)`.
+pub fn solve_heads(h: &Mat, targets: &Mat, lambda: f64) -> Result<Vec<TrainedHead>, String> {
+    if h.rows != targets.rows {
+        return Err(format!(
+            "H has {} rows but targets have {}",
+            h.rows, targets.rows
+        ));
+    }
+    if targets.cols == 0 {
+        return Err("no target columns to solve".into());
+    }
+    let beta = ridge_solve(h, targets, lambda)?;
+    Ok((0..targets.cols)
+        .map(|c| TrainedHead { beta: beta.col(c), lambda })
+        .collect())
+}
+
 /// Predicted scores H beta.
 pub fn predict(h: &Mat, head: &TrainedHead) -> Vec<f64> {
     h.matvec(&head.beta)
@@ -207,6 +230,23 @@ mod tests {
         let e_best = misclassification(&predict(&h, &head_best), &ys);
         let e_huge = misclassification(&predict(&h, &head_huge), &ys);
         assert!(e_best <= e_huge);
+    }
+
+    #[test]
+    fn solve_heads_matches_independent_solves() {
+        let mut layer = toy(11, 4, 30);
+        let (xs, _) = toy_dataset(12, 120, 4);
+        let h = assemble_h(&mut layer, &xs);
+        let targets = Mat::from_fn(120, 3, |i, c| ((i * (c + 2)) % 7) as f64 / 3.0 - 1.0);
+        let many = solve_heads(&h, &targets, 1e-3).unwrap();
+        assert_eq!(many.len(), 3);
+        for (c, head) in many.iter().enumerate() {
+            let single = solve_head(&h, &targets.col(c), 1e-3).unwrap();
+            for (a, b) in head.beta.iter().zip(&single.beta) {
+                assert!((a - b).abs() < 1e-12, "head {c} diverged: {a} vs {b}");
+            }
+        }
+        assert!(solve_heads(&h, &Mat::from_fn(7, 1, |_, _| 0.0), 1e-3).is_err());
     }
 
     #[test]

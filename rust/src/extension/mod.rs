@@ -553,10 +553,10 @@ mod tests {
     fn dimension_mismatch_is_an_error_not_a_panic() {
         let mut v = VirtualChip::new(die(8, 8, 14), 16, 16).unwrap();
         assert!(v.forward(&codes_pattern(8, 15)).is_err());
-        assert!(v.forward_features(&vec![0.0; 3]).is_err());
+        assert!(v.forward_features(&[0.0; 3]).is_err());
         let mut p = ServeChip::physical(die(8, 8, 14));
         assert!(p.forward(&codes_pattern(5, 16)).is_err());
-        assert!(p.forward_features(&vec![0.0; 9]).is_err());
+        assert!(p.forward_features(&[0.0; 9]).is_err());
     }
 
     #[test]

@@ -14,10 +14,14 @@
 //! helps; the output weights are re-solved on the drifted die via the
 //! OS-ELM path (`elm::online` RLS warm-started from a batch solve).
 
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
 use crate::chip::ChipModel;
 use crate::elm::online::OnlineElm;
 use crate::elm::secondstage::SecondStage;
 use crate::extension::ServeChip;
+use crate::registry::{fit_on_die, TenantEntry, TenantSpec};
 use crate::util::mat::Mat;
 
 /// Common-mode gain of `current` reference counts over the enrolment
@@ -102,6 +106,32 @@ pub fn refit_head(
         rls.update(hmat.row(i), ys[i]);
     }
     Ok(SecondStage::new(&rls.beta, beta_bits, normalize))
+}
+
+/// Tenant-aware tier-2 recovery (DESIGN.md §14): after the default head
+/// refits, every registered tenant's heads re-solve chip-in-the-loop on
+/// the same drifted die — each tenant costs one H assembly (its own
+/// training set through the serving plan) and one shared Cholesky for
+/// all of its heads, exactly like registration. The fresh entries
+/// replace the stale ones wholesale, so the tenants' OS-ELM states are
+/// also re-anchored to the drifted die. Returns the per-tenant
+/// post-refit train scores. A failing tenant refit aborts with `Err`
+/// (the manager then quarantines the die): a die that cannot solve a
+/// registered model anymore must not keep serving it on stale weights.
+pub fn refit_tenants(
+    die: &mut ServeChip,
+    normalize: bool,
+    tenants: &mut BTreeMap<String, TenantEntry>,
+) -> Result<Vec<(String, f64)>, String> {
+    let specs: Vec<Arc<TenantSpec>> =
+        tenants.values().map(|e| Arc::clone(&e.spec)).collect();
+    let mut scores = Vec::with_capacity(specs.len());
+    for spec in specs {
+        let (entry, score) = fit_on_die(die, normalize, &spec)?;
+        scores.push((spec.name.clone(), score));
+        tenants.insert(spec.name.clone(), entry);
+    }
+    Ok(scores)
 }
 
 #[cfg(test)]
@@ -218,6 +248,34 @@ mod tests {
             e_refit < 0.1 && e_refit <= e_stale,
             "stale {e_stale} refit {e_refit}"
         );
+    }
+
+    #[test]
+    fn refit_tenants_recovers_every_registered_head() {
+        // two tenants (binary + regression) on one aged die: the tenant
+        // refit must restore both, from each tenant's own training set
+        let cfg = ChipConfig::default().with_dims(6, 48).with_b(10);
+        let mut die = ServeChip::physical(crate::chip::ChipModel::fabricate(cfg, 7));
+        let (xs, ys) = labelled_blobs(6, 150, 11);
+        let reg_y: Vec<f64> = xs.iter().map(|x| 0.6 * x[0] - 0.4 * x[1]).collect();
+        let cls = Arc::new(
+            TenantSpec::classification("cls", xs.clone(), &ys, 1e-2, 10).unwrap(),
+        );
+        let reg =
+            Arc::new(TenantSpec::regression("reg", xs.clone(), &reg_y, 1e-3, 10).unwrap());
+        let mut tenants = BTreeMap::new();
+        let (e0, cls_err0) = fit_on_die(&mut die, false, &cls).unwrap();
+        tenants.insert("cls".to_string(), e0);
+        let (e1, reg_rmse0) = fit_on_die(&mut die, false, &reg).unwrap();
+        tenants.insert("reg".to_string(), e1);
+        assert!(cls_err0 < 0.1 && reg_rmse0 < 0.15, "{cls_err0} {reg_rmse0}");
+        die.chip_mut().age_mismatch(0.02, 77); // heavy profile change
+        let scores = refit_tenants(&mut die, false, &mut tenants).unwrap();
+        assert_eq!(scores.len(), 2);
+        for (name, score) in &scores {
+            let bound = if name.as_str() == "cls" { 0.12 } else { 0.2 };
+            assert!(*score < bound, "tenant {name} not recovered: {score}");
+        }
     }
 
     #[test]

@@ -374,8 +374,9 @@ impl FleetManager {
     }
 
     /// Tier-2: chip-in-the-loop head refit on the (drained) die; the
-    /// worker replies with a post-refit probe report.
-    fn refit_die(&self, die: usize) -> Result<ProbeReport, String> {
+    /// worker replies with a post-refit probe report plus the
+    /// per-tenant post-refit train scores (DESIGN.md §14).
+    fn refit_die(&self, die: usize) -> Result<(ProbeReport, Vec<(String, f64)>), String> {
         let (tx, rx) = mpsc::channel();
         self.senders[die]
             .send(WorkerMsg::Control(ControlMsg::Refit {
@@ -520,18 +521,30 @@ impl FleetManager {
     fn step_recalibrate(&mut self, die: usize) {
         let t = self.tick_no;
         match self.refit_die(die) {
-            Ok(rep) if rep.err <= self.cfg.quarantine_err => {
+            Ok((rep, tenant_scores)) if rep.err <= self.cfg.quarantine_err => {
                 self.detectors[die] = DriftDetector::new(&rep, &self.cfg);
                 self.renorm_tries[die] = 0;
                 self.probe_misses[die] = 0;
                 self.state.set(die, DieState::Healthy);
                 self.metrics.refits.fetch_add(1, Ordering::Relaxed);
+                // refresh the tenant gauges with this die's post-refit
+                // scores (DESIGN.md §14) — MODELS/STATS must not keep
+                // reporting registration-time numbers for re-solved
+                // heads. Only existing gauges update: a tenant
+                // unregistered mid-refit must not resurrect.
+                for (name, score) in &tenant_scores {
+                    if let Some(m) = self.metrics.tenant_handle(name) {
+                        m.set_score(*score);
+                    }
+                }
                 self.note(format!(
-                    "tick {t}: die {die} recalibrated (probe err {:.3}), re-admitted",
-                    rep.err
+                    "tick {t}: die {die} recalibrated (probe err {:.3}, {} tenant \
+                     heads re-solved), re-admitted",
+                    rep.err,
+                    tenant_scores.len()
                 ));
             }
-            Ok(rep) => {
+            Ok((rep, _)) => {
                 self.quarantine(die, format!("post-refit probe err {:.3}", rep.err));
             }
             Err(e) => {

@@ -173,7 +173,7 @@ mod tests {
         let cfg = ChipConfig::default().with_dims(8, 24).with_b(10);
         let mut chip = ChipModel::fabricate(cfg.clone(), seed);
         // a head trained on nothing still probes: beta all-ones
-        let second = SecondStage::new(&vec![1.0; 24], 10, false);
+        let second = SecondStage::new(&[1.0; 24], 10, false);
         let xs: Vec<Vec<f64>> = (0..10)
             .map(|k| (0..8).map(|j| ((k + j) as f64 / 20.0) - 0.4).collect())
             .collect();
@@ -228,7 +228,7 @@ mod tests {
         let mk = || {
             ServeChip::new(ChipModel::fabricate(cfg.clone(), 31), 12, 24).unwrap()
         };
-        let second = SecondStage::new(&vec![1.0; 24], 10, false);
+        let second = SecondStage::new(&[1.0; 24], 10, false);
         let xs: Vec<Vec<f64>> = (0..6)
             .map(|k| (0..12).map(|j| ((k + j) as f64 / 24.0) - 0.3).collect())
             .collect();

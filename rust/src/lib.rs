@@ -5,7 +5,9 @@
 //! stack: a behavioural model of the mixed-signal chip ([`chip`]), the
 //! ELM algorithm layer ([`elm`]), the Section V dimension-extension
 //! technique ([`extension`]), a PJRT runtime executing the AOT-compiled
-//! JAX model ([`runtime`]) and a serving coordinator ([`coordinator`]).
+//! JAX model ([`runtime`]), a serving coordinator ([`coordinator`])
+//! and a multi-tenant model registry ([`registry`]) that lets many
+//! workloads share one die fleet's hidden layer.
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured record.
 
@@ -19,6 +21,7 @@ pub mod dse;
 pub mod elm;
 pub mod extension;
 pub mod fleet;
+pub mod registry;
 pub mod runtime;
 pub mod testing;
 pub mod util;

@@ -34,9 +34,13 @@ fn usage() -> &'static str {
        classify --dataset NAME [--l N] [--normalize] train + test error (Table II)\n\
        serve [--addr HOST:PORT] [--dataset NAME] [--chips N]\n\
              [--point FILE] [--phys-d K] [--phys-l N] [--virtual-l L]\n\
+             [--geoms K1xL1,K2xL2,...] [--tenant NAME=DATASET ...]\n\
                                                      TCP front end (tuned point via FILE;\n\
                                                      virtual dies via --phys-d/--phys-l/\n\
-                                                     --virtual-l)\n\
+                                                     --virtual-l; heterogeneous per-die\n\
+                                                     geometries via --geoms; extra models\n\
+                                                     on the same fleet via repeatable\n\
+                                                     --tenant, or REGISTER at runtime)\n\
        sweep --what ratio|beta-bits|counter-bits     quick design-space sweep (Fig. 7)\n\
        tune [--dataset NAME] [--rounds N] [--trials N] [--l LIST] [--b LIST]\n\
             [--batch LIST] [--weights E,J,T,X] [--out FILE]\n\
@@ -48,6 +52,7 @@ fn usage() -> &'static str {
      Common options: --b BITS (counter), --sigma-vt MV, --vdd V, --lambda F\n"
 }
 
+#[allow(clippy::field_reassign_with_default)] // getters are fallible; a struct literal can't `?` per field
 fn chip_cfg_from(args: &Args) -> Result<ChipConfig> {
     let mut cfg = ChipConfig::default();
     cfg.d = args.get_usize("d", cfg.d).map_err(anyhow::Error::msg)?;
@@ -160,6 +165,7 @@ fn cmd_classify(args: &Args, train_only: bool) -> Result<()> {
     Ok(())
 }
 
+#[allow(clippy::field_reassign_with_default)] // getters are fallible; a struct literal can't `?` per field
 fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7177");
     let name = args.get_or("dataset", "brightdata");
@@ -168,6 +174,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut sys = SystemConfig::default();
     sys.n_chips = args.get_usize("chips", sys.n_chips).map_err(anyhow::Error::msg)?;
     sys.artifact_dir = args.get_or("artifacts", &sys.artifact_dir);
+    // heterogeneous fleets (DESIGN.md §13): per-die fabricated geometry
+    if let Some(geoms) = args.get("geoms") {
+        sys.die_geoms = geoms
+            .split(',')
+            .map(|tok| {
+                let (k, l) = tok
+                    .trim()
+                    .split_once('x')
+                    .ok_or_else(|| anyhow::anyhow!("--geoms wants KxL pairs, got '{tok}'"))?;
+                Ok((
+                    k.trim().parse::<usize>().context("bad K in --geoms")?,
+                    l.trim().parse::<usize>().context("bad L in --geoms")?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+    }
     // `--point FILE` closes the tune -> serve loop: apply a serialized
     // `velm tune --out` operating point (chip config + batch size)
     let mut cfg = match args.get("point") {
@@ -249,6 +271,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     println!("training {} dies on {name} ...", sys.n_chips);
     let coord = Coordinator::start(&sys, &cfg, &ds.train_x, &ds.train_y, 0.1, 10)?;
+    // multi-tenant boot (DESIGN.md §14): `--tenant name=dataset`,
+    // repeatable — each installs another model on the same die fleet
+    for pair in args.get_all("tenant") {
+        let (tenant, dataset) = pair
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("--tenant wants name=dataset, got '{pair}'"))?;
+        let spec = velm::registry::TenantSpec::from_dataset(tenant, dataset, seed, coord.d)
+            .map_err(anyhow::Error::msg)?;
+        let task = spec.task;
+        let score = coord.register_tenant(spec)?;
+        println!(
+            "tenant {tenant} registered from {dataset} ({task}, mean train score {score:.4})"
+        );
+    }
     server::serve(Arc::new(coord), &addr)
 }
 
@@ -433,8 +469,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let mut cfg = chip_cfg_from(args)?;
     cfg.d = ds.d();
     cfg.b = args.get_usize("b", 10).map_err(anyhow::Error::msg)? as u32;
-    let mut sys = SystemConfig::default();
-    sys.n_chips = chips;
+    let mut sys = SystemConfig { n_chips: chips, ..Default::default() };
     sys.standby_chips = standby;
     sys.max_wait = std::time::Duration::from_millis(1);
 

@@ -1,0 +1,723 @@
+//! Multi-tenant model registry (DESIGN.md §14): one die fleet, many
+//! output heads.
+//!
+//! The paper's first stage — the σVT-mismatch random projection — is
+//! task-agnostic; only the trained second stage is task-specific
+//! (Section II; the same observation drives the shared random-feature
+//! arrays of arXiv:1512.07783 and the per-task second-stage retraining
+//! of arXiv:1509.07450). This module exploits that: every physical die
+//! keeps its one hidden-layer computation, and any number of *tenants*
+//! — (name, task, training set) triples — install their own output
+//! heads on top of it. Serving a new workload is a `REGISTER`, not a
+//! new fleet.
+//!
+//! Split of responsibility:
+//!   * [`TenantSpec`] — immutable description of one tenant (task kind,
+//!     training set, solver hyperparameters), shared as `Arc` between
+//!     the coordinator and every worker.
+//!   * [`TenantEntry`] — the per-die trained state: one quantised
+//!     [`SecondStage`] per output head plus the shared-P OS-ELM solver
+//!     ([`MultiOnlineElm`]) for incremental updates. Owned by the
+//!     worker thread that owns the die, so head resolution on the
+//!     serve path reads thread-local data — no lock, no atomics.
+//!   * [`ModelRegistry`] — the coordinator-side directory (name →
+//!     [`TenantInfo`]): spec, per-die train scores, per-tenant metrics.
+//!     Behind a mutex, but only on the cold path (register/unregister/
+//!     listing and the submit-side tenant lookup); workers never touch
+//!     it. Updates reach workers as control messages on the same
+//!     ordered channel as probes and refits.
+//!
+//! Training a tenant is chip-in-the-loop and *shared-H*: the tenant's
+//! training set is driven through the die once, and every head of that
+//! tenant (10 one-vs-all columns for a digits tenant, 1 for binary or
+//! regression) is solved from that single H via one Cholesky
+//! factorisation (`elm::train::solve_heads`) — the chip is never
+//! re-driven per head.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::coordinator::metrics::TenantMetrics;
+use crate::elm::online::MultiOnlineElm;
+use crate::elm::secondstage::SecondStage;
+use crate::extension::ServeChip;
+use crate::util::mat::Mat;
+
+/// What a tenant's head(s) compute from the shared hidden layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    /// `classes == 2`: one ±1 head, label = sign. `classes > 2`:
+    /// one-vs-all heads, label = argmax (Section II's "each output one
+    /// by one" extension).
+    Classification { classes: usize },
+    /// One head, raw score (rescaled to training units).
+    Regression,
+}
+
+impl Task {
+    /// Output heads this task solves over the shared H.
+    pub fn heads(&self) -> usize {
+        match *self {
+            Task::Classification { classes } => {
+                if classes <= 2 {
+                    1
+                } else {
+                    classes
+                }
+            }
+            Task::Regression => 1,
+        }
+    }
+
+    pub fn is_classification(&self) -> bool {
+        matches!(self, Task::Classification { .. })
+    }
+}
+
+impl std::fmt::Display for Task {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            Task::Classification { classes } => write!(f, "classification/{classes}"),
+            Task::Regression => write!(f, "regression"),
+        }
+    }
+}
+
+/// Immutable description of one tenant, shared (`Arc`) between the
+/// coordinator's registry and every worker's tenant table. Workers keep
+/// it so a die refit can re-solve *all* registered heads
+/// chip-in-the-loop without asking the coordinator for data.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    pub name: String,
+    pub task: Task,
+    /// Training features in [-1, 1]^d (d = the fleet's served dim).
+    pub xs: Vec<Vec<f64>>,
+    /// Targets, one column per head: ±1 for classification columns,
+    /// raw floats for regression.
+    pub targets: Mat,
+    pub lambda: f64,
+    pub beta_bits: u32,
+}
+
+impl TenantSpec {
+    /// Binary classification tenant (±1 targets).
+    pub fn classification(
+        name: &str,
+        xs: Vec<Vec<f64>>,
+        ys: &[f64],
+        lambda: f64,
+        beta_bits: u32,
+    ) -> Result<Self, String> {
+        if ys.iter().any(|&y| (y - 1.0).abs() > 1e-9 && (y + 1.0).abs() > 1e-9) {
+            return Err(format!("tenant {name}: binary targets must be ±1"));
+        }
+        let targets = Mat { rows: ys.len(), cols: 1, data: ys.to_vec() };
+        let spec = TenantSpec {
+            name: name.to_string(),
+            task: Task::Classification { classes: 2 },
+            xs,
+            targets,
+            lambda,
+            beta_bits,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Multi-class tenant: `classes` one-vs-all heads over one H.
+    pub fn multiclass(
+        name: &str,
+        xs: Vec<Vec<f64>>,
+        labels: &[usize],
+        classes: usize,
+        lambda: f64,
+        beta_bits: u32,
+    ) -> Result<Self, String> {
+        if classes < 3 || classes > 127 {
+            return Err(format!(
+                "tenant {name}: {classes} classes out of range 3..=127 \
+                 (use TenantSpec::classification for binary tasks)"
+            ));
+        }
+        if let Some(&bad) = labels.iter().find(|&&c| c >= classes) {
+            return Err(format!("tenant {name}: label {bad} out of range for {classes} classes"));
+        }
+        let targets = Mat::from_fn(labels.len(), classes, |i, c| {
+            if labels[i] == c {
+                1.0
+            } else {
+                -1.0
+            }
+        });
+        let spec = TenantSpec {
+            name: name.to_string(),
+            task: Task::Classification { classes },
+            xs,
+            targets,
+            lambda,
+            beta_bits,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Regression tenant (raw float targets).
+    pub fn regression(
+        name: &str,
+        xs: Vec<Vec<f64>>,
+        ys: &[f64],
+        lambda: f64,
+        beta_bits: u32,
+    ) -> Result<Self, String> {
+        let targets = Mat { rows: ys.len(), cols: 1, data: ys.to_vec() };
+        let spec = TenantSpec {
+            name: name.to_string(),
+            task: Task::Regression,
+            xs,
+            targets,
+            lambda,
+            beta_bits,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Build a tenant from a named dataset — the `REGISTER` command and
+    /// `velm serve --tenant` surface. `expect_d` is the fleet's served
+    /// input dimension; a mismatched dataset is refused here, before
+    /// any chip time is spent.
+    ///
+    /// Names: `digits` (10-class images), `digits-binary` (digit < 5),
+    /// `brightness` (regression: mean pixel intensity of digit images —
+    /// a second task over the *same* feature space as `digits`), `sinc`
+    /// (regression), plus every other `datasets::synth::by_name` set as
+    /// binary classification.
+    pub fn from_dataset(
+        tenant: &str,
+        dataset: &str,
+        seed: u64,
+        expect_d: usize,
+    ) -> Result<Self, String> {
+        let (spec, d) = match dataset {
+            "digits" => {
+                let (ds, labels, _) = crate::datasets::digits::digits(400, 1, seed);
+                let d = ds.d();
+                (
+                    TenantSpec::multiclass(tenant, ds.train_x, &labels, 10, 1e-2, 10)?,
+                    d,
+                )
+            }
+            "digits-binary" => {
+                let (ds, labels, _) = crate::datasets::digits::digits(400, 1, seed);
+                let d = ds.d();
+                let ys: Vec<f64> =
+                    labels.iter().map(|&c| if c < 5 { 1.0 } else { -1.0 }).collect();
+                (
+                    TenantSpec::classification(tenant, ds.train_x, &ys, 1e-2, 10)?,
+                    d,
+                )
+            }
+            "brightness" => {
+                let (ds, _, _) = crate::datasets::digits::digits(400, 1, seed ^ 0xB516);
+                let d = ds.d();
+                let ys: Vec<f64> = ds
+                    .train_x
+                    .iter()
+                    .map(|x| x.iter().sum::<f64>() / x.len() as f64)
+                    .collect();
+                (
+                    TenantSpec::regression(tenant, ds.train_x, &ys, 1e-2, 10)?,
+                    d,
+                )
+            }
+            "sinc" => {
+                let ds = crate::datasets::synth::by_name("sinc", seed)
+                    .expect("sinc is a named dataset");
+                let d = ds.d();
+                (
+                    TenantSpec::regression(tenant, ds.train_x, &ds.train_y, 1e-2, 10)?,
+                    d,
+                )
+            }
+            other => {
+                let ds = crate::datasets::synth::by_name(other, seed)
+                    .ok_or_else(|| format!("unknown dataset {other}"))?;
+                let d = ds.d();
+                (
+                    TenantSpec::classification(tenant, ds.train_x, &ds.train_y, 1e-2, 10)?,
+                    d,
+                )
+            }
+        };
+        if d != expect_d {
+            return Err(format!(
+                "dataset {dataset} has dimension {d}, fleet serves {expect_d}"
+            ));
+        }
+        Ok(spec)
+    }
+
+    /// Internal consistency: non-empty, rectangular, targets aligned.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.xs.is_empty() {
+            return Err(format!("tenant {}: empty training set", self.name));
+        }
+        let d = self.xs[0].len();
+        if self.xs.iter().any(|x| x.len() != d) {
+            return Err(format!("tenant {}: ragged training set", self.name));
+        }
+        if self.targets.rows != self.xs.len() {
+            return Err(format!(
+                "tenant {}: {} samples but {} target rows",
+                self.name,
+                self.xs.len(),
+                self.targets.rows
+            ));
+        }
+        if self.targets.cols != self.task.heads() {
+            return Err(format!(
+                "tenant {}: task {} wants {} target columns, got {}",
+                self.name,
+                self.task,
+                self.task.heads(),
+                self.targets.cols
+            ));
+        }
+        if let Task::Classification { classes } = self.task {
+            if classes > 127 {
+                return Err(format!("tenant {}: {classes} classes exceed the i8 label", self.name));
+            }
+        }
+        Ok(())
+    }
+
+    /// Input dimension the tenant's requests must carry.
+    pub fn d(&self) -> usize {
+        self.xs.first().map_or(0, |x| x.len())
+    }
+
+    /// Train-set score of predictions `p_i = rls.predict(h_i)` against
+    /// this spec's targets: error rate for classification, RMSE for
+    /// regression (lower is better for both).
+    pub fn score_predictions(&self, h: &Mat, rls: &MultiOnlineElm) -> f64 {
+        let n = h.rows.max(1);
+        match self.task {
+            Task::Regression => {
+                let mut acc = 0.0;
+                for i in 0..h.rows {
+                    let p = rls.predict_head(h.row(i), 0);
+                    let d = p - self.targets.get(i, 0);
+                    acc += d * d;
+                }
+                (acc / n as f64).sqrt()
+            }
+            Task::Classification { classes } if classes <= 2 => {
+                let mut wrong = 0usize;
+                for i in 0..h.rows {
+                    let p = rls.predict_head(h.row(i), 0);
+                    if (p.signum() - self.targets.get(i, 0).signum()).abs() > 1e-9 {
+                        wrong += 1;
+                    }
+                }
+                wrong as f64 / n as f64
+            }
+            Task::Classification { .. } => {
+                let mut wrong = 0usize;
+                for i in 0..h.rows {
+                    let p = rls.predict(h.row(i));
+                    let pred = argmax(&p);
+                    let truth = argmax(self.targets.row(i));
+                    if pred != truth {
+                        wrong += 1;
+                    }
+                }
+                wrong as f64 / n as f64
+            }
+        }
+    }
+}
+
+fn argmax(v: &[f64]) -> usize {
+    let mut best = (0usize, f64::NEG_INFINITY);
+    for (i, &x) in v.iter().enumerate() {
+        if x > best.1 {
+            best = (i, x);
+        }
+    }
+    best.0
+}
+
+/// Per-die trained state for one tenant, owned by the worker thread
+/// that owns the die (lock-free head resolution on the serve path).
+pub struct TenantEntry {
+    pub spec: Arc<TenantSpec>,
+    /// One quantised second stage per head, rebuilt from `rls.betas`
+    /// after every solve or OS-ELM update.
+    pub heads: Vec<SecondStage>,
+    /// Shared-P recursive solver: OS-ELM updates stream labelled
+    /// samples into all heads at O(L²) per sample, one P for the lot.
+    pub rls: MultiOnlineElm,
+}
+
+impl TenantEntry {
+    /// Re-quantise the deployed heads from the float RLS state.
+    pub fn rebuild_heads(&mut self, normalize: bool) {
+        self.heads = self
+            .rls
+            .betas
+            .iter()
+            .map(|b| SecondStage::new(b, self.spec.beta_bits, normalize))
+            .collect();
+    }
+
+    /// Score one served row of raw counter outputs. `scale` is the
+    /// counter-cap activation scaling (1/2^b) that training applied to
+    /// H, so returned scores are in training units — sign and argmax
+    /// are invariant, and regression outputs land in target units.
+    pub fn score_row(&self, h: &[u32], codes_sum: f64, scale: f64) -> (i8, f64) {
+        match self.spec.task {
+            Task::Regression => {
+                let s = self.heads[0].score(h, codes_sum) * scale;
+                (0, s)
+            }
+            Task::Classification { classes } if classes <= 2 => {
+                let s = self.heads[0].score(h, codes_sum) * scale;
+                (if s >= 0.0 { 1 } else { -1 }, s)
+            }
+            Task::Classification { .. } => {
+                let mut best = (0usize, f64::NEG_INFINITY);
+                for (c, head) in self.heads.iter().enumerate() {
+                    let s = head.score(h, codes_sum);
+                    if s > best.1 {
+                        best = (c, s);
+                    }
+                }
+                (best.0 as i8, best.1 * scale)
+            }
+        }
+    }
+
+    /// OS-ELM incremental update: absorb one (hidden row, target row)
+    /// pair into every head and redeploy the quantised stages.
+    pub fn absorb(&mut self, h_row: &[f64], targets: &[f64]) -> Result<(), String> {
+        if targets.len() != self.rls.betas.len() {
+            return Err(format!(
+                "tenant {}: update carries {} targets, task has {} heads",
+                self.spec.name,
+                targets.len(),
+                self.rls.betas.len()
+            ));
+        }
+        let normalize = self.heads.first().is_some_and(|h| h.normalize);
+        self.rls.update(h_row, targets);
+        self.rebuild_heads(normalize);
+        Ok(())
+    }
+}
+
+/// Chip-in-the-loop tenant training on one die: drive the tenant's
+/// training set through the die **once** (through the rotation plan on
+/// a virtual die), then solve every head of the tenant from that single
+/// H via the shared-P batch init of [`MultiOnlineElm`] — one Cholesky,
+/// no per-head chip passes. Returns the trained entry plus its
+/// train-set score (error rate / RMSE) on this die.
+pub fn fit_on_die(
+    die: &mut ServeChip,
+    normalize: bool,
+    spec: &Arc<TenantSpec>,
+) -> Result<(TenantEntry, f64), String> {
+    spec.validate()?;
+    if spec.d() != die.input_dim() {
+        return Err(format!(
+            "tenant {}: training dimension {} != served dimension {}",
+            spec.name,
+            spec.d(),
+            die.input_dim()
+        ));
+    }
+    let rows: Vec<Vec<f64>> = spec
+        .xs
+        .iter()
+        .map(|x| {
+            die.assemble_row(x, normalize)
+                .map_err(|e| format!("tenant {}: {e}", spec.name))
+        })
+        .collect::<Result<_, String>>()?;
+    let h = Mat::from_rows(&rows);
+    let rls = MultiOnlineElm::from_batch(&h, &spec.targets, spec.lambda)?;
+    let score = spec.score_predictions(&h, &rls);
+    let mut entry = TenantEntry { spec: Arc::clone(spec), heads: Vec::new(), rls };
+    entry.rebuild_heads(normalize);
+    Ok((entry, score))
+}
+
+/// Coordinator-side record of a registered tenant.
+pub struct TenantInfo {
+    pub spec: Arc<TenantSpec>,
+    /// The name as a cheap shared tag for request routing.
+    pub tag: Arc<str>,
+    /// Chip-in-the-loop train score per die (error rate / RMSE).
+    pub die_scores: Vec<f64>,
+    pub metrics: Arc<TenantMetrics>,
+}
+
+/// The coordinator's tenant directory. Cold path only: workers resolve
+/// heads from their own tables; this map backs REGISTER / UNREGISTER /
+/// MODELS and the submit-side tenant lookup.
+#[derive(Default)]
+pub struct ModelRegistry {
+    tenants: BTreeMap<String, TenantInfo>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        ModelRegistry::default()
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.tenants.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&TenantInfo> {
+        self.tenants.get(name)
+    }
+
+    pub fn insert(&mut self, info: TenantInfo) {
+        self.tenants.insert(info.spec.name.clone(), info);
+    }
+
+    pub fn remove(&mut self, name: &str) -> Option<TenantInfo> {
+        self.tenants.remove(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &TenantInfo)> {
+        self.tenants.iter()
+    }
+
+    /// One-line listing for the `MODELS` command. The train score is
+    /// the live gauge from [`TenantMetrics`]: the across-dies mean at
+    /// registration, refreshed with post-refit scores when drift
+    /// recovery re-solves the heads (`die_scores` keeps the per-die
+    /// registration-time values).
+    pub fn listing(&self) -> String {
+        self.tenants
+            .values()
+            .map(|info| {
+                format!(
+                    "{} task={} heads={} dies={} train_score={:.4}",
+                    info.spec.name,
+                    info.spec.task,
+                    info.spec.task.heads(),
+                    info.die_scores.len(),
+                    info.metrics.score()
+                )
+            })
+            .collect::<Vec<_>>()
+            .join("; ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chip::ChipModel;
+    use crate::config::ChipConfig;
+    use crate::util::prng::Prng;
+
+    fn die(seed: u64, d: usize, l: usize) -> ServeChip {
+        let cfg = ChipConfig::default().with_dims(d, l).with_b(10);
+        ServeChip::physical(ChipModel::fabricate(cfg, seed))
+    }
+
+    fn blobs(seed: u64, n: usize, d: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Prng::new(seed);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..n {
+            let y = if rng.bool(0.5) { 1.0 } else { -1.0 };
+            xs.push(
+                (0..d)
+                    .map(|_| (0.4 * y + rng.normal(0.0, 0.15)).clamp(-1.0, 1.0))
+                    .collect::<Vec<f64>>(),
+            );
+            ys.push(y);
+        }
+        (xs, ys)
+    }
+
+    #[test]
+    fn task_head_counts() {
+        assert_eq!(Task::Classification { classes: 2 }.heads(), 1);
+        assert_eq!(Task::Classification { classes: 10 }.heads(), 10);
+        assert_eq!(Task::Regression.heads(), 1);
+        assert_eq!(Task::Regression.to_string(), "regression");
+        assert_eq!(
+            Task::Classification { classes: 10 }.to_string(),
+            "classification/10"
+        );
+    }
+
+    #[test]
+    fn spec_validation_catches_shape_bugs() {
+        let (xs, ys) = blobs(1, 20, 4);
+        assert!(TenantSpec::classification("t", xs.clone(), &ys, 1e-2, 10).is_ok());
+        // non-±1 binary targets
+        assert!(TenantSpec::classification("t", xs.clone(), &[0.5; 20], 1e-2, 10).is_err());
+        // bad label range
+        let labels = vec![3usize; 20];
+        assert!(TenantSpec::multiclass("t", xs.clone(), &labels, 3, 1e-2, 10).is_err());
+        // empty training set
+        assert!(TenantSpec::regression("t", vec![], &[], 1e-2, 10).is_err());
+        // ragged rows
+        let mut ragged = xs;
+        ragged[3] = vec![0.0; 7];
+        assert!(TenantSpec::classification("t", ragged, &ys, 1e-2, 10).is_err());
+    }
+
+    #[test]
+    fn binary_tenant_fits_and_scores_on_a_die() {
+        let mut d = die(3, 6, 48);
+        let (xs, ys) = blobs(4, 160, 6);
+        let spec =
+            Arc::new(TenantSpec::classification("blobs", xs.clone(), &ys, 1e-2, 10).unwrap());
+        let (entry, score) = fit_on_die(&mut d, false, &spec).unwrap();
+        assert!(score < 0.1, "train err {score}");
+        assert_eq!(entry.heads.len(), 1);
+        // served path agrees with training labels on most samples
+        let cfg = d.chip().cfg.clone();
+        let scale = 1.0 / cfg.cap() as f64;
+        let mut correct = 0;
+        for (x, &y) in xs.iter().zip(&ys) {
+            let codes = crate::chip::dac::features_to_codes(x, &cfg);
+            let h = d.forward(&codes).unwrap();
+            let (label, _) =
+                entry.score_row(&h, crate::elm::secondstage::codes_sum(&codes), scale);
+            if (label as f64 - y).abs() < 1e-9 {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 140, "served path agrees on {correct}/160");
+    }
+
+    #[test]
+    fn multiclass_tenant_shares_one_h_across_heads() {
+        let mut d = die(5, 6, 64);
+        let mut rng = Prng::new(6);
+        // three gaussian blobs at distinct centers
+        let centers = [[0.5, 0.5], [-0.5, 0.5], [0.0, -0.6]];
+        let mut xs = Vec::new();
+        let mut labels = Vec::new();
+        for _ in 0..180 {
+            let c = rng.usize(3);
+            let mut x = vec![0.0; 6];
+            x[0] = (centers[c][0] + rng.normal(0.0, 0.12)).clamp(-1.0, 1.0);
+            x[1] = (centers[c][1] + rng.normal(0.0, 0.12)).clamp(-1.0, 1.0);
+            xs.push(x);
+            labels.push(c);
+        }
+        let spec =
+            Arc::new(TenantSpec::multiclass("tri", xs, &labels, 3, 1e-2, 10).unwrap());
+        let conv_before = d.chip().ledger.conversions;
+        let (entry, score) = fit_on_die(&mut d, false, &spec).unwrap();
+        // shared H: exactly one conversion per training sample, not per head
+        assert_eq!(d.chip().ledger.conversions - conv_before, 180);
+        assert_eq!(entry.heads.len(), 3);
+        assert!(score < 0.15, "train err {score}");
+    }
+
+    #[test]
+    fn regression_tenant_scores_in_target_units() {
+        let mut d = die(7, 4, 64);
+        let mut rng = Prng::new(8);
+        let xs: Vec<Vec<f64>> =
+            (0..150).map(|_| (0..4).map(|_| rng.range(-1.0, 1.0)).collect()).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 0.5 * x[0] + 0.3 * x[1] * x[2]).collect();
+        let spec = Arc::new(TenantSpec::regression("lin", xs.clone(), &ys, 1e-3, 12).unwrap());
+        let (entry, rmse) = fit_on_die(&mut d, false, &spec).unwrap();
+        assert!(rmse < 0.15, "train rmse {rmse}");
+        // serve-path scores land near the raw targets (same units)
+        let cfg = d.chip().cfg.clone();
+        let scale = 1.0 / cfg.cap() as f64;
+        let mut acc = 0.0;
+        for (x, &y) in xs.iter().zip(&ys) {
+            let codes = crate::chip::dac::features_to_codes(x, &cfg);
+            let h = d.forward(&codes).unwrap();
+            let (label, s) =
+                entry.score_row(&h, crate::elm::secondstage::codes_sum(&codes), scale);
+            assert_eq!(label, 0, "regression label is 0");
+            acc += (s - y) * (s - y);
+        }
+        let served_rmse = (acc / xs.len() as f64).sqrt();
+        assert!(served_rmse < 0.25, "served rmse {served_rmse}");
+    }
+
+    #[test]
+    fn dimension_mismatch_is_refused_before_chip_time() {
+        let mut d = die(9, 6, 24);
+        let (xs, ys) = blobs(10, 30, 4); // d=4 against a 6-wide die
+        let spec = Arc::new(TenantSpec::classification("bad", xs, &ys, 1e-2, 10).unwrap());
+        let before = d.chip().ledger.conversions;
+        assert!(fit_on_die(&mut d, false, &spec).is_err());
+        assert_eq!(d.chip().ledger.conversions, before);
+    }
+
+    #[test]
+    fn from_dataset_checks_dimensions_and_names() {
+        assert!(TenantSpec::from_dataset("t", "nosuchset", 1, 8).is_err());
+        // digits is 64-wide; a mismatched fleet dimension is refused
+        assert!(TenantSpec::from_dataset("t", "digits", 1, 8).is_err());
+        let spec = TenantSpec::from_dataset("t", "digits", 1, 64).unwrap();
+        assert_eq!(spec.task, Task::Classification { classes: 10 });
+        assert_eq!(spec.d(), 64);
+        let b = TenantSpec::from_dataset("b", "brightness", 1, 64).unwrap();
+        assert_eq!(b.task, Task::Regression);
+        // brightness targets really are the mean pixel intensity
+        for (x, i) in b.xs.iter().zip(0..b.targets.rows) {
+            let mean = x.iter().sum::<f64>() / x.len() as f64;
+            assert!((b.targets.get(i, 0) - mean).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn registry_directory_roundtrip() {
+        let mut reg = ModelRegistry::new();
+        assert!(reg.is_empty());
+        let (xs, ys) = blobs(11, 10, 4);
+        let spec = Arc::new(TenantSpec::classification("alpha", xs, &ys, 1e-2, 10).unwrap());
+        let metrics = Arc::new(TenantMetrics::default());
+        metrics.set_score(0.06);
+        reg.insert(TenantInfo {
+            spec: Arc::clone(&spec),
+            tag: Arc::from("alpha"),
+            die_scores: vec![0.05, 0.07],
+            metrics,
+        });
+        assert!(reg.contains("alpha"));
+        assert_eq!(reg.len(), 1);
+        let listing = reg.listing();
+        assert!(listing.contains("alpha"), "{listing}");
+        assert!(listing.contains("classification/2"), "{listing}");
+        assert!(listing.contains("train_score=0.0600"), "{listing}");
+        assert!(reg.remove("alpha").is_some());
+        assert!(!reg.contains("alpha"));
+    }
+
+    #[test]
+    fn absorb_rejects_wrong_target_arity() {
+        let mut d = die(12, 4, 16);
+        let (xs, ys) = blobs(13, 40, 4);
+        let spec = Arc::new(TenantSpec::classification("t", xs, &ys, 1e-2, 10).unwrap());
+        let (mut entry, _) = fit_on_die(&mut d, false, &spec).unwrap();
+        assert!(entry.absorb(&[0.1; 16], &[1.0, -1.0]).is_err());
+        assert!(entry.absorb(&[0.1; 16], &[1.0]).is_ok());
+    }
+}

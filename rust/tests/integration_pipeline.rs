@@ -164,5 +164,5 @@ fn chip_hidden_layer_trait_dims() {
     let mut hidden = ChipHidden::new(ChipModel::fabricate(cfg, 16));
     assert_eq!(hidden.input_dim(), 10);
     assert_eq!(hidden.hidden_dim(), 20);
-    assert_eq!(hidden.transform(&vec![0.5; 10]).len(), 20);
+    assert_eq!(hidden.transform(&[0.5; 10]).len(), 20);
 }

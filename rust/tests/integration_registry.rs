@@ -1,0 +1,277 @@
+//! Integration: the multi-tenant model registry (DESIGN.md §14) — two
+//! tenants (10-class digits + brightness regression) served
+//! concurrently from ONE die fleet over TCP, per-tenant scores matching
+//! their single-tenant baselines exactly, tenant isolation under
+//! unregister, and a post-drift refit restoring every tenant's heads.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use velm::config::{ChipConfig, SystemConfig};
+use velm::coordinator::{server, Coordinator};
+use velm::datasets::digits::digits;
+use velm::fleet::DieState;
+use velm::registry::TenantSpec;
+
+const D: usize = 64; // 8x8 digit images
+const L: usize = 96;
+
+/// Boot a fleet on the binary "digit < 5" task over the digit images —
+/// the default tenant every other model shares dies with.
+fn boot(n_chips: usize) -> Coordinator {
+    let (ds, labels, _) = digits(240, 1, 5);
+    let ys: Vec<f64> = labels.iter().map(|&c| if c < 5 { 1.0 } else { -1.0 }).collect();
+    let cfg = ChipConfig::default().with_dims(D, L).with_b(10);
+    let sys = SystemConfig {
+        n_chips,
+        artifact_dir: "/nonexistent".into(),
+        max_wait: std::time::Duration::from_millis(1),
+        seed: 0x7E41,
+        ..Default::default()
+    };
+    Coordinator::start(&sys, &cfg, &ds.train_x, &ys, 0.1, 10).expect("boot fleet")
+}
+
+/// A labelled digits evaluation set (same generator, disjoint seed).
+fn eval_digits(n: usize) -> (Vec<Vec<f64>>, Vec<usize>) {
+    let (ds, _, test_labels) = digits(1, n, 991);
+    (ds.test_x, test_labels)
+}
+
+#[test]
+fn tenant_scores_match_single_tenant_baselines_exactly() {
+    // one die (deterministic routing): a fleet serving BOTH tenants
+    // must answer each tenant bit-identically to a fleet serving only
+    // that tenant — same die seeds, same chip-in-the-loop solve, the
+    // other tenant's presence is invisible
+    let multi = boot(1);
+    multi
+        .register_tenant(TenantSpec::from_dataset("digits", "digits", 7, D).unwrap())
+        .unwrap();
+    multi
+        .register_tenant(TenantSpec::from_dataset("bright", "brightness", 7, D).unwrap())
+        .unwrap();
+
+    let solo_digits = boot(1);
+    solo_digits
+        .register_tenant(TenantSpec::from_dataset("digits", "digits", 7, D).unwrap())
+        .unwrap();
+    let solo_bright = boot(1);
+    solo_bright
+        .register_tenant(TenantSpec::from_dataset("bright", "brightness", 7, D).unwrap())
+        .unwrap();
+
+    let (eval_x, _) = eval_digits(25);
+    for x in &eval_x {
+        let m = multi.classify_tenant(Some("digits"), x.clone()).unwrap();
+        let s = solo_digits.classify_tenant(Some("digits"), x.clone()).unwrap();
+        assert_eq!(m.label, s.label, "digits label diverged under multi-tenancy");
+        assert!(
+            (m.score - s.score).abs() < 1e-9,
+            "digits score diverged: {} vs {}",
+            m.score,
+            s.score
+        );
+        let mb = multi.classify_tenant(Some("bright"), x.clone()).unwrap();
+        let sb = solo_bright.classify_tenant(Some("bright"), x.clone()).unwrap();
+        assert_eq!(mb.label, 0);
+        assert!(
+            (mb.score - sb.score).abs() < 1e-9,
+            "bright score diverged: {} vs {}",
+            mb.score,
+            sb.score
+        );
+    }
+
+    // tenant isolation: unregistering digits must not perturb bright
+    let before: Vec<f64> = eval_x
+        .iter()
+        .map(|x| multi.classify_tenant(Some("bright"), x.clone()).unwrap().score)
+        .collect();
+    multi.unregister_tenant("digits").unwrap();
+    for (x, &b) in eval_x.iter().zip(&before) {
+        let after = multi.classify_tenant(Some("bright"), x.clone()).unwrap().score;
+        assert!(
+            (after - b).abs() < 1e-12,
+            "unregistering digits perturbed bright: {b} -> {after}"
+        );
+    }
+    assert!(multi.classify_tenant(Some("digits"), eval_x[0].clone()).is_err());
+
+    multi.shutdown();
+    solo_digits.shutdown();
+    solo_bright.shutdown();
+}
+
+#[test]
+fn two_tenants_serve_concurrently_over_tcp_from_one_fleet() {
+    let coord = Arc::new(boot(2));
+    let (addr, srv) = server::serve_n(Arc::clone(&coord), 3).expect("serve");
+
+    // control connection: REGISTER both tenants through the protocol
+    let ctl = TcpStream::connect(addr).expect("connect");
+    let mut ctl_w = ctl.try_clone().unwrap();
+    let mut ctl_r = BufReader::new(ctl);
+    let mut line = String::new();
+    writeln!(ctl_w, "REGISTER digits digits 7").unwrap();
+    ctl_r.read_line(&mut line).unwrap();
+    assert!(line.starts_with("OK registered digits"), "{line}");
+    line.clear();
+    writeln!(ctl_w, "REGISTER bright brightness 7").unwrap();
+    ctl_r.read_line(&mut line).unwrap();
+    assert!(line.starts_with("OK registered bright"), "{line}");
+    line.clear();
+    writeln!(ctl_w, "MODELS").unwrap();
+    ctl_r.read_line(&mut line).unwrap();
+    assert!(line.contains("digits task=classification/10"), "{line}");
+    assert!(line.contains("bright task=regression"), "{line}");
+    line.clear();
+    // duplicate registration is a protocol error, not a panic
+    writeln!(ctl_w, "REGISTER digits digits 7").unwrap();
+    ctl_r.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR"), "{line}");
+
+    // two concurrent clients, one per tenant, hammering the same fleet
+    let digits_client = {
+        let (xs, labels) = eval_digits(40);
+        std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).expect("connect digits client");
+            let mut w = stream.try_clone().unwrap();
+            let mut r = BufReader::new(stream);
+            let mut correct = 0usize;
+            for (x, &label) in xs.iter().zip(&labels) {
+                let feats: Vec<String> = x.iter().map(|v| v.to_string()).collect();
+                writeln!(w, "PREDICT digits {}", feats.join(",")).unwrap();
+                let mut line = String::new();
+                r.read_line(&mut line).unwrap();
+                assert!(line.starts_with("OK "), "{line}");
+                let got: usize = line.split_whitespace().nth(1).unwrap().parse().unwrap();
+                assert!(got < 10, "class out of range: {line}");
+                if got == label {
+                    correct += 1;
+                }
+            }
+            writeln!(w, "QUIT").unwrap();
+            correct
+        })
+    };
+    let bright_client = {
+        let (xs, _) = eval_digits(40);
+        std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).expect("connect bright client");
+            let mut w = stream.try_clone().unwrap();
+            let mut r = BufReader::new(stream);
+            let mut acc = 0.0f64;
+            for x in &xs {
+                let target = x.iter().sum::<f64>() / x.len() as f64;
+                let feats: Vec<String> = x.iter().map(|v| v.to_string()).collect();
+                writeln!(w, "PREDICT bright {}", feats.join(",")).unwrap();
+                let mut line = String::new();
+                r.read_line(&mut line).unwrap();
+                assert!(line.starts_with("OK 0 "), "regression label must be 0: {line}");
+                let score: f64 = line.split_whitespace().nth(2).unwrap().parse().unwrap();
+                acc += (score - target) * (score - target);
+            }
+            writeln!(w, "QUIT").unwrap();
+            (acc / xs.len() as f64).sqrt()
+        })
+    };
+    let digit_correct = digits_client.join().unwrap();
+    let bright_rmse = bright_client.join().unwrap();
+    assert!(
+        digit_correct >= 20,
+        "10-class digits through the fleet: only {digit_correct}/40"
+    );
+    assert!(bright_rmse < 0.2, "brightness rmse {bright_rmse}");
+
+    // per-tenant metrics reached STATS, and both tenants really served
+    let report = coord.metrics.report();
+    assert!(report.contains("tenant[digits:"), "{report}");
+    assert!(report.contains("tenant[bright:"), "{report}");
+    let digits_metrics = coord
+        .metrics
+        .tenant_snapshot()
+        .into_iter()
+        .find(|(name, _)| name == "digits")
+        .expect("digits gauges")
+        .1;
+    assert_eq!(
+        digits_metrics
+            .responses
+            .load(std::sync::atomic::Ordering::Relaxed),
+        40
+    );
+
+    writeln!(ctl_w, "QUIT").unwrap();
+    srv.join();
+    match Arc::try_unwrap(coord) {
+        Ok(c) => c.shutdown(),
+        Err(_) => panic!("server threads still hold the coordinator"),
+    }
+}
+
+#[test]
+fn post_drift_refit_restores_every_tenant() {
+    let coord = boot(1);
+    coord
+        .register_tenant(TenantSpec::from_dataset("digits", "digits", 7, D).unwrap())
+        .unwrap();
+    coord
+        .register_tenant(TenantSpec::from_dataset("bright", "brightness", 7, D).unwrap())
+        .unwrap();
+    let (eval_x, eval_labels) = eval_digits(40);
+
+    let digit_err = |c: &Coordinator| -> f64 {
+        let mut wrong = 0usize;
+        for (x, &label) in eval_x.iter().zip(&eval_labels) {
+            let resp = c.classify_tenant(Some("digits"), x.clone()).unwrap();
+            if resp.label as usize != label {
+                wrong += 1;
+            }
+        }
+        wrong as f64 / eval_x.len() as f64
+    };
+    let bright_rmse = |c: &Coordinator| -> f64 {
+        let mut acc = 0.0;
+        for x in &eval_x {
+            let target = x.iter().sum::<f64>() / x.len() as f64;
+            let resp = c.classify_tenant(Some("bright"), x.clone()).unwrap();
+            acc += (resp.score - target) * (resp.score - target);
+        }
+        (acc / eval_x.len() as f64).sqrt()
+    };
+
+    let pre_err = digit_err(&coord);
+    let pre_rmse = bright_rmse(&coord);
+    assert!(pre_err < 0.5, "pre-drift digits err {pre_err}");
+    assert!(pre_rmse < 0.2, "pre-drift bright rmse {pre_rmse}");
+
+    // age the mismatch profile (Fig. 17/18-style) and walk the die
+    // through the drain -> recalibrate cycle; the refit re-solves the
+    // default head AND both tenants chip-in-the-loop
+    coord.inject_drift(Some(0), None, None, Some(0.015));
+    coord.drain_die(0).unwrap();
+    coord.fleet_tick(); // Draining -> Recalibrating
+    coord.fleet_tick(); // refit -> Healthy
+    assert_eq!(
+        coord.health_snapshot()[0],
+        DieState::Healthy,
+        "die not re-admitted: {}\n{}",
+        coord.fleet_status(),
+        coord.fleet_log().join("\n")
+    );
+    assert!(coord.metrics.refits.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+
+    let post_err = digit_err(&coord);
+    let post_rmse = bright_rmse(&coord);
+    assert!(
+        post_err <= pre_err + 0.15,
+        "digits not restored: pre {pre_err} post {post_err}"
+    );
+    assert!(
+        post_rmse <= pre_rmse * 2.0 + 0.05,
+        "bright not restored: pre {pre_rmse} post {post_rmse}"
+    );
+    coord.shutdown();
+}

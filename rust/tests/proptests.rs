@@ -136,6 +136,34 @@ fn prop_virtual_chip_deterministic_and_dimension_correct() {
 }
 
 #[test]
+fn prop_multi_head_solve_matches_independent_solves() {
+    // the registry's shared-H solver (one Cholesky, C heads) must be
+    // bit-equivalent to solving each head independently on the same H
+    check("multi-head-solve", 40, |rng| {
+        let n = 20 + rng.usize(30);
+        let l = 3 + rng.usize(8);
+        let c = 1 + rng.usize(4);
+        let h = Mat::from_fn(n, l, |_, _| rng.gaussian());
+        let t = Mat::from_fn(n, c, |_, _| rng.gaussian());
+        let lam = rng.range(1e-4, 1.0);
+        let many = velm::elm::train::solve_heads(&h, &t, lam)?;
+        ensure(many.len() == c, "wrong head count")?;
+        for (col, head) in many.iter().enumerate() {
+            let single = velm::elm::train::solve_head(&h, &t.col(col), lam)?;
+            for j in 0..l {
+                close(
+                    head.beta[j],
+                    single.beta[j],
+                    1e-9,
+                    &format!("head {col} beta {j}"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_ridge_residual_optimality() {
     // beta from ridge_solve must beat random perturbations of itself on
     // the regularised objective

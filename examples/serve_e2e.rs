@@ -1,28 +1,36 @@
 //! End-to-end serving driver (the DESIGN.md §8 pipeline, all layers
 //! composed): fabricate a multi-die system, train each die in the loop,
-//! bring up the TCP front end, fire concurrent client load through real
-//! sockets, and report accuracy + latency/throughput, comparing the
-//! PJRT-batched hot path against the scalar chip simulator.
+//! bring up the TCP front end, fire concurrent client load through the
+//! typed client SDK (DESIGN.md §15), and report accuracy +
+//! latency/throughput, comparing the PJRT-batched hot path against the
+//! scalar chip simulator.
 //!
 //!     make artifacts && cargo run --release --example serve_e2e
 //!
 //! Works without artifacts too (falls back to the chip simulator).
-//! Results are recorded in EXPERIMENTS.md §E2E.
+//! Clients speak the v1 framed protocol and ship `--batch`-row
+//! `BatchPredict` frames — one wire round-trip and ONE batcher
+//! submission per chunk, which is what lets the per-worker dynamic
+//! batcher amortise the hidden-layer pass. `--v0` switches every client
+//! to the ASCII line protocol (one round-trip per row) for an A/B of
+//! the two wire formats. Results are recorded in EXPERIMENTS.md §E2E.
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::TcpStream;
 use std::sync::Arc;
 use std::time::Instant;
 
 use velm::cli::Args;
+use velm::client::Client;
 use velm::config::{ChipConfig, SystemConfig};
 use velm::coordinator::{server, Coordinator};
 use velm::datasets::synth;
+use velm::protocol::PredictRow;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
     let n_requests = args.get_usize("requests", 2000).map_err(anyhow::Error::msg)?;
     let n_clients = args.get_usize("clients", 8).map_err(anyhow::Error::msg)?;
+    let batch = args.get_usize("batch", 25).map_err(anyhow::Error::msg)?.max(1);
+    let v0 = args.flag("v0");
     let ds = synth::brightdata(1);
     let mut chip_cfg = ChipConfig::default().with_b(10);
     chip_cfg.d = ds.d();
@@ -61,7 +69,11 @@ fn main() -> anyhow::Result<()> {
 
     // bring up the real TCP front end on an ephemeral port
     let (addr, srv) = server::serve_n(Arc::clone(&coord), n_clients)?;
-    println!("serving on {addr}; firing {n_requests} requests from {n_clients} clients");
+    println!(
+        "serving on {addr}; firing {n_requests} requests from {n_clients} clients \
+         ({} wire, {batch}-row batches)",
+        if v0 { "v0 line" } else { "v1 framed" }
+    );
 
     let t0 = Instant::now();
     let correct: usize = std::thread::scope(|s| {
@@ -70,30 +82,30 @@ fn main() -> anyhow::Result<()> {
             let test_x = &test_x;
             let test_y = &ds.test_y;
             handles.push(s.spawn(move || {
-                let stream = TcpStream::connect(addr).expect("connect");
-                stream.set_nodelay(true).expect("nodelay");
-                let mut writer = stream.try_clone().expect("clone");
-                let mut reader = BufReader::new(stream);
+                let mut client = if v0 {
+                    Client::connect_v0(addr).expect("connect v0")
+                } else {
+                    Client::connect(addr).expect("connect v1")
+                };
                 let mut correct = 0usize;
                 let per_client = n_requests / n_clients;
-                for k in 0..per_client {
-                    let idx = (c * per_client + k) % test_x.len();
-                    let line: Vec<String> =
-                        test_x[idx].iter().map(|v| format!("{v}")).collect();
-                    writeln!(writer, "CLASSIFY {}", line.join(",")).expect("write");
-                    let mut resp = String::new();
-                    reader.read_line(&mut resp).expect("read");
-                    let label: f64 = resp
-                        .trim()
-                        .split_whitespace()
-                        .nth(1)
-                        .and_then(|t| t.parse().ok())
-                        .unwrap_or(0.0);
-                    if (label - test_y[idx]).abs() < 1e-9 {
-                        correct += 1;
+                let idxs: Vec<usize> = (0..per_client)
+                    .map(|k| (c * per_client + k) % test_x.len())
+                    .collect();
+                for chunk in idxs.chunks(batch) {
+                    let rows: Vec<PredictRow> = chunk
+                        .iter()
+                        .map(|&i| PredictRow { tenant: None, features: test_x[i].clone() })
+                        .collect();
+                    // v1: one frame + one batcher submission per chunk;
+                    // v0: the SDK degrades to one round-trip per row
+                    let preds = client.predict_batch(&rows).expect("predict");
+                    for (p, &i) in preds.iter().zip(chunk) {
+                        if (p.label as f64 - test_y[i]).abs() < 1e-9 {
+                            correct += 1;
+                        }
                     }
                 }
-                writeln!(writer, "QUIT").ok();
                 correct
             }));
         }

@@ -87,6 +87,23 @@ impl Args {
         }
     }
 
+    /// Millisecond option returned as an optional `Duration`: absent
+    /// keeps `default`, `0` means "disabled" and maps to `None` — e.g.
+    /// `velm serve --read-timeout-ms 0`.
+    pub fn get_ms_opt(
+        &self,
+        name: &str,
+        default: Option<std::time::Duration>,
+    ) -> Result<Option<std::time::Duration>, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => {
+                let ms: u64 = v.parse().map_err(|e| format!("--{name}: {e}"))?;
+                Ok((ms > 0).then_some(std::time::Duration::from_millis(ms)))
+            }
+        }
+    }
+
     /// Comma-separated list option of any parseable type. `None` when
     /// the option is absent; parse errors name the option and token.
     pub fn get_list<T: std::str::FromStr>(&self, name: &str) -> Result<Option<Vec<T>>, String>
@@ -186,5 +203,20 @@ mod tests {
         let a = Args::parse(toks("cmd --a --b 5")).unwrap();
         assert!(a.flag("a"));
         assert_eq!(a.get("b"), Some("5"));
+    }
+
+    #[test]
+    fn ms_option_maps_zero_to_disabled() {
+        let dflt = Some(std::time::Duration::from_secs(2));
+        let a = Args::parse(toks("serve --read-timeout-ms 250")).unwrap();
+        assert_eq!(
+            a.get_ms_opt("read-timeout-ms", dflt).unwrap(),
+            Some(std::time::Duration::from_millis(250))
+        );
+        assert_eq!(a.get_ms_opt("missing", dflt).unwrap(), dflt);
+        let z = Args::parse(toks("serve --read-timeout-ms 0")).unwrap();
+        assert_eq!(z.get_ms_opt("read-timeout-ms", dflt).unwrap(), None);
+        let bad = Args::parse(toks("serve --read-timeout-ms abc")).unwrap();
+        assert!(bad.get_ms_opt("read-timeout-ms", dflt).is_err());
     }
 }

@@ -1,0 +1,205 @@
+//! Client SDK for the typed serving protocol (DESIGN.md §15).
+//!
+//! One [`Client`] type, three transports behind it:
+//!
+//!   * [`Client::connect`] — TCP speaking protocol **v1** (binary
+//!     frames; `predict_batch` is one round-trip for the whole batch);
+//!   * [`Client::connect_v0`] — TCP speaking protocol **v0** (the
+//!     ASCII line grammar; `predict_batch` degrades to one round-trip
+//!     per row because v0 has no batch frame);
+//!   * [`Client::in_process`] — no sockets at all: requests dispatch
+//!     straight into `Coordinator::handle`, the same entry point the
+//!     TCP front end uses, so in-process and wire callers provably
+//!     share one code path.
+//!
+//! The CLI (`velm client`), the examples and the integration tests all
+//! talk to the fleet through this type instead of hand-rolling socket
+//! strings.
+
+use std::io::BufReader;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::Coordinator;
+use crate::protocol::{Codec, FrameCodec, LineCodec, PredictRow, Prediction, Request, Response};
+
+/// A handle on one serving fleet, over TCP (v0 or v1) or in-process.
+pub struct Client {
+    transport: Transport,
+}
+
+enum Transport {
+    Wire {
+        reader: BufReader<TcpStream>,
+        writer: TcpStream,
+        codec: Box<dyn Codec>,
+    },
+    Local(Arc<Coordinator>),
+}
+
+impl Client {
+    /// Connect over TCP speaking protocol v1 (framed, batch-capable).
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Client> {
+        Client::connect_with(addr, Box::new(FrameCodec))
+    }
+
+    /// Connect over TCP speaking protocol v0 (the ASCII line grammar) —
+    /// for talking to pre-protocol servers, and for tests that pin the
+    /// two wire formats against each other.
+    pub fn connect_v0<A: ToSocketAddrs>(addr: A) -> Result<Client> {
+        Client::connect_with(addr, Box::new(LineCodec))
+    }
+
+    fn connect_with<A: ToSocketAddrs>(addr: A, codec: Box<dyn Codec>) -> Result<Client> {
+        let stream = TcpStream::connect(addr).context("connecting to the serving fleet")?;
+        let _ = stream.set_nodelay(true); // request/response pattern: defeat Nagle
+        let writer = stream.try_clone().context("cloning the client stream")?;
+        Ok(Client {
+            transport: Transport::Wire { reader: BufReader::new(stream), writer, codec },
+        })
+    }
+
+    /// Wrap an in-process coordinator — same typed dispatch, no sockets.
+    pub fn in_process(coord: Arc<Coordinator>) -> Client {
+        Client { transport: Transport::Local(coord) }
+    }
+
+    /// Wire protocol version: `Some(0)` / `Some(1)` over TCP, `None`
+    /// in-process (no wire involved).
+    pub fn wire_version(&self) -> Option<u8> {
+        match &self.transport {
+            Transport::Wire { codec, .. } => Some(codec.version()),
+            Transport::Local(_) => None,
+        }
+    }
+
+    /// One request/response exchange through whatever transport this
+    /// client wraps. All typed verbs below go through here.
+    pub fn call(&mut self, req: Request) -> Result<Response> {
+        match &mut self.transport {
+            Transport::Local(coord) => Ok(coord.handle(req)),
+            Transport::Wire { reader, writer, codec } => {
+                codec.write_request(writer, &req).context("sending the request")?;
+                codec
+                    .read_response(reader, &req)
+                    .context("reading the reply")?
+                    .context("server closed the connection")
+            }
+        }
+    }
+
+    /// Liveness probe.
+    pub fn ping(&mut self) -> Result<()> {
+        match self.call(Request::Ping)? {
+            Response::Pong => Ok(()),
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// Score one row through one tenant's head (`None` = default head).
+    pub fn predict(&mut self, tenant: Option<&str>, features: &[f64]) -> Result<Prediction> {
+        let req = Request::Predict {
+            tenant: tenant.map(str::to_string),
+            features: features.to_vec(),
+        };
+        match self.call(req)? {
+            Response::Predict(p) => Ok(p),
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// Score many rows, each addressed to its own tenant, preserving
+    /// row order. Over v1 and in-process this is ONE submission into
+    /// the batcher (one batch window, rows fanned to dies by the
+    /// router); over v0 it falls back to one round-trip per row.
+    /// An empty batch is refused on every transport (the v0 fallback
+    /// would otherwise vacuously succeed where v1 errors).
+    pub fn predict_batch(&mut self, rows: &[PredictRow]) -> Result<Vec<Prediction>> {
+        anyhow::ensure!(!rows.is_empty(), "empty batch");
+        if self.wire_version() == Some(0) {
+            return rows
+                .iter()
+                .map(|row| self.predict(row.tenant.as_deref(), &row.features))
+                .collect();
+        }
+        match self.call(Request::BatchPredict { rows: rows.to_vec() })? {
+            Response::Batch(ps) => Ok(ps),
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// Train + install a tenant fleet-wide from a named dataset.
+    /// Returns (task rendering, mean train score across dies).
+    pub fn register(&mut self, name: &str, dataset: &str, seed: u64) -> Result<(String, f64)> {
+        let req = Request::Register {
+            name: name.to_string(),
+            dataset: dataset.to_string(),
+            seed,
+        };
+        match self.call(req)? {
+            Response::Registered { task, score, .. } => Ok((task, score)),
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// Drop a tenant fleet-wide.
+    pub fn unregister(&mut self, name: &str) -> Result<()> {
+        match self.call(Request::Unregister { name: name.to_string() })? {
+            Response::Unregistered { .. } => Ok(()),
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// One-line metrics snapshot.
+    pub fn stats(&mut self) -> Result<String> {
+        match self.call(Request::Stats)? {
+            Response::Stats(s) => Ok(s),
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// Per-die lifecycle gauges + fleet counters.
+    pub fn health(&mut self) -> Result<String> {
+        match self.call(Request::Health)? {
+            Response::Health(s) => Ok(s),
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// Tenant directory one-liner.
+    pub fn models(&mut self) -> Result<String> {
+        match self.call(Request::Models)? {
+            Response::Models(s) => Ok(s),
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// Pull a die from rotation for recalibration.
+    pub fn drain(&mut self, die: usize) -> Result<()> {
+        match self.call(Request::Drain { die })? {
+            Response::Draining { .. } => Ok(()),
+            other => Err(unexpected(other)),
+        }
+    }
+}
+
+impl Drop for Client {
+    fn drop(&mut self) {
+        // best-effort clean close so the server's connection thread
+        // exits without waiting out its read timeout
+        if let Transport::Wire { writer, codec, .. } = &mut self.transport {
+            let _ = codec.write_quit(writer);
+        }
+    }
+}
+
+/// A reply of the wrong shape: a server-side `ERR` becomes the error
+/// message; anything else names the unexpected variant.
+fn unexpected(resp: Response) -> anyhow::Error {
+    match resp {
+        Response::Error(e) => anyhow::anyhow!("server error: {e}"),
+        other => anyhow::anyhow!("unexpected reply {other:?}"),
+    }
+}

@@ -357,6 +357,13 @@ pub struct SystemConfig {
     /// more rotation passes per request — the router and batcher price
     /// each die at its own pass cost.
     pub die_geoms: Vec<(usize, usize)>,
+    /// Per-connection TCP read timeout on the serving front end
+    /// (DESIGN.md §15): a client that goes idle or dies mid-connection
+    /// is disconnected after this long without a complete request, so
+    /// dead connections drain instead of pinning one thread each.
+    /// `None` disables the timeout (connections may pin threads
+    /// forever — tests and trusted local tooling only).
+    pub read_timeout: Option<std::time::Duration>,
     /// Fleet-health settings: probe cadence, drift thresholds,
     /// recovery/quarantine policy.
     pub fleet: crate::fleet::FleetConfig,
@@ -377,6 +384,7 @@ impl Default for SystemConfig {
             virtual_d: None,
             virtual_l: None,
             die_geoms: Vec::new(),
+            read_timeout: Some(std::time::Duration::from_secs(120)),
             fleet: crate::fleet::FleetConfig::default(),
         }
     }

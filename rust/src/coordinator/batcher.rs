@@ -198,6 +198,25 @@ mod tests {
     }
 
     #[test]
+    fn one_submissions_burst_coalesces_into_one_window() {
+        // the rows of one BatchPredict submission (DESIGN.md §15) are
+        // routed back-to-back before the worker's window closes: they
+        // must land in ONE batch — one hidden-layer pass for the whole
+        // submission — even when rows address different tenants
+        let (tx, rx) = mpsc::channel();
+        for i in 0..12 {
+            let tenant = if i % 2 == 0 { None } else { Some("slope") };
+            tx.send(tenant_req(i, tenant)).unwrap();
+        }
+        let b = collect_batch(&rx, 64, Duration::from_millis(20), 1).unwrap();
+        assert_eq!(b.requests.len(), 12, "burst split across windows");
+        assert_eq!(
+            b.requests.iter().map(|r| r.id).collect::<Vec<_>>(),
+            (0..12).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
     fn returns_none_when_closed() {
         let (tx, rx) = mpsc::channel::<WorkerMsg>();
         drop(tx);

@@ -58,6 +58,12 @@ impl TenantMetrics {
 #[derive(Default)]
 pub struct Metrics {
     pub requests: AtomicU64,
+    /// Client-facing submit events: a single predict ticks this once,
+    /// and a `BatchPredict` of B rows ALSO ticks it once (while
+    /// `requests` counts all B rows) — so `requests / submissions` is
+    /// the mean rows-per-submission, the protocol-level batching the
+    /// v1 wire buys (DESIGN.md §15).
+    pub submissions: AtomicU64,
     pub responses: AtomicU64,
     pub batches: AtomicU64,
     pub pjrt_batches: AtomicU64,
@@ -95,6 +101,11 @@ impl Metrics {
 
     pub fn record_request(&self) {
         self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One client-facing submit event (single or whole batch).
+    pub fn record_submission(&self) {
+        self.submissions.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn record_batch(&self, size: usize, pjrt: bool) {
@@ -212,10 +223,11 @@ impl Metrics {
             })
             .collect();
         format!(
-            "requests={} responses={} batches={} (pjrt={}, sim={}, mean size {:.1}) \
+            "requests={} submissions={} responses={} batches={} (pjrt={}, sim={}, mean size {:.1}) \
              conversions={} latency mean={:.0}us p50~{}us p99~{}us \
              fleet probes={} renorms={} refits={} quarantines={} promotions={}{tenants}",
             self.requests.load(Ordering::Relaxed),
+            self.submissions.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.pjrt_batches.load(Ordering::Relaxed),
@@ -243,10 +255,13 @@ mod tests {
         let m = Metrics::new();
         m.record_request();
         m.record_request();
+        m.record_submission();
         m.record_batch(2, true);
         m.record_response(Duration::from_micros(100));
         m.record_response(Duration::from_micros(200));
         assert_eq!(m.requests.load(Ordering::Relaxed), 2);
+        assert_eq!(m.submissions.load(Ordering::Relaxed), 1);
+        assert!(m.report().contains("submissions=1"), "{}", m.report());
         assert_eq!(m.responses.load(Ordering::Relaxed), 2);
         assert_eq!(m.pjrt_batches.load(Ordering::Relaxed), 1);
         assert!((m.mean_batch_size() - 2.0).abs() < 1e-12);

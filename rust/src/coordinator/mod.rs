@@ -44,6 +44,7 @@ use crate::extension::{ServeChip, ServeHidden};
 use crate::fleet::{
     DieState, DriftSchedule, FleetManager, FleetSetup, FleetState, ProbeSet,
 };
+use crate::protocol::{PredictRow, Request, Response};
 use crate::registry::{ModelRegistry, TenantInfo, TenantSpec};
 
 pub use metrics::Metrics;
@@ -81,6 +82,10 @@ pub struct Coordinator {
     registration_gate: Mutex<()>,
     /// Background prober (only when `fleet.probe_period` is set).
     auto_probe: Option<(Arc<AtomicBool>, JoinHandle<()>)>,
+    /// Per-connection TCP read timeout applied by the server front end
+    /// (`SystemConfig::read_timeout`): idle/dead clients drain instead
+    /// of pinning a connection thread each.
+    pub read_timeout: Option<std::time::Duration>,
 }
 
 impl Coordinator {
@@ -251,7 +256,59 @@ impl Coordinator {
             registry: Mutex::new(ModelRegistry::new()),
             registration_gate: Mutex::new(()),
             auto_probe,
+            read_timeout: sys.read_timeout,
         })
+    }
+
+    /// The one typed entry point every caller shares (DESIGN.md §15):
+    /// the TCP front end (both wire codecs), the in-process
+    /// [`crate::client::Client`] and library callers all dispatch
+    /// through here, so a request behaves identically no matter how it
+    /// arrived. Errors come back as [`Response::Error`] carrying the
+    /// full context chain — never as a panic or a dropped reply.
+    pub fn handle(&self, req: Request) -> Response {
+        match req {
+            Request::Ping => Response::Pong,
+            Request::Stats => Response::Stats(self.metrics.report()),
+            Request::Health => Response::Health(self.fleet_status()),
+            Request::Models => Response::Models(self.models()),
+            Request::Drain { die } => match self.drain_die(die) {
+                Ok(()) => Response::Draining { die },
+                Err(e) => Response::Error(format!("{e:#}")),
+            },
+            Request::Predict { tenant, features } => {
+                match self.classify_tenant(tenant.as_deref(), features) {
+                    Ok(resp) => Response::Predict(resp.to_prediction()),
+                    Err(e) => Response::Error(format!("{e:#}")),
+                }
+            }
+            Request::BatchPredict { rows } => match self.classify_batch(&rows) {
+                Ok(resps) => {
+                    Response::Batch(resps.iter().map(|r| r.to_prediction()).collect())
+                }
+                Err(e) => Response::Error(format!("{e:#}")),
+            },
+            Request::Register { name, dataset, seed } => {
+                match TenantSpec::from_dataset(&name, &dataset, seed, self.d) {
+                    Err(e) => Response::Error(e),
+                    Ok(spec) => {
+                        let task = spec.task;
+                        match self.register_tenant(spec) {
+                            Ok(score) => Response::Registered {
+                                name,
+                                task: task.to_string(),
+                                score,
+                            },
+                            Err(e) => Response::Error(format!("{e:#}")),
+                        }
+                    }
+                }
+            }
+            Request::Unregister { name } => match self.unregister_tenant(&name) {
+                Ok(()) => Response::Unregistered { name },
+                Err(e) => Response::Error(format!("{e:#}")),
+            },
+        }
     }
 
     /// Start serving at an autotuned [`OperatingPoint`]
@@ -320,11 +377,103 @@ impl Coordinator {
             submitted: Instant::now(),
             reply: tx,
         };
+        self.metrics.record_submission();
         self.metrics.record_request();
         self.router
             .route(req)
             .map_err(|e| anyhow::anyhow!("routing: {e}"))?;
         Ok(rx)
+    }
+
+    /// Submit many rows — each addressed to its own tenant — as ONE
+    /// submission (the v1 `BatchPredict` entry, DESIGN.md §15): one
+    /// `Metrics::submissions` tick for the whole batch, tenant tags
+    /// resolved once per distinct tenant, and every row routed by the
+    /// existing router so the batch fans across healthy dies and lands
+    /// in the per-worker batch windows together — B rows amortise the
+    /// hidden-layer pass instead of costing B independent round-trips.
+    ///
+    /// The batch is validated as a unit: a wrong-dimension row or an
+    /// unknown tenant fails the whole call before anything is routed.
+    /// After validation the only per-row failure left is the router
+    /// finding no healthy die (a drain/quarantine racing the loop);
+    /// that fails the call, and any rows already routed still execute
+    /// — their receivers are simply dropped with the error. Returns
+    /// one receiver per row, in row order.
+    pub fn submit_batch(
+        &self,
+        rows: &[PredictRow],
+    ) -> Result<Vec<mpsc::Receiver<ClassifyResponse>>> {
+        anyhow::ensure!(!rows.is_empty(), "empty batch");
+        for (i, row) in rows.iter().enumerate() {
+            anyhow::ensure!(
+                row.features.len() == self.d,
+                "batch row {i}: expected {} features, got {}",
+                self.d,
+                row.features.len()
+            );
+        }
+        // resolve each distinct tenant once, before any row is routed
+        let mut tags: std::collections::BTreeMap<&str, TenantTag> =
+            std::collections::BTreeMap::new();
+        {
+            let reg = self.registry.lock().unwrap();
+            for row in rows {
+                match row.tenant.as_deref() {
+                    None | Some("default") => {}
+                    Some(name) => {
+                        if let std::collections::btree_map::Entry::Vacant(slot) =
+                            tags.entry(name)
+                        {
+                            let info = reg.get(name).ok_or_else(|| {
+                                anyhow::anyhow!("unknown tenant {name} (REGISTER it first)")
+                            })?;
+                            slot.insert(TenantTag {
+                                name: Arc::clone(&info.tag),
+                                metrics: Arc::clone(&info.metrics),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        self.metrics.record_submission();
+        let mut rxs = Vec::with_capacity(rows.len());
+        for row in rows {
+            let tag = match row.tenant.as_deref() {
+                None | Some("default") => None,
+                Some(name) => Some(tags[name].clone()),
+            };
+            if let Some(t) = &tag {
+                t.metrics.record_request();
+            }
+            let (tx, rx) = mpsc::channel();
+            let req = ClassifyRequest {
+                id: self.next_id.fetch_add(1, Ordering::Relaxed),
+                features: row.features.clone(),
+                tenant: tag,
+                submitted: Instant::now(),
+                reply: tx,
+            };
+            self.metrics.record_request();
+            self.router
+                .route(req)
+                .map_err(|e| anyhow::anyhow!("routing: {e}"))?;
+            rxs.push(rx);
+        }
+        Ok(rxs)
+    }
+
+    /// Convenience: submit a batch and wait for every row, in order.
+    pub fn classify_batch(&self, rows: &[PredictRow]) -> Result<Vec<ClassifyResponse>> {
+        let rxs = self.submit_batch(rows)?;
+        rxs.into_iter()
+            .enumerate()
+            .map(|(i, rx)| {
+                rx.recv()
+                    .with_context(|| format!("batch row {i}: worker dropped the request"))
+            })
+            .collect()
     }
 
     /// Convenience: submit against the default head and wait.
@@ -614,6 +763,7 @@ mod tests {
             virtual_d: None,
             virtual_l: None,
             die_geoms: Vec::new(),
+            read_timeout: None,
             fleet: Default::default(),
         };
         let chip = ChipConfig::default()
@@ -694,6 +844,95 @@ mod tests {
         let (sys, chip, xs, ys) = tiny_system();
         let coord = Coordinator::start(&sys, &chip, &xs, &ys, 1e-2, 10).unwrap();
         assert!(coord.submit(vec![0.0; 3]).is_err());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn typed_dispatch_matches_the_direct_path() {
+        // Coordinator::handle is the one entry point the wire codecs
+        // and the in-process client share: its answers must be the
+        // direct API's answers, and errors must come back typed
+        let (mut sys, chip, xs, ys) = tiny_system();
+        sys.n_chips = 1; // one die -> deterministic scores across calls
+        let coord = Coordinator::start(&sys, &chip, &xs, &ys, 1e-2, 10).unwrap();
+        assert_eq!(coord.handle(Request::Ping), Response::Pong);
+        match coord.handle(Request::Predict { tenant: None, features: xs[0].clone() }) {
+            Response::Predict(p) => {
+                let direct = coord.classify(xs[0].clone()).unwrap();
+                assert_eq!(p.label, direct.label);
+                assert_eq!(p.score.to_bits(), direct.score.to_bits());
+                assert!(p.tenant.is_none());
+            }
+            other => panic!("predict dispatched to {other:?}"),
+        }
+        // wrong dimension and unknown tenant are typed errors
+        assert!(matches!(
+            coord.handle(Request::Predict { tenant: None, features: vec![0.0; 2] }),
+            Response::Error(_)
+        ));
+        assert!(matches!(
+            coord.handle(Request::Predict {
+                tenant: Some("nosuch".into()),
+                features: xs[0].clone()
+            }),
+            Response::Error(_)
+        ));
+        match coord.handle(Request::Stats) {
+            Response::Stats(s) => assert!(s.contains("requests="), "{s}"),
+            other => panic!("stats dispatched to {other:?}"),
+        }
+        match coord.handle(Request::Unregister { name: "nosuch".into() }) {
+            Response::Error(e) => assert!(e.contains("unknown tenant"), "{e}"),
+            other => panic!("unregister dispatched to {other:?}"),
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn batch_submission_is_one_submission_with_per_row_answers() {
+        let (mut sys, chip, xs, ys) = tiny_system();
+        sys.n_chips = 1; // one die -> deterministic scores across calls
+        let coord = Coordinator::start(&sys, &chip, &xs, &ys, 1e-2, 10).unwrap();
+        let reg_y = regression_targets(&xs);
+        coord
+            .register_tenant(
+                TenantSpec::regression("slope", xs.clone(), &reg_y, 1e-3, 12).unwrap(),
+            )
+            .unwrap();
+        let rows: Vec<PredictRow> = (0..10)
+            .map(|i| PredictRow {
+                tenant: if i % 2 == 0 { None } else { Some("slope".into()) },
+                features: xs[i].clone(),
+            })
+            .collect();
+        let subs0 = coord.metrics.submissions.load(Ordering::Relaxed);
+        let resps = coord.classify_batch(&rows).unwrap();
+        // ONE submission, ten rows, answers in row order with the
+        // right tenant's head applied per row
+        assert_eq!(coord.metrics.submissions.load(Ordering::Relaxed) - subs0, 1);
+        assert_eq!(resps.len(), 10);
+        for (i, resp) in resps.iter().enumerate() {
+            if i % 2 == 0 {
+                assert!(resp.tenant.is_none());
+                assert!(resp.label == 1 || resp.label == -1);
+            } else {
+                assert_eq!(resp.tenant.as_deref(), Some("slope"));
+                assert_eq!(resp.label, 0, "regression rows answer label 0");
+            }
+        }
+        // batch answers match single-row answers bit-exactly on a
+        // deterministic fleet
+        let single = coord.classify_tenant(Some("slope"), xs[1].clone()).unwrap();
+        assert_eq!(resps[1].score.to_bits(), single.score.to_bits());
+        // the whole batch is refused before routing when any row is bad
+        let bad = vec![
+            PredictRow { tenant: None, features: xs[0].clone() },
+            PredictRow { tenant: None, features: vec![0.0; 2] },
+        ];
+        assert!(coord.submit_batch(&bad).is_err());
+        let unknown = vec![PredictRow { tenant: Some("nosuch".into()), features: xs[0].clone() }];
+        assert!(coord.submit_batch(&unknown).is_err());
+        assert!(coord.submit_batch(&[]).is_err());
         coord.shutdown();
     }
 

@@ -151,6 +151,20 @@ pub struct ClassifyResponse {
     pub latency: std::time::Duration,
 }
 
+impl ClassifyResponse {
+    /// The protocol-facing view of this answer (DESIGN.md §15): label,
+    /// score and tenant — the fields every wire version carries.
+    /// Serving internals (worker, backend, passes, latency) stay on
+    /// this richer in-process type.
+    pub fn to_prediction(&self) -> crate::protocol::Prediction {
+        crate::protocol::Prediction {
+            label: self.label,
+            score: self.score,
+            tenant: self.tenant.as_deref().map(str::to_string),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

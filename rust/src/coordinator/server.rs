@@ -1,144 +1,75 @@
-//! Line-protocol TCP front end for the coordinator (std::net, one thread
-//! per connection — no tokio in the offline vendor set).
+//! TCP front end for the coordinator: transport + per-connection codec
+//! negotiation, nothing else. The protocol itself — the typed
+//! `Request`/`Response` vocabulary, the v0 ASCII line grammar and the
+//! v1 length-prefixed frame layout — lives in [`crate::protocol`] and
+//! is documented in DESIGN.md §15; dispatch lives in
+//! [`Coordinator::handle`], the same entry point the in-process
+//! [`crate::client::Client`] uses, so wire and in-process callers
+//! share one code path.
 //!
-//! Protocol (newline-terminated ASCII):
-//!   `CLASSIFY x1,x2,...,xd`  ->  `OK <label> <score>` (the default head)
-//!   `PREDICT <tenant> x1,..` ->  `OK <label> <score>` through the named
-//!                                tenant's model (DESIGN.md §14): ±1
-//!                                labels for binary, the argmax class
-//!                                for multi-class, label 0 + the raw
-//!                                score for regression
-//!   `REGISTER <name> <dataset> [seed]` -> train + install a tenant
-//!                                fleet-wide from a named dataset
-//!                                (`digits`, `digits-binary`,
-//!                                `brightness`, or any synth set)
-//!   `UNREGISTER <name>`      ->  drop a tenant fleet-wide
-//!   `MODELS`                 ->  `OK <tenant directory one-liner>`
-//!   `STATS`                  ->  `OK <metrics one-liner>` (incl. per-tenant)
-//!   `HEALTH`                 ->  `OK <per-die lifecycle gauges + fleet counters>`
-//!   `DRAIN <die>`            ->  `OK draining die <die>` (recalibrated + re-admitted by the fleet manager)
-//!   `PING`                   ->  `OK pong`
-//!   `QUIT`                   ->  closes the connection
-//! Errors come back as `ERR <reason>`.
+//! Per connection (std::net, one thread each — no tokio in the offline
+//! vendor set):
+//!
+//!   1. apply `SystemConfig::read_timeout` so an idle or dead client is
+//!      disconnected instead of pinning its thread forever;
+//!   2. sniff the first byte: [`frame::FRAME_MAGIC`] selects the v1
+//!      [`FrameCodec`], anything else (every ASCII command letter) the
+//!      v0 [`LineCodec`] — that is the entire version negotiation;
+//!   3. loop: decode a request, dispatch through `Coordinator::handle`,
+//!      encode the response. Malformed input answers `ERR ...` (v0) or
+//!      an error frame (v1) without dropping the connection; QUIT, EOF,
+//!      an I/O error or the read timeout end it.
+//!
+//! [`frame::FRAME_MAGIC`]: crate::protocol::frame::FRAME_MAGIC
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::registry::TenantSpec;
+use crate::protocol::{line, Codec, Decoded, FrameCodec, LineCodec, Response};
 
 use super::Coordinator;
 
-/// Parse a comma-separated feature list.
-fn parse_features(text: &str) -> std::result::Result<Vec<f64>, String> {
-    text.split(',')
-        .map(|t| t.trim().parse::<f64>().map_err(|e| format!("bad features: {e}")))
-        .collect()
-}
-
-/// Handle one protocol line. Exposed for unit testing without sockets.
+/// Handle one v0 protocol line — the thin shim that keeps the historic
+/// line surface (and its unit tests) alive over the typed dispatcher.
+/// `None` means QUIT (close the connection).
 pub fn handle_line(coord: &Coordinator, line: &str) -> Option<String> {
-    let line = line.trim();
-    if line.is_empty() {
-        return Some("ERR empty command".into());
-    }
-    let (cmd, rest) = line.split_once(' ').unwrap_or((line, ""));
-    match cmd.to_ascii_uppercase().as_str() {
-        "PING" => Some("OK pong".into()),
-        "STATS" => Some(format!("OK {}", coord.metrics.report())),
-        "HEALTH" => Some(format!("OK {}", coord.fleet_status())),
-        "MODELS" => Some(format!("OK {}", coord.models())),
-        "DRAIN" => match rest.trim().parse::<usize>() {
-            Err(_) => Some(format!("ERR DRAIN wants a die index, got '{rest}'")),
-            Ok(die) => match coord.drain_die(die) {
-                Ok(()) => Some(format!("OK draining die {die}")),
-                Err(e) => Some(format!("ERR {e:#}")),
-            },
-        },
-        "QUIT" => None,
-        "CLASSIFY" => match parse_features(rest) {
-            Err(e) => Some(format!("ERR {e}")),
-            Ok(f) => match coord.classify(f) {
-                Ok(resp) => Some(format!("OK {} {:.6}", resp.label, resp.score)),
-                Err(e) => Some(format!("ERR {e:#}")),
-            },
-        },
-        "PREDICT" => {
-            // PREDICT <tenant> x1,x2,...,xd
-            let Some((tenant, feats)) = rest.trim().split_once(' ') else {
-                return Some("ERR PREDICT wants: PREDICT <tenant> x1,x2,...".into());
-            };
-            match parse_features(feats.trim()) {
-                Err(e) => Some(format!("ERR {e}")),
-                Ok(f) => match coord.classify_tenant(Some(tenant.trim()), f) {
-                    Ok(resp) => Some(format!("OK {} {:.6}", resp.label, resp.score)),
-                    Err(e) => Some(format!("ERR {e:#}")),
-                },
-            }
-        }
-        "REGISTER" => {
-            // REGISTER <name> <dataset> [seed]
-            let mut parts = rest.split_whitespace();
-            let (Some(name), Some(dataset)) = (parts.next(), parts.next()) else {
-                return Some("ERR REGISTER wants: REGISTER <name> <dataset> [seed]".into());
-            };
-            let seed = match parts.next().map(|t| t.parse::<u64>()) {
-                None => 1,
-                Some(Ok(s)) => s,
-                Some(Err(e)) => return Some(format!("ERR bad seed: {e}")),
-            };
-            match TenantSpec::from_dataset(name, dataset, seed, coord.d) {
-                Err(e) => Some(format!("ERR {e}")),
-                Ok(spec) => {
-                    let task = spec.task;
-                    match coord.register_tenant(spec) {
-                        Ok(score) => Some(format!(
-                            "OK registered {name} ({task}, mean train score {score:.4})"
-                        )),
-                        Err(e) => Some(format!("ERR {e:#}")),
-                    }
-                }
-            }
-        }
-        "UNREGISTER" => {
-            let name = rest.trim();
-            if name.is_empty() {
-                return Some("ERR UNREGISTER wants a tenant name".into());
-            }
-            match coord.unregister_tenant(name) {
-                Ok(()) => Some(format!("OK unregistered {name}")),
-                Err(e) => Some(format!("ERR {e:#}")),
-            }
-        }
-        other => Some(format!("ERR unknown command {other}")),
+    match line::parse_line(line) {
+        Decoded::Quit | Decoded::Eof => None,
+        Decoded::Malformed(msg) => Some(format!("ERR {msg}")),
+        Decoded::Request(req) => Some(line::format_response(&coord.handle(req))),
     }
 }
 
 fn serve_conn(coord: Arc<Coordinator>, stream: TcpStream) {
     let _ = stream.set_nodelay(true); // request/response pattern: defeat Nagle
-    let peer = stream.peer_addr().ok();
+    // dead-client hygiene: never let an idle connection pin this thread
+    let _ = stream.set_read_timeout(coord.read_timeout);
+    // codec negotiation: peek (don't consume) the first byte
+    let mut first = [0u8; 1];
+    let mut codec: Box<dyn Codec> = match stream.peek(&mut first) {
+        Ok(0) | Err(_) => return, // closed or timed out before a byte arrived
+        Ok(_) if first[0] == crate::protocol::frame::FRAME_MAGIC => Box::new(FrameCodec),
+        Ok(_) => Box::new(LineCodec),
+    };
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
-            Err(_) => break,
+    let mut reader = BufReader::new(stream);
+    loop {
+        let resp = match codec.read_request(&mut reader) {
+            Err(_) => break, // I/O error, or idle past the read timeout
+            Ok(Decoded::Eof) | Ok(Decoded::Quit) => break,
+            Ok(Decoded::Malformed(msg)) => Response::Error(msg),
+            Ok(Decoded::Request(req)) => coord.handle(req),
         };
-        match handle_line(&coord, &line) {
-            Some(resp) => {
-                if writeln!(writer, "{resp}").is_err() {
-                    break;
-                }
-            }
-            None => break, // QUIT
+        if codec.write_response(&mut writer, &resp).is_err() {
+            break;
         }
     }
-    let _ = peer;
 }
 
 /// Serve forever on `addr` (e.g. "127.0.0.1:7177"). Blocks the caller;

@@ -5,15 +5,17 @@
 //! stack: a behavioural model of the mixed-signal chip ([`chip`]), the
 //! ELM algorithm layer ([`elm`]), the Section V dimension-extension
 //! technique ([`extension`]), a PJRT runtime executing the AOT-compiled
-//! JAX model ([`runtime`]), a serving coordinator ([`coordinator`])
-//! and a multi-tenant model registry ([`registry`]) that lets many
-//! workloads share one die fleet's hidden layer.
+//! JAX model ([`runtime`]), a serving coordinator ([`coordinator`]),
+//! a multi-tenant model registry ([`registry`]) that lets many
+//! workloads share one die fleet's hidden layer, and a typed, versioned
+//! serving protocol ([`protocol`]) with a client SDK ([`client`]).
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured record.
 
 pub mod bench;
 pub mod chip;
 pub mod cli;
+pub mod client;
 pub mod config;
 pub mod coordinator;
 pub mod datasets;
@@ -21,6 +23,7 @@ pub mod dse;
 pub mod elm;
 pub mod extension;
 pub mod fleet;
+pub mod protocol;
 pub mod registry;
 pub mod runtime;
 pub mod testing;

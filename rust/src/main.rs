@@ -5,6 +5,7 @@
 //!   train         chip-in-the-loop training on a named dataset
 //!   classify      train then evaluate train/test error (Table II row)
 //!   serve         start the TCP serving front end
+//!   client        talk to a running fleet through the client SDK (DESIGN.md §15)
 //!   sweep         quick design-space sweeps (ratio | beta-bits | counter-bits)
 //!   tune          closed-loop autotuner: Pareto front + knee operating point
 //!   fleet         fleet-health demo: inject drift, watch detect/recover
@@ -35,12 +36,24 @@ fn usage() -> &'static str {
        serve [--addr HOST:PORT] [--dataset NAME] [--chips N]\n\
              [--point FILE] [--phys-d K] [--phys-l N] [--virtual-l L]\n\
              [--geoms K1xL1,K2xL2,...] [--tenant NAME=DATASET ...]\n\
-                                                     TCP front end (tuned point via FILE;\n\
+             [--read-timeout-ms MS]                  TCP front end (tuned point via FILE;\n\
                                                      virtual dies via --phys-d/--phys-l/\n\
                                                      --virtual-l; heterogeneous per-die\n\
                                                      geometries via --geoms; extra models\n\
                                                      on the same fleet via repeatable\n\
-                                                     --tenant, or REGISTER at runtime)\n\
+                                                     --tenant, or REGISTER at runtime;\n\
+                                                     idle clients dropped after\n\
+                                                     --read-timeout-ms, 0 = never)\n\
+       client VERB [--addr HOST:PORT] [--v0]         typed client SDK against a running\n\
+                                                     fleet; VERB is one of ping | stats |\n\
+                                                     health | models | drain --die N |\n\
+                                                     predict --features 1,2 [--tenant T] |\n\
+                                                     batch --row [tenant:]1,2 ... |\n\
+                                                     register NAME DATASET [--seed N] |\n\
+                                                     unregister NAME   (--v0 forces the\n\
+                                                     ASCII line protocol; default is the\n\
+                                                     v1 framed protocol with one-round-\n\
+                                                     trip batches)\n\
        sweep --what ratio|beta-bits|counter-bits     quick design-space sweep (Fig. 7)\n\
        tune [--dataset NAME] [--rounds N] [--trials N] [--l LIST] [--b LIST]\n\
             [--batch LIST] [--weights E,J,T,X] [--out FILE]\n\
@@ -174,6 +187,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut sys = SystemConfig::default();
     sys.n_chips = args.get_usize("chips", sys.n_chips).map_err(anyhow::Error::msg)?;
     sys.artifact_dir = args.get_or("artifacts", &sys.artifact_dir);
+    // idle-client hygiene (DESIGN.md §15): 0 disables the read timeout
+    sys.read_timeout = args
+        .get_ms_opt("read-timeout-ms", sys.read_timeout)
+        .map_err(anyhow::Error::msg)?;
     // heterogeneous fleets (DESIGN.md §13): per-die fabricated geometry
     if let Some(geoms) = args.get("geoms") {
         sys.die_geoms = geoms
@@ -286,6 +303,95 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
     server::serve(Arc::new(coord), &addr)
+}
+
+/// Talk to a running fleet through the client SDK (DESIGN.md §15) —
+/// the typed replacement for hand-rolled `nc` command lines. Defaults
+/// to the v1 framed protocol; `--v0` forces the ASCII line grammar.
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7177");
+    let verb = args.positional.first().map(String::as_str).unwrap_or("ping");
+    let mut client = if args.flag("v0") {
+        velm::client::Client::connect_v0(addr.as_str())?
+    } else {
+        velm::client::Client::connect(addr.as_str())?
+    };
+    let show = |prefix: &str, p: &velm::protocol::Prediction| {
+        let tenant = p
+            .tenant
+            .as_deref()
+            .map(|t| format!(" tenant {t}"))
+            .unwrap_or_default();
+        println!("{prefix}label {} score {:.6}{tenant}", p.label, p.score);
+    };
+    match verb {
+        "ping" => {
+            client.ping()?;
+            println!("pong");
+        }
+        "stats" => println!("{}", client.stats()?),
+        "health" => println!("{}", client.health()?),
+        "models" => println!("{}", client.models()?),
+        "drain" => {
+            // draining is destructive: never let a missing flag default
+            // to pulling die 0 out of rotation
+            let die: usize = args
+                .get("die")
+                .context("drain wants --die N")?
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--die: {e}"))?;
+            client.drain(die)?;
+            println!("draining die {die}");
+        }
+        "predict" => {
+            let feats = args
+                .get_f64_list("features")
+                .map_err(anyhow::Error::msg)?
+                .context("predict wants --features x1,x2,...")?;
+            let p = client.predict(args.get("tenant"), &feats)?;
+            show("", &p);
+        }
+        "batch" => {
+            // repeatable --row [tenant:]x1,x2,... — over v1 the whole
+            // batch is ONE wire round-trip and ONE batcher submission
+            let mut rows = Vec::new();
+            for raw in args.get_all("row") {
+                let (tenant, feats) = match raw.split_once(':') {
+                    Some((t, f)) => (Some(t.trim().to_string()), f),
+                    None => (None, raw.as_str()),
+                };
+                let features =
+                    velm::protocol::parse_features(feats).map_err(anyhow::Error::msg)?;
+                rows.push(velm::protocol::PredictRow { tenant, features });
+            }
+            anyhow::ensure!(
+                !rows.is_empty(),
+                "batch wants at least one --row [tenant:]x1,x2,..."
+            );
+            let preds = client.predict_batch(&rows)?;
+            for (i, p) in preds.iter().enumerate() {
+                show(&format!("row {i}: "), p);
+            }
+        }
+        "register" => {
+            let name = args.positional.get(1).context("register wants: register NAME DATASET")?;
+            let dataset =
+                args.positional.get(2).context("register wants: register NAME DATASET")?;
+            let seed = args.get_u64("seed", 1).map_err(anyhow::Error::msg)?;
+            let (task, score) = client.register(name, dataset, seed)?;
+            println!("registered {name} ({task}, mean train score {score:.4})");
+        }
+        "unregister" => {
+            let name = args.positional.get(1).context("unregister wants a tenant name")?;
+            client.unregister(name)?;
+            println!("unregistered {name}");
+        }
+        other => bail!(
+            "unknown client verb '{other}' \
+             (ping|predict|batch|register|unregister|models|stats|health|drain)"
+        ),
+    }
+    Ok(())
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
@@ -550,6 +656,7 @@ fn main() -> Result<()> {
         Some("train") => cmd_classify(&args, true),
         Some("classify") => cmd_classify(&args, false),
         Some("serve") => cmd_serve(&args),
+        Some("client") => cmd_client(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("tune") => cmd_tune(&args),
         Some("fleet") => cmd_fleet(&args),

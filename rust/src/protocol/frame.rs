@@ -1,0 +1,540 @@
+//! Protocol v1: length-prefixed binary frames (DESIGN.md §15).
+//!
+//! Every frame is `[FRAME_MAGIC][type: u8][len: u32 LE][payload: len
+//! bytes]`. [`FRAME_MAGIC`] is `0xF1` — not printable ASCII, so no v0
+//! command line can start with it; the server sniffs the first byte of
+//! a connection and that is the entire codec negotiation. Inside a
+//! payload:
+//!
+//!   * integers are little-endian (`u32`/`u64`; `i8` as one byte),
+//!   * `f64` travels as its IEEE-754 bit pattern (`u64` LE) — exact,
+//!   * a string is `u32` byte length + UTF-8 bytes,
+//!   * an optional tenant is a string where empty = `None` (tenant
+//!     names are validated non-empty at registration),
+//!   * a feature vector is `u32` count + that many `f64`s,
+//!   * a row/prediction list is `u32` count + the elements.
+//!
+//! Decoders consume the whole payload and reject trailing bytes, so
+//! `decode(encode(x)) == x` is exact for every frame type — the
+//! property tests in tests/proptests.rs hold the codec to that. A
+//! malformed payload is reported per-frame ([`Decoded::Malformed`])
+//! without desynchronising the stream: the transport already consumed
+//! exactly `len` bytes.
+
+use std::io::{BufRead, Read, Write};
+
+use super::{Codec, Decoded, PredictRow, Prediction, Request, Response};
+
+/// First byte of every v1 frame; the codec-negotiation sniff byte.
+pub const FRAME_MAGIC: u8 = 0xF1;
+
+/// Upper bound on one frame's payload — a corrupted or hostile length
+/// prefix must not allocate unbounded memory.
+pub const MAX_FRAME_LEN: u32 = 64 * 1024 * 1024;
+
+// Request frame types.
+const T_PING: u8 = 0x01;
+const T_STATS: u8 = 0x02;
+const T_HEALTH: u8 = 0x03;
+const T_MODELS: u8 = 0x04;
+const T_DRAIN: u8 = 0x05;
+const T_PREDICT: u8 = 0x06;
+const T_BATCH: u8 = 0x07;
+const T_REGISTER: u8 = 0x08;
+const T_UNREGISTER: u8 = 0x09;
+const T_QUIT: u8 = 0x0A;
+
+// Response frame types (high bit set).
+const R_PONG: u8 = 0x81;
+const R_STATS: u8 = 0x82;
+const R_HEALTH: u8 = 0x83;
+const R_MODELS: u8 = 0x84;
+const R_DRAINING: u8 = 0x85;
+const R_PREDICT: u8 = 0x86;
+const R_BATCH: u8 = 0x87;
+const R_REGISTERED: u8 = 0x88;
+const R_UNREGISTERED: u8 = 0x89;
+const R_ERROR: u8 = 0xFF;
+
+// --- payload writers ---
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    put_u64(buf, v.to_bits());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_tenant(buf: &mut Vec<u8>, tenant: Option<&str>) {
+    put_str(buf, tenant.unwrap_or(""));
+}
+
+fn put_features(buf: &mut Vec<u8>, features: &[f64]) {
+    put_u32(buf, features.len() as u32);
+    for &v in features {
+        put_f64(buf, v);
+    }
+}
+
+fn put_prediction(buf: &mut Vec<u8>, p: &Prediction) {
+    buf.push(p.label as u8);
+    put_f64(buf, p.score);
+    put_tenant(buf, p.tenant.as_deref());
+}
+
+// --- payload reader ---
+
+/// Bounds-checked cursor over one frame's payload.
+struct Cur<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Cur { b, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| format!("frame truncated at byte {}", self.pos))?;
+        let out = &self.b[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn str(&mut self) -> Result<String, String> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|e| format!("bad utf-8 in frame: {e}"))
+    }
+
+    fn tenant(&mut self) -> Result<Option<String>, String> {
+        let s = self.str()?;
+        Ok(if s.is_empty() { None } else { Some(s) })
+    }
+
+    fn features(&mut self) -> Result<Vec<f64>, String> {
+        let n = self.u32()? as usize;
+        // 8 bytes per f64 must still fit in the remaining payload
+        if n > (self.b.len() - self.pos) / 8 {
+            return Err(format!("feature count {n} exceeds the frame"));
+        }
+        (0..n).map(|_| self.f64()).collect()
+    }
+
+    /// Decoders must consume the payload exactly.
+    fn done(&self) -> Result<(), String> {
+        if self.pos == self.b.len() {
+            Ok(())
+        } else {
+            Err(format!(
+                "{} trailing bytes after the payload",
+                self.b.len() - self.pos
+            ))
+        }
+    }
+}
+
+// --- frame-level encode/decode ---
+
+/// Encode a request as (frame type, payload).
+pub fn encode_request(req: &Request) -> (u8, Vec<u8>) {
+    let mut buf = Vec::new();
+    let ty = match req {
+        Request::Ping => T_PING,
+        Request::Stats => T_STATS,
+        Request::Health => T_HEALTH,
+        Request::Models => T_MODELS,
+        Request::Drain { die } => {
+            put_u32(&mut buf, *die as u32);
+            T_DRAIN
+        }
+        Request::Predict { tenant, features } => {
+            put_tenant(&mut buf, tenant.as_deref());
+            put_features(&mut buf, features);
+            T_PREDICT
+        }
+        Request::BatchPredict { rows } => {
+            put_u32(&mut buf, rows.len() as u32);
+            for row in rows {
+                put_tenant(&mut buf, row.tenant.as_deref());
+                put_features(&mut buf, &row.features);
+            }
+            T_BATCH
+        }
+        Request::Register { name, dataset, seed } => {
+            put_str(&mut buf, name);
+            put_str(&mut buf, dataset);
+            put_u64(&mut buf, *seed);
+            T_REGISTER
+        }
+        Request::Unregister { name } => {
+            put_str(&mut buf, name);
+            T_UNREGISTER
+        }
+    };
+    (ty, buf)
+}
+
+/// Decode a request frame. `Ok(None)` is the quit frame.
+pub fn decode_request(ty: u8, payload: &[u8]) -> Result<Option<Request>, String> {
+    let mut c = Cur::new(payload);
+    let req = match ty {
+        T_PING => Request::Ping,
+        T_STATS => Request::Stats,
+        T_HEALTH => Request::Health,
+        T_MODELS => Request::Models,
+        T_QUIT => {
+            c.done()?;
+            return Ok(None);
+        }
+        T_DRAIN => Request::Drain { die: c.u32()? as usize },
+        T_PREDICT => Request::Predict { tenant: c.tenant()?, features: c.features()? },
+        T_BATCH => {
+            let n = c.u32()? as usize;
+            let mut rows = Vec::new();
+            for _ in 0..n {
+                rows.push(PredictRow { tenant: c.tenant()?, features: c.features()? });
+            }
+            Request::BatchPredict { rows }
+        }
+        T_REGISTER => Request::Register {
+            name: c.str()?,
+            dataset: c.str()?,
+            seed: c.u64()?,
+        },
+        T_UNREGISTER => Request::Unregister { name: c.str()? },
+        other => return Err(format!("unknown request frame type {other:#04x}")),
+    };
+    c.done()?;
+    Ok(Some(req))
+}
+
+/// Encode a response as (frame type, payload).
+pub fn encode_response(resp: &Response) -> (u8, Vec<u8>) {
+    let mut buf = Vec::new();
+    let ty = match resp {
+        Response::Pong => R_PONG,
+        Response::Stats(s) => {
+            put_str(&mut buf, s);
+            R_STATS
+        }
+        Response::Health(s) => {
+            put_str(&mut buf, s);
+            R_HEALTH
+        }
+        Response::Models(s) => {
+            put_str(&mut buf, s);
+            R_MODELS
+        }
+        Response::Draining { die } => {
+            put_u32(&mut buf, *die as u32);
+            R_DRAINING
+        }
+        Response::Predict(p) => {
+            put_prediction(&mut buf, p);
+            R_PREDICT
+        }
+        Response::Batch(ps) => {
+            put_u32(&mut buf, ps.len() as u32);
+            for p in ps {
+                put_prediction(&mut buf, p);
+            }
+            R_BATCH
+        }
+        Response::Registered { name, task, score } => {
+            put_str(&mut buf, name);
+            put_str(&mut buf, task);
+            put_f64(&mut buf, *score);
+            R_REGISTERED
+        }
+        Response::Unregistered { name } => {
+            put_str(&mut buf, name);
+            R_UNREGISTERED
+        }
+        Response::Error(e) => {
+            put_str(&mut buf, e);
+            R_ERROR
+        }
+    };
+    (ty, buf)
+}
+
+fn prediction(c: &mut Cur<'_>) -> Result<Prediction, String> {
+    Ok(Prediction {
+        label: c.u8()? as i8,
+        score: c.f64()?,
+        tenant: c.tenant()?,
+    })
+}
+
+/// Decode a response frame.
+pub fn decode_response(ty: u8, payload: &[u8]) -> Result<Response, String> {
+    let mut c = Cur::new(payload);
+    let resp = match ty {
+        R_PONG => Response::Pong,
+        R_STATS => Response::Stats(c.str()?),
+        R_HEALTH => Response::Health(c.str()?),
+        R_MODELS => Response::Models(c.str()?),
+        R_DRAINING => Response::Draining { die: c.u32()? as usize },
+        R_PREDICT => Response::Predict(prediction(&mut c)?),
+        R_BATCH => {
+            let n = c.u32()? as usize;
+            let mut ps = Vec::new();
+            for _ in 0..n {
+                ps.push(prediction(&mut c)?);
+            }
+            Response::Batch(ps)
+        }
+        R_REGISTERED => Response::Registered {
+            name: c.str()?,
+            task: c.str()?,
+            score: c.f64()?,
+        },
+        R_UNREGISTERED => Response::Unregistered { name: c.str()? },
+        R_ERROR => Response::Error(c.str()?),
+        other => return Err(format!("unknown response frame type {other:#04x}")),
+    };
+    c.done()?;
+    Ok(resp)
+}
+
+// --- transport ---
+
+fn write_frame(w: &mut dyn Write, ty: u8, payload: &[u8]) -> std::io::Result<()> {
+    // enforce the cap on encode too: a huge batch must fail fast here
+    // with a cause, not as a silent `as u32` wrap (a corrupted length
+    // prefix desyncs the peer) or an opaque hangup from the reader side
+    if payload.len() > MAX_FRAME_LEN as usize {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            format!(
+                "frame of {} bytes exceeds the {MAX_FRAME_LEN} byte cap \
+                 (split the batch into smaller chunks)",
+                payload.len()
+            ),
+        ));
+    }
+    let mut head = [0u8; 6];
+    head[0] = FRAME_MAGIC;
+    head[1] = ty;
+    head[2..6].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&head)?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one frame. `Ok(None)` = clean EOF before a new frame; a
+/// truncated header/payload, a bad magic byte or an oversized length
+/// prefix are hard errors (the stream cannot be resynchronised).
+fn read_frame(r: &mut dyn BufRead) -> std::io::Result<Option<(u8, Vec<u8>)>> {
+    let mut head = [0u8; 6];
+    // distinguish clean EOF (no first byte) from a truncated header
+    let n = r.read(&mut head[..1])?;
+    if n == 0 {
+        return Ok(None);
+    }
+    r.read_exact(&mut head[1..])?;
+    if head[0] != FRAME_MAGIC {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("bad frame magic {:#04x}", head[0]),
+        ));
+    }
+    let len = u32::from_le_bytes(head[2..6].try_into().unwrap());
+    if len > MAX_FRAME_LEN {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame of {len} bytes exceeds the {MAX_FRAME_LEN} byte cap"),
+        ));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    Ok(Some((head[1], payload)))
+}
+
+/// The v1 framed codec. Stateless: one value serves a whole connection.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FrameCodec;
+
+impl Codec for FrameCodec {
+    fn version(&self) -> u8 {
+        1
+    }
+
+    fn read_request(&mut self, r: &mut dyn BufRead) -> std::io::Result<Decoded> {
+        let Some((ty, payload)) = read_frame(r)? else {
+            return Ok(Decoded::Eof);
+        };
+        Ok(match decode_request(ty, &payload) {
+            Ok(None) => Decoded::Quit,
+            Ok(Some(req)) => Decoded::Request(req),
+            Err(e) => Decoded::Malformed(e),
+        })
+    }
+
+    fn write_response(&mut self, w: &mut dyn Write, resp: &Response) -> std::io::Result<()> {
+        let (ty, payload) = encode_response(resp);
+        write_frame(w, ty, &payload)
+    }
+
+    fn write_request(&mut self, w: &mut dyn Write, req: &Request) -> std::io::Result<()> {
+        let (ty, payload) = encode_request(req);
+        write_frame(w, ty, &payload)
+    }
+
+    fn read_response(
+        &mut self,
+        r: &mut dyn BufRead,
+        _expect: &Request,
+    ) -> std::io::Result<Option<Response>> {
+        let Some((ty, payload)) = read_frame(r)? else {
+            return Ok(None);
+        };
+        decode_response(ty, &payload)
+            .map(Some)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+    }
+
+    fn write_quit(&mut self, w: &mut dyn Write) -> std::io::Result<()> {
+        write_frame(w, T_QUIT, &[])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_frames_roundtrip_via_io() {
+        let mut codec = FrameCodec;
+        let req = Request::BatchPredict {
+            rows: vec![
+                PredictRow { tenant: None, features: vec![0.5, -0.25] },
+                PredictRow { tenant: Some("bright".into()), features: vec![] },
+            ],
+        };
+        let mut buf = Vec::new();
+        codec.write_request(&mut buf, &req).unwrap();
+        assert_eq!(buf[0], FRAME_MAGIC);
+        let mut r: &[u8] = &buf;
+        match codec.read_request(&mut r).unwrap() {
+            Decoded::Request(back) => assert_eq!(back, req),
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(codec.read_request(&mut r).unwrap(), Decoded::Eof));
+    }
+
+    #[test]
+    fn response_frames_roundtrip_via_io() {
+        let mut codec = FrameCodec;
+        let resp = Response::Batch(vec![
+            Prediction { label: -1, score: 0.125, tenant: None },
+            Prediction { label: 7, score: -3.5, tenant: Some("digits".into()) },
+        ]);
+        let mut buf = Vec::new();
+        codec.write_response(&mut buf, &resp).unwrap();
+        let mut r: &[u8] = &buf;
+        let expect = Request::BatchPredict { rows: vec![] };
+        assert_eq!(codec.read_response(&mut r, &expect).unwrap(), Some(resp));
+        assert_eq!(codec.read_response(&mut r, &expect).unwrap(), None);
+    }
+
+    #[test]
+    fn quit_frame_and_eof_are_distinct() {
+        let mut codec = FrameCodec;
+        let mut buf = Vec::new();
+        codec.write_quit(&mut buf).unwrap();
+        let mut r: &[u8] = &buf;
+        assert!(matches!(codec.read_request(&mut r).unwrap(), Decoded::Quit));
+        let mut empty: &[u8] = &[];
+        assert!(matches!(codec.read_request(&mut empty).unwrap(), Decoded::Eof));
+    }
+
+    #[test]
+    fn malformed_payload_is_recoverable_and_keeps_sync() {
+        // an in-range frame with a garbage payload answers Malformed and
+        // the NEXT frame still parses — the stream never desyncs
+        let mut codec = FrameCodec;
+        let mut buf = Vec::new();
+        write_frame(&mut buf, T_DRAIN, &[1, 2]).unwrap(); // too short for u32
+        codec.write_request(&mut buf, &Request::Ping).unwrap();
+        let mut r: &[u8] = &buf;
+        assert!(matches!(codec.read_request(&mut r).unwrap(), Decoded::Malformed(_)));
+        assert!(matches!(
+            codec.read_request(&mut r).unwrap(),
+            Decoded::Request(Request::Ping)
+        ));
+    }
+
+    #[test]
+    fn bad_magic_and_oversized_frames_are_hard_errors() {
+        let mut codec = FrameCodec;
+        let mut r: &[u8] = b"CLASSIFY 1,2\n"; // v0 bytes into the v1 codec
+        assert!(codec.read_request(&mut r).is_err());
+        let mut head = vec![FRAME_MAGIC, T_PING];
+        head.extend_from_slice(&(MAX_FRAME_LEN + 1).to_le_bytes());
+        let mut r: &[u8] = &head;
+        assert!(codec.read_request(&mut r).is_err());
+    }
+
+    #[test]
+    fn decoders_reject_trailing_bytes() {
+        let (ty, mut payload) = encode_request(&Request::Ping);
+        payload.push(0);
+        assert!(decode_request(ty, &payload).is_err());
+        let (ty, mut payload) = encode_response(&Response::Pong);
+        payload.push(0);
+        assert!(decode_response(ty, &payload).is_err());
+    }
+
+    #[test]
+    fn oversized_encode_fails_fast_with_a_cause() {
+        // the writer must refuse a too-big frame (with a message) rather
+        // than wrap the length prefix and desync the peer
+        let payload = vec![0u8; MAX_FRAME_LEN as usize + 1];
+        let mut sink = Vec::new();
+        let err = write_frame(&mut sink, T_PING, &payload).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidInput);
+        assert!(sink.is_empty(), "nothing may be written after the refusal");
+    }
+
+    #[test]
+    fn hostile_feature_count_is_rejected_without_allocation() {
+        // a row claiming u32::MAX features must fail fast, not allocate
+        let mut payload = Vec::new();
+        put_tenant(&mut payload, None);
+        put_u32(&mut payload, u32::MAX);
+        assert!(decode_request(T_PREDICT, &payload).is_err());
+    }
+}

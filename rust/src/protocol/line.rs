@@ -1,0 +1,380 @@
+//! Protocol v0: the newline-terminated ASCII grammar (DESIGN.md §15).
+//!
+//! This is the serving surface's original wire format, kept
+//! bit-compatible so pre-protocol clients (netcat, old scripts) keep
+//! working — the golden-string tests in tests/integration_protocol.rs
+//! pin both the command grammar and the reply text. New capability goes
+//! into the v1 frame codec instead; v0 only ever gains fixes that its
+//! usage lines already promised (e.g. an empty feature list now answers
+//! with the command's usage line instead of a float-parse error).
+//!
+//! Grammar (one command per line; replies are one `OK ...` or
+//! `ERR ...` line each):
+//!
+//! ```text
+//! PING                           -> OK pong
+//! STATS                          -> OK <metrics one-liner>
+//! HEALTH                         -> OK <per-die gauges + fleet counters>
+//! MODELS                         -> OK <tenant directory one-liner>
+//! DRAIN <die>                    -> OK draining die <die>
+//! CLASSIFY x1,x2,...,xd          -> OK <label> <score>
+//! PREDICT <tenant> x1,x2,...,xd  -> OK <label> <score>
+//! REGISTER <name> <dataset> [s]  -> OK registered <name> (<task>, mean train score <s>)
+//! UNREGISTER <name>              -> OK unregistered <name>
+//! QUIT                           closes the connection
+//! ```
+
+use std::io::{BufRead, Write};
+
+use super::{parse_features, Codec, Decoded, Prediction, Request, Response};
+
+/// The v0 ASCII codec. Stateless: one value serves a whole connection.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LineCodec;
+
+/// Parse one v0 command line. Never returns [`Decoded::Eof`] — end of
+/// stream is the transport's business, not the grammar's.
+pub fn parse_line(line: &str) -> Decoded {
+    let line = line.trim();
+    if line.is_empty() {
+        return Decoded::Malformed("empty command".into());
+    }
+    let (cmd, rest) = line.split_once(' ').unwrap_or((line, ""));
+    match cmd.to_ascii_uppercase().as_str() {
+        "PING" => Decoded::Request(Request::Ping),
+        "STATS" => Decoded::Request(Request::Stats),
+        "HEALTH" => Decoded::Request(Request::Health),
+        "MODELS" => Decoded::Request(Request::Models),
+        "QUIT" => Decoded::Quit,
+        "DRAIN" => match rest.trim().parse::<usize>() {
+            Err(_) => Decoded::Malformed(format!("DRAIN wants a die index, got '{rest}'")),
+            Ok(die) => Decoded::Request(Request::Drain { die }),
+        },
+        "CLASSIFY" => {
+            let feats = rest.trim();
+            if feats.is_empty() {
+                return Decoded::Malformed("CLASSIFY wants: CLASSIFY x1,x2,...".into());
+            }
+            match parse_features(feats) {
+                Err(e) => Decoded::Malformed(e),
+                Ok(f) => Decoded::Request(Request::Predict { tenant: None, features: f }),
+            }
+        }
+        "PREDICT" => {
+            // PREDICT <tenant> x1,x2,...,xd
+            let usage = || Decoded::Malformed("PREDICT wants: PREDICT <tenant> x1,x2,...".into());
+            let Some((tenant, feats)) = rest.trim().split_once(' ') else {
+                return usage();
+            };
+            let feats = feats.trim();
+            if feats.is_empty() {
+                return usage();
+            }
+            match parse_features(feats) {
+                Err(e) => Decoded::Malformed(e),
+                Ok(f) => Decoded::Request(Request::Predict {
+                    tenant: Some(tenant.trim().to_string()),
+                    features: f,
+                }),
+            }
+        }
+        "REGISTER" => {
+            // REGISTER <name> <dataset> [seed]
+            let mut parts = rest.split_whitespace();
+            let (Some(name), Some(dataset)) = (parts.next(), parts.next()) else {
+                return Decoded::Malformed(
+                    "REGISTER wants: REGISTER <name> <dataset> [seed]".into(),
+                );
+            };
+            let seed = match parts.next().map(|t| t.parse::<u64>()) {
+                None => 1,
+                Some(Ok(s)) => s,
+                Some(Err(e)) => return Decoded::Malformed(format!("bad seed: {e}")),
+            };
+            Decoded::Request(Request::Register {
+                name: name.to_string(),
+                dataset: dataset.to_string(),
+                seed,
+            })
+        }
+        "UNREGISTER" => {
+            let name = rest.trim();
+            if name.is_empty() {
+                return Decoded::Malformed("UNREGISTER wants a tenant name".into());
+            }
+            Decoded::Request(Request::Unregister { name: name.to_string() })
+        }
+        other => Decoded::Malformed(format!("unknown command {other}")),
+    }
+}
+
+/// Render a response as its v0 reply line (no trailing newline).
+pub fn format_response(resp: &Response) -> String {
+    match resp {
+        Response::Pong => "OK pong".into(),
+        Response::Stats(s) | Response::Health(s) | Response::Models(s) => format!("OK {s}"),
+        Response::Draining { die } => format!("OK draining die {die}"),
+        Response::Predict(p) => format!("OK {} {:.6}", p.label, p.score),
+        // unreachable from the v0 grammar (no batch command parses),
+        // but a total function beats a panic if a caller mixes codecs
+        Response::Batch(_) => "ERR batch responses need the v1 framed protocol".into(),
+        Response::Registered { name, task, score } => {
+            format!("OK registered {name} ({task}, mean train score {score:.4})")
+        }
+        Response::Unregistered { name } => format!("OK unregistered {name}"),
+        Response::Error(e) => format!("ERR {e}"),
+    }
+}
+
+/// Render a request as its v0 command line (no trailing newline).
+/// `BatchPredict` has no v0 spelling and is refused.
+pub fn format_request(req: &Request) -> Result<String, String> {
+    let join = |features: &[f64]| {
+        features.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",")
+    };
+    match req {
+        Request::Ping => Ok("PING".into()),
+        Request::Stats => Ok("STATS".into()),
+        Request::Health => Ok("HEALTH".into()),
+        Request::Models => Ok("MODELS".into()),
+        Request::Drain { die } => Ok(format!("DRAIN {die}")),
+        Request::Predict { tenant: None, features } => Ok(format!("CLASSIFY {}", join(features))),
+        Request::Predict { tenant: Some(t), features } => {
+            Ok(format!("PREDICT {t} {}", join(features)))
+        }
+        Request::BatchPredict { .. } => {
+            Err("protocol v0 has no batch frame; send rows as PREDICT lines".into())
+        }
+        Request::Register { name, dataset, seed } => {
+            Ok(format!("REGISTER {name} {dataset} {seed}"))
+        }
+        Request::Unregister { name } => Ok(format!("UNREGISTER {name}")),
+    }
+}
+
+/// Client side: parse a v0 reply line given the request it answers
+/// (v0 replies are not self-describing).
+pub fn parse_response(line: &str, expect: &Request) -> Response {
+    if let Some(err) = line.strip_prefix("ERR ") {
+        return Response::Error(err.to_string());
+    }
+    let Some(body) = line.strip_prefix("OK ") else {
+        return Response::Error(format!("unparseable v0 reply '{line}'"));
+    };
+    match expect {
+        Request::Ping => Response::Pong,
+        Request::Stats => Response::Stats(body.to_string()),
+        Request::Health => Response::Health(body.to_string()),
+        Request::Models => Response::Models(body.to_string()),
+        Request::Drain { die } => Response::Draining { die: *die },
+        Request::Predict { tenant, .. } => {
+            let mut it = body.split_whitespace();
+            let label = it.next().and_then(|t| t.parse::<i8>().ok());
+            let score = it.next().and_then(|t| t.parse::<f64>().ok());
+            match (label, score) {
+                (Some(label), Some(score)) => Response::Predict(Prediction {
+                    label,
+                    score,
+                    tenant: tenant.clone(),
+                }),
+                _ => Response::Error(format!("unparseable v0 prediction '{line}'")),
+            }
+        }
+        Request::BatchPredict { .. } => {
+            Response::Error("protocol v0 has no batch frame".into())
+        }
+        Request::Register { name, .. } => {
+            // "registered <name> (<task>, mean train score <s>)"
+            let task = body
+                .split_once('(')
+                .and_then(|(_, rest)| rest.split_once(','))
+                .map(|(t, _)| t.to_string())
+                .unwrap_or_default();
+            let score = body
+                .rsplit_once(' ')
+                .and_then(|(_, s)| s.trim_end_matches(')').parse::<f64>().ok())
+                .unwrap_or(f64::NAN);
+            Response::Registered { name: name.clone(), task, score }
+        }
+        Request::Unregister { name } => Response::Unregistered { name: name.clone() },
+    }
+}
+
+impl Codec for LineCodec {
+    fn version(&self) -> u8 {
+        0
+    }
+
+    fn read_request(&mut self, r: &mut dyn BufRead) -> std::io::Result<Decoded> {
+        let mut line = String::new();
+        if r.read_line(&mut line)? == 0 {
+            return Ok(Decoded::Eof);
+        }
+        Ok(parse_line(&line))
+    }
+
+    fn write_response(&mut self, w: &mut dyn Write, resp: &Response) -> std::io::Result<()> {
+        writeln!(w, "{}", format_response(resp))?;
+        w.flush()
+    }
+
+    fn write_request(&mut self, w: &mut dyn Write, req: &Request) -> std::io::Result<()> {
+        match format_request(req) {
+            Ok(s) => {
+                writeln!(w, "{s}")?;
+                w.flush()
+            }
+            Err(e) => Err(std::io::Error::new(std::io::ErrorKind::InvalidInput, e)),
+        }
+    }
+
+    fn read_response(
+        &mut self,
+        r: &mut dyn BufRead,
+        expect: &Request,
+    ) -> std::io::Result<Option<Response>> {
+        let mut line = String::new();
+        if r.read_line(&mut line)? == 0 {
+            return Ok(None);
+        }
+        Ok(Some(parse_response(line.trim_end(), expect)))
+    }
+
+    fn write_quit(&mut self, w: &mut dyn Write) -> std::io::Result<()> {
+        writeln!(w, "QUIT")?;
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(line: &str) -> Request {
+        match parse_line(line) {
+            Decoded::Request(r) => r,
+            other => panic!("'{line}' did not parse as a request: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn commands_parse_to_typed_requests() {
+        assert_eq!(req("PING"), Request::Ping);
+        assert_eq!(req("stats"), Request::Stats);
+        assert_eq!(req("DRAIN 3"), Request::Drain { die: 3 });
+        assert_eq!(
+            req("CLASSIFY 0.5,-0.25"),
+            Request::Predict { tenant: None, features: vec![0.5, -0.25] }
+        );
+        assert_eq!(
+            req("PREDICT bright 1,0"),
+            Request::Predict { tenant: Some("bright".into()), features: vec![1.0, 0.0] }
+        );
+        assert_eq!(
+            req("REGISTER a digits 7"),
+            Request::Register { name: "a".into(), dataset: "digits".into(), seed: 7 }
+        );
+        assert_eq!(
+            req("REGISTER a digits"),
+            Request::Register { name: "a".into(), dataset: "digits".into(), seed: 1 }
+        );
+        assert_eq!(req("UNREGISTER a"), Request::Unregister { name: "a".into() });
+        assert!(matches!(parse_line("QUIT"), Decoded::Quit));
+    }
+
+    #[test]
+    fn malformed_commands_answer_their_usage_line() {
+        // the empty-feature-list bugfix: usage, not a float-parse error
+        for (line, want) in [
+            ("CLASSIFY", "CLASSIFY wants: CLASSIFY x1,x2,..."),
+            ("CLASSIFY   ", "CLASSIFY wants: CLASSIFY x1,x2,..."),
+            ("PREDICT", "PREDICT wants: PREDICT <tenant> x1,x2,..."),
+            ("PREDICT bright", "PREDICT wants: PREDICT <tenant> x1,x2,..."),
+            ("PREDICT bright  ", "PREDICT wants: PREDICT <tenant> x1,x2,..."),
+            ("REGISTER solo", "REGISTER wants: REGISTER <name> <dataset> [seed]"),
+            ("UNREGISTER", "UNREGISTER wants a tenant name"),
+            ("DRAIN abc", "DRAIN wants a die index, got 'abc'"),
+            ("", "empty command"),
+        ] {
+            match parse_line(line) {
+                Decoded::Malformed(msg) => assert_eq!(msg, want, "for '{line}'"),
+                other => panic!("'{line}' should be malformed, got {other:?}"),
+            }
+        }
+        // genuinely bad features keep the parse diagnostic
+        match parse_line("CLASSIFY 0.1,bogus") {
+            Decoded::Malformed(msg) => assert!(msg.starts_with("bad features:"), "{msg}"),
+            other => panic!("expected malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn responses_format_to_the_historic_strings() {
+        assert_eq!(format_response(&Response::Pong), "OK pong");
+        assert_eq!(format_response(&Response::Stats("requests=1".into())), "OK requests=1");
+        assert_eq!(format_response(&Response::Draining { die: 2 }), "OK draining die 2");
+        assert_eq!(
+            format_response(&Response::Predict(Prediction {
+                label: -1,
+                score: 0.5,
+                tenant: None
+            })),
+            "OK -1 0.500000"
+        );
+        assert_eq!(
+            format_response(&Response::Registered {
+                name: "a".into(),
+                task: "regression".into(),
+                score: 0.0625
+            }),
+            "OK registered a (regression, mean train score 0.0625)"
+        );
+        assert_eq!(
+            format_response(&Response::Unregistered { name: "a".into() }),
+            "OK unregistered a"
+        );
+        assert_eq!(format_response(&Response::Error("boom".into())), "ERR boom");
+    }
+
+    #[test]
+    fn client_side_request_format_and_response_parse_roundtrip() {
+        let preq = Request::Predict { tenant: Some("t".into()), features: vec![0.5, -1.0] };
+        assert_eq!(format_request(&preq).unwrap(), "PREDICT t 0.5,-1");
+        // the formatted command re-parses to the same request (f64
+        // Display is shortest-roundtrip, so features survive exactly)
+        assert_eq!(req(&format_request(&preq).unwrap()), preq);
+        assert!(format_request(&Request::BatchPredict { rows: vec![] }).is_err());
+
+        let resp = parse_response("OK 1 0.250000", &preq);
+        assert_eq!(
+            resp,
+            Response::Predict(Prediction { label: 1, score: 0.25, tenant: Some("t".into()) })
+        );
+        assert_eq!(parse_response("ERR nope", &preq), Response::Error("nope".into()));
+        let reg = Request::Register { name: "a".into(), dataset: "digits".into(), seed: 1 };
+        match parse_response("OK registered a (classification/10, mean train score 0.0312)", &reg)
+        {
+            Response::Registered { name, task, score } => {
+                assert_eq!(name, "a");
+                assert_eq!(task, "classification/10");
+                assert!((score - 0.0312).abs() < 1e-12);
+            }
+            other => panic!("bad register parse: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn codec_io_roundtrip_over_a_buffer() {
+        let mut codec = LineCodec;
+        let mut buf = Vec::new();
+        let req = Request::Predict { tenant: None, features: vec![0.125] };
+        codec.write_request(&mut buf, &req).unwrap();
+        let mut r: &[u8] = &buf;
+        match codec.read_request(&mut r).unwrap() {
+            Decoded::Request(back) => assert_eq!(back, req),
+            other => panic!("{other:?}"),
+        }
+        // EOF after the one line
+        assert!(matches!(codec.read_request(&mut r).unwrap(), Decoded::Eof));
+    }
+}

@@ -1,0 +1,181 @@
+//! Typed serving protocol (DESIGN.md §15): one request/response
+//! vocabulary for every entry point into the coordinator.
+//!
+//! Three callers speak it:
+//!
+//!   * the TCP front end (`coordinator::server`), which negotiates a
+//!     wire codec per connection by sniffing the first byte;
+//!   * the [`crate::client::Client`] SDK, over either wire codec or
+//!     in-process;
+//!   * library users, by calling `Coordinator::handle` directly.
+//!
+//! Two wire encodings implement the [`Codec`] trait:
+//!
+//!   * [`LineCodec`] — protocol **v0**, the original newline-terminated
+//!     ASCII grammar (`CLASSIFY x1,x2,...` -> `OK <label> <score>`),
+//!     kept bit-compatible so pre-protocol clients keep working. It has
+//!     no batch frame: a batch degenerates to one round-trip per row.
+//!   * [`FrameCodec`] — protocol **v1**, length-prefixed binary frames
+//!     opening with [`frame::FRAME_MAGIC`] (a byte no ASCII command
+//!     starts with — that is the whole negotiation). v1 carries
+//!     [`Request::BatchPredict`]: many rows, each addressed to its own
+//!     tenant, submitted to the batcher as ONE unit so the hidden-layer
+//!     pass is amortised across the batch.
+//!
+//! The enums derive `PartialEq` so codecs are property-testable:
+//! `decode(encode(x)) == x` for every frame type (tests/proptests.rs).
+
+pub mod frame;
+pub mod line;
+
+pub use frame::FrameCodec;
+pub use line::LineCodec;
+
+use std::io::{BufRead, Write};
+
+/// One row of a (batch) prediction: which tenant's head scores it
+/// (`None` = the fleet's default head) and the feature vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PredictRow {
+    pub tenant: Option<String>,
+    pub features: Vec<f64>,
+}
+
+/// Everything a client can ask of the serving fleet. `QUIT` is
+/// deliberately absent: closing a connection is transport business and
+/// surfaces as [`Decoded::Quit`], never as a dispatchable request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Liveness probe.
+    Ping,
+    /// One-line metrics snapshot.
+    Stats,
+    /// Per-die lifecycle gauges + fleet counters.
+    Health,
+    /// Tenant directory one-liner.
+    Models,
+    /// Pull a die from rotation for recalibration.
+    Drain { die: usize },
+    /// Score one row through one tenant's head (`None` = default).
+    Predict {
+        tenant: Option<String>,
+        features: Vec<f64>,
+    },
+    /// Score many rows — each with its own tenant — as ONE batcher
+    /// submission (v1 only on the wire; v0 clients fall back to
+    /// row-per-round-trip).
+    BatchPredict { rows: Vec<PredictRow> },
+    /// Train + install a tenant fleet-wide from a named dataset.
+    Register {
+        name: String,
+        dataset: String,
+        seed: u64,
+    },
+    /// Drop a tenant fleet-wide.
+    Unregister { name: String },
+}
+
+/// One scored row, as the protocol reports it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Prediction {
+    /// ±1 for binary heads, the argmax class for multi-class tenants,
+    /// 0 for regression.
+    pub label: i8,
+    /// Raw second-stage score (training units for tenant heads).
+    pub score: f64,
+    /// Which tenant's head produced it (`None` = the default head).
+    pub tenant: Option<String>,
+}
+
+/// Every answer the dispatcher can give. Exactly one variant answers
+/// each [`Request`] variant; [`Response::Error`] answers any of them.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Pong,
+    Stats(String),
+    Health(String),
+    Models(String),
+    Draining { die: usize },
+    Predict(Prediction),
+    Batch(Vec<Prediction>),
+    Registered {
+        name: String,
+        /// `Task` rendering, e.g. `classification/10` or `regression`.
+        task: String,
+        /// Mean chip-in-the-loop train score across dies.
+        score: f64,
+    },
+    Unregistered { name: String },
+    Error(String),
+}
+
+/// Outcome of reading one request off a transport.
+#[derive(Debug)]
+pub enum Decoded {
+    /// A well-formed request, ready for `Coordinator::handle`.
+    Request(Request),
+    /// Recoverable decode failure: the stream stays in sync; answer
+    /// with `Response::Error(msg)` and keep the connection.
+    Malformed(String),
+    /// The peer asked to close (v0 `QUIT` line / v1 quit frame).
+    Quit,
+    /// Clean end of stream.
+    Eof,
+}
+
+/// A wire encoding of the typed protocol. Server side reads requests
+/// and writes responses; client side does the reverse. `read_response`
+/// takes the request it answers because v0 replies are not
+/// self-describing (`OK 1 0.5` only means "label 1, score 0.5" if you
+/// know you asked `CLASSIFY`); [`FrameCodec`] ignores the hint.
+pub trait Codec: Send {
+    /// Protocol version: 0 = ASCII lines, 1 = binary frames.
+    fn version(&self) -> u8;
+    /// Server: read the next request (blocking; a transport read
+    /// timeout surfaces as `Err` and should close the connection).
+    fn read_request(&mut self, r: &mut dyn BufRead) -> std::io::Result<Decoded>;
+    /// Server: write one response.
+    fn write_response(&mut self, w: &mut dyn Write, resp: &Response) -> std::io::Result<()>;
+    /// Client: write one request. Requests the version cannot carry
+    /// (v0 `BatchPredict`) fail with `ErrorKind::InvalidInput`.
+    fn write_request(&mut self, w: &mut dyn Write, req: &Request) -> std::io::Result<()>;
+    /// Client: read the response to `expect`. `Ok(None)` = server hung up.
+    fn read_response(
+        &mut self,
+        r: &mut dyn BufRead,
+        expect: &Request,
+    ) -> std::io::Result<Option<Response>>;
+    /// Client: announce a clean close.
+    fn write_quit(&mut self, w: &mut dyn Write) -> std::io::Result<()>;
+}
+
+/// Parse a comma-separated feature list (the v0 grammar's `x1,x2,...`;
+/// also the CLI's `--row` argument).
+pub fn parse_features(text: &str) -> Result<Vec<f64>, String> {
+    text.split(',')
+        .map(|t| t.trim().parse::<f64>().map_err(|e| format!("bad features: {e}")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_features_accepts_and_rejects() {
+        assert_eq!(parse_features("0.5,-1, 0.25").unwrap(), vec![0.5, -1.0, 0.25]);
+        let err = parse_features("0.1,bogus").unwrap_err();
+        assert!(err.starts_with("bad features:"), "{err}");
+        assert!(parse_features("").is_err(), "empty text is one empty token");
+        assert!(parse_features("1,,2").is_err());
+    }
+
+    #[test]
+    fn typed_values_compare_structurally() {
+        let a = Request::Predict { tenant: None, features: vec![0.1] };
+        let b = Request::Predict { tenant: None, features: vec![0.1] };
+        assert_eq!(a, b);
+        let c = Request::Predict { tenant: Some("t".into()), features: vec![0.1] };
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,258 @@
+//! Integration: the typed serving protocol (DESIGN.md §15).
+//!
+//!   * identical tenant traffic through the v0 line protocol, the v1
+//!     framed protocol and the in-process `Client` answers
+//!     bit-identically (at each wire's own precision);
+//!   * a v1 `BatchPredict` of B rows enters the batcher as ONE
+//!     submission (observed via `Metrics`), not B;
+//!   * golden strings pin the v0 line grammar so the protocol redesign
+//!     cannot silently break pre-protocol clients;
+//!   * idle connections are reaped by `SystemConfig::read_timeout`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use velm::client::Client;
+use velm::config::{ChipConfig, SystemConfig};
+use velm::coordinator::{server, Coordinator};
+use velm::datasets::synth;
+use velm::protocol::PredictRow;
+use velm::registry::TenantSpec;
+
+/// One-die fleet (deterministic scores across paths) on brightdata,
+/// plus a regression tenant so the traffic is multi-tenant.
+fn start_system() -> (Arc<Coordinator>, velm::datasets::Dataset) {
+    let ds = synth::brightdata(1).with_test_subsample(40, 1);
+    let mut cfg = ChipConfig::default().with_b(10);
+    cfg.d = ds.d();
+    let sys = SystemConfig {
+        n_chips: 1,
+        artifact_dir: "/nonexistent".into(),
+        max_wait: Duration::from_millis(1),
+        ..Default::default()
+    };
+    let coord =
+        Coordinator::start(&sys, &cfg, &ds.train_x, &ds.train_y, 0.1, 10).expect("start");
+    let reg_y: Vec<f64> = ds.train_x.iter().map(|x| 0.5 * x[0] - 0.25 * x[1]).collect();
+    coord
+        .register_tenant(
+            TenantSpec::regression("slope", ds.train_x.clone(), &reg_y, 1e-3, 12).unwrap(),
+        )
+        .unwrap();
+    (Arc::new(coord), ds)
+}
+
+#[test]
+fn v0_v1_and_in_process_answer_bit_identically() {
+    let (coord, ds) = start_system();
+    let (addr, srv) = server::serve_n(Arc::clone(&coord), 2).expect("serve");
+    // identical tenant traffic: default and tenant rows interleaved
+    let rows: Vec<PredictRow> = ds
+        .test_x
+        .iter()
+        .take(12)
+        .enumerate()
+        .map(|(i, x)| PredictRow {
+            tenant: if i % 3 == 0 { Some("slope".into()) } else { None },
+            features: x.clone(),
+        })
+        .collect();
+
+    // v0: the ASCII line grammar, one round-trip per row
+    let mut v0 = Client::connect_v0(addr).expect("v0 connect");
+    assert_eq!(v0.wire_version(), Some(0));
+    let p0 = v0.predict_batch(&rows).expect("v0 predict");
+
+    // v1: ONE framed BatchPredict carrying every row
+    let subs0 = coord.metrics.submissions.load(Ordering::Relaxed);
+    let resp0 = coord.metrics.responses.load(Ordering::Relaxed);
+    let mut v1 = Client::connect(addr).expect("v1 connect");
+    assert_eq!(v1.wire_version(), Some(1));
+    let p1 = v1.predict_batch(&rows).expect("v1 predict");
+    assert_eq!(
+        coord.metrics.submissions.load(Ordering::Relaxed) - subs0,
+        1,
+        "a v1 BatchPredict of {} rows must be ONE batcher submission",
+        rows.len()
+    );
+    assert_eq!(
+        coord.metrics.responses.load(Ordering::Relaxed) - resp0,
+        rows.len() as u64,
+        "every batch row must still be answered"
+    );
+
+    // in-process: the same typed dispatcher, no sockets
+    let mut local = Client::in_process(Arc::clone(&coord));
+    assert_eq!(local.wire_version(), None);
+    let pl = local.predict_batch(&rows).expect("in-process predict");
+
+    assert_eq!(p0.len(), rows.len());
+    assert_eq!(p1.len(), rows.len());
+    assert_eq!(pl.len(), rows.len());
+    for i in 0..rows.len() {
+        assert_eq!(p0[i].label, p1[i].label, "row {i}: label diverged v0/v1");
+        assert_eq!(p1[i].label, pl[i].label, "row {i}: label diverged v1/in-process");
+        assert_eq!(p0[i].tenant, p1[i].tenant, "row {i}: tenant diverged v0/v1");
+        assert_eq!(p1[i].tenant, pl[i].tenant, "row {i}: tenant diverged v1/in-process");
+        // v1 frames and the in-process path carry full f64 bits
+        assert_eq!(
+            p1[i].score.to_bits(),
+            pl[i].score.to_bits(),
+            "row {i}: score bits diverged v1/in-process"
+        );
+        // the v0 wire prints 6 decimals; compare at the wire's precision
+        assert_eq!(
+            format!("{:.6}", p0[i].score),
+            format!("{:.6}", p1[i].score),
+            "row {i}: score diverged v0/v1"
+        );
+    }
+    drop(v0); // sends QUIT so serve_n's bounded accept loop can join
+    drop(v1);
+    srv.join();
+}
+
+#[test]
+fn v1_framed_protocol_covers_the_full_surface() {
+    let (coord, ds) = start_system();
+    let (addr, srv) = server::serve_n(Arc::clone(&coord), 1).expect("serve");
+    let mut c = Client::connect(addr).expect("connect");
+    c.ping().expect("ping");
+    let stats = c.stats().expect("stats");
+    assert!(stats.contains("requests=") && stats.contains("submissions="), "{stats}");
+    let health = c.health().expect("health");
+    assert!(health.contains("die0="), "{health}");
+    let models = c.models().expect("models");
+    assert!(models.contains("slope"), "{models}");
+    // register/unregister through the framed path ("brightdata" rides
+    // the binary-classification fallback of TenantSpec::from_dataset)
+    let (task, score) = c.register("bin2", "brightdata", 9).expect("register");
+    assert_eq!(task, "classification/2");
+    assert!(score.is_finite(), "train score {score}");
+    let p = c.predict(Some("bin2"), &ds.test_x[0]).expect("tenant predict");
+    assert!(p.label == 1 || p.label == -1);
+    assert_eq!(p.tenant.as_deref(), Some("bin2"));
+    c.unregister("bin2").expect("unregister");
+    // server-side failures come back as typed errors, not hangups
+    let err = c.predict(Some("nosuch"), &ds.test_x[0]).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown tenant"), "{err:#}");
+    let err = c.predict(None, &[0.0; 2]).unwrap_err();
+    assert!(format!("{err:#}").contains("expected"), "{err:#}");
+    // the connection survived every error above
+    c.ping().expect("ping after errors");
+    // drain flows through the same surface
+    c.drain(0).expect("drain");
+    assert!(c.drain(0).is_err(), "double drain must be refused");
+    drop(c);
+    srv.join();
+}
+
+#[test]
+fn golden_v0_line_grammar() {
+    let (coord, ds) = start_system();
+    // happy-path replies: exactly the historic strings
+    assert_eq!(server::handle_line(&coord, "PING"), Some("OK pong".into()));
+    assert_eq!(server::handle_line(&coord, "ping"), Some("OK pong".into()));
+    assert_eq!(server::handle_line(&coord, "QUIT"), None);
+    let feats: Vec<String> = ds.test_x[0].iter().map(|v| v.to_string()).collect();
+    let line = server::handle_line(&coord, &format!("CLASSIFY {}", feats.join(","))).unwrap();
+    let mut it = line.split_whitespace();
+    assert_eq!(it.next(), Some("OK"));
+    let label: i32 = it.next().expect("label").parse().expect("numeric label");
+    assert!(label == 1 || label == -1);
+    let score = it.next().expect("score");
+    assert_eq!(
+        score.split('.').nth(1).map(str::len),
+        Some(6),
+        "v0 scores carry exactly 6 decimals: {line}"
+    );
+    assert_eq!(it.next(), None, "nothing after the score: {line}");
+    let stats = server::handle_line(&coord, "STATS").unwrap();
+    assert!(stats.starts_with("OK requests="), "{stats}");
+    let models = server::handle_line(&coord, "MODELS").unwrap();
+    assert!(models.starts_with("OK default task="), "{models}");
+
+    // error replies: exactly the historic strings
+    assert_eq!(server::handle_line(&coord, ""), Some("ERR empty command".into()));
+    assert_eq!(
+        server::handle_line(&coord, "NOSUCH x"),
+        Some("ERR unknown command NOSUCH".into())
+    );
+    assert_eq!(
+        server::handle_line(&coord, "DRAIN abc"),
+        Some("ERR DRAIN wants a die index, got 'abc'".into())
+    );
+    assert_eq!(
+        server::handle_line(&coord, "DRAIN"),
+        Some("ERR DRAIN wants a die index, got ''".into())
+    );
+    assert_eq!(
+        server::handle_line(&coord, "UNREGISTER"),
+        Some("ERR UNREGISTER wants a tenant name".into())
+    );
+    assert_eq!(
+        server::handle_line(&coord, "REGISTER onlyname"),
+        Some("ERR REGISTER wants: REGISTER <name> <dataset> [seed]".into())
+    );
+    assert_eq!(
+        server::handle_line(&coord, "PREDICT slope"),
+        Some("ERR PREDICT wants: PREDICT <tenant> x1,x2,...".into())
+    );
+    // the bugfix: an empty feature list answers with the usage line,
+    // not the raw float-parse error it used to leak
+    assert_eq!(
+        server::handle_line(&coord, "CLASSIFY"),
+        Some("ERR CLASSIFY wants: CLASSIFY x1,x2,...".into())
+    );
+    assert_eq!(
+        server::handle_line(&coord, "PREDICT slope "),
+        Some("ERR PREDICT wants: PREDICT <tenant> x1,x2,...".into())
+    );
+    // genuinely bad features keep the parse diagnostic
+    let bad = server::handle_line(&coord, "CLASSIFY 0.1,bogus").unwrap();
+    assert!(bad.starts_with("ERR bad features:"), "{bad}");
+    // dispatch-level errors still read "ERR <context chain>"
+    let wrong_dim = server::handle_line(&coord, "CLASSIFY 1,2").unwrap();
+    assert!(wrong_dim.starts_with("ERR expected"), "{wrong_dim}");
+}
+
+#[test]
+fn idle_connections_drain_after_the_read_timeout() {
+    let ds = synth::brightdata(1).with_test_subsample(5, 1);
+    let mut cfg = ChipConfig::default().with_b(10);
+    cfg.d = ds.d();
+    let sys = SystemConfig {
+        n_chips: 1,
+        artifact_dir: "/nonexistent".into(),
+        max_wait: Duration::from_millis(1),
+        read_timeout: Some(Duration::from_millis(80)),
+        ..Default::default()
+    };
+    let coord = Arc::new(
+        Coordinator::start(&sys, &cfg, &ds.train_x, &ds.train_y, 0.1, 10).expect("start"),
+    );
+    let (addr, srv) = server::serve_n(Arc::clone(&coord), 1).expect("serve");
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut w = stream.try_clone().expect("clone");
+    let mut r = BufReader::new(stream);
+    // one good exchange first: the timeout is per-read, not per-connection
+    writeln!(w, "PING").unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    assert_eq!(line.trim(), "OK pong");
+    // ...then go idle: the server must hang up on its own (the old
+    // server blocked in read_line forever, pinning the thread)
+    line.clear();
+    let t0 = Instant::now();
+    let n = r.read_line(&mut line).unwrap_or(0);
+    assert_eq!(n, 0, "idle connection must be closed by the server, got {line:?}");
+    assert!(
+        t0.elapsed() >= Duration::from_millis(50),
+        "hung up before the timeout: {:?}",
+        t0.elapsed()
+    );
+    srv.join(); // the reaped connection lets the bounded server finish
+}

@@ -4,10 +4,9 @@
 //! their single-tenant baselines exactly, tenant isolation under
 //! unregister, and a post-drift refit restoring every tenant's heads.
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::TcpStream;
 use std::sync::Arc;
 
+use velm::client::Client;
 use velm::config::{ChipConfig, SystemConfig};
 use velm::coordinator::{server, Coordinator};
 use velm::datasets::digits::digits;
@@ -109,71 +108,56 @@ fn two_tenants_serve_concurrently_over_tcp_from_one_fleet() {
     let coord = Arc::new(boot(2));
     let (addr, srv) = server::serve_n(Arc::clone(&coord), 3).expect("serve");
 
-    // control connection: REGISTER both tenants through the protocol
-    let ctl = TcpStream::connect(addr).expect("connect");
-    let mut ctl_w = ctl.try_clone().unwrap();
-    let mut ctl_r = BufReader::new(ctl);
-    let mut line = String::new();
-    writeln!(ctl_w, "REGISTER digits digits 7").unwrap();
-    ctl_r.read_line(&mut line).unwrap();
-    assert!(line.starts_with("OK registered digits"), "{line}");
-    line.clear();
-    writeln!(ctl_w, "REGISTER bright brightness 7").unwrap();
-    ctl_r.read_line(&mut line).unwrap();
-    assert!(line.starts_with("OK registered bright"), "{line}");
-    line.clear();
-    writeln!(ctl_w, "MODELS").unwrap();
-    ctl_r.read_line(&mut line).unwrap();
-    assert!(line.contains("digits task=classification/10"), "{line}");
-    assert!(line.contains("bright task=regression"), "{line}");
-    line.clear();
-    // duplicate registration is a protocol error, not a panic
-    writeln!(ctl_w, "REGISTER digits digits 7").unwrap();
-    ctl_r.read_line(&mut line).unwrap();
-    assert!(line.starts_with("ERR"), "{line}");
+    // control connection (client SDK, v1 frames): REGISTER both tenants
+    let mut ctl = Client::connect(addr).expect("connect control");
+    let (task, _) = ctl.register("digits", "digits", 7).expect("register digits");
+    assert_eq!(task, "classification/10");
+    let (task, _) = ctl.register("bright", "brightness", 7).expect("register bright");
+    assert_eq!(task, "regression");
+    let models = ctl.models().expect("models");
+    assert!(models.contains("digits task=classification/10"), "{models}");
+    assert!(models.contains("bright task=regression"), "{models}");
+    // duplicate registration is a protocol error, not a panic or hangup
+    let err = ctl.register("digits", "digits", 7).unwrap_err();
+    assert!(format!("{err:#}").contains("already registered"), "{err:#}");
 
     // two concurrent clients, one per tenant, hammering the same fleet
+    // — one over v1 frames (batched), one over the v0 line protocol
     let digits_client = {
         let (xs, labels) = eval_digits(40);
         std::thread::spawn(move || {
-            let stream = TcpStream::connect(addr).expect("connect digits client");
-            let mut w = stream.try_clone().unwrap();
-            let mut r = BufReader::new(stream);
+            let mut client = Client::connect(addr).expect("connect digits client");
+            let rows: Vec<velm::protocol::PredictRow> = xs
+                .iter()
+                .map(|x| velm::protocol::PredictRow {
+                    tenant: Some("digits".into()),
+                    features: x.clone(),
+                })
+                .collect();
+            // the whole evaluation is ONE framed round-trip
+            let preds = client.predict_batch(&rows).expect("batch predict");
             let mut correct = 0usize;
-            for (x, &label) in xs.iter().zip(&labels) {
-                let feats: Vec<String> = x.iter().map(|v| v.to_string()).collect();
-                writeln!(w, "PREDICT digits {}", feats.join(",")).unwrap();
-                let mut line = String::new();
-                r.read_line(&mut line).unwrap();
-                assert!(line.starts_with("OK "), "{line}");
-                let got: usize = line.split_whitespace().nth(1).unwrap().parse().unwrap();
-                assert!(got < 10, "class out of range: {line}");
+            for (p, &label) in preds.iter().zip(&labels) {
+                let got = p.label as usize;
+                assert!(got < 10, "class out of range: {got}");
                 if got == label {
                     correct += 1;
                 }
             }
-            writeln!(w, "QUIT").unwrap();
             correct
         })
     };
     let bright_client = {
         let (xs, _) = eval_digits(40);
         std::thread::spawn(move || {
-            let stream = TcpStream::connect(addr).expect("connect bright client");
-            let mut w = stream.try_clone().unwrap();
-            let mut r = BufReader::new(stream);
+            let mut client = Client::connect_v0(addr).expect("connect bright client");
             let mut acc = 0.0f64;
             for x in &xs {
                 let target = x.iter().sum::<f64>() / x.len() as f64;
-                let feats: Vec<String> = x.iter().map(|v| v.to_string()).collect();
-                writeln!(w, "PREDICT bright {}", feats.join(",")).unwrap();
-                let mut line = String::new();
-                r.read_line(&mut line).unwrap();
-                assert!(line.starts_with("OK 0 "), "regression label must be 0: {line}");
-                let score: f64 = line.split_whitespace().nth(2).unwrap().parse().unwrap();
-                acc += (score - target) * (score - target);
+                let p = client.predict(Some("bright"), x).expect("predict");
+                assert_eq!(p.label, 0, "regression label must be 0");
+                acc += (p.score - target) * (p.score - target);
             }
-            writeln!(w, "QUIT").unwrap();
             (acc / xs.len() as f64).sqrt()
         })
     };
@@ -203,7 +187,7 @@ fn two_tenants_serve_concurrently_over_tcp_from_one_fleet() {
         40
     );
 
-    writeln!(ctl_w, "QUIT").unwrap();
+    drop(ctl); // client Drop sends the quit frame
     srv.join();
     match Arc::try_unwrap(coord) {
         Ok(c) => c.shutdown(),

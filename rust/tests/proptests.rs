@@ -4,8 +4,10 @@
 use velm::chip::{counter, dac, mirror, neuron, spi, ChipModel};
 use velm::config::{ChipConfig, Transfer};
 use velm::extension::RotationPlan;
+use velm::protocol::{frame, PredictRow, Prediction, Request, Response};
 use velm::testing::{check, close, ensure};
 use velm::util::mat::{ridge_solve, Mat};
+use velm::util::prng::Prng;
 
 #[test]
 fn prop_dac_linear_and_monotone() {
@@ -224,6 +226,130 @@ fn prop_linear_mode_superposition_upper_bound() {
             ensure(h2[j] >= h1[j], &format!("count shrank at {j}"))?;
         }
         Ok(())
+    });
+}
+
+// --- v1 frame codec (DESIGN.md §15) ---
+
+/// Random short string over a mixed alphabet (ASCII + a multi-byte
+/// UTF-8 char, so string length-prefixing is exercised in bytes).
+fn arb_string(rng: &mut Prng) -> String {
+    const ALPHABET: [char; 12] =
+        ['a', 'b', 'z', 'A', '0', '9', '_', '-', '.', ' ', ':', 'π'];
+    (0..1 + rng.usize(8)).map(|_| ALPHABET[rng.usize(ALPHABET.len())]).collect()
+}
+
+fn arb_tenant(rng: &mut Prng) -> Option<String> {
+    if rng.bool(0.5) {
+        Some(arb_string(rng))
+    } else {
+        None
+    }
+}
+
+fn arb_features(rng: &mut Prng) -> Vec<f64> {
+    (0..rng.usize(6)).map(|_| rng.range(-1.0, 1.0)).collect()
+}
+
+fn arb_prediction(rng: &mut Prng) -> Prediction {
+    Prediction {
+        label: rng.usize(256) as u8 as i8,
+        score: rng.range(-100.0, 100.0),
+        tenant: arb_tenant(rng),
+    }
+}
+
+fn arb_request(rng: &mut Prng) -> Request {
+    match rng.usize(9) {
+        0 => Request::Ping,
+        1 => Request::Stats,
+        2 => Request::Health,
+        3 => Request::Models,
+        4 => Request::Drain { die: rng.usize(64) },
+        5 => Request::Predict { tenant: arb_tenant(rng), features: arb_features(rng) },
+        6 => Request::BatchPredict {
+            rows: (0..rng.usize(5))
+                .map(|_| PredictRow { tenant: arb_tenant(rng), features: arb_features(rng) })
+                .collect(),
+        },
+        7 => Request::Register {
+            name: arb_string(rng),
+            dataset: arb_string(rng),
+            seed: rng.next_u64(),
+        },
+        _ => Request::Unregister { name: arb_string(rng) },
+    }
+}
+
+fn arb_response(rng: &mut Prng) -> Response {
+    match rng.usize(10) {
+        0 => Response::Pong,
+        1 => Response::Stats(arb_string(rng)),
+        2 => Response::Health(arb_string(rng)),
+        3 => Response::Models(arb_string(rng)),
+        4 => Response::Draining { die: rng.usize(64) },
+        5 => Response::Predict(arb_prediction(rng)),
+        6 => Response::Batch((0..rng.usize(5)).map(|_| arb_prediction(rng)).collect()),
+        7 => Response::Registered {
+            name: arb_string(rng),
+            task: arb_string(rng),
+            score: rng.range(0.0, 1.0),
+        },
+        8 => Response::Unregistered { name: arb_string(rng) },
+        _ => Response::Error(arb_string(rng)),
+    }
+}
+
+#[test]
+fn prop_v1_request_frames_roundtrip_exactly() {
+    // every request frame type: decode(encode(req)) == req, and a
+    // frame with trailing junk is rejected instead of silently trimmed
+    check("v1-request-roundtrip", 300, |rng| {
+        let req = arb_request(rng);
+        let (ty, payload) = frame::encode_request(&req);
+        let back = frame::decode_request(ty, &payload)?;
+        ensure(back.as_ref() == Some(&req), &format!("corrupted: {req:?} -> {back:?}"))?;
+        let mut junk = payload.clone();
+        junk.push(rng.usize(256) as u8);
+        ensure(
+            frame::decode_request(ty, &junk).is_err(),
+            "trailing bytes accepted",
+        )
+    });
+}
+
+#[test]
+fn prop_v1_response_frames_roundtrip_exactly() {
+    check("v1-response-roundtrip", 300, |rng| {
+        let resp = arb_response(rng);
+        let (ty, payload) = frame::encode_response(&resp);
+        let back = frame::decode_response(ty, &payload)?;
+        ensure(back == resp, &format!("corrupted: {resp:?} -> {back:?}"))?;
+        let mut junk = payload.clone();
+        junk.push(rng.usize(256) as u8);
+        ensure(
+            frame::decode_response(ty, &junk).is_err(),
+            "trailing bytes accepted",
+        )
+    });
+}
+
+#[test]
+fn prop_v1_truncated_payloads_never_panic() {
+    // chopping a valid payload anywhere must yield Err (or, for list
+    // frames, a shorter-but-valid prefix is impossible because counts
+    // lead) — never a panic or a bogus success
+    check("v1-truncation-safe", 200, |rng| {
+        let req = arb_request(rng);
+        let (ty, payload) = frame::encode_request(&req);
+        if payload.is_empty() {
+            return Ok(());
+        }
+        let cut = rng.usize(payload.len());
+        ensure(
+            frame::decode_request(ty, &payload[..cut]).is_err(),
+            &format!("truncation at {cut} of {} accepted for {req:?}", payload.len()),
+        )
     });
 }
 

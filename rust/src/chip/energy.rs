@@ -88,6 +88,37 @@ pub fn pj_per_mac(p_total: f64, t_c: f64, d: usize, l: usize) -> f64 {
     p_total * t_c / (d * l) as f64 * 1e12
 }
 
+/// Modelled energy of one full-array conversion at the die's nominal
+/// operating point, in joules: L neurons' average conversion energy
+/// (eq. 25 evaluated at the die's I_max^z) plus the analog-supply
+/// window energy `P_AVDD * T_neu`. This is the serving fleet's price
+/// per booked conversion (DESIGN.md §16). A non-finite neuron term
+/// (unrealisable counting window) contributes zero, so serving never
+/// books infinities.
+pub fn e_conversion_nominal(cfg: &ChipConfig) -> f64 {
+    let per_neuron = e_c(cfg.i_max_z(), cfg);
+    let neurons = if per_neuron.is_finite() {
+        cfg.l as f64 * per_neuron
+    } else {
+        0.0
+    };
+    let t_neu = cfg.t_neu();
+    let window = if t_neu.is_finite() { cfg.p_avdd * t_neu } else { 0.0 };
+    neurons + window
+}
+
+/// [`e_conversion_nominal`] rounded to whole femtojoules: workers book
+/// `conversions * price` in integer arithmetic, so the fleet's energy
+/// ledger is exact (tests assert equality, not tolerances) and the
+/// hot path never touches floating point.
+pub fn conversion_price_fj(cfg: &ChipConfig) -> u64 {
+    let e = e_conversion_nominal(cfg);
+    if !e.is_finite() {
+        return 0;
+    }
+    (e * 1e15).round().max(0.0) as u64
+}
+
 /// Throughput in MMAC/s at a classification rate.
 pub fn mmacs(rate_hz: f64, d: usize, l: usize) -> f64 {
     rate_hz * (d * l) as f64 / 1e6
@@ -221,5 +252,30 @@ mod tests {
     fn linear_mode_power_is_defined() {
         let c = cfg().with_mode(Transfer::Linear);
         assert!(power_neuron(c.i_sat_z(), &c) > 0.0);
+    }
+
+    #[test]
+    fn conversion_price_is_positive_finite_and_rounds_the_nominal_energy() {
+        let c = cfg();
+        let e = e_conversion_nominal(&c);
+        assert!(e.is_finite() && e > 0.0, "nominal conversion energy {e}");
+        // the window energy alone bounds it from below
+        assert!(e >= c.p_avdd * c.t_neu());
+        let price = conversion_price_fj(&c);
+        assert!(price > 0, "integer price must not round to zero");
+        assert_eq!(price, (e * 1e15).round() as u64);
+    }
+
+    #[test]
+    fn conversion_price_scales_with_hidden_width() {
+        // twice the neurons, (at least) roughly twice the neuron term:
+        // a wider die must never price a conversion cheaper
+        let narrow = cfg();
+        let wide = {
+            let mut c = cfg();
+            c.l = 2 * narrow.l;
+            c
+        };
+        assert!(conversion_price_fj(&wide) > conversion_price_fj(&narrow));
     }
 }

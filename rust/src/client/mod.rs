@@ -23,7 +23,10 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::coordinator::Coordinator;
-use crate::protocol::{Codec, FrameCodec, LineCodec, PredictRow, Prediction, Request, Response};
+use crate::protocol::{
+    Codec, FrameCodec, LineCodec, PredictRow, Prediction, Request, Response, StatsSnapshot,
+    TraceEntry,
+};
 
 /// A handle on one serving fleet, over TCP (v0 or v1) or in-process.
 pub struct Client {
@@ -180,6 +183,34 @@ impl Client {
     pub fn drain(&mut self, die: usize) -> Result<()> {
         match self.call(Request::Drain { die })? {
             Response::Draining { .. } => Ok(()),
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// Dump the newest `last` flight-recorder entries (DESIGN.md §16),
+    /// newest first. Typed traces need v1 or in-process; over v0 the
+    /// `TRACE` verb is display-only and this returns the server's
+    /// guidance as an error.
+    pub fn trace(&mut self, last: usize) -> Result<Vec<TraceEntry>> {
+        anyhow::ensure!(
+            self.wire_version() != Some(0),
+            "typed traces need the v1 framed protocol (v0 TRACE is display-only)"
+        );
+        match self.call(Request::Trace { last })? {
+            Response::Trace(ts) => Ok(ts),
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// One consistent structured stats export (DESIGN.md §16). Needs
+    /// v1 or in-process; v0 has no snapshot frame.
+    pub fn snapshot(&mut self) -> Result<StatsSnapshot> {
+        anyhow::ensure!(
+            self.wire_version() != Some(0),
+            "structured stats need the v1 framed protocol (use stats() on v0)"
+        );
+        match self.call(Request::Snapshot)? {
+            Response::Snapshot(s) => Ok(s),
             other => Err(unexpected(other)),
         }
     }

@@ -65,7 +65,12 @@ pub fn collect_batch(
 
 fn push(batch: &mut Batch, msg: WorkerMsg) {
     match msg {
-        WorkerMsg::Classify(req) => batch.requests.push(req),
+        WorkerMsg::Classify(mut req) => {
+            // Stage stamp (DESIGN.md §16): queue-wait ends the moment
+            // the batcher pulls the request into a forming batch.
+            req.collected = Some(Instant::now());
+            batch.requests.push(req);
+        }
         WorkerMsg::Control(ctl) => batch.control.push(ctl),
     }
 }
@@ -92,6 +97,7 @@ mod tests {
                 ),
             }),
             submitted: Instant::now(),
+            collected: None,
             reply: tx,
         })
     }
@@ -214,6 +220,16 @@ mod tests {
             b.requests.iter().map(|r| r.id).collect::<Vec<_>>(),
             (0..12).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn batcher_stamps_the_collected_instant() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(req(0)).unwrap();
+        let b = collect_batch(&rx, 8, Duration::from_millis(5), 1).unwrap();
+        let r = &b.requests[0];
+        let collected = r.collected.expect("batcher must stamp collected");
+        assert!(collected >= r.submitted, "queue stage must be non-negative");
     }
 
     #[test]

@@ -1,0 +1,167 @@
+//! Reusable lock-free log2 latency histogram (DESIGN.md §16).
+//!
+//! Factored out of `Metrics` so every distribution the observability
+//! layer tracks — end-to-end latency, queue-wait, batch-wait, compute,
+//! per-tenant latency — shares one implementation and one percentile
+//! estimator. Recording is two relaxed atomic adds; all math happens
+//! at snapshot time over a single copy of the buckets, so the three
+//! percentiles of one [`StageStats`] are always mutually monotone even
+//! under concurrent recording.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::protocol::stats::StageStats;
+
+/// Number of log2 buckets: bucket i covers [2^i, 2^(i+1)) us.
+pub const BUCKETS: usize = 32;
+
+/// One latency distribution: 32 log2 buckets + a running sum.
+/// Sub-microsecond samples are clamped to 1 us (bucket 0).
+#[derive(Debug, Default)]
+pub struct LatencyHist {
+    buckets: [AtomicU64; BUCKETS],
+    sum_us: AtomicU64,
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        LatencyHist::default()
+    }
+
+    /// Record one duration (clamped to >= 1 us).
+    pub fn record(&self, d: Duration) {
+        self.record_us(d.as_micros().max(1) as u64);
+    }
+
+    /// Record one sample in microseconds (0 is clamped to 1).
+    pub fn record_us(&self, us: u64) {
+        let us = us.max(1);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        let bucket = (63 - us.leading_zeros() as usize).min(BUCKETS - 1);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One relaxed copy of the buckets (the unit of consistency).
+    fn load(&self) -> [u64; BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.load().iter().sum()
+    }
+
+    /// Approximate percentile, interpolated within the bucket (see
+    /// [`percentile_from`]).
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        percentile_from(&self.load(), p)
+    }
+
+    /// Mean sample, microseconds (0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Reduce to exportable [`StageStats`]: one bucket copy feeds the
+    /// count and all three percentiles, so `p50 <= p90 <= p99` holds
+    /// even while writers are racing the snapshot.
+    pub fn snapshot(&self) -> StageStats {
+        let buckets = self.load();
+        StageStats {
+            count: buckets.iter().sum(),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+            p50_us: percentile_from(&buckets, 50.0),
+            p90_us: percentile_from(&buckets, 90.0),
+            p99_us: percentile_from(&buckets, 99.0),
+        }
+    }
+}
+
+/// Approximate percentile from a log2 histogram, interpolated within
+/// the bucket: the k-th of `count` samples in bucket [2^i, 2^(i+1)) is
+/// placed at `2^i * (1 + (k - 0.5)/count)` — uniform-within-bucket
+/// assumption. (Reporting the upper bucket edge, as `Metrics` once
+/// did, biases the estimate up to 2x high.)
+pub fn percentile_from(buckets: &[u64; BUCKETS], p: f64) -> u64 {
+    let total: u64 = buckets.iter().sum();
+    if total == 0 {
+        return 0;
+    }
+    let target = ((p / 100.0) * total as f64).ceil().max(1.0) as u64;
+    let mut acc = 0u64;
+    for (i, &count) in buckets.iter().enumerate() {
+        if count == 0 {
+            continue;
+        }
+        if acc + count >= target {
+            let k = (target - acc) as f64; // k-th sample inside this bucket
+            let lower = (1u64 << i) as f64;
+            let frac = ((k - 0.5) / count as f64).clamp(0.0, 1.0);
+            return (lower + lower * frac).round() as u64;
+        }
+        acc += count;
+    }
+    1u64 << BUCKETS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_brackets_percentiles() {
+        let h = LatencyHist::new();
+        for us in [10u64, 20, 40, 80, 160, 320, 640, 1280, 2560, 100_000] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 10);
+        let p50 = h.percentile_us(50.0);
+        assert!((128..256).contains(&p50), "p50 {p50}");
+        let p99 = h.percentile_us(99.0);
+        assert!((65536..131072).contains(&p99), "p99 {p99}");
+    }
+
+    #[test]
+    fn single_sample_interpolates_to_bucket_midpoint() {
+        let h = LatencyHist::new();
+        h.record(Duration::from_micros(3000)); // bucket [2048, 4096)
+        assert_eq!(h.percentile_us(50.0), 3072);
+    }
+
+    #[test]
+    fn zero_samples_clamp_to_one_microsecond() {
+        let h = LatencyHist::new();
+        h.record_us(0);
+        h.record(Duration::from_nanos(10));
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.percentile_us(99.0), 1);
+        assert!((h.mean_us() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn snapshot_is_internally_monotone_and_complete() {
+        let h = LatencyHist::new();
+        for us in [100u64, 200, 400, 800, 1600] {
+            h.record_us(us);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        assert_eq!(s.sum_us, 3100);
+        assert!(s.p50_us <= s.p90_us && s.p90_us <= s.p99_us, "{s:?}");
+        assert!((s.mean_us() - 620.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_hist_is_all_zero() {
+        let h = LatencyHist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile_us(50.0), 0);
+        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.snapshot(), StageStats::default());
+    }
+}

@@ -1,26 +1,37 @@
-//! Serving metrics: lock-free counters + a log2-bucketed latency
-//! histogram (atomics only on the hot path; percentile math at
-//! snapshot), plus per-tenant request/latency/score gauges
-//! (DESIGN.md §14). Tenant handles are `Arc<TenantMetrics>` resolved
+//! Serving metrics: lock-free counters, per-stage log2 latency
+//! histograms ([`LatencyHist`] — atomics only on the hot path;
+//! percentile math at snapshot), an always-on flight recorder of the
+//! last N request traces, and a modelled energy ledger (DESIGN.md
+//! §16). Per-tenant request/latency/energy/score gauges ride along
+//! (DESIGN.md §14): tenant handles are `Arc<TenantMetrics>` resolved
 //! once at submit and carried inside the request, so the hot path
 //! never locks the tenant directory.
+//!
+//! Every export — the classic one-line report, JSON, Prometheus text,
+//! the v1 snapshot frame — is built from ONE single-pass
+//! [`StatsSnapshot`], never from independent atomic reads, so readers
+//! cannot observe torn states like `responses > requests`.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-/// Number of log2 latency buckets: bucket i covers [2^i, 2^(i+1)) us.
-const BUCKETS: usize = 32;
+use super::hist::LatencyHist;
+use super::trace::{FlightRecorder, DEFAULT_TRACE_CAPACITY};
+use crate::protocol::stats::{StatsSnapshot, TenantStats, SNAPSHOT_VERSION};
 
 /// Per-tenant serving gauges: all atomics, shared between the submit
-/// path (requests), the workers (responses/latency) and the registry
-/// (train score after register/refit).
+/// path (requests), the workers (responses/latency/energy) and the
+/// registry (train score after register/refit).
 #[derive(Debug, Default)]
 pub struct TenantMetrics {
     pub requests: AtomicU64,
     pub responses: AtomicU64,
-    latency_sum_us: AtomicU64,
+    /// End-to-end latency of this tenant's answered rows.
+    latency: LatencyHist,
+    /// Modelled energy booked to this tenant's answered rows, fJ.
+    pub energy_fj: AtomicU64,
     /// Mean chip-in-the-loop train score across dies (classification:
     /// error rate; regression: RMSE), stored as f64 bits.
     score_bits: AtomicU64,
@@ -33,16 +44,21 @@ impl TenantMetrics {
 
     pub fn record_response(&self, latency: Duration) {
         self.responses.fetch_add(1, Ordering::Relaxed);
-        self.latency_sum_us
-            .fetch_add(latency.as_micros().max(1) as u64, Ordering::Relaxed);
+        self.latency.record(latency);
+    }
+
+    /// Book modelled conversion energy (femtojoules) to this tenant.
+    pub fn record_energy(&self, fj: u64) {
+        self.energy_fj.fetch_add(fj, Ordering::Relaxed);
     }
 
     pub fn mean_latency_us(&self) -> f64 {
-        let n = self.responses.load(Ordering::Relaxed);
-        if n == 0 {
-            return 0.0;
-        }
-        self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        self.latency.mean_us()
+    }
+
+    /// Interpolated latency percentile (shared [`LatencyHist`] math).
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        self.latency.percentile_us(p)
     }
 
     /// Record the tenant's train score (set at register and refit).
@@ -55,8 +71,9 @@ impl TenantMetrics {
     }
 }
 
-#[derive(Default)]
 pub struct Metrics {
+    /// When the coordinator started serving (the STATS time base).
+    started: Instant,
     pub requests: AtomicU64,
     /// Client-facing submit events: a single predict ticks this once,
     /// and a `BatchPredict` of B rows ALSO ticks it once (while
@@ -74,8 +91,25 @@ pub struct Metrics {
     /// request books `RotationPlan::passes()` of them (DESIGN.md §13),
     /// so `conversions / responses` is the fleet's mean pass cost.
     pub conversions: AtomicU64,
-    latency_us: [AtomicU64; BUCKETS],
-    latency_sum_us: AtomicU64,
+    /// Modelled energy of every booked conversion, femtojoules: each
+    /// worker prices its die's conversions at the die's operating
+    /// point (`chip::energy::conversion_price_fj`), so the ledger is
+    /// exactly `sum(conversions_i * price_i)` over dies.
+    pub energy_fj: AtomicU64,
+    /// Modelled MACs performed by those conversions (d*L per physical
+    /// conversion), the denominator of fleet pJ/MAC.
+    pub macs: AtomicU64,
+    /// End-to-end latency (submit -> reply).
+    latency: LatencyHist,
+    /// Stage: submit -> pulled off the batcher queue.
+    queue: LatencyHist,
+    /// Stage: pulled -> batch dispatched to an engine.
+    batch_wait: LatencyHist,
+    /// Stage: engine dispatch -> row answered.
+    compute: LatencyHist,
+    /// Flight recorder: the last N completed request traces,
+    /// dumpable via the `TRACE` verb (DESIGN.md §16).
+    pub trace: FlightRecorder,
     // fleet-health counters (DESIGN.md §12)
     /// Probe passes executed across the fleet.
     pub probes: AtomicU64,
@@ -94,9 +128,38 @@ pub struct Metrics {
     tenants: Mutex<BTreeMap<String, Arc<TenantMetrics>>>,
 }
 
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
+}
+
 impl Metrics {
     pub fn new() -> Self {
-        Metrics::default()
+        Metrics {
+            started: Instant::now(),
+            requests: AtomicU64::new(0),
+            submissions: AtomicU64::new(0),
+            responses: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            pjrt_batches: AtomicU64::new(0),
+            sim_batches: AtomicU64::new(0),
+            batched_requests: AtomicU64::new(0),
+            conversions: AtomicU64::new(0),
+            energy_fj: AtomicU64::new(0),
+            macs: AtomicU64::new(0),
+            latency: LatencyHist::new(),
+            queue: LatencyHist::new(),
+            batch_wait: LatencyHist::new(),
+            compute: LatencyHist::new(),
+            trace: FlightRecorder::new(DEFAULT_TRACE_CAPACITY),
+            probes: AtomicU64::new(0),
+            renorms: AtomicU64::new(0),
+            refits: AtomicU64::new(0),
+            quarantines: AtomicU64::new(0),
+            promotions: AtomicU64::new(0),
+            tenants: Mutex::new(BTreeMap::new()),
+        }
     }
 
     pub fn record_request(&self) {
@@ -120,6 +183,20 @@ impl Metrics {
 
     pub fn record_conversions(&self, n: u64) {
         self.conversions.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Book a batch's modelled energy (fJ) and MAC count.
+    pub fn record_energy(&self, fj: u64, macs: u64) {
+        self.energy_fj.fetch_add(fj, Ordering::Relaxed);
+        self.macs.fetch_add(macs, Ordering::Relaxed);
+    }
+
+    /// Record one answered request's stage decomposition
+    /// (queue-wait, batch-wait, compute) into the per-stage histograms.
+    pub fn record_stages(&self, queue: Duration, batch_wait: Duration, compute: Duration) {
+        self.queue.record(queue);
+        self.batch_wait.record(batch_wait);
+        self.compute.record(compute);
     }
 
     /// Create (or return) the gauge handle for a tenant.
@@ -156,46 +233,17 @@ impl Metrics {
 
     pub fn record_response(&self, latency: Duration) {
         self.responses.fetch_add(1, Ordering::Relaxed);
-        let us = latency.as_micros().max(1) as u64;
-        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
-        let bucket = (63 - us.leading_zeros() as usize).min(BUCKETS - 1);
-        self.latency_us[bucket].fetch_add(1, Ordering::Relaxed);
+        self.latency.record(latency);
     }
 
-    /// Approximate percentile from the log2 histogram, interpolated
-    /// within the bucket: the k-th of `count` samples in bucket
-    /// [2^i, 2^(i+1)) is placed at `2^i * (1 + (k - 0.5)/count)` —
-    /// uniform-within-bucket assumption. (Reporting the upper bucket
-    /// edge, as this used to, biases the estimate up to 2x high.)
+    /// Approximate end-to-end latency percentile (see
+    /// [`LatencyHist::percentile_us`]).
     pub fn latency_percentile_us(&self, p: f64) -> u64 {
-        let total: u64 = self.latency_us.iter().map(|b| b.load(Ordering::Relaxed)).sum();
-        if total == 0 {
-            return 0;
-        }
-        let target = ((p / 100.0) * total as f64).ceil().max(1.0) as u64;
-        let mut acc = 0u64;
-        for (i, b) in self.latency_us.iter().enumerate() {
-            let count = b.load(Ordering::Relaxed);
-            if count == 0 {
-                continue;
-            }
-            if acc + count >= target {
-                let k = (target - acc) as f64; // k-th sample inside this bucket
-                let lower = (1u64 << i) as f64;
-                let frac = ((k - 0.5) / count as f64).clamp(0.0, 1.0);
-                return (lower + lower * frac).round() as u64;
-            }
-            acc += count;
-        }
-        1u64 << BUCKETS
+        self.latency.percentile_us(p)
     }
 
     pub fn mean_latency_us(&self) -> f64 {
-        let n = self.responses.load(Ordering::Relaxed);
-        if n == 0 {
-            return 0.0;
-        }
-        self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        self.latency.mean_us()
     }
 
     pub fn mean_batch_size(&self) -> f64 {
@@ -206,42 +254,117 @@ impl Metrics {
         self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
     }
 
-    /// One-line human snapshot (plus a ` tenant[..]` clause per
-    /// registered tenant).
-    pub fn report(&self) -> String {
-        let tenants: String = self
+    /// One consistent picture of the fleet, taken in a single pass.
+    ///
+    /// `responses` is loaded BEFORE `requests` and then clamped to
+    /// `<= requests`: a request recorded between the two loads can
+    /// only raise `requests`, so the exported pair always satisfies
+    /// the invariant even mid-traffic (same for each tenant).
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let uptime_us = self.started.elapsed().as_micros() as u64;
+        let responses = self.responses.load(Ordering::Relaxed);
+        let requests = self.requests.load(Ordering::Relaxed);
+        let tenants = self
             .tenant_snapshot()
-            .iter()
+            .into_iter()
             .map(|(name, m)| {
+                let t_resp = m.responses.load(Ordering::Relaxed);
+                let t_req = m.requests.load(Ordering::Relaxed);
+                TenantStats {
+                    name,
+                    requests: t_req,
+                    responses: t_resp.min(t_req),
+                    energy_fj: m.energy_fj.load(Ordering::Relaxed),
+                    train_score: m.score(),
+                    latency: m.latency.snapshot(),
+                }
+            })
+            .collect();
+        StatsSnapshot {
+            version: SNAPSHOT_VERSION,
+            uptime_us,
+            requests,
+            submissions: self.submissions.load(Ordering::Relaxed),
+            responses: responses.min(requests),
+            batches: self.batches.load(Ordering::Relaxed),
+            pjrt_batches: self.pjrt_batches.load(Ordering::Relaxed),
+            sim_batches: self.sim_batches.load(Ordering::Relaxed),
+            batched_requests: self.batched_requests.load(Ordering::Relaxed),
+            conversions: self.conversions.load(Ordering::Relaxed),
+            probes: self.probes.load(Ordering::Relaxed),
+            renorms: self.renorms.load(Ordering::Relaxed),
+            refits: self.refits.load(Ordering::Relaxed),
+            quarantines: self.quarantines.load(Ordering::Relaxed),
+            promotions: self.promotions.load(Ordering::Relaxed),
+            energy_fj: self.energy_fj.load(Ordering::Relaxed),
+            macs: self.macs.load(Ordering::Relaxed),
+            latency: self.latency.snapshot(),
+            queue: self.queue.snapshot(),
+            batch_wait: self.batch_wait.snapshot(),
+            compute: self.compute.snapshot(),
+            tenants,
+        }
+    }
+
+    /// One-line human snapshot (plus a ` tenant[..]` clause per
+    /// registered tenant), rendered from one [`StatsSnapshot`].
+    pub fn report(&self) -> String {
+        let s = self.snapshot();
+        let tenants: String = s
+            .tenants
+            .iter()
+            .map(|t| {
                 format!(
-                    " tenant[{name}: req={} resp={} mean={:.0}us train_score={:.4}]",
-                    m.requests.load(Ordering::Relaxed),
-                    m.responses.load(Ordering::Relaxed),
-                    m.mean_latency_us(),
-                    m.score(),
+                    " tenant[{}: req={} resp={} mean={:.0}us p50~{}us p99~{}us energy_fj={} train_score={:.4}]",
+                    t.name,
+                    t.requests,
+                    t.responses,
+                    t.latency.mean_us(),
+                    t.latency.p50_us,
+                    t.latency.p99_us,
+                    t.energy_fj,
+                    t.train_score,
                 )
             })
             .collect();
+        let mean_batch = if s.batches == 0 {
+            0.0
+        } else {
+            s.batched_requests as f64 / s.batches as f64
+        };
         format!(
             "requests={} submissions={} responses={} batches={} (pjrt={}, sim={}, mean size {:.1}) \
              conversions={} latency mean={:.0}us p50~{}us p99~{}us \
-             fleet probes={} renorms={} refits={} quarantines={} promotions={}{tenants}",
-            self.requests.load(Ordering::Relaxed),
-            self.submissions.load(Ordering::Relaxed),
-            self.responses.load(Ordering::Relaxed),
-            self.batches.load(Ordering::Relaxed),
-            self.pjrt_batches.load(Ordering::Relaxed),
-            self.sim_batches.load(Ordering::Relaxed),
-            self.mean_batch_size(),
-            self.conversions.load(Ordering::Relaxed),
-            self.mean_latency_us(),
-            self.latency_percentile_us(50.0),
-            self.latency_percentile_us(99.0),
-            self.probes.load(Ordering::Relaxed),
-            self.renorms.load(Ordering::Relaxed),
-            self.refits.load(Ordering::Relaxed),
-            self.quarantines.load(Ordering::Relaxed),
-            self.promotions.load(Ordering::Relaxed),
+             fleet probes={} renorms={} refits={} quarantines={} promotions={} \
+             stages queue p50~{}us p99~{}us batch p50~{}us p99~{}us compute p50~{}us p99~{}us \
+             energy_fj={} pJ/MAC={:.3} uptime={:.1}s req/s={:.1} conv/s={:.1}{tenants}",
+            s.requests,
+            s.submissions,
+            s.responses,
+            s.batches,
+            s.pjrt_batches,
+            s.sim_batches,
+            mean_batch,
+            s.conversions,
+            s.latency.mean_us(),
+            s.latency.p50_us,
+            s.latency.p99_us,
+            s.probes,
+            s.renorms,
+            s.refits,
+            s.quarantines,
+            s.promotions,
+            s.queue.p50_us,
+            s.queue.p99_us,
+            s.batch_wait.p50_us,
+            s.batch_wait.p99_us,
+            s.compute.p50_us,
+            s.compute.p99_us,
+            s.energy_fj,
+            s.pj_per_mac(),
+            s.uptime_us as f64 * 1e-6,
+            s.requests_per_s(),
+            s.conversions_per_s(),
         )
     }
 }
@@ -363,5 +486,164 @@ mod tests {
         assert_eq!(m.mean_latency_us(), 0.0);
         assert_eq!(m.mean_batch_size(), 0.0);
         assert!(m.report().contains("requests=0"));
+    }
+
+    #[test]
+    fn tenant_percentiles_reach_the_report() {
+        let m = Metrics::new();
+        let t = m.register_tenant("digits");
+        t.record_request();
+        t.record_response(Duration::from_micros(3000)); // bucket [2048, 4096)
+        assert_eq!(t.latency_percentile_us(50.0), 3072);
+        let r = m.report();
+        assert!(r.contains("p50~3072us"), "{r}");
+    }
+
+    #[test]
+    fn energy_ledger_accumulates_and_prices_macs() {
+        let m = Metrics::new();
+        m.record_energy(1000, 50);
+        m.record_energy(500, 25);
+        let s = m.snapshot();
+        assert_eq!(s.energy_fj, 1500);
+        assert_eq!(s.macs, 75);
+        assert!((s.pj_per_mac() - 0.02).abs() < 1e-12, "1500 fJ / 75 MAC = 0.02 pJ/MAC");
+        assert!(m.report().contains("energy_fj=1500"), "{}", m.report());
+        let t = m.register_tenant("digits");
+        t.record_energy(300);
+        assert_eq!(m.snapshot().tenants[0].energy_fj, 300);
+    }
+
+    #[test]
+    fn snapshot_is_single_pass_and_self_consistent() {
+        let m = Metrics::new();
+        for _ in 0..5 {
+            m.record_request();
+        }
+        m.record_submission();
+        m.record_batch(5, false);
+        for _ in 0..3 {
+            m.record_response(Duration::from_micros(500));
+            m.record_stages(
+                Duration::from_micros(100),
+                Duration::from_micros(50),
+                Duration::from_micros(350),
+            );
+        }
+        let s = m.snapshot();
+        assert_eq!(s.version, SNAPSHOT_VERSION);
+        assert_eq!(s.requests, 5);
+        assert_eq!(s.responses, 3);
+        assert!(s.responses <= s.requests);
+        assert_eq!(s.latency.count, 3);
+        assert_eq!(s.queue.count, 3);
+        assert_eq!(s.batch_wait.count, 3);
+        assert_eq!(s.compute.count, 3);
+        // the JSON path roundtrips the same snapshot
+        let parsed = StatsSnapshot::from_json(&s.to_json()).unwrap();
+        assert_eq!(parsed.requests, s.requests);
+        assert_eq!(parsed.queue, s.queue);
+    }
+
+    #[test]
+    fn snapshot_clamps_torn_response_counts() {
+        let m = Metrics::new();
+        // simulate a torn read: responses ticked ahead of requests
+        m.responses.fetch_add(7, Ordering::Relaxed);
+        m.requests.fetch_add(2, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.responses, 2, "clamped to requests");
+        let t = m.register_tenant("digits");
+        t.responses.fetch_add(4, Ordering::Relaxed);
+        t.requests.fetch_add(1, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.tenants[0].responses, 1);
+    }
+
+    #[test]
+    fn uptime_and_rates_are_reported() {
+        let m = Metrics::new();
+        m.record_request();
+        std::thread::sleep(Duration::from_millis(5));
+        let s = m.snapshot();
+        assert!(s.uptime_us >= 5000, "uptime {}us", s.uptime_us);
+        assert!(s.requests_per_s() > 0.0);
+        let r = m.report();
+        assert!(r.contains("uptime="), "{r}");
+        assert!(r.contains("req/s="), "{r}");
+        assert!(r.contains("conv/s="), "{r}");
+    }
+
+    #[test]
+    fn threaded_stress_snapshots_stay_consistent() {
+        use crate::protocol::stats::{TraceEntry, TraceOutcome};
+        let m = Arc::new(Metrics::new());
+        let tenant = m.register_tenant("stress");
+        std::thread::scope(|scope| {
+            for worker in 0..4u64 {
+                let m = Arc::clone(&m);
+                let tenant = Arc::clone(&tenant);
+                scope.spawn(move || {
+                    for i in 0..2000u64 {
+                        // request strictly before response keeps the
+                        // invariant the snapshot clamp relies on
+                        m.record_request();
+                        tenant.record_request();
+                        let us = 1 + (worker * 2000 + i) % 5000;
+                        m.record_response(Duration::from_micros(us));
+                        tenant.record_response(Duration::from_micros(us));
+                        m.record_stages(
+                            Duration::from_micros(us / 4),
+                            Duration::from_micros(us / 8),
+                            Duration::from_micros(us / 2),
+                        );
+                        m.record_conversions(6);
+                        m.record_energy(6 * 100, 6 * 48);
+                        tenant.record_energy(6 * 100);
+                        m.trace.push(TraceEntry {
+                            id: worker * 2000 + i,
+                            tenant: Some("stress".into()),
+                            die: worker as u32,
+                            pjrt: false,
+                            passes: 6,
+                            queue_us: us / 4,
+                            batch_us: us / 8,
+                            compute_us: us / 2,
+                            total_us: us,
+                            outcome: TraceOutcome::Ok,
+                        });
+                    }
+                });
+            }
+            let m = Arc::clone(&m);
+            scope.spawn(move || {
+                for _ in 0..300 {
+                    let s = m.snapshot();
+                    assert!(s.responses <= s.requests, "{} > {}", s.responses, s.requests);
+                    for stage in [&s.latency, &s.queue, &s.batch_wait, &s.compute] {
+                        assert!(
+                            stage.p50_us <= stage.p90_us && stage.p90_us <= stage.p99_us,
+                            "non-monotone percentiles {stage:?}"
+                        );
+                    }
+                    for t in &s.tenants {
+                        assert!(t.responses <= t.requests);
+                    }
+                    let _ = m.trace.dump(64);
+                    let _ = m.report();
+                }
+            });
+        });
+        let s = m.snapshot();
+        assert_eq!(s.requests, 8000);
+        assert_eq!(s.responses, 8000);
+        assert_eq!(s.conversions, 48_000);
+        assert_eq!(s.energy_fj, 4_800_000);
+        assert_eq!(s.macs, 48_000 * 48);
+        assert_eq!(s.latency.count, 8000);
+        assert_eq!(m.trace.recorded(), 8000);
+        assert_eq!(s.tenants[0].requests, 8000);
+        assert_eq!(s.tenants[0].energy_fj, 4_800_000);
     }
 }

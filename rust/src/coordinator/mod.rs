@@ -22,10 +22,12 @@
 //! set); one OS thread per die mirrors one physical chip per board.
 
 pub mod batcher;
+pub mod hist;
 pub mod metrics;
 pub mod request;
 pub mod router;
 pub mod server;
+pub mod trace;
 pub mod worker;
 pub mod workload;
 
@@ -161,6 +163,11 @@ impl Coordinator {
             let mut cfg_i = chip_cfg.clone();
             cfg_i.d = ki;
             cfg_i.l = li;
+            // price one physical conversion on this die at its operating
+            // point (DESIGN.md §16) — every conversion the worker books
+            // lands in the energy ledger at this integer fJ price
+            let energy_fj_per_conversion =
+                crate::chip::energy::conversion_price_fj(&cfg_i);
             let seed = sys.seed + i as u64;
             let chip = ChipModel::fabricate(cfg_i, seed);
             let die = ServeChip::new(chip, vd, vl)
@@ -178,13 +185,13 @@ impl Coordinator {
             baselines.push(crate::fleet::probe::run_probe(&mut die, &second, &probe));
             let (tx, rx) = mpsc::channel();
             senders.push(tx);
-            setups.push((i, die, second, rx));
+            setups.push((i, die, second, rx, energy_fj_per_conversion));
         }
         let passes = costs.iter().copied().max().unwrap_or(1);
         let state = FleetState::new(n_total, sys.n_chips);
         let router = Router::with_costs(senders.clone(), state.clone(), costs);
         let mut workers = Vec::new();
-        for (i, die, second, rx) in setups {
+        for (i, die, second, rx, energy_fj_per_conversion) in setups {
             let setup = worker::WorkerSetup {
                 index: i,
                 die,
@@ -199,6 +206,7 @@ impl Coordinator {
                 pjrt_min_batch: sys.pjrt_min_batch,
                 pjrt_max_failures: sys.pjrt_max_failures,
                 normalize: sys.normalize,
+                energy_fj_per_conversion,
             };
             workers.push(
                 std::thread::Builder::new()
@@ -308,7 +316,17 @@ impl Coordinator {
                 Ok(()) => Response::Unregistered { name },
                 Err(e) => Response::Error(format!("{e:#}")),
             },
+            Request::Trace { last } => Response::Trace(self.metrics.trace.dump(last)),
+            Request::Snapshot => Response::Snapshot(self.snapshot()),
         }
+    }
+
+    /// One consistent [`crate::protocol::StatsSnapshot`] of the serving
+    /// fleet (DESIGN.md §16) — the structured form behind the `STATS`
+    /// one-liner, the JSON/Prometheus exports and the v1
+    /// `Request::Snapshot` frame.
+    pub fn snapshot(&self) -> crate::protocol::StatsSnapshot {
+        self.metrics.snapshot()
     }
 
     /// Start serving at an autotuned [`OperatingPoint`]
@@ -375,6 +393,7 @@ impl Coordinator {
             features,
             tenant: tag,
             submitted: Instant::now(),
+            collected: None,
             reply: tx,
         };
         self.metrics.record_submission();
@@ -453,6 +472,7 @@ impl Coordinator {
                 features: row.features.clone(),
                 tenant: tag,
                 submitted: Instant::now(),
+                collected: None,
                 reply: tx,
             };
             self.metrics.record_request();
@@ -884,6 +904,25 @@ mod tests {
         match coord.handle(Request::Unregister { name: "nosuch".into() }) {
             Response::Error(e) => assert!(e.contains("unknown tenant"), "{e}"),
             other => panic!("unregister dispatched to {other:?}"),
+        }
+        // observability verbs (DESIGN.md §16): the flight recorder has
+        // the answered request, the snapshot is self-consistent
+        match coord.handle(Request::Trace { last: 8 }) {
+            Response::Trace(ts) => {
+                assert!(!ts.is_empty(), "the classify above must be traced");
+                let t = &ts[0];
+                assert_eq!(t.outcome, crate::protocol::TraceOutcome::Ok);
+                assert!(t.queue_us + t.batch_us + t.compute_us <= t.total_us);
+            }
+            other => panic!("trace dispatched to {other:?}"),
+        }
+        match coord.handle(Request::Snapshot) {
+            Response::Snapshot(s) => {
+                assert!(s.responses <= s.requests);
+                assert!(s.requests >= 1);
+                assert!(s.energy_fj > 0, "served conversions must be priced");
+            }
+            other => panic!("snapshot dispatched to {other:?}"),
         }
         coord.shutdown();
     }

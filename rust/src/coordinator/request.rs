@@ -49,6 +49,12 @@ pub struct ClassifyRequest {
     /// their own tenant table (lock-free) using this tag.
     pub tenant: Option<TenantTag>,
     pub submitted: Instant,
+    /// When the batcher pulled this request off its queue — the
+    /// queue-wait / batch-wait stage boundary (DESIGN.md §16). `None`
+    /// until the batcher stamps it; stays `None` on paths that bypass
+    /// the batcher (direct `serve_batch` tests), where queue-wait
+    /// reads as zero.
+    pub collected: Option<Instant>,
     pub reply: mpsc::Sender<ClassifyResponse>,
 }
 
@@ -183,6 +189,7 @@ mod tests {
             features: vec![0.1, -0.2],
             tenant: None,
             submitted: Instant::now(),
+            collected: None,
             reply: tx,
         };
         let resp = ClassifyResponse {
@@ -214,6 +221,7 @@ mod tests {
             features: vec![0.0; 4],
             tenant: Some(tag.clone()),
             submitted: Instant::now(),
+            collected: None,
             reply: tx,
         };
         assert_eq!(req.tenant.as_ref().unwrap().name.as_ref(), "digits");

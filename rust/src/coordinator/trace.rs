@@ -1,0 +1,170 @@
+//! Flight recorder (DESIGN.md §16): a fixed-size ring of the last N
+//! completed request traces, always on.
+//!
+//! Hot-path cost is one relaxed `fetch_add` to claim a slot plus one
+//! *uncontended* `try_lock` to write it — a worker never blocks on the
+//! recorder. If a dump (or a lapped writer) holds the slot at that
+//! instant the trace is dropped, not queued: the recorder is a
+//! diagnostic window, not a reliable log, and the serving path always
+//! wins the trade.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::protocol::stats::TraceEntry;
+
+/// Ring capacity used by `Metrics` (last 512 requests — enough to hold
+/// several max-size batches from every die without measurable memory).
+pub const DEFAULT_TRACE_CAPACITY: usize = 512;
+
+/// Lock-free-on-the-hot-path ring buffer of completed request traces.
+pub struct FlightRecorder {
+    /// Monotone claim counter; slot = claim % capacity.
+    head: AtomicU64,
+    slots: Vec<Mutex<Option<TraceEntry>>>,
+}
+
+impl FlightRecorder {
+    /// A recorder holding the last `capacity.max(1)` traces.
+    pub fn new(capacity: usize) -> Self {
+        FlightRecorder {
+            head: AtomicU64::new(0),
+            slots: (0..capacity.max(1)).map(|_| Mutex::new(None)).collect(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total traces claimed since start (including any dropped to
+    /// slot contention).
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// Record one completed trace (best effort, never blocks).
+    pub fn push(&self, entry: TraceEntry) {
+        let seq = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = (seq % self.slots.len() as u64) as usize;
+        if let Ok(mut guard) = self.slots[slot].try_lock() {
+            *guard = Some(entry);
+        }
+        // Contended slot: drop the trace rather than stall a worker.
+    }
+
+    /// The most recent `last` traces, newest first. Entries a writer
+    /// is lapping mid-dump may surface as their older occupant (or be
+    /// skipped) — the dump is a consistent-enough diagnostic window,
+    /// never a blocking snapshot.
+    pub fn dump(&self, last: usize) -> Vec<TraceEntry> {
+        let head = self.head.load(Ordering::Relaxed);
+        let cap = self.slots.len() as u64;
+        let n = (last.min(self.slots.len()) as u64).min(head);
+        let mut out = Vec::with_capacity(n as usize);
+        for i in 0..n {
+            let seq = head - 1 - i;
+            let slot = (seq % cap) as usize;
+            if let Ok(guard) = self.slots[slot].lock() {
+                if let Some(entry) = guard.as_ref() {
+                    out.push(entry.clone());
+                }
+            }
+        }
+        out
+    }
+}
+
+impl std::fmt::Debug for FlightRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FlightRecorder")
+            .field("capacity", &self.slots.len())
+            .field("recorded", &self.recorded())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::stats::TraceOutcome;
+
+    fn entry(id: u64) -> TraceEntry {
+        TraceEntry {
+            id,
+            tenant: None,
+            die: 0,
+            pjrt: false,
+            passes: 1,
+            queue_us: 1,
+            batch_us: 1,
+            compute_us: 1,
+            total_us: 3,
+            outcome: TraceOutcome::Ok,
+        }
+    }
+
+    #[test]
+    fn dump_returns_newest_first_and_respects_limit() {
+        let r = FlightRecorder::new(8);
+        for id in 0..5 {
+            r.push(entry(id));
+        }
+        let all = r.dump(100);
+        assert_eq!(all.iter().map(|e| e.id).collect::<Vec<_>>(), vec![4, 3, 2, 1, 0]);
+        let two = r.dump(2);
+        assert_eq!(two.iter().map(|e| e.id).collect::<Vec<_>>(), vec![4, 3]);
+        assert!(r.dump(0).is_empty());
+    }
+
+    #[test]
+    fn ring_wraps_and_keeps_only_the_last_capacity() {
+        let r = FlightRecorder::new(4);
+        for id in 0..10 {
+            r.push(entry(id));
+        }
+        assert_eq!(r.recorded(), 10);
+        let ids: Vec<u64> = r.dump(100).iter().map(|e| e.id).collect();
+        assert_eq!(ids, vec![9, 8, 7, 6]);
+    }
+
+    #[test]
+    fn empty_recorder_dumps_nothing() {
+        let r = FlightRecorder::new(4);
+        assert!(r.dump(4).is_empty());
+        assert_eq!(r.recorded(), 0);
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped_to_one() {
+        let r = FlightRecorder::new(0);
+        assert_eq!(r.capacity(), 1);
+        r.push(entry(1));
+        r.push(entry(2));
+        let ids: Vec<u64> = r.dump(10).iter().map(|e| e.id).collect();
+        assert_eq!(ids, vec![2]);
+    }
+
+    #[test]
+    fn concurrent_pushes_and_dumps_never_panic() {
+        let r = std::sync::Arc::new(FlightRecorder::new(16));
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let r = std::sync::Arc::clone(&r);
+                s.spawn(move || {
+                    for i in 0..500 {
+                        r.push(entry(t * 1000 + i));
+                    }
+                });
+            }
+            let r = std::sync::Arc::clone(&r);
+            s.spawn(move || {
+                for _ in 0..200 {
+                    let d = r.dump(16);
+                    assert!(d.len() <= 16);
+                }
+            });
+        });
+        assert_eq!(r.recorded(), 2000);
+    }
+}

@@ -17,13 +17,14 @@
 use std::collections::BTreeMap;
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::chip::dac;
 use crate::config::SystemConfig;
 use crate::elm::secondstage::{codes_sum, SecondStage};
 use crate::extension::ServeChip;
 use crate::fleet::{calibrate, probe};
+use crate::protocol::stats::{TraceEntry, TraceOutcome};
 use crate::registry::TenantEntry;
 use crate::runtime::PjrtEngine;
 
@@ -55,6 +56,12 @@ pub struct WorkerSetup {
     /// for good — stop paying the flatten+attempt cost on every batch.
     pub pjrt_max_failures: u32,
     pub normalize: bool,
+    /// Modelled energy of one physical conversion on THIS die at its
+    /// operating point (`chip::energy::conversion_price_fj`), in
+    /// femtojoules — the worker prices every booked conversion with it
+    /// so the fleet ledger is `sum(conversions_i * price_i)` exactly
+    /// (DESIGN.md §16).
+    pub energy_fj_per_conversion: u64,
 }
 
 /// Once-per-worker log latches + the engine failure streak: a hot
@@ -161,6 +168,9 @@ pub(crate) fn serve_batch<E: BatchEngine>(
     requests: &[ClassifyRequest],
     artifact_stale: bool,
 ) {
+    // Stage boundary (DESIGN.md §16): batch-wait ends — and compute
+    // begins — when the collected batch reaches the engine dispatch.
+    let compute_start = Instant::now();
     let n = requests.len();
     let d = s.die.input_dim();
     let l = s.die.hidden_dim();
@@ -247,12 +257,48 @@ pub(crate) fn serve_batch<E: BatchEngine>(
         s.die.chip().ledger.conversions - conversions_before
     };
     s.metrics.record_conversions(booked);
+    // energy ledger (DESIGN.md §16): price the booked conversions at
+    // this die's operating point; each physical conversion performs
+    // d x L MACs on the fabricated array
+    let phys_macs = (s.die.chip().cfg.d * s.die.chip().cfg.l) as u64;
+    s.metrics.record_energy(
+        booked * s.energy_fj_per_conversion,
+        booked * phys_macs,
+    );
     let backend = if served_pjrt { Backend::Pjrt } else { Backend::ChipSim };
     let passes = s.die.passes();
     // training scaled H by 1/2^b, so tenant scores are rescaled into
     // training units (sign/argmax-invariant; regression needs it)
     let scale = 1.0 / cap as f64;
+    // span math (DESIGN.md §16): queue / batch-wait / compute partition
+    // the end-to-end span exactly in Duration arithmetic — only the
+    // per-stage flooring to whole micros makes the exported sum
+    // undershoot the exported total (by < 3 us). Saturating everywhere:
+    // a request that bypassed the batcher (collected = None) reads as
+    // zero queue-wait, never as a panic.
+    let stage_spans = |req: &ClassifyRequest| {
+        let now = Instant::now();
+        let collected = req.collected.unwrap_or(compute_start);
+        (
+            collected.saturating_duration_since(req.submitted),
+            compute_start.saturating_duration_since(collected),
+            now.saturating_duration_since(compute_start),
+            now.saturating_duration_since(req.submitted),
+        )
+    };
     for ((req, code), h) in requests.iter().zip(&codes).zip(&hidden) {
+        let mut trace = TraceEntry {
+            id: req.id,
+            tenant: req.tenant.as_ref().map(|t| t.name.as_ref().to_string()),
+            die: s.index as u32,
+            pjrt: served_pjrt,
+            passes: passes as u32,
+            queue_us: 0,
+            batch_us: 0,
+            compute_us: 0,
+            total_us: 0,
+            outcome: TraceOutcome::Ok,
+        };
         match h {
             Ok(h) => {
                 let cs = codes_sum(code);
@@ -270,6 +316,7 @@ pub(crate) fn serve_batch<E: BatchEngine>(
                 };
                 match outcome {
                     Some((label, score)) => {
+                        let (queue_d, batch_d, compute_d, total_d) = stage_spans(req);
                         let resp = ClassifyResponse {
                             id: req.id,
                             score,
@@ -278,12 +325,22 @@ pub(crate) fn serve_batch<E: BatchEngine>(
                             worker: s.index,
                             backend,
                             passes,
-                            latency: req.submitted.elapsed(),
+                            latency: total_d,
                         };
-                        s.metrics.record_response(resp.latency);
+                        s.metrics.record_response(total_d);
+                        s.metrics.record_stages(queue_d, batch_d, compute_d);
                         if let Some(tag) = &req.tenant {
-                            tag.metrics.record_response(resp.latency);
+                            tag.metrics.record_response(total_d);
+                            // per-tenant energy share: this row cost
+                            // `passes` physical conversions on this die
+                            tag.metrics
+                                .record_energy(passes as u64 * s.energy_fj_per_conversion);
                         }
+                        trace.queue_us = queue_d.as_micros() as u64;
+                        trace.batch_us = batch_d.as_micros() as u64;
+                        trace.compute_us = compute_d.as_micros() as u64;
+                        trace.total_us = total_d.as_micros() as u64;
+                        s.metrics.trace.push(trace);
                         s.outstanding.dec(s.index);
                         // receiver may have hung up; that's the client's business
                         let _ = req.reply.send(resp);
@@ -305,6 +362,13 @@ pub(crate) fn serve_batch<E: BatchEngine>(
                             );
                             logs.unknown_tenant = true;
                         }
+                        let (queue_d, batch_d, compute_d, total_d) = stage_spans(req);
+                        trace.queue_us = queue_d.as_micros() as u64;
+                        trace.batch_us = batch_d.as_micros() as u64;
+                        trace.compute_us = compute_d.as_micros() as u64;
+                        trace.total_us = total_d.as_micros() as u64;
+                        trace.outcome = TraceOutcome::DroppedUnknownTenant;
+                        s.metrics.trace.push(trace);
                         s.outstanding.dec(s.index);
                     }
                 }
@@ -323,6 +387,13 @@ pub(crate) fn serve_batch<E: BatchEngine>(
                     );
                     logs.dropped_request = true;
                 }
+                let (queue_d, batch_d, compute_d, total_d) = stage_spans(req);
+                trace.queue_us = queue_d.as_micros() as u64;
+                trace.batch_us = batch_d.as_micros() as u64;
+                trace.compute_us = compute_d.as_micros() as u64;
+                trace.total_us = total_d.as_micros() as u64;
+                trace.outcome = TraceOutcome::DroppedMalformed;
+                s.metrics.trace.push(trace);
                 s.outstanding.dec(s.index);
             }
         }
@@ -492,6 +563,9 @@ mod tests {
             pjrt_min_batch: 1,
             pjrt_max_failures: 3,
             normalize: false,
+            // a fixed 100 fJ/conversion makes the ledger assertions
+            // exact: energy_fj == 100 * conversions, always
+            energy_fj_per_conversion: 100,
         }
     }
 
@@ -506,6 +580,7 @@ mod tests {
                 features: vec![0.3; D],
                 tenant: None,
                 submitted: Instant::now(),
+                collected: None,
                 reply: tx,
             });
             rxs.push(rx);
@@ -748,5 +823,102 @@ mod tests {
         assert!(rxs[1].recv().is_ok(), "default row still answered");
         assert!(logs.unknown_tenant);
         assert_eq!(s.outstanding.load(0), 0);
+        // the drop still leaves a trace, labelled with its outcome
+        let dropped: Vec<_> = s
+            .metrics
+            .trace
+            .dump(16)
+            .into_iter()
+            .filter(|t| t.outcome == TraceOutcome::DroppedUnknownTenant)
+            .collect();
+        assert_eq!(dropped.len(), 1);
+        assert_eq!(dropped[0].tenant.as_deref(), Some("nosuch"));
+    }
+
+    #[test]
+    fn serving_books_energy_and_macs_at_the_die_price() {
+        // 3 sim requests on a physical die book 3 conversions, each
+        // priced at the setup's fixed 100 fJ and D*L MACs
+        let mut s = setup();
+        let mut engine: Option<FailEngine> = None;
+        let mut logs = LogOnce::default();
+        let (reqs, _rxs) = requests(&s, 3);
+        serve_batch(&mut s, &mut engine, &mut logs, &[], &reqs, false);
+        let snap = s.metrics.snapshot();
+        assert_eq!(snap.conversions, 3);
+        assert_eq!(snap.energy_fj, 300, "3 conversions x 100 fJ");
+        assert_eq!(snap.macs, 3 * (D * L) as u64);
+        assert!((snap.pj_per_mac() - 300.0e-3 / (3.0 * (D * L) as f64)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn virtual_die_books_pass_weighted_energy_per_tenant_row() {
+        // a 4-pass virtual die books 4 conversions per answered row;
+        // the tenant's share is passes * price for its own rows only
+        let cfg = ChipConfig::default().with_dims(D, L).with_b(10);
+        let chip = ChipModel::fabricate(cfg, 2);
+        let mut s = setup();
+        s.die = ServeChip::new(chip, 2 * D, 2 * L).unwrap(); // 4 passes
+        s.second = SecondStage::new(&[1.0; 2 * L], 10, false);
+        install_ones_regression_virtual(&mut s, "bright");
+        let mut engine: Option<FailEngine> = None;
+        let mut logs = LogOnce::default();
+        let (mut reqs, _rxs) = requests(&s, 2);
+        for r in &mut reqs {
+            r.features = vec![0.3; 2 * D];
+        }
+        reqs[1].tenant = Some(tag("bright"));
+        serve_batch(&mut s, &mut engine, &mut logs, &[], &reqs, false);
+        let snap = s.metrics.snapshot();
+        assert_eq!(snap.conversions, 8, "2 rows x 4 passes");
+        assert_eq!(snap.energy_fj, 800);
+        let tenant = &reqs[1].tenant.as_ref().unwrap().metrics;
+        assert_eq!(tenant.energy_fj.load(Ordering::Relaxed), 400, "4 passes x 100 fJ");
+    }
+
+    /// `install_ones_regression` for a virtual (2D x 2L) die.
+    fn install_ones_regression_virtual(s: &mut WorkerSetup, name: &str) {
+        let spec = Arc::new(
+            TenantSpec::regression(name, vec![vec![0.0; 2 * D]; 2], &[0.0, 0.0], 1.0, 10)
+                .unwrap(),
+        );
+        let (mut entry, _) = fit_on_die(&mut s.die, false, &spec).unwrap();
+        entry.rls.betas = vec![vec![1.0; 2 * L]];
+        entry.rebuild_heads(false);
+        s.tenants.insert(name.to_string(), entry);
+    }
+
+    #[test]
+    fn traces_decompose_the_end_to_end_span() {
+        let mut s = setup();
+        let mut engine: Option<FailEngine> = None;
+        let mut logs = LogOnce::default();
+        let (mut reqs, rxs) = requests(&s, 2);
+        // simulate the batcher's stamp so queue-wait is observable
+        std::thread::sleep(Duration::from_millis(2));
+        for r in &mut reqs {
+            r.collected = Some(Instant::now());
+        }
+        serve_batch(&mut s, &mut engine, &mut logs, &[], &reqs, false);
+        for rx in &rxs {
+            rx.recv().unwrap();
+        }
+        let traces = s.metrics.trace.dump(16);
+        assert_eq!(traces.len(), 2);
+        for t in &traces {
+            assert_eq!(t.outcome, TraceOutcome::Ok);
+            assert_eq!(t.die, 0);
+            assert!(!t.pjrt);
+            assert!(t.queue_us >= 1000, "slept 2ms before collect: {t}");
+            let sum = t.queue_us + t.batch_us + t.compute_us;
+            assert!(sum <= t.total_us, "stage sum overshoots total: {t}");
+            assert!(t.total_us - sum <= 3, "stage sum undershoots total: {t}");
+        }
+        // stage histograms populated once per answered request
+        let snap = s.metrics.snapshot();
+        assert_eq!(snap.queue.count, 2);
+        assert_eq!(snap.batch_wait.count, 2);
+        assert_eq!(snap.compute.count, 2);
+        assert!(snap.queue.p50_us >= 1000, "{:?}", snap.queue);
     }
 }

@@ -23,6 +23,7 @@ pub mod dse;
 pub mod elm;
 pub mod extension;
 pub mod fleet;
+pub mod loadgen;
 pub mod protocol;
 pub mod registry;
 pub mod runtime;

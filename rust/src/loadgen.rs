@@ -1,0 +1,285 @@
+//! Closed-loop serving load generator (`velm bench serve`, DESIGN.md
+//! §16): boot a fleet in-process, hammer it from N closed-loop worker
+//! threads (each waits for its answer before sending the next row),
+//! then reduce the coordinator's own [`StatsSnapshot`] into a
+//! versioned JSON benchmark report — the `BENCH_6.json` artifact CI
+//! regenerates and schema-validates.
+//!
+//! The report deliberately reuses the observability layer instead of
+//! measuring on its own: the per-stage percentiles come from the same
+//! histograms `STATS` serves, and the energy figures from the same
+//! ledger the workers price conversions into — so the benchmark also
+//! exercises the telemetry path it reports through.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::{ChipConfig, SystemConfig, Transfer};
+use crate::coordinator::Coordinator;
+use crate::datasets::synth;
+use crate::protocol::{StageStats, StatsSnapshot};
+use crate::util::json::Value;
+
+/// Schema tag stamped into every report; bump with the field set.
+pub const BENCH_SCHEMA: &str = "velm-bench-serve/1";
+
+/// One benchmark run's shape.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Synthetic dataset the fleet trains and serves on.
+    pub dataset: String,
+    pub seed: u64,
+    /// Total rows to serve across all closed-loop workers.
+    pub requests: usize,
+    /// Closed-loop client threads.
+    pub concurrency: usize,
+    /// Dies in the fleet.
+    pub chips: usize,
+    /// Cap on the training set (0 = full) — smoke runs train fast.
+    pub max_train: usize,
+}
+
+impl BenchConfig {
+    /// The CI smoke shape: small enough for seconds, large enough to
+    /// populate every stage histogram.
+    pub fn smoke() -> BenchConfig {
+        BenchConfig {
+            dataset: "brightdata".into(),
+            seed: 1,
+            requests: 400,
+            concurrency: 4,
+            chips: 2,
+            max_train: 200,
+        }
+    }
+
+    /// The default (non-smoke) shape.
+    pub fn full() -> BenchConfig {
+        BenchConfig { requests: 4000, max_train: 0, ..BenchConfig::smoke() }
+    }
+}
+
+/// What one run produced: wall-clock plus the coordinator's final
+/// snapshot (stage histograms, energy ledger, counters).
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    pub dataset: String,
+    pub requests: u64,
+    pub elapsed_us: u64,
+    pub snapshot: StatsSnapshot,
+}
+
+impl BenchReport {
+    /// Served rows per wall-clock second.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.elapsed_us == 0 {
+            0.0
+        } else {
+            self.snapshot.responses as f64 / (self.elapsed_us as f64 * 1e-6)
+        }
+    }
+
+    /// Render the versioned JSON report ([`BENCH_SCHEMA`]).
+    pub fn to_json(&self) -> String {
+        let u = |n: u64| Value::Num(n as f64);
+        let stage = |s: &StageStats| {
+            Value::Obj(vec![
+                ("count".into(), u(s.count)),
+                ("p50_us".into(), u(s.p50_us)),
+                ("p90_us".into(), u(s.p90_us)),
+                ("p99_us".into(), u(s.p99_us)),
+                ("mean_us".into(), Value::Num(s.mean_us())),
+            ])
+        };
+        let s = &self.snapshot;
+        let mut out = String::new();
+        Value::Obj(vec![
+            ("schema".into(), Value::Str(BENCH_SCHEMA.into())),
+            ("dataset".into(), Value::Str(self.dataset.clone())),
+            ("requests".into(), u(self.requests)),
+            ("responses".into(), u(s.responses)),
+            ("elapsed_us".into(), u(self.elapsed_us)),
+            ("throughput_rps".into(), Value::Num(self.throughput_rps())),
+            ("conversions".into(), u(s.conversions)),
+            ("energy_fj".into(), u(s.energy_fj)),
+            ("macs".into(), u(s.macs)),
+            ("pj_per_mac".into(), Value::Num(s.pj_per_mac())),
+            (
+                "stages".into(),
+                Value::Obj(vec![
+                    ("total".into(), stage(&s.latency)),
+                    ("queue".into(), stage(&s.queue)),
+                    ("batch_wait".into(), stage(&s.batch_wait)),
+                    ("compute".into(), stage(&s.compute)),
+                ]),
+            ),
+        ])
+        .write(&mut out);
+        out
+    }
+}
+
+/// Check a `BENCH_6.json` document against [`BENCH_SCHEMA`]: the tag,
+/// every counter, the derived rates and all four stage blocks must be
+/// present and self-consistent. CI runs this over the committed
+/// artifact after regenerating it.
+pub fn validate_bench_json(text: &str) -> Result<(), String> {
+    let v = Value::parse(text)?;
+    let schema = v.get("schema").and_then(Value::as_str).ok_or("missing 'schema'")?;
+    if schema != BENCH_SCHEMA {
+        return Err(format!("schema '{schema}' != '{BENCH_SCHEMA}'"));
+    }
+    v.get("dataset").and_then(Value::as_str).ok_or("missing 'dataset'")?;
+    let u = |k: &str| v.get(k).and_then(Value::as_u64).ok_or(format!("missing '{k}'"));
+    let f = |k: &str| {
+        v.get(k)
+            .and_then(Value::as_f64)
+            .filter(|x| x.is_finite() && *x >= 0.0)
+            .ok_or(format!("missing or non-finite '{k}'"))
+    };
+    let requests = u("requests")?;
+    let responses = u("responses")?;
+    if requests == 0 {
+        return Err("a bench report must serve at least one request".into());
+    }
+    if responses > requests {
+        return Err(format!("responses {responses} > requests {requests}"));
+    }
+    if u("elapsed_us")? == 0 {
+        return Err("elapsed_us must be positive".into());
+    }
+    f("throughput_rps")?;
+    f("pj_per_mac")?;
+    u("conversions")?;
+    u("energy_fj")?;
+    u("macs")?;
+    let stages = v.get("stages").ok_or("missing 'stages'")?;
+    for key in ["total", "queue", "batch_wait", "compute"] {
+        let s = stages.get(key).ok_or(format!("missing stage '{key}'"))?;
+        let su = |k: &str| {
+            s.get(k)
+                .and_then(Value::as_u64)
+                .ok_or(format!("stage '{key}' missing '{k}'"))
+        };
+        let count = su("count")?;
+        let (p50, p99) = (su("p50_us")?, su("p99_us")?);
+        su("p90_us")?;
+        if count > 0 && p50 > p99 {
+            return Err(format!("stage '{key}': p50 {p50} > p99 {p99}"));
+        }
+    }
+    Ok(())
+}
+
+/// Boot a fleet per `cfg`, drive it closed-loop, return the report.
+pub fn run(cfg: &BenchConfig) -> Result<BenchReport> {
+    let mut ds = synth::by_name(&cfg.dataset, cfg.seed)
+        .with_context(|| format!("unknown dataset {}", cfg.dataset))?;
+    if cfg.max_train > 0 && ds.train_x.len() > cfg.max_train {
+        ds.train_x.truncate(cfg.max_train);
+        ds.train_y.truncate(cfg.max_train);
+    }
+    let sys = SystemConfig {
+        n_chips: cfg.chips.max(1),
+        max_wait: Duration::from_millis(1),
+        seed: cfg.seed,
+        artifact_dir: "/nonexistent".into(),
+        ..SystemConfig::default()
+    };
+    let chip = ChipConfig::default()
+        .with_dims(ds.d(), 24)
+        .with_b(10)
+        .with_mode(Transfer::Quadratic);
+    let coord = Arc::new(Coordinator::start(&sys, &chip, &ds.train_x, &ds.train_y, 0.1, 10)?);
+    let workers = cfg.concurrency.max(1);
+    let per = (cfg.requests / workers).max(1);
+    let xs = &ds.train_x;
+    let t0 = Instant::now();
+    std::thread::scope(|scope| -> Result<()> {
+        let mut joins = Vec::new();
+        for w in 0..workers {
+            let coord = Arc::clone(&coord);
+            joins.push(scope.spawn(move || -> Result<()> {
+                for i in 0..per {
+                    // closed loop: wait for the answer before the next row
+                    coord.classify(xs[(w * per + i) % xs.len()].clone())?;
+                }
+                Ok(())
+            }));
+        }
+        for j in joins {
+            j.join().map_err(|_| anyhow::anyhow!("bench worker panicked"))??;
+        }
+        Ok(())
+    })?;
+    let elapsed_us = (t0.elapsed().as_micros() as u64).max(1);
+    let snapshot = coord.snapshot();
+    if let Ok(coord) = Arc::try_unwrap(coord) {
+        coord.shutdown();
+    }
+    Ok(BenchReport {
+        dataset: cfg.dataset.clone(),
+        requests: (per * workers) as u64,
+        elapsed_us,
+        snapshot,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_run_produces_a_valid_self_consistent_report() {
+        let cfg = BenchConfig {
+            requests: 60,
+            concurrency: 3,
+            chips: 2,
+            max_train: 120,
+            ..BenchConfig::smoke()
+        };
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.requests, 60);
+        let s = &report.snapshot;
+        assert_eq!(s.responses, 60, "closed-loop rows must all answer");
+        assert_eq!(s.queue.count, 60);
+        assert_eq!(s.batch_wait.count, 60);
+        assert_eq!(s.compute.count, 60);
+        assert!(s.energy_fj > 0, "served conversions must be priced");
+        assert!(s.macs > 0);
+        assert!(report.throughput_rps() > 0.0);
+        validate_bench_json(&report.to_json()).unwrap();
+    }
+
+    #[test]
+    fn validator_rejects_broken_reports() {
+        assert!(validate_bench_json("not json").is_err());
+        assert!(validate_bench_json("{}").is_err());
+        let err = validate_bench_json(r#"{"schema":"wrong/9"}"#).unwrap_err();
+        assert!(err.contains("schema"), "{err}");
+        // a report whose counters contradict each other is refused
+        let cfg = BenchConfig {
+            requests: 20,
+            concurrency: 2,
+            chips: 1,
+            max_train: 120,
+            ..BenchConfig::smoke()
+        };
+        let mut report = run(&cfg).unwrap();
+        report.snapshot.responses = report.requests + 5;
+        let err = validate_bench_json(&report.to_json()).unwrap_err();
+        assert!(err.contains("responses"), "{err}");
+    }
+
+    #[test]
+    fn committed_bench_artifact_passes_the_schema() {
+        // the repo-root BENCH_6.json is regenerated by CI via
+        // `velm bench serve --smoke`; whatever is committed must parse
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_6.json");
+        let text = std::fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("reading {path}: {e}"));
+        validate_bench_json(&text).unwrap_or_else(|e| panic!("{path}: {e}"));
+    }
+}

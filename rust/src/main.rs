@@ -45,15 +45,22 @@ fn usage() -> &'static str {
                                                      idle clients dropped after\n\
                                                      --read-timeout-ms, 0 = never)\n\
        client VERB [--addr HOST:PORT] [--v0]         typed client SDK against a running\n\
-                                                     fleet; VERB is one of ping | stats |\n\
+                                                     fleet; VERB is one of ping |\n\
+                                                     stats [--format human|json|prom] |\n\
                                                      health | models | drain --die N |\n\
                                                      predict --features 1,2 [--tenant T] |\n\
                                                      batch --row [tenant:]1,2 ... |\n\
+                                                     trace [--last N] |\n\
                                                      register NAME DATASET [--seed N] |\n\
                                                      unregister NAME   (--v0 forces the\n\
                                                      ASCII line protocol; default is the\n\
                                                      v1 framed protocol with one-round-\n\
-                                                     trip batches)\n\
+                                                     trip batches; trace and the json/prom\n\
+                                                     stats formats need v1)\n\
+       bench serve [--smoke] [--out FILE]            closed-loop serving benchmark against\n\
+             [--requests N] [--concurrency N]        an in-process fleet; reduces the\n\
+             [--chips N] [--dataset NAME]            observability snapshot into a\n\
+                                                     versioned JSON report (BENCH_6.json)\n\
        sweep --what ratio|beta-bits|counter-bits     quick design-space sweep (Fig. 7)\n\
        tune [--dataset NAME] [--rounds N] [--trials N] [--l LIST] [--b LIST]\n\
             [--batch LIST] [--weights E,J,T,X] [--out FILE]\n\
@@ -329,7 +336,22 @@ fn cmd_client(args: &Args) -> Result<()> {
             client.ping()?;
             println!("pong");
         }
-        "stats" => println!("{}", client.stats()?),
+        "stats" => match args.get_or("format", "human").as_str() {
+            "human" => println!("{}", client.stats()?),
+            "json" => println!("{}", client.snapshot()?.to_json()),
+            "prom" => print!("{}", client.snapshot()?.to_prometheus()),
+            other => bail!("unknown stats format '{other}' (human|json|prom)"),
+        },
+        "trace" => {
+            let last = args.get_usize("last", 32).map_err(anyhow::Error::msg)?;
+            let entries = client.trace(last)?;
+            if entries.is_empty() {
+                println!("trace ring empty (serve some traffic first)");
+            }
+            for t in entries {
+                println!("{t}");
+            }
+        }
         "health" => println!("{}", client.health()?),
         "models" => println!("{}", client.models()?),
         "drain" => {
@@ -388,9 +410,52 @@ fn cmd_client(args: &Args) -> Result<()> {
         }
         other => bail!(
             "unknown client verb '{other}' \
-             (ping|predict|batch|register|unregister|models|stats|health|drain)"
+             (ping|predict|batch|register|unregister|models|stats|health|drain|trace)"
         ),
     }
+    Ok(())
+}
+
+/// Closed-loop serving benchmark (DESIGN.md §16): boot an in-process
+/// fleet, hammer it, write the versioned JSON report CI validates.
+fn cmd_bench(args: &Args) -> Result<()> {
+    let what = args.positional.first().map(String::as_str).unwrap_or("serve");
+    anyhow::ensure!(what == "serve", "unknown bench target '{what}' (expected: serve)");
+    let mut cfg = if args.flag("smoke") {
+        velm::loadgen::BenchConfig::smoke()
+    } else {
+        velm::loadgen::BenchConfig::full()
+    };
+    cfg.dataset = args.get_or("dataset", &cfg.dataset);
+    cfg.seed = args.get_u64("seed", cfg.seed).map_err(anyhow::Error::msg)?;
+    cfg.requests = args.get_usize("requests", cfg.requests).map_err(anyhow::Error::msg)?;
+    cfg.concurrency =
+        args.get_usize("concurrency", cfg.concurrency).map_err(anyhow::Error::msg)?;
+    cfg.chips = args.get_usize("chips", cfg.chips).map_err(anyhow::Error::msg)?;
+    println!(
+        "bench serve: {} requests x {} closed-loop clients on {} ({} dies) ...",
+        cfg.requests, cfg.concurrency, cfg.dataset, cfg.chips
+    );
+    let report = velm::loadgen::run(&cfg)?;
+    let s = &report.snapshot;
+    println!(
+        "served {} rows in {:.2}s: {:.1} req/s, total p50 {}us p99 {}us \
+         (queue p50 {}us, batch p50 {}us, compute p50 {}us), {:.3} pJ/MAC",
+        s.responses,
+        report.elapsed_us as f64 * 1e-6,
+        report.throughput_rps(),
+        s.latency.p50_us,
+        s.latency.p99_us,
+        s.queue.p50_us,
+        s.batch_wait.p50_us,
+        s.compute.p50_us,
+        s.pj_per_mac()
+    );
+    let json = report.to_json();
+    velm::loadgen::validate_bench_json(&json).map_err(anyhow::Error::msg)?;
+    let out = args.get_or("out", "BENCH_6.json");
+    std::fs::write(&out, json + "\n").with_context(|| format!("writing {out}"))?;
+    println!("report written to {out}");
     Ok(())
 }
 
@@ -657,6 +722,7 @@ fn main() -> Result<()> {
         Some("classify") => cmd_classify(&args, false),
         Some("serve") => cmd_serve(&args),
         Some("client") => cmd_client(&args),
+        Some("bench") => cmd_bench(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("tune") => cmd_tune(&args),
         Some("fleet") => cmd_fleet(&args),

@@ -23,6 +23,7 @@
 
 use std::io::{BufRead, Read, Write};
 
+use super::stats::{StageStats, StatsSnapshot, TenantStats, TraceEntry, TraceOutcome};
 use super::{Codec, Decoded, PredictRow, Prediction, Request, Response};
 
 /// First byte of every v1 frame; the codec-negotiation sniff byte.
@@ -43,6 +44,8 @@ const T_BATCH: u8 = 0x07;
 const T_REGISTER: u8 = 0x08;
 const T_UNREGISTER: u8 = 0x09;
 const T_QUIT: u8 = 0x0A;
+const T_TRACE: u8 = 0x0B;
+const T_SNAPSHOT: u8 = 0x0C;
 
 // Response frame types (high bit set).
 const R_PONG: u8 = 0x81;
@@ -54,6 +57,8 @@ const R_PREDICT: u8 = 0x86;
 const R_BATCH: u8 = 0x87;
 const R_REGISTERED: u8 = 0x88;
 const R_UNREGISTERED: u8 = 0x89;
+const R_TRACE: u8 = 0x8A;
+const R_SNAPSHOT: u8 = 0x8B;
 const R_ERROR: u8 = 0xFF;
 
 // --- payload writers ---
@@ -90,6 +95,60 @@ fn put_prediction(buf: &mut Vec<u8>, p: &Prediction) {
     buf.push(p.label as u8);
     put_f64(buf, p.score);
     put_tenant(buf, p.tenant.as_deref());
+}
+
+fn put_trace_entry(buf: &mut Vec<u8>, t: &TraceEntry) {
+    put_u64(buf, t.id);
+    put_tenant(buf, t.tenant.as_deref());
+    put_u32(buf, t.die);
+    buf.push(t.pjrt as u8);
+    put_u32(buf, t.passes);
+    put_u64(buf, t.queue_us);
+    put_u64(buf, t.batch_us);
+    put_u64(buf, t.compute_us);
+    put_u64(buf, t.total_us);
+    buf.push(t.outcome.code());
+}
+
+fn put_stage(buf: &mut Vec<u8>, s: &StageStats) {
+    put_u64(buf, s.count);
+    put_u64(buf, s.sum_us);
+    put_u64(buf, s.p50_us);
+    put_u64(buf, s.p90_us);
+    put_u64(buf, s.p99_us);
+}
+
+fn put_snapshot(buf: &mut Vec<u8>, s: &StatsSnapshot) {
+    put_u32(buf, s.version);
+    put_u64(buf, s.uptime_us);
+    put_u64(buf, s.requests);
+    put_u64(buf, s.submissions);
+    put_u64(buf, s.responses);
+    put_u64(buf, s.batches);
+    put_u64(buf, s.pjrt_batches);
+    put_u64(buf, s.sim_batches);
+    put_u64(buf, s.batched_requests);
+    put_u64(buf, s.conversions);
+    put_u64(buf, s.probes);
+    put_u64(buf, s.renorms);
+    put_u64(buf, s.refits);
+    put_u64(buf, s.quarantines);
+    put_u64(buf, s.promotions);
+    put_u64(buf, s.energy_fj);
+    put_u64(buf, s.macs);
+    put_stage(buf, &s.latency);
+    put_stage(buf, &s.queue);
+    put_stage(buf, &s.batch_wait);
+    put_stage(buf, &s.compute);
+    put_u32(buf, s.tenants.len() as u32);
+    for t in &s.tenants {
+        put_str(buf, &t.name);
+        put_u64(buf, t.requests);
+        put_u64(buf, t.responses);
+        put_u64(buf, t.energy_fj);
+        put_f64(buf, t.train_score);
+        put_stage(buf, &t.latency);
+    }
 }
 
 // --- payload reader ---
@@ -152,6 +211,12 @@ impl<'a> Cur<'a> {
         (0..n).map(|_| self.f64()).collect()
     }
 
+    /// Payload bytes not yet consumed — the bound for hostile
+    /// list-count checks.
+    fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
+
     /// Decoders must consume the payload exactly.
     fn done(&self) -> Result<(), String> {
         if self.pos == self.b.len() {
@@ -202,6 +267,11 @@ pub fn encode_request(req: &Request) -> (u8, Vec<u8>) {
             put_str(&mut buf, name);
             T_UNREGISTER
         }
+        Request::Trace { last } => {
+            put_u32(&mut buf, *last as u32);
+            T_TRACE
+        }
+        Request::Snapshot => T_SNAPSHOT,
     };
     (ty, buf)
 }
@@ -234,6 +304,8 @@ pub fn decode_request(ty: u8, payload: &[u8]) -> Result<Option<Request>, String>
             seed: c.u64()?,
         },
         T_UNREGISTER => Request::Unregister { name: c.str()? },
+        T_TRACE => Request::Trace { last: c.u32()? as usize },
+        T_SNAPSHOT => Request::Snapshot,
         other => return Err(format!("unknown request frame type {other:#04x}")),
     };
     c.done()?;
@@ -282,6 +354,17 @@ pub fn encode_response(resp: &Response) -> (u8, Vec<u8>) {
             put_str(&mut buf, name);
             R_UNREGISTERED
         }
+        Response::Trace(ts) => {
+            put_u32(&mut buf, ts.len() as u32);
+            for t in ts {
+                put_trace_entry(&mut buf, t);
+            }
+            R_TRACE
+        }
+        Response::Snapshot(s) => {
+            put_snapshot(&mut buf, s);
+            R_SNAPSHOT
+        }
         Response::Error(e) => {
             put_str(&mut buf, e);
             R_ERROR
@@ -296,6 +379,87 @@ fn prediction(c: &mut Cur<'_>) -> Result<Prediction, String> {
         score: c.f64()?,
         tenant: c.tenant()?,
     })
+}
+
+fn trace_entry(c: &mut Cur<'_>) -> Result<TraceEntry, String> {
+    Ok(TraceEntry {
+        id: c.u64()?,
+        tenant: c.tenant()?,
+        die: c.u32()?,
+        pjrt: c.u8()? != 0,
+        passes: c.u32()?,
+        queue_us: c.u64()?,
+        batch_us: c.u64()?,
+        compute_us: c.u64()?,
+        total_us: c.u64()?,
+        outcome: {
+            let code = c.u8()?;
+            TraceOutcome::from_code(code)
+                .ok_or_else(|| format!("unknown trace outcome code {code}"))?
+        },
+    })
+}
+
+fn stage(c: &mut Cur<'_>) -> Result<StageStats, String> {
+    Ok(StageStats {
+        count: c.u64()?,
+        sum_us: c.u64()?,
+        p50_us: c.u64()?,
+        p90_us: c.u64()?,
+        p99_us: c.u64()?,
+    })
+}
+
+// Smallest possible wire sizes, the bound for hostile-count checks:
+// a trace entry is 8+4+4+1+4+4*8+1 bytes, a tenant stats block is
+// 4+3*8+8+5*8 bytes (empty names).
+const MIN_TRACE_ENTRY_LEN: usize = 54;
+const MIN_TENANT_STATS_LEN: usize = 76;
+
+fn snapshot(c: &mut Cur<'_>) -> Result<StatsSnapshot, String> {
+    let version = c.u32()?;
+    if version != super::stats::SNAPSHOT_VERSION {
+        return Err(format!("unsupported snapshot version {version}"));
+    }
+    let mut s = StatsSnapshot {
+        version,
+        uptime_us: c.u64()?,
+        requests: c.u64()?,
+        submissions: c.u64()?,
+        responses: c.u64()?,
+        batches: c.u64()?,
+        pjrt_batches: c.u64()?,
+        sim_batches: c.u64()?,
+        batched_requests: c.u64()?,
+        conversions: c.u64()?,
+        probes: c.u64()?,
+        renorms: c.u64()?,
+        refits: c.u64()?,
+        quarantines: c.u64()?,
+        promotions: c.u64()?,
+        energy_fj: c.u64()?,
+        macs: c.u64()?,
+        latency: stage(c)?,
+        queue: stage(c)?,
+        batch_wait: stage(c)?,
+        compute: stage(c)?,
+        tenants: Vec::new(),
+    };
+    let n = c.u32()? as usize;
+    if n > c.remaining() / MIN_TENANT_STATS_LEN {
+        return Err(format!("tenant count {n} exceeds the frame"));
+    }
+    for _ in 0..n {
+        s.tenants.push(TenantStats {
+            name: c.str()?,
+            requests: c.u64()?,
+            responses: c.u64()?,
+            energy_fj: c.u64()?,
+            train_score: c.f64()?,
+            latency: stage(c)?,
+        });
+    }
+    Ok(s)
 }
 
 /// Decode a response frame.
@@ -322,6 +486,18 @@ pub fn decode_response(ty: u8, payload: &[u8]) -> Result<Response, String> {
             score: c.f64()?,
         },
         R_UNREGISTERED => Response::Unregistered { name: c.str()? },
+        R_TRACE => {
+            let n = c.u32()? as usize;
+            if n > c.remaining() / MIN_TRACE_ENTRY_LEN {
+                return Err(format!("trace count {n} exceeds the frame"));
+            }
+            let mut ts = Vec::new();
+            for _ in 0..n {
+                ts.push(trace_entry(&mut c)?);
+            }
+            Response::Trace(ts)
+        }
+        R_SNAPSHOT => Response::Snapshot(snapshot(&mut c)?),
         R_ERROR => Response::Error(c.str()?),
         other => return Err(format!("unknown response frame type {other:#04x}")),
     };
@@ -536,5 +712,101 @@ mod tests {
         put_tenant(&mut payload, None);
         put_u32(&mut payload, u32::MAX);
         assert!(decode_request(T_PREDICT, &payload).is_err());
+    }
+
+    fn sample_trace() -> TraceEntry {
+        TraceEntry {
+            id: 42,
+            tenant: Some("digits".into()),
+            die: 3,
+            pjrt: true,
+            passes: 4,
+            queue_us: 120,
+            batch_us: 80,
+            compute_us: 950,
+            total_us: 1151,
+            outcome: TraceOutcome::Ok,
+        }
+    }
+
+    #[test]
+    fn trace_frames_roundtrip_via_io() {
+        let mut codec = FrameCodec;
+        let req = Request::Trace { last: 16 };
+        let mut buf = Vec::new();
+        codec.write_request(&mut buf, &req).unwrap();
+        let mut r: &[u8] = &buf;
+        match codec.read_request(&mut r).unwrap() {
+            Decoded::Request(back) => assert_eq!(back, req),
+            other => panic!("{other:?}"),
+        }
+
+        let mut dropped = sample_trace();
+        dropped.tenant = None;
+        dropped.pjrt = false;
+        dropped.outcome = TraceOutcome::DroppedUnknownTenant;
+        let resp = Response::Trace(vec![sample_trace(), dropped]);
+        let mut buf = Vec::new();
+        codec.write_response(&mut buf, &resp).unwrap();
+        let mut r: &[u8] = &buf;
+        assert_eq!(codec.read_response(&mut r, &req).unwrap(), Some(resp));
+    }
+
+    #[test]
+    fn snapshot_frames_roundtrip_via_io() {
+        let mut codec = FrameCodec;
+        let req = Request::Snapshot;
+        let mut buf = Vec::new();
+        codec.write_request(&mut buf, &req).unwrap();
+        let mut r: &[u8] = &buf;
+        match codec.read_request(&mut r).unwrap() {
+            Decoded::Request(back) => assert_eq!(back, req),
+            other => panic!("{other:?}"),
+        }
+
+        let resp = Response::Snapshot(StatsSnapshot::sample());
+        let mut buf = Vec::new();
+        codec.write_response(&mut buf, &resp).unwrap();
+        let mut r: &[u8] = &buf;
+        assert_eq!(codec.read_response(&mut r, &req).unwrap(), Some(resp));
+    }
+
+    #[test]
+    fn hostile_trace_and_tenant_counts_are_rejected() {
+        let mut payload = Vec::new();
+        put_u32(&mut payload, u32::MAX);
+        assert!(decode_response(R_TRACE, &payload).is_err());
+
+        // a snapshot whose tenant count overruns the frame: with no
+        // tenants encoded, the count is the last 4 payload bytes
+        let mut s = StatsSnapshot::sample();
+        s.tenants.clear();
+        let (_, mut hostile) = encode_response(&Response::Snapshot(s));
+        let n = hostile.len();
+        hostile[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_response(R_SNAPSHOT, &hostile).is_err());
+
+        // and trailing bytes after a well-formed snapshot are rejected
+        let (_, mut payload) = encode_response(&Response::Snapshot(StatsSnapshot::sample()));
+        payload.push(0);
+        assert!(decode_response(R_SNAPSHOT, &payload).is_err());
+    }
+
+    #[test]
+    fn unknown_trace_outcome_code_is_rejected() {
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 1);
+        put_trace_entry(&mut payload, &sample_trace());
+        let n = payload.len();
+        payload[n - 1] = 9; // no such outcome
+        assert!(decode_response(R_TRACE, &payload).is_err());
+    }
+
+    #[test]
+    fn snapshot_version_is_checked_on_decode() {
+        let (_, mut payload) = encode_response(&Response::Snapshot(StatsSnapshot::sample()));
+        payload[0..4].copy_from_slice(&99u32.to_le_bytes());
+        let err = decode_response(R_SNAPSHOT, &payload).unwrap_err();
+        assert!(err.contains("version"), "{err}");
     }
 }

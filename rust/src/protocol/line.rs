@@ -21,8 +21,15 @@
 //! PREDICT <tenant> x1,x2,...,xd  -> OK <label> <score>
 //! REGISTER <name> <dataset> [s]  -> OK registered <name> (<task>, mean train score <s>)
 //! UNREGISTER <name>              -> OK unregistered <name>
+//! TRACE [n]                      -> OK trace <entries, ' | ' separated>
 //! QUIT                           closes the connection
 //! ```
+//!
+//! `TRACE` (DESIGN.md §16) is display-only on v0: the reply stays one
+//! line (entries joined with `" | "`) so line-per-reply framing holds,
+//! and the client side does not parse it back into typed entries —
+//! typed traces and the structured [`super::StatsSnapshot`] ride the
+//! v1 frame codec only.
 
 use std::io::{BufRead, Write};
 
@@ -104,6 +111,16 @@ pub fn parse_line(line: &str) -> Decoded {
             }
             Decoded::Request(Request::Unregister { name: name.to_string() })
         }
+        "TRACE" => {
+            let rest = rest.trim();
+            if rest.is_empty() {
+                return Decoded::Request(Request::Trace { last: 32 });
+            }
+            match rest.parse::<usize>() {
+                Err(_) => Decoded::Malformed(format!("TRACE wants an entry count, got '{rest}'")),
+                Ok(last) => Decoded::Request(Request::Trace { last }),
+            }
+        }
         other => Decoded::Malformed(format!("unknown command {other}")),
     }
 }
@@ -118,6 +135,13 @@ pub fn format_response(resp: &Response) -> String {
         // unreachable from the v0 grammar (no batch command parses),
         // but a total function beats a panic if a caller mixes codecs
         Response::Batch(_) => "ERR batch responses need the v1 framed protocol".into(),
+        Response::Trace(ts) if ts.is_empty() => "OK trace empty".into(),
+        Response::Trace(ts) => {
+            let body =
+                ts.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(" | ");
+            format!("OK trace {body}")
+        }
+        Response::Snapshot(_) => "ERR snapshot responses need the v1 framed protocol".into(),
         Response::Registered { name, task, score } => {
             format!("OK registered {name} ({task}, mean train score {score:.4})")
         }
@@ -149,6 +173,10 @@ pub fn format_request(req: &Request) -> Result<String, String> {
             Ok(format!("REGISTER {name} {dataset} {seed}"))
         }
         Request::Unregister { name } => Ok(format!("UNREGISTER {name}")),
+        Request::Trace { last } => Ok(format!("TRACE {last}")),
+        Request::Snapshot => {
+            Err("protocol v0 has no snapshot frame; read STATS instead".into())
+        }
     }
 }
 
@@ -197,6 +225,12 @@ pub fn parse_response(line: &str, expect: &Request) -> Response {
             Response::Registered { name: name.clone(), task, score }
         }
         Request::Unregister { name } => Response::Unregistered { name: name.clone() },
+        // v0 trace replies are display text, not a typed dump; the SDK
+        // routes trace()/snapshot() over v1 or in-process instead
+        Request::Trace { .. } => {
+            Response::Error("v0 trace replies are display-only; use the v1 framed protocol".into())
+        }
+        Request::Snapshot => Response::Error("protocol v0 has no snapshot frame".into()),
     }
 }
 
@@ -279,7 +313,53 @@ mod tests {
             Request::Register { name: "a".into(), dataset: "digits".into(), seed: 1 }
         );
         assert_eq!(req("UNREGISTER a"), Request::Unregister { name: "a".into() });
+        assert_eq!(req("TRACE"), Request::Trace { last: 32 });
+        assert_eq!(req("trace 5"), Request::Trace { last: 5 });
         assert!(matches!(parse_line("QUIT"), Decoded::Quit));
+    }
+
+    #[test]
+    fn trace_verb_is_display_only_on_v0() {
+        match parse_line("TRACE nope") {
+            Decoded::Malformed(msg) => {
+                assert_eq!(msg, "TRACE wants an entry count, got 'nope'")
+            }
+            other => panic!("expected malformed, got {other:?}"),
+        }
+        // the reply stays one line: entries joined with " | "
+        use super::super::stats::{TraceEntry, TraceOutcome};
+        let entry = |id| TraceEntry {
+            id,
+            tenant: None,
+            die: 0,
+            pjrt: false,
+            passes: 1,
+            queue_us: 1,
+            batch_us: 2,
+            compute_us: 3,
+            total_us: 6,
+            outcome: TraceOutcome::Ok,
+        };
+        let line = format_response(&Response::Trace(vec![entry(1), entry(2)]));
+        assert!(line.starts_with("OK trace id=1 "), "{line}");
+        assert!(line.contains(" | id=2 "), "{line}");
+        assert!(!line.contains('\n'), "v0 replies must stay one line");
+        assert_eq!(format_response(&Response::Trace(vec![])), "OK trace empty");
+        // typed spellings the v0 grammar cannot carry
+        assert_eq!(
+            format_response(&Response::Snapshot(Default::default())),
+            "ERR snapshot responses need the v1 framed protocol"
+        );
+        assert_eq!(format_request(&Request::Trace { last: 8 }).unwrap(), "TRACE 8");
+        assert!(format_request(&Request::Snapshot).is_err());
+        assert!(matches!(
+            parse_response("OK trace empty", &Request::Trace { last: 8 }),
+            Response::Error(_)
+        ));
+        assert!(matches!(
+            parse_response("OK whatever", &Request::Snapshot),
+            Response::Error(_)
+        ));
     }
 
     #[test]

@@ -27,9 +27,11 @@
 
 pub mod frame;
 pub mod line;
+pub mod stats;
 
 pub use frame::FrameCodec;
 pub use line::LineCodec;
+pub use stats::{StageStats, StatsSnapshot, TenantStats, TraceEntry, TraceOutcome};
 
 use std::io::{BufRead, Write};
 
@@ -73,6 +75,12 @@ pub enum Request {
     },
     /// Drop a tenant fleet-wide.
     Unregister { name: String },
+    /// Dump the newest `last` entries from the flight recorder
+    /// (DESIGN.md §16). The v0 spelling is `TRACE [n]`.
+    Trace { last: usize },
+    /// One consistent [`StatsSnapshot`] as a typed value (v1 only; v0
+    /// clients read the rendered `STATS` line instead).
+    Snapshot,
 }
 
 /// One scored row, as the protocol reports it.
@@ -106,6 +114,10 @@ pub enum Response {
         score: f64,
     },
     Unregistered { name: String },
+    /// Flight-recorder dump, newest first.
+    Trace(Vec<TraceEntry>),
+    /// The structured stats export.
+    Snapshot(StatsSnapshot),
     Error(String),
 }
 

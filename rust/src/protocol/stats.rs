@@ -1,0 +1,614 @@
+//! Structured telemetry export (DESIGN.md §16): the versioned
+//! [`StatsSnapshot`] every observer shares, plus the flight-recorder
+//! [`TraceEntry`] schema.
+//!
+//! One snapshot is taken in a single pass over the coordinator's
+//! metrics (`Metrics::snapshot`), then rendered three ways without
+//! re-reading any atomic:
+//!
+//!   * the classic one-line `STATS` string (v0 clients, humans);
+//!   * JSON (`to_json` / `from_json`) for `velm client stats --format
+//!     json` and the `BENCH_6.json` recorder;
+//!   * Prometheus-style text (`to_prometheus`) for scrape endpoints.
+//!
+//! It also crosses the v1 wire as a typed frame
+//! (`Response::Snapshot`), so the client SDK and tests never scrape
+//! strings. All derived rates (requests/s, pJ/MAC) are computed from
+//! the snapshot's own fields — torn reads cannot manufacture them.
+
+use crate::util::json::{self, Value};
+
+/// Version stamp carried by every exported snapshot. Bump when a field
+/// is added/renamed so recorded trajectories stay interpretable.
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+/// One latency distribution, reduced to the fields observers need.
+/// Percentiles come from the 32-bucket log2 histogram (same
+/// interpolation as the live `LatencyHist`), so they are estimates
+/// with at-most-half-bucket bias, not exact order statistics.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StageStats {
+    /// Samples recorded.
+    pub count: u64,
+    /// Sum of all samples, microseconds.
+    pub sum_us: u64,
+    pub p50_us: u64,
+    pub p90_us: u64,
+    pub p99_us: u64,
+}
+
+impl StageStats {
+    /// Mean sample, microseconds (0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    fn to_value(&self) -> Value {
+        Value::Obj(vec![
+            ("count".into(), Value::Num(self.count as f64)),
+            ("sum_us".into(), Value::Num(self.sum_us as f64)),
+            ("p50_us".into(), Value::Num(self.p50_us as f64)),
+            ("p90_us".into(), Value::Num(self.p90_us as f64)),
+            ("p99_us".into(), Value::Num(self.p99_us as f64)),
+        ])
+    }
+
+    fn from_value(v: &Value) -> Result<StageStats, String> {
+        let field = |k: &str| {
+            v.get(k)
+                .and_then(Value::as_u64)
+                .ok_or_else(|| format!("stage stats missing '{k}'"))
+        };
+        Ok(StageStats {
+            count: field("count")?,
+            sum_us: field("sum_us")?,
+            p50_us: field("p50_us")?,
+            p90_us: field("p90_us")?,
+            p99_us: field("p99_us")?,
+        })
+    }
+}
+
+/// Per-tenant slice of the snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantStats {
+    pub name: String,
+    pub requests: u64,
+    pub responses: u64,
+    /// Modelled energy booked to this tenant's answered rows, fJ.
+    pub energy_fj: u64,
+    /// Mean chip-in-the-loop training score across dies.
+    pub train_score: f64,
+    /// End-to-end latency of this tenant's answered rows.
+    pub latency: StageStats,
+}
+
+/// One consistent picture of the serving fleet, taken in a single
+/// pass. `responses <= requests` holds by construction (the snapshot
+/// clamps), so readers never see torn counters.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StatsSnapshot {
+    /// [`SNAPSHOT_VERSION`] at export time.
+    pub version: u32,
+    /// Microseconds since `Coordinator::start` returned.
+    pub uptime_us: u64,
+    /// Rows accepted for classification.
+    pub requests: u64,
+    /// Submit events (a v1 batch of k rows = 1 submission, k requests).
+    pub submissions: u64,
+    /// Rows answered. Clamped to `<= requests`.
+    pub responses: u64,
+    pub batches: u64,
+    pub pjrt_batches: u64,
+    pub sim_batches: u64,
+    /// Rows that flowed through formed batches.
+    pub batched_requests: u64,
+    /// Analog conversions booked (virtual dies book passes-per-row).
+    pub conversions: u64,
+    pub probes: u64,
+    pub renorms: u64,
+    pub refits: u64,
+    pub quarantines: u64,
+    pub promotions: u64,
+    /// Modelled energy of all booked conversions, femtojoules.
+    pub energy_fj: u64,
+    /// Modelled MACs performed by those conversions.
+    pub macs: u64,
+    /// End-to-end latency (submit -> reply), the classic histogram.
+    pub latency: StageStats,
+    /// Stage: submit -> pulled off the batcher queue.
+    pub queue: StageStats,
+    /// Stage: pulled -> batch dispatched to an engine.
+    pub batch_wait: StageStats,
+    /// Stage: engine dispatch -> row answered.
+    pub compute: StageStats,
+    pub tenants: Vec<TenantStats>,
+}
+
+impl StatsSnapshot {
+    /// Modelled energy in joules.
+    pub fn energy_j(&self) -> f64 {
+        self.energy_fj as f64 * 1e-15
+    }
+
+    /// Fleet-wide modelled pJ/MAC (0 when no MACs have run).
+    pub fn pj_per_mac(&self) -> f64 {
+        if self.macs == 0 {
+            0.0
+        } else {
+            (self.energy_fj as f64 * 1e-3) / self.macs as f64
+        }
+    }
+
+    /// Requests per second over the uptime window (0 before any time passes).
+    pub fn requests_per_s(&self) -> f64 {
+        if self.uptime_us == 0 {
+            0.0
+        } else {
+            self.requests as f64 / (self.uptime_us as f64 * 1e-6)
+        }
+    }
+
+    /// Conversions per second over the uptime window.
+    pub fn conversions_per_s(&self) -> f64 {
+        if self.uptime_us == 0 {
+            0.0
+        } else {
+            self.conversions as f64 / (self.uptime_us as f64 * 1e-6)
+        }
+    }
+
+    /// Serialize as one compact JSON object with deterministic field order.
+    pub fn to_json(&self) -> String {
+        let u = |n: u64| Value::Num(n as f64);
+        let mut fields = vec![
+            ("version".into(), u(self.version as u64)),
+            ("uptime_us".into(), u(self.uptime_us)),
+            ("requests".into(), u(self.requests)),
+            ("submissions".into(), u(self.submissions)),
+            ("responses".into(), u(self.responses)),
+            ("batches".into(), u(self.batches)),
+            ("pjrt_batches".into(), u(self.pjrt_batches)),
+            ("sim_batches".into(), u(self.sim_batches)),
+            ("batched_requests".into(), u(self.batched_requests)),
+            ("conversions".into(), u(self.conversions)),
+            ("probes".into(), u(self.probes)),
+            ("renorms".into(), u(self.renorms)),
+            ("refits".into(), u(self.refits)),
+            ("quarantines".into(), u(self.quarantines)),
+            ("promotions".into(), u(self.promotions)),
+            ("energy_fj".into(), u(self.energy_fj)),
+            ("macs".into(), u(self.macs)),
+            ("pj_per_mac".into(), Value::Num(self.pj_per_mac())),
+            ("requests_per_s".into(), Value::Num(self.requests_per_s())),
+            (
+                "conversions_per_s".into(),
+                Value::Num(self.conversions_per_s()),
+            ),
+            ("latency".into(), self.latency.to_value()),
+            ("queue".into(), self.queue.to_value()),
+            ("batch_wait".into(), self.batch_wait.to_value()),
+            ("compute".into(), self.compute.to_value()),
+        ];
+        let tenants = self
+            .tenants
+            .iter()
+            .map(|t| {
+                Value::Obj(vec![
+                    ("name".into(), Value::Str(t.name.clone())),
+                    ("requests".into(), u(t.requests)),
+                    ("responses".into(), u(t.responses)),
+                    ("energy_fj".into(), u(t.energy_fj)),
+                    ("train_score".into(), Value::Num(t.train_score)),
+                    ("latency".into(), t.latency.to_value()),
+                ])
+            })
+            .collect();
+        fields.push(("tenants".into(), Value::Arr(tenants)));
+        let mut out = String::new();
+        Value::Obj(fields).write(&mut out);
+        out
+    }
+
+    /// Parse a `to_json` document back. Derived-rate fields are
+    /// recomputed, not read, so they can never disagree with counters.
+    pub fn from_json(text: &str) -> Result<StatsSnapshot, String> {
+        let v = Value::parse(text)?;
+        let field = |k: &str| {
+            v.get(k)
+                .and_then(Value::as_u64)
+                .ok_or_else(|| format!("snapshot missing '{k}'"))
+        };
+        let stage = |k: &str| {
+            StageStats::from_value(v.get(k).ok_or_else(|| format!("snapshot missing '{k}'"))?)
+        };
+        let version = field("version")? as u32;
+        if version != SNAPSHOT_VERSION {
+            return Err(format!(
+                "snapshot version {version} unsupported (expected {SNAPSHOT_VERSION})"
+            ));
+        }
+        let mut tenants = Vec::new();
+        for t in v
+            .get("tenants")
+            .and_then(Value::as_arr)
+            .ok_or("snapshot missing 'tenants'")?
+        {
+            let tf = |k: &str| {
+                t.get(k)
+                    .and_then(Value::as_u64)
+                    .ok_or_else(|| format!("tenant missing '{k}'"))
+            };
+            tenants.push(TenantStats {
+                name: t
+                    .get("name")
+                    .and_then(Value::as_str)
+                    .ok_or("tenant missing 'name'")?
+                    .to_string(),
+                requests: tf("requests")?,
+                responses: tf("responses")?,
+                energy_fj: tf("energy_fj")?,
+                train_score: t
+                    .get("train_score")
+                    .and_then(Value::as_f64)
+                    .ok_or("tenant missing 'train_score'")?,
+                latency: StageStats::from_value(
+                    t.get("latency").ok_or("tenant missing 'latency'")?,
+                )?,
+            });
+        }
+        Ok(StatsSnapshot {
+            version,
+            uptime_us: field("uptime_us")?,
+            requests: field("requests")?,
+            submissions: field("submissions")?,
+            responses: field("responses")?,
+            batches: field("batches")?,
+            pjrt_batches: field("pjrt_batches")?,
+            sim_batches: field("sim_batches")?,
+            batched_requests: field("batched_requests")?,
+            conversions: field("conversions")?,
+            probes: field("probes")?,
+            renorms: field("renorms")?,
+            refits: field("refits")?,
+            quarantines: field("quarantines")?,
+            promotions: field("promotions")?,
+            energy_fj: field("energy_fj")?,
+            macs: field("macs")?,
+            latency: stage("latency")?,
+            queue: stage("queue")?,
+            batch_wait: stage("batch_wait")?,
+            compute: stage("compute")?,
+            tenants,
+        })
+    }
+
+    /// Render as Prometheus exposition text (counters + gauges +
+    /// per-stage quantile gauges), one scrape's worth.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut counter = |name: &str, v: u64| {
+            out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+        };
+        counter("velm_requests_total", self.requests);
+        counter("velm_submissions_total", self.submissions);
+        counter("velm_responses_total", self.responses);
+        counter("velm_batches_total", self.batches);
+        counter("velm_pjrt_batches_total", self.pjrt_batches);
+        counter("velm_sim_batches_total", self.sim_batches);
+        counter("velm_batched_requests_total", self.batched_requests);
+        counter("velm_conversions_total", self.conversions);
+        counter("velm_fleet_probes_total", self.probes);
+        counter("velm_fleet_renorms_total", self.renorms);
+        counter("velm_fleet_refits_total", self.refits);
+        counter("velm_fleet_quarantines_total", self.quarantines);
+        counter("velm_fleet_promotions_total", self.promotions);
+        counter("velm_energy_femtojoules_total", self.energy_fj);
+        counter("velm_macs_total", self.macs);
+        out.push_str(&format!(
+            "# TYPE velm_uptime_seconds gauge\nvelm_uptime_seconds {}\n",
+            self.uptime_us as f64 * 1e-6
+        ));
+        out.push_str(&format!(
+            "# TYPE velm_pj_per_mac gauge\nvelm_pj_per_mac {}\n",
+            self.pj_per_mac()
+        ));
+        out.push_str("# TYPE velm_stage_latency_us gauge\n");
+        for (stage, s) in [
+            ("total", &self.latency),
+            ("queue", &self.queue),
+            ("batch_wait", &self.batch_wait),
+            ("compute", &self.compute),
+        ] {
+            for (q, v) in [("0.5", s.p50_us), ("0.9", s.p90_us), ("0.99", s.p99_us)] {
+                out.push_str(&format!(
+                    "velm_stage_latency_us{{stage=\"{stage}\",quantile=\"{q}\"}} {v}\n"
+                ));
+            }
+        }
+        out.push_str("# TYPE velm_stage_samples_total counter\n");
+        for (stage, s) in [
+            ("total", &self.latency),
+            ("queue", &self.queue),
+            ("batch_wait", &self.batch_wait),
+            ("compute", &self.compute),
+        ] {
+            out.push_str(&format!(
+                "velm_stage_samples_total{{stage=\"{stage}\"}} {}\n",
+                s.count
+            ));
+        }
+        if !self.tenants.is_empty() {
+            out.push_str("# TYPE velm_tenant_requests_total counter\n");
+            for t in &self.tenants {
+                out.push_str(&format!(
+                    "velm_tenant_requests_total{{tenant={}}} {}\n",
+                    prom_label(&t.name),
+                    t.requests
+                ));
+            }
+            out.push_str("# TYPE velm_tenant_responses_total counter\n");
+            for t in &self.tenants {
+                out.push_str(&format!(
+                    "velm_tenant_responses_total{{tenant={}}} {}\n",
+                    prom_label(&t.name),
+                    t.responses
+                ));
+            }
+            out.push_str("# TYPE velm_tenant_energy_femtojoules_total counter\n");
+            for t in &self.tenants {
+                out.push_str(&format!(
+                    "velm_tenant_energy_femtojoules_total{{tenant={}}} {}\n",
+                    prom_label(&t.name),
+                    t.energy_fj
+                ));
+            }
+            out.push_str("# TYPE velm_tenant_latency_us gauge\n");
+            for t in &self.tenants {
+                for (q, v) in [
+                    ("0.5", t.latency.p50_us),
+                    ("0.9", t.latency.p90_us),
+                    ("0.99", t.latency.p99_us),
+                ] {
+                    out.push_str(&format!(
+                        "velm_tenant_latency_us{{tenant={},quantile=\"{q}\"}} {}\n",
+                        prom_label(&t.name),
+                        v
+                    ));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+impl StatsSnapshot {
+    /// A fully-populated fixture shared by the stats and frame tests.
+    pub(crate) fn sample() -> StatsSnapshot {
+        StatsSnapshot {
+            version: SNAPSHOT_VERSION,
+            uptime_us: 2_000_000,
+            requests: 10,
+            submissions: 4,
+            responses: 9,
+            batches: 3,
+            pjrt_batches: 1,
+            sim_batches: 2,
+            batched_requests: 9,
+            conversions: 54,
+            probes: 2,
+            renorms: 1,
+            refits: 0,
+            quarantines: 0,
+            promotions: 0,
+            energy_fj: 54_000,
+            macs: 5400,
+            latency: StageStats { count: 9, sum_us: 900, p50_us: 96, p90_us: 192, p99_us: 192 },
+            queue: StageStats { count: 9, sum_us: 90, p50_us: 12, p90_us: 24, p99_us: 24 },
+            batch_wait: StageStats { count: 9, sum_us: 45, p50_us: 6, p90_us: 6, p99_us: 6 },
+            compute: StageStats { count: 9, sum_us: 765, p50_us: 80, p90_us: 160, p99_us: 160 },
+            tenants: vec![TenantStats {
+                name: "digits π".into(),
+                requests: 5,
+                responses: 5,
+                energy_fj: 30_000,
+                train_score: 0.9375,
+                latency: StageStats { count: 5, sum_us: 500, p50_us: 96, p90_us: 192, p99_us: 192 },
+            }],
+        }
+    }
+}
+
+/// Quote a Prometheus label value (backslash, quote, newline escaped).
+fn prom_label(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// How a traced request left the worker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceOutcome {
+    /// Scored and replied.
+    Ok,
+    /// Dropped: malformed feature vector.
+    DroppedMalformed,
+    /// Dropped: tenant tag not registered on the serving die.
+    DroppedUnknownTenant,
+}
+
+impl TraceOutcome {
+    /// Stable wire code (v1 trace frames).
+    pub fn code(self) -> u8 {
+        match self {
+            TraceOutcome::Ok => 0,
+            TraceOutcome::DroppedMalformed => 1,
+            TraceOutcome::DroppedUnknownTenant => 2,
+        }
+    }
+
+    /// Inverse of [`TraceOutcome::code`].
+    pub fn from_code(code: u8) -> Option<TraceOutcome> {
+        match code {
+            0 => Some(TraceOutcome::Ok),
+            1 => Some(TraceOutcome::DroppedMalformed),
+            2 => Some(TraceOutcome::DroppedUnknownTenant),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for TraceOutcome {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            TraceOutcome::Ok => "ok",
+            TraceOutcome::DroppedMalformed => "dropped:malformed",
+            TraceOutcome::DroppedUnknownTenant => "dropped:unknown-tenant",
+        })
+    }
+}
+
+/// One completed request's span record, as the flight recorder keeps
+/// it and the `TRACE` verb dumps it. Stage micros are measured from
+/// the same monotonic clock: `queue_us + batch_us + compute_us`
+/// brackets `total_us` up to per-stage flooring (each stage floors to
+/// whole microseconds, so the sum can undershoot by < 3 us).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEntry {
+    /// Coordinator-assigned request id.
+    pub id: u64,
+    /// Tenant tag (`None` = default head).
+    pub tenant: Option<String>,
+    /// Die (worker index) that served the row.
+    pub die: u32,
+    /// Engine: true = PJRT batch path, false = chip-sim.
+    pub pjrt: bool,
+    /// Rotation passes the serving die spends per conversion.
+    pub passes: u32,
+    /// Submit -> pulled off the batcher queue.
+    pub queue_us: u64,
+    /// Pulled -> batch dispatched to the engine.
+    pub batch_us: u64,
+    /// Dispatch -> row answered (or dropped).
+    pub compute_us: u64,
+    /// Submit -> answered, the end-to-end span.
+    pub total_us: u64,
+    pub outcome: TraceOutcome,
+}
+
+impl std::fmt::Display for TraceEntry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "id={} tenant={} die={} engine={} passes={} queue={}us batch={}us compute={}us total={}us outcome={}",
+            self.id,
+            self.tenant.as_deref().unwrap_or("-"),
+            self.die,
+            if self.pjrt { "pjrt" } else { "chip-sim" },
+            self.passes,
+            self.queue_us,
+            self.batch_us,
+            self.compute_us,
+            self.total_us,
+            self.outcome,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> StatsSnapshot {
+        StatsSnapshot::sample()
+    }
+
+    #[test]
+    fn json_roundtrips_exactly() {
+        let snap = sample();
+        let parsed = StatsSnapshot::from_json(&snap.to_json()).unwrap();
+        assert_eq!(parsed, snap);
+    }
+
+    #[test]
+    fn derived_rates_follow_counters() {
+        let snap = sample();
+        assert!((snap.requests_per_s() - 5.0).abs() < 1e-12);
+        assert!((snap.conversions_per_s() - 27.0).abs() < 1e-12);
+        assert!((snap.pj_per_mac() - 10.0).abs() < 1e-12, "54000 fJ / 5400 MAC = 10 pJ/MAC");
+        assert!((snap.energy_j() - 54e-12).abs() < 1e-24);
+        let empty = StatsSnapshot::default();
+        assert_eq!(empty.pj_per_mac(), 0.0);
+        assert_eq!(empty.requests_per_s(), 0.0);
+    }
+
+    #[test]
+    fn from_json_rejects_missing_fields_and_bad_version() {
+        assert!(StatsSnapshot::from_json("{}").is_err());
+        let mut snap = sample();
+        snap.version = 99;
+        assert!(StatsSnapshot::from_json(&snap.to_json()).is_err());
+        assert!(StatsSnapshot::from_json("not json").is_err());
+    }
+
+    #[test]
+    fn prometheus_text_has_counters_stages_and_tenants() {
+        let text = sample().to_prometheus();
+        assert!(text.contains("velm_requests_total 10\n"));
+        assert!(text.contains("velm_conversions_total 54\n"));
+        assert!(text.contains("velm_energy_femtojoules_total 54000\n"));
+        assert!(text.contains("velm_stage_latency_us{stage=\"queue\",quantile=\"0.5\"} 12\n"));
+        assert!(text.contains("velm_stage_samples_total{stage=\"compute\"} 9\n"));
+        assert!(text.contains("velm_tenant_requests_total{tenant=\"digits π\"} 5\n"));
+        assert!(text.contains("velm_pj_per_mac 10\n"));
+    }
+
+    #[test]
+    fn trace_outcome_codes_roundtrip() {
+        for o in [
+            TraceOutcome::Ok,
+            TraceOutcome::DroppedMalformed,
+            TraceOutcome::DroppedUnknownTenant,
+        ] {
+            assert_eq!(TraceOutcome::from_code(o.code()), Some(o));
+        }
+        assert_eq!(TraceOutcome::from_code(9), None);
+    }
+
+    #[test]
+    fn trace_entry_renders_every_field() {
+        let e = TraceEntry {
+            id: 7,
+            tenant: Some("digits".into()),
+            die: 1,
+            pjrt: false,
+            passes: 6,
+            queue_us: 10,
+            batch_us: 5,
+            compute_us: 85,
+            total_us: 100,
+            outcome: TraceOutcome::Ok,
+        };
+        let s = e.to_string();
+        for needle in [
+            "id=7", "tenant=digits", "die=1", "engine=chip-sim", "passes=6",
+            "queue=10us", "batch=5us", "compute=85us", "total=100us", "outcome=ok",
+        ] {
+            assert!(s.contains(needle), "missing {needle} in {s}");
+        }
+    }
+}

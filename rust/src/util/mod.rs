@@ -1,5 +1,7 @@
-//! Shared substrates: deterministic PRNG, statistics, dense linear algebra.
+//! Shared substrates: deterministic PRNG, statistics, dense linear
+//! algebra, and a minimal JSON value model.
 
+pub mod json;
 pub mod mat;
 pub mod prng;
 pub mod stats;

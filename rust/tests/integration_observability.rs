@@ -1,0 +1,166 @@
+//! Integration: end-to-end observability (DESIGN.md §16).
+//!
+//!   * multi-tenant mixed traffic over the v1 framed wire leaves a
+//!     flight-recorder trail whose per-stage spans bracket each
+//!     request's end-to-end latency;
+//!   * every stage histogram (queue / batch-wait / compute) is
+//!     populated, one sample per answered row;
+//!   * the energy ledger is exact: total fJ equals booked conversions
+//!     priced through the die's operating point, and MACs follow the
+//!     fabricated array dims;
+//!   * the structured `StatsSnapshot` export roundtrips through JSON
+//!     with `responses <= requests`, and renders Prometheus text;
+//!   * protocol v0 stays display-only for traces and has no snapshot
+//!     frame — the SDK guards both with actionable errors.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use velm::chip::energy::conversion_price_fj;
+use velm::client::Client;
+use velm::config::{ChipConfig, SystemConfig};
+use velm::coordinator::{server, Coordinator};
+use velm::datasets::synth;
+use velm::protocol::{PredictRow, StatsSnapshot, TraceOutcome};
+use velm::registry::TenantSpec;
+
+/// Two-die homogeneous fleet on brightdata plus a regression tenant,
+/// so the traffic is multi-tenant and routed across dies.
+fn start_system() -> (Arc<Coordinator>, ChipConfig, velm::datasets::Dataset) {
+    let ds = synth::brightdata(7).with_test_subsample(40, 7);
+    let mut cfg = ChipConfig::default().with_b(10);
+    cfg.d = ds.d();
+    let sys = SystemConfig {
+        n_chips: 2,
+        artifact_dir: "/nonexistent".into(),
+        max_wait: Duration::from_millis(1),
+        ..Default::default()
+    };
+    let coord =
+        Coordinator::start(&sys, &cfg, &ds.train_x, &ds.train_y, 0.1, 10).expect("start");
+    let reg_y: Vec<f64> = ds.train_x.iter().map(|x| 0.5 * x[0] - 0.25 * x[1]).collect();
+    coord
+        .register_tenant(
+            TenantSpec::regression("slope", ds.train_x.clone(), &reg_y, 1e-3, 12).unwrap(),
+        )
+        .unwrap();
+    (Arc::new(coord), cfg, ds)
+}
+
+#[test]
+fn traces_stages_and_energy_are_consistent_over_v1() {
+    let (coord, cfg, ds) = start_system();
+    let (addr, srv) = server::serve_n(Arc::clone(&coord), 1).expect("serve");
+    let mut c = Client::connect(addr).expect("v1 connect");
+
+    // multi-tenant mixed batch: default and tenant rows interleaved,
+    // one framed submission, plus a few singles through the batcher
+    let rows: Vec<PredictRow> = ds
+        .test_x
+        .iter()
+        .take(12)
+        .enumerate()
+        .map(|(i, x)| PredictRow {
+            tenant: if i % 3 == 0 { Some("slope".into()) } else { None },
+            features: x.clone(),
+        })
+        .collect();
+    let answers = c.predict_batch(&rows).expect("mixed batch");
+    assert_eq!(answers.len(), rows.len());
+    for x in ds.test_x.iter().skip(12).take(4) {
+        c.predict(None, x).expect("single predict");
+    }
+    let served = rows.len() as u64 + 4;
+
+    // flight recorder: every served row left a span record whose
+    // stage sums bracket the end-to-end latency (micros flooring may
+    // undershoot by < 3 us, never overshoot)
+    let traces = c.trace(1024).expect("trace over v1");
+    assert_eq!(traces.len(), served as usize, "one trace per answered row");
+    let mut ids = std::collections::HashSet::new();
+    for t in &traces {
+        assert_eq!(t.outcome, TraceOutcome::Ok, "{t}");
+        assert!(t.die < 2, "{t}");
+        assert_eq!(t.passes, 1, "physical dies serve in one pass: {t}");
+        let sum = t.queue_us + t.batch_us + t.compute_us;
+        assert!(sum <= t.total_us, "stage sum overshoots the span: {t}");
+        assert!(t.total_us - sum <= 3, "stage sum undershoots by > 3us: {t}");
+        ids.insert(t.id);
+    }
+    assert_eq!(ids.len(), traces.len(), "request ids must be unique");
+    // the ring dumps newest-first and respects the requested depth
+    let last3 = c.trace(3).expect("trace depth");
+    assert_eq!(last3.len(), 3);
+    assert_eq!(last3[0], traces[0], "newest entry first");
+
+    // structured snapshot: stage histograms carry one sample per
+    // answered row, and counters are never torn
+    let s = c.snapshot().expect("snapshot over v1");
+    assert!(s.responses <= s.requests, "torn snapshot: {s:?}");
+    assert_eq!(s.responses, served);
+    assert_eq!(s.latency.count, served);
+    assert_eq!(s.queue.count, served, "queue-wait histogram not populated");
+    assert_eq!(s.batch_wait.count, served, "batch-wait histogram not populated");
+    assert_eq!(s.compute.count, served, "compute histogram not populated");
+    assert!(s.uptime_us > 0);
+    assert!(s.requests_per_s() > 0.0);
+
+    // energy ledger: exact, not approximate — a homogeneous fleet
+    // prices every booked conversion at the same operating point
+    let price = conversion_price_fj(&cfg);
+    assert!(price > 0, "the default operating point must cost energy");
+    assert!(s.conversions >= served, "each served row books >= 1 conversion");
+    assert_eq!(s.energy_fj, s.conversions * price, "energy != conversions x price");
+    assert_eq!(s.macs, s.conversions * (cfg.d * cfg.l) as u64);
+    assert!(s.pj_per_mac() > 0.0);
+
+    // per-tenant slice: the regression tenant saw its 4 batch rows
+    let slope = s.tenants.iter().find(|t| t.name == "slope").expect("tenant stats");
+    assert_eq!(slope.requests, 4);
+    assert_eq!(slope.responses, 4);
+    assert_eq!(slope.latency.count, 4);
+    assert!(slope.energy_fj > 0, "tenant rows must be priced");
+    assert!(slope.energy_fj <= s.energy_fj);
+
+    // the JSON export parses back into the identical snapshot, and the
+    // Prometheus rendering carries the same counters
+    let parsed = StatsSnapshot::from_json(&s.to_json()).expect("snapshot json");
+    assert_eq!(parsed, s);
+    let prom = s.to_prometheus();
+    assert!(prom.contains(&format!("velm_responses_total {served}\n")), "{prom}");
+    assert!(prom.contains(&format!("velm_conversions_total {}\n", s.conversions)), "{prom}");
+    assert!(prom.contains("velm_stage_latency_us{stage=\"queue\",quantile=\"0.99\"}"), "{prom}");
+    assert!(prom.contains("velm_tenant_requests_total{tenant=\"slope\"} 4\n"), "{prom}");
+
+    drop(c);
+    srv.join();
+}
+
+#[test]
+fn v0_stays_display_only_for_traces_and_has_no_snapshot() {
+    let (coord, _cfg, ds) = start_system();
+    let (addr, srv) = server::serve_n(Arc::clone(&coord), 1).expect("serve");
+    let mut v0 = Client::connect_v0(addr).expect("v0 connect");
+    v0.predict(None, &ds.test_x[0]).expect("v0 predict");
+
+    // the SDK refuses typed observability verbs on the line protocol
+    // before touching the wire, with guidance instead of a decode error
+    let err = v0.trace(8).unwrap_err().to_string();
+    assert!(err.contains("display-only"), "{err}");
+    let err = v0.snapshot().unwrap_err().to_string();
+    assert!(err.contains("v1"), "{err}");
+
+    // the raw v0 TRACE verb answers in ONE line (the line grammar's
+    // framing invariant), entries joined by ' | '
+    let line = server::handle_line(&coord, "TRACE 2").expect("TRACE reply");
+    assert!(line.starts_with("OK trace "), "{line}");
+    assert!(!line.contains('\n'), "v0 replies are single-line: {line}");
+    assert!(line.contains("outcome=ok"), "{line}");
+    assert_eq!(
+        server::handle_line(&coord, "TRACE abc"),
+        Some("ERR TRACE wants an entry count, got 'abc'".into())
+    );
+
+    drop(v0);
+    srv.join();
+}

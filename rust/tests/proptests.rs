@@ -4,7 +4,10 @@
 use velm::chip::{counter, dac, mirror, neuron, spi, ChipModel};
 use velm::config::{ChipConfig, Transfer};
 use velm::extension::RotationPlan;
-use velm::protocol::{frame, PredictRow, Prediction, Request, Response};
+use velm::protocol::{
+    frame, PredictRow, Prediction, Request, Response, StageStats, StatsSnapshot, TenantStats,
+    TraceEntry, TraceOutcome,
+};
 use velm::testing::{check, close, ensure};
 use velm::util::mat::{ridge_solve, Mat};
 use velm::util::prng::Prng;
@@ -259,8 +262,72 @@ fn arb_prediction(rng: &mut Prng) -> Prediction {
     }
 }
 
+fn arb_stage(rng: &mut Prng) -> StageStats {
+    StageStats {
+        count: rng.next_u64() % 10_000,
+        sum_us: rng.next_u64() % 1_000_000,
+        p50_us: rng.next_u64() % 10_000,
+        p90_us: rng.next_u64() % 10_000,
+        p99_us: rng.next_u64() % 10_000,
+    }
+}
+
+fn arb_trace_entry(rng: &mut Prng) -> TraceEntry {
+    let outcome = TraceOutcome::from_code(rng.usize(3) as u8).unwrap();
+    TraceEntry {
+        id: rng.next_u64(),
+        tenant: arb_tenant(rng),
+        die: rng.usize(64) as u32,
+        pjrt: rng.bool(0.5),
+        passes: 1 + rng.usize(8) as u32,
+        queue_us: rng.next_u64() % 1_000_000,
+        batch_us: rng.next_u64() % 1_000_000,
+        compute_us: rng.next_u64() % 1_000_000,
+        total_us: rng.next_u64() % 4_000_000,
+        outcome,
+    }
+}
+
+fn arb_snapshot(rng: &mut Prng) -> StatsSnapshot {
+    StatsSnapshot {
+        // the frame codec refuses any other version in-band, so a
+        // roundtrip-able snapshot must carry the current stamp
+        version: velm::protocol::stats::SNAPSHOT_VERSION,
+        uptime_us: rng.next_u64() >> 1,
+        requests: rng.next_u64() % 1_000_000,
+        submissions: rng.next_u64() % 1_000_000,
+        responses: rng.next_u64() % 1_000_000,
+        batches: rng.next_u64() % 100_000,
+        pjrt_batches: rng.next_u64() % 100_000,
+        sim_batches: rng.next_u64() % 100_000,
+        batched_requests: rng.next_u64() % 1_000_000,
+        conversions: rng.next_u64() % 10_000_000,
+        probes: rng.next_u64() % 1_000,
+        renorms: rng.next_u64() % 1_000,
+        refits: rng.next_u64() % 1_000,
+        quarantines: rng.next_u64() % 1_000,
+        promotions: rng.next_u64() % 1_000,
+        energy_fj: rng.next_u64() >> 1,
+        macs: rng.next_u64() >> 1,
+        latency: arb_stage(rng),
+        queue: arb_stage(rng),
+        batch_wait: arb_stage(rng),
+        compute: arb_stage(rng),
+        tenants: (0..rng.usize(4))
+            .map(|_| TenantStats {
+                name: arb_string(rng),
+                requests: rng.next_u64() % 1_000_000,
+                responses: rng.next_u64() % 1_000_000,
+                energy_fj: rng.next_u64() >> 1,
+                train_score: rng.range(0.0, 1.0),
+                latency: arb_stage(rng),
+            })
+            .collect(),
+    }
+}
+
 fn arb_request(rng: &mut Prng) -> Request {
-    match rng.usize(9) {
+    match rng.usize(11) {
         0 => Request::Ping,
         1 => Request::Stats,
         2 => Request::Health,
@@ -277,12 +344,14 @@ fn arb_request(rng: &mut Prng) -> Request {
             dataset: arb_string(rng),
             seed: rng.next_u64(),
         },
-        _ => Request::Unregister { name: arb_string(rng) },
+        8 => Request::Unregister { name: arb_string(rng) },
+        9 => Request::Trace { last: rng.usize(1024) },
+        _ => Request::Snapshot,
     }
 }
 
 fn arb_response(rng: &mut Prng) -> Response {
-    match rng.usize(10) {
+    match rng.usize(12) {
         0 => Response::Pong,
         1 => Response::Stats(arb_string(rng)),
         2 => Response::Health(arb_string(rng)),
@@ -296,6 +365,8 @@ fn arb_response(rng: &mut Prng) -> Response {
             score: rng.range(0.0, 1.0),
         },
         8 => Response::Unregistered { name: arb_string(rng) },
+        9 => Response::Trace((0..rng.usize(4)).map(|_| arb_trace_entry(rng)).collect()),
+        10 => Response::Snapshot(arb_snapshot(rng)),
         _ => Response::Error(arb_string(rng)),
     }
 }

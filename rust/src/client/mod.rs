@@ -171,6 +171,16 @@ impl Client {
         }
     }
 
+    /// Governor status one-liner (DESIGN.md §17): enabled/disabled,
+    /// per-die operating points, move counters, energy saved. Works on
+    /// both wire versions (the v0 spelling is `GOVERNOR`).
+    pub fn governor(&mut self) -> Result<String> {
+        match self.call(Request::Governor)? {
+            Response::Governor(s) => Ok(s),
+            other => Err(unexpected(other)),
+        }
+    }
+
     /// Tenant directory one-liner.
     pub fn models(&mut self) -> Result<String> {
         match self.call(Request::Models)? {

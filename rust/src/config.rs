@@ -367,6 +367,10 @@ pub struct SystemConfig {
     /// Fleet-health settings: probe cadence, drift thresholds,
     /// recovery/quarantine policy.
     pub fleet: crate::fleet::FleetConfig,
+    /// Traffic-adaptive governor (DESIGN.md §17): tick period,
+    /// hysteresis budget, SLO thresholds, the bits ladder. Disabled by
+    /// default — `velm serve --governor` turns it on.
+    pub governor: crate::governor::GovernorConfig,
 }
 
 impl Default for SystemConfig {
@@ -386,6 +390,7 @@ impl Default for SystemConfig {
             die_geoms: Vec::new(),
             read_timeout: Some(std::time::Duration::from_secs(120)),
             fleet: crate::fleet::FleetConfig::default(),
+            governor: crate::governor::GovernorConfig::default(),
         }
     }
 }

@@ -4,14 +4,22 @@
 //! compiled PJRT batch shapes). Batching is tenant-blind (DESIGN.md
 //! §14): the hidden layer is task-agnostic, so rows addressed to
 //! different tenants coalesce into one batch and cost one hidden-layer
-//! pass; the worker applies each row's own head afterwards. Fleet-health
-//! and registry control messages ride the same channel (so control stays
+//! pass; the worker applies each row's own head afterwards — but batch
+//! *admission* is tenant-fair: when more rows are pending than one
+//! window's conversion budget holds, the batcher round-robins one row
+//! per tenant instead of taking the queue head-first, so a flooding
+//! tenant cannot starve a trickle tenant out of the die (DESIGN.md
+//! §17). Rows left behind park in the caller-owned carry deque and get
+//! first claim on the next window. Under light load (pending fits the
+//! budget) admission degenerates to exact FIFO. Fleet-health and
+//! registry control messages ride the same channel (so control stays
 //! ordered with respect to control: a probe queued after a drift
 //! injection observes the drifted die, a request routed after a REGISTER
 //! ack finds the head installed) and are split out of the classify batch
 //! for the worker to run after the batch — traffic-vs-control ordering
 //! is batch-granular.
 
+use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
 
@@ -24,54 +32,137 @@ pub struct Batch {
     pub control: Vec<ControlMsg>,
 }
 
-/// Blockingly collect the next batch from `rx`.
+/// Blockingly collect the next batch from `rx`, carried rows first.
 ///
-/// Waits (forever) for the first message; then drains until the held
-/// classify requests cost `max_batch` *physical conversions* or
-/// `max_wait` has elapsed since the first message. `cost_per_request`
-/// is the die's pass cost (DESIGN.md §13): 1 on a physical die, so the
-/// bound counts requests; `RotationPlan::passes()` on a virtual die, so
-/// a P-pass die holds 1/P as many requests per batch and the per-batch
-/// conversion budget stays constant fleet-wide. At least one request is
-/// always collected. A control-only window returns an empty-request
-/// batch — the "empty-queue tick" that lets probes run on an idle
-/// worker. Returns `None` once the channel is closed and drained — the
-/// worker's shutdown signal.
+/// Rows parked in `carry` by the previous window are admitted ahead of
+/// the channel. When both carry and channel are empty this waits
+/// (forever) for the first message; then drains until the held classify
+/// requests cost `max_batch` *physical conversions* or `max_wait` has
+/// elapsed. `cost_per_request` is the die's pass cost (DESIGN.md §13):
+/// 1 on a physical die, so the bound counts requests;
+/// `RotationPlan::passes()` on a virtual die, so a P-pass die holds 1/P
+/// as many requests per batch and the per-batch conversion budget stays
+/// constant fleet-wide. At least one request is always collected.
+///
+/// When more rows are pending than the budget admits, admission is
+/// tenant-fair: one row per tenant, round-robin in first-appearance
+/// order (the default head counts as one tenant), FIFO within each
+/// tenant; the leftovers go back to `carry` in arrival order. Otherwise
+/// admission is exact FIFO and `carry` comes back empty.
+///
+/// A control-only window returns an empty-request batch — the
+/// "empty-queue tick" that lets probes run on an idle worker. Returns
+/// `None` once the channel is closed and both the channel and the carry
+/// are drained — the worker's shutdown signal.
 pub fn collect_batch(
     rx: &Receiver<WorkerMsg>,
+    carry: &mut VecDeque<ClassifyRequest>,
     max_batch: usize,
     max_wait: Duration,
     cost_per_request: usize,
 ) -> Option<Batch> {
     let cost = cost_per_request.max(1);
     let max_requests = (max_batch / cost).max(1);
-    let first = rx.recv().ok()?;
+    let mut pending: Vec<ClassifyRequest> = carry.drain(..).collect();
+    let mut control = Vec::new();
+    if pending.is_empty() {
+        // nothing carried over: block for the window-opening message
+        push(&mut pending, &mut control, rx.recv().ok()?);
+    }
     let deadline = Instant::now() + max_wait;
-    let mut batch = Batch { requests: Vec::new(), control: Vec::new() };
-    push(&mut batch, first);
-    while batch.requests.len() < max_requests {
+    while pending.len() < max_requests {
         let now = Instant::now();
         if now >= deadline {
             break;
         }
         match rx.recv_timeout(deadline - now) {
-            Ok(msg) => push(&mut batch, msg),
+            Ok(msg) => push(&mut pending, &mut control, msg),
             Err(RecvTimeoutError::Timeout) => break,
             Err(RecvTimeoutError::Disconnected) => break,
         }
     }
-    Some(batch)
+    // Overload sweep: once the window is full (or closed), take stock of
+    // whatever is *already* queued without waiting — those rows are the
+    // load-skew evidence the fair admission below needs, and they park
+    // in the carry rather than sitting invisible in the channel.
+    while let Ok(msg) = rx.try_recv() {
+        push(&mut pending, &mut control, msg);
+    }
+    let requests = admit(pending, max_requests, carry);
+    Some(Batch { requests, control })
 }
 
-fn push(batch: &mut Batch, msg: WorkerMsg) {
+/// Split `pending` into the admitted batch and the carried remainder.
+/// Light load (everything fits) is exact FIFO; overload round-robins
+/// one row per tenant in first-appearance order, FIFO within a tenant.
+fn admit(
+    mut pending: Vec<ClassifyRequest>,
+    max_requests: usize,
+    carry: &mut VecDeque<ClassifyRequest>,
+) -> Vec<ClassifyRequest> {
+    if pending.len() <= max_requests {
+        return pending;
+    }
+    // per-tenant FIFO queues of row indices, keyed in first-appearance
+    // order (tenant counts per die are small; linear scan beats hashing)
+    let mut queues: Vec<VecDeque<usize>> = Vec::new();
+    {
+        let mut names: Vec<&str> = Vec::new();
+        for (i, req) in pending.iter().enumerate() {
+            let name = req.tenant.as_ref().map_or("", |t| t.name.as_ref());
+            let qi = match names.iter().position(|&n| n == name) {
+                Some(qi) => qi,
+                None => {
+                    names.push(name);
+                    queues.push(VecDeque::new());
+                    names.len() - 1
+                }
+            };
+            queues[qi].push_back(i);
+        }
+    }
+    let mut take = vec![false; pending.len()];
+    let mut taken = 0usize;
+    'rounds: loop {
+        let mut any = false;
+        for q in &mut queues {
+            if let Some(i) = q.pop_front() {
+                take[i] = true;
+                taken += 1;
+                any = true;
+                if taken == max_requests {
+                    break 'rounds;
+                }
+            }
+        }
+        if !any {
+            break;
+        }
+    }
+    // both the batch and the carry keep arrival order (the admitted
+    // rows' indices are marked, so one ordered sweep splits the two)
+    let mut admitted = Vec::with_capacity(max_requests);
+    for (i, req) in pending.drain(..).enumerate() {
+        if take[i] {
+            admitted.push(req);
+        } else {
+            carry.push_back(req);
+        }
+    }
+    admitted
+}
+
+fn push(pending: &mut Vec<ClassifyRequest>, control: &mut Vec<ControlMsg>, msg: WorkerMsg) {
     match msg {
         WorkerMsg::Classify(mut req) => {
             // Stage stamp (DESIGN.md §16): queue-wait ends the moment
-            // the batcher pulls the request into a forming batch.
+            // the batcher pulls the request into a forming batch. A row
+            // parked in the carry keeps its original stamp — the parked
+            // time reads as batch-wait, which is what it is.
             req.collected = Some(Instant::now());
-            batch.requests.push(req);
+            pending.push(req);
         }
-        WorkerMsg::Control(ctl) => batch.control.push(ctl),
+        WorkerMsg::Control(ctl) => control.push(ctl),
     }
 }
 
@@ -117,16 +208,19 @@ mod tests {
         for i in 0..10 {
             tx.send(req(i)).unwrap();
         }
+        let mut carry = VecDeque::new();
         let t0 = Instant::now();
-        let b = collect_batch(&rx, 4, Duration::from_millis(200), 1).unwrap();
+        let b = collect_batch(&rx, &mut carry, 4, Duration::from_millis(200), 1).unwrap();
         assert_eq!(b.requests.len(), 4);
         assert_eq!(b.requests[0].id, 0);
         assert_eq!(b.requests[3].id, 3);
         // a full batch flushes immediately, well before the deadline
         assert!(t0.elapsed() < Duration::from_millis(150));
-        // the rest are still queued
-        let b2 = collect_batch(&rx, 100, Duration::from_millis(5), 1).unwrap();
+        // the rest ride the carry (swept out of the channel) in order
+        assert_eq!(carry.len(), 6);
+        let b2 = collect_batch(&rx, &mut carry, 100, Duration::from_millis(5), 1).unwrap();
         assert_eq!(b2.requests.len(), 6);
+        assert!(carry.is_empty());
     }
 
     #[test]
@@ -134,7 +228,7 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         tx.send(req(1)).unwrap();
         let t0 = Instant::now();
-        let b = collect_batch(&rx, 64, Duration::from_millis(20), 1).unwrap();
+        let b = collect_batch(&rx, &mut VecDeque::new(), 64, Duration::from_millis(20), 1).unwrap();
         assert_eq!(b.requests.len(), 1);
         assert!(b.control.is_empty());
         assert!(t0.elapsed() >= Duration::from_millis(18));
@@ -147,7 +241,7 @@ mod tests {
         // empty-request batch carrying the control — the probe tick
         let (tx, rx) = mpsc::channel();
         tx.send(ctl()).unwrap();
-        let b = collect_batch(&rx, 8, Duration::from_millis(5), 1).unwrap();
+        let b = collect_batch(&rx, &mut VecDeque::new(), 8, Duration::from_millis(5), 1).unwrap();
         assert!(b.requests.is_empty());
         assert_eq!(b.control.len(), 1);
         assert!(matches!(b.control[0], ControlMsg::SetEnv { .. }));
@@ -159,7 +253,7 @@ mod tests {
         tx.send(req(0)).unwrap();
         tx.send(ctl()).unwrap();
         tx.send(req(1)).unwrap();
-        let b = collect_batch(&rx, 8, Duration::from_millis(10), 1).unwrap();
+        let b = collect_batch(&rx, &mut VecDeque::new(), 8, Duration::from_millis(10), 1).unwrap();
         assert_eq!(b.requests.len(), 2);
         assert_eq!(b.control.len(), 1);
     }
@@ -172,10 +266,11 @@ mod tests {
         for i in 0..5 {
             tx.send(req(i)).unwrap();
         }
-        let b = collect_batch(&rx, 8, Duration::from_millis(50), 4).unwrap();
+        let mut carry = VecDeque::new();
+        let b = collect_batch(&rx, &mut carry, 8, Duration::from_millis(50), 4).unwrap();
         assert_eq!(b.requests.len(), 2);
         // even a cost above the whole budget still moves one request
-        let b = collect_batch(&rx, 8, Duration::from_millis(5), 100).unwrap();
+        let b = collect_batch(&rx, &mut carry, 8, Duration::from_millis(5), 100).unwrap();
         assert_eq!(b.requests.len(), 1);
     }
 
@@ -189,7 +284,7 @@ mod tests {
         tx.send(tenant_req(1, Some("digits"))).unwrap();
         tx.send(tenant_req(2, Some("brightness"))).unwrap();
         tx.send(tenant_req(3, Some("digits"))).unwrap();
-        let b = collect_batch(&rx, 8, Duration::from_millis(10), 1).unwrap();
+        let b = collect_batch(&rx, &mut VecDeque::new(), 8, Duration::from_millis(10), 1).unwrap();
         assert_eq!(b.requests.len(), 4, "tenants must not split the batch");
         assert!(b.requests[0].tenant.is_none());
         assert_eq!(
@@ -214,7 +309,7 @@ mod tests {
             let tenant = if i % 2 == 0 { None } else { Some("slope") };
             tx.send(tenant_req(i, tenant)).unwrap();
         }
-        let b = collect_batch(&rx, 64, Duration::from_millis(20), 1).unwrap();
+        let b = collect_batch(&rx, &mut VecDeque::new(), 64, Duration::from_millis(20), 1).unwrap();
         assert_eq!(b.requests.len(), 12, "burst split across windows");
         assert_eq!(
             b.requests.iter().map(|r| r.id).collect::<Vec<_>>(),
@@ -226,7 +321,7 @@ mod tests {
     fn batcher_stamps_the_collected_instant() {
         let (tx, rx) = mpsc::channel();
         tx.send(req(0)).unwrap();
-        let b = collect_batch(&rx, 8, Duration::from_millis(5), 1).unwrap();
+        let b = collect_batch(&rx, &mut VecDeque::new(), 8, Duration::from_millis(5), 1).unwrap();
         let r = &b.requests[0];
         let collected = r.collected.expect("batcher must stamp collected");
         assert!(collected >= r.submitted, "queue stage must be non-negative");
@@ -236,7 +331,7 @@ mod tests {
     fn returns_none_when_closed() {
         let (tx, rx) = mpsc::channel::<WorkerMsg>();
         drop(tx);
-        assert!(collect_batch(&rx, 8, Duration::from_millis(5), 1).is_none());
+        assert!(collect_batch(&rx, &mut VecDeque::new(), 8, Duration::from_millis(5), 1).is_none());
     }
 
     #[test]
@@ -246,10 +341,69 @@ mod tests {
             tx.send(req(i)).unwrap();
         }
         drop(tx);
+        let mut carry = VecDeque::new();
         let mut seen = Vec::new();
-        while let Some(b) = collect_batch(&rx, 7, Duration::from_millis(1), 1) {
+        while let Some(b) = collect_batch(&rx, &mut carry, 7, Duration::from_millis(1), 1) {
             seen.extend(b.requests.iter().map(|r| r.id));
         }
         assert_eq!(seen, (0..50).collect::<Vec<_>>());
+        assert!(carry.is_empty(), "shutdown must drain the carry");
+    }
+
+    #[test]
+    fn flooding_tenant_cannot_starve_the_trickle_tenant() {
+        // 30 "flood" rows are already queued ahead of one "rare" row,
+        // and the window only admits 4. FIFO admission would spend 8
+        // whole windows on flood rows before rare ever lands; fair
+        // admission round-robins tenants, so rare is in the FIRST batch
+        let (tx, rx) = mpsc::channel();
+        for i in 0..30 {
+            tx.send(tenant_req(i, Some("flood"))).unwrap();
+        }
+        tx.send(tenant_req(99, Some("rare"))).unwrap();
+        let mut carry = VecDeque::new();
+        let b = collect_batch(&rx, &mut carry, 4, Duration::from_millis(50), 1).unwrap();
+        assert_eq!(b.requests.len(), 4);
+        let ids: Vec<u64> = b.requests.iter().map(|r| r.id).collect();
+        assert!(ids.contains(&99), "rare row starved out of the window: {ids:?}");
+        // flood keeps the remaining slots in its own FIFO order, and the
+        // leftovers are parked (in arrival order) instead of re-queued
+        assert_eq!(ids, vec![0, 1, 2, 99]);
+        assert_eq!(carry.len(), 27);
+        assert_eq!(carry.front().map(|r| r.id), Some(3));
+    }
+
+    #[test]
+    fn fair_windows_deliver_every_row_exactly_once() {
+        // a 3:1 tenant skew over 4-row windows: fairness must reorder
+        // admission, never duplicate or drop a row — and while the
+        // minority tenant has rows pending, every window carries some
+        let (tx, rx) = mpsc::channel();
+        let mut id = 0u64;
+        let mut small_ids = Vec::new();
+        for _ in 0..8 {
+            for _ in 0..3 {
+                tx.send(tenant_req(id, Some("big"))).unwrap();
+                id += 1;
+            }
+            tx.send(tenant_req(id, Some("small"))).unwrap();
+            small_ids.push(id);
+            id += 1;
+        }
+        drop(tx);
+        let mut carry = VecDeque::new();
+        let mut seen = Vec::new();
+        let mut small_pending = small_ids.len();
+        while let Some(b) = collect_batch(&rx, &mut carry, 4, Duration::from_millis(1), 1) {
+            let small_here =
+                b.requests.iter().filter(|r| small_ids.contains(&r.id)).count();
+            if small_pending > 0 {
+                assert!(small_here > 0, "a window starved the minority tenant");
+            }
+            small_pending -= small_here;
+            seen.extend(b.requests.iter().map(|r| r.id));
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..32).collect::<Vec<_>>(), "row lost or duplicated");
     }
 }

@@ -121,6 +121,22 @@ pub struct Metrics {
     pub quarantines: AtomicU64,
     /// Hot standbys promoted into rotation.
     pub promotions: AtomicU64,
+    // governor counters (DESIGN.md §17)
+    /// Governor control-loop ticks executed.
+    pub gov_ticks: AtomicU64,
+    /// Dies escalated toward the boot rung (hot traffic).
+    pub gov_raises: AtomicU64,
+    /// Dies dropped one rung (idle, SLOs holding).
+    pub gov_lowers: AtomicU64,
+    /// Moves refused: unhealthy die (lifecycle owns it), hysteresis
+    /// budget spent, or a retune that could not be applied.
+    pub gov_rejected: AtomicU64,
+    /// Cumulative energy saved vs the boot operating point, fJ —
+    /// booked per conversion at the exact integer price difference.
+    pub gov_fj_saved: AtomicU64,
+    /// Per-die operating point (counter bits) as last published by the
+    /// governor; empty while the governor has never run.
+    gov_points: Mutex<Vec<u32>>,
     /// Per-tenant gauges, keyed by tenant name (DESIGN.md §14). The
     /// mutex guards only registration/removal and the report snapshot —
     /// hot-path recording goes through the `Arc<TenantMetrics>` carried
@@ -158,8 +174,37 @@ impl Metrics {
             refits: AtomicU64::new(0),
             quarantines: AtomicU64::new(0),
             promotions: AtomicU64::new(0),
+            gov_ticks: AtomicU64::new(0),
+            gov_raises: AtomicU64::new(0),
+            gov_lowers: AtomicU64::new(0),
+            gov_rejected: AtomicU64::new(0),
+            gov_fj_saved: AtomicU64::new(0),
+            gov_points: Mutex::new(Vec::new()),
             tenants: Mutex::new(BTreeMap::new()),
         }
+    }
+
+    /// Book exact saved energy (fJ vs the boot point) for conversions
+    /// served on a cheaper governor rung.
+    pub fn record_gov_fj_saved(&self, fj: u64) {
+        self.gov_fj_saved.fetch_add(fj, Ordering::Relaxed);
+    }
+
+    /// Publish the boot operating points before the first governor
+    /// tick, so a freshly started governor-enabled fleet reports where
+    /// its dies sit instead of an empty vector.
+    pub fn seed_gov_points(&self, points: Vec<u32>) {
+        *self.gov_points.lock().unwrap() = points;
+    }
+
+    /// Record one governor tick's outcome counts and publish the
+    /// per-die operating points it left behind.
+    pub fn record_gov_tick(&self, raises: u64, lowers: u64, rejected: u64, points: Vec<u32>) {
+        self.gov_ticks.fetch_add(1, Ordering::Relaxed);
+        self.gov_raises.fetch_add(raises, Ordering::Relaxed);
+        self.gov_lowers.fetch_add(lowers, Ordering::Relaxed);
+        self.gov_rejected.fetch_add(rejected, Ordering::Relaxed);
+        *self.gov_points.lock().unwrap() = points;
     }
 
     pub fn record_request(&self) {
@@ -302,6 +347,14 @@ impl Metrics {
             queue: self.queue.snapshot(),
             batch_wait: self.batch_wait.snapshot(),
             compute: self.compute.snapshot(),
+            governor: crate::protocol::stats::GovernorStats {
+                ticks: self.gov_ticks.load(Ordering::Relaxed),
+                raises: self.gov_raises.load(Ordering::Relaxed),
+                lowers: self.gov_lowers.load(Ordering::Relaxed),
+                rejected: self.gov_rejected.load(Ordering::Relaxed),
+                fj_saved: self.gov_fj_saved.load(Ordering::Relaxed),
+                points: self.gov_points.lock().unwrap().clone(),
+            },
             tenants,
         }
     }
@@ -336,6 +389,7 @@ impl Metrics {
             "requests={} submissions={} responses={} batches={} (pjrt={}, sim={}, mean size {:.1}) \
              conversions={} latency mean={:.0}us p50~{}us p99~{}us \
              fleet probes={} renorms={} refits={} quarantines={} promotions={} \
+             governor ticks={} raises={} lowers={} rejected={} fj_saved={} \
              stages queue p50~{}us p99~{}us batch p50~{}us p99~{}us compute p50~{}us p99~{}us \
              energy_fj={} pJ/MAC={:.3} uptime={:.1}s req/s={:.1} conv/s={:.1}{tenants}",
             s.requests,
@@ -354,6 +408,11 @@ impl Metrics {
             s.refits,
             s.quarantines,
             s.promotions,
+            s.governor.ticks,
+            s.governor.raises,
+            s.governor.lowers,
+            s.governor.rejected,
+            s.governor.fj_saved,
             s.queue.p50_us,
             s.queue.p99_us,
             s.batch_wait.p50_us,
@@ -477,6 +536,23 @@ mod tests {
         // the outstanding handle still works after the drop
         t.record_request();
         assert_eq!(t.requests.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn governor_counters_accumulate_and_reach_the_snapshot() {
+        let m = Metrics::new();
+        assert!(m.snapshot().governor.points.is_empty(), "never ticked");
+        m.record_gov_tick(1, 0, 2, vec![14, 10]);
+        m.record_gov_tick(0, 3, 0, vec![14, 6]);
+        m.record_gov_fj_saved(500);
+        m.record_gov_fj_saved(250);
+        let g = m.snapshot().governor;
+        assert_eq!((g.ticks, g.raises, g.lowers, g.rejected), (2, 1, 3, 2));
+        assert_eq!(g.fj_saved, 750);
+        assert_eq!(g.points, vec![14, 6], "last published points win");
+        let r = m.report();
+        assert!(r.contains("governor ticks=2"), "{r}");
+        assert!(r.contains("fj_saved=750"), "{r}");
     }
 
     #[test]

@@ -46,6 +46,8 @@ use crate::extension::{ServeChip, ServeHidden};
 use crate::fleet::{
     DieState, DriftSchedule, FleetManager, FleetSetup, FleetState, ProbeSet,
 };
+use crate::governor::{Actuator, Ladder, MoveKind, TickSignals};
+use crate::protocol::stats::{TraceEntry, TraceOutcome};
 use crate::protocol::{PredictRow, Request, Response};
 use crate::registry::{ModelRegistry, TenantInfo, TenantSpec};
 
@@ -54,6 +56,113 @@ pub use request::{Backend, ClassifyRequest, ClassifyResponse, TenantTag};
 pub use router::Router;
 
 use request::{ControlMsg, WorkerMsg};
+
+/// Mutable half of the governor loop: the actuator (ladder + per-die
+/// policies) plus the snapshot cursors the tick differentiates against.
+struct GovernorInner {
+    actuator: Actuator,
+    /// `Metrics::requests` at the previous tick.
+    last_requests: u64,
+    /// Queue-wait histogram `(sum_us, count)` at the previous tick.
+    last_queue: (u64, u64),
+}
+
+/// Everything the governor control loop reads or drives (DESIGN.md
+/// §17), shared between the background thread and the coordinator's
+/// manual [`Coordinator::governor_tick`]. Built only when
+/// `SystemConfig::governor.enabled`.
+struct GovernorCtx {
+    cfg: crate::governor::GovernorConfig,
+    inner: Mutex<GovernorInner>,
+    /// Per-tenant accuracy SLO (`TenantSpec::slo_max_err`), maintained
+    /// by register/unregister; `None` falls back to `cfg.err_slo`.
+    slos: Mutex<std::collections::BTreeMap<String, Option<f64>>>,
+    metrics: Arc<Metrics>,
+    /// Worker traffic channels the retune callback applies moves on.
+    senders: Vec<mpsc::Sender<WorkerMsg>>,
+    /// Lifecycle gauges: the governor never touches a non-Healthy die.
+    health: FleetState,
+    /// Per-die queued-request gauges (the router's load accounting).
+    outstanding: router::Outstanding,
+}
+
+/// One governor control tick: differentiate the metrics snapshot into
+/// per-die [`TickSignals`], let the actuator decide and apply moves
+/// through `ControlMsg::Retune`, then publish counters + flight-recorder
+/// events. Free function so the background thread and the coordinator
+/// share one code path.
+fn governor_tick_impl(g: &GovernorCtx) {
+    let snap = g.metrics.snapshot();
+    let mut inner = g.inner.lock().unwrap();
+    let requests_delta = snap.requests.saturating_sub(inner.last_requests);
+    inner.last_requests = snap.requests;
+    let dq_sum = snap.queue.sum_us.saturating_sub(inner.last_queue.0);
+    let dq_count = snap.queue.count.saturating_sub(inner.last_queue.1);
+    inner.last_queue = (snap.queue.sum_us, snap.queue.count);
+    let mean_queue_us = if dq_count == 0 { 0 } else { dq_sum / dq_count };
+    // every registered tenant must hold its accuracy SLO before any die
+    // may drop to a cheaper, noisier rung
+    let accuracy_ok = {
+        let slos = g.slos.lock().unwrap();
+        snap.tenants.iter().all(|t| {
+            let thr = slos.get(&t.name).copied().flatten().unwrap_or(g.cfg.err_slo);
+            t.train_score <= thr
+        })
+    };
+    let health = g.health.snapshot();
+    let signals: Vec<TickSignals> = (0..g.senders.len())
+        .map(|i| TickSignals {
+            healthy: health.get(i).is_some_and(|&s| s == DieState::Healthy),
+            requests_delta,
+            outstanding: g.outstanding.load(i),
+            mean_queue_us,
+            accuracy_ok,
+        })
+        .collect();
+    let senders = &g.senders;
+    let moves = inner.actuator.tick(&signals, |die, b| {
+        let (rtx, rrx) = mpsc::channel();
+        senders[die]
+            .send(WorkerMsg::Control(ControlMsg::Retune { b, reply: rtx }))
+            .is_ok()
+            && rrx.recv_timeout(std::time::Duration::from_secs(5)).is_ok()
+    });
+    let tick_no = inner.actuator.ticks;
+    let (mut raises, mut lowers, mut rejected) = (0u64, 0u64, 0u64);
+    for m in &moves {
+        let outcome = match m.kind {
+            MoveKind::Raised => {
+                raises += 1;
+                TraceOutcome::GovernorRaised
+            }
+            MoveKind::Lowered => {
+                lowers += 1;
+                TraceOutcome::GovernorLowered
+            }
+            MoveKind::Rejected => {
+                rejected += 1;
+                continue; // deferrals are counted, not traced
+            }
+        };
+        // governor events ride the flight recorder alongside request
+        // traces: `passes` carries the new counter bits, `total_us` the
+        // new conversion price [fJ] (DESIGN.md §17)
+        g.metrics.trace.push(TraceEntry {
+            id: tick_no,
+            tenant: None,
+            die: m.die as u32,
+            pjrt: false,
+            passes: m.b,
+            queue_us: 0,
+            batch_us: 0,
+            compute_us: 0,
+            total_us: m.price_fj,
+            outcome,
+        });
+    }
+    let points = inner.actuator.points();
+    g.metrics.record_gov_tick(raises, lowers, rejected, points);
+}
 
 /// A running serving system: router + one thread per fabricated die
 /// (actives and hot standbys) + the fleet-health manager + the
@@ -84,6 +193,13 @@ pub struct Coordinator {
     registration_gate: Mutex<()>,
     /// Background prober (only when `fleet.probe_period` is set).
     auto_probe: Option<(Arc<AtomicBool>, JoinHandle<()>)>,
+    /// Traffic-adaptive power/accuracy governor (DESIGN.md §17), built
+    /// only when `SystemConfig::governor.enabled`: watches snapshot
+    /// deltas and walks each Healthy die along the operating-point
+    /// ladder via `ControlMsg::Retune`.
+    governor: Option<Arc<GovernorCtx>>,
+    /// Background governor loop ticking at `governor.tick` cadence.
+    governor_thread: Option<(Arc<AtomicBool>, JoinHandle<()>)>,
     /// Per-connection TCP read timeout applied by the server front end
     /// (`SystemConfig::read_timeout`): idle/dead clients drain instead
     /// of pinning a connection thread each.
@@ -207,6 +323,10 @@ impl Coordinator {
                 pjrt_max_failures: sys.pjrt_max_failures,
                 normalize: sys.normalize,
                 energy_fj_per_conversion,
+                // the boot price doubles as the governor's savings
+                // baseline: retunes re-price the die, the delta vs this
+                // lands in `gov_fj_saved`
+                baseline_fj_per_conversion: energy_fj_per_conversion,
             };
             workers.push(
                 std::thread::Builder::new()
@@ -250,6 +370,56 @@ impl Coordinator {
                 .expect("spawning fleet prober");
             (stop, handle)
         });
+        // the governor ladder: the tuned/default bits rungs priced at
+        // this fleet's base config, with the boot point on top.
+        // Heterogeneous dies share the ladder — rung prices are quoted
+        // at the base geometry; each worker re-prices its own die on
+        // retune, so the ledger stays exact per die.
+        let governor = if sys.governor.enabled {
+            let ladder = Ladder::from_bits(chip_cfg, &sys.governor.bits);
+            let actuator = Actuator::new(sys.governor.clone(), ladder, n_total);
+            // publish the boot operating points right away: a freshly
+            // started fleet reports where its dies sit, not an empty
+            // vector, before the first tick fires
+            metrics.seed_gov_points(actuator.points());
+            Some(Arc::new(GovernorCtx {
+                cfg: sys.governor.clone(),
+                inner: Mutex::new(GovernorInner {
+                    actuator,
+                    last_requests: 0,
+                    last_queue: (0, 0),
+                }),
+                slos: Mutex::new(std::collections::BTreeMap::new()),
+                metrics: Arc::clone(&metrics),
+                senders: senders.clone(),
+                health: router.health.clone(),
+                outstanding: router.outstanding.clone(),
+            }))
+        } else {
+            None
+        };
+        let governor_thread = governor.as_ref().map(|g| {
+            let stop = Arc::new(AtomicBool::new(false));
+            let stop2 = Arc::clone(&stop);
+            let g2 = Arc::clone(g);
+            let period = g.cfg.tick;
+            let handle = std::thread::Builder::new()
+                .name("velm-governor".into())
+                .spawn(move || {
+                    let slice = std::time::Duration::from_millis(5).min(period);
+                    let mut since_tick = std::time::Duration::ZERO;
+                    while !stop2.load(Ordering::Relaxed) {
+                        std::thread::sleep(slice);
+                        since_tick += slice;
+                        if since_tick >= period {
+                            governor_tick_impl(&g2);
+                            since_tick = std::time::Duration::ZERO;
+                        }
+                    }
+                })
+                .expect("spawning governor");
+            (stop, handle)
+        });
         // the ensure above pinned train_x's width to vd, so vd IS the
         // dimension submit() must validate against
         Ok(Coordinator {
@@ -264,6 +434,8 @@ impl Coordinator {
             registry: Mutex::new(ModelRegistry::new()),
             registration_gate: Mutex::new(()),
             auto_probe,
+            governor,
+            governor_thread,
             read_timeout: sys.read_timeout,
         })
     }
@@ -318,7 +490,49 @@ impl Coordinator {
             },
             Request::Trace { last } => Response::Trace(self.metrics.trace.dump(last)),
             Request::Snapshot => Response::Snapshot(self.snapshot()),
+            Request::Governor => Response::Governor(self.governor_status()),
         }
+    }
+
+    // --- governor surface (DESIGN.md §17) ---
+
+    /// Run one governor control tick (tests, CLI; the background loop
+    /// calls this on its own at the configured cadence). A no-op when
+    /// the governor is disabled.
+    pub fn governor_tick(&self) {
+        if let Some(g) = &self.governor {
+            governor_tick_impl(g);
+        }
+    }
+
+    /// One-line governor status (the TCP `GOVERNOR` command):
+    /// enabled/disabled, the rung ladder, move counters, energy saved
+    /// and each die's current operating point.
+    pub fn governor_status(&self) -> String {
+        let Some(g) = &self.governor else {
+            return "governor off (enable with SystemConfig.governor / velm serve --governor)"
+                .to_string();
+        };
+        let ladder: Vec<u32> =
+            g.inner.lock().unwrap().actuator.ladder().rungs().iter().map(|r| r.b).collect();
+        let s = self.metrics.snapshot().governor;
+        let points: Vec<String> = s
+            .points
+            .iter()
+            .enumerate()
+            .map(|(die, b)| format!("die{die}=b{b}"))
+            .collect();
+        format!(
+            "governor on tick_ms={} ladder_b={ladder:?} ticks={} raises={} lowers={} \
+             rejected={} fj_saved={} points=[{}]",
+            g.cfg.tick.as_millis(),
+            s.ticks,
+            s.raises,
+            s.lowers,
+            s.rejected,
+            s.fj_saved,
+            points.join(" "),
+        )
     }
 
     /// One consistent [`crate::protocol::StatsSnapshot`] of the serving
@@ -582,6 +796,9 @@ impl Coordinator {
         let mean = die_scores.iter().sum::<f64>() / die_scores.len().max(1) as f64;
         let tenant_metrics = self.metrics.register_tenant(&spec.name);
         tenant_metrics.set_score(mean);
+        if let Some(g) = &self.governor {
+            g.slos.lock().unwrap().insert(spec.name.clone(), spec.slo_max_err);
+        }
         self.registry.lock().unwrap().insert(TenantInfo {
             tag: Arc::from(spec.name.as_str()),
             spec: Arc::clone(&spec),
@@ -602,6 +819,9 @@ impl Coordinator {
         anyhow::ensure!(removed.is_some(), "unknown tenant {name}");
         self.broadcast_unregister(name);
         self.metrics.drop_tenant(name);
+        if let Some(g) = &self.governor {
+            g.slos.lock().unwrap().remove(name);
+        }
         Ok(())
     }
 
@@ -749,7 +969,13 @@ impl Coordinator {
     /// Graceful shutdown: stop the prober, close the queues and join
     /// the worker threads.
     pub fn shutdown(self) {
-        let Coordinator { router, workers, fleet, senders, auto_probe, .. } = self;
+        let Coordinator {
+            router, workers, fleet, senders, auto_probe, governor_thread, ..
+        } = self;
+        if let Some((stop, handle)) = governor_thread {
+            stop.store(true, Ordering::Relaxed);
+            let _ = handle.join();
+        }
         if let Some((stop, handle)) = auto_probe {
             stop.store(true, Ordering::Relaxed);
             let _ = handle.join();
@@ -785,6 +1011,7 @@ mod tests {
             die_geoms: Vec::new(),
             read_timeout: None,
             fleet: Default::default(),
+            governor: Default::default(),
         };
         let chip = ChipConfig::default()
             .with_dims(6, 24)
@@ -1162,6 +1389,118 @@ mod tests {
             hit0 |= resp.worker == 0;
         }
         assert!(hit0, "re-admitted die should see traffic");
+        coord.shutdown();
+    }
+
+    // --- governor surface (DESIGN.md §17) ---
+
+    fn governor_cfg(bits: &[u32]) -> crate::governor::GovernorConfig {
+        crate::governor::GovernorConfig {
+            enabled: true,
+            // park the background thread: these tests drive ticks by hand
+            tick: std::time::Duration::from_secs(3600),
+            cooldown_ticks: 0,
+            window_ticks: 100,
+            max_moves_per_window: 100,
+            hot_queue_us: 0, // any traffic at all counts as hot
+            bits: bits.to_vec(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn governor_disabled_is_off_and_manual_tick_is_a_noop() {
+        let (sys, chip, xs, ys) = tiny_system();
+        let coord = Coordinator::start(&sys, &chip, &xs, &ys, 1e-2, 10).unwrap();
+        assert!(coord.governor_status().starts_with("governor off"), "{}", coord.governor_status());
+        coord.governor_tick();
+        assert_eq!(coord.snapshot().governor.ticks, 0);
+        match coord.handle(Request::Governor) {
+            Response::Governor(s) => assert!(s.contains("off"), "{s}"),
+            other => panic!("governor dispatched to {other:?}"),
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn governor_lowers_idle_fleet_and_restores_on_traffic() {
+        let (mut sys, chip, xs, ys) = tiny_system();
+        sys.n_chips = 1;
+        sys.governor = governor_cfg(&[6, 8]); // ladder [6, 8, boot=10]
+        let coord = Coordinator::start(&sys, &chip, &xs, &ys, 1e-2, 10).unwrap();
+        let st = coord.governor_status();
+        assert!(st.starts_with("governor on"), "{st}");
+        assert!(st.contains("ladder_b=[6, 8, 10]"), "{st}");
+        // idle ticks walk the die down the ladder one rung at a time,
+        // then hold at the floor
+        coord.governor_tick();
+        assert_eq!(coord.snapshot().governor.points, vec![8]);
+        coord.governor_tick();
+        assert_eq!(coord.snapshot().governor.points, vec![6]);
+        coord.governor_tick();
+        assert_eq!(coord.snapshot().governor.points, vec![6]);
+        // a row served on the cheap rung still answers, and books its
+        // savings vs the boot price into the ledger (the tick blocks on
+        // the worker's retune ack, so the cheap price is already live)
+        let resp = coord.classify(xs[0].clone()).unwrap();
+        assert!(resp.label == 1 || resp.label == -1);
+        assert!(coord.metrics.gov_fj_saved.load(Ordering::Relaxed) > 0);
+        // the traffic shows up as a request delta on the next tick:
+        // the die jumps straight back to the boot point
+        coord.governor_tick();
+        assert_eq!(coord.snapshot().governor.points, vec![10]);
+        let g = coord.snapshot().governor;
+        assert_eq!((g.lowers, g.raises), (2, 1));
+        assert!(g.ticks >= 4);
+        // the transitions are on the flight recorder
+        let trace = coord.metrics.trace.dump(16);
+        assert!(trace
+            .iter()
+            .any(|t| t.outcome == crate::protocol::TraceOutcome::GovernorRaised));
+        assert!(trace
+            .iter()
+            .any(|t| t.outcome == crate::protocol::TraceOutcome::GovernorLowered));
+        match coord.handle(Request::Governor) {
+            Response::Governor(s) => assert!(s.contains("raises=1"), "{s}"),
+            other => panic!("governor dispatched to {other:?}"),
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn governor_never_retunes_non_healthy_dies() {
+        let (mut sys, chip, xs, ys) = tiny_system();
+        sys.n_chips = 1;
+        sys.standby_chips = 1;
+        sys.governor = governor_cfg(&[6, 8]);
+        let coord = Coordinator::start(&sys, &chip, &xs, &ys, 1e-2, 10).unwrap();
+        coord.governor_tick();
+        let g = coord.snapshot().governor;
+        assert_eq!(g.points, vec![8, 10], "standby die must hold the boot point");
+        assert!(g.rejected >= 1, "lifecycle deferral must be counted");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn tenant_accuracy_slo_violation_blocks_the_descent() {
+        let (mut sys, chip, xs, ys) = tiny_system();
+        sys.n_chips = 1;
+        sys.governor = governor_cfg(&[8]);
+        let coord = Coordinator::start(&sys, &chip, &xs, &ys, 1e-2, 10).unwrap();
+        let reg_y = regression_targets(&xs);
+        // an unsatisfiable accuracy SLO: train RMSE can never be <= 0
+        let spec = TenantSpec::regression("slope", xs.clone(), &reg_y, 1e-3, 12)
+            .unwrap()
+            .with_slo(Some(0.0), None);
+        coord.register_tenant(spec).unwrap();
+        coord.governor_tick();
+        let g = coord.snapshot().governor;
+        assert_eq!(g.points, vec![10], "SLO violation must pin the boot point");
+        assert_eq!(g.lowers, 0);
+        // dropping the violating tenant frees the descent
+        coord.unregister_tenant("slope").unwrap();
+        coord.governor_tick();
+        assert_eq!(coord.snapshot().governor.points, vec![8]);
         coord.shutdown();
     }
 

@@ -131,6 +131,16 @@ pub enum ControlMsg {
         targets: Arc<Vec<f64>>,
         reply: mpsc::Sender<Result<(), String>>,
     },
+    /// Governor: move the die to another rung of the operating-point
+    /// ladder (DESIGN.md §17) by reprogramming the counter MSB. The
+    /// worker rescales its counting window so the eq. 19 relation
+    /// `H = 2^b at I_sat^z` is preserved at the new cap, re-prices its
+    /// energy ledger at the new point, and replies with the new
+    /// fJ/conversion price.
+    Retune {
+        b: u32,
+        reply: mpsc::Sender<u64>,
+    },
 }
 
 /// The answer.

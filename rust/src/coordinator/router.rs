@@ -128,6 +128,7 @@ mod tests {
             features: vec![],
             tenant: None,
             submitted: Instant::now(),
+            collected: None,
             reply: tx,
         }
     }

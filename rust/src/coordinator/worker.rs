@@ -14,7 +14,7 @@
 //! unregister / OS-ELM update) ride the same channel and execute here,
 //! because this thread owns the die.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -60,8 +60,14 @@ pub struct WorkerSetup {
     /// operating point (`chip::energy::conversion_price_fj`), in
     /// femtojoules — the worker prices every booked conversion with it
     /// so the fleet ledger is `sum(conversions_i * price_i)` exactly
-    /// (DESIGN.md §16).
+    /// (DESIGN.md §16). A governor retune re-prices it live.
     pub energy_fj_per_conversion: u64,
+    /// The spawn-time (boot operating point) price. While the governor
+    /// holds the die on a cheaper rung, every booked conversion also
+    /// books `baseline - current` fJ into the governor's saved-energy
+    /// ledger — the same integer arithmetic as the energy ledger, so
+    /// the saving is exact, not estimated (DESIGN.md §17).
+    pub baseline_fj_per_conversion: u64,
 }
 
 /// Once-per-worker log latches + the engine failure streak: a hot
@@ -136,7 +142,11 @@ pub fn run(mut s: WorkerSetup) {
     let mut artifact_stale = false;
     let mut logs = LogOnce::default();
     let passes = s.die.passes();
-    while let Some(batch) = collect_batch(&s.rx, s.max_batch, s.max_wait, passes) {
+    // rows fair admission parked for the next window (batcher carry);
+    // still served after the channel closes — collect_batch only
+    // returns None once both the channel and the carry are drained
+    let mut carry = VecDeque::new();
+    while let Some(batch) = collect_batch(&s.rx, &mut carry, s.max_batch, s.max_wait, passes) {
         if !batch.requests.is_empty() {
             serve_batch(
                 &mut s,
@@ -265,6 +275,14 @@ pub(crate) fn serve_batch<E: BatchEngine>(
         booked * s.energy_fj_per_conversion,
         booked * phys_macs,
     );
+    // governor saved-energy ledger (DESIGN.md §17): while the die sits
+    // on a rung cheaper than its boot point, the saving per conversion
+    // is exactly the integer price difference
+    if s.energy_fj_per_conversion < s.baseline_fj_per_conversion {
+        s.metrics.record_gov_fj_saved(
+            booked * (s.baseline_fj_per_conversion - s.energy_fj_per_conversion),
+        );
+    }
     let backend = if served_pjrt { Backend::Pjrt } else { Backend::ChipSim };
     let passes = s.die.passes();
     // training scaled H by 1/2^b, so tenant scores are rescaled into
@@ -405,7 +423,11 @@ pub(crate) fn serve_batch<E: BatchEngine>(
 fn handle_control(s: &mut WorkerSetup, artifact_stale: &mut bool, ctl: ControlMsg) {
     match ctl {
         ControlMsg::Probe { probe: set, reply } => {
-            let rep = probe::run_probe(&mut s.die, &s.second, &set);
+            // tenant-aware pass: the default head AND every registered
+            // tenant's deployed heads are scored, so a harder task
+            // degrading first raises worst_err for the drift detector
+            let rep =
+                probe::run_probe_all(&mut s.die, &s.second, &s.tenants, s.normalize, &set);
             let _ = reply.send(rep);
         }
         ControlMsg::SetEnv { vdd, temp_k, age_sigma_vt, seed } => {
@@ -466,6 +488,25 @@ fn handle_control(s: &mut WorkerSetup, artifact_stale: &mut bool, ctl: ControlMs
                     .and_then(|row| entry.absorb(&row, &targets)),
             };
             let _ = reply.send(res);
+        }
+        ControlMsg::Retune { b, reply } => {
+            // governor actuation (DESIGN.md §17): reprogram the counter
+            // MSB and scale the counting window by the cap ratio, so the
+            // eq. 19 relation `count == 2^b at I_sat^z` holds at the new
+            // bits — the die's transfer shape is preserved, only its
+            // resolution (and hence conversion energy) changes.
+            let chip = s.die.chip_mut();
+            let old_cap = chip.cfg.cap() as f64;
+            chip.cfg.b = b.clamp(1, 31);
+            let new_price = {
+                chip.t_neu_set *= chip.cfg.cap() as f64 / old_cap;
+                crate::chip::energy::conversion_price_fj(&chip.cfg)
+            };
+            s.energy_fj_per_conversion = new_price;
+            // the AOT artifact was compiled at the boot cap; a retuned
+            // die must serve from the simulator until re-deployed
+            *artifact_stale = true;
+            let _ = reply.send(new_price);
         }
     }
 }
@@ -566,6 +607,7 @@ mod tests {
             // a fixed 100 fJ/conversion makes the ledger assertions
             // exact: energy_fj == 100 * conversions, always
             energy_fj_per_conversion: 100,
+            baseline_fj_per_conversion: 100,
         }
     }
 
@@ -886,6 +928,45 @@ mod tests {
         entry.rls.betas = vec![vec![1.0; 2 * L]];
         entry.rebuild_heads(false);
         s.tenants.insert(name.to_string(), entry);
+    }
+
+    #[test]
+    fn retune_reprograms_bits_window_and_price() {
+        // governor actuation: fewer counter bits -> proportionally
+        // shorter window, cheaper conversion, stale artifact
+        let mut s = setup(); // b = 10
+        let t0 = s.die.chip().t_neu_set;
+        let price0 = crate::chip::energy::conversion_price_fj(&s.die.chip().cfg);
+        let (tx, rx) = mpsc::channel();
+        let mut stale = false;
+        handle_control(&mut s, &mut stale, ControlMsg::Retune { b: 6, reply: tx });
+        let new_price = rx.recv().unwrap();
+        assert!(stale, "retuned die must pin to the simulator");
+        assert_eq!(s.die.chip().cfg.b, 6);
+        assert!(
+            (s.die.chip().t_neu_set - t0 / 16.0).abs() / t0 < 1e-12,
+            "window scales by the cap ratio 2^6/2^10"
+        );
+        assert_eq!(new_price, s.energy_fj_per_conversion, "worker re-prices its ledger");
+        assert!(new_price < price0, "fewer bits must be cheaper");
+        // retuning back restores the window exactly
+        let (tx, rx) = mpsc::channel();
+        handle_control(&mut s, &mut stale, ControlMsg::Retune { b: 10, reply: tx });
+        rx.recv().unwrap();
+        assert!((s.die.chip().t_neu_set - t0).abs() / t0 < 1e-12);
+    }
+
+    #[test]
+    fn cheaper_rung_books_exact_fj_saved() {
+        let mut s = setup(); // baseline 100 fJ/conversion
+        s.energy_fj_per_conversion = 40; // governor holds a low rung
+        let mut engine: Option<FailEngine> = None;
+        let mut logs = LogOnce::default();
+        let (reqs, _rxs) = requests(&s, 3);
+        serve_batch(&mut s, &mut engine, &mut logs, &[], &reqs, false);
+        let snap = s.metrics.snapshot();
+        assert_eq!(snap.energy_fj, 120, "3 conversions x 40 fJ at the low rung");
+        assert_eq!(snap.governor.fj_saved, 180, "3 x (100 - 40) fJ saved, exactly");
     }
 
     #[test]

@@ -47,13 +47,7 @@ impl OperatingPoint {
     /// override earlier ones — so parsing a whole `velm tune --out`
     /// file yields its final `[selected]` section.
     pub fn from_kv(text: &str) -> Result<Self, String> {
-        let mut op = OperatingPoint {
-            sigma_vt: 0.016,
-            ratio: 0.75,
-            b: 14,
-            l: 128,
-            batch: 1,
-        };
+        let mut op = OperatingPoint::default();
         let mut any_key = false;
         for item in crate::config::kv_lines(text) {
             let (lineno, k, v) = item?;
@@ -77,6 +71,46 @@ impl OperatingPoint {
             return Err("no operating-point keys found".into());
         }
         Ok(op)
+    }
+
+    /// Parse every `[front.N]` section of a `velm tune --out` file into
+    /// its own point, in file order. This is how the Pareto front
+    /// becomes a *runtime* artifact: the governor loads the whole front
+    /// (not just the `[selected]` point `from_kv` yields) and uses its
+    /// counter-bit spread as the die operating-point ladder.
+    pub fn parse_front(text: &str) -> Result<Vec<OperatingPoint>, String> {
+        let mut front = Vec::new();
+        let mut section: Option<String> = None; // body of an open [front.N]
+        let flush = |sec: &mut Option<String>, front: &mut Vec<OperatingPoint>| {
+            if let Some(body) = sec.take() {
+                front.push(OperatingPoint::from_kv(&body)?);
+            }
+            Ok::<(), String>(())
+        };
+        for raw in text.lines() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.starts_with('[') {
+                flush(&mut section, &mut front)?;
+                if line.starts_with("[front.") {
+                    section = Some(String::new());
+                }
+            } else if let Some(body) = section.as_mut() {
+                body.push_str(raw);
+                body.push('\n');
+            }
+        }
+        flush(&mut section, &mut front)?;
+        if front.is_empty() {
+            return Err("no [front.N] sections found".into());
+        }
+        Ok(front)
+    }
+}
+
+impl Default for OperatingPoint {
+    /// Table I nominals (also the `from_kv` fall-back values).
+    fn default() -> Self {
+        OperatingPoint { sigma_vt: 0.016, ratio: 0.75, b: 14, l: 128, batch: 1 }
     }
 }
 
@@ -361,6 +395,25 @@ mod tests {
             op.to_kv()
         );
         assert_eq!(OperatingPoint::from_kv(&file).unwrap(), op);
+    }
+
+    #[test]
+    fn parse_front_yields_every_front_section_in_order() {
+        let a = OperatingPoint { sigma_vt: 0.01, ratio: 1.0, b: 6, l: 8, batch: 2 };
+        let b = OperatingPoint { sigma_vt: 0.02, ratio: 0.5, b: 12, l: 16, batch: 4 };
+        let sel = OperatingPoint::default();
+        let file = format!(
+            "# tune output\n[front.0]\n{}\n[front.1]\n{}\n[selected]\n{}",
+            a.to_kv(),
+            b.to_kv(),
+            sel.to_kv()
+        );
+        assert_eq!(OperatingPoint::parse_front(&file).unwrap(), vec![a, b]);
+        // the [selected] section alone carries no front
+        let err = OperatingPoint::parse_front(&format!("[selected]\n{}", sel.to_kv()));
+        assert!(err.unwrap_err().contains("front"));
+        // a bad key inside a front section is a loud error
+        assert!(OperatingPoint::parse_front("[front.0]\nbogus = 1\n").is_err());
     }
 
     #[test]

@@ -50,9 +50,9 @@ impl DriftDetector {
     /// Start from an enrolment (or post-recalibration) baseline probe.
     pub fn new(baseline: &ProbeReport, cfg: &FleetConfig) -> Self {
         DriftDetector {
-            baseline_err: baseline.err,
+            baseline_err: baseline.worst_err(),
             baseline_ref: baseline.ref_counts.clone(),
-            ewma_err: baseline.err,
+            ewma_err: baseline.worst_err(),
             ewma_gain: 1.0,
             ewma_residual: 0.0,
             alpha: cfg.ewma_alpha,
@@ -77,7 +77,7 @@ impl DriftDetector {
             // on a die that never drifted. Escalate straight to the
             // refit tier instead: the die drains, refits and re-probes,
             // or quarantines if the probe stays broken.
-            self.ewma_err = self.alpha * rep.err + (1.0 - self.alpha) * self.ewma_err;
+            self.ewma_err = self.alpha * rep.worst_err() + (1.0 - self.alpha) * self.ewma_err;
             return DriftObservation {
                 verdict: DriftVerdict::Profile,
                 gain: self.ewma_gain,
@@ -88,7 +88,7 @@ impl DriftDetector {
         let gain = common_mode_gain(&self.baseline_ref, &rep.ref_counts);
         let residual = profile_residual(&self.baseline_ref, &rep.ref_counts);
         let a = self.alpha;
-        self.ewma_err = a * rep.err + (1.0 - a) * self.ewma_err;
+        self.ewma_err = a * rep.worst_err() + (1.0 - a) * self.ewma_err;
         self.ewma_gain = a * gain + (1.0 - a) * self.ewma_gain;
         self.ewma_residual = a * residual + (1.0 - a) * self.ewma_residual;
         let verdict = if (self.ewma_gain - 1.0).abs() > self.cm_threshold {
@@ -141,11 +141,16 @@ mod tests {
     }
 
     fn baseline() -> ProbeReport {
-        ProbeReport { err: 0.05, ref_counts: vec![100.0, 200.0, 300.0, 400.0], t_neu: 56e-6 }
+        ProbeReport {
+            err: 0.05,
+            ref_counts: vec![100.0, 200.0, 300.0, 400.0],
+            t_neu: 56e-6,
+            tenant_errs: vec![],
+        }
     }
 
     fn report(err: f64, ref_counts: Vec<f64>) -> ProbeReport {
-        ProbeReport { err, ref_counts, t_neu: 56e-6 }
+        ProbeReport { err, ref_counts, t_neu: 56e-6, tenant_errs: vec![] }
     }
 
     #[test]
@@ -187,6 +192,21 @@ mod tests {
     fn error_growth_without_reference_shift_flags_profile() {
         let mut d = DriftDetector::new(&baseline(), &cfg());
         let bad = report(0.4, baseline().ref_counts);
+        let mut last = DriftVerdict::Stable;
+        for _ in 0..4 {
+            last = d.update(&bad).verdict;
+        }
+        assert_eq!(last, DriftVerdict::Profile);
+    }
+
+    #[test]
+    fn tenant_head_degradation_alone_flags_profile() {
+        // the default head probes clean (err at baseline) but a
+        // registered tenant's score collapsed: worst_err carries it
+        // into the EWMA and the die escalates to the refit tier
+        let mut d = DriftDetector::new(&baseline(), &cfg());
+        let mut bad = baseline();
+        bad.tenant_errs = vec![("easy".into(), 0.04), ("hard".into(), 0.45)];
         let mut last = DriftVerdict::Stable;
         for _ in 0..4 {
             last = d.update(&bad).verdict;

@@ -7,10 +7,14 @@
 //! drift, while per-column deviations left after removing that gain
 //! measure mismatch-profile change.
 
+use std::collections::BTreeMap;
+
 use crate::chip::dac;
 use crate::config::ChipConfig;
 use crate::elm::secondstage::{codes_sum, SecondStage};
 use crate::extension::ServeChip;
+use crate::registry::TenantEntry;
+use crate::util::mat::Mat;
 
 /// The pinned inputs every probe pass replays: labelled samples for the
 /// probe error plus a fixed mid-scale reference vector for the
@@ -56,6 +60,12 @@ pub struct ProbeReport {
     /// The counting window programmed at probe time [s] — renormalisation
     /// shows up here.
     pub t_neu: f64,
+    /// Per-tenant probe scores (error rate / RMSE, the same metric as
+    /// registration's train score), one per registered head on the die
+    /// at probe time. Empty at enrolment — the baseline is probed
+    /// before any tenant registers — so a tenant degrading later shows
+    /// up as pure drift against the enrolled default-head baseline.
+    pub tenant_errs: Vec<(String, f64)>,
 }
 
 impl ProbeReport {
@@ -65,6 +75,13 @@ impl ProbeReport {
             return 0.0;
         }
         self.ref_counts.iter().sum::<f64>() / self.ref_counts.len() as f64
+    }
+
+    /// Worst score across the default head and every tenant head — the
+    /// figure the drift detector tracks, so a harder task degrading
+    /// first (while the default head still probes clean) is caught.
+    pub fn worst_err(&self) -> f64 {
+        self.tenant_errs.iter().map(|(_, e)| *e).fold(self.err, f64::max)
     }
 }
 
@@ -101,7 +118,45 @@ pub fn run_probe(die: &mut ServeChip, second: &SecondStage, probe: &ProbeSet) ->
         err: wrong as f64 / probe.xs.len().max(1) as f64,
         ref_counts,
         t_neu: die.chip().t_neu_set,
+        tenant_errs: Vec::new(),
     }
+}
+
+/// Tenant-aware probe pass (DESIGN.md §14 registry-fairness gap): run
+/// the default-head probe, then score every registered tenant's
+/// *deployed* heads against a pinned prefix of its own training set —
+/// at most the probe-set size per tenant, driven through the same
+/// serving plan as traffic. No head is re-solved; this measures what
+/// the installed models currently answer, so a harder task degrading
+/// first raises [`ProbeReport::worst_err`] while the default head may
+/// still probe clean. A tenant whose rows no longer assemble (shape
+/// drift) scores worst-possible instead of panicking the worker.
+pub fn run_probe_all(
+    die: &mut ServeChip,
+    second: &SecondStage,
+    tenants: &BTreeMap<String, TenantEntry>,
+    normalize: bool,
+    probe: &ProbeSet,
+) -> ProbeReport {
+    let mut rep = run_probe(die, second, probe);
+    let per_tenant = probe.xs.len().max(1);
+    for (name, entry) in tenants {
+        let n = entry.spec.xs.len().min(per_tenant);
+        let rows: Result<Vec<Vec<f64>>, String> = entry.spec.xs[..n]
+            .iter()
+            .map(|x| die.assemble_row(x, normalize))
+            .collect();
+        let score = match rows {
+            // score_predictions aligns targets by row index, so a
+            // prefix of xs scores against the matching target prefix
+            Ok(rows) if !rows.is_empty() => {
+                entry.spec.score_predictions(&Mat::from_rows(&rows), &entry.rls)
+            }
+            _ => 1.0,
+        };
+        rep.tenant_errs.push((name.clone(), score));
+    }
+    rep
 }
 
 /// One environmental disturbance applied to the fleet at a given probe
@@ -242,6 +297,47 @@ mod tests {
         assert_eq!(ra.ref_counts.len(), 24, "reference counts span virtual L");
         assert_eq!(ra.ref_counts, rb.ref_counts);
         assert!(ra.ref_mean() > 0.0);
+    }
+
+    #[test]
+    fn tenant_aware_probe_scores_every_registered_head() {
+        use crate::registry::{fit_on_die, TenantSpec};
+        use std::sync::Arc;
+        let (mut chip, second, probe) = die(5);
+        // two tenants on the die: their deployed heads get scored
+        let xs: Vec<Vec<f64>> =
+            (0..12).map(|k| (0..8).map(|j| ((k * j) as f64 / 50.0) - 0.5).collect()).collect();
+        let ys: Vec<f64> = (0..12).map(|k| (k as f64 / 12.0) - 0.5).collect();
+        let mut tenants = BTreeMap::new();
+        for name in ["alpha", "beta"] {
+            let spec =
+                Arc::new(TenantSpec::regression(name, xs.clone(), &ys, 1.0, 10).unwrap());
+            let (entry, _) = fit_on_die(&mut chip, false, &spec).unwrap();
+            tenants.insert(name.to_string(), entry);
+        }
+        let rep = run_probe_all(&mut chip, &second, &tenants, false, &probe);
+        assert_eq!(rep.tenant_errs.len(), 2);
+        assert_eq!(rep.tenant_errs[0].0, "alpha");
+        assert_eq!(rep.tenant_errs[1].0, "beta");
+        assert!(rep.tenant_errs.iter().all(|(_, e)| e.is_finite() && *e >= 0.0));
+        assert!(rep.worst_err() >= rep.err, "worst_err covers the default head");
+        // with no tenants the pass degenerates to the plain probe
+        let plain = run_probe(&mut chip, &second, &probe);
+        let none = run_probe_all(&mut chip, &second, &BTreeMap::new(), false, &probe);
+        assert!(none.tenant_errs.is_empty());
+        assert!((none.err - plain.err).abs() < 1e-12);
+        assert!((none.worst_err() - none.err).abs() < 1e-12);
+    }
+
+    #[test]
+    fn worst_err_takes_the_max_over_heads() {
+        let rep = ProbeReport {
+            err: 0.1,
+            ref_counts: vec![],
+            t_neu: 1e-6,
+            tenant_errs: vec![("a".into(), 0.05), ("b".into(), 0.4)],
+        };
+        assert!((rep.worst_err() - 0.4).abs() < 1e-12);
     }
 
     #[test]

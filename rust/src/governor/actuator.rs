@@ -1,0 +1,180 @@
+//! The governor's actuator: owns the [`Ladder`] and one [`DiePolicy`]
+//! per die, walks every policy once per control tick, and applies the
+//! resulting moves through a caller-supplied retune callback. The
+//! coordinator wires that callback to `ControlMsg::Retune` on the
+//! worker traffic channels; tests wire it to a closure — the actuator
+//! itself never touches a channel, so every transition is
+//! deterministic and unit-testable.
+
+use crate::governor::policy::{Decision, DiePolicy, TickSignals};
+use crate::governor::{GovernorConfig, Ladder};
+
+/// What happened to one die on one tick.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MoveKind {
+    /// Escalated toward the boot rung (hot traffic).
+    Raised,
+    /// Dropped one rung (idle, accuracy SLO holding).
+    Lowered,
+    /// A wanted move was refused (lifecycle or hysteresis), or the
+    /// retune callback failed and the rung was rolled back.
+    Rejected,
+}
+
+/// One applied (or refused) transition, for the flight recorder.
+#[derive(Clone, Copy, Debug)]
+pub struct Move {
+    pub die: usize,
+    pub kind: MoveKind,
+    /// Counter bits after the move (current bits when rejected).
+    pub b: u32,
+    /// Conversion price at the new rung [fJ].
+    pub price_fj: u64,
+}
+
+/// Per-fleet governor state: the ladder plus each die's policy.
+#[derive(Clone, Debug)]
+pub struct Actuator {
+    cfg: GovernorConfig,
+    ladder: Ladder,
+    dies: Vec<DiePolicy>,
+    pub ticks: u64,
+    pub raises: u64,
+    pub lowers: u64,
+    pub rejected: u64,
+}
+
+impl Actuator {
+    pub fn new(cfg: GovernorConfig, ladder: Ladder, n_dies: usize) -> Actuator {
+        let boot = ladder.boot();
+        Actuator {
+            cfg,
+            ladder,
+            dies: (0..n_dies).map(|_| DiePolicy::new(boot)).collect(),
+            ticks: 0,
+            raises: 0,
+            lowers: 0,
+            rejected: 0,
+        }
+    }
+
+    pub fn ladder(&self) -> &Ladder {
+        &self.ladder
+    }
+
+    /// Counter bits each die currently runs at.
+    pub fn points(&self) -> Vec<u32> {
+        self.dies.iter().map(|d| self.ladder.rung(d.rung()).b).collect()
+    }
+
+    /// One control tick: decide per die, apply moves via `retune`.
+    ///
+    /// `retune(die, b)` must re-point die `die` at counter bits `b`
+    /// and return `true` on success; on failure the die's rung is
+    /// rolled back (the worker may be mid-shutdown) and the move is
+    /// counted rejected. Returns the moves/rejections for recording.
+    pub fn tick(
+        &mut self,
+        signals: &[TickSignals],
+        mut retune: impl FnMut(usize, u32) -> bool,
+    ) -> Vec<Move> {
+        self.ticks += 1;
+        let mut out = Vec::new();
+        let (len, boot) = (self.ladder.len(), self.ladder.boot());
+        for (die, policy) in self.dies.iter_mut().enumerate() {
+            let sig = signals.get(die).copied().unwrap_or_default();
+            let cur = |p: &DiePolicy, l: &Ladder| {
+                let r = l.rung(p.rung());
+                (r.b, r.price_fj)
+            };
+            match policy.decide(&self.cfg, len, boot, &sig) {
+                Decision::Hold => {}
+                Decision::Rejected(_) => {
+                    self.rejected += 1;
+                    let (b, price_fj) = cur(policy, &self.ladder);
+                    out.push(Move { die, kind: MoveKind::Rejected, b, price_fj });
+                }
+                Decision::Raise { from, to } | Decision::Lower { from, to } => {
+                    let raised = to > from;
+                    let rung = self.ladder.rung(to);
+                    if retune(die, rung.b) {
+                        if raised {
+                            self.raises += 1;
+                        } else {
+                            self.lowers += 1;
+                        }
+                        out.push(Move {
+                            die,
+                            kind: if raised { MoveKind::Raised } else { MoveKind::Lowered },
+                            b: rung.b,
+                            price_fj: rung.price_fj,
+                        });
+                    } else {
+                        policy.revert(from);
+                        self.rejected += 1;
+                        let (b, price_fj) = cur(policy, &self.ladder);
+                        out.push(Move { die, kind: MoveKind::Rejected, b, price_fj });
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ChipConfig;
+
+    fn actuator(dies: usize) -> Actuator {
+        let cfg = GovernorConfig {
+            cooldown_ticks: 0,
+            window_ticks: 100,
+            max_moves_per_window: 100,
+            ..GovernorConfig::default()
+        };
+        let ladder = Ladder::from_bits(&ChipConfig::default(), &[6, 8, 10]);
+        Actuator::new(cfg, ladder, dies)
+    }
+
+    fn idle() -> TickSignals {
+        TickSignals { healthy: true, accuracy_ok: true, ..TickSignals::default() }
+    }
+
+    #[test]
+    fn applies_moves_through_the_callback_and_counts_them() {
+        let mut a = actuator(2);
+        assert_eq!(a.points(), vec![14, 14]);
+        let mut applied = Vec::new();
+        let moves = a.tick(&[idle(), idle()], |die, b| {
+            applied.push((die, b));
+            true
+        });
+        assert_eq!(applied, vec![(0, 10), (1, 10)]);
+        assert_eq!(moves.len(), 2);
+        assert!(moves.iter().all(|m| m.kind == MoveKind::Lowered));
+        assert_eq!(a.points(), vec![10, 10]);
+        assert_eq!((a.ticks, a.lowers, a.raises, a.rejected), (1, 2, 0, 0));
+    }
+
+    #[test]
+    fn failed_retune_rolls_the_rung_back() {
+        let mut a = actuator(1);
+        let moves = a.tick(&[idle()], |_, _| false);
+        assert_eq!(moves.len(), 1);
+        assert_eq!(moves[0].kind, MoveKind::Rejected);
+        assert_eq!(a.points(), vec![14], "rung restored after failure");
+        assert_eq!(a.rejected, 1);
+    }
+
+    #[test]
+    fn missing_signals_default_to_unhealthy_and_reject() {
+        let mut a = actuator(2);
+        // only one signal for two dies: die 1 defaults to !healthy
+        let moves = a.tick(&[idle()], |_, _| true);
+        assert_eq!(moves.len(), 2);
+        assert_eq!(moves[1].kind, MoveKind::Rejected);
+        assert_eq!(a.points()[1], 14);
+    }
+}

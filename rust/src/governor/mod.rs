@@ -1,0 +1,188 @@
+//! Traffic-adaptive power/accuracy governor (DESIGN.md §17).
+//!
+//! The dse explorer picks ONE Pareto point at startup; the governor
+//! makes the energy/accuracy trade live. It closes the loop from the
+//! PR-6 telemetry (stats snapshot deltas, queue-wait, per-tenant
+//! training error, fleet health) to per-die operating points: idle
+//! dies drop to low-energy rungs (fewer counter bits, hence a shorter
+//! counting window and a cheaper conversion), hot dies climb back to
+//! high-throughput rungs. Moves are rate-limited by a cooldown and a
+//! per-window move budget so the control loop never flaps, and the
+//! governor always defers to the fleet lifecycle: a die that is not
+//! Healthy is never retuned.
+//!
+//! Layering:
+//! - [`Ladder`]: the runtime Pareto-front artifact — the sorted `b`
+//!   rungs a die may occupy, each priced in fJ/conversion at the
+//!   fleet's base operating point ([`crate::chip::energy`]).
+//! - [`policy`]: pure per-die decision logic (hysteresis, cooldown,
+//!   hot/idle classification). No I/O, fully unit-testable.
+//! - [`actuator`]: walks every die's policy each tick and applies the
+//!   resulting moves through a caller-supplied retune callback (the
+//!   coordinator wires this to `ControlMsg::Retune`).
+
+pub mod actuator;
+pub mod policy;
+
+pub use actuator::{Actuator, Move, MoveKind};
+pub use policy::{Decision, DiePolicy, RejectReason, TickSignals};
+
+use crate::chip::energy::conversion_price_fj;
+use crate::config::ChipConfig;
+use crate::dse::OperatingPoint;
+
+/// Governor settings, carried on `SystemConfig` like `fleet`.
+#[derive(Clone, Debug)]
+pub struct GovernorConfig {
+    /// Master switch; `velm serve --governor` flips it on.
+    pub enabled: bool,
+    /// Control-loop period.
+    pub tick: std::time::Duration,
+    /// Ticks a die must hold still after any move.
+    pub cooldown_ticks: u32,
+    /// Hysteresis window length, in ticks.
+    pub window_ticks: u32,
+    /// Max moves one die may make inside one window.
+    pub max_moves_per_window: u32,
+    /// Mean queue wait (us, over the last tick) above which the fleet
+    /// counts as hot and dies escalate toward the boot rung and above.
+    pub hot_queue_us: u64,
+    /// Default accuracy SLO (training-set error ceiling) applied to
+    /// tenants whose `TenantSpec` carries no `slo_max_err`; a lower
+    /// rung is only taken while every tenant holds its ceiling.
+    pub err_slo: f64,
+    /// Default latency SLO (p99, us) for tenants without `slo_p99_us`.
+    pub p99_slo_us: u64,
+    /// Counter-bit rungs of the ladder when no tuned front is loaded.
+    pub bits: Vec<u32>,
+}
+
+impl Default for GovernorConfig {
+    fn default() -> Self {
+        GovernorConfig {
+            enabled: false,
+            tick: std::time::Duration::from_millis(250),
+            cooldown_ticks: 2,
+            window_ticks: 8,
+            max_moves_per_window: 2,
+            hot_queue_us: 2_000,
+            err_slo: 0.5,
+            p99_slo_us: 50_000,
+            bits: vec![6, 8, 10, 14],
+        }
+    }
+}
+
+/// One occupiable operating point: counter bits plus the conversion
+/// price a die pays there (integer fJ, same pricing as the ledger).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Rung {
+    pub b: u32,
+    pub price_fj: u64,
+}
+
+/// The runtime Pareto-front artifact: rungs sorted by counter bits
+/// (and therefore by energy — the counting window T_neu scales with
+/// 2^b, eq. 19, so fewer bits is strictly cheaper per conversion).
+#[derive(Clone, Debug)]
+pub struct Ladder {
+    rungs: Vec<Rung>,
+    boot: usize,
+}
+
+impl Ladder {
+    /// Build from explicit counter-bit rungs. The base config's own
+    /// `b` is always included so every die has a home rung; rungs
+    /// that price to zero fJ are dropped as degenerate.
+    pub fn from_bits(base: &ChipConfig, bits: &[u32]) -> Ladder {
+        let mut bs: Vec<u32> = bits.to_vec();
+        bs.push(base.b);
+        bs.sort_unstable();
+        bs.dedup();
+        let mut rungs: Vec<Rung> = bs
+            .into_iter()
+            .filter(|&b| (1..=31).contains(&b))
+            .map(|b| Rung { b, price_fj: conversion_price_fj(&base.clone().with_b(b)) })
+            .filter(|r| r.price_fj > 0)
+            .collect();
+        if rungs.is_empty() {
+            // degenerate pricing (all-zero) still leaves a home rung
+            rungs.push(Rung { b: base.b, price_fj: conversion_price_fj(base).max(1) });
+        }
+        let boot = rungs.iter().position(|r| r.b == base.b).unwrap_or(rungs.len() - 1);
+        Ladder { rungs, boot }
+    }
+
+    /// Build from a tuned Pareto front (`velm tune --out` file parsed
+    /// by [`OperatingPoint::parse_front`]): the front's distinct
+    /// counter-bit values become the rungs. Falls back to the config
+    /// default bits when the front collapses to a single point.
+    pub fn from_front(base: &ChipConfig, front: &[OperatingPoint], fallback: &[u32]) -> Ladder {
+        let bits: Vec<u32> = front.iter().map(|p| p.b).collect();
+        if bits.iter().collect::<std::collections::BTreeSet<_>>().len() < 2 {
+            Ladder::from_bits(base, fallback)
+        } else {
+            Ladder::from_bits(base, &bits)
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.rungs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rungs.is_empty()
+    }
+
+    /// Index of the rung the fleet booted on (the tuned point).
+    pub fn boot(&self) -> usize {
+        self.boot
+    }
+
+    pub fn rung(&self, i: usize) -> Rung {
+        self.rungs[i.min(self.rungs.len() - 1)]
+    }
+
+    pub fn rungs(&self) -> &[Rung] {
+        &self.rungs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_rungs_are_sorted_and_priced_monotonically() {
+        let base = ChipConfig::default(); // b = 14
+        let l = Ladder::from_bits(&base, &[10, 6, 8]);
+        let bs: Vec<u32> = l.rungs().iter().map(|r| r.b).collect();
+        assert_eq!(bs, vec![6, 8, 10, 14], "base b joins and sorts");
+        for w in l.rungs().windows(2) {
+            assert!(
+                w[0].price_fj < w[1].price_fj,
+                "fewer counter bits must be strictly cheaper: {w:?}"
+            );
+        }
+        assert_eq!(l.rung(l.boot()).b, 14, "boot rung is the fleet's tuned b");
+    }
+
+    #[test]
+    fn ladder_from_front_uses_front_bits_and_falls_back_when_flat() {
+        let base = ChipConfig::default().with_b(10);
+        let p = |b: u32| OperatingPoint { b, ..OperatingPoint::default() };
+        let l = Ladder::from_front(&base, &[p(6), p(10), p(6)], &[8, 12]);
+        let bs: Vec<u32> = l.rungs().iter().map(|r| r.b).collect();
+        assert_eq!(bs, vec![6, 10]);
+        // a single-point front carries no trade-off: use the fallback
+        let l = Ladder::from_front(&base, &[p(10)], &[8, 12]);
+        let bs: Vec<u32> = l.rungs().iter().map(|r| r.b).collect();
+        assert_eq!(bs, vec![8, 10, 12]);
+    }
+
+    #[test]
+    fn ladder_clamps_out_of_range_rung_index() {
+        let l = Ladder::from_bits(&ChipConfig::default(), &[8]);
+        assert_eq!(l.rung(usize::MAX).b, 14);
+    }
+}

@@ -1,0 +1,222 @@
+//! Pure per-die governor policy: decides, once per control tick,
+//! whether a die should climb toward a high-throughput rung, drop to a
+//! low-energy rung, or hold — bounded by a post-move cooldown and a
+//! per-window move budget (hysteresis) so the loop cannot flap, and
+//! always deferring to the fleet lifecycle (an unhealthy die is never
+//! moved). No I/O and no clocks: the coordinator feeds it
+//! [`TickSignals`] computed from stats-snapshot deltas.
+
+use crate::governor::GovernorConfig;
+
+/// What the governor observed about one die over the last tick.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TickSignals {
+    /// Fleet lifecycle says the die is Healthy (routable). Anything
+    /// else — Degraded, Draining, Recalibrating, Quarantined, Standby —
+    /// and the governor must keep its hands off.
+    pub healthy: bool,
+    /// Rows submitted to the fleet since the previous tick.
+    pub requests_delta: u64,
+    /// Requests currently queued on this die's channel.
+    pub outstanding: usize,
+    /// Mean queue wait over the rows of the last tick [us].
+    pub mean_queue_us: u64,
+    /// Every tenant currently holds its accuracy SLO (training-set
+    /// error at or under its `slo_max_err`); a die only drops to a
+    /// cheaper, noisier rung while this is true.
+    pub accuracy_ok: bool,
+}
+
+/// Why a wanted move was refused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// Die is not Healthy; lifecycle owns it (probe/renorm/refit).
+    Unhealthy,
+    /// The per-window move budget is spent (hysteresis).
+    Hysteresis,
+}
+
+/// One tick's verdict for one die. `from`/`to` are ladder rung indices.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    Hold,
+    Raise { from: usize, to: usize },
+    Lower { from: usize, to: usize },
+    Rejected(RejectReason),
+}
+
+/// Per-die control state: current rung plus the anti-flap bookkeeping.
+#[derive(Clone, Debug)]
+pub struct DiePolicy {
+    rung: usize,
+    cooldown: u32,
+    moves_in_window: u32,
+    tick_in_window: u32,
+}
+
+impl DiePolicy {
+    /// A die starts life on the fleet's boot (tuned) rung.
+    pub fn new(boot_rung: usize) -> DiePolicy {
+        DiePolicy { rung: boot_rung, cooldown: 0, moves_in_window: 0, tick_in_window: 0 }
+    }
+
+    /// Ladder rung the die currently occupies.
+    pub fn rung(&self) -> usize {
+        self.rung
+    }
+
+    /// Advance one tick and decide. `ladder_len` bounds the climb;
+    /// `boot_rung` is the ceiling a hot die escalates back toward
+    /// (raising above boot trades tuned accuracy for nothing — the
+    /// boot point already met the latency objective when tuned).
+    pub fn decide(
+        &mut self,
+        cfg: &GovernorConfig,
+        ladder_len: usize,
+        boot_rung: usize,
+        sig: &TickSignals,
+    ) -> Decision {
+        // hysteresis window bookkeeping runs even on held ticks
+        self.tick_in_window += 1;
+        if self.tick_in_window >= cfg.window_ticks.max(1) {
+            self.tick_in_window = 0;
+            self.moves_in_window = 0;
+        }
+        if !sig.healthy {
+            return Decision::Rejected(RejectReason::Unhealthy);
+        }
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            return Decision::Hold;
+        }
+        let top = boot_rung.min(ladder_len.saturating_sub(1));
+        let hot = sig.requests_delta > 0
+            && (sig.mean_queue_us >= cfg.hot_queue_us || sig.outstanding > 0);
+        let idle = sig.requests_delta == 0 && sig.outstanding == 0;
+        let want = if hot && self.rung < top {
+            Some(Decision::Raise { from: self.rung, to: top })
+        } else if idle && sig.accuracy_ok && self.rung > 0 {
+            Some(Decision::Lower { from: self.rung, to: self.rung - 1 })
+        } else {
+            None
+        };
+        match want {
+            None => Decision::Hold,
+            Some(d) => {
+                if self.moves_in_window >= cfg.max_moves_per_window {
+                    return Decision::Rejected(RejectReason::Hysteresis);
+                }
+                self.moves_in_window += 1;
+                self.cooldown = cfg.cooldown_ticks;
+                self.rung = match d {
+                    Decision::Raise { to, .. } | Decision::Lower { to, .. } => to,
+                    _ => self.rung,
+                };
+                d
+            }
+        }
+    }
+
+    /// Roll back a move the actuator could not apply (worker gone):
+    /// restore the rung but keep the cooldown, so a dead channel is
+    /// not hammered every tick.
+    pub fn revert(&mut self, to: usize) {
+        self.rung = to;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> GovernorConfig {
+        GovernorConfig {
+            cooldown_ticks: 0,
+            window_ticks: 100,
+            max_moves_per_window: 100,
+            ..GovernorConfig::default()
+        }
+    }
+
+    fn idle() -> TickSignals {
+        TickSignals { healthy: true, accuracy_ok: true, ..TickSignals::default() }
+    }
+
+    fn hot() -> TickSignals {
+        TickSignals {
+            healthy: true,
+            accuracy_ok: true,
+            requests_delta: 50,
+            mean_queue_us: 10_000,
+            ..TickSignals::default()
+        }
+    }
+
+    #[test]
+    fn idle_die_steps_down_one_rung_at_a_time() {
+        let mut p = DiePolicy::new(3);
+        assert_eq!(p.decide(&cfg(), 4, 3, &idle()), Decision::Lower { from: 3, to: 2 });
+        assert_eq!(p.decide(&cfg(), 4, 3, &idle()), Decision::Lower { from: 2, to: 1 });
+        assert_eq!(p.decide(&cfg(), 4, 3, &idle()), Decision::Lower { from: 1, to: 0 });
+        // floor: nowhere further down to go
+        assert_eq!(p.decide(&cfg(), 4, 3, &idle()), Decision::Hold);
+        assert_eq!(p.rung(), 0);
+    }
+
+    #[test]
+    fn hot_die_jumps_straight_back_to_boot() {
+        let mut p = DiePolicy::new(3);
+        for _ in 0..3 {
+            p.decide(&cfg(), 4, 3, &idle());
+        }
+        assert_eq!(p.rung(), 0);
+        assert_eq!(p.decide(&cfg(), 4, 3, &hot()), Decision::Raise { from: 0, to: 3 });
+        // already at the ceiling: hot traffic holds there
+        assert_eq!(p.decide(&cfg(), 4, 3, &hot()), Decision::Hold);
+    }
+
+    #[test]
+    fn accuracy_slo_blocks_the_descent() {
+        let mut p = DiePolicy::new(2);
+        let sig = TickSignals { accuracy_ok: false, ..idle() };
+        assert_eq!(p.decide(&cfg(), 3, 2, &sig), Decision::Hold);
+        assert_eq!(p.rung(), 2);
+    }
+
+    #[test]
+    fn unhealthy_die_is_never_touched() {
+        let mut p = DiePolicy::new(2);
+        let sig = TickSignals { healthy: false, ..idle() };
+        assert_eq!(p.decide(&cfg(), 3, 2, &sig), Decision::Rejected(RejectReason::Unhealthy));
+        assert_eq!(p.rung(), 2);
+    }
+
+    #[test]
+    fn cooldown_spaces_consecutive_moves() {
+        let c = GovernorConfig { cooldown_ticks: 2, ..cfg() };
+        let mut p = DiePolicy::new(3);
+        assert!(matches!(p.decide(&c, 4, 3, &idle()), Decision::Lower { .. }));
+        // two held ticks while the cooldown drains
+        assert_eq!(p.decide(&c, 4, 3, &idle()), Decision::Hold);
+        assert_eq!(p.decide(&c, 4, 3, &idle()), Decision::Hold);
+        assert!(matches!(p.decide(&c, 4, 3, &idle()), Decision::Lower { .. }));
+    }
+
+    #[test]
+    fn window_budget_rejects_excess_moves() {
+        let c = GovernorConfig {
+            cooldown_ticks: 0,
+            window_ticks: 10,
+            max_moves_per_window: 1,
+            ..GovernorConfig::default()
+        };
+        let mut p = DiePolicy::new(5);
+        assert!(matches!(p.decide(&c, 6, 5, &idle()), Decision::Lower { .. }));
+        for _ in 0..8 {
+            // window still open: budget spent, further moves rejected
+            assert_eq!(p.decide(&c, 6, 5, &idle()), Decision::Rejected(RejectReason::Hysteresis));
+        }
+        // tick 10 closes the window and the budget refills
+        assert!(matches!(p.decide(&c, 6, 5, &idle()), Decision::Lower { .. }));
+    }
+}

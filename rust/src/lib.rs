@@ -7,8 +7,10 @@
 //! technique ([`extension`]), a PJRT runtime executing the AOT-compiled
 //! JAX model ([`runtime`]), a serving coordinator ([`coordinator`]),
 //! a multi-tenant model registry ([`registry`]) that lets many
-//! workloads share one die fleet's hidden layer, and a typed, versioned
-//! serving protocol ([`protocol`]) with a client SDK ([`client`]).
+//! workloads share one die fleet's hidden layer, a typed, versioned
+//! serving protocol ([`protocol`]) with a client SDK ([`client`]), and
+//! a traffic-adaptive power/accuracy governor ([`governor`]) that
+//! moves dies along the tuned Pareto front at runtime.
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured record.
 
@@ -23,6 +25,7 @@ pub mod dse;
 pub mod elm;
 pub mod extension;
 pub mod fleet;
+pub mod governor;
 pub mod loadgen;
 pub mod protocol;
 pub mod registry;

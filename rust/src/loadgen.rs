@@ -5,6 +5,14 @@
 //! versioned JSON benchmark report — the `BENCH_6.json` artifact CI
 //! regenerates and schema-validates.
 //!
+//! With `--governor` the benchmark runs a second, governor-enabled leg
+//! over an idle-heavy trace (burst, quiet window, burst) and reports it
+//! next to the baseline under schema v2 — the `BENCH_7.json` artifact —
+//! showing the governor descending to a cheap rung in the quiet window
+//! and the exact fJ it saved (DESIGN.md §17). `gate_bench_json`
+//! compares two reports and fails CI when throughput or end-to-end p99
+//! regresses beyond a budget.
+//!
 //! The report deliberately reuses the observability layer instead of
 //! measuring on its own: the per-stage percentiles come from the same
 //! histograms `STATS` serves, and the energy figures from the same
@@ -19,11 +27,15 @@ use anyhow::{Context, Result};
 use crate::config::{ChipConfig, SystemConfig, Transfer};
 use crate::coordinator::Coordinator;
 use crate::datasets::synth;
+use crate::governor::GovernorConfig;
 use crate::protocol::{StageStats, StatsSnapshot};
 use crate::util::json::Value;
 
 /// Schema tag stamped into every report; bump with the field set.
 pub const BENCH_SCHEMA: &str = "velm-bench-serve/1";
+
+/// Schema tag for reports carrying the governor comparison leg.
+pub const BENCH_SCHEMA_V2: &str = "velm-bench-serve/2";
 
 /// One benchmark run's shape.
 #[derive(Clone, Debug)]
@@ -39,6 +51,9 @@ pub struct BenchConfig {
     pub chips: usize,
     /// Cap on the training set (0 = full) — smoke runs train fast.
     pub max_train: usize,
+    /// Also run the governor-enabled comparison leg over an idle-heavy
+    /// trace and emit a schema-v2 report (DESIGN.md §17).
+    pub governor: bool,
 }
 
 impl BenchConfig {
@@ -52,6 +67,7 @@ impl BenchConfig {
             concurrency: 4,
             chips: 2,
             max_train: 200,
+            governor: false,
         }
     }
 
@@ -61,14 +77,37 @@ impl BenchConfig {
     }
 }
 
+/// The governor-enabled comparison leg of a v2 report: same request
+/// count as the baseline, served as an idle-heavy trace so the governor
+/// gets a quiet window to descend in (DESIGN.md §17).
+#[derive(Clone, Debug)]
+pub struct GovernorLeg {
+    pub responses: u64,
+    pub elapsed_us: u64,
+    pub throughput_rps: f64,
+    /// End-to-end p99 over the whole leg — burst rows included, so a
+    /// governor that holds a cheap rung into the burst shows up here.
+    pub p99_us: u64,
+    pub energy_fj: u64,
+    /// Exact fJ the cheap rung saved vs boot pricing (integer ledger).
+    pub fj_saved: u64,
+    pub ticks: u64,
+    pub raises: u64,
+    pub lowers: u64,
+    /// Final per-die operating points (counter bits).
+    pub points: Vec<u32>,
+}
+
 /// What one run produced: wall-clock plus the coordinator's final
-/// snapshot (stage histograms, energy ledger, counters).
+/// snapshot (stage histograms, energy ledger, counters), and the
+/// governor comparison leg when the run asked for one.
 #[derive(Clone, Debug)]
 pub struct BenchReport {
     pub dataset: String,
     pub requests: u64,
     pub elapsed_us: u64,
     pub snapshot: StatsSnapshot,
+    pub governor: Option<GovernorLeg>,
 }
 
 impl BenchReport {
@@ -81,7 +120,8 @@ impl BenchReport {
         }
     }
 
-    /// Render the versioned JSON report ([`BENCH_SCHEMA`]).
+    /// Render the versioned JSON report — [`BENCH_SCHEMA`], or
+    /// [`BENCH_SCHEMA_V2`] when the governor leg rode along.
     pub fn to_json(&self) -> String {
         let u = |n: u64| Value::Num(n as f64);
         let stage = |s: &StageStats| {
@@ -93,10 +133,10 @@ impl BenchReport {
                 ("mean_us".into(), Value::Num(s.mean_us())),
             ])
         };
+        let schema = if self.governor.is_some() { BENCH_SCHEMA_V2 } else { BENCH_SCHEMA };
         let s = &self.snapshot;
-        let mut out = String::new();
-        Value::Obj(vec![
-            ("schema".into(), Value::Str(BENCH_SCHEMA.into())),
+        let mut fields = vec![
+            ("schema".into(), Value::Str(schema.into())),
             ("dataset".into(), Value::Str(self.dataset.clone())),
             ("requests".into(), u(self.requests)),
             ("responses".into(), u(s.responses)),
@@ -115,21 +155,45 @@ impl BenchReport {
                     ("compute".into(), stage(&s.compute)),
                 ]),
             ),
-        ])
-        .write(&mut out);
+        ];
+        if let Some(g) = &self.governor {
+            fields.push((
+                "governor".into(),
+                Value::Obj(vec![
+                    ("responses".into(), u(g.responses)),
+                    ("elapsed_us".into(), u(g.elapsed_us)),
+                    ("throughput_rps".into(), Value::Num(g.throughput_rps)),
+                    ("p99_us".into(), u(g.p99_us)),
+                    ("energy_fj".into(), u(g.energy_fj)),
+                    ("fj_saved".into(), u(g.fj_saved)),
+                    ("ticks".into(), u(g.ticks)),
+                    ("raises".into(), u(g.raises)),
+                    ("lowers".into(), u(g.lowers)),
+                    (
+                        "points".into(),
+                        Value::Arr(g.points.iter().map(|&b| u(b as u64)).collect()),
+                    ),
+                ]),
+            ));
+        }
+        let mut out = String::new();
+        Value::Obj(fields).write(&mut out);
         out
     }
 }
 
-/// Check a `BENCH_6.json` document against [`BENCH_SCHEMA`]: the tag,
-/// every counter, the derived rates and all four stage blocks must be
-/// present and self-consistent. CI runs this over the committed
-/// artifact after regenerating it.
+/// Check a bench report document against its schema: the tag, every
+/// counter, the derived rates and all four stage blocks must be present
+/// and self-consistent. Schema v2 ([`BENCH_SCHEMA_V2`]) additionally
+/// requires the governor comparison leg, and requires it to actually
+/// demonstrate the saving: positive `fj_saved` and less energy than the
+/// baseline leg for the same request count. CI runs this over the
+/// committed `BENCH_6.json`/`BENCH_7.json` after regenerating them.
 pub fn validate_bench_json(text: &str) -> Result<(), String> {
     let v = Value::parse(text)?;
     let schema = v.get("schema").and_then(Value::as_str).ok_or("missing 'schema'")?;
-    if schema != BENCH_SCHEMA {
-        return Err(format!("schema '{schema}' != '{BENCH_SCHEMA}'"));
+    if schema != BENCH_SCHEMA && schema != BENCH_SCHEMA_V2 {
+        return Err(format!("schema '{schema}' != '{BENCH_SCHEMA}' or '{BENCH_SCHEMA_V2}'"));
     }
     v.get("dataset").and_then(Value::as_str).ok_or("missing 'dataset'")?;
     let u = |k: &str| v.get(k).and_then(Value::as_u64).ok_or(format!("missing '{k}'"));
@@ -170,24 +234,170 @@ pub fn validate_bench_json(text: &str) -> Result<(), String> {
             return Err(format!("stage '{key}': p50 {p50} > p99 {p99}"));
         }
     }
-    Ok(())
+    match (schema == BENCH_SCHEMA_V2, v.get("governor")) {
+        (false, None) => Ok(()),
+        (false, Some(_)) => Err("a governor block needs schema v2".into()),
+        (true, None) => Err("schema v2 requires the 'governor' block".into()),
+        (true, Some(g)) => {
+            let gu = |k: &str| {
+                g.get(k)
+                    .and_then(Value::as_u64)
+                    .ok_or(format!("governor block missing '{k}'"))
+            };
+            if gu("responses")? == 0 {
+                return Err("governor leg served no rows".into());
+            }
+            if gu("elapsed_us")? == 0 {
+                return Err("governor elapsed_us must be positive".into());
+            }
+            g.get("throughput_rps")
+                .and_then(Value::as_f64)
+                .filter(|x| x.is_finite() && *x >= 0.0)
+                .ok_or("governor block missing 'throughput_rps'")?;
+            gu("p99_us")?;
+            gu("ticks")?;
+            gu("raises")?;
+            gu("lowers")?;
+            let points = g
+                .get("points")
+                .and_then(Value::as_arr)
+                .ok_or("governor block missing 'points'")?;
+            if points.iter().any(|p| p.as_u64().is_none()) {
+                return Err("governor points must be unsigned bit counts".into());
+            }
+            // the leg must actually demonstrate the saving: the quiet
+            // window descends to a cheaper rung, so the same trace
+            // costs strictly less fleet energy than the baseline
+            if gu("fj_saved")? == 0 {
+                return Err("governor leg saved no energy (fj_saved == 0)".into());
+            }
+            if gu("energy_fj")? >= u("energy_fj")? {
+                return Err("governor leg must cost less energy than the baseline".into());
+            }
+            Ok(())
+        }
+    }
+}
+
+/// Regression gate over two bench reports (`velm bench gate`): compare
+/// the current report against a previous one and fail when throughput
+/// drops, or end-to-end p99 rises, by more than `max_regress`
+/// (a fraction: 0.10 allows 10%). Either schema version is accepted —
+/// the gated figures live in the baseline body of both. Returns a
+/// printable comparison on success.
+pub fn gate_bench_json(
+    current: &str,
+    previous: &str,
+    max_regress: f64,
+) -> Result<String, String> {
+    let read = |text: &str, which: &str| -> Result<(f64, u64), String> {
+        let v = Value::parse(text).map_err(|e| format!("{which}: {e}"))?;
+        let schema = v
+            .get("schema")
+            .and_then(Value::as_str)
+            .ok_or(format!("{which}: missing 'schema'"))?;
+        if schema != BENCH_SCHEMA && schema != BENCH_SCHEMA_V2 {
+            return Err(format!("{which}: unknown schema '{schema}'"));
+        }
+        let rps = v
+            .get("throughput_rps")
+            .and_then(Value::as_f64)
+            .filter(|x| x.is_finite() && *x >= 0.0)
+            .ok_or(format!("{which}: missing 'throughput_rps'"))?;
+        let p99 = v
+            .get("stages")
+            .and_then(|s| s.get("total"))
+            .and_then(|t| t.get("p99_us"))
+            .and_then(Value::as_u64)
+            .ok_or(format!("{which}: missing stages.total.p99_us"))?;
+        Ok((rps, p99))
+    };
+    let (cur_rps, cur_p99) = read(current, "current")?;
+    let (prev_rps, prev_p99) = read(previous, "previous")?;
+    let allow = max_regress.max(0.0);
+    let verdict = format!(
+        "throughput {cur_rps:.1} rps vs {prev_rps:.1} rps, \
+         p99 {cur_p99} us vs {prev_p99} us (budget {:.0}%)",
+        allow * 100.0
+    );
+    if cur_rps < prev_rps * (1.0 - allow) {
+        return Err(format!("throughput regressed beyond the budget: {verdict}"));
+    }
+    if prev_p99 > 0 && cur_p99 as f64 > prev_p99 as f64 * (1.0 + allow) {
+        return Err(format!("p99 regressed beyond the budget: {verdict}"));
+    }
+    Ok(verdict)
 }
 
 /// Boot a fleet per `cfg`, drive it closed-loop, return the report.
+/// With `cfg.governor` a second, governor-enabled fleet serves the same
+/// request count as an idle-heavy trace and lands in the report's
+/// comparison leg.
 pub fn run(cfg: &BenchConfig) -> Result<BenchReport> {
+    let (snapshot, elapsed_us, requests) = drive(cfg, false)?;
+    let governor = if cfg.governor {
+        let (gs, ge, _) = drive(cfg, true)?;
+        let throughput_rps =
+            if ge == 0 { 0.0 } else { gs.responses as f64 / (ge as f64 * 1e-6) };
+        Some(GovernorLeg {
+            responses: gs.responses,
+            elapsed_us: ge,
+            throughput_rps,
+            p99_us: gs.latency.p99_us,
+            energy_fj: gs.energy_fj,
+            fj_saved: gs.governor.fj_saved,
+            ticks: gs.governor.ticks,
+            raises: gs.governor.raises,
+            lowers: gs.governor.lowers,
+            points: gs.governor.points.clone(),
+        })
+    } else {
+        None
+    };
+    Ok(BenchReport {
+        dataset: cfg.dataset.clone(),
+        requests,
+        elapsed_us,
+        snapshot,
+        governor,
+    })
+}
+
+/// One benchmark leg: boot a fleet (governed or not), drive it
+/// closed-loop, return (final snapshot, elapsed us, requests sent).
+///
+/// The governed leg serves the idle-heavy trace: half the rows as a
+/// burst at the boot point, a quiet window in which a hand-driven
+/// governor tick descends the ladder, the other half on the cheap
+/// rung, then a final tick that restores the boot point. Ticks are
+/// manual (the thread is parked on a huge period) so the descent — and
+/// with it the report's `fj_saved` — is deterministic.
+fn drive(cfg: &BenchConfig, governed: bool) -> Result<(StatsSnapshot, u64, u64)> {
     let mut ds = synth::by_name(&cfg.dataset, cfg.seed)
         .with_context(|| format!("unknown dataset {}", cfg.dataset))?;
     if cfg.max_train > 0 && ds.train_x.len() > cfg.max_train {
         ds.train_x.truncate(cfg.max_train);
         ds.train_y.truncate(cfg.max_train);
     }
-    let sys = SystemConfig {
+    let mut sys = SystemConfig {
         n_chips: cfg.chips.max(1),
         max_wait: Duration::from_millis(1),
         seed: cfg.seed,
         artifact_dir: "/nonexistent".into(),
         ..SystemConfig::default()
     };
+    if governed {
+        sys.governor = GovernorConfig {
+            enabled: true,
+            tick: Duration::from_secs(3600), // ticks are driven by hand
+            cooldown_ticks: 0,
+            window_ticks: 1_000,
+            max_moves_per_window: 1_000,
+            hot_queue_us: 0, // any traffic at all reads as hot
+            bits: vec![6],   // one low-energy rung under the b=10 boot
+            ..GovernorConfig::default()
+        };
+    }
     let chip = ChipConfig::default()
         .with_dims(ds.d(), 24)
         .with_b(10)
@@ -197,34 +407,45 @@ pub fn run(cfg: &BenchConfig) -> Result<BenchReport> {
     let per = (cfg.requests / workers).max(1);
     let xs = &ds.train_x;
     let t0 = Instant::now();
-    std::thread::scope(|scope| -> Result<()> {
-        let mut joins = Vec::new();
-        for w in 0..workers {
-            let coord = Arc::clone(&coord);
-            joins.push(scope.spawn(move || -> Result<()> {
-                for i in 0..per {
-                    // closed loop: wait for the answer before the next row
-                    coord.classify(xs[(w * per + i) % xs.len()].clone())?;
-                }
-                Ok(())
-            }));
-        }
-        for j in joins {
-            j.join().map_err(|_| anyhow::anyhow!("bench worker panicked"))??;
-        }
-        Ok(())
-    })?;
+    // one closed-loop phase: every worker serves its `rows` range and
+    // waits for each answer before sending the next row
+    let phase = |rows: std::ops::Range<usize>| -> Result<()> {
+        std::thread::scope(|scope| -> Result<()> {
+            let mut joins = Vec::new();
+            for w in 0..workers {
+                let coord = Arc::clone(&coord);
+                let rows = rows.clone();
+                joins.push(scope.spawn(move || -> Result<()> {
+                    for i in rows {
+                        coord.classify(xs[(w * per + i) % xs.len()].clone())?;
+                    }
+                    Ok(())
+                }));
+            }
+            for j in joins {
+                j.join().map_err(|_| anyhow::anyhow!("bench worker panicked"))??;
+            }
+            Ok(())
+        })
+    };
+    if governed {
+        let split = per / 2;
+        phase(0..split)?;
+        coord.governor_tick(); // absorbs the burst delta (hot, at boot)
+        coord.governor_tick(); // quiet window: descend one rung
+        // the tick blocks on each worker's retune ack, so the whole
+        // second burst is already priced on the cheap rung
+        phase(split..per)?;
+        coord.governor_tick(); // traffic again: restore the boot point
+    } else {
+        phase(0..per)?;
+    }
     let elapsed_us = (t0.elapsed().as_micros() as u64).max(1);
     let snapshot = coord.snapshot();
     if let Ok(coord) = Arc::try_unwrap(coord) {
         coord.shutdown();
     }
-    Ok(BenchReport {
-        dataset: cfg.dataset.clone(),
-        requests: (per * workers) as u64,
-        elapsed_us,
-        snapshot,
-    })
+    Ok((snapshot, elapsed_us, (per * workers) as u64))
 }
 
 #[cfg(test)]
@@ -281,5 +502,105 @@ mod tests {
         let text = std::fs::read_to_string(path)
             .unwrap_or_else(|e| panic!("reading {path}: {e}"));
         validate_bench_json(&text).unwrap_or_else(|e| panic!("{path}: {e}"));
+    }
+
+    #[test]
+    fn committed_governor_bench_artifact_passes_the_schema() {
+        // BENCH_7.json (the governor comparison, schema v2) is
+        // regenerated by CI via `velm bench serve --smoke --governor`
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_7.json");
+        let text = std::fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("reading {path}: {e}"));
+        validate_bench_json(&text).unwrap_or_else(|e| panic!("{path}: {e}"));
+    }
+
+    #[test]
+    fn governor_leg_saves_energy_and_reports_under_schema_v2() {
+        let cfg = BenchConfig {
+            requests: 60,
+            concurrency: 3,
+            chips: 2,
+            max_train: 120,
+            governor: true,
+            ..BenchConfig::smoke()
+        };
+        let report = run(&cfg).unwrap();
+        let g = report.governor.as_ref().expect("comparison leg");
+        assert_eq!(g.responses, 60, "the governed leg serves the same trace");
+        assert!(g.lowers >= 1, "the quiet window must descend: {g:?}");
+        assert!(g.raises >= 1, "the second burst must restore boot: {g:?}");
+        assert!(g.fj_saved > 0, "the cheap rung must save energy: {g:?}");
+        assert!(
+            g.energy_fj < report.snapshot.energy_fj,
+            "governed {} fJ vs baseline {} fJ",
+            g.energy_fj,
+            report.snapshot.energy_fj
+        );
+        // the ledger is exact: saved + spent == boot-priced spend, so
+        // the two legs' energies differ by exactly the saving
+        assert_eq!(g.energy_fj + g.fj_saved, report.snapshot.energy_fj);
+        assert_eq!(g.points, vec![10, 10], "final tick restores both dies");
+        let json = report.to_json();
+        assert!(json.contains(BENCH_SCHEMA_V2), "{json}");
+        validate_bench_json(&json).unwrap();
+    }
+
+    #[test]
+    fn validator_polices_the_governor_block() {
+        // v1 must not carry a governor block; v2 must carry a valid one
+        let err = validate_bench_json(
+            r#"{"schema":"velm-bench-serve/2","dataset":"d","requests":1,
+                "responses":1,"elapsed_us":1,"throughput_rps":1.0,
+                "conversions":1,"energy_fj":10,"macs":1,"pj_per_mac":0.1,
+                "stages":{"total":{"count":1,"p50_us":1,"p90_us":1,"p99_us":1},
+                          "queue":{"count":1,"p50_us":1,"p90_us":1,"p99_us":1},
+                          "batch_wait":{"count":1,"p50_us":1,"p90_us":1,"p99_us":1},
+                          "compute":{"count":1,"p50_us":1,"p90_us":1,"p99_us":1}}}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("governor"), "{err}");
+        // a governed leg that saved nothing is not a demonstration
+        let cfg = BenchConfig {
+            requests: 40,
+            concurrency: 2,
+            chips: 1,
+            max_train: 120,
+            governor: true,
+            ..BenchConfig::smoke()
+        };
+        let mut report = run(&cfg).unwrap();
+        report.governor.as_mut().unwrap().fj_saved = 0;
+        let err = validate_bench_json(&report.to_json()).unwrap_err();
+        assert!(err.contains("fj_saved"), "{err}");
+    }
+
+    #[test]
+    fn gate_passes_within_budget_and_fails_beyond_it() {
+        let report = |rps: f64, p99: u64| {
+            format!(
+                r#"{{"schema":"velm-bench-serve/1","dataset":"d","requests":10,
+                    "responses":10,"elapsed_us":1000,"throughput_rps":{rps},
+                    "conversions":10,"energy_fj":100,"macs":10,"pj_per_mac":0.1,
+                    "stages":{{"total":{{"count":10,"p50_us":5,"p90_us":8,"p99_us":{p99}}},
+                              "queue":{{"count":10,"p50_us":1,"p90_us":1,"p99_us":1}},
+                              "batch_wait":{{"count":10,"p50_us":1,"p90_us":1,"p99_us":1}},
+                              "compute":{{"count":10,"p50_us":1,"p90_us":1,"p99_us":1}}}}}}"#
+            )
+        };
+        let prev = report(1000.0, 100);
+        // small wobble inside the 10% budget: pass, both directions
+        gate_bench_json(&report(950.0, 105), &prev, 0.10).unwrap();
+        gate_bench_json(&report(1200.0, 50), &prev, 0.10).unwrap();
+        // throughput collapse: fail, and the verdict names the axis
+        let err = gate_bench_json(&report(800.0, 100), &prev, 0.10).unwrap_err();
+        assert!(err.contains("throughput"), "{err}");
+        // p99 blowup: fail
+        let err = gate_bench_json(&report(1000.0, 125), &prev, 0.10).unwrap_err();
+        assert!(err.contains("p99"), "{err}");
+        // garbage inputs are named by side
+        let err = gate_bench_json("not json", &prev, 0.10).unwrap_err();
+        assert!(err.contains("current"), "{err}");
+        let err = gate_bench_json(&prev, "{}", 0.10).unwrap_err();
+        assert!(err.contains("previous"), "{err}");
     }
 }

@@ -36,18 +36,24 @@ fn usage() -> &'static str {
        serve [--addr HOST:PORT] [--dataset NAME] [--chips N]\n\
              [--point FILE] [--phys-d K] [--phys-l N] [--virtual-l L]\n\
              [--geoms K1xL1,K2xL2,...] [--tenant NAME=DATASET ...]\n\
+             [--governor] [--governor-bits B1,B2,...] [--governor-tick-ms MS]\n\
              [--read-timeout-ms MS]                  TCP front end (tuned point via FILE;\n\
                                                      virtual dies via --phys-d/--phys-l/\n\
                                                      --virtual-l; heterogeneous per-die\n\
                                                      geometries via --geoms; extra models\n\
                                                      on the same fleet via repeatable\n\
                                                      --tenant, or REGISTER at runtime;\n\
-                                                     idle clients dropped after\n\
-                                                     --read-timeout-ms, 0 = never)\n\
+                                                     --governor closes the telemetry ->\n\
+                                                     operating-point loop, rung ladder\n\
+                                                     from --governor-bits or the --point\n\
+                                                     file's Pareto front; idle clients\n\
+                                                     dropped after --read-timeout-ms,\n\
+                                                     0 = never)\n\
        client VERB [--addr HOST:PORT] [--v0]         typed client SDK against a running\n\
                                                      fleet; VERB is one of ping |\n\
                                                      stats [--format human|json|prom] |\n\
-                                                     health | models | drain --die N |\n\
+                                                     health | models | governor |\n\
+                                                     drain --die N |\n\
                                                      predict --features 1,2 [--tenant T] |\n\
                                                      batch --row [tenant:]1,2 ... |\n\
                                                      trace [--last N] |\n\
@@ -60,7 +66,12 @@ fn usage() -> &'static str {
        bench serve [--smoke] [--out FILE]            closed-loop serving benchmark against\n\
              [--requests N] [--concurrency N]        an in-process fleet; reduces the\n\
              [--chips N] [--dataset NAME]            observability snapshot into a\n\
-                                                     versioned JSON report (BENCH_6.json)\n\
+             [--governor]                            versioned JSON report (BENCH_6.json;\n\
+                                                     --governor adds the governor-enabled\n\
+                                                     idle-heavy comparison leg and writes\n\
+                                                     schema v2 to BENCH_7.json)\n\
+       bench gate --current FILE --previous FILE     fail if throughput drops or p99 rises\n\
+             [--max-regress 0.10]                    beyond the budget between two reports\n\
        sweep --what ratio|beta-bits|counter-bits     quick design-space sweep (Fig. 7)\n\
        tune [--dataset NAME] [--rounds N] [--trials N] [--l LIST] [--b LIST]\n\
             [--batch LIST] [--weights E,J,T,X] [--out FILE]\n\
@@ -216,6 +227,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     // `--point FILE` closes the tune -> serve loop: apply a serialized
     // `velm tune --out` operating point (chip config + batch size)
+    let mut front_bits: Option<Vec<u32>> = None;
     let mut cfg = match args.get("point") {
         Some(path) => {
             // the point file owns the whole chip config: explicit chip
@@ -234,6 +246,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 .with_context(|| format!("reading operating point {path}"))?;
             let op = velm::dse::OperatingPoint::from_kv(&text)
                 .map_err(anyhow::Error::msg)?;
+            // the file's Pareto-front sections double as the governor's
+            // rung ladder when --governor is on (DESIGN.md §17): the
+            // tuned trade-off becomes a runtime artifact
+            if let Ok(front) = velm::dse::OperatingPoint::parse_front(&text) {
+                let mut bits: Vec<u32> = front.iter().map(|p| p.b).collect();
+                bits.sort_unstable();
+                bits.dedup();
+                front_bits = (bits.len() >= 2).then_some(bits);
+            }
             sys.max_batch = op.batch.max(1);
             println!("operating point from {path}: {op}");
             ChipConfig::from_operating_point(&op, ds.d())
@@ -291,6 +312,35 @@ fn cmd_serve(args: &Args) -> Result<()> {
             plan.d,
             plan.l,
             plan.passes()
+        );
+    }
+    // traffic-adaptive governor (DESIGN.md §17): --governor closes the
+    // telemetry -> operating-point loop. Rung bits come from an
+    // explicit --governor-bits list, else the tuned front, else the
+    // config default ladder.
+    if args.flag("governor")
+        || args.get("governor-bits").is_some()
+        || args.get("governor-tick-ms").is_some()
+    {
+        sys.governor.enabled = true;
+    }
+    match args.get_list::<u32>("governor-bits").map_err(anyhow::Error::msg)? {
+        Some(bits) => sys.governor.bits = bits,
+        None => {
+            if let Some(bits) = front_bits.filter(|_| sys.governor.enabled) {
+                sys.governor.bits = bits;
+            }
+        }
+    }
+    if let Some(ms) = args.get("governor-tick-ms") {
+        let ms: u64 = ms.parse().map_err(|e| anyhow::anyhow!("--governor-tick-ms: {e}"))?;
+        sys.governor.tick = std::time::Duration::from_millis(ms.max(1));
+    }
+    if sys.governor.enabled {
+        println!(
+            "governor on: tick {}ms, rung bits {:?} (+ the boot point)",
+            sys.governor.tick.as_millis(),
+            sys.governor.bits
         );
     }
     println!("training {} dies on {name} ...", sys.n_chips);
@@ -354,6 +404,7 @@ fn cmd_client(args: &Args) -> Result<()> {
         }
         "health" => println!("{}", client.health()?),
         "models" => println!("{}", client.models()?),
+        "governor" => println!("{}", client.governor()?),
         "drain" => {
             // draining is destructive: never let a missing flag default
             // to pulling die 0 out of rotation
@@ -410,7 +461,7 @@ fn cmd_client(args: &Args) -> Result<()> {
         }
         other => bail!(
             "unknown client verb '{other}' \
-             (ping|predict|batch|register|unregister|models|stats|health|drain|trace)"
+             (ping|predict|batch|register|unregister|models|stats|health|governor|drain|trace)"
         ),
     }
     Ok(())
@@ -418,9 +469,13 @@ fn cmd_client(args: &Args) -> Result<()> {
 
 /// Closed-loop serving benchmark (DESIGN.md §16): boot an in-process
 /// fleet, hammer it, write the versioned JSON report CI validates.
+/// `bench gate` compares two such reports and fails on regression.
 fn cmd_bench(args: &Args) -> Result<()> {
     let what = args.positional.first().map(String::as_str).unwrap_or("serve");
-    anyhow::ensure!(what == "serve", "unknown bench target '{what}' (expected: serve)");
+    if what == "gate" {
+        return cmd_bench_gate(args);
+    }
+    anyhow::ensure!(what == "serve", "unknown bench target '{what}' (expected: serve | gate)");
     let mut cfg = if args.flag("smoke") {
         velm::loadgen::BenchConfig::smoke()
     } else {
@@ -432,9 +487,14 @@ fn cmd_bench(args: &Args) -> Result<()> {
     cfg.concurrency =
         args.get_usize("concurrency", cfg.concurrency).map_err(anyhow::Error::msg)?;
     cfg.chips = args.get_usize("chips", cfg.chips).map_err(anyhow::Error::msg)?;
+    cfg.governor = args.flag("governor");
     println!(
-        "bench serve: {} requests x {} closed-loop clients on {} ({} dies) ...",
-        cfg.requests, cfg.concurrency, cfg.dataset, cfg.chips
+        "bench serve: {} requests x {} closed-loop clients on {} ({} dies){} ...",
+        cfg.requests,
+        cfg.concurrency,
+        cfg.dataset,
+        cfg.chips,
+        if cfg.governor { " + governor comparison leg" } else { "" }
     );
     let report = velm::loadgen::run(&cfg)?;
     let s = &report.snapshot;
@@ -451,11 +511,38 @@ fn cmd_bench(args: &Args) -> Result<()> {
         s.compute.p50_us,
         s.pj_per_mac()
     );
+    if let Some(g) = &report.governor {
+        println!(
+            "governor leg: {} rows, {:.1} req/s, p99 {}us, {} fJ \
+             (saved {} fJ vs boot pricing; {} lowers / {} raises)",
+            g.responses, g.throughput_rps, g.p99_us, g.energy_fj, g.fj_saved, g.lowers, g.raises
+        );
+    }
     let json = report.to_json();
     velm::loadgen::validate_bench_json(&json).map_err(anyhow::Error::msg)?;
-    let out = args.get_or("out", "BENCH_6.json");
+    let default_out = if cfg.governor { "BENCH_7.json" } else { "BENCH_6.json" };
+    let out = args.get_or("out", default_out);
     std::fs::write(&out, json + "\n").with_context(|| format!("writing {out}"))?;
     println!("report written to {out}");
+    Ok(())
+}
+
+/// `velm bench gate --current F --previous F [--max-regress 0.10]`:
+/// the CI regression gate over two bench reports.
+fn cmd_bench_gate(args: &Args) -> Result<()> {
+    let current = args
+        .get("current")
+        .ok_or_else(|| anyhow::anyhow!("bench gate needs --current FILE"))?;
+    let previous = args
+        .get("previous")
+        .ok_or_else(|| anyhow::anyhow!("bench gate needs --previous FILE"))?;
+    let max_regress = args.get_f64("max-regress", 0.10).map_err(anyhow::Error::msg)?;
+    let cur = std::fs::read_to_string(current).with_context(|| format!("reading {current}"))?;
+    let prev =
+        std::fs::read_to_string(previous).with_context(|| format!("reading {previous}"))?;
+    let verdict = velm::loadgen::gate_bench_json(&cur, &prev, max_regress)
+        .map_err(anyhow::Error::msg)?;
+    println!("bench gate OK: {verdict}");
     Ok(())
 }
 

@@ -23,7 +23,7 @@
 
 use std::io::{BufRead, Read, Write};
 
-use super::stats::{StageStats, StatsSnapshot, TenantStats, TraceEntry, TraceOutcome};
+use super::stats::{GovernorStats, StageStats, StatsSnapshot, TenantStats, TraceEntry, TraceOutcome};
 use super::{Codec, Decoded, PredictRow, Prediction, Request, Response};
 
 /// First byte of every v1 frame; the codec-negotiation sniff byte.
@@ -46,6 +46,7 @@ const T_UNREGISTER: u8 = 0x09;
 const T_QUIT: u8 = 0x0A;
 const T_TRACE: u8 = 0x0B;
 const T_SNAPSHOT: u8 = 0x0C;
+const T_GOVERNOR: u8 = 0x0D;
 
 // Response frame types (high bit set).
 const R_PONG: u8 = 0x81;
@@ -59,6 +60,7 @@ const R_REGISTERED: u8 = 0x88;
 const R_UNREGISTERED: u8 = 0x89;
 const R_TRACE: u8 = 0x8A;
 const R_SNAPSHOT: u8 = 0x8B;
+const R_GOVERNOR: u8 = 0x8C;
 const R_ERROR: u8 = 0xFF;
 
 // --- payload writers ---
@@ -140,6 +142,15 @@ fn put_snapshot(buf: &mut Vec<u8>, s: &StatsSnapshot) {
     put_stage(buf, &s.queue);
     put_stage(buf, &s.batch_wait);
     put_stage(buf, &s.compute);
+    put_u64(buf, s.governor.ticks);
+    put_u64(buf, s.governor.raises);
+    put_u64(buf, s.governor.lowers);
+    put_u64(buf, s.governor.rejected);
+    put_u64(buf, s.governor.fj_saved);
+    put_u32(buf, s.governor.points.len() as u32);
+    for &b in &s.governor.points {
+        put_u32(buf, b);
+    }
     put_u32(buf, s.tenants.len() as u32);
     for t in &s.tenants {
         put_str(buf, &t.name);
@@ -272,6 +283,7 @@ pub fn encode_request(req: &Request) -> (u8, Vec<u8>) {
             T_TRACE
         }
         Request::Snapshot => T_SNAPSHOT,
+        Request::Governor => T_GOVERNOR,
     };
     (ty, buf)
 }
@@ -306,6 +318,7 @@ pub fn decode_request(ty: u8, payload: &[u8]) -> Result<Option<Request>, String>
         T_UNREGISTER => Request::Unregister { name: c.str()? },
         T_TRACE => Request::Trace { last: c.u32()? as usize },
         T_SNAPSHOT => Request::Snapshot,
+        T_GOVERNOR => Request::Governor,
         other => return Err(format!("unknown request frame type {other:#04x}")),
     };
     c.done()?;
@@ -364,6 +377,10 @@ pub fn encode_response(resp: &Response) -> (u8, Vec<u8>) {
         Response::Snapshot(s) => {
             put_snapshot(&mut buf, s);
             R_SNAPSHOT
+        }
+        Response::Governor(s) => {
+            put_str(&mut buf, s);
+            R_GOVERNOR
         }
         Response::Error(e) => {
             put_str(&mut buf, e);
@@ -443,8 +460,23 @@ fn snapshot(c: &mut Cur<'_>) -> Result<StatsSnapshot, String> {
         queue: stage(c)?,
         batch_wait: stage(c)?,
         compute: stage(c)?,
+        governor: GovernorStats {
+            ticks: c.u64()?,
+            raises: c.u64()?,
+            lowers: c.u64()?,
+            rejected: c.u64()?,
+            fj_saved: c.u64()?,
+            points: Vec::new(),
+        },
         tenants: Vec::new(),
     };
+    let np = c.u32()? as usize;
+    if np > c.remaining() / 4 {
+        return Err(format!("governor point count {np} exceeds the frame"));
+    }
+    for _ in 0..np {
+        s.governor.points.push(c.u32()?);
+    }
     let n = c.u32()? as usize;
     if n > c.remaining() / MIN_TENANT_STATS_LEN {
         return Err(format!("tenant count {n} exceeds the frame"));
@@ -498,6 +530,7 @@ pub fn decode_response(ty: u8, payload: &[u8]) -> Result<Response, String> {
             Response::Trace(ts)
         }
         R_SNAPSHOT => Response::Snapshot(snapshot(&mut c)?),
+        R_GOVERNOR => Response::Governor(c.str()?),
         R_ERROR => Response::Error(c.str()?),
         other => return Err(format!("unknown response frame type {other:#04x}")),
     };
@@ -800,6 +833,41 @@ mod tests {
         let n = payload.len();
         payload[n - 1] = 9; // no such outcome
         assert!(decode_response(R_TRACE, &payload).is_err());
+    }
+
+    #[test]
+    fn governor_frames_roundtrip_via_io() {
+        let mut codec = FrameCodec;
+        let req = Request::Governor;
+        let mut buf = Vec::new();
+        codec.write_request(&mut buf, &req).unwrap();
+        let mut r: &[u8] = &buf;
+        match codec.read_request(&mut r).unwrap() {
+            Decoded::Request(back) => assert_eq!(back, req),
+            other => panic!("{other:?}"),
+        }
+
+        let resp = Response::Governor("die0: b=6 price=42fJ".into());
+        let mut buf = Vec::new();
+        codec.write_response(&mut buf, &resp).unwrap();
+        let mut r: &[u8] = &buf;
+        assert_eq!(codec.read_response(&mut r, &req).unwrap(), Some(resp));
+    }
+
+    #[test]
+    fn hostile_governor_point_count_is_rejected() {
+        // a snapshot claiming u32::MAX per-die points must fail fast;
+        // with no points encoded the count sits right after the compute
+        // stage: 4 (version) + 16*8 (counters) + 4*40 (stages) + 5*8
+        // (governor counters) bytes in
+        let mut s = StatsSnapshot::sample();
+        s.governor.points.clear();
+        s.tenants.clear();
+        let (_, mut hostile) = encode_response(&Response::Snapshot(s));
+        let off = 4 + 16 * 8 + 4 * 40 + 5 * 8;
+        hostile[off..off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = decode_response(R_SNAPSHOT, &hostile).unwrap_err();
+        assert!(err.contains("point count"), "{err}");
     }
 
     #[test]

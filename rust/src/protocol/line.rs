@@ -22,6 +22,7 @@
 //! REGISTER <name> <dataset> [s]  -> OK registered <name> (<task>, mean train score <s>)
 //! UNREGISTER <name>              -> OK unregistered <name>
 //! TRACE [n]                      -> OK trace <entries, ' | ' separated>
+//! GOVERNOR                       -> OK <governor status one-liner>
 //! QUIT                           closes the connection
 //! ```
 //!
@@ -52,6 +53,7 @@ pub fn parse_line(line: &str) -> Decoded {
         "STATS" => Decoded::Request(Request::Stats),
         "HEALTH" => Decoded::Request(Request::Health),
         "MODELS" => Decoded::Request(Request::Models),
+        "GOVERNOR" => Decoded::Request(Request::Governor),
         "QUIT" => Decoded::Quit,
         "DRAIN" => match rest.trim().parse::<usize>() {
             Err(_) => Decoded::Malformed(format!("DRAIN wants a die index, got '{rest}'")),
@@ -129,7 +131,10 @@ pub fn parse_line(line: &str) -> Decoded {
 pub fn format_response(resp: &Response) -> String {
     match resp {
         Response::Pong => "OK pong".into(),
-        Response::Stats(s) | Response::Health(s) | Response::Models(s) => format!("OK {s}"),
+        Response::Stats(s)
+        | Response::Health(s)
+        | Response::Models(s)
+        | Response::Governor(s) => format!("OK {s}"),
         Response::Draining { die } => format!("OK draining die {die}"),
         Response::Predict(p) => format!("OK {} {:.6}", p.label, p.score),
         // unreachable from the v0 grammar (no batch command parses),
@@ -177,6 +182,7 @@ pub fn format_request(req: &Request) -> Result<String, String> {
         Request::Snapshot => {
             Err("protocol v0 has no snapshot frame; read STATS instead".into())
         }
+        Request::Governor => Ok("GOVERNOR".into()),
     }
 }
 
@@ -231,6 +237,7 @@ pub fn parse_response(line: &str, expect: &Request) -> Response {
             Response::Error("v0 trace replies are display-only; use the v1 framed protocol".into())
         }
         Request::Snapshot => Response::Error("protocol v0 has no snapshot frame".into()),
+        Request::Governor => Response::Governor(body.to_string()),
     }
 }
 
@@ -315,7 +322,21 @@ mod tests {
         assert_eq!(req("UNREGISTER a"), Request::Unregister { name: "a".into() });
         assert_eq!(req("TRACE"), Request::Trace { last: 32 });
         assert_eq!(req("trace 5"), Request::Trace { last: 5 });
+        assert_eq!(req("GOVERNOR"), Request::Governor);
         assert!(matches!(parse_line("QUIT"), Decoded::Quit));
+    }
+
+    #[test]
+    fn governor_verb_roundtrips_on_v0() {
+        assert_eq!(format_request(&Request::Governor).unwrap(), "GOVERNOR");
+        assert_eq!(
+            format_response(&Response::Governor("governor off".into())),
+            "OK governor off"
+        );
+        assert_eq!(
+            parse_response("OK governor off", &Request::Governor),
+            Response::Governor("governor off".into())
+        );
     }
 
     #[test]

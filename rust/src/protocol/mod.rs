@@ -31,7 +31,7 @@ pub mod stats;
 
 pub use frame::FrameCodec;
 pub use line::LineCodec;
-pub use stats::{StageStats, StatsSnapshot, TenantStats, TraceEntry, TraceOutcome};
+pub use stats::{GovernorStats, StageStats, StatsSnapshot, TenantStats, TraceEntry, TraceOutcome};
 
 use std::io::{BufRead, Write};
 
@@ -81,6 +81,10 @@ pub enum Request {
     /// One consistent [`StatsSnapshot`] as a typed value (v1 only; v0
     /// clients read the rendered `STATS` line instead).
     Snapshot,
+    /// Governor status one-liner (DESIGN.md §17): enabled/disabled,
+    /// per-die operating points, move counters, energy saved. The v0
+    /// spelling is `GOVERNOR`.
+    Governor,
 }
 
 /// One scored row, as the protocol reports it.
@@ -118,6 +122,9 @@ pub enum Response {
     Trace(Vec<TraceEntry>),
     /// The structured stats export.
     Snapshot(StatsSnapshot),
+    /// Governor status one-liner (same String-report shape as
+    /// [`Response::Health`], so it rides both wire versions).
+    Governor(String),
     Error(String),
 }
 

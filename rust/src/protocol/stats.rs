@@ -20,7 +20,8 @@ use crate::util::json::{self, Value};
 
 /// Version stamp carried by every exported snapshot. Bump when a field
 /// is added/renamed so recorded trajectories stay interpretable.
-pub const SNAPSHOT_VERSION: u32 = 1;
+/// v2 added the [`GovernorStats`] block (DESIGN.md §17).
+pub const SNAPSHOT_VERSION: u32 = 2;
 
 /// One latency distribution, reduced to the fields observers need.
 /// Percentiles come from the 32-bucket log2 histogram (same
@@ -69,6 +70,78 @@ impl StageStats {
             p50_us: field("p50_us")?,
             p90_us: field("p90_us")?,
             p99_us: field("p99_us")?,
+        })
+    }
+}
+
+/// What the traffic-adaptive governor (DESIGN.md §17) has done so far:
+/// tick/move counters, the cumulative modelled energy it saved versus
+/// every die holding its boot operating point, and where each die sits
+/// right now (counter bits). All counters are cumulative since boot;
+/// `points` is a gauge (last observed per-die value, empty until the
+/// governor's first tick or when it is disabled).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct GovernorStats {
+    /// Policy evaluations (one per governor period over all dies).
+    pub ticks: u64,
+    /// Moves toward the boot (high-throughput) point.
+    pub raises: u64,
+    /// Moves toward cheaper low-energy points.
+    pub lowers: u64,
+    /// Proposed moves vetoed (hysteresis budget, cooldown has its own
+    /// Hold path, unhealthy die, failed retune).
+    pub rejected: u64,
+    /// Cumulative modelled energy saved vs the boot price, femtojoules:
+    /// `sum over conversions of (boot_price - current_price)`.
+    pub fj_saved: u64,
+    /// Current counter bits per die, indexed by die id.
+    pub points: Vec<u32>,
+}
+
+impl GovernorStats {
+    fn to_value(&self) -> Value {
+        Value::Obj(vec![
+            ("ticks".into(), Value::Num(self.ticks as f64)),
+            ("raises".into(), Value::Num(self.raises as f64)),
+            ("lowers".into(), Value::Num(self.lowers as f64)),
+            ("rejected".into(), Value::Num(self.rejected as f64)),
+            ("fj_saved".into(), Value::Num(self.fj_saved as f64)),
+            (
+                "points".into(),
+                Value::Arr(
+                    self.points
+                        .iter()
+                        .map(|&b| Value::Num(b as f64))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    fn from_value(v: &Value) -> Result<GovernorStats, String> {
+        let field = |k: &str| {
+            v.get(k)
+                .and_then(Value::as_u64)
+                .ok_or_else(|| format!("governor stats missing '{k}'"))
+        };
+        let mut points = Vec::new();
+        for p in v
+            .get("points")
+            .and_then(Value::as_arr)
+            .ok_or("governor stats missing 'points'")?
+        {
+            points.push(
+                p.as_u64()
+                    .ok_or("governor point is not an unsigned integer")? as u32,
+            );
+        }
+        Ok(GovernorStats {
+            ticks: field("ticks")?,
+            raises: field("raises")?,
+            lowers: field("lowers")?,
+            rejected: field("rejected")?,
+            fj_saved: field("fj_saved")?,
+            points,
         })
     }
 }
@@ -126,6 +199,8 @@ pub struct StatsSnapshot {
     pub batch_wait: StageStats,
     /// Stage: engine dispatch -> row answered.
     pub compute: StageStats,
+    /// Traffic-adaptive governor activity (DESIGN.md §17).
+    pub governor: GovernorStats,
     pub tenants: Vec<TenantStats>,
 }
 
@@ -193,6 +268,7 @@ impl StatsSnapshot {
             ("queue".into(), self.queue.to_value()),
             ("batch_wait".into(), self.batch_wait.to_value()),
             ("compute".into(), self.compute.to_value()),
+            ("governor".into(), self.governor.to_value()),
         ];
         let tenants = self
             .tenants
@@ -283,6 +359,9 @@ impl StatsSnapshot {
             queue: stage("queue")?,
             batch_wait: stage("batch_wait")?,
             compute: stage("compute")?,
+            governor: GovernorStats::from_value(
+                v.get("governor").ok_or("snapshot missing 'governor'")?,
+            )?,
             tenants,
         })
     }
@@ -309,6 +388,14 @@ impl StatsSnapshot {
         counter("velm_fleet_promotions_total", self.promotions);
         counter("velm_energy_femtojoules_total", self.energy_fj);
         counter("velm_macs_total", self.macs);
+        counter("velm_governor_ticks_total", self.governor.ticks);
+        counter("velm_governor_raises_total", self.governor.raises);
+        counter("velm_governor_lowers_total", self.governor.lowers);
+        counter("velm_governor_rejected_total", self.governor.rejected);
+        counter(
+            "velm_governor_femtojoules_saved_total",
+            self.governor.fj_saved,
+        );
         out.push_str(&format!(
             "# TYPE velm_uptime_seconds gauge\nvelm_uptime_seconds {}\n",
             self.uptime_us as f64 * 1e-6
@@ -341,6 +428,14 @@ impl StatsSnapshot {
                 "velm_stage_samples_total{{stage=\"{stage}\"}} {}\n",
                 s.count
             ));
+        }
+        if !self.governor.points.is_empty() {
+            out.push_str("# TYPE velm_governor_point_bits gauge\n");
+            for (die, b) in self.governor.points.iter().enumerate() {
+                out.push_str(&format!(
+                    "velm_governor_point_bits{{die=\"{die}\"}} {b}\n"
+                ));
+            }
         }
         if !self.tenants.is_empty() {
             out.push_str("# TYPE velm_tenant_requests_total counter\n");
@@ -412,6 +507,14 @@ impl StatsSnapshot {
             queue: StageStats { count: 9, sum_us: 90, p50_us: 12, p90_us: 24, p99_us: 24 },
             batch_wait: StageStats { count: 9, sum_us: 45, p50_us: 6, p90_us: 6, p99_us: 6 },
             compute: StageStats { count: 9, sum_us: 765, p50_us: 80, p90_us: 160, p99_us: 160 },
+            governor: GovernorStats {
+                ticks: 12,
+                raises: 2,
+                lowers: 5,
+                rejected: 1,
+                fj_saved: 4_200,
+                points: vec![14, 6],
+            },
             tenants: vec![TenantStats {
                 name: "digits π".into(),
                 requests: 5,
@@ -449,6 +552,14 @@ pub enum TraceOutcome {
     DroppedMalformed,
     /// Dropped: tenant tag not registered on the serving die.
     DroppedUnknownTenant,
+    /// Governor event (not a request): the die moved to a cheaper
+    /// operating point. `die` is the die, `passes` the new counter
+    /// bits, `total_us` the new fJ/conversion price.
+    GovernorLowered,
+    /// Governor event (not a request): the die moved back toward its
+    /// boot (high-throughput) point. Same field reuse as
+    /// [`TraceOutcome::GovernorLowered`].
+    GovernorRaised,
 }
 
 impl TraceOutcome {
@@ -458,6 +569,8 @@ impl TraceOutcome {
             TraceOutcome::Ok => 0,
             TraceOutcome::DroppedMalformed => 1,
             TraceOutcome::DroppedUnknownTenant => 2,
+            TraceOutcome::GovernorLowered => 3,
+            TraceOutcome::GovernorRaised => 4,
         }
     }
 
@@ -467,6 +580,8 @@ impl TraceOutcome {
             0 => Some(TraceOutcome::Ok),
             1 => Some(TraceOutcome::DroppedMalformed),
             2 => Some(TraceOutcome::DroppedUnknownTenant),
+            3 => Some(TraceOutcome::GovernorLowered),
+            4 => Some(TraceOutcome::GovernorRaised),
             _ => None,
         }
     }
@@ -478,6 +593,8 @@ impl std::fmt::Display for TraceOutcome {
             TraceOutcome::Ok => "ok",
             TraceOutcome::DroppedMalformed => "dropped:malformed",
             TraceOutcome::DroppedUnknownTenant => "dropped:unknown-tenant",
+            TraceOutcome::GovernorLowered => "governor:lowered",
+            TraceOutcome::GovernorRaised => "governor:raised",
         })
     }
 }
@@ -583,10 +700,30 @@ mod tests {
             TraceOutcome::Ok,
             TraceOutcome::DroppedMalformed,
             TraceOutcome::DroppedUnknownTenant,
+            TraceOutcome::GovernorLowered,
+            TraceOutcome::GovernorRaised,
         ] {
             assert_eq!(TraceOutcome::from_code(o.code()), Some(o));
         }
         assert_eq!(TraceOutcome::from_code(9), None);
+    }
+
+    #[test]
+    fn governor_stats_survive_json_and_reach_prometheus() {
+        let snap = sample();
+        let parsed = StatsSnapshot::from_json(&snap.to_json()).unwrap();
+        assert_eq!(parsed.governor, snap.governor);
+        assert_eq!(parsed.governor.points, vec![14, 6]);
+        let text = snap.to_prometheus();
+        assert!(text.contains("velm_governor_ticks_total 12\n"));
+        assert!(text.contains("velm_governor_lowers_total 5\n"));
+        assert!(text.contains("velm_governor_femtojoules_saved_total 4200\n"));
+        assert!(text.contains("velm_governor_point_bits{die=\"0\"} 14\n"));
+        assert!(text.contains("velm_governor_point_bits{die=\"1\"} 6\n"));
+        // disabled governor: no per-die gauge lines at all
+        let mut quiet = sample();
+        quiet.governor = GovernorStats::default();
+        assert!(!quiet.to_prometheus().contains("velm_governor_point_bits{"));
     }
 
     #[test]

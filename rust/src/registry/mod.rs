@@ -98,6 +98,14 @@ pub struct TenantSpec {
     pub targets: Mat,
     pub lambda: f64,
     pub beta_bits: u32,
+    /// Accuracy SLO the governor holds (DESIGN.md §17): worst train
+    /// score the tenant tolerates (classification: error rate;
+    /// regression: RMSE in target units). `None` = the governor's
+    /// fleet-wide default applies.
+    pub slo_max_err: Option<f64>,
+    /// Latency SLO: p99 end-to-end budget in microseconds. `None` =
+    /// the governor's fleet-wide default applies.
+    pub slo_p99_us: Option<u64>,
 }
 
 impl TenantSpec {
@@ -120,6 +128,8 @@ impl TenantSpec {
             targets,
             lambda,
             beta_bits,
+            slo_max_err: None,
+            slo_p99_us: None,
         };
         spec.validate()?;
         Ok(spec)
@@ -157,6 +167,8 @@ impl TenantSpec {
             targets,
             lambda,
             beta_bits,
+            slo_max_err: None,
+            slo_p99_us: None,
         };
         spec.validate()?;
         Ok(spec)
@@ -178,6 +190,8 @@ impl TenantSpec {
             targets,
             lambda,
             beta_bits,
+            slo_max_err: None,
+            slo_p99_us: None,
         };
         spec.validate()?;
         Ok(spec)
@@ -256,6 +270,14 @@ impl TenantSpec {
             ));
         }
         Ok(spec)
+    }
+
+    /// Attach per-tenant SLO targets (builder style; `None` keeps the
+    /// governor's fleet-wide defaults).
+    pub fn with_slo(mut self, max_err: Option<f64>, p99_us: Option<u64>) -> Self {
+        self.slo_max_err = max_err;
+        self.slo_p99_us = p99_us;
+        self
     }
 
     /// Internal consistency: non-empty, rectangular, targets aligned.

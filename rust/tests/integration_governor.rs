@@ -1,0 +1,141 @@
+//! Integration: the traffic-adaptive governor (DESIGN.md §17) end to
+//! end through an idle -> burst -> idle cycle on a live fleet.
+//!
+//!   * an idle fleet descends the rung ladder (fewer counter bits,
+//!     cheaper conversions) and a traffic burst restores the boot
+//!     point — the control loop actually moves the die;
+//!   * the energy ledger stays *exact* across the move: every booked
+//!     conversion is priced at the operating point that served it, and
+//!     the governor's saved-energy ledger equals conversions x the
+//!     integer price gap to the boot point — no estimates anywhere;
+//!   * the moves land in the flight recorder and the snapshot's
+//!     `GovernorStats` (points, move counters, fJ saved) renders to
+//!     Prometheus with a per-die operating-point gauge.
+//!
+//! Ticks are driven by hand (`Coordinator::governor_tick`) with the
+//! background thread parked on a huge period, so the transition
+//! sequence — and therefore every ledger assertion — is deterministic.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use velm::chip::energy::conversion_price_fj;
+use velm::client::Client;
+use velm::config::{ChipConfig, SystemConfig};
+use velm::coordinator::Coordinator;
+use velm::datasets::synth;
+use velm::governor::GovernorConfig;
+use velm::protocol::TraceOutcome;
+
+#[test]
+fn idle_burst_idle_moves_the_die_and_keeps_the_energy_ledger_exact() {
+    let ds = synth::brightdata(11).with_test_subsample(60, 11);
+    let mut cfg = ChipConfig::default().with_b(10);
+    cfg.d = ds.d();
+    // one die so the points vector and the fleet ledger are scalar
+    let sys = SystemConfig {
+        n_chips: 1,
+        artifact_dir: "/nonexistent".into(),
+        max_wait: Duration::from_millis(1),
+        governor: GovernorConfig {
+            enabled: true,
+            // ticks are driven by hand below; park the thread
+            tick: Duration::from_secs(3600),
+            cooldown_ticks: 0,
+            window_ticks: 1000,
+            max_moves_per_window: 1000,
+            hot_queue_us: 0, // any traffic at all reads as hot
+            bits: vec![6],   // ladder: b=6 (low rung) + b=10 (boot)
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let coord = Arc::new(
+        Coordinator::start(&sys, &cfg, &ds.train_x, &ds.train_y, 1e-2, 10).expect("start"),
+    );
+    let mut c = Client::in_process(Arc::clone(&coord));
+
+    // the two rung prices, from the same model the workers price with
+    let boot_price = conversion_price_fj(&cfg);
+    let mut low_cfg = cfg.clone();
+    low_cfg.b = 6;
+    let low_price = conversion_price_fj(&low_cfg);
+    assert!(low_price < boot_price, "fewer bits must be cheaper");
+
+    // ---- burst at the boot point -------------------------------------
+    for x in ds.test_x.iter().take(20) {
+        c.predict(None, x).expect("boot-point predict");
+    }
+    let s1 = c.snapshot().expect("snapshot after boot burst");
+    assert_eq!(s1.governor.points, vec![10], "die must boot at b=10");
+    assert_eq!(s1.governor.fj_saved, 0, "no savings at the boot point");
+    assert_eq!(
+        s1.energy_fj,
+        s1.conversions * boot_price,
+        "boot-point ledger must price every conversion at b=10"
+    );
+
+    // ---- go idle: the governor descends to the low rung --------------
+    // tick 1 absorbs the burst delta (traffic reads hot, die already at
+    // boot); tick 2 sees a quiet interval and steps down one rung
+    coord.governor_tick();
+    coord.governor_tick();
+    let s2 = c.snapshot().expect("snapshot after descent");
+    assert_eq!(s2.governor.points, vec![6], "idle die must take the low rung");
+    assert!(s2.governor.lowers >= 1, "{:?}", s2.governor);
+    let (e2, c2) = (s2.energy_fj, s2.conversions);
+
+    // ---- serve on the low rung: exact deltas -------------------------
+    // (the tick blocks on each worker's retune ack, so every row below
+    // is already priced at b=6 — no settling wait needed)
+    for x in ds.test_x.iter().skip(20).take(20) {
+        c.predict(None, x).expect("low-rung predict");
+    }
+    let s3 = c.snapshot().expect("snapshot after low-rung burst");
+    let dconv = s3.conversions - c2;
+    assert!(dconv >= 20, "each served row books >= 1 conversion");
+    assert_eq!(
+        s3.energy_fj - e2,
+        dconv * low_price,
+        "low-rung conversions must be priced at b=6, exactly"
+    );
+    assert_eq!(
+        s3.governor.fj_saved,
+        dconv * (boot_price - low_price),
+        "saved fJ must equal conversions x the integer price gap"
+    );
+
+    // ---- the burst raises the die back to the boot point -------------
+    coord.governor_tick();
+    let s4 = c.snapshot().expect("snapshot after restore");
+    assert_eq!(s4.governor.points, vec![10], "traffic must restore the boot point");
+    assert!(s4.governor.raises >= 1, "{:?}", s4.governor);
+    assert!(s4.governor.ticks >= 3, "{:?}", s4.governor);
+
+    // both transitions are on the flight recorder, priced per move
+    let traces = c.trace(4096).expect("trace");
+    let lowered = traces.iter().find(|t| t.outcome == TraceOutcome::GovernorLowered);
+    let raised = traces.iter().find(|t| t.outcome == TraceOutcome::GovernorRaised);
+    let lowered = lowered.expect("descent must leave a trace");
+    let raised = raised.expect("restore must leave a trace");
+    assert_eq!(lowered.passes, 6, "trace carries the new bits");
+    assert_eq!(lowered.total_us, low_price, "trace carries the rung price");
+    assert_eq!(raised.passes, 10);
+    assert_eq!(raised.total_us, boot_price);
+
+    // the governor block reaches Prometheus, gauge included
+    let prom = s4.to_prometheus();
+    assert!(prom.contains("velm_governor_raises_total"), "{prom}");
+    assert!(
+        prom.contains(&format!(
+            "velm_governor_femtojoules_saved_total {}\n",
+            s4.governor.fj_saved
+        )),
+        "{prom}"
+    );
+    assert!(prom.contains("velm_governor_point_bits{die=\"0\"} 10\n"), "{prom}");
+
+    // serving still answers correctly after two retunes
+    let p = c.predict(None, &ds.test_x[0]).expect("post-cycle predict");
+    assert!(p.label == 1 || p.label == -1);
+}

@@ -273,7 +273,7 @@ fn arb_stage(rng: &mut Prng) -> StageStats {
 }
 
 fn arb_trace_entry(rng: &mut Prng) -> TraceEntry {
-    let outcome = TraceOutcome::from_code(rng.usize(3) as u8).unwrap();
+    let outcome = TraceOutcome::from_code(rng.usize(5) as u8).unwrap();
     TraceEntry {
         id: rng.next_u64(),
         tenant: arb_tenant(rng),
@@ -313,6 +313,14 @@ fn arb_snapshot(rng: &mut Prng) -> StatsSnapshot {
         queue: arb_stage(rng),
         batch_wait: arb_stage(rng),
         compute: arb_stage(rng),
+        governor: velm::protocol::GovernorStats {
+            ticks: rng.next_u64() % 1_000_000,
+            raises: rng.next_u64() % 1_000,
+            lowers: rng.next_u64() % 1_000,
+            rejected: rng.next_u64() % 1_000,
+            fj_saved: rng.next_u64() >> 1,
+            points: (0..rng.usize(5)).map(|_| 1 + rng.usize(30) as u32).collect(),
+        },
         tenants: (0..rng.usize(4))
             .map(|_| TenantStats {
                 name: arb_string(rng),
@@ -327,7 +335,7 @@ fn arb_snapshot(rng: &mut Prng) -> StatsSnapshot {
 }
 
 fn arb_request(rng: &mut Prng) -> Request {
-    match rng.usize(11) {
+    match rng.usize(12) {
         0 => Request::Ping,
         1 => Request::Stats,
         2 => Request::Health,
@@ -346,12 +354,13 @@ fn arb_request(rng: &mut Prng) -> Request {
         },
         8 => Request::Unregister { name: arb_string(rng) },
         9 => Request::Trace { last: rng.usize(1024) },
+        10 => Request::Governor,
         _ => Request::Snapshot,
     }
 }
 
 fn arb_response(rng: &mut Prng) -> Response {
-    match rng.usize(12) {
+    match rng.usize(13) {
         0 => Response::Pong,
         1 => Response::Stats(arb_string(rng)),
         2 => Response::Health(arb_string(rng)),
@@ -367,6 +376,7 @@ fn arb_response(rng: &mut Prng) -> Response {
         8 => Response::Unregistered { name: arb_string(rng) },
         9 => Response::Trace((0..rng.usize(4)).map(|_| arb_trace_entry(rng)).collect()),
         10 => Response::Snapshot(arb_snapshot(rng)),
+        11 => Response::Governor(arb_string(rng)),
         _ => Response::Error(arb_string(rng)),
     }
 }
@@ -421,6 +431,70 @@ fn prop_v1_truncated_payloads_never_panic() {
             frame::decode_request(ty, &payload[..cut]).is_err(),
             &format!("truncation at {cut} of {} accepted for {req:?}", payload.len()),
         )
+    });
+}
+
+#[test]
+fn prop_governor_hysteresis_bounds_moves_per_window() {
+    // DESIGN.md §17: whatever the traffic does, one die never moves
+    // more than max_moves_per_window times inside a hysteresis window.
+    // A sliding window of window_ticks ticks crosses at most one
+    // budget-reset boundary, so it can see at most twice the budget.
+    use velm::governor::{Actuator, GovernorConfig, Ladder, TickSignals};
+    check("governor-hysteresis", 60, |rng| {
+        let window = 2 + rng.usize(8) as u32;
+        let max_moves = 1 + rng.usize(3) as u32;
+        let cfg = GovernorConfig {
+            enabled: true,
+            cooldown_ticks: rng.usize(3) as u32,
+            window_ticks: window,
+            max_moves_per_window: max_moves,
+            hot_queue_us: 1_000,
+            ..GovernorConfig::default()
+        };
+        let ladder = Ladder::from_bits(&ChipConfig::default(), &[4, 6, 8, 10, 12]);
+        let dies = 1 + rng.usize(3);
+        let mut actuator = Actuator::new(cfg, ladder, dies);
+        let ticks = 4 * window as usize + rng.usize(16);
+        let mut moved = vec![vec![0u32; ticks]; dies];
+        for t in 0..ticks {
+            // adversarial traffic: flip between idle (wants a descent)
+            // and hot (wants an escalation) at random every tick
+            let signals: Vec<TickSignals> = (0..dies)
+                .map(|_| {
+                    if rng.bool(0.5) {
+                        TickSignals { healthy: true, accuracy_ok: true, ..TickSignals::default() }
+                    } else {
+                        TickSignals {
+                            healthy: true,
+                            accuracy_ok: true,
+                            requests_delta: 1 + rng.next_u64() % 100,
+                            mean_queue_us: 5_000,
+                            ..TickSignals::default()
+                        }
+                    }
+                })
+                .collect();
+            for m in actuator.tick(&signals, |_, _| true) {
+                if m.kind != velm::governor::MoveKind::Rejected {
+                    moved[m.die][t] += 1;
+                }
+            }
+        }
+        let w = window as usize;
+        for (die, lane) in moved.iter().enumerate() {
+            for start in 0..=ticks.saturating_sub(w) {
+                let n: u32 = lane[start..start + w].iter().sum();
+                ensure(
+                    n <= 2 * max_moves,
+                    &format!(
+                        "die {die}: {n} moves in the {w}-tick window at {start} \
+                         (budget {max_moves}/window)"
+                    ),
+                )?;
+            }
+        }
+        Ok(())
     });
 }
 

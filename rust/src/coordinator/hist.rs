@@ -8,8 +8,9 @@
 //! percentiles of one [`StageStats`] are always mutually monotone even
 //! under concurrent recording.
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
+
+use crate::sync::{AtomicU64, Ordering};
 
 use crate::protocol::stats::StageStats;
 
@@ -25,6 +26,11 @@ pub struct LatencyHist {
 }
 
 impl LatencyHist {
+    // relaxed-ok: buckets and sum are independent monotone counters;
+    // a snapshot racing a recorder may see the sum without the bucket
+    // (or vice versa), which the exports tolerate — each StageStats is
+    // computed from ONE bucket copy, so its percentiles stay mutually
+    // monotone regardless of ordering.
     pub fn new() -> Self {
         LatencyHist::default()
     }

@@ -13,9 +13,10 @@
 //! cannot observe torn states like `responses > requests`.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+use crate::sync::{AtomicU64, Mutex, Ordering};
 
 use super::hist::LatencyHist;
 use super::trace::{FlightRecorder, DEFAULT_TRACE_CAPACITY};
@@ -38,6 +39,11 @@ pub struct TenantMetrics {
 }
 
 impl TenantMetrics {
+    // relaxed-ok: every gauge here is an independent monotone counter
+    // (or an idempotent f64-bits store); readers never infer other
+    // memory from a value. The one cross-counter invariant,
+    // responses <= requests, is enforced by `Metrics::snapshot` load
+    // order + clamping rather than by memory ordering.
     pub fn record_request(&self) {
         self.requests.fetch_add(1, Ordering::Relaxed);
     }
@@ -151,6 +157,13 @@ impl Default for Metrics {
 }
 
 impl Metrics {
+    // relaxed-ok: all counters are independent monotone telemetry; no
+    // reader dereferences memory published by a counter value. The two
+    // cross-counter invariants exported to clients — responses <=
+    // requests, and energy_fj + fj_saved <= boot-priced conversions —
+    // are enforced by `snapshot`'s documented load order plus clamping
+    // (model-checked in tests/model_checker.rs), not by Acquire/Release
+    // pairs.
     pub fn new() -> Self {
         Metrics {
             started: Instant::now(),
@@ -301,14 +314,28 @@ impl Metrics {
 
     /// One consistent picture of the fleet, taken in a single pass.
     ///
-    /// `responses` is loaded BEFORE `requests` and then clamped to
-    /// `<= requests`: a request recorded between the two loads can
-    /// only raise `requests`, so the exported pair always satisfies
-    /// the invariant even mid-traffic (same for each tenant).
+    /// Two load-order disciplines keep the exported pairs consistent
+    /// mid-traffic (both are model-checked in tests/model_checker.rs):
+    ///
+    /// - `responses` is loaded BEFORE `requests` and then clamped to
+    ///   `<= requests`: a request recorded between the two loads can
+    ///   only raise `requests`, so the exported pair always satisfies
+    ///   the invariant (same for each tenant).
+    /// - the energy ledger is read in the REVERSE of the worker's
+    ///   booking order (workers book conversions, then energy, then
+    ///   saved energy; we load `gov_fj_saved`, then `energy_fj`, then
+    ///   `conversions`), so every booking observed in the two energy
+    ///   sums has its conversions already visible in `conversions` and
+    ///   `energy_fj + fj_saved <= boot_price * conversions` holds at
+    ///   every observable point, with exact equality at quiescence.
     pub fn snapshot(&self) -> StatsSnapshot {
         let uptime_us = self.started.elapsed().as_micros() as u64;
         let responses = self.responses.load(Ordering::Relaxed);
         let requests = self.requests.load(Ordering::Relaxed);
+        let gov_fj_saved = self.gov_fj_saved.load(Ordering::Relaxed);
+        let energy_fj = self.energy_fj.load(Ordering::Relaxed);
+        let macs = self.macs.load(Ordering::Relaxed);
+        let conversions = self.conversions.load(Ordering::Relaxed);
         let tenants = self
             .tenant_snapshot()
             .into_iter()
@@ -335,14 +362,14 @@ impl Metrics {
             pjrt_batches: self.pjrt_batches.load(Ordering::Relaxed),
             sim_batches: self.sim_batches.load(Ordering::Relaxed),
             batched_requests: self.batched_requests.load(Ordering::Relaxed),
-            conversions: self.conversions.load(Ordering::Relaxed),
+            conversions,
             probes: self.probes.load(Ordering::Relaxed),
             renorms: self.renorms.load(Ordering::Relaxed),
             refits: self.refits.load(Ordering::Relaxed),
             quarantines: self.quarantines.load(Ordering::Relaxed),
             promotions: self.promotions.load(Ordering::Relaxed),
-            energy_fj: self.energy_fj.load(Ordering::Relaxed),
-            macs: self.macs.load(Ordering::Relaxed),
+            energy_fj,
+            macs,
             latency: self.latency.snapshot(),
             queue: self.queue.snapshot(),
             batch_wait: self.batch_wait.snapshot(),
@@ -352,7 +379,7 @@ impl Metrics {
                 raises: self.gov_raises.load(Ordering::Relaxed),
                 lowers: self.gov_lowers.load(Ordering::Relaxed),
                 rejected: self.gov_rejected.load(Ordering::Relaxed),
-                fj_saved: self.gov_fj_saved.load(Ordering::Relaxed),
+                fj_saved: gov_fj_saved,
                 points: self.gov_points.lock().unwrap().clone(),
             },
             tenants,
@@ -654,6 +681,14 @@ mod tests {
     #[test]
     fn threaded_stress_snapshots_stay_consistent() {
         use crate::protocol::stats::{TraceEntry, TraceOutcome};
+        // Miri executes this interpreter-slow; shrink the schedule but
+        // keep the shape (4 booking writers racing a snapshot reader).
+        const OPS: u64 = if cfg!(miri) { 25 } else { 2000 };
+        const SNAPS: usize = if cfg!(miri) { 10 } else { 300 };
+        // Each booked conversion costs 100 fJ against a 150 fJ boot
+        // price, so the ledger bound below is non-trivially exercised.
+        const PRICE_FJ: u64 = 100;
+        const BOOT_FJ: u64 = 150;
         let m = Arc::new(Metrics::new());
         let tenant = m.register_tenant("stress");
         std::thread::scope(|scope| {
@@ -661,12 +696,12 @@ mod tests {
                 let m = Arc::clone(&m);
                 let tenant = Arc::clone(&tenant);
                 scope.spawn(move || {
-                    for i in 0..2000u64 {
+                    for i in 0..OPS {
                         // request strictly before response keeps the
                         // invariant the snapshot clamp relies on
                         m.record_request();
                         tenant.record_request();
-                        let us = 1 + (worker * 2000 + i) % 5000;
+                        let us = 1 + (worker * OPS + i) % 5000;
                         m.record_response(Duration::from_micros(us));
                         tenant.record_response(Duration::from_micros(us));
                         m.record_stages(
@@ -674,11 +709,14 @@ mod tests {
                             Duration::from_micros(us / 8),
                             Duration::from_micros(us / 2),
                         );
+                        // ledger booking order: conversions, energy,
+                        // saved — snapshot reads it in reverse
                         m.record_conversions(6);
-                        m.record_energy(6 * 100, 6 * 48);
-                        tenant.record_energy(6 * 100);
+                        m.record_energy(6 * PRICE_FJ, 6 * 48);
+                        m.record_gov_fj_saved(6 * (BOOT_FJ - PRICE_FJ));
+                        tenant.record_energy(6 * PRICE_FJ);
                         m.trace.push(TraceEntry {
-                            id: worker * 2000 + i,
+                            id: worker * OPS + i,
                             tenant: Some("stress".into()),
                             die: worker as u32,
                             pjrt: false,
@@ -694,9 +732,17 @@ mod tests {
             }
             let m = Arc::clone(&m);
             scope.spawn(move || {
-                for _ in 0..300 {
+                for _ in 0..SNAPS {
                     let s = m.snapshot();
                     assert!(s.responses <= s.requests, "{} > {}", s.responses, s.requests);
+                    assert!(
+                        s.energy_fj + s.governor.fj_saved <= BOOT_FJ * s.conversions,
+                        "ledger bound torn: {} + {} > {} * {}",
+                        s.energy_fj,
+                        s.governor.fj_saved,
+                        BOOT_FJ,
+                        s.conversions
+                    );
                     for stage in [&s.latency, &s.queue, &s.batch_wait, &s.compute] {
                         assert!(
                             stage.p50_us <= stage.p90_us && stage.p90_us <= stage.p99_us,
@@ -712,14 +758,19 @@ mod tests {
             });
         });
         let s = m.snapshot();
-        assert_eq!(s.requests, 8000);
-        assert_eq!(s.responses, 8000);
-        assert_eq!(s.conversions, 48_000);
-        assert_eq!(s.energy_fj, 4_800_000);
-        assert_eq!(s.macs, 48_000 * 48);
-        assert_eq!(s.latency.count, 8000);
-        assert_eq!(m.trace.recorded(), 8000);
-        assert_eq!(s.tenants[0].requests, 8000);
-        assert_eq!(s.tenants[0].energy_fj, 4_800_000);
+        assert_eq!(s.requests, 4 * OPS);
+        assert_eq!(s.responses, 4 * OPS);
+        assert_eq!(s.conversions, 4 * OPS * 6);
+        assert_eq!(s.energy_fj, 4 * OPS * 6 * PRICE_FJ);
+        assert_eq!(s.macs, 4 * OPS * 6 * 48);
+        assert_eq!(
+            s.energy_fj + s.governor.fj_saved,
+            BOOT_FJ * s.conversions,
+            "exact ledger identity at quiescence"
+        );
+        assert_eq!(s.latency.count, 4 * OPS);
+        assert_eq!(m.trace.recorded(), 4 * OPS);
+        assert_eq!(s.tenants[0].requests, 4 * OPS);
+        assert_eq!(s.tenants[0].energy_fj, 4 * OPS * 6 * PRICE_FJ);
     }
 }

@@ -31,8 +31,9 @@ pub mod trace;
 pub mod worker;
 pub mod workload;
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc};
+
+use crate::sync::{AtomicBool, AtomicU64, Mutex, Ordering};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -358,6 +359,10 @@ impl Coordinator {
                 .spawn(move || {
                     let slice = std::time::Duration::from_millis(5).min(period);
                     let mut since_tick = std::time::Duration::ZERO;
+                    // relaxed-ok: pure quit flag polled every slice;
+                    // the only consequence of a stale read is one
+                    // extra 5 ms nap before exit, and `shutdown` joins
+                    // the thread so nothing races the teardown.
                     while !stop2.load(Ordering::Relaxed) {
                         std::thread::sleep(slice);
                         since_tick += slice;
@@ -408,6 +413,9 @@ impl Coordinator {
                 .spawn(move || {
                     let slice = std::time::Duration::from_millis(5).min(period);
                     let mut since_tick = std::time::Duration::ZERO;
+                    // relaxed-ok: pure quit flag polled every slice;
+                    // a stale read costs at most one extra 5 ms nap
+                    // before exit, and `shutdown` joins the thread.
                     while !stop2.load(Ordering::Relaxed) {
                         std::thread::sleep(slice);
                         since_tick += slice;
@@ -603,6 +611,8 @@ impl Coordinator {
         };
         let (tx, rx) = mpsc::channel();
         let req = ClassifyRequest {
+            // relaxed-ok: unique-id allocator; uniqueness needs only
+            // the RMW's atomicity, not any cross-thread ordering.
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             features,
             tenant: tag,
@@ -682,6 +692,7 @@ impl Coordinator {
             }
             let (tx, rx) = mpsc::channel();
             let req = ClassifyRequest {
+                // relaxed-ok: unique-id allocator (see `submit_tenant`).
                 id: self.next_id.fetch_add(1, Ordering::Relaxed),
                 features: row.features.clone(),
                 tenant: tag,
@@ -973,10 +984,13 @@ impl Coordinator {
             router, workers, fleet, senders, auto_probe, governor_thread, ..
         } = self;
         if let Some((stop, handle)) = governor_thread {
+            // relaxed-ok: quit flag; the join right below is the
+            // synchronization point for everything the thread wrote.
             stop.store(true, Ordering::Relaxed);
             let _ = handle.join();
         }
         if let Some((stop, handle)) = auto_probe {
+            // relaxed-ok: quit flag; join below synchronizes.
             stop.store(true, Ordering::Relaxed);
             let _ = handle.join();
         }

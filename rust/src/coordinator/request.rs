@@ -243,7 +243,7 @@ mod tests {
                 .unwrap()
                 .metrics
                 .requests
-                .load(std::sync::atomic::Ordering::Relaxed),
+                .load(crate::sync::Ordering::Relaxed),
             1
         );
     }

@@ -9,9 +9,10 @@
 //! conversions, so one outstanding request there counts as `passes`
 //! units against the die when comparing loads.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
+
+use crate::sync::{AtomicU64, AtomicUsize, Ordering};
 
 use crate::fleet::FleetState;
 
@@ -23,6 +24,9 @@ use super::request::{ClassifyRequest, WorkerMsg};
 pub struct Outstanding(pub Arc<Vec<AtomicUsize>>);
 
 impl Outstanding {
+    // relaxed-ok: independent per-die load gauges used as routing and
+    // drain *hints*; a stale read only skews a tiebreak or delays one
+    // drain poll, and no other memory is inferred from the values.
     pub fn new(n: usize) -> Self {
         Outstanding(Arc::new((0..n).map(|_| AtomicUsize::new(0)).collect()))
     }
@@ -89,6 +93,8 @@ impl Router {
         if n == 0 {
             return Err("no workers".into());
         }
+        // relaxed-ok: round-robin cursor; any interleaving of the
+        // increments still spreads ties, which is all it promises.
         let start = (self.rr.fetch_add(1, Ordering::Relaxed) as usize) % n;
         let mut best = usize::MAX;
         let mut best_load = usize::MAX;

@@ -544,7 +544,7 @@ mod tests {
     use crate::coordinator::metrics::TenantMetrics;
     use crate::coordinator::request::TenantTag;
     use crate::registry::{fit_on_die, TenantSpec};
-    use std::sync::atomic::Ordering;
+    use crate::sync::Ordering;
     use std::sync::mpsc;
     use std::time::Instant;
 

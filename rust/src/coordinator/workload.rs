@@ -3,8 +3,9 @@
 //! paper's FPGA drives the chip — plus a latency-under-load sweep used
 //! by the perf bench and EXPERIMENTS.md §E2E.
 
-use std::sync::atomic::Ordering;
 use std::time::{Duration, Instant};
+
+use crate::sync::Ordering;
 
 use crate::coordinator::Coordinator;
 use crate::util::prng::Prng;
@@ -89,7 +90,12 @@ pub fn closed_loop(
 }
 
 /// Sanity counter: requests in == responses out (conservation).
+/// Callers invoke this at quiescence (after their drivers joined), so
+/// the counters cannot move between the two loads.
 pub fn conservation_ok(coord: &Coordinator) -> bool {
+    // relaxed-ok: quiescent equality check; both counters are settled
+    // by the time callers ask, and a torn mid-traffic read could only
+    // yield a spurious `false`, never a false `true` being relied on.
     coord.metrics.requests.load(Ordering::Relaxed)
         == coord.metrics.responses.load(Ordering::Relaxed)
 }

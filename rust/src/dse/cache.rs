@@ -8,8 +8,8 @@
 //! settings (the context tag) never do.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+
+use crate::sync::{AtomicU64, Mutex, Ordering};
 
 use crate::dse::explorer::OperatingPoint;
 use crate::dse::objective::Evaluation;
@@ -64,10 +64,13 @@ impl EvalCache {
     }
 
     pub fn hits(&self) -> u64 {
+        // relaxed-ok: independent hit/miss statistics; readers report
+        // them individually and tolerate mid-sweep skew.
         self.hits.load(Ordering::Relaxed)
     }
 
     pub fn misses(&self) -> u64 {
+        // relaxed-ok: see `hits`.
         self.misses.load(Ordering::Relaxed)
     }
 
@@ -91,9 +94,11 @@ impl EvalCache {
     ) -> Evaluation {
         let key = PointKey::quantize(op, tag);
         if let Some(e) = self.map.lock().unwrap().get(&key) {
+            // relaxed-ok: statistics counters only (see `hits`).
             self.hits.fetch_add(1, Ordering::Relaxed);
             return *e;
         }
+        // relaxed-ok: statistics counter only (see `hits`).
         self.misses.fetch_add(1, Ordering::Relaxed);
         let e = f(op);
         self.map.lock().unwrap().insert(key, e);

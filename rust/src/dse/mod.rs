@@ -33,10 +33,10 @@ where
 {
     let threads = threads.max(1);
     let n = items.len();
-    let slots: Vec<std::sync::Mutex<Option<R>>> =
-        (0..n).map(|_| std::sync::Mutex::new(None)).collect();
+    let slots: Vec<crate::sync::Mutex<Option<R>>> =
+        (0..n).map(|_| crate::sync::Mutex::new(None)).collect();
     let work: Vec<(usize, T)> = items.into_iter().enumerate().collect();
-    let queue = std::sync::Mutex::new(work);
+    let queue = crate::sync::Mutex::new(work);
     std::thread::scope(|s| {
         for _ in 0..threads.min(n.max(1)) {
             s.spawn(|| loop {

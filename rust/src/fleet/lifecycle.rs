@@ -10,9 +10,10 @@
 //! lock-free by `coordinator::Router` on every route decision.
 
 use std::fmt;
-use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Duration;
+
+use crate::sync::{AtomicU8, Ordering};
 
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{ControlMsg, WorkerMsg};
@@ -107,10 +108,16 @@ impl FleetState {
     }
 
     pub fn get(&self, i: usize) -> DieState {
+        // relaxed-ok: single-byte state gauge; the router may act on a
+        // stale state for one route decision, which the lifecycle
+        // already tolerates (drains wait for outstanding work, and a
+        // request routed to a just-degraded die is still answered).
         DieState::from_u8(self.0[i].load(Ordering::Relaxed))
     }
 
     pub fn set(&self, i: usize, s: DieState) {
+        // relaxed-ok: see `get` — the value is self-contained; no
+        // other memory is published through it.
         self.0[i].store(s.to_u8(), Ordering::Relaxed);
     }
 
@@ -187,6 +194,8 @@ impl Default for FleetConfig {
 /// command stays responsive even while a tick is blocked on a slow
 /// worker reply.
 pub fn status_line(state: &FleetState, metrics: &Metrics) -> String {
+    // relaxed-ok: independent monotone fleet counters; the line is a
+    // diagnostic summary with no cross-counter invariant.
     format!(
         "{} probes={} renorms={} refits={} quarantines={} promotions={}",
         state.summary(),
@@ -242,6 +251,10 @@ pub struct FleetManager {
 }
 
 impl FleetManager {
+    // relaxed-ok: the probes/renorms/refits/quarantines/promotions
+    // counters booked below are independent monotone telemetry
+    // (exported via Metrics::snapshot); no reader infers other memory
+    // from their values.
     pub fn new(s: FleetSetup) -> Self {
         let detectors = s
             .baselines

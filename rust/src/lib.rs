@@ -11,9 +11,13 @@
 //! serving protocol ([`protocol`]) with a client SDK ([`client`]), and
 //! a traffic-adaptive power/accuracy governor ([`governor`]) that
 //! moves dies along the tuned Pareto front at runtime.
+//! Concurrency is funnelled through the [`sync`] facade so the
+//! model checker ([`testing::model`]) and the `velm lint` invariant
+//! scanner ([`analysis`]) can vouch for the lock-free hot paths.
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured record.
 
+pub mod analysis;
 pub mod bench;
 pub mod chip;
 pub mod cli;
@@ -30,5 +34,6 @@ pub mod loadgen;
 pub mod protocol;
 pub mod registry;
 pub mod runtime;
+pub mod sync;
 pub mod testing;
 pub mod util;

@@ -10,6 +10,7 @@
 //!   tune          closed-loop autotuner: Pareto front + knee operating point
 //!   fleet         fleet-health demo: inject drift, watch detect/recover
 //!   info          artifact + configuration report
+//!   lint          concurrency-convention lints over src/ (DESIGN.md §18)
 
 use std::sync::Arc;
 
@@ -80,6 +81,11 @@ fn usage() -> &'static str {
        fleet [--dataset NAME] [--chips N] [--standby N] [--ticks N]\n\
              [--temp K] [--age-sigma MV]             drift-recovery demo (Fig. 18 ramp)\n\
        info [--artifacts DIR]                        configuration + artifact report\n\
+       lint [--root DIR]                             concurrency-convention lints over\n\
+                                                     src/ (facade imports, relaxed-ok\n\
+                                                     justifications, frame-tag unique-\n\
+                                                     ness, single booking site); exits\n\
+                                                     non-zero on any finding\n\
      Common options: --b BITS (counter), --sigma-vt MV, --vdd V, --lambda F\n"
 }
 
@@ -801,6 +807,23 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_lint(args: &Args) -> Result<()> {
+    let root = args.get_or("root", env!("CARGO_MANIFEST_DIR"));
+    let report = velm::analysis::lint_tree(std::path::Path::new(&root))?;
+    println!(
+        "velm lint: {} files, {} relaxed sites ({} justified)",
+        report.files_scanned, report.relaxed_sites, report.justified_sites
+    );
+    if report.is_clean() {
+        println!("clean");
+        return Ok(());
+    }
+    for finding in &report.findings {
+        eprintln!("{finding}");
+    }
+    bail!("{} lint finding(s)", report.findings.len());
+}
+
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
     match args.command.as_deref() {
@@ -814,6 +837,7 @@ fn main() -> Result<()> {
         Some("tune") => cmd_tune(&args),
         Some("fleet") => cmd_fleet(&args),
         Some("info") => cmd_info(&args),
+        Some("lint") => cmd_lint(&args),
         Some("help") | None => {
             print!("{}", usage());
             Ok(())

@@ -1,0 +1,44 @@
+//! Synchronization facade for every lock-free hot-path structure.
+//!
+//! All cross-thread atomics and mutexes in this crate are imported from
+//! here, never from `std::sync` directly (`velm lint` enforces this —
+//! see [`crate::analysis`] and DESIGN.md §18). In a normal build the
+//! facade is a zero-cost re-export of `std::sync`. Under
+//! `--features model` it re-exports the deterministic modeled
+//! implementation in [`crate::testing::model::sync`], whose types wrap
+//! the std ones but announce every operation to the bounded-preemption
+//! model checker, letting `tests/model_checker.rs` enumerate thread
+//! interleavings exhaustively.
+//!
+//! Rules (mechanically checked by `velm lint`):
+//!
+//! - import `AtomicBool`/`AtomicU8`/`AtomicU64`/`AtomicUsize`,
+//!   `Ordering`, `Mutex`, and `MutexGuard` from `crate::sync`;
+//! - `std::sync::{mpsc, Arc, Condvar}` and the error types below stay
+//!   direct std imports (they need no modeling: `Arc` is immutable
+//!   plumbing, channels are linearizable FIFOs driven from one side in
+//!   every checked scenario);
+//! - every `Ordering::Relaxed` at a cross-thread site carries a
+//!   `// relaxed-ok:` justification comment.
+
+#[cfg(not(feature = "model"))]
+mod imp {
+    pub use std::sync::atomic::{AtomicBool, AtomicU8, AtomicU64, AtomicUsize, Ordering};
+    pub use std::sync::{Mutex, MutexGuard};
+}
+
+#[cfg(feature = "model")]
+mod imp {
+    pub use crate::testing::model::sync::{
+        AtomicBool, AtomicU8, AtomicU64, AtomicUsize, Mutex, MutexGuard,
+    };
+    pub use std::sync::atomic::Ordering;
+}
+
+pub use imp::*;
+
+// The lock error types are std's in both configurations: the modeled
+// Mutex bottoms out on a std Mutex and passes its poison state through
+// unchanged, so recovery code (`PoisonError::into_inner`) is identical
+// under test and in production.
+pub use std::sync::{LockResult, PoisonError, TryLockError, TryLockResult};

@@ -3,6 +3,8 @@
 //! executes many cases and reports the failing seed so a failure is
 //! reproducible with `check_one`.
 
+pub mod model;
+
 use crate::util::prng::Prng;
 
 /// Run `cases` random cases of `prop`; panics with the failing seed on
@@ -58,7 +60,7 @@ mod tests {
 
     #[test]
     fn passing_property_runs_all_cases() {
-        use std::sync::atomic::{AtomicU64, Ordering};
+        use crate::sync::{AtomicU64, Ordering};
         let count = AtomicU64::new(0);
         check("count", 25, |_rng| {
             count.fetch_add(1, Ordering::Relaxed);

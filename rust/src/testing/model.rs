@@ -1,0 +1,803 @@
+//! Loom-style bounded-preemption model checker for the lock-free
+//! serving core (DESIGN.md §18). No external dependencies: the
+//! "modeled" atomics and mutexes in [`sync`] wrap their std
+//! counterparts and announce every operation to a cooperative
+//! scheduler, which serializes the logical threads of a scenario and
+//! enumerates their interleavings by depth-first search.
+//!
+//! How it works:
+//!
+//! - A scenario (closure over [`Threads`]) builds fresh shared state
+//!   and spawns 2..=4 logical thread bodies; it is re-run once per
+//!   explored schedule.
+//! - Each body runs on a real OS thread, but a token-passing scheduler
+//!   (mutex + condvar) lets exactly one run at a time. Before every
+//!   modeled atomic/mutex operation the running thread yields; the
+//!   scheduler then picks which thread runs next.
+//! - The first run follows a default schedule (keep running the
+//!   current thread). Every decision point records the set of enabled
+//!   threads; the search then backtracks, forcing a different choice at
+//!   one decision and replaying the prefix — classic stateless model
+//!   checking with a bounded number of *preemptions* (switching away
+//!   from a thread that could have continued). Context switches at
+//!   thread start, block, or exit are free, so small bounds still
+//!   explore every blocking pattern.
+//! - A modeled `Mutex::lock` that would block parks the thread until
+//!   some guard drops; if every live thread is parked the run is
+//!   reported as a deadlock. Runaway schedules trip `max_steps`
+//!   (livelock), and a forced choice that is no longer enabled on
+//!   replay is reported as nondeterminism in the scenario itself.
+//!
+//! Violations are assertion panics inside bodies or `after` checks,
+//! plus deadlock/livelock detected by the scheduler; [`Model::search`]
+//! returns the first failing schedule, [`Model::check`] panics with it.
+
+use std::any::Any;
+use std::cell::RefCell;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Pseudo thread-id for the driver: never enabled, never scheduled.
+const MAIN: usize = usize::MAX;
+
+/// Panic payload used to unwind worker threads when a run is torn down
+/// early (deadlock, livelock, or a sibling thread's assertion failure).
+const ABORT_MSG: &str = "velm-model: schedule aborted";
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Status {
+    /// Runnable: the scheduler may pick this thread.
+    Ready,
+    /// Parked on a modeled mutex; re-enabled when any guard drops.
+    Blocked,
+    /// Body returned (or unwound).
+    Done,
+}
+
+/// One scheduling decision: who yielded, who was chosen, and who else
+/// could have been chosen (the DFS branches over `enabled`).
+#[derive(Clone, Debug)]
+struct Choice {
+    yielder: usize,
+    chosen: usize,
+    enabled: Vec<usize>,
+    preemptive: bool,
+}
+
+struct EngState {
+    status: Vec<Status>,
+    registered: usize,
+    /// Thread currently holding the run token (`MAIN` = driver).
+    active: usize,
+    /// Next decision index (== trace.len()).
+    step: usize,
+    forced: Vec<usize>,
+    trace: Vec<Choice>,
+    failure: Option<String>,
+    aborting: bool,
+    max_steps: usize,
+}
+
+struct Engine {
+    state: Mutex<EngState>,
+    cv: Condvar,
+}
+
+impl Engine {
+    fn new(n: usize, forced: Vec<usize>, max_steps: usize) -> Self {
+        Engine {
+            state: Mutex::new(EngState {
+                status: vec![Status::Ready; n],
+                registered: 0,
+                active: MAIN,
+                step: 0,
+                forced,
+                trace: Vec::new(),
+                failure: None,
+                aborting: false,
+                max_steps,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Called by each worker before its body: signs in, then parks
+    /// until the scheduler hands it the token for the first time.
+    fn register_and_wait(&self, me: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.registered += 1;
+        self.cv.notify_all();
+        loop {
+            if st.aborting {
+                drop(st);
+                panic!("{ABORT_MSG}");
+            }
+            if st.active == me {
+                return;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Decision point before a modeled operation. `blocked` marks a
+    /// mutex acquire that failed: the thread parks and MUST NOT be
+    /// rescheduled until some guard drops re-enables it.
+    fn yield_at(&self, me: usize, blocked: bool) {
+        let mut st = self.state.lock().unwrap();
+        if st.aborting {
+            drop(st);
+            panic!("{ABORT_MSG}");
+        }
+        st.status[me] = if blocked { Status::Blocked } else { Status::Ready };
+        self.pick_next(&mut st, me);
+        loop {
+            if st.aborting {
+                drop(st);
+                panic!("{ABORT_MSG}");
+            }
+            if st.active == me {
+                return;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// A modeled mutex guard dropped: every parked thread may retry.
+    /// Not a decision point — the release itself is not observable
+    /// until the releasing thread's next yield.
+    fn unblocked(&self) {
+        let mut st = self.state.lock().unwrap();
+        for s in &mut st.status {
+            if *s == Status::Blocked {
+                *s = Status::Ready;
+            }
+        }
+    }
+
+    /// Worker body finished (normally or by panic).
+    fn finish(&self, me: usize, panicked: bool) {
+        let mut st = self.state.lock().unwrap();
+        st.status[me] = Status::Done;
+        if panicked {
+            // An assertion failure inside a body is a violation: tear
+            // the rest of the run down; the driver reads the payload
+            // off the join handle.
+            st.aborting = true;
+        } else if !st.aborting {
+            self.pick_next(&mut st, me);
+        }
+        self.cv.notify_all();
+    }
+
+    /// Pick who runs next. Follows the forced prefix while it lasts,
+    /// then defaults to "keep running the yielder" (no preemption).
+    fn pick_next(&self, st: &mut EngState, yielder: usize) {
+        if st.step >= st.max_steps {
+            st.failure = Some(format!(
+                "livelock: schedule exceeded {} decisions",
+                st.max_steps
+            ));
+            st.aborting = true;
+            self.cv.notify_all();
+            return;
+        }
+        let enabled: Vec<usize> = (0..st.status.len())
+            .filter(|&i| st.status[i] == Status::Ready)
+            .collect();
+        if enabled.is_empty() {
+            if st.status.iter().all(|&s| s == Status::Done) {
+                st.active = MAIN;
+            } else {
+                st.failure = Some(format!(
+                    "deadlock: every live thread is parked on a mutex (status {:?})",
+                    st.status
+                ));
+                st.aborting = true;
+            }
+            self.cv.notify_all();
+            return;
+        }
+        let chosen = if st.step < st.forced.len() {
+            let c = st.forced[st.step];
+            if !enabled.contains(&c) {
+                st.failure = Some(format!(
+                    "nondeterministic scenario: forced thread {c} not enabled at step {} (enabled {:?})",
+                    st.step, enabled
+                ));
+                st.aborting = true;
+                self.cv.notify_all();
+                return;
+            }
+            c
+        } else if enabled.contains(&yielder) {
+            yielder
+        } else {
+            enabled[0]
+        };
+        let preemptive = chosen != yielder && enabled.contains(&yielder);
+        st.trace.push(Choice {
+            yielder,
+            chosen,
+            enabled,
+            preemptive,
+        });
+        st.step += 1;
+        st.active = chosen;
+        self.cv.notify_all();
+    }
+}
+
+struct Ctx {
+    engine: Arc<Engine>,
+    id: usize,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<Ctx>> = const { RefCell::new(None) };
+}
+
+fn current() -> Option<(Arc<Engine>, usize)> {
+    CTX.with(|c| c.borrow().as_ref().map(|x| (Arc::clone(&x.engine), x.id)))
+}
+
+/// True when the calling thread belongs to an active model run.
+pub(crate) fn in_model() -> bool {
+    CTX.with(|c| c.borrow().is_some())
+}
+
+/// Decision point before a modeled operation (no-op outside a run).
+pub(crate) fn yield_point() {
+    if let Some((engine, id)) = current() {
+        engine.yield_at(id, false);
+    }
+}
+
+/// Park until a modeled mutex guard drops (no-op outside a run).
+pub(crate) fn yield_blocked() {
+    if let Some((engine, id)) = current() {
+        engine.yield_at(id, true);
+    }
+}
+
+/// A modeled mutex guard dropped (no-op outside a run).
+pub(crate) fn unlock_hint() {
+    if let Some((engine, _)) = current() {
+        engine.unblocked();
+    }
+}
+
+/// Modeled atomics and mutexes. `crate::sync` re-exports these under
+/// `--features model`; user code never names this module directly.
+pub mod sync {
+    use super::{in_model, unlock_hint, yield_blocked, yield_point};
+    use std::sync::atomic::Ordering;
+    use std::sync::{LockResult, PoisonError, TryLockError, TryLockResult};
+
+    macro_rules! modeled_atomic {
+        ($name:ident, $std:ty, $ty:ty) => {
+            /// Modeled atomic: delegates to std, yielding to the model
+            /// scheduler before every operation.
+            pub struct $name {
+                inner: $std,
+            }
+
+            impl $name {
+                pub const fn new(v: $ty) -> Self {
+                    Self {
+                        inner: <$std>::new(v),
+                    }
+                }
+
+                pub fn load(&self, order: Ordering) -> $ty {
+                    yield_point();
+                    self.inner.load(order)
+                }
+
+                pub fn store(&self, v: $ty, order: Ordering) {
+                    yield_point();
+                    self.inner.store(v, order);
+                }
+            }
+
+            impl Default for $name {
+                fn default() -> Self {
+                    Self::new(<$ty>::default())
+                }
+            }
+
+            impl std::fmt::Debug for $name {
+                fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                    std::fmt::Debug::fmt(&self.inner, f)
+                }
+            }
+        };
+    }
+
+    macro_rules! modeled_fetch_ops {
+        ($name:ident, $ty:ty) => {
+            impl $name {
+                pub fn fetch_add(&self, v: $ty, order: Ordering) -> $ty {
+                    yield_point();
+                    self.inner.fetch_add(v, order)
+                }
+
+                pub fn fetch_sub(&self, v: $ty, order: Ordering) -> $ty {
+                    yield_point();
+                    self.inner.fetch_sub(v, order)
+                }
+            }
+        };
+    }
+
+    modeled_atomic!(AtomicBool, std::sync::atomic::AtomicBool, bool);
+    modeled_atomic!(AtomicU8, std::sync::atomic::AtomicU8, u8);
+    modeled_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+    modeled_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+    modeled_fetch_ops!(AtomicU64, u64);
+    modeled_fetch_ops!(AtomicUsize, usize);
+
+    /// Modeled mutex. Outside a model run it is a plain delegating
+    /// wrapper (including blocking `lock`). Inside a run, `lock` spins
+    /// on `try_lock` and parks the logical thread between attempts, so
+    /// the scheduler observes blocking instead of deadlocking the
+    /// token-passing protocol; acquisition yields once more while
+    /// holding the guard so other threads can observe contention.
+    /// Poison passes through from the inner std mutex unchanged.
+    #[derive(Default)]
+    pub struct Mutex<T> {
+        inner: std::sync::Mutex<T>,
+    }
+
+    pub struct MutexGuard<'a, T> {
+        inner: Option<std::sync::MutexGuard<'a, T>>,
+    }
+
+    impl<T> Mutex<T> {
+        pub const fn new(t: T) -> Self {
+            Self {
+                inner: std::sync::Mutex::new(t),
+            }
+        }
+
+        pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+            if !in_model() {
+                return match self.inner.lock() {
+                    Ok(g) => Ok(MutexGuard::wrap(g)),
+                    Err(p) => Err(PoisonError::new(MutexGuard::wrap(p.into_inner()))),
+                };
+            }
+            yield_point();
+            loop {
+                match self.inner.try_lock() {
+                    Ok(g) => {
+                        yield_point();
+                        return Ok(MutexGuard::wrap(g));
+                    }
+                    Err(TryLockError::Poisoned(p)) => {
+                        yield_point();
+                        return Err(PoisonError::new(MutexGuard::wrap(p.into_inner())));
+                    }
+                    Err(TryLockError::WouldBlock) => yield_blocked(),
+                }
+            }
+        }
+
+        pub fn try_lock(&self) -> TryLockResult<MutexGuard<'_, T>> {
+            yield_point();
+            match self.inner.try_lock() {
+                Ok(g) => {
+                    yield_point();
+                    Ok(MutexGuard::wrap(g))
+                }
+                Err(TryLockError::Poisoned(p)) => Err(TryLockError::Poisoned(PoisonError::new(
+                    MutexGuard::wrap(p.into_inner()),
+                ))),
+                Err(TryLockError::WouldBlock) => Err(TryLockError::WouldBlock),
+            }
+        }
+
+        pub fn into_inner(self) -> LockResult<T> {
+            match self.inner.into_inner() {
+                Ok(t) => Ok(t),
+                Err(p) => Err(PoisonError::new(p.into_inner())),
+            }
+        }
+    }
+
+    impl<T: std::fmt::Debug> std::fmt::Debug for Mutex<T> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            std::fmt::Debug::fmt(&self.inner, f)
+        }
+    }
+
+    impl<'a, T> MutexGuard<'a, T> {
+        fn wrap(g: std::sync::MutexGuard<'a, T>) -> Self {
+            Self { inner: Some(g) }
+        }
+    }
+
+    impl<T> std::ops::Deref for MutexGuard<'_, T> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            self.inner.as_ref().expect("guard alive")
+        }
+    }
+
+    impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            self.inner.as_mut().expect("guard alive")
+        }
+    }
+
+    impl<T> Drop for MutexGuard<'_, T> {
+        fn drop(&mut self) {
+            // Release the inner guard first, then let parked threads
+            // retry; the order matters because the hint does not yield
+            // and the retry cannot run before this thread's next yield.
+            self.inner = None;
+            unlock_hint();
+        }
+    }
+}
+
+struct FinishGuard {
+    engine: Arc<Engine>,
+    id: usize,
+}
+
+impl Drop for FinishGuard {
+    fn drop(&mut self) {
+        self.engine.finish(self.id, std::thread::panicking());
+        CTX.with(|c| *c.borrow_mut() = None);
+    }
+}
+
+type Body = Box<dyn FnOnce() + Send>;
+type AfterCheck = Box<dyn FnOnce()>;
+
+/// Scenario builder handed to the closure passed to `Model::check`.
+#[derive(Default)]
+pub struct Threads {
+    bodies: Vec<Body>,
+    afters: Vec<AfterCheck>,
+}
+
+impl Threads {
+    /// Add a logical thread. Bodies run under the model scheduler:
+    /// every `crate::sync` operation they perform is a decision point.
+    pub fn spawn(&mut self, body: impl FnOnce() + Send + 'static) {
+        self.bodies.push(Box::new(body));
+    }
+
+    /// Add a quiescence check: runs on the driver after every schedule
+    /// once all bodies have finished. Panics here are violations.
+    pub fn after(&mut self, check: impl FnOnce() + 'static) {
+        self.afters.push(Box::new(check));
+    }
+}
+
+/// Search bounds. `max_preemptions` is the classic CHESS-style bound:
+/// most concurrency bugs need only 1-2 preemptions, and the schedule
+/// count grows combinatorially with the bound, so small values buy
+/// exhaustiveness within a practical budget.
+#[derive(Clone, Copy, Debug)]
+pub struct Model {
+    pub max_preemptions: usize,
+    pub max_schedules: usize,
+    pub max_steps: usize,
+}
+
+impl Model {
+    /// A model with the given preemption bound and default budgets.
+    pub fn bounded(max_preemptions: usize) -> Self {
+        Model {
+            max_preemptions,
+            max_schedules: 1_000_000,
+            max_steps: 100_000,
+        }
+    }
+}
+
+/// The first failing schedule found by `Model::search`.
+#[derive(Debug)]
+pub struct Violation {
+    /// Thread ids in scheduling order — replays the failure.
+    pub schedule: Vec<usize>,
+    pub message: String,
+    pub schedules_run: usize,
+}
+
+/// Outcome of an exhaustive search that found no violation.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub schedules: usize,
+    pub max_depth: usize,
+    /// False when `max_schedules` stopped the search early; an
+    /// incomplete search proves nothing and `check` treats it as a
+    /// failure.
+    pub complete: bool,
+}
+
+struct RunOutcome {
+    trace: Vec<Choice>,
+    failure: Option<String>,
+}
+
+impl Model {
+    /// Explore every schedule of `scenario` within the preemption
+    /// bound. Returns the first violation, or search statistics when
+    /// every explored schedule passed.
+    pub fn search<F>(&self, mut scenario: F) -> Result<Stats, Violation>
+    where
+        F: FnMut(&mut Threads),
+    {
+        let mut stack: Vec<Vec<usize>> = vec![Vec::new()];
+        let mut stats = Stats {
+            schedules: 0,
+            max_depth: 0,
+            complete: true,
+        };
+        while let Some(forced) = stack.pop() {
+            if stats.schedules >= self.max_schedules {
+                stats.complete = false;
+                break;
+            }
+            stats.schedules += 1;
+            let out = self.run_once(&mut scenario, &forced);
+            stats.max_depth = stats.max_depth.max(out.trace.len());
+            if let Some(message) = out.failure {
+                return Err(Violation {
+                    schedule: out.trace.iter().map(|c| c.chosen).collect(),
+                    message,
+                    schedules_run: stats.schedules,
+                });
+            }
+            // Branch on every decision past the forced prefix (earlier
+            // decisions were branched when first discovered). The
+            // default policy never preempts, so the cumulative count
+            // only reflects the forced prefix and stays within bound.
+            let mut preempts = 0usize;
+            for (i, c) in out.trace.iter().enumerate() {
+                if i >= forced.len() {
+                    for &alt in c.enabled.iter().rev() {
+                        if alt == c.chosen {
+                            continue;
+                        }
+                        let alt_preempts = c.enabled.contains(&c.yielder) && alt != c.yielder;
+                        if preempts + usize::from(alt_preempts) > self.max_preemptions {
+                            continue;
+                        }
+                        let mut next: Vec<usize> =
+                            out.trace[..i].iter().map(|x| x.chosen).collect();
+                        next.push(alt);
+                        stack.push(next);
+                    }
+                }
+                preempts += usize::from(c.preemptive);
+            }
+        }
+        Ok(stats)
+    }
+
+    /// Like `search`, but panics (with the failing schedule) on a
+    /// violation or an incomplete search.
+    pub fn check<F>(&self, name: &str, scenario: F) -> Stats
+    where
+        F: FnMut(&mut Threads),
+    {
+        match self.search(scenario) {
+            Ok(stats) => {
+                assert!(
+                    stats.complete,
+                    "model '{name}': search hit max_schedules ({}) before completing",
+                    self.max_schedules
+                );
+                stats
+            }
+            Err(v) => panic!(
+                "model '{name}': {} (schedule {:?}, found after {} schedules)",
+                v.message, v.schedule, v.schedules_run
+            ),
+        }
+    }
+
+    fn run_once<F>(&self, scenario: &mut F, forced: &[usize]) -> RunOutcome
+    where
+        F: FnMut(&mut Threads),
+    {
+        let mut threads = Threads::default();
+        scenario(&mut threads);
+        let Threads { bodies, afters } = threads;
+        let n = bodies.len();
+        let engine = Arc::new(Engine::new(n, forced.to_vec(), self.max_steps));
+        let mut handles = Vec::with_capacity(n);
+        for (id, body) in bodies.into_iter().enumerate() {
+            let eng = Arc::clone(&engine);
+            let handle = std::thread::Builder::new()
+                .name(format!("velm-model-{id}"))
+                .spawn(move || {
+                    CTX.with(|c| {
+                        *c.borrow_mut() = Some(Ctx {
+                            engine: Arc::clone(&eng),
+                            id,
+                        });
+                    });
+                    let _finish = FinishGuard {
+                        engine: Arc::clone(&eng),
+                        id,
+                    };
+                    eng.register_and_wait(id);
+                    body();
+                })
+                .expect("spawn model thread");
+            handles.push(handle);
+        }
+        if n > 0 {
+            let mut st = engine.state.lock().unwrap();
+            while st.registered < n {
+                st = engine.cv.wait(st).unwrap();
+            }
+            engine.pick_next(&mut st, MAIN);
+        }
+        let mut body_panic: Option<String> = None;
+        for handle in handles {
+            if let Err(payload) = handle.join() {
+                let msg = payload_message(payload);
+                if msg != ABORT_MSG && body_panic.is_none() {
+                    body_panic = Some(msg);
+                }
+            }
+        }
+        let st = engine.state.lock().unwrap();
+        let mut failure = st.failure.clone().or(body_panic);
+        let trace = st.trace.clone();
+        drop(st);
+        if failure.is_none() {
+            for check in afters {
+                if let Err(payload) =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(check))
+                {
+                    failure = Some(format!("after-check: {}", payload_message(payload)));
+                    break;
+                }
+            }
+        }
+        RunOutcome { trace, failure }
+    }
+}
+
+fn payload_message(payload: Box<dyn Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic with non-string payload".to_string()
+    }
+}
+
+/// Every map of `items` positions onto `classes` values, as vectors of
+/// class indices — `classes^items` entries. Backs the exhaustive
+/// input-space sweeps in `tests/invariants.rs` (tenant-over-row
+/// assignments, governor signal sequences).
+pub fn assignments(items: u32, classes: usize) -> Vec<Vec<usize>> {
+    let total = classes.pow(items);
+    let mut out = Vec::with_capacity(total);
+    for code in 0..total {
+        let mut rest = code;
+        let mut v = Vec::with_capacity(items as usize);
+        for _ in 0..items {
+            v.push(rest % classes);
+            rest /= classes;
+        }
+        out.push(v);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::{AtomicU64, Mutex};
+    use super::*;
+    use std::sync::atomic::Ordering;
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // spawns thousands of short-lived threads
+    fn atomic_increments_are_exhaustively_explored() {
+        let model = Model::bounded(2);
+        let stats = model.check("fetch_add", |t| {
+            let count = Arc::new(AtomicU64::new(0));
+            for _ in 0..2 {
+                let c = Arc::clone(&count);
+                t.spawn(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            let c = Arc::clone(&count);
+            t.after(move || assert_eq!(c.load(Ordering::Relaxed), 2));
+        });
+        assert!(stats.schedules > 1, "must explore more than one schedule");
+        assert!(stats.complete);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)]
+    fn lost_update_is_found() {
+        // Non-atomic increment (load; store v+1): one preemption
+        // between the two halves loses an update.
+        let model = Model::bounded(1);
+        let result = model.search(|t| {
+            let count = Arc::new(AtomicU64::new(0));
+            for _ in 0..2 {
+                let c = Arc::clone(&count);
+                t.spawn(move || {
+                    let v = c.load(Ordering::Relaxed);
+                    c.store(v + 1, Ordering::Relaxed);
+                });
+            }
+            let c = Arc::clone(&count);
+            t.after(move || assert_eq!(c.load(Ordering::Relaxed), 2, "lost update"));
+        });
+        let violation = result.expect_err("checker must find the lost update");
+        assert!(
+            violation.message.contains("lost update"),
+            "unexpected failure: {}",
+            violation.message
+        );
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)]
+    fn mutex_contention_is_serialized() {
+        let model = Model::bounded(2);
+        let stats = model.check("mutex", |t| {
+            let cell = Arc::new(Mutex::new(0u64));
+            for _ in 0..2 {
+                let m = Arc::clone(&cell);
+                t.spawn(move || {
+                    let mut g = m.lock().unwrap();
+                    *g += 1;
+                });
+            }
+            let m = Arc::clone(&cell);
+            t.after(move || assert_eq!(*m.lock().unwrap(), 2));
+        });
+        assert!(stats.complete);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)]
+    fn lock_order_inversion_deadlocks() {
+        let model = Model::bounded(1);
+        let result = model.search(|t| {
+            let a = Arc::new(Mutex::new(()));
+            let b = Arc::new(Mutex::new(()));
+            let (a1, b1) = (Arc::clone(&a), Arc::clone(&b));
+            t.spawn(move || {
+                let _ga = a1.lock().unwrap();
+                let _gb = b1.lock().unwrap();
+            });
+            t.spawn(move || {
+                let _gb = b.lock().unwrap();
+                let _ga = a.lock().unwrap();
+            });
+        });
+        let violation = result.expect_err("checker must find the ABBA deadlock");
+        assert!(
+            violation.message.contains("deadlock"),
+            "unexpected failure: {}",
+            violation.message
+        );
+    }
+
+    #[test]
+    fn assignments_enumerates_the_full_space() {
+        let all = assignments(3, 2);
+        assert_eq!(all.len(), 8);
+        assert!(all.contains(&vec![0, 0, 0]));
+        assert!(all.contains(&vec![1, 1, 1]));
+        assert!(all.contains(&vec![1, 0, 1]));
+        let dedup: std::collections::BTreeSet<_> = all.iter().cloned().collect();
+        assert_eq!(dedup.len(), 8, "no duplicates");
+    }
+}

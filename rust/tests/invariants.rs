@@ -1,0 +1,263 @@
+//! Exhaustive small-space invariant checks for the two schedulers that
+//! are NOT exercised by the concurrency model checker (their state is
+//! confined to one thread): the batcher's tenant-fair admission and the
+//! governor's per-die move policy. Instead of exploring thread
+//! interleavings, these tests enumerate the full *input* space — every
+//! tenant assignment of R rows at every window budget, every signal
+//! sequence a die can observe — through the same `assignments` helper
+//! the model checker uses (DESIGN.md §18).
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use velm::coordinator::batcher::collect_batch;
+use velm::coordinator::metrics::TenantMetrics;
+use velm::coordinator::request::{ClassifyRequest, TenantTag, WorkerMsg};
+use velm::governor::{Decision, DiePolicy, GovernorConfig, RejectReason, TickSignals};
+use velm::testing::model::assignments;
+
+fn row(id: u64, tenant: Option<&str>) -> WorkerMsg {
+    let (tx, _rx) = mpsc::channel();
+    WorkerMsg::Classify(ClassifyRequest {
+        id,
+        features: vec![],
+        tenant: tenant.map(|name| TenantTag {
+            name: std::sync::Arc::from(name),
+            metrics: std::sync::Arc::new(TenantMetrics::default()),
+        }),
+        submitted: Instant::now(),
+        collected: None,
+        reply: tx,
+    })
+}
+
+/// Tenant class `0` is the default head (`None` tag); class `c > 0`
+/// is the named tenant `t<c>`.
+fn class_name(class: usize) -> Option<String> {
+    (class > 0).then(|| format!("t{class}"))
+}
+
+/// Drive one full drain of `assign` (row i belongs to tenant class
+/// `assign[i]`) through `collect_batch` at the given conversion
+/// budget, asserting the fairness invariants window by window.
+fn check_admission_case(assign: &[usize], budget: usize) {
+    let (tx, rx) = mpsc::channel();
+    for (i, &class) in assign.iter().enumerate() {
+        tx.send(row(i as u64, class_name(class).as_deref())).unwrap();
+    }
+    drop(tx);
+
+    // external pending count per class, mirroring carry + channel
+    let mut pending: Vec<u64> = Vec::new();
+    for &class in assign {
+        if class >= pending.len() {
+            pending.resize(class + 1, 0);
+        }
+        pending[class] += 1;
+    }
+
+    let mut carry = VecDeque::new();
+    let mut seen: Vec<u64> = Vec::new();
+    let mut last_per_class: Vec<Option<u64>> = vec![None; pending.len()];
+    while let Some(batch) = collect_batch(&rx, &mut carry, budget, Duration::from_millis(1), 1) {
+        assert!(
+            batch.requests.len() <= budget,
+            "window overflow: {} rows admitted at budget {budget} for {assign:?}",
+            batch.requests.len()
+        );
+        // Fairness: when every pending tenant fits one round-robin
+        // round, each of them lands at least one row in this window.
+        let distinct = pending.iter().filter(|&&n| n > 0).count();
+        let mut admitted_per_class = vec![0u64; pending.len()];
+        for req in &batch.requests {
+            let class = match &req.tenant {
+                None => 0,
+                Some(tag) => tag.name[1..].parse::<usize>().unwrap(),
+            };
+            admitted_per_class[class] += 1;
+            // exactly-once, in within-tenant arrival order
+            assert!(
+                last_per_class[class].is_none_or(|prev| req.id > prev),
+                "tenant t{class} rows reordered at budget {budget} for {assign:?}"
+            );
+            last_per_class[class] = Some(req.id);
+            seen.push(req.id);
+        }
+        if distinct <= budget {
+            for (class, &n) in pending.iter().enumerate() {
+                assert!(
+                    n == 0 || admitted_per_class[class] > 0,
+                    "tenant class {class} starved out of a window with \
+                     {distinct} tenants pending at budget {budget} for {assign:?}"
+                );
+            }
+        }
+        for (class, &n) in admitted_per_class.iter().enumerate() {
+            assert!(n <= pending[class], "class {class} over-admitted");
+            pending[class] -= n;
+        }
+    }
+    assert!(carry.is_empty(), "shutdown left rows in the carry");
+    seen.sort_unstable();
+    let expect: Vec<u64> = (0..assign.len() as u64).collect();
+    assert_eq!(
+        seen, expect,
+        "row lost or duplicated at budget {budget} for {assign:?}"
+    );
+}
+
+/// Every tenant assignment of 5 rows over 1-3 tenant classes, at every
+/// window budget 1-6: rows are admitted exactly once, in within-tenant
+/// order, never above budget, and no pending tenant is starved out of
+/// a window that has room for one row from each.
+#[test]
+fn carry_queue_admits_every_assignment_exactly_once() {
+    const ROWS: u32 = if cfg!(miri) { 3 } else { 5 };
+    let budgets: &[usize] = if cfg!(miri) { &[1, 3] } else { &[1, 2, 3, 4, 5, 6] };
+    let mut cases = 0usize;
+    for classes in 1..=3usize {
+        for assign in assignments(ROWS, classes) {
+            for &budget in budgets {
+                check_admission_case(&assign, budget);
+                cases += 1;
+            }
+        }
+    }
+    let per_budget: usize = (1..=3usize).map(|c| c.pow(ROWS)).sum();
+    assert_eq!(cases, per_budget * budgets.len(), "enumeration incomplete");
+}
+
+// ---------------------------------------------------------------------------
+// Governor DiePolicy: sliding-window move budget over every signal
+// sequence.
+// ---------------------------------------------------------------------------
+
+/// The four signal classes a die can observe on one tick.
+const SIG_CLASSES: usize = 4;
+
+fn signal(class: usize) -> TickSignals {
+    match class {
+        // idle, accuracy holding: the die wants to step down
+        0 => TickSignals { healthy: true, accuracy_ok: true, ..TickSignals::default() },
+        // hot: queued traffic, the die wants to escalate to boot
+        1 => TickSignals {
+            healthy: true,
+            accuracy_ok: true,
+            requests_delta: 50,
+            mean_queue_us: 10_000,
+            ..TickSignals::default()
+        },
+        // unhealthy: lifecycle owns the die, hands off
+        2 => TickSignals { healthy: false, ..TickSignals::default() },
+        // idle but a tenant is over its accuracy SLO: descent blocked
+        _ => TickSignals { healthy: true, accuracy_ok: false, ..TickSignals::default() },
+    }
+}
+
+/// Replay one signal sequence through `DiePolicy::decide`, mirroring
+/// the window bookkeeping externally and asserting the anti-flap
+/// contract at every step.
+fn check_policy_case(seq: &[usize], cooldown_ticks: u32) {
+    const LADDER: usize = 4;
+    const BOOT: usize = 3;
+    const WINDOW: u32 = 3;
+    const MAX_MOVES: u32 = 1;
+    let cfg = GovernorConfig {
+        cooldown_ticks,
+        window_ticks: WINDOW,
+        max_moves_per_window: MAX_MOVES,
+        ..GovernorConfig::default()
+    };
+    let mut p = DiePolicy::new(BOOT);
+    let mut rung = BOOT;
+    // External replica of the window clock: `decide` advances the tick
+    // count first and refills the budget when it reaches WINDOW, so the
+    // first window spans WINDOW - 1 decisions and every later one WINDOW.
+    let mut tick_in_window = 0u32;
+    let mut moves_this_window = 0u32;
+    let mut healthy_since_move: Option<u32> = None;
+    for (step, &class) in seq.iter().enumerate() {
+        tick_in_window += 1;
+        if tick_in_window >= WINDOW {
+            tick_in_window = 0;
+            moves_this_window = 0;
+        }
+        let sig = signal(class);
+        let d = p.decide(&cfg, LADDER, BOOT, &sig);
+        match d {
+            Decision::Raise { from, to } => {
+                assert_eq!(from, rung, "step {step} of {seq:?}");
+                assert_eq!(to, BOOT, "a raise always escalates to boot");
+                assert!(from < to);
+                rung = to;
+            }
+            Decision::Lower { from, to } => {
+                assert_eq!(from, rung, "step {step} of {seq:?}");
+                assert_eq!(to, from - 1, "descent is one rung at a time");
+                rung = to;
+            }
+            Decision::Hold => {}
+            Decision::Rejected(reason) => {
+                if class == 2 {
+                    assert_eq!(reason, RejectReason::Unhealthy);
+                } else {
+                    assert_eq!(reason, RejectReason::Hysteresis);
+                }
+            }
+        }
+        let moved = matches!(d, Decision::Raise { .. } | Decision::Lower { .. });
+        if class == 2 {
+            assert_eq!(
+                d,
+                Decision::Rejected(RejectReason::Unhealthy),
+                "unhealthy die touched at step {step} of {seq:?}"
+            );
+        }
+        if class == 3 {
+            assert!(
+                matches!(d, Decision::Hold),
+                "accuracy-blocked idle tick must hold, got {d:?} at step {step} of {seq:?}"
+            );
+        }
+        if moved {
+            moves_this_window += 1;
+            assert!(
+                moves_this_window <= MAX_MOVES,
+                "window budget exceeded at step {step} of {seq:?} (cooldown {cooldown_ticks})"
+            );
+            if let Some(healthy) = healthy_since_move {
+                assert!(
+                    healthy >= cooldown_ticks,
+                    "move after only {healthy} healthy ticks of a \
+                     {cooldown_ticks}-tick cooldown at step {step} of {seq:?}"
+                );
+            }
+            healthy_since_move = Some(0);
+        } else if sig.healthy {
+            if let Some(healthy) = &mut healthy_since_move {
+                *healthy += 1;
+            }
+        }
+        assert_eq!(p.rung(), rung, "rung drifted at step {step} of {seq:?}");
+        assert!(rung < LADDER, "rung escaped the ladder at step {step} of {seq:?}");
+    }
+}
+
+/// Every signal sequence a die can observe over six ticks (idle / hot /
+/// unhealthy / accuracy-blocked), with and without a cooldown: the
+/// per-window move budget holds across the window reset, cooldowns
+/// space moves by healthy ticks, unhealthy dies are never moved, and
+/// the rung tracks the decision stream exactly.
+#[test]
+fn die_policy_move_budget_holds_for_every_signal_sequence() {
+    const TICKS: u32 = if cfg!(miri) { 4 } else { 6 };
+    let mut cases = 0usize;
+    for cooldown in [0u32, 1] {
+        for seq in assignments(TICKS, SIG_CLASSES) {
+            check_policy_case(&seq, cooldown);
+            cases += 1;
+        }
+    }
+    assert_eq!(cases, 2 * SIG_CLASSES.pow(TICKS), "enumeration incomplete");
+}

@@ -1,0 +1,287 @@
+//! Exhaustive-interleaving proofs for the lock-free serving core,
+//! driven by the in-repo model checker (`velm::testing::model`,
+//! DESIGN.md §18). Only compiled under `--features model`, which swaps
+//! the `velm::sync` facade to deterministic modeled atomics — every
+//! schedule within the preemption bound is explored, so a passing test
+//! here is a proof over that space, not a stress run.
+//!
+//! The four checked claims from the concurrency model:
+//!   1. flight-recorder push/dump never tears an entry and never
+//!      blocks the hot path;
+//!   2. the stats-snapshot clamp (`responses <= requests`) holds under
+//!      concurrent booking — and the load *order* behind it is
+//!      load-bearing (the inverted order is refuted below);
+//!   3. carry-queue rows are admitted exactly once — admission state
+//!      is confined to the worker thread, so the proof obligation is
+//!      input-space coverage, discharged exhaustively in
+//!      `tests/invariants.rs` over the same `assignments` helper;
+//!   4. `energy_fj + fj_saved == boot-priced conversions` at every
+//!      observable point (bounded mid-flight, exact at quiescence).
+
+#![cfg(feature = "model")]
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use velm::coordinator::metrics::Metrics;
+use velm::coordinator::trace::FlightRecorder;
+use velm::protocol::stats::{TraceEntry, TraceOutcome};
+use velm::sync::{AtomicU64, Ordering};
+use velm::testing::model::Model;
+
+/// Every field is a function of `id`, so a torn entry (fields from two
+/// different writes) is detectable in one equality sweep.
+fn entry(id: u64) -> TraceEntry {
+    TraceEntry {
+        id,
+        tenant: Some(format!("t{id}")),
+        die: id as u32,
+        pjrt: id % 2 == 0,
+        passes: id as u32 + 1,
+        queue_us: id * 10,
+        batch_us: id * 100,
+        compute_us: id * 1000,
+        total_us: id * 1110,
+        outcome: TraceOutcome::Ok,
+    }
+}
+
+fn assert_coherent(e: &TraceEntry) {
+    assert_eq!(e, &entry(e.id), "torn trace entry: {e:?}");
+}
+
+/// Claim 1: two pushers and a concurrent dumper over a 2-slot ring.
+/// No schedule tears an entry, blocks a pusher, or deadlocks; at
+/// quiescence both claims are counted and every surfaced entry is one
+/// of the two written.
+#[test]
+#[cfg_attr(miri, ignore)] // spawns OS threads per schedule; exhaustive loop is too slow under miri
+fn flight_recorder_push_dump_never_tears_or_blocks() {
+    let stats = Model::bounded(2).check("flight-recorder", |t| {
+        let r = Arc::new(FlightRecorder::new(2));
+        for id in [1u64, 2] {
+            let r = Arc::clone(&r);
+            t.spawn(move || r.push(entry(id)));
+        }
+        let r_dump = Arc::clone(&r);
+        t.spawn(move || {
+            for e in r_dump.dump(2) {
+                assert_coherent(&e);
+                assert!(e.id == 1 || e.id == 2, "phantom entry {e:?}");
+            }
+        });
+        t.after(move || {
+            // Both slots were claimed even when a push lost its slot
+            // to the dumper's lock (best-effort drop, never a block).
+            assert_eq!(r.recorded(), 2);
+            let dumped = r.dump(2);
+            assert!(dumped.len() <= 2);
+            for e in &dumped {
+                assert_coherent(e);
+            }
+        });
+    });
+    assert!(stats.schedules > 1, "no interleavings explored");
+}
+
+/// Claim 2, full stack: a writer booking request/response pairs races
+/// a `Metrics::snapshot`. The exported clamp must hold in every
+/// schedule, and quiescence must count everything.
+#[test]
+#[cfg_attr(miri, ignore)]
+fn snapshot_clamp_holds_under_concurrent_booking() {
+    Model::bounded(1).check("snapshot-clamp", |t| {
+        let m = Arc::new(Metrics::new());
+        let w = Arc::clone(&m);
+        t.spawn(move || {
+            for _ in 0..2 {
+                w.record_request();
+                w.record_response(Duration::from_micros(5));
+            }
+        });
+        let r = Arc::clone(&m);
+        t.spawn(move || {
+            let s = r.snapshot();
+            assert!(
+                s.responses <= s.requests,
+                "snapshot clamp violated: {} responses > {} requests",
+                s.responses,
+                s.requests
+            );
+        });
+        t.after(move || {
+            let s = m.snapshot();
+            assert_eq!(s.requests, 2);
+            assert_eq!(s.responses, 2);
+        });
+    });
+}
+
+/// Claim 2, mechanism: the clamp discipline is "load responses BEFORE
+/// requests, then clamp". Reading in that order keeps the raw pair
+/// sound in every schedule...
+#[test]
+#[cfg_attr(miri, ignore)]
+fn response_before_request_load_order_is_sound() {
+    Model::bounded(2).check("clamp-good-order", |t| {
+        let pair = Arc::new((AtomicU64::new(0), AtomicU64::new(0))); // (requests, responses)
+        let w = Arc::clone(&pair);
+        t.spawn(move || {
+            for _ in 0..2 {
+                w.0.fetch_add(1, Ordering::Relaxed);
+                w.1.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        t.spawn(move || {
+            let responses = pair.1.load(Ordering::Relaxed);
+            let requests = pair.0.load(Ordering::Relaxed);
+            assert!(
+                responses <= requests,
+                "clamp order failed: {responses} > {requests}"
+            );
+        });
+    });
+}
+
+/// ...and the inverted order is a real bug the checker refutes: load
+/// requests first and some schedule shows more responses than
+/// requests. This doubles as the seeded-bug self-test proving the
+/// search actually finds interleaving bugs in this shape of code.
+#[test]
+#[cfg_attr(miri, ignore)]
+fn request_before_response_load_order_is_refuted() {
+    let violation = Model::bounded(1)
+        .search(|t| {
+            let pair = Arc::new((AtomicU64::new(0), AtomicU64::new(0)));
+            let w = Arc::clone(&pair);
+            t.spawn(move || {
+                w.0.fetch_add(1, Ordering::Relaxed);
+                w.1.fetch_add(1, Ordering::Relaxed);
+            });
+            t.spawn(move || {
+                let requests = pair.0.load(Ordering::Relaxed); // bug: wrong order
+                let responses = pair.1.load(Ordering::Relaxed);
+                assert!(
+                    responses <= requests,
+                    "clamp order failed: {responses} > {requests}"
+                );
+            });
+        })
+        .expect_err("inverted load order must be refuted");
+    assert!(
+        violation.message.contains("clamp order failed"),
+        "unexpected violation: {}",
+        violation.message
+    );
+}
+
+/// Claim 4, mechanism: writers book conversions, then energy, then
+/// saved; readers load in the reverse order, so every schedule
+/// observes `energy + saved <= boot_price * conversions` (each
+/// loaded counter's predecessors are already visible).
+#[test]
+#[cfg_attr(miri, ignore)]
+fn ledger_reverse_read_order_is_sound() {
+    const PRICE_FJ: u64 = 100;
+    const BOOT_FJ: u64 = 150;
+    Model::bounded(2).check("ledger-good-order", |t| {
+        let led = Arc::new((AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)));
+        let w = Arc::clone(&led);
+        t.spawn(move || {
+            for _ in 0..2 {
+                w.0.fetch_add(6, Ordering::Relaxed); // conversions
+                w.1.fetch_add(6 * PRICE_FJ, Ordering::Relaxed); // energy
+                w.2.fetch_add(6 * (BOOT_FJ - PRICE_FJ), Ordering::Relaxed); // saved
+            }
+        });
+        let r = Arc::clone(&led);
+        t.spawn(move || {
+            let saved = r.2.load(Ordering::Relaxed);
+            let energy = r.1.load(Ordering::Relaxed);
+            let conversions = r.0.load(Ordering::Relaxed);
+            assert!(
+                energy + saved <= BOOT_FJ * conversions,
+                "ledger overshot: {energy} + {saved} > {BOOT_FJ} * {conversions}"
+            );
+        });
+        t.after(move || {
+            let (c, e, s) = (
+                led.0.load(Ordering::Relaxed),
+                led.1.load(Ordering::Relaxed),
+                led.2.load(Ordering::Relaxed),
+            );
+            assert_eq!(e + s, BOOT_FJ * c, "ledger must balance at quiescence");
+        });
+    });
+}
+
+/// The seeded-bug twin: loading conversions FIRST lets a schedule see
+/// booked energy against unbooked conversions and overshoot the
+/// boot-priced bound — the checker must find it.
+#[test]
+#[cfg_attr(miri, ignore)]
+fn ledger_forward_read_order_is_refuted() {
+    const PRICE_FJ: u64 = 100;
+    const BOOT_FJ: u64 = 150;
+    let violation = Model::bounded(1)
+        .search(|t| {
+            let led = Arc::new((AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)));
+            let w = Arc::clone(&led);
+            t.spawn(move || {
+                w.0.fetch_add(6, Ordering::Relaxed);
+                w.1.fetch_add(6 * PRICE_FJ, Ordering::Relaxed);
+                w.2.fetch_add(6 * (BOOT_FJ - PRICE_FJ), Ordering::Relaxed);
+            });
+            t.spawn(move || {
+                let conversions = led.0.load(Ordering::Relaxed); // bug: wrong order
+                let saved = led.2.load(Ordering::Relaxed);
+                let energy = led.1.load(Ordering::Relaxed);
+                assert!(
+                    energy + saved <= BOOT_FJ * conversions,
+                    "ledger overshot: {energy} + {saved} > {BOOT_FJ} * {conversions}"
+                );
+            });
+        })
+        .expect_err("forward load order must be refuted");
+    assert!(
+        violation.message.contains("ledger overshot"),
+        "unexpected violation: {}",
+        violation.message
+    );
+}
+
+/// Claim 4, full stack: worker-order bookings race `Metrics::snapshot`;
+/// the exported ledger never overshoots the boot price mid-flight and
+/// balances exactly at quiescence.
+#[test]
+#[cfg_attr(miri, ignore)]
+fn metrics_ledger_is_boot_priced_at_every_observable_point() {
+    const PRICE_FJ: u64 = 100;
+    const BOOT_FJ: u64 = 150;
+    Model::bounded(1).check("metrics-ledger", |t| {
+        let m = Arc::new(Metrics::new());
+        let w = Arc::clone(&m);
+        t.spawn(move || {
+            // one batch booked in worker.rs order
+            w.record_conversions(6);
+            w.record_energy(6 * PRICE_FJ, 6 * 48);
+            w.record_gov_fj_saved(6 * (BOOT_FJ - PRICE_FJ));
+        });
+        let r = Arc::clone(&m);
+        t.spawn(move || {
+            let s = r.snapshot();
+            assert!(
+                s.energy_fj + s.governor.fj_saved <= BOOT_FJ * s.conversions,
+                "exported ledger overshot: {} + {} > {BOOT_FJ} * {}",
+                s.energy_fj,
+                s.governor.fj_saved,
+                s.conversions
+            );
+        });
+        t.after(move || {
+            let s = m.snapshot();
+            assert_eq!(s.conversions, 6);
+            assert_eq!(s.energy_fj + s.governor.fj_saved, BOOT_FJ * s.conversions);
+        });
+    });
+}

@@ -25,7 +25,7 @@ use anyhow::{Context, Result};
 use crate::coordinator::Coordinator;
 use crate::protocol::{
     Codec, FrameCodec, LineCodec, PredictRow, Prediction, Request, Response, StatsSnapshot,
-    TraceEntry,
+    TimelineEvent, TraceEntry,
 };
 
 /// A handle on one serving fleet, over TCP (v0 or v1) or in-process.
@@ -208,6 +208,21 @@ impl Client {
         );
         match self.call(Request::Trace { last })? {
             Response::Trace(ts) => Ok(ts),
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// The newest `last` fleet timeline events (DESIGN.md §19), oldest
+    /// first — the shape `coordinator::timeline::chrome_trace_json`
+    /// renders for Perfetto. Needs v1 or in-process; v0 has no
+    /// timeline frame.
+    pub fn timeline(&mut self, last: usize) -> Result<Vec<TimelineEvent>> {
+        anyhow::ensure!(
+            self.wire_version() != Some(0),
+            "timeline events need the v1 framed protocol (v0 has no timeline frame)"
+        );
+        match self.call(Request::Timeline { last })? {
+            Response::Timeline(events) => Ok(events),
             other => Err(unexpected(other)),
         }
     }

@@ -364,6 +364,11 @@ pub struct SystemConfig {
     /// `None` disables the timeout (connections may pin threads
     /// forever — tests and trusted local tooling only).
     pub read_timeout: Option<std::time::Duration>,
+    /// Flight-recorder ring capacity (DESIGN.md §16): how many
+    /// completed request traces the always-on recorder retains. Sized
+    /// once at startup — the ring never reallocates after boot —
+    /// `velm serve --trace-cap N` overrides the 512 default.
+    pub trace_cap: usize,
     /// Fleet-health settings: probe cadence, drift thresholds,
     /// recovery/quarantine policy.
     pub fleet: crate::fleet::FleetConfig,
@@ -389,6 +394,7 @@ impl Default for SystemConfig {
             virtual_l: None,
             die_geoms: Vec::new(),
             read_timeout: Some(std::time::Duration::from_secs(120)),
+            trace_cap: crate::coordinator::trace::DEFAULT_TRACE_CAPACITY,
             fleet: crate::fleet::FleetConfig::default(),
             governor: crate::governor::GovernorConfig::default(),
         }

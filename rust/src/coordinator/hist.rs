@@ -53,6 +53,14 @@ impl LatencyHist {
         std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
     }
 
+    /// One relaxed copy of the buckets, for callers that window the
+    /// histogram themselves: the governor's sliding-window p99 diffs
+    /// two copies and feeds the delta to [`percentile_from`]
+    /// (DESIGN.md §19).
+    pub fn bucket_counts(&self) -> [u64; BUCKETS] {
+        self.load()
+    }
+
     /// Samples recorded so far.
     pub fn count(&self) -> u64 {
         self.load().iter().sum()
@@ -169,5 +177,107 @@ mod tests {
         assert_eq!(h.percentile_us(50.0), 0);
         assert_eq!(h.mean_us(), 0.0);
         assert_eq!(h.snapshot(), StageStats::default());
+    }
+
+    // --- exact-reference oracle tests: the log2 + interpolation
+    // estimate vs a sorted vector of the same samples ---
+
+    /// The k-th order statistic the estimator targets — the same
+    /// `ceil(p/100 * n).max(1)` rank, answered exactly.
+    fn oracle(samples: &mut Vec<u64>, p: f64) -> u64 {
+        samples.sort_unstable();
+        let target = ((p / 100.0) * samples.len() as f64).ceil().max(1.0) as usize;
+        samples[target - 1]
+    }
+
+    fn hist_of(samples: &[u64]) -> LatencyHist {
+        let h = LatencyHist::new();
+        for &us in samples {
+            h.record_us(us);
+        }
+        h
+    }
+
+    /// The estimate must land inside the oracle sample's log2 bucket:
+    /// never below its lower edge, never above its upper edge — the
+    /// tightest bound within-bucket interpolation can honour.
+    fn assert_within_bucket(est: u64, exact: u64, what: &str) {
+        let lower = 1u64 << (63 - exact.max(1).leading_zeros());
+        assert!(
+            est >= lower && est <= lower * 2,
+            "{what}: estimate {est} outside the oracle bucket [{lower}, {}] of {exact}",
+            lower * 2
+        );
+    }
+
+    #[test]
+    fn uniform_distribution_tracks_the_sorted_oracle() {
+        // deterministic LCG spread over [1, 10_000] us
+        let mut x = 0x2545_F491_4F6C_DD1Du64;
+        let samples: Vec<u64> = (0..1000)
+            .map(|_| {
+                x = x
+                    .wrapping_mul(6364136223846793005)
+                    .wrapping_add(1442695040888963407);
+                1 + (x >> 33) % 10_000
+            })
+            .collect();
+        let h = hist_of(&samples);
+        for p in [50.0, 90.0, 99.0] {
+            let est = h.percentile_us(p);
+            let exact = oracle(&mut samples.clone(), p);
+            assert_within_bucket(est, exact, &format!("uniform p{p}"));
+        }
+    }
+
+    #[test]
+    fn bimodal_distribution_tracks_the_sorted_oracle() {
+        // 900 fast rows at 80 us, 100 slow at 20_000 us: p50 must read
+        // the fast mode and p99 the slow one — the shape the windowed
+        // SLO tracker alarms on
+        let mut samples = vec![80u64; 900];
+        samples.extend(std::iter::repeat(20_000u64).take(100));
+        let h = hist_of(&samples);
+        let p50 = h.percentile_us(50.0);
+        assert_within_bucket(p50, oracle(&mut samples.clone(), 50.0), "bimodal p50");
+        let p99 = h.percentile_us(99.0);
+        let exact = oracle(&mut samples.clone(), 99.0);
+        assert_eq!(exact, 20_000);
+        assert_within_bucket(p99, exact, "bimodal p99");
+        assert!(p99 > 8 * p50, "p99 {p99} must expose the slow mode over p50 {p50}");
+    }
+
+    #[test]
+    fn single_bucket_distribution_is_exact_to_interpolation() {
+        // all samples inside [1024, 2048): the only error source left
+        // is within-bucket interpolation, bounded by the bucket width
+        let samples: Vec<u64> = (0..100).map(|i| 1024 + 10 * i).collect();
+        let h = hist_of(&samples);
+        for p in [50.0, 90.0, 99.0] {
+            let est = h.percentile_us(p);
+            let exact = oracle(&mut samples.clone(), p);
+            assert!((1024..2048).contains(&est), "p{p} estimate {est} left the bucket");
+            assert!(
+                est.abs_diff(exact) < 1024,
+                "p{p}: |{est} - {exact}| must stay under one bucket width"
+            );
+        }
+    }
+
+    #[test]
+    fn bucket_counts_expose_one_windowable_copy() {
+        let h = LatencyHist::new();
+        h.record_us(1); // bucket 0
+        h.record_us(3); // bucket 1
+        h.record_us(3000); // bucket 11
+        let before = h.bucket_counts();
+        assert_eq!((before[0], before[1], before[11]), (1, 1, 1));
+        assert_eq!(before.iter().sum::<u64>(), 3);
+        // the governor's windowed view: diff two copies and feed the
+        // delta to the shared estimator
+        h.record_us(3000);
+        let after = h.bucket_counts();
+        let window: [u64; BUCKETS] = std::array::from_fn(|i| after[i] - before[i]);
+        assert_eq!(percentile_from(&window, 50.0), 3072);
     }
 }

@@ -18,7 +18,8 @@ use std::time::{Duration, Instant};
 
 use crate::sync::{AtomicU64, Mutex, Ordering};
 
-use super::hist::LatencyHist;
+use super::hist::{LatencyHist, BUCKETS};
+use super::timeline::Timeline;
 use super::trace::{FlightRecorder, DEFAULT_TRACE_CAPACITY};
 use crate::protocol::stats::{StatsSnapshot, TenantStats, SNAPSHOT_VERSION};
 
@@ -33,6 +34,11 @@ pub struct TenantMetrics {
     latency: LatencyHist,
     /// Modelled energy booked to this tenant's answered rows, fJ.
     pub energy_fj: AtomicU64,
+    /// Die-busy microseconds attributed to this tenant's rows by the
+    /// timeline profiler (DESIGN.md §19): a batch's compute span split
+    /// across its rows, so tenant shares sum to (at most) fleet busy
+    /// time and `busy_us / sum(busy_us)` is the utilization share.
+    pub busy_us: AtomicU64,
     /// Mean chip-in-the-loop train score across dies (classification:
     /// error rate; regression: RMSE), stored as f64 bits.
     score_bits: AtomicU64,
@@ -56,6 +62,18 @@ impl TenantMetrics {
     /// Book modelled conversion energy (femtojoules) to this tenant.
     pub fn record_energy(&self, fj: u64) {
         self.energy_fj.fetch_add(fj, Ordering::Relaxed);
+    }
+
+    /// Attribute die-busy microseconds to this tenant (the worker
+    /// splits each batch's compute span across its rows).
+    pub fn record_busy_us(&self, us: u64) {
+        self.busy_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// One windowable copy of this tenant's latency buckets (the
+    /// governor diffs two copies for its sliding-window p99).
+    pub fn latency_buckets(&self) -> [u64; BUCKETS] {
+        self.latency.bucket_counts()
     }
 
     pub fn mean_latency_us(&self) -> f64 {
@@ -116,6 +134,10 @@ pub struct Metrics {
     /// Flight recorder: the last N completed request traces,
     /// dumpable via the `TRACE` verb (DESIGN.md §16).
     pub trace: FlightRecorder,
+    /// Fleet timeline profiler (DESIGN.md §19): per-die lifecycle
+    /// segment stamps, folded into exact occupancy fractions and
+    /// exportable as Chrome trace-event JSON via the `TIMELINE` verb.
+    pub timeline: Timeline,
     // fleet-health counters (DESIGN.md §12)
     /// Probe passes executed across the fleet.
     pub probes: AtomicU64,
@@ -140,6 +162,10 @@ pub struct Metrics {
     /// Cumulative energy saved vs the boot operating point, fJ —
     /// booked per conversion at the exact integer price difference.
     pub gov_fj_saved: AtomicU64,
+    /// Governor ticks that observed a windowed-p99 latency SLO breach
+    /// (fleet-wide or any tenant) — each one pins the fleet hot and
+    /// blocks descent for that tick (DESIGN.md §19).
+    pub gov_slo_breaches: AtomicU64,
     /// Per-die operating point (counter bits) as last published by the
     /// governor; empty while the governor has never run.
     gov_points: Mutex<Vec<u32>>,
@@ -165,6 +191,14 @@ impl Metrics {
     // (model-checked in tests/model_checker.rs), not by Acquire/Release
     // pairs.
     pub fn new() -> Self {
+        Metrics::with_trace_cap(DEFAULT_TRACE_CAPACITY)
+    }
+
+    /// Metrics with a custom flight-recorder capacity
+    /// (`SystemConfig::trace_cap` / `velm serve --trace-cap`). Both
+    /// rings — recorder and timeline — allocate here, once, and never
+    /// again (pinned in coordinator::trace tests).
+    pub fn with_trace_cap(trace_cap: usize) -> Self {
         Metrics {
             started: Instant::now(),
             requests: AtomicU64::new(0),
@@ -181,7 +215,8 @@ impl Metrics {
             queue: LatencyHist::new(),
             batch_wait: LatencyHist::new(),
             compute: LatencyHist::new(),
-            trace: FlightRecorder::new(DEFAULT_TRACE_CAPACITY),
+            trace: FlightRecorder::new(trace_cap),
+            timeline: Timeline::new(),
             probes: AtomicU64::new(0),
             renorms: AtomicU64::new(0),
             refits: AtomicU64::new(0),
@@ -192,6 +227,7 @@ impl Metrics {
             gov_lowers: AtomicU64::new(0),
             gov_rejected: AtomicU64::new(0),
             gov_fj_saved: AtomicU64::new(0),
+            gov_slo_breaches: AtomicU64::new(0),
             gov_points: Mutex::new(Vec::new()),
             tenants: Mutex::new(BTreeMap::new()),
         }
@@ -201,6 +237,18 @@ impl Metrics {
     /// served on a cheaper governor rung.
     pub fn record_gov_fj_saved(&self, fj: u64) {
         self.gov_fj_saved.fetch_add(fj, Ordering::Relaxed);
+    }
+
+    /// Count one governor tick whose windowed p99 breached its latency
+    /// SLO (fleet-wide or any tenant's).
+    pub fn mark_slo_breach(&self) {
+        self.gov_slo_breaches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One windowable copy of the fleet end-to-end latency buckets
+    /// (the governor diffs two copies for its sliding-window p99).
+    pub fn latency_buckets(&self) -> [u64; BUCKETS] {
+        self.latency.bucket_counts()
     }
 
     /// Publish the boot operating points before the first governor
@@ -347,6 +395,7 @@ impl Metrics {
                     requests: t_req,
                     responses: t_resp.min(t_req),
                     energy_fj: m.energy_fj.load(Ordering::Relaxed),
+                    busy_us: m.busy_us.load(Ordering::Relaxed),
                     train_score: m.score(),
                     latency: m.latency.snapshot(),
                 }
@@ -383,6 +432,8 @@ impl Metrics {
                 points: self.gov_points.lock().unwrap().clone(),
             },
             tenants,
+            occupancy: self.timeline.occupancy(),
+            slo_breaches: self.gov_slo_breaches.load(Ordering::Relaxed),
         }
     }
 
@@ -416,7 +467,7 @@ impl Metrics {
             "requests={} submissions={} responses={} batches={} (pjrt={}, sim={}, mean size {:.1}) \
              conversions={} latency mean={:.0}us p50~{}us p99~{}us \
              fleet probes={} renorms={} refits={} quarantines={} promotions={} \
-             governor ticks={} raises={} lowers={} rejected={} fj_saved={} \
+             governor ticks={} raises={} lowers={} rejected={} fj_saved={} slo_breaches={} \
              stages queue p50~{}us p99~{}us batch p50~{}us p99~{}us compute p50~{}us p99~{}us \
              energy_fj={} pJ/MAC={:.3} uptime={:.1}s req/s={:.1} conv/s={:.1}{tenants}",
             s.requests,
@@ -440,6 +491,7 @@ impl Metrics {
             s.governor.lowers,
             s.governor.rejected,
             s.governor.fj_saved,
+            s.slo_breaches,
             s.queue.p50_us,
             s.queue.p99_us,
             s.batch_wait.p50_us,
@@ -580,6 +632,32 @@ mod tests {
         let r = m.report();
         assert!(r.contains("governor ticks=2"), "{r}");
         assert!(r.contains("fj_saved=750"), "{r}");
+    }
+
+    #[test]
+    fn trace_cap_timeline_and_slo_counters_reach_the_snapshot() {
+        use crate::protocol::stats::Segment;
+        let m = Metrics::with_trace_cap(4);
+        assert_eq!(m.trace.capacity(), 4, "--trace-cap sizes the recorder");
+        // the timeline rides the same Metrics instance the workers get
+        let die = m.timeline.register(0);
+        die.stamp(Segment::Convert, 0, 750, Some(1));
+        die.stamp(Segment::Idle, 750, 1000, None);
+        m.mark_slo_breach();
+        let t = m.register_tenant("digits");
+        t.record_busy_us(250);
+        let s = m.snapshot();
+        assert_eq!(s.slo_breaches, 1);
+        assert!(m.report().contains("slo_breaches=1"), "{}", m.report());
+        assert_eq!(s.occupancy.len(), 1);
+        assert_eq!(s.occupancy[0].total_us(), 1000);
+        let sum: f64 = s.occupancy[0].fractions().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "fractions sum to {sum}");
+        assert_eq!(s.tenants[0].busy_us, 250);
+        // fleet latency buckets window like the tenant ones
+        m.record_response(Duration::from_micros(3000)); // bucket 11
+        assert_eq!(m.latency_buckets()[11], 1);
+        assert_eq!(t.latency_buckets().iter().sum::<u64>(), 0);
     }
 
     #[test]

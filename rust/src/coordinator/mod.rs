@@ -27,6 +27,7 @@ pub mod metrics;
 pub mod request;
 pub mod router;
 pub mod server;
+pub mod timeline;
 pub mod trace;
 pub mod worker;
 pub mod workload;
@@ -56,6 +57,7 @@ pub use metrics::Metrics;
 pub use request::{Backend, ClassifyRequest, ClassifyResponse, TenantTag};
 pub use router::Router;
 
+use hist::{percentile_from, BUCKETS};
 use request::{ControlMsg, WorkerMsg};
 
 /// Mutable half of the governor loop: the actuator (ladder + per-die
@@ -66,6 +68,12 @@ struct GovernorInner {
     last_requests: u64,
     /// Queue-wait histogram `(sum_us, count)` at the previous tick.
     last_queue: (u64, u64),
+    /// Fleet end-to-end latency buckets at the previous tick — the
+    /// cursor the sliding-window p99 SLO check diffs against
+    /// (DESIGN.md §19).
+    last_latency: [u64; BUCKETS],
+    /// Per-tenant latency-bucket cursors, keyed by tenant name.
+    last_tenant_latency: std::collections::BTreeMap<String, [u64; BUCKETS]>,
 }
 
 /// Everything the governor control loop reads or drives (DESIGN.md
@@ -78,6 +86,9 @@ struct GovernorCtx {
     /// Per-tenant accuracy SLO (`TenantSpec::slo_max_err`), maintained
     /// by register/unregister; `None` falls back to `cfg.err_slo`.
     slos: Mutex<std::collections::BTreeMap<String, Option<f64>>>,
+    /// Per-tenant latency SLO (`TenantSpec::slo_p99_us`), maintained by
+    /// register/unregister; `None` falls back to `cfg.p99_slo_us`.
+    p99_slos: Mutex<std::collections::BTreeMap<String, Option<u64>>>,
     metrics: Arc<Metrics>,
     /// Worker traffic channels the retune callback applies moves on.
     senders: Vec<mpsc::Sender<WorkerMsg>>,
@@ -110,6 +121,37 @@ fn governor_tick_impl(g: &GovernorCtx) {
             t.train_score <= thr
         })
     };
+    // sliding-window p99 (DESIGN.md §19): diff the log2 latency
+    // buckets against the previous tick's copy and run the shared
+    // estimator over the delta — the p99 of exactly the rows answered
+    // since the last tick, fleet-wide and per tenant. An SLO of 0
+    // disables the check.
+    let fleet_buckets = g.metrics.latency_buckets();
+    let fleet_window: [u64; BUCKETS] =
+        std::array::from_fn(|i| fleet_buckets[i].saturating_sub(inner.last_latency[i]));
+    inner.last_latency = fleet_buckets;
+    let mut slo_breach =
+        g.cfg.p99_slo_us > 0 && percentile_from(&fleet_window, 99.0) > g.cfg.p99_slo_us;
+    {
+        let slos = g.p99_slos.lock().unwrap();
+        let mut cursors = std::mem::take(&mut inner.last_tenant_latency);
+        cursors.retain(|name, _| slos.contains_key(name));
+        for (name, slo) in slos.iter() {
+            let Some(handle) = g.metrics.tenant_handle(name) else { continue };
+            let now = handle.latency_buckets();
+            let prev = cursors.insert(name.clone(), now).unwrap_or([0; BUCKETS]);
+            let window: [u64; BUCKETS] =
+                std::array::from_fn(|i| now[i].saturating_sub(prev[i]));
+            let slo_us = slo.unwrap_or(g.cfg.p99_slo_us);
+            if slo_us > 0 && percentile_from(&window, 99.0) > slo_us {
+                slo_breach = true;
+            }
+        }
+        inner.last_tenant_latency = cursors;
+    }
+    if slo_breach {
+        g.metrics.mark_slo_breach();
+    }
     let health = g.health.snapshot();
     let signals: Vec<TickSignals> = (0..g.senders.len())
         .map(|i| TickSignals {
@@ -118,6 +160,7 @@ fn governor_tick_impl(g: &GovernorCtx) {
             outstanding: g.outstanding.load(i),
             mean_queue_us,
             accuracy_ok,
+            slo_breach,
         })
         .collect();
     let senders = &g.senders;
@@ -238,7 +281,7 @@ impl Coordinator {
         lambda: f64,
         beta_bits: u32,
     ) -> Result<Coordinator> {
-        let metrics = Arc::new(Metrics::new());
+        let metrics = Arc::new(Metrics::with_trace_cap(sys.trace_cap));
         let n_total = sys.n_chips + sys.standby_chips;
         anyhow::ensure!(
             sys.die_geoms.is_empty() || sys.die_geoms.len() == n_total,
@@ -316,6 +359,7 @@ impl Coordinator {
                 tenants: std::collections::BTreeMap::new(),
                 artifact_dir: worker::usable_artifact_dir(sys),
                 rx,
+                stamper: metrics.timeline.stamper(i as u32),
                 metrics: Arc::clone(&metrics),
                 outstanding: router.outstanding.clone(),
                 max_batch: sys.max_batch,
@@ -393,8 +437,11 @@ impl Coordinator {
                     actuator,
                     last_requests: 0,
                     last_queue: (0, 0),
+                    last_latency: [0; BUCKETS],
+                    last_tenant_latency: std::collections::BTreeMap::new(),
                 }),
                 slos: Mutex::new(std::collections::BTreeMap::new()),
+                p99_slos: Mutex::new(std::collections::BTreeMap::new()),
                 metrics: Arc::clone(&metrics),
                 senders: senders.clone(),
                 health: router.health.clone(),
@@ -499,6 +546,9 @@ impl Coordinator {
             Request::Trace { last } => Response::Trace(self.metrics.trace.dump(last)),
             Request::Snapshot => Response::Snapshot(self.snapshot()),
             Request::Governor => Response::Governor(self.governor_status()),
+            Request::Timeline { last } => {
+                Response::Timeline(self.metrics.timeline.recent(last))
+            }
         }
     }
 
@@ -809,6 +859,7 @@ impl Coordinator {
         tenant_metrics.set_score(mean);
         if let Some(g) = &self.governor {
             g.slos.lock().unwrap().insert(spec.name.clone(), spec.slo_max_err);
+            g.p99_slos.lock().unwrap().insert(spec.name.clone(), spec.slo_p99_us);
         }
         self.registry.lock().unwrap().insert(TenantInfo {
             tag: Arc::from(spec.name.as_str()),
@@ -832,6 +883,7 @@ impl Coordinator {
         self.metrics.drop_tenant(name);
         if let Some(g) = &self.governor {
             g.slos.lock().unwrap().remove(name);
+            g.p99_slos.lock().unwrap().remove(name);
         }
         Ok(())
     }
@@ -1024,6 +1076,7 @@ mod tests {
             virtual_l: None,
             die_geoms: Vec::new(),
             read_timeout: None,
+            trace_cap: 512,
             fleet: Default::default(),
             governor: Default::default(),
         };
@@ -1164,6 +1217,19 @@ mod tests {
                 assert!(s.energy_fj > 0, "served conversions must be priced");
             }
             other => panic!("snapshot dispatched to {other:?}"),
+        }
+        // the timeline profiler saw the request pass through the die:
+        // events come back oldest first, ready for Chrome export
+        match coord.handle(Request::Timeline { last: 64 }) {
+            Response::Timeline(events) => {
+                assert!(!events.is_empty(), "the classify above must be profiled");
+                for pair in events.windows(2) {
+                    assert!(pair[0].start_us <= pair[1].start_us, "oldest first");
+                }
+                let json = timeline::chrome_trace_json(&events);
+                timeline::validate_chrome_trace(&json).unwrap();
+            }
+            other => panic!("timeline dispatched to {other:?}"),
         }
         coord.shutdown();
     }
@@ -1492,6 +1558,112 @@ mod tests {
         let g = coord.snapshot().governor;
         assert_eq!(g.points, vec![8, 10], "standby die must hold the boot point");
         assert!(g.rejected >= 1, "lifecycle deferral must be counted");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn latency_slo_breach_raises_and_blocks_descent_at_idle() {
+        let (mut sys, chip, xs, ys) = tiny_system();
+        sys.n_chips = 1;
+        sys.governor = governor_cfg(&[6, 8]); // ladder [6, 8, boot=10]
+        sys.governor.p99_slo_us = 1_000; // 1 ms fleet p99 SLO
+        let coord = Coordinator::start(&sys, &chip, &xs, &ys, 1e-2, 10).unwrap();
+        // a quiet, healthy fleet descends normally
+        coord.governor_tick();
+        assert_eq!(coord.snapshot().governor.points, vec![8]);
+        // late rows land in the latency histogram with NO new requests:
+        // requests_delta stays 0 (idle by every traffic signal), but the
+        // windowed p99 over these rows breaches the 1 ms SLO
+        for _ in 0..20 {
+            coord.metrics.record_response(std::time::Duration::from_millis(50));
+        }
+        coord.governor_tick();
+        let snap = coord.snapshot();
+        assert_eq!(
+            snap.governor.points,
+            vec![10],
+            "a p99 breach must jump the die back to boot, traffic or not"
+        );
+        assert!(snap.slo_breaches >= 1, "breach ticks are counted");
+        // the window slides: the next tick sees no new late rows, the
+        // breach clears, and the idle fleet is free to descend again
+        coord.governor_tick();
+        assert_eq!(coord.snapshot().governor.points, vec![8]);
+        // rows served on the cheap rung still book exact fJ savings
+        let resp = coord.classify(xs[0].clone()).unwrap();
+        assert!(resp.label == 1 || resp.label == -1);
+        assert!(coord.metrics.gov_fj_saved.load(Ordering::Relaxed) > 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn tenant_latency_slo_breach_blocks_the_descent() {
+        let (mut sys, chip, xs, ys) = tiny_system();
+        sys.n_chips = 1;
+        sys.governor = governor_cfg(&[8]);
+        let coord = Coordinator::start(&sys, &chip, &xs, &ys, 1e-2, 10).unwrap();
+        let reg_y = regression_targets(&xs);
+        // a 1 us tenant p99 SLO no real serving latency can hold
+        let spec = TenantSpec::regression("slope", xs.clone(), &reg_y, 1e-3, 12)
+            .unwrap()
+            .with_slo(None, Some(1));
+        coord.register_tenant(spec).unwrap();
+        // no traffic, no late rows yet: the idle fleet descends
+        coord.governor_tick();
+        assert_eq!(coord.snapshot().governor.points, vec![8]);
+        // late tenant rows land in ITS histogram with no fleet traffic:
+        // only the per-tenant windowed p99 can see this breach
+        let h = coord.metrics.tenant_handle("slope").unwrap();
+        for _ in 0..5 {
+            h.record_response(std::time::Duration::from_millis(5));
+        }
+        coord.governor_tick();
+        assert_eq!(
+            coord.snapshot().governor.points,
+            vec![10],
+            "the tenant's p99 breach must pin the die back at boot"
+        );
+        assert!(coord.snapshot().slo_breaches >= 1);
+        // dropping the tenant (its cursor goes with it) frees the descent
+        coord.unregister_tenant("slope").unwrap();
+        coord.governor_tick();
+        assert_eq!(coord.snapshot().governor.points, vec![8]);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn served_fleet_occupancy_fractions_sum_to_one() {
+        let (sys, chip, xs, ys) = tiny_system();
+        let coord = Coordinator::start(&sys, &chip, &xs, &ys, 1e-2, 10).unwrap();
+        let reg_y = regression_targets(&xs);
+        coord
+            .register_tenant(
+                TenantSpec::regression("slope", xs.clone(), &reg_y, 1e-3, 12).unwrap(),
+            )
+            .unwrap();
+        // a mixed multi-tenant batch across both dies
+        let rows: Vec<PredictRow> = (0..24)
+            .map(|i| PredictRow {
+                tenant: if i % 2 == 0 { None } else { Some("slope".into()) },
+                features: xs[i].clone(),
+            })
+            .collect();
+        coord.classify_batch(&rows).unwrap();
+        let snap = coord.snapshot();
+        assert!(!snap.occupancy.is_empty(), "served dies must report occupancy");
+        for occ in &snap.occupancy {
+            assert!(occ.total_us() > 0, "die {} profiled nothing", occ.die);
+            let sum: f64 = occ.fractions().iter().sum();
+            assert!(
+                (sum - 1.0).abs() < 1e-9,
+                "die {} fractions sum to {sum}",
+                occ.die
+            );
+        }
+        // tenant busy shares: both the default head and the tenant
+        // worked, and the tenant's share is visible
+        let slope = snap.tenants.iter().find(|t| t.name == "slope").unwrap();
+        assert!(slope.busy_us > 0, "tenant rows must book busy time");
         coord.shutdown();
     }
 

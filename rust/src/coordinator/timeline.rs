@@ -1,0 +1,639 @@
+//! Fleet timeline profiler (DESIGN.md §19): where every die's wall
+//! clock goes, as exact per-segment microsecond ledgers plus a
+//! Chrome-trace-exportable event stream.
+//!
+//! Each worker owns a [`Stamper`] over its die's [`DieTimeline`]. The
+//! stamper closes segments *contiguously* — every `mark` attributes
+//! the interval since the previous mark to one [`Segment`] — so the
+//! accumulated per-segment times tile the die's profiled wall clock
+//! with no gaps or overlaps, and occupancy fractions sum to 1.0 by
+//! construction.
+//!
+//! Hot-path cost mirrors the flight recorder (DESIGN.md §16): one
+//! relaxed `fetch_add` per segment counter, one relaxed `fetch_add` to
+//! claim a ring slot plus one *uncontended* `try_lock` to write the
+//! event. A worker never blocks on the profiler; a contended slot
+//! drops the event (the occupancy ledger still counts it).
+//!
+//! The raw event stream exports as Chrome trace-event JSON
+//! ([`chrome_trace_json`]): one process per die, one thread track per
+//! segment, flow events linking a request's path batch-wait ->
+//! convert -> transfer. [`validate_chrome_trace`] is the schema check
+//! `velm client timeline --check` and CI run over the export.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::sync::{AtomicU64, Mutex, Ordering, TryLockError};
+
+use crate::protocol::stats::{DieOccupancy, Segment, TimelineEvent, SEGMENTS};
+use crate::util::json::Value;
+
+/// Per-die event ring capacity: enough for several seconds of serving
+/// at typical segment rates without measurable memory.
+pub const DEFAULT_TIMELINE_CAPACITY: usize = 2048;
+
+/// One die's timeline: the exact per-segment microsecond ledger plus
+/// a fixed ring of the most recent stamped intervals.
+pub struct DieTimeline {
+    die: u32,
+    /// Shared profiling epoch — every die measures on one time axis.
+    epoch: Instant,
+    /// Accumulated microseconds per segment, indexed by
+    /// [`Segment::code`].
+    seg_us: [AtomicU64; SEGMENTS],
+    /// Monotone claim counter; slot = claim % capacity.
+    head: AtomicU64,
+    slots: Vec<Mutex<Option<TimelineEvent>>>,
+}
+
+impl DieTimeline {
+    fn new(die: u32, epoch: Instant, capacity: usize) -> Self {
+        DieTimeline {
+            die,
+            epoch,
+            seg_us: std::array::from_fn(|_| AtomicU64::new(0)),
+            head: AtomicU64::new(0),
+            slots: (0..capacity.max(1)).map(|_| Mutex::new(None)).collect(),
+        }
+    }
+
+    /// Die (worker index) this timeline belongs to.
+    pub fn die(&self) -> u32 {
+        self.die
+    }
+
+    /// Microseconds since the profiling epoch.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Microseconds from the profiling epoch to `t` (saturating to 0
+    /// for instants before it) — converts caller-captured stamps like
+    /// the batcher's `collected` onto the timeline's axis.
+    pub fn us_of(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    /// Record one closed interval. Zero-width intervals are dropped:
+    /// they carry no occupancy and would only churn the ring.
+    pub fn stamp(&self, seg: Segment, start_us: u64, end_us: u64, req_id: Option<u64>) {
+        if end_us <= start_us {
+            return;
+        }
+        // relaxed-ok: each segment counter is an independent monotone
+        // microsecond ledger; the occupancy snapshot reads one copy
+        // and tolerates counters that lag each other by a segment.
+        self.seg_us[seg.code() as usize].fetch_add(end_us - start_us, Ordering::Relaxed);
+        // relaxed-ok: `head` only allocates slot numbers; the event
+        // itself is published by the slot mutex (acquire/release on
+        // lock/unlock), exactly like the flight recorder's ring.
+        let claim = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = (claim % self.slots.len() as u64) as usize;
+        let event = TimelineEvent { die: self.die, seg, start_us, end_us, req_id };
+        match self.slots[slot].try_lock() {
+            Ok(mut guard) => *guard = Some(event),
+            // A previous writer panicked mid-store: the slot still
+            // holds a structurally sound entry; overwrite clears the
+            // poison.
+            Err(TryLockError::Poisoned(poisoned)) => *poisoned.into_inner() = Some(event),
+            // Contended slot (a dump holds it): drop the event rather
+            // than stall the worker. The seg_us ledger already counted
+            // the interval, so occupancy stays exact.
+            Err(TryLockError::WouldBlock) => {}
+        }
+    }
+
+    /// This die's occupancy ledger (one relaxed copy per segment).
+    pub fn occupancy(&self) -> DieOccupancy {
+        DieOccupancy {
+            die: self.die,
+            // relaxed-ok: monotone counters read as a diagnostic
+            // snapshot; a read racing a stamp may miss the newest
+            // interval, which the export tolerates.
+            seg_us: std::array::from_fn(|i| self.seg_us[i].load(Ordering::Relaxed)),
+        }
+    }
+
+    /// Every event currently held in the ring, in no particular
+    /// order. Entries a writer is lapping mid-dump may surface as
+    /// their older occupant or be skipped.
+    fn dump(&self) -> Vec<TimelineEvent> {
+        let mut out = Vec::with_capacity(self.slots.len());
+        for slot in &self.slots {
+            let guard = match slot.lock() {
+                Ok(guard) => guard,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            if let Some(event) = guard.as_ref() {
+                out.push(event.clone());
+            }
+        }
+        out
+    }
+}
+
+impl std::fmt::Debug for DieTimeline {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DieTimeline")
+            .field("die", &self.die)
+            .field("capacity", &self.slots.len())
+            .finish()
+    }
+}
+
+/// The fleet's timeline: lazily-registered per-die ledgers sharing one
+/// profiling epoch. Lives on `Metrics` so workers, the dispatcher and
+/// the stats snapshot all see the same instance.
+pub struct Timeline {
+    epoch: Instant,
+    capacity: usize,
+    dies: Mutex<Vec<Arc<DieTimeline>>>,
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Timeline::with_capacity(DEFAULT_TIMELINE_CAPACITY)
+    }
+
+    /// A timeline whose per-die rings hold `capacity.max(1)` events.
+    pub fn with_capacity(capacity: usize) -> Self {
+        Timeline {
+            epoch: Instant::now(),
+            capacity: capacity.max(1),
+            dies: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Microseconds since the profiling epoch.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// The ledger for `die`, created on first use (idempotent — a
+    /// re-registration returns the existing ledger, so a restarted
+    /// worker keeps its die's history).
+    pub fn register(&self, die: u32) -> Arc<DieTimeline> {
+        let mut dies = match self.dies.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        if let Some(existing) = dies.iter().find(|t| t.die == die) {
+            return Arc::clone(existing);
+        }
+        let t = Arc::new(DieTimeline::new(die, self.epoch, self.capacity));
+        dies.push(Arc::clone(&t));
+        t
+    }
+
+    /// A contiguous-interval stamper for `die` (registers the die).
+    pub fn stamper(&self, die: u32) -> Stamper {
+        let tl = self.register(die);
+        let cursor_us = tl.now_us();
+        Stamper { tl, cursor_us }
+    }
+
+    /// Per-die occupancy ledgers, sorted by die id.
+    pub fn occupancy(&self) -> Vec<DieOccupancy> {
+        let dies = match self.dies.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        let mut out: Vec<DieOccupancy> = dies.iter().map(|t| t.occupancy()).collect();
+        out.sort_by_key(|o| o.die);
+        out
+    }
+
+    /// The newest `last` events across the fleet, oldest first
+    /// (chronological by start, ties broken by end then die) — the
+    /// exact shape [`chrome_trace_json`] wants.
+    pub fn recent(&self, last: usize) -> Vec<TimelineEvent> {
+        let dies: Vec<Arc<DieTimeline>> = {
+            let guard = match self.dies.lock() {
+                Ok(guard) => guard,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            guard.clone()
+        };
+        let mut events: Vec<TimelineEvent> = dies.iter().flat_map(|t| t.dump()).collect();
+        events.sort_by_key(|e| (e.start_us, e.end_us, e.die));
+        if events.len() > last {
+            events.drain(..events.len() - last);
+        }
+        events
+    }
+}
+
+impl Default for Timeline {
+    fn default() -> Self {
+        Timeline::new()
+    }
+}
+
+impl std::fmt::Debug for Timeline {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let dies = match self.dies.lock() {
+            Ok(guard) => guard.len(),
+            Err(poisoned) => poisoned.into_inner().len(),
+        };
+        f.debug_struct("Timeline")
+            .field("capacity", &self.capacity)
+            .field("dies", &dies)
+            .finish()
+    }
+}
+
+/// A worker's segment clock: every [`Stamper::mark`] closes the
+/// interval since the previous mark and attributes it to one segment,
+/// so consecutive marks tile the die's wall clock exactly.
+#[derive(Debug)]
+pub struct Stamper {
+    tl: Arc<DieTimeline>,
+    cursor_us: u64,
+}
+
+impl Stamper {
+    /// Attribute the interval since the previous mark to `seg`, with
+    /// `req_id` carrying the first request id worked on (for Chrome
+    /// flow linkage). Returns the interval's width in microseconds.
+    pub fn mark(&mut self, seg: Segment, req_id: Option<u64>) -> u64 {
+        let now_us = self.tl.now_us().max(self.cursor_us);
+        self.tl.stamp(seg, self.cursor_us, now_us, req_id);
+        let width = now_us - self.cursor_us;
+        self.cursor_us = now_us;
+        width
+    }
+
+    /// Attribute the interval from the previous mark up to `at` — an
+    /// instant the caller captured, e.g. the batcher's `collected`
+    /// stamp — to `seg`. `at` is clamped into [previous mark, now] so
+    /// marks stay contiguous and monotone even when the stamp predates
+    /// the cursor (a carried row from an earlier window). Returns the
+    /// interval's width in microseconds.
+    pub fn mark_until(&mut self, seg: Segment, at: Instant, req_id: Option<u64>) -> u64 {
+        let now_us = self.tl.now_us().max(self.cursor_us);
+        let at_us = self.tl.us_of(at).clamp(self.cursor_us, now_us);
+        self.tl.stamp(seg, self.cursor_us, at_us, req_id);
+        let width = at_us - self.cursor_us;
+        self.cursor_us = at_us;
+        width
+    }
+
+    /// The underlying die ledger.
+    pub fn die_timeline(&self) -> &Arc<DieTimeline> {
+        &self.tl
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace-event export + validator
+// ---------------------------------------------------------------------------
+
+/// Render events as Chrome trace-event JSON (a bare event array, the
+/// format Perfetto / `chrome://tracing` load directly): one process
+/// per die (`pid` = die id), one thread track per segment (`tid` =
+/// segment code), duration `B`/`E` pairs per interval, and flow events
+/// (`s` on batch-wait, `f` with `bp:"e"` on convert / rotation-pass /
+/// transfer) linking a request's path across segments via its id.
+///
+/// Events should be chronological by start (what [`Timeline::recent`]
+/// returns); the export sorts defensively so hand-built inputs work
+/// too.
+pub fn chrome_trace_json(events: &[TimelineEvent]) -> String {
+    let mut events: Vec<&TimelineEvent> = events.iter().collect();
+    events.sort_by_key(|e| (e.start_us, e.end_us, e.die));
+
+    let num = |n: u64| Value::Num(n as f64);
+    let s = |t: &str| Value::Str(t.to_string());
+    let mut recs: Vec<(u64, Value)> = Vec::new();
+
+    // Metadata at ts 0: name each die's process and each segment's
+    // thread track so Perfetto labels the UI.
+    let mut dies: Vec<u32> = events.iter().map(|e| e.die).collect();
+    dies.sort_unstable();
+    dies.dedup();
+    for &die in &dies {
+        recs.push((
+            0,
+            Value::Obj(vec![
+                ("ph".into(), s("M")),
+                ("name".into(), s("process_name")),
+                ("ts".into(), num(0)),
+                ("pid".into(), num(die as u64)),
+                ("tid".into(), num(0)),
+                (
+                    "args".into(),
+                    Value::Obj(vec![("name".into(), Value::Str(format!("die {die}")))]),
+                ),
+            ]),
+        ));
+        for seg in Segment::ALL {
+            recs.push((
+                0,
+                Value::Obj(vec![
+                    ("ph".into(), s("M")),
+                    ("name".into(), s("thread_name")),
+                    ("ts".into(), num(0)),
+                    ("pid".into(), num(die as u64)),
+                    ("tid".into(), num(seg.code() as u64)),
+                    (
+                        "args".into(),
+                        Value::Obj(vec![("name".into(), s(seg.name()))]),
+                    ),
+                ]),
+            ));
+        }
+    }
+
+    for e in &events {
+        let base = |ph: &str, ts: u64| {
+            vec![
+                ("ph".into(), s(ph)),
+                ("name".into(), s(e.seg.name())),
+                ("cat".into(), s("segment")),
+                ("ts".into(), num(ts)),
+                ("pid".into(), num(e.die as u64)),
+                ("tid".into(), num(e.seg.code() as u64)),
+            ]
+        };
+        recs.push((e.start_us, Value::Obj(base("B", e.start_us))));
+        // flow linkage: a request enters the timeline at batch-wait
+        // ("s") and is bound into each serving segment ("f", bp:"e")
+        if let Some(id) = e.req_id {
+            let flow_ph = match e.seg {
+                Segment::BatchWait => Some("s"),
+                Segment::Convert | Segment::RotationPass | Segment::Transfer => Some("f"),
+                _ => None,
+            };
+            if let Some(ph) = flow_ph {
+                let mut flow = vec![
+                    ("ph".into(), s(ph)),
+                    ("name".into(), s("req")),
+                    ("cat".into(), s("flow")),
+                    ("ts".into(), num(e.start_us)),
+                    ("pid".into(), num(e.die as u64)),
+                    ("tid".into(), num(e.seg.code() as u64)),
+                    ("id".into(), num(id)),
+                ];
+                if ph == "f" {
+                    flow.push(("bp".into(), s("e")));
+                }
+                recs.push((e.start_us, Value::Obj(flow)));
+            }
+        }
+        recs.push((e.end_us, Value::Obj(base("E", e.end_us))));
+    }
+
+    // Stable sort by timestamp: for equal stamps the push order above
+    // survives, so a segment's E precedes the next segment's B on the
+    // same track and zero-width pairs stay B-before-E.
+    recs.sort_by_key(|&(ts, _)| ts);
+    let mut out = String::new();
+    Value::Arr(recs.into_iter().map(|(_, v)| v).collect()).write(&mut out);
+    out
+}
+
+/// Schema-validate a Chrome trace-event JSON document (the `--check`
+/// path in `velm client timeline` and CI): the document must be a JSON
+/// array whose every record carries `ph` (string), `ts`, `pid` and
+/// `tid` (numbers), timestamps must be monotone non-decreasing, and
+/// every `(pid, tid)` track's `B`/`E` events must nest — never more
+/// ends than begins, and no begin left open at the end. Returns the
+/// number of records checked.
+pub fn validate_chrome_trace(text: &str) -> Result<usize, String> {
+    let doc = Value::parse(text).map_err(|e| format!("not valid JSON: {e}"))?;
+    let recs = doc
+        .as_arr()
+        .ok_or("trace document is not a JSON array of events")?;
+    let mut last_ts = f64::NEG_INFINITY;
+    let mut depth: BTreeMap<(u64, u64), u64> = BTreeMap::new();
+    for (i, rec) in recs.iter().enumerate() {
+        let ph = rec
+            .get("ph")
+            .and_then(Value::as_str)
+            .ok_or_else(|| format!("record {i}: missing string 'ph'"))?;
+        let ts = rec
+            .get("ts")
+            .and_then(Value::as_f64)
+            .ok_or_else(|| format!("record {i}: missing numeric 'ts'"))?;
+        let pid = rec
+            .get("pid")
+            .and_then(Value::as_u64)
+            .ok_or_else(|| format!("record {i}: missing numeric 'pid'"))?;
+        let tid = rec
+            .get("tid")
+            .and_then(Value::as_u64)
+            .ok_or_else(|| format!("record {i}: missing numeric 'tid'"))?;
+        if ts < last_ts {
+            return Err(format!(
+                "record {i}: timestamp {ts} goes backwards (previous {last_ts})"
+            ));
+        }
+        last_ts = ts;
+        match ph {
+            "B" => *depth.entry((pid, tid)).or_insert(0) += 1,
+            "E" => {
+                let d = depth.entry((pid, tid)).or_insert(0);
+                if *d == 0 {
+                    return Err(format!(
+                        "record {i}: 'E' without a matching 'B' on track pid={pid} tid={tid}"
+                    ));
+                }
+                *d -= 1;
+            }
+            _ => {}
+        }
+    }
+    for (&(pid, tid), &d) in &depth {
+        if d != 0 {
+            return Err(format!(
+                "{d} unclosed 'B' event(s) on track pid={pid} tid={tid}"
+            ));
+        }
+    }
+    Ok(recs.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn event(die: u32, seg: Segment, start_us: u64, end_us: u64, req: Option<u64>) -> TimelineEvent {
+        TimelineEvent { die, seg, start_us, end_us, req_id: req }
+    }
+
+    #[test]
+    fn stamps_accumulate_and_fractions_sum_to_one() {
+        let tl = Timeline::with_capacity(64);
+        let die = tl.register(0);
+        die.stamp(Segment::Idle, 0, 500, None);
+        die.stamp(Segment::BatchWait, 500, 620, Some(1));
+        die.stamp(Segment::Convert, 620, 900, Some(1));
+        die.stamp(Segment::Transfer, 900, 1000, Some(1));
+        let occ = die.occupancy();
+        assert_eq!(occ.total_us(), 1000);
+        assert_eq!(occ.seg_us[Segment::Idle.code() as usize], 500);
+        assert_eq!(occ.seg_us[Segment::Convert.code() as usize], 280);
+        let sum: f64 = occ.fractions().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "fractions sum to {sum}");
+        // zero-width intervals are dropped entirely
+        die.stamp(Segment::Control, 1000, 1000, None);
+        assert_eq!(die.occupancy().total_us(), 1000);
+        assert_eq!(tl.recent(100).len(), 4);
+    }
+
+    #[test]
+    fn stamper_tiles_the_wall_clock_with_no_gaps() {
+        let tl = Timeline::with_capacity(64);
+        let mut st = tl.stamper(0);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        st.mark(Segment::Idle, None);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        st.mark(Segment::Convert, Some(7));
+        let events = tl.recent(100);
+        assert!(!events.is_empty());
+        // contiguity: each event starts where the previous one ended
+        for pair in events.windows(2) {
+            assert_eq!(pair[0].end_us, pair[1].start_us, "gap between {pair:?}");
+        }
+        let occ = &tl.occupancy()[0];
+        let spanned: u64 = events.iter().map(|e| e.end_us - e.start_us).sum();
+        assert_eq!(occ.total_us(), spanned, "ledger and events must agree");
+        let sum: f64 = occ.fractions().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "fractions sum to {sum}");
+    }
+
+    #[test]
+    fn mark_until_splits_the_span_at_a_captured_instant() {
+        let tl = Timeline::with_capacity(64);
+        let mut st = tl.stamper(0);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let boundary = Instant::now();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        // the worker's shape: idle until the batcher's stamp, then
+        // batch-wait to now — the two must tile with no gap
+        let idle = st.mark_until(Segment::Idle, boundary, None);
+        let wait = st.mark(Segment::BatchWait, Some(1));
+        assert!(idle >= 1000, "idle span {idle} us");
+        assert!(wait >= 1000, "batch-wait span {wait} us");
+        let events = tl.recent(10);
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].end_us, events[1].start_us, "contiguous at the boundary");
+        // a stamp that predates the cursor (a carried row) clamps to a
+        // zero-width idle span instead of rewinding the clock
+        let stale = Instant::now() - std::time::Duration::from_secs(1);
+        assert_eq!(st.mark_until(Segment::Idle, stale, None), 0);
+        let sum: f64 = tl.occupancy()[0].fractions().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "fractions sum to {sum}");
+    }
+
+    #[test]
+    fn register_is_idempotent_and_recent_merges_dies_sorted() {
+        let tl = Timeline::with_capacity(8);
+        let a = tl.register(1);
+        let b = tl.register(1);
+        assert!(Arc::ptr_eq(&a, &b), "re-registration returns the same ledger");
+        tl.register(0).stamp(Segment::Idle, 10, 20, None);
+        a.stamp(Segment::Convert, 0, 5, Some(3));
+        let events = tl.recent(10);
+        assert_eq!(events.len(), 2);
+        assert!(events[0].start_us <= events[1].start_us, "oldest first");
+        assert_eq!(tl.occupancy().iter().map(|o| o.die).collect::<Vec<_>>(), vec![0, 1]);
+        // the ring caps history: 20 stamps through a capacity-8 ring
+        for i in 0..20 {
+            a.stamp(Segment::Transfer, 100 + i, 101 + i, None);
+        }
+        assert!(tl.recent(100).len() <= 8 + 1, "ring must cap per-die history");
+        assert_eq!(tl.recent(3).len(), 3, "recent truncates to the newest N");
+    }
+
+    #[test]
+    fn chrome_export_validates_and_links_flows() {
+        let events = vec![
+            event(0, Segment::Idle, 0, 500, None),
+            event(0, Segment::BatchWait, 500, 620, Some(41)),
+            event(0, Segment::Convert, 620, 900, Some(41)),
+            event(1, Segment::Idle, 0, 620, None),
+            event(0, Segment::Transfer, 900, 1000, Some(41)),
+            // zero-width pair must stay balanced in the export
+            event(1, Segment::RotationPass, 620, 620, Some(42)),
+        ];
+        let text = chrome_trace_json(&events);
+        let n = validate_chrome_trace(&text).unwrap();
+        assert!(n > events.len() * 2, "B/E pairs plus metadata: {n} records");
+        assert!(text.contains("\"ph\":\"s\""), "flow start on batch-wait");
+        assert!(text.contains("\"ph\":\"f\""), "flow bind on convert/transfer");
+        assert!(text.contains("\"bp\":\"e\""), "flow binds to the enclosing slice");
+        assert!(text.contains("\"process_name\""), "per-die process metadata");
+        assert!(text.contains("die 1"), "both dies named");
+        let empty = chrome_trace_json(&[]);
+        assert_eq!(validate_chrome_trace(&empty).unwrap(), 0);
+    }
+
+    #[test]
+    fn validator_rejects_malformed_documents() {
+        assert!(validate_chrome_trace("not json").is_err());
+        assert!(validate_chrome_trace("{\"traceEvents\":[]}")
+            .unwrap_err()
+            .contains("array"));
+        // missing tid
+        let err = validate_chrome_trace(r#"[{"ph":"B","ts":1,"pid":0}]"#).unwrap_err();
+        assert!(err.contains("tid"), "{err}");
+        // non-monotone timestamps
+        let err = validate_chrome_trace(
+            r#"[{"ph":"B","ts":5,"pid":0,"tid":0},{"ph":"E","ts":4,"pid":0,"tid":0}]"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("backwards"), "{err}");
+        // E without B
+        let err =
+            validate_chrome_trace(r#"[{"ph":"E","ts":1,"pid":0,"tid":0}]"#).unwrap_err();
+        assert!(err.contains("without a matching"), "{err}");
+        // unclosed B
+        let err =
+            validate_chrome_trace(r#"[{"ph":"B","ts":1,"pid":0,"tid":2}]"#).unwrap_err();
+        assert!(err.contains("unclosed"), "{err}");
+        // balanced pair across tracks is fine
+        assert_eq!(
+            validate_chrome_trace(
+                r#"[{"ph":"B","ts":1,"pid":0,"tid":0},{"ph":"E","ts":2,"pid":0,"tid":0}]"#,
+            )
+            .unwrap(),
+            2
+        );
+    }
+
+    #[test]
+    fn concurrent_stamps_and_reads_never_panic() {
+        const STAMPS: u64 = if cfg!(miri) { 25 } else { 500 };
+        const READS: usize = if cfg!(miri) { 10 } else { 200 };
+        let tl = Arc::new(Timeline::with_capacity(16));
+        std::thread::scope(|s| {
+            for die in 0..4u32 {
+                let tl = Arc::clone(&tl);
+                s.spawn(move || {
+                    let d = tl.register(die);
+                    for i in 0..STAMPS {
+                        d.stamp(Segment::Convert, i, i + 1, Some(i));
+                    }
+                });
+            }
+            let tl = Arc::clone(&tl);
+            s.spawn(move || {
+                for _ in 0..READS {
+                    for o in tl.occupancy() {
+                        let sum: f64 = o.fractions().iter().sum();
+                        assert!(sum == 0.0 || (sum - 1.0).abs() < 1e-9);
+                    }
+                    assert!(tl.recent(64).len() <= 64);
+                }
+            });
+        });
+        let occ = tl.occupancy();
+        assert_eq!(occ.len(), 4);
+        for o in &occ {
+            assert_eq!(o.total_us(), STAMPS, "every stamp lands in the ledger");
+        }
+    }
+}

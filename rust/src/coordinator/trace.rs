@@ -167,6 +167,33 @@ mod tests {
     }
 
     #[test]
+    fn ring_never_allocates_after_startup() {
+        // `--trace-cap` sizes the ring once at construction; lapping it
+        // many times over must neither grow the slot vector nor move it
+        let r = FlightRecorder::new(8);
+        assert_eq!(r.capacity(), 8, "configured capacity is honoured");
+        let slots_ptr = r.slots.as_ptr();
+        let slots_cap = r.slots.capacity();
+        for id in 0..100 {
+            r.push(entry(id));
+            if id % 10 == 0 {
+                let _ = r.dump(8);
+            }
+        }
+        assert_eq!(r.capacity(), 8);
+        assert_eq!(r.slots.as_ptr(), slots_ptr, "slot storage must not move");
+        assert_eq!(r.slots.capacity(), slots_cap, "slot storage must not grow");
+        // overwrites land in place even when entries carry owned data
+        for id in 0..16 {
+            r.push(TraceEntry { tenant: Some("t".into()), ..entry(id) });
+        }
+        assert_eq!(r.slots.as_ptr(), slots_ptr);
+        assert_eq!(r.slots.capacity(), slots_cap);
+        let ids: Vec<u64> = r.dump(100).iter().map(|e| e.id).collect();
+        assert_eq!(ids, vec![15, 14, 13, 12, 11, 10, 9, 8]);
+    }
+
+    #[test]
     fn poisoned_slot_is_recovered_not_skipped() {
         let r = std::sync::Arc::new(FlightRecorder::new(1));
         r.push(entry(7));

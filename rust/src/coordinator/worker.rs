@@ -24,7 +24,7 @@ use crate::config::SystemConfig;
 use crate::elm::secondstage::{codes_sum, SecondStage};
 use crate::extension::ServeChip;
 use crate::fleet::{calibrate, probe};
-use crate::protocol::stats::{TraceEntry, TraceOutcome};
+use crate::protocol::stats::{Segment, TraceEntry, TraceOutcome};
 use crate::registry::TenantEntry;
 use crate::runtime::PjrtEngine;
 
@@ -32,6 +32,7 @@ use super::batcher::collect_batch;
 use super::metrics::Metrics;
 use super::request::{Backend, ClassifyRequest, ClassifyResponse, ControlMsg, WorkerMsg};
 use super::router::Outstanding;
+use super::timeline::Stamper;
 
 /// Everything one worker needs, bundled for the spawn.
 pub struct WorkerSetup {
@@ -48,6 +49,12 @@ pub struct WorkerSetup {
     pub artifact_dir: Option<String>,
     pub rx: Receiver<WorkerMsg>,
     pub metrics: Arc<Metrics>,
+    /// This worker's segment clock over the fleet timeline (DESIGN.md
+    /// §19): consecutive marks tile the thread's wall clock into idle /
+    /// batch-wait / convert / rotation-pass / transfer / control /
+    /// probe-refit, so the exported occupancy fractions sum to 1.0 by
+    /// construction.
+    pub stamper: Stamper,
     pub outstanding: Outstanding,
     pub max_batch: usize,
     pub max_wait: Duration,
@@ -147,6 +154,19 @@ pub fn run(mut s: WorkerSetup) {
     // returns None once both the channel and the carry are drained
     let mut carry = VecDeque::new();
     while let Some(batch) = collect_batch(&s.rx, &mut carry, s.max_batch, s.max_wait, passes) {
+        // timeline (DESIGN.md §19): the collect span splits at the
+        // first row's batcher stamp — idle until a message arrived,
+        // batch-wait while the window filled. A control-only tick is
+        // all idle: the wait ended the moment there was work to do.
+        match batch.requests.iter().filter_map(|r| r.collected).min() {
+            Some(first) => {
+                s.stamper.mark_until(Segment::Idle, first, None);
+                s.stamper.mark(Segment::BatchWait, batch.requests.first().map(|r| r.id));
+            }
+            None => {
+                s.stamper.mark(Segment::Idle, None);
+            }
+        }
         if !batch.requests.is_empty() {
             serve_batch(
                 &mut s,
@@ -158,7 +178,12 @@ pub fn run(mut s: WorkerSetup) {
             );
         }
         for ctl in batch.control {
+            let seg = match &ctl {
+                ControlMsg::Probe { .. } | ControlMsg::Refit { .. } => Segment::ProbeRefit,
+                _ => Segment::Control,
+            };
             handle_control(&mut s, &mut artifact_stale, ctl);
+            s.stamper.mark(seg, None);
         }
     }
 }
@@ -255,6 +280,13 @@ pub(crate) fn serve_batch<E: BatchEngine>(
     } else if served_pjrt {
         logs.pjrt_fail_streak = 0;
     }
+    // timeline (DESIGN.md §19): DAC quantisation + the hidden-layer
+    // pass is the conversion span; a rotation-plan die labels it
+    // rotation-pass (several physical passes per row). The first row's
+    // id carries the Chrome flow linkage batch-wait -> conversion.
+    let conv_seg =
+        if s.die.passes() > 1 { Segment::RotationPass } else { Segment::Convert };
+    s.stamper.mark(conv_seg, requests.first().map(|r| r.id));
     // count the batch on the path that served it, after any fallback
     s.metrics.record_batch(n, served_pjrt);
     // book physical conversions before any reply goes out (a client must
@@ -294,6 +326,12 @@ pub(crate) fn serve_batch<E: BatchEngine>(
     // undershoot the exported total (by < 3 us). Saturating everywhere:
     // a request that bypassed the batcher (collected = None) reads as
     // zero queue-wait, never as a panic.
+    // per-tenant utilization share (DESIGN.md §19): the batch's compute
+    // span so far splits evenly across its rows — rows on one die are
+    // homogeneous (same dims, same pass cost). Clamped to 1 us so even
+    // a sub-microsecond batch books a visible share.
+    let row_busy_us =
+        ((compute_start.elapsed().as_micros() as u64) / n.max(1) as u64).max(1);
     let stage_spans = |req: &ClassifyRequest| {
         let now = Instant::now();
         let collected = req.collected.unwrap_or(compute_start);
@@ -353,6 +391,7 @@ pub(crate) fn serve_batch<E: BatchEngine>(
                             // `passes` physical conversions on this die
                             tag.metrics
                                 .record_energy(passes as u64 * s.energy_fj_per_conversion);
+                            tag.metrics.record_busy_us(row_busy_us);
                         }
                         trace.queue_us = queue_d.as_micros() as u64;
                         trace.batch_us = batch_d.as_micros() as u64;
@@ -416,6 +455,8 @@ pub(crate) fn serve_batch<E: BatchEngine>(
             }
         }
     }
+    // scoring + reply fan-out closes the batch as the transfer span
+    s.stamper.mark(Segment::Transfer, requests.first().map(|r| r.id));
 }
 
 /// Execute one fleet-health or registry control message on the die this
@@ -588,6 +629,7 @@ mod tests {
         let cfg = ChipConfig::default().with_dims(D, L).with_b(10);
         let chip = ChipModel::fabricate(cfg, 1);
         let (_tx, rx) = mpsc::channel();
+        let metrics = Arc::new(Metrics::new());
         WorkerSetup {
             index: 0,
             die: ServeChip::physical(chip),
@@ -597,7 +639,8 @@ mod tests {
             tenants: BTreeMap::new(),
             artifact_dir: None,
             rx,
-            metrics: Arc::new(Metrics::new()),
+            stamper: metrics.timeline.stamper(0),
+            metrics,
             outstanding: Outstanding::new(1),
             max_batch: 8,
             max_wait: Duration::from_millis(1),
@@ -928,6 +971,48 @@ mod tests {
         entry.rls.betas = vec![vec![1.0; 2 * L]];
         entry.rebuild_heads(false);
         s.tenants.insert(name.to_string(), entry);
+    }
+
+    #[test]
+    fn serving_stamps_the_timeline_and_books_tenant_busy_time() {
+        let mut s = setup();
+        install_ones_regression(&mut s, "bright");
+        let mut engine: Option<FailEngine> = None;
+        let mut logs = LogOnce::default();
+        let (mut reqs, rxs) = requests(&s, 2);
+        reqs[1].tenant = Some(tag("bright"));
+        serve_batch(&mut s, &mut engine, &mut logs, &[], &reqs, false);
+        for rx in &rxs {
+            rx.recv().unwrap();
+        }
+        // the tenant row's utilization share: at least the 1 us clamp,
+        // booked exactly once per answered row
+        let m = &reqs[1].tenant.as_ref().unwrap().metrics;
+        assert!(m.busy_us.load(Ordering::Relaxed) >= 1, "tenant busy share");
+        // serve_batch closed a conversion mark and a transfer mark on
+        // this die's ledger; whatever width they had, the fractions
+        // still tile (sub-microsecond spans drop and count nothing)
+        let occ = s.metrics.timeline.occupancy();
+        assert_eq!(occ.len(), 1);
+        assert_eq!(occ[0].die, 0);
+        let sum: f64 = occ[0].fractions().iter().sum();
+        assert!(sum == 0.0 || (sum - 1.0).abs() < 1e-9, "fractions sum to {sum}");
+        // a 4-pass virtual die labels its conversion span rotation-pass
+        let cfg = ChipConfig::default().with_dims(D, L).with_b(10);
+        let chip = ChipModel::fabricate(cfg, 2);
+        let mut v = setup();
+        v.die = ServeChip::new(chip, 2 * D, 2 * L).unwrap();
+        v.second = SecondStage::new(&[1.0; 2 * L], 10, false);
+        let (mut reqs, _rxs) = requests(&v, 1);
+        reqs[0].features = vec![0.3; 2 * D];
+        std::thread::sleep(Duration::from_millis(2));
+        serve_batch(&mut v, &mut engine, &mut logs, &[], &reqs, false);
+        let occ = &v.metrics.timeline.occupancy()[0];
+        assert!(
+            occ.seg_us[Segment::RotationPass.code() as usize] >= 1000,
+            "rotation-pass span must absorb the pre-batch sleep: {occ:?}"
+        );
+        assert_eq!(occ.seg_us[Segment::Convert.code() as usize], 0);
     }
 
     #[test]

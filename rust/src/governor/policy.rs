@@ -25,6 +25,11 @@ pub struct TickSignals {
     /// error at or under its `slo_max_err`); a die only drops to a
     /// cheaper, noisier rung while this is true.
     pub accuracy_ok: bool,
+    /// The sliding-window p99 latency (fleet-wide against
+    /// `GovernorConfig::p99_slo_us`, or any tenant's against its
+    /// `slo_p99_us`) breached over the last tick: the die counts as
+    /// hot regardless of traffic and never descends (DESIGN.md §19).
+    pub slo_breach: bool,
 }
 
 /// Why a wanted move was refused.
@@ -90,9 +95,12 @@ impl DiePolicy {
             return Decision::Hold;
         }
         let top = boot_rung.min(ladder_len.saturating_sub(1));
-        let hot = sig.requests_delta > 0
-            && (sig.mean_queue_us >= cfg.hot_queue_us || sig.outstanding > 0);
-        let idle = sig.requests_delta == 0 && sig.outstanding == 0;
+        // a latency-SLO breach is hot on its own: rows already in the
+        // histogram are late even if no new traffic arrived this tick
+        let hot = sig.slo_breach
+            || (sig.requests_delta > 0
+                && (sig.mean_queue_us >= cfg.hot_queue_us || sig.outstanding > 0));
+        let idle = sig.requests_delta == 0 && sig.outstanding == 0 && !sig.slo_breach;
         let want = if hot && self.rung < top {
             Some(Decision::Raise { from: self.rung, to: top })
         } else if idle && sig.accuracy_ok && self.rung > 0 {
@@ -173,6 +181,22 @@ mod tests {
         assert_eq!(p.decide(&cfg(), 4, 3, &hot()), Decision::Raise { from: 0, to: 3 });
         // already at the ceiling: hot traffic holds there
         assert_eq!(p.decide(&cfg(), 4, 3, &hot()), Decision::Hold);
+    }
+
+    #[test]
+    fn latency_slo_breach_is_hot_even_at_idle() {
+        let mut p = DiePolicy::new(3);
+        for _ in 0..3 {
+            p.decide(&cfg(), 4, 3, &idle());
+        }
+        assert_eq!(p.rung(), 0);
+        // zero traffic this tick, but the windowed p99 breached: the
+        // die jumps straight back to boot...
+        let sig = TickSignals { slo_breach: true, ..idle() };
+        assert_eq!(p.decide(&cfg(), 4, 3, &sig), Decision::Raise { from: 0, to: 3 });
+        // ...and holds there — a breach blocks any descent
+        assert_eq!(p.decide(&cfg(), 4, 3, &sig), Decision::Hold);
+        assert_eq!(p.rung(), 3);
     }
 
     #[test]

@@ -28,7 +28,7 @@ use crate::config::{ChipConfig, SystemConfig, Transfer};
 use crate::coordinator::Coordinator;
 use crate::datasets::synth;
 use crate::governor::GovernorConfig;
-use crate::protocol::{StageStats, StatsSnapshot};
+use crate::protocol::{Segment, StageStats, StatsSnapshot};
 use crate::util::json::Value;
 
 /// Schema tag stamped into every report; bump with the field set.
@@ -54,6 +54,13 @@ pub struct BenchConfig {
     /// Also run the governor-enabled comparison leg over an idle-heavy
     /// trace and emit a schema-v2 report (DESIGN.md §17).
     pub governor: bool,
+    /// `Some(rate)` switches the baseline leg from closed-loop to
+    /// open-loop Poisson arrivals at `rate` req/s: send instants come
+    /// from a seeded exponential inter-arrival schedule, so queue
+    /// pressure reflects the arrival process instead of the fleet's own
+    /// service rate. The governed comparison leg always keeps its
+    /// hand-driven idle-heavy trace — its fJ accounting is pinned.
+    pub arrival: Option<f64>,
 }
 
 impl BenchConfig {
@@ -68,6 +75,7 @@ impl BenchConfig {
             chips: 2,
             max_train: 200,
             governor: false,
+            arrival: None,
         }
     }
 
@@ -154,6 +162,37 @@ impl BenchReport {
                     ("batch_wait".into(), stage(&s.batch_wait)),
                     ("compute".into(), stage(&s.compute)),
                 ]),
+            ),
+            // per-die occupancy summary (DESIGN.md §19): where each die's
+            // wall clock went over the run, as fractions that sum to 1.0
+            (
+                "occupancy".into(),
+                Value::Arr(
+                    s.occupancy
+                        .iter()
+                        .map(|o| {
+                            let fr = o.fractions();
+                            Value::Obj(vec![
+                                ("die".into(), u(o.die as u64)),
+                                ("total_us".into(), u(o.total_us())),
+                                (
+                                    "fractions".into(),
+                                    Value::Obj(
+                                        Segment::ALL
+                                            .iter()
+                                            .map(|seg| {
+                                                (
+                                                    seg.name().to_string(),
+                                                    Value::Num(fr[seg.code() as usize]),
+                                                )
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
             ),
         ];
         if let Some(g) = &self.governor {
@@ -437,6 +476,8 @@ fn drive(cfg: &BenchConfig, governed: bool) -> Result<(StatsSnapshot, u64, u64)>
         // second burst is already priced on the cheap rung
         phase(split..per)?;
         coord.governor_tick(); // traffic again: restore the boot point
+    } else if let Some(rate) = cfg.arrival {
+        open_loop(&coord, xs, workers, per, rate, cfg.seed)?;
     } else {
         phase(0..per)?;
     }
@@ -446,6 +487,59 @@ fn drive(cfg: &BenchConfig, governed: bool) -> Result<(StatsSnapshot, u64, u64)>
         coord.shutdown();
     }
     Ok((snapshot, elapsed_us, (per * workers) as u64))
+}
+
+/// Open-loop Poisson drive (`--arrival poisson:RATE`): a seeded LCG
+/// draws exponential inter-arrival gaps for `per * workers` rows, the
+/// resulting absolute send instants are dealt round-robin to the
+/// client threads, and each thread sleeps until an instant is due
+/// before submitting its row. Arrivals keep coming while earlier rows
+/// are still queued — the defining open-loop property — though each
+/// thread still waits out its own reply, so in-flight rows are bounded
+/// at `workers`. The schedule is a pure function of the seed: two runs
+/// at the same rate submit at the same offsets.
+fn open_loop(
+    coord: &Arc<Coordinator>,
+    xs: &[Vec<f64>],
+    workers: usize,
+    per: usize,
+    rate: f64,
+    seed: u64,
+) -> Result<()> {
+    let total = per * workers;
+    let mut lcg = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1;
+    let mut at = 0.0f64;
+    let mut schedule = Vec::with_capacity(total);
+    for _ in 0..total {
+        lcg = lcg.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        // top 53 bits -> uniform in (0, 1], inverted to an Exp(rate) gap
+        let u = ((lcg >> 11) as f64 + 1.0) / (1u64 << 53) as f64;
+        at += -u.ln() / rate;
+        schedule.push(Duration::from_secs_f64(at));
+    }
+    let t0 = Instant::now();
+    std::thread::scope(|scope| -> Result<()> {
+        let mut joins = Vec::new();
+        for w in 0..workers {
+            let coord = Arc::clone(coord);
+            let schedule = &schedule;
+            joins.push(scope.spawn(move || -> Result<()> {
+                for i in (w..total).step_by(workers) {
+                    let due = t0 + schedule[i];
+                    let now = Instant::now();
+                    if due > now {
+                        std::thread::sleep(due - now);
+                    }
+                    coord.classify(xs[i % xs.len()].clone())?;
+                }
+                Ok(())
+            }));
+        }
+        for j in joins {
+            j.join().map_err(|_| anyhow::anyhow!("bench worker panicked"))??;
+        }
+        Ok(())
+    })
 }
 
 #[cfg(test)]
@@ -472,6 +566,34 @@ mod tests {
         assert!(s.macs > 0);
         assert!(report.throughput_rps() > 0.0);
         validate_bench_json(&report.to_json()).unwrap();
+    }
+
+    #[test]
+    fn open_loop_poisson_leg_answers_every_row_and_reports_occupancy() {
+        let cfg = BenchConfig {
+            requests: 40,
+            concurrency: 2,
+            chips: 2,
+            max_train: 120,
+            arrival: Some(2000.0), // ~20 ms of scheduled arrivals
+            ..BenchConfig::smoke()
+        };
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.snapshot.responses, 40, "open-loop rows must all answer");
+        let json = report.to_json();
+        assert!(json.contains("\"occupancy\":["), "{json}");
+        validate_bench_json(&json).unwrap();
+        // the fleet profiled real wall clock, and wherever a die
+        // stamped at all its fractions tile that clock exactly
+        assert!(report.snapshot.occupancy.iter().any(|o| o.total_us() > 0));
+        for o in &report.snapshot.occupancy {
+            let sum: f64 = o.fractions().iter().sum();
+            assert!(
+                sum == 0.0 || (sum - 1.0).abs() < 1e-9,
+                "die {}: fractions sum {sum}",
+                o.die
+            );
+        }
     }
 
     #[test]

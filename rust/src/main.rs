@@ -38,7 +38,7 @@ fn usage() -> &'static str {
              [--point FILE] [--phys-d K] [--phys-l N] [--virtual-l L]\n\
              [--geoms K1xL1,K2xL2,...] [--tenant NAME=DATASET ...]\n\
              [--governor] [--governor-bits B1,B2,...] [--governor-tick-ms MS]\n\
-             [--read-timeout-ms MS]                  TCP front end (tuned point via FILE;\n\
+             [--read-timeout-ms MS] [--trace-cap N]  TCP front end (tuned point via FILE;\n\
                                                      virtual dies via --phys-d/--phys-l/\n\
                                                      --virtual-l; heterogeneous per-die\n\
                                                      geometries via --geoms; extra models\n\
@@ -49,7 +49,8 @@ fn usage() -> &'static str {
                                                      from --governor-bits or the --point\n\
                                                      file's Pareto front; idle clients\n\
                                                      dropped after --read-timeout-ms,\n\
-                                                     0 = never)\n\
+                                                     0 = never; --trace-cap sizes the\n\
+                                                     flight-recorder ring, default 512)\n\
        client VERB [--addr HOST:PORT] [--v0]         typed client SDK against a running\n\
                                                      fleet; VERB is one of ping |\n\
                                                      stats [--format human|json|prom] |\n\
@@ -58,19 +59,28 @@ fn usage() -> &'static str {
                                                      predict --features 1,2 [--tenant T] |\n\
                                                      batch --row [tenant:]1,2 ... |\n\
                                                      trace [--last N] |\n\
+                                                     timeline [--last N] [--out FILE]\n\
+                                                       [--check] |\n\
                                                      register NAME DATASET [--seed N] |\n\
                                                      unregister NAME   (--v0 forces the\n\
                                                      ASCII line protocol; default is the\n\
                                                      v1 framed protocol with one-round-\n\
-                                                     trip batches; trace and the json/prom\n\
-                                                     stats formats need v1)\n\
-       bench serve [--smoke] [--out FILE]            closed-loop serving benchmark against\n\
-             [--requests N] [--concurrency N]        an in-process fleet; reduces the\n\
+                                                     trip batches; trace, timeline and the\n\
+                                                     json/prom stats formats need v1.\n\
+                                                     timeline exports the fleet profile as\n\
+                                                     Chrome trace-event JSON: open the\n\
+                                                     --out file at https://ui.perfetto.dev\n\
+                                                     or chrome://tracing; --check schema-\n\
+                                                     validates the export instead)\n\
+       bench serve [--smoke] [--out FILE]            serving benchmark against an in-\n\
+             [--requests N] [--concurrency N]        process fleet; reduces the\n\
              [--chips N] [--dataset NAME]            observability snapshot into a\n\
              [--governor]                            versioned JSON report (BENCH_6.json;\n\
-                                                     --governor adds the governor-enabled\n\
+             [--arrival poisson:RATE]                --governor adds the governor-enabled\n\
                                                      idle-heavy comparison leg and writes\n\
-                                                     schema v2 to BENCH_7.json)\n\
+                                                     schema v2 to BENCH_7.json; --arrival\n\
+                                                     switches the closed loop to open-loop\n\
+                                                     Poisson arrivals at RATE req/s)\n\
        bench gate --current FILE --previous FILE     fail if throughput drops or p99 rises\n\
              [--max-regress 0.10]                    beyond the budget between two reports\n\
        sweep --what ratio|beta-bits|counter-bits     quick design-space sweep (Fig. 7)\n\
@@ -215,6 +225,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     sys.read_timeout = args
         .get_ms_opt("read-timeout-ms", sys.read_timeout)
         .map_err(anyhow::Error::msg)?;
+    // flight-recorder sizing (DESIGN.md §16): the ring allocates once
+    // at boot and never grows, so capacity is a serve-time choice
+    sys.trace_cap = args.get_usize("trace-cap", sys.trace_cap).map_err(anyhow::Error::msg)?;
     // heterogeneous fleets (DESIGN.md §13): per-die fabricated geometry
     if let Some(geoms) = args.get("geoms") {
         sys.die_geoms = geoms
@@ -408,6 +421,38 @@ fn cmd_client(args: &Args) -> Result<()> {
                 println!("{t}");
             }
         }
+        "timeline" => {
+            // fleet timeline profile (DESIGN.md §19) as Chrome
+            // trace-event JSON. Workflow: `velm client timeline --out
+            // trace.json`, then open trace.json at
+            // https://ui.perfetto.dev (or chrome://tracing) to see one
+            // process per die with a thread track per segment.
+            let last = args.get_usize("last", 4096).map_err(anyhow::Error::msg)?;
+            let events = client.timeline(last)?;
+            let json = velm::coordinator::timeline::chrome_trace_json(&events);
+            if args.flag("check") {
+                let n = velm::coordinator::timeline::validate_chrome_trace(&json)
+                    .map_err(anyhow::Error::msg)?;
+                println!(
+                    "timeline ok: {} events export as {n} valid trace records",
+                    events.len()
+                );
+            }
+            match args.get("out") {
+                Some(path) => {
+                    std::fs::write(path, json + "\n")
+                        .with_context(|| format!("writing {path}"))?;
+                    println!(
+                        "Chrome trace written to {path} — open it at \
+                         https://ui.perfetto.dev or chrome://tracing"
+                    );
+                }
+                // bare `timeline` prints the JSON for piping; with
+                // --check and no --out the verdict above is the output
+                None if !args.flag("check") => println!("{json}"),
+                None => {}
+            }
+        }
         "health" => println!("{}", client.health()?),
         "models" => println!("{}", client.models()?),
         "governor" => println!("{}", client.governor()?),
@@ -467,7 +512,8 @@ fn cmd_client(args: &Args) -> Result<()> {
         }
         other => bail!(
             "unknown client verb '{other}' \
-             (ping|predict|batch|register|unregister|models|stats|health|governor|drain|trace)"
+             (ping|predict|batch|register|unregister|models|stats|health|governor|drain|\
+             trace|timeline)"
         ),
     }
     Ok(())
@@ -494,10 +540,32 @@ fn cmd_bench(args: &Args) -> Result<()> {
         args.get_usize("concurrency", cfg.concurrency).map_err(anyhow::Error::msg)?;
     cfg.chips = args.get_usize("chips", cfg.chips).map_err(anyhow::Error::msg)?;
     cfg.governor = args.flag("governor");
+    // open-loop arrivals (DESIGN.md §19): `--arrival poisson:RATE`
+    // replaces the closed loop with seeded Poisson arrivals at RATE
+    // requests/second, so queueing is driven by the offered load
+    // instead of the clients' round-trip times
+    if let Some(spec) = args.get("arrival") {
+        let rate = spec
+            .strip_prefix("poisson:")
+            .ok_or_else(|| {
+                anyhow::anyhow!("--arrival wants poisson:RATE (req/s), got '{spec}'")
+            })?
+            .parse::<f64>()
+            .map_err(|e| anyhow::anyhow!("--arrival rate: {e}"))?;
+        anyhow::ensure!(
+            rate.is_finite() && rate > 0.0,
+            "--arrival rate must be a positive req/s figure"
+        );
+        cfg.arrival = Some(rate);
+    }
     println!(
-        "bench serve: {} requests x {} closed-loop clients on {} ({} dies){} ...",
+        "bench serve: {} requests x {} {} clients on {} ({} dies){} ...",
         cfg.requests,
         cfg.concurrency,
+        match cfg.arrival {
+            Some(rate) => format!("open-loop (poisson {rate} req/s)"),
+            None => "closed-loop".to_string(),
+        },
         cfg.dataset,
         cfg.chips,
         if cfg.governor { " + governor comparison leg" } else { "" }

@@ -23,7 +23,10 @@
 
 use std::io::{BufRead, Read, Write};
 
-use super::stats::{GovernorStats, StageStats, StatsSnapshot, TenantStats, TraceEntry, TraceOutcome};
+use super::stats::{
+    DieOccupancy, GovernorStats, Segment, StageStats, StatsSnapshot, TenantStats, TimelineEvent,
+    TraceEntry, TraceOutcome, SEGMENTS,
+};
 use super::{Codec, Decoded, PredictRow, Prediction, Request, Response};
 
 /// First byte of every v1 frame; the codec-negotiation sniff byte.
@@ -47,6 +50,7 @@ const T_QUIT: u8 = 0x0A;
 const T_TRACE: u8 = 0x0B;
 const T_SNAPSHOT: u8 = 0x0C;
 const T_GOVERNOR: u8 = 0x0D;
+const T_TIMELINE: u8 = 0x0E;
 
 // Response frame types (high bit set).
 const R_PONG: u8 = 0x81;
@@ -61,6 +65,7 @@ const R_UNREGISTERED: u8 = 0x89;
 const R_TRACE: u8 = 0x8A;
 const R_SNAPSHOT: u8 = 0x8B;
 const R_GOVERNOR: u8 = 0x8C;
+const R_TIMELINE: u8 = 0x8D;
 const R_ERROR: u8 = 0xFF;
 
 // --- payload writers ---
@@ -112,6 +117,15 @@ fn put_trace_entry(buf: &mut Vec<u8>, t: &TraceEntry) {
     buf.push(t.outcome.code());
 }
 
+fn put_timeline_event(buf: &mut Vec<u8>, e: &TimelineEvent) {
+    put_u32(buf, e.die);
+    buf.push(e.seg.code());
+    put_u64(buf, e.start_us);
+    put_u64(buf, e.end_us);
+    buf.push(e.req_id.is_some() as u8);
+    put_u64(buf, e.req_id.unwrap_or(0));
+}
+
 fn put_stage(buf: &mut Vec<u8>, s: &StageStats) {
     put_u64(buf, s.count);
     put_u64(buf, s.sum_us);
@@ -157,9 +171,20 @@ fn put_snapshot(buf: &mut Vec<u8>, s: &StatsSnapshot) {
         put_u64(buf, t.requests);
         put_u64(buf, t.responses);
         put_u64(buf, t.energy_fj);
+        put_u64(buf, t.busy_us);
         put_f64(buf, t.train_score);
         put_stage(buf, &t.latency);
     }
+    // v3 fields ride after the tenant block so earlier fixed offsets
+    // (the hostile-count tests pin them) stay put
+    put_u32(buf, s.occupancy.len() as u32);
+    for o in &s.occupancy {
+        put_u32(buf, o.die);
+        for &us in &o.seg_us {
+            put_u64(buf, us);
+        }
+    }
+    put_u64(buf, s.slo_breaches);
 }
 
 // --- payload reader ---
@@ -284,6 +309,10 @@ pub fn encode_request(req: &Request) -> (u8, Vec<u8>) {
         }
         Request::Snapshot => T_SNAPSHOT,
         Request::Governor => T_GOVERNOR,
+        Request::Timeline { last } => {
+            put_u32(&mut buf, *last as u32);
+            T_TIMELINE
+        }
     };
     (ty, buf)
 }
@@ -319,6 +348,7 @@ pub fn decode_request(ty: u8, payload: &[u8]) -> Result<Option<Request>, String>
         T_TRACE => Request::Trace { last: c.u32()? as usize },
         T_SNAPSHOT => Request::Snapshot,
         T_GOVERNOR => Request::Governor,
+        T_TIMELINE => Request::Timeline { last: c.u32()? as usize },
         other => return Err(format!("unknown request frame type {other:#04x}")),
     };
     c.done()?;
@@ -382,6 +412,13 @@ pub fn encode_response(resp: &Response) -> (u8, Vec<u8>) {
             put_str(&mut buf, s);
             R_GOVERNOR
         }
+        Response::Timeline(es) => {
+            put_u32(&mut buf, es.len() as u32);
+            for e in es {
+                put_timeline_event(&mut buf, e);
+            }
+            R_TIMELINE
+        }
         Response::Error(e) => {
             put_str(&mut buf, e);
             R_ERROR
@@ -429,9 +466,30 @@ fn stage(c: &mut Cur<'_>) -> Result<StageStats, String> {
 
 // Smallest possible wire sizes, the bound for hostile-count checks:
 // a trace entry is 8+4+4+1+4+4*8+1 bytes, a tenant stats block is
-// 4+3*8+8+5*8 bytes (empty names).
+// 4+4*8+8+5*8 bytes (empty names), a timeline event is 4+1+8+8+1+8
+// bytes, a die occupancy block is 4+7*8 bytes.
 const MIN_TRACE_ENTRY_LEN: usize = 54;
-const MIN_TENANT_STATS_LEN: usize = 76;
+const MIN_TENANT_STATS_LEN: usize = 84;
+const MIN_TIMELINE_EVENT_LEN: usize = 30;
+const MIN_DIE_OCCUPANCY_LEN: usize = 60;
+
+fn timeline_event(c: &mut Cur<'_>) -> Result<TimelineEvent, String> {
+    Ok(TimelineEvent {
+        die: c.u32()?,
+        seg: {
+            let code = c.u8()?;
+            Segment::from_code(code)
+                .ok_or_else(|| format!("unknown timeline segment code {code}"))?
+        },
+        start_us: c.u64()?,
+        end_us: c.u64()?,
+        req_id: {
+            let has = c.u8()? != 0;
+            let id = c.u64()?;
+            has.then_some(id)
+        },
+    })
+}
 
 fn snapshot(c: &mut Cur<'_>) -> Result<StatsSnapshot, String> {
     let version = c.u32()?;
@@ -469,6 +527,8 @@ fn snapshot(c: &mut Cur<'_>) -> Result<StatsSnapshot, String> {
             points: Vec::new(),
         },
         tenants: Vec::new(),
+        occupancy: Vec::new(),
+        slo_breaches: 0,
     };
     let np = c.u32()? as usize;
     if np > c.remaining() / 4 {
@@ -487,10 +547,24 @@ fn snapshot(c: &mut Cur<'_>) -> Result<StatsSnapshot, String> {
             requests: c.u64()?,
             responses: c.u64()?,
             energy_fj: c.u64()?,
+            busy_us: c.u64()?,
             train_score: c.f64()?,
             latency: stage(c)?,
         });
     }
+    let no = c.u32()? as usize;
+    if no > c.remaining() / MIN_DIE_OCCUPANCY_LEN {
+        return Err(format!("occupancy count {no} exceeds the frame"));
+    }
+    for _ in 0..no {
+        let die = c.u32()?;
+        let mut seg_us = [0u64; SEGMENTS];
+        for us in &mut seg_us {
+            *us = c.u64()?;
+        }
+        s.occupancy.push(DieOccupancy { die, seg_us });
+    }
+    s.slo_breaches = c.u64()?;
     Ok(s)
 }
 
@@ -531,6 +605,17 @@ pub fn decode_response(ty: u8, payload: &[u8]) -> Result<Response, String> {
         }
         R_SNAPSHOT => Response::Snapshot(snapshot(&mut c)?),
         R_GOVERNOR => Response::Governor(c.str()?),
+        R_TIMELINE => {
+            let n = c.u32()? as usize;
+            if n > c.remaining() / MIN_TIMELINE_EVENT_LEN {
+                return Err(format!("timeline count {n} exceeds the frame"));
+            }
+            let mut es = Vec::new();
+            for _ in 0..n {
+                es.push(timeline_event(&mut c)?);
+            }
+            Response::Timeline(es)
+        }
         R_ERROR => Response::Error(c.str()?),
         other => return Err(format!("unknown response frame type {other:#04x}")),
     };
@@ -811,13 +896,24 @@ mod tests {
         assert!(decode_response(R_TRACE, &payload).is_err());
 
         // a snapshot whose tenant count overruns the frame: with no
-        // tenants encoded, the count is the last 4 payload bytes
+        // tenants or occupancy encoded, the tail is tenant count (4) +
+        // occupancy count (4) + slo_breaches (8), so the tenant count
+        // sits 16 bytes from the end
         let mut s = StatsSnapshot::sample();
         s.tenants.clear();
+        s.occupancy.clear();
+        let (_, mut hostile) = encode_response(&Response::Snapshot(s.clone()));
+        let n = hostile.len();
+        hostile[n - 16..n - 12].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = decode_response(R_SNAPSHOT, &hostile).unwrap_err();
+        assert!(err.contains("tenant count"), "{err}");
+
+        // ... and a hostile occupancy count (12 bytes from the end)
         let (_, mut hostile) = encode_response(&Response::Snapshot(s));
         let n = hostile.len();
-        hostile[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
-        assert!(decode_response(R_SNAPSHOT, &hostile).is_err());
+        hostile[n - 12..n - 8].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = decode_response(R_SNAPSHOT, &hostile).unwrap_err();
+        assert!(err.contains("occupancy count"), "{err}");
 
         // and trailing bytes after a well-formed snapshot are rejected
         let (_, mut payload) = encode_response(&Response::Snapshot(StatsSnapshot::sample()));
@@ -852,6 +948,79 @@ mod tests {
         codec.write_response(&mut buf, &resp).unwrap();
         let mut r: &[u8] = &buf;
         assert_eq!(codec.read_response(&mut r, &req).unwrap(), Some(resp));
+    }
+
+    fn sample_timeline() -> Vec<TimelineEvent> {
+        vec![
+            TimelineEvent {
+                die: 0,
+                seg: Segment::Idle,
+                start_us: 0,
+                end_us: 500,
+                req_id: None,
+            },
+            TimelineEvent {
+                die: 0,
+                seg: Segment::BatchWait,
+                start_us: 500,
+                end_us: 620,
+                req_id: Some(41),
+            },
+            TimelineEvent {
+                die: 1,
+                seg: Segment::RotationPass,
+                start_us: 620,
+                end_us: 620,
+                req_id: Some(42),
+            },
+        ]
+    }
+
+    #[test]
+    fn timeline_frames_roundtrip_via_io() {
+        let mut codec = FrameCodec;
+        let req = Request::Timeline { last: 256 };
+        let mut buf = Vec::new();
+        codec.write_request(&mut buf, &req).unwrap();
+        let mut r: &[u8] = &buf;
+        match codec.read_request(&mut r).unwrap() {
+            Decoded::Request(back) => assert_eq!(back, req),
+            other => panic!("{other:?}"),
+        }
+
+        let resp = Response::Timeline(sample_timeline());
+        let mut buf = Vec::new();
+        codec.write_response(&mut buf, &resp).unwrap();
+        let mut r: &[u8] = &buf;
+        assert_eq!(codec.read_response(&mut r, &req).unwrap(), Some(resp));
+
+        let empty = Response::Timeline(Vec::new());
+        let mut buf = Vec::new();
+        codec.write_response(&mut buf, &empty).unwrap();
+        let mut r: &[u8] = &buf;
+        assert_eq!(codec.read_response(&mut r, &req).unwrap(), Some(empty));
+    }
+
+    #[test]
+    fn hostile_timeline_count_and_bad_segment_are_rejected() {
+        // a frame claiming u32::MAX events must fail fast, not allocate
+        let mut payload = Vec::new();
+        put_u32(&mut payload, u32::MAX);
+        let err = decode_response(R_TIMELINE, &payload).unwrap_err();
+        assert!(err.contains("timeline count"), "{err}");
+
+        // an in-range event with an unknown segment code is rejected
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 1);
+        put_timeline_event(&mut payload, &sample_timeline()[0]);
+        payload[8] = 9; // segment byte: 4 (count) + 4 (die) in
+        let err = decode_response(R_TIMELINE, &payload).unwrap_err();
+        assert!(err.contains("segment code"), "{err}");
+
+        // and trailing bytes after a well-formed list are rejected
+        let (_, mut payload) = encode_response(&Response::Timeline(sample_timeline()));
+        payload.push(0);
+        assert!(decode_response(R_TIMELINE, &payload).is_err());
     }
 
     #[test]

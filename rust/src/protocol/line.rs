@@ -147,6 +147,7 @@ pub fn format_response(resp: &Response) -> String {
             format!("OK trace {body}")
         }
         Response::Snapshot(_) => "ERR snapshot responses need the v1 framed protocol".into(),
+        Response::Timeline(_) => "ERR timeline responses need the v1 framed protocol".into(),
         Response::Registered { name, task, score } => {
             format!("OK registered {name} ({task}, mean train score {score:.4})")
         }
@@ -183,6 +184,9 @@ pub fn format_request(req: &Request) -> Result<String, String> {
             Err("protocol v0 has no snapshot frame; read STATS instead".into())
         }
         Request::Governor => Ok("GOVERNOR".into()),
+        Request::Timeline { .. } => {
+            Err("protocol v0 has no timeline frame; use the v1 framed protocol".into())
+        }
     }
 }
 
@@ -238,6 +242,9 @@ pub fn parse_response(line: &str, expect: &Request) -> Response {
         }
         Request::Snapshot => Response::Error("protocol v0 has no snapshot frame".into()),
         Request::Governor => Response::Governor(body.to_string()),
+        Request::Timeline { .. } => {
+            Response::Error("protocol v0 has no timeline frame".into())
+        }
     }
 }
 
@@ -373,6 +380,16 @@ mod tests {
         );
         assert_eq!(format_request(&Request::Trace { last: 8 }).unwrap(), "TRACE 8");
         assert!(format_request(&Request::Snapshot).is_err());
+        // the timeline profiler is v1-only on every surface
+        assert!(format_request(&Request::Timeline { last: 8 }).is_err());
+        assert_eq!(
+            format_response(&Response::Timeline(vec![])),
+            "ERR timeline responses need the v1 framed protocol"
+        );
+        assert!(matches!(
+            parse_response("OK whatever", &Request::Timeline { last: 8 }),
+            Response::Error(_)
+        ));
         assert!(matches!(
             parse_response("OK trace empty", &Request::Trace { last: 8 }),
             Response::Error(_)

@@ -31,7 +31,10 @@ pub mod stats;
 
 pub use frame::FrameCodec;
 pub use line::LineCodec;
-pub use stats::{GovernorStats, StageStats, StatsSnapshot, TenantStats, TraceEntry, TraceOutcome};
+pub use stats::{
+    DieOccupancy, GovernorStats, Segment, StageStats, StatsSnapshot, TenantStats, TimelineEvent,
+    TraceEntry, TraceOutcome, SEGMENTS,
+};
 
 use std::io::{BufRead, Write};
 
@@ -85,6 +88,10 @@ pub enum Request {
     /// per-die operating points, move counters, energy saved. The v0
     /// spelling is `GOVERNOR`.
     Governor,
+    /// Dump the newest `last` stamped timeline intervals from the
+    /// fleet profiler (DESIGN.md §19), oldest first — the raw material
+    /// for Chrome trace-event export (v1 only; v0 has no spelling).
+    Timeline { last: usize },
 }
 
 /// One scored row, as the protocol reports it.
@@ -125,6 +132,8 @@ pub enum Response {
     /// Governor status one-liner (same String-report shape as
     /// [`Response::Health`], so it rides both wire versions).
     Governor(String),
+    /// Timeline profiler dump, oldest first (v1 only).
+    Timeline(Vec<TimelineEvent>),
     Error(String),
 }
 

@@ -20,8 +20,159 @@ use crate::util::json::{self, Value};
 
 /// Version stamp carried by every exported snapshot. Bump when a field
 /// is added/renamed so recorded trajectories stay interpretable.
-/// v2 added the [`GovernorStats`] block (DESIGN.md §17).
-pub const SNAPSHOT_VERSION: u32 = 2;
+/// v2 added the [`GovernorStats`] block (DESIGN.md §17); v3 added the
+/// per-die occupancy block, tenant busy time and the governor's SLO
+/// breach counter (DESIGN.md §19).
+pub const SNAPSHOT_VERSION: u32 = 3;
+
+/// Number of timeline lifecycle segments a die's wall clock is split
+/// into — the length of every per-die occupancy vector.
+pub const SEGMENTS: usize = 7;
+
+/// One lifecycle segment of a serving die's wall clock (DESIGN.md
+/// §19). Workers stamp these contiguously: every instant of a die
+/// thread's life belongs to exactly one segment, so the per-die
+/// accumulated times tile the timeline and occupancy fractions sum
+/// to 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Segment {
+    /// Parked on the empty batcher queue, no work pending.
+    Idle,
+    /// First row arrived; holding the batch window open for more.
+    BatchWait,
+    /// Analog conversions: driving the hidden layer forward (the
+    /// physical counter window, DAC load -> counter read).
+    Convert,
+    /// Extra rotation passes a virtual die spends re-using its
+    /// physical columns (Section V; 0-width on physical dies).
+    RotationPass,
+    /// Digital transfer: scoring rows against output heads and
+    /// writing replies back.
+    Transfer,
+    /// Control-plane work: set-env, renormalisation, tenant
+    /// register/unregister, online updates, retunes.
+    Control,
+    /// Fleet-health work: probe reads and chip-in-the-loop refits.
+    ProbeRefit,
+}
+
+impl Segment {
+    /// Every segment, in wire-code order.
+    pub const ALL: [Segment; SEGMENTS] = [
+        Segment::Idle,
+        Segment::BatchWait,
+        Segment::Convert,
+        Segment::RotationPass,
+        Segment::Transfer,
+        Segment::Control,
+        Segment::ProbeRefit,
+    ];
+
+    /// Stable wire code (v1 timeline frames) — also the index into
+    /// per-die occupancy vectors.
+    pub fn code(self) -> u8 {
+        match self {
+            Segment::Idle => 0,
+            Segment::BatchWait => 1,
+            Segment::Convert => 2,
+            Segment::RotationPass => 3,
+            Segment::Transfer => 4,
+            Segment::Control => 5,
+            Segment::ProbeRefit => 6,
+        }
+    }
+
+    /// Inverse of [`Segment::code`].
+    pub fn from_code(code: u8) -> Option<Segment> {
+        Segment::ALL.get(code as usize).copied()
+    }
+
+    /// Stable snake_case name (JSON / Prometheus labels / Chrome
+    /// trace track names).
+    pub fn name(self) -> &'static str {
+        match self {
+            Segment::Idle => "idle",
+            Segment::BatchWait => "batch_wait",
+            Segment::Convert => "convert",
+            Segment::RotationPass => "rotation_pass",
+            Segment::Transfer => "transfer",
+            Segment::Control => "control",
+            Segment::ProbeRefit => "probe_refit",
+        }
+    }
+}
+
+impl std::fmt::Display for Segment {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One stamped interval of a die's timeline: `[start_us, end_us)`
+/// microseconds from the coordinator's profiling epoch, spent in one
+/// [`Segment`]. `req_id` carries the first request id of the batch the
+/// interval worked on (`None` for idle/control intervals) so Chrome
+/// flow events can link a request's path batcher -> worker.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimelineEvent {
+    /// Die (worker index) whose clock this interval belongs to.
+    pub die: u32,
+    pub seg: Segment,
+    /// Microseconds from the profiling epoch, inclusive.
+    pub start_us: u64,
+    /// Microseconds from the profiling epoch, exclusive; `>= start_us`.
+    pub end_us: u64,
+    /// First request id served in this interval, when any.
+    pub req_id: Option<u64>,
+}
+
+impl std::fmt::Display for TimelineEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "die={} seg={} start={}us end={}us req={}",
+            self.die,
+            self.seg,
+            self.start_us,
+            self.end_us,
+            self.req_id.map_or("-".into(), |id| id.to_string()),
+        )
+    }
+}
+
+/// Accumulated per-die segment times — the exact integer ledger the
+/// occupancy fractions are derived from. Microsecond counts come from
+/// contiguous stamps, so they tile the die's profiled wall clock with
+/// no gaps or overlaps.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DieOccupancy {
+    /// Die (worker index).
+    pub die: u32,
+    /// Accumulated microseconds per segment, indexed by
+    /// [`Segment::code`].
+    pub seg_us: [u64; SEGMENTS],
+}
+
+impl DieOccupancy {
+    /// Total profiled microseconds on this die.
+    pub fn total_us(&self) -> u64 {
+        self.seg_us.iter().sum()
+    }
+
+    /// Occupancy fractions per segment. Sums to 1.0 (within f64
+    /// rounding, < 1e-9) whenever any time has been profiled; all
+    /// zeros before the first stamp.
+    pub fn fractions(&self) -> [f64; SEGMENTS] {
+        let total = self.total_us();
+        let mut out = [0.0; SEGMENTS];
+        if total > 0 {
+            for (f, &us) in out.iter_mut().zip(&self.seg_us) {
+                *f = us as f64 / total as f64;
+            }
+        }
+        out
+    }
+}
 
 /// One latency distribution, reduced to the fields observers need.
 /// Percentiles come from the 32-bucket log2 histogram (same
@@ -154,6 +305,9 @@ pub struct TenantStats {
     pub responses: u64,
     /// Modelled energy booked to this tenant's answered rows, fJ.
     pub energy_fj: u64,
+    /// Die compute time attributed to this tenant's rows,
+    /// microseconds — the numerator of its utilization share.
+    pub busy_us: u64,
     /// Mean chip-in-the-loop training score across dies.
     pub train_score: f64,
     /// End-to-end latency of this tenant's answered rows.
@@ -202,6 +356,13 @@ pub struct StatsSnapshot {
     /// Traffic-adaptive governor activity (DESIGN.md §17).
     pub governor: GovernorStats,
     pub tenants: Vec<TenantStats>,
+    /// Per-die occupancy ledgers from the timeline profiler
+    /// (DESIGN.md §19), indexed by die id. Empty until a worker's
+    /// first stamp.
+    pub occupancy: Vec<DieOccupancy>,
+    /// Governor ticks that observed a windowed p99 above the latency
+    /// SLO (fleet-wide or any tenant's), cumulative since boot.
+    pub slo_breaches: u64,
 }
 
 impl StatsSnapshot {
@@ -279,12 +440,28 @@ impl StatsSnapshot {
                     ("requests".into(), u(t.requests)),
                     ("responses".into(), u(t.responses)),
                     ("energy_fj".into(), u(t.energy_fj)),
+                    ("busy_us".into(), u(t.busy_us)),
                     ("train_score".into(), Value::Num(t.train_score)),
                     ("latency".into(), t.latency.to_value()),
                 ])
             })
             .collect();
         fields.push(("tenants".into(), Value::Arr(tenants)));
+        let occupancy = self
+            .occupancy
+            .iter()
+            .map(|o| {
+                Value::Obj(vec![
+                    ("die".into(), u(o.die as u64)),
+                    (
+                        "seg_us".into(),
+                        Value::Arr(o.seg_us.iter().map(|&us| u(us)).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        fields.push(("occupancy".into(), Value::Arr(occupancy)));
+        fields.push(("slo_breaches".into(), u(self.slo_breaches)));
         let mut out = String::new();
         Value::Obj(fields).write(&mut out);
         out
@@ -328,6 +505,7 @@ impl StatsSnapshot {
                 requests: tf("requests")?,
                 responses: tf("responses")?,
                 energy_fj: tf("energy_fj")?,
+                busy_us: tf("busy_us")?,
                 train_score: t
                     .get("train_score")
                     .and_then(Value::as_f64)
@@ -336,6 +514,34 @@ impl StatsSnapshot {
                     t.get("latency").ok_or("tenant missing 'latency'")?,
                 )?,
             });
+        }
+        let mut occupancy = Vec::new();
+        for o in v
+            .get("occupancy")
+            .and_then(Value::as_arr)
+            .ok_or("snapshot missing 'occupancy'")?
+        {
+            let die = o
+                .get("die")
+                .and_then(Value::as_u64)
+                .ok_or("occupancy entry missing 'die'")? as u32;
+            let arr = o
+                .get("seg_us")
+                .and_then(Value::as_arr)
+                .ok_or("occupancy entry missing 'seg_us'")?;
+            if arr.len() != SEGMENTS {
+                return Err(format!(
+                    "occupancy entry has {} segments (expected {SEGMENTS})",
+                    arr.len()
+                ));
+            }
+            let mut seg_us = [0u64; SEGMENTS];
+            for (dst, val) in seg_us.iter_mut().zip(arr) {
+                *dst = val
+                    .as_u64()
+                    .ok_or("occupancy segment time is not an unsigned integer")?;
+            }
+            occupancy.push(DieOccupancy { die, seg_us });
         }
         Ok(StatsSnapshot {
             version,
@@ -363,6 +569,8 @@ impl StatsSnapshot {
                 v.get("governor").ok_or("snapshot missing 'governor'")?,
             )?,
             tenants,
+            occupancy,
+            slo_breaches: field("slo_breaches")?,
         })
     }
 
@@ -396,6 +604,7 @@ impl StatsSnapshot {
             "velm_governor_femtojoules_saved_total",
             self.governor.fj_saved,
         );
+        counter("velm_governor_slo_breaches_total", self.slo_breaches);
         out.push_str(&format!(
             "# TYPE velm_uptime_seconds gauge\nvelm_uptime_seconds {}\n",
             self.uptime_us as f64 * 1e-6
@@ -437,6 +646,26 @@ impl StatsSnapshot {
                 ));
             }
         }
+        if !self.occupancy.is_empty() {
+            out.push_str("# TYPE velm_die_occupancy_ratio gauge\n");
+            for o in &self.occupancy {
+                for (seg, f) in Segment::ALL.iter().zip(o.fractions()) {
+                    out.push_str(&format!(
+                        "velm_die_occupancy_ratio{{die=\"{}\",segment=\"{}\"}} {f}\n",
+                        o.die,
+                        seg.name()
+                    ));
+                }
+            }
+            out.push_str("# TYPE velm_die_busy_us_total counter\n");
+            for o in &self.occupancy {
+                out.push_str(&format!(
+                    "velm_die_busy_us_total{{die=\"{}\"}} {}\n",
+                    o.die,
+                    o.total_us()
+                ));
+            }
+        }
         if !self.tenants.is_empty() {
             out.push_str("# TYPE velm_tenant_requests_total counter\n");
             for t in &self.tenants {
@@ -461,6 +690,27 @@ impl StatsSnapshot {
                     prom_label(&t.name),
                     t.energy_fj
                 ));
+            }
+            out.push_str("# TYPE velm_tenant_busy_us_total counter\n");
+            for t in &self.tenants {
+                out.push_str(&format!(
+                    "velm_tenant_busy_us_total{{tenant={}}} {}\n",
+                    prom_label(&t.name),
+                    t.busy_us
+                ));
+            }
+            // utilization share: this tenant's compute time over all
+            // tenant-attributed compute time (a gauge in [0, 1])
+            let busy_total: u64 = self.tenants.iter().map(|t| t.busy_us).sum();
+            if busy_total > 0 {
+                out.push_str("# TYPE velm_tenant_utilization_share gauge\n");
+                for t in &self.tenants {
+                    out.push_str(&format!(
+                        "velm_tenant_utilization_share{{tenant={}}} {}\n",
+                        prom_label(&t.name),
+                        t.busy_us as f64 / busy_total as f64
+                    ));
+                }
             }
             out.push_str("# TYPE velm_tenant_latency_us gauge\n");
             for t in &self.tenants {
@@ -520,9 +770,15 @@ impl StatsSnapshot {
                 requests: 5,
                 responses: 5,
                 energy_fj: 30_000,
+                busy_us: 400,
                 train_score: 0.9375,
                 latency: StageStats { count: 5, sum_us: 500, p50_us: 96, p90_us: 192, p99_us: 192 },
             }],
+            occupancy: vec![
+                DieOccupancy { die: 0, seg_us: [500, 100, 200, 0, 150, 40, 10] },
+                DieOccupancy { die: 1, seg_us: [800, 50, 100, 30, 20, 0, 0] },
+            ],
+            slo_breaches: 1,
         }
     }
 }
@@ -706,6 +962,41 @@ mod tests {
             assert_eq!(TraceOutcome::from_code(o.code()), Some(o));
         }
         assert_eq!(TraceOutcome::from_code(9), None);
+    }
+
+    #[test]
+    fn segment_codes_roundtrip_and_cover_all() {
+        for (i, seg) in Segment::ALL.iter().enumerate() {
+            assert_eq!(seg.code() as usize, i);
+            assert_eq!(Segment::from_code(seg.code()), Some(*seg));
+            assert!(!seg.name().is_empty());
+        }
+        assert_eq!(Segment::from_code(SEGMENTS as u8), None);
+    }
+
+    #[test]
+    fn occupancy_fractions_sum_to_one() {
+        let o = DieOccupancy { die: 0, seg_us: [7, 13, 0, 1, 997, 3, 11] };
+        assert_eq!(o.total_us(), 1032);
+        let sum: f64 = o.fractions().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "fractions sum to {sum}");
+        let empty = DieOccupancy::default();
+        assert_eq!(empty.fractions(), [0.0; SEGMENTS]);
+    }
+
+    #[test]
+    fn occupancy_and_slo_breaches_survive_json_and_reach_prometheus() {
+        let snap = sample();
+        let parsed = StatsSnapshot::from_json(&snap.to_json()).unwrap();
+        assert_eq!(parsed.occupancy, snap.occupancy);
+        assert_eq!(parsed.slo_breaches, 1);
+        assert_eq!(parsed.tenants[0].busy_us, 400);
+        let text = snap.to_prometheus();
+        assert!(text.contains("velm_governor_slo_breaches_total 1\n"));
+        assert!(text.contains("velm_die_occupancy_ratio{die=\"0\",segment=\"idle\"} 0.5\n"));
+        assert!(text.contains("velm_die_busy_us_total{die=\"1\"} 1000\n"));
+        assert!(text.contains("velm_tenant_busy_us_total{tenant=\"digits π\"} 400\n"));
+        assert!(text.contains("velm_tenant_utilization_share{tenant=\"digits π\"} 1\n"));
     }
 
     #[test]

@@ -121,6 +121,30 @@ fn traces_stages_and_energy_are_consistent_over_v1() {
     assert_eq!(slope.latency.count, 4);
     assert!(slope.energy_fj > 0, "tenant rows must be priced");
     assert!(slope.energy_fj <= s.energy_fj);
+    assert!(slope.busy_us >= 1, "tenant utilization share must be booked");
+
+    // fleet timeline (DESIGN.md §19): both dies stamped (tenant
+    // registration alone broadcasts a control interval to every
+    // worker), and each die's occupancy fractions tile its profiled
+    // wall clock exactly
+    assert_eq!(s.occupancy.len(), 2, "one occupancy ledger per die");
+    for o in &s.occupancy {
+        assert!(o.total_us() > 0, "die {} never stamped", o.die);
+        let sum: f64 = o.fractions().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "die {}: fractions sum {sum}", o.die);
+    }
+
+    // the timeline frame answers over v1 and exports as a Chrome trace
+    // Perfetto would load: validated structurally, not by eyeball
+    let events = c.timeline(4096).expect("timeline over v1");
+    assert!(!events.is_empty(), "served traffic must leave timeline events");
+    for w in events.windows(2) {
+        assert!(w[0].start_us <= w[1].start_us, "events must arrive oldest-first");
+    }
+    let trace_json = velm::coordinator::timeline::chrome_trace_json(&events);
+    let records = velm::coordinator::timeline::validate_chrome_trace(&trace_json)
+        .expect("exported trace must validate");
+    assert!(records > events.len(), "metadata + B/E pairs outnumber the events");
 
     // the JSON export parses back into the identical snapshot, and the
     // Prometheus rendering carries the same counters
@@ -148,6 +172,8 @@ fn v0_stays_display_only_for_traces_and_has_no_snapshot() {
     let err = v0.trace(8).unwrap_err().to_string();
     assert!(err.contains("display-only"), "{err}");
     let err = v0.snapshot().unwrap_err().to_string();
+    assert!(err.contains("v1"), "{err}");
+    let err = v0.timeline(8).unwrap_err().to_string();
     assert!(err.contains("v1"), "{err}");
 
     // the raw v0 TRACE verb answers in ONE line (the line grammar's

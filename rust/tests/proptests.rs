@@ -5,8 +5,8 @@ use velm::chip::{counter, dac, mirror, neuron, spi, ChipModel};
 use velm::config::{ChipConfig, Transfer};
 use velm::extension::RotationPlan;
 use velm::protocol::{
-    frame, PredictRow, Prediction, Request, Response, StageStats, StatsSnapshot, TenantStats,
-    TraceEntry, TraceOutcome,
+    frame, DieOccupancy, PredictRow, Prediction, Request, Response, Segment, StageStats,
+    StatsSnapshot, TenantStats, TimelineEvent, TraceEntry, TraceOutcome, SEGMENTS,
 };
 use velm::testing::{check, close, ensure};
 use velm::util::mat::{ridge_solve, Mat};
@@ -288,6 +288,17 @@ fn arb_trace_entry(rng: &mut Prng) -> TraceEntry {
     }
 }
 
+fn arb_timeline_event(rng: &mut Prng) -> TimelineEvent {
+    let start_us = rng.next_u64() % 1_000_000;
+    TimelineEvent {
+        die: rng.usize(64) as u32,
+        seg: Segment::from_code(rng.usize(SEGMENTS) as u8).unwrap(),
+        start_us,
+        end_us: start_us + rng.next_u64() % 1_000_000,
+        req_id: if rng.bool(0.5) { Some(rng.next_u64()) } else { None },
+    }
+}
+
 fn arb_snapshot(rng: &mut Prng) -> StatsSnapshot {
     StatsSnapshot {
         // the frame codec refuses any other version in-band, so a
@@ -327,15 +338,26 @@ fn arb_snapshot(rng: &mut Prng) -> StatsSnapshot {
                 requests: rng.next_u64() % 1_000_000,
                 responses: rng.next_u64() % 1_000_000,
                 energy_fj: rng.next_u64() >> 1,
+                busy_us: rng.next_u64() % 1_000_000,
                 train_score: rng.range(0.0, 1.0),
                 latency: arb_stage(rng),
             })
             .collect(),
+        occupancy: (0..rng.usize(3))
+            .map(|die| {
+                let mut seg_us = [0u64; SEGMENTS];
+                for us in &mut seg_us {
+                    *us = rng.next_u64() % 1_000_000;
+                }
+                DieOccupancy { die: die as u32, seg_us }
+            })
+            .collect(),
+        slo_breaches: rng.next_u64() % 1_000,
     }
 }
 
 fn arb_request(rng: &mut Prng) -> Request {
-    match rng.usize(12) {
+    match rng.usize(13) {
         0 => Request::Ping,
         1 => Request::Stats,
         2 => Request::Health,
@@ -355,12 +377,13 @@ fn arb_request(rng: &mut Prng) -> Request {
         8 => Request::Unregister { name: arb_string(rng) },
         9 => Request::Trace { last: rng.usize(1024) },
         10 => Request::Governor,
+        11 => Request::Timeline { last: rng.usize(4096) },
         _ => Request::Snapshot,
     }
 }
 
 fn arb_response(rng: &mut Prng) -> Response {
-    match rng.usize(13) {
+    match rng.usize(14) {
         0 => Response::Pong,
         1 => Response::Stats(arb_string(rng)),
         2 => Response::Health(arb_string(rng)),
@@ -377,6 +400,7 @@ fn arb_response(rng: &mut Prng) -> Response {
         9 => Response::Trace((0..rng.usize(4)).map(|_| arb_trace_entry(rng)).collect()),
         10 => Response::Snapshot(arb_snapshot(rng)),
         11 => Response::Governor(arb_string(rng)),
+        12 => Response::Timeline((0..rng.usize(5)).map(|_| arb_timeline_event(rng)).collect()),
         _ => Response::Error(arb_string(rng)),
     }
 }

@@ -31,6 +31,14 @@ pub const RULE_RELAXED: &str = "relaxed-justified";
 pub const RULE_TAGS: &str = "frame-tag-unique";
 /// Rule 4: metrics booking stays at its one site in the worker.
 pub const RULE_BOOKING: &str = "single-booking-site";
+/// Rule 5: reactor code never issues a blocking read/write call on a
+/// socket it has registered as nonblocking (DESIGN.md §20). The
+/// reactor's sockets live in nonblocking mode from the moment the
+/// accept thread hands them over, so the blocking `std::io` composites
+/// would spin-fail with `WouldBlock` or, worse, silently rely on a
+/// timeout that was never set; the poll loop must stick to bare
+/// `read`/`write` plus its own buffers.
+pub const RULE_REACTOR: &str = "reactor-nonblocking-io";
 
 // Pattern fragments are concatenated at compile time so this file's
 // own source never contains the contiguous token it scans for.
@@ -49,7 +57,23 @@ const FACADE_ALLOWLIST: &[&str] = &["sync.rs", "testing/model.rs"];
 const FRAME_FILE: &str = "protocol/frame.rs";
 /// Frame tag constants expected at minimum; a refactor that silently
 /// drops the tag table should fail the lint, not pass it vacuously.
-const MIN_FRAME_TAGS: usize = 28;
+/// 28 through PR 9; PR 10 adds the correlation envelope, handshake,
+/// tenant-update and streaming-reply tags (DESIGN.md §20).
+const MIN_FRAME_TAGS: usize = 37;
+
+/// Path (relative to `src/`) holding the connection reactor.
+const REACTOR_FILE: &str = "coordinator/reactor.rs";
+/// Blocking I/O composites banned from the reactor's non-test code:
+/// each loops internally until satisfied, which deadlocks or busy-fails
+/// on a nonblocking socket. Fragments are concatenated so this file's
+/// own source never contains the scanned token.
+const REACTOR_BANNED_CALLS: &[&str] = &[
+    concat!(".read_", "exact("),
+    concat!(".read_", "to_end("),
+    concat!(".read_", "to_string("),
+    concat!(".write_", "all("),
+    concat!(".set_read_", "timeout("),
+];
 
 /// Path (relative to `src/`) that owns metrics booking.
 const BOOKING_FILE: &str = "coordinator/worker.rs";
@@ -170,7 +194,35 @@ pub fn lint_source(rel: &str, text: &str, report: &mut LintReport) {
     if rel == FRAME_FILE {
         check_frame_tags(rel, &lines, test_start, report);
     }
+    if rel == REACTOR_FILE {
+        check_reactor_io(rel, &lines, test_start, report);
+    }
     check_booking(rel, &lines, test_start, report);
+}
+
+/// Rule 5: the reactor's non-test code must not call the blocking
+/// `std::io` composites on its (nonblocking) sockets.
+fn check_reactor_io(rel: &str, lines: &[ScanLine], test_start: usize, report: &mut LintReport) {
+    for (i, line) in lines.iter().enumerate() {
+        if i >= test_start {
+            break;
+        }
+        for call in REACTOR_BANNED_CALLS {
+            if line.code.contains(call) {
+                report.findings.push(Finding {
+                    file: rel.to_string(),
+                    line: i + 1,
+                    rule: RULE_REACTOR,
+                    message: format!(
+                        "`{call}` in reactor code; the reactor's sockets are \
+                         nonblocking, so blocking composites would spin on \
+                         WouldBlock — use bare read/write with the \
+                         connection's buffers instead"
+                    ),
+                });
+            }
+        }
+    }
 }
 
 /// Rule 1: no direct `std::sync::atomic` / `std::sync::Mutex` use.
@@ -640,6 +692,35 @@ mod tests {
              fn extra(m: &M) {{ m.record_conversions(5); }}\n}}\n"
         );
         assert!(lint_str("coordinator/worker.rs", &src).is_clean());
+    }
+
+    #[test]
+    fn reactor_io_rule_flags_blocking_calls() {
+        // Seed every banned composite once; each must fire exactly once.
+        for call in REACTOR_BANNED_CALLS {
+            let src = format!(
+                "fn f(s: &mut TcpStream, buf: &mut Vec<u8>) {{\n    s{call}buf).unwrap();\n}}\n"
+            );
+            let r = lint_str("coordinator/reactor.rs", &src);
+            assert_eq!(r.findings.len(), 1, "{call}: {:?}", r.findings);
+            assert_eq!(r.findings[0].rule, RULE_REACTOR);
+            assert_eq!(r.findings[0].line, 2);
+        }
+    }
+
+    #[test]
+    fn reactor_io_rule_scopes_to_the_reactor_and_its_code_region() {
+        let call = REACTOR_BANNED_CALLS[0];
+        // Other files may use blocking composites (the legacy v0 path
+        // in server.rs does, on sockets it keeps in blocking mode).
+        let src = format!("fn f(s: &mut TcpStream, b: &mut [u8]) {{\n    s{call}b).unwrap();\n}}\n");
+        assert!(lint_str("coordinator/server.rs", &src).is_clean());
+        // Comments and test code in the reactor itself are exempt.
+        let src = format!(
+            "// prose mentioning s{call}b) only\nfn f() {{}}\n\
+             {TEST_REGION}\nmod tests {{\n    fn g(s: &mut T, b: &mut [u8]) {{ s{call}b).unwrap(); }}\n}}\n"
+        );
+        assert!(lint_str("coordinator/reactor.rs", &src).is_clean());
     }
 
     #[test]

@@ -15,6 +15,14 @@
 //! The CLI (`velm client`), the examples and the integration tests all
 //! talk to the fleet through this type instead of hand-rolling socket
 //! strings.
+//!
+//! Since PR 10 (DESIGN.md §20) the v1 wire also carries **pipelined**
+//! traffic: [`Client::send_pipelined`] fires a correlation-wrapped
+//! request without waiting, [`Client::recv_pipelined`] collects
+//! replies in completion order, and [`Client::predict_stream`] turns a
+//! batch into row-by-row streamed replies as dies finish. Verbs a
+//! transport cannot carry fail up front with a capability error naming
+//! the required protocol — never a parse error.
 
 use std::io::BufReader;
 use std::net::{TcpStream, ToSocketAddrs};
@@ -23,6 +31,7 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::coordinator::Coordinator;
+use crate::protocol::frame;
 use crate::protocol::{
     Codec, FrameCodec, LineCodec, PredictRow, Prediction, Request, Response, StatsSnapshot,
     TimelineEvent, TraceEntry,
@@ -31,6 +40,9 @@ use crate::protocol::{
 /// A handle on one serving fleet, over TCP (v0 or v1) or in-process.
 pub struct Client {
     transport: Transport,
+    /// Next correlation id for pipelined/streamed v1 requests. Client-
+    /// chosen; the server echoes it verbatim (DESIGN.md §20).
+    next_corr: u64,
 }
 
 enum Transport {
@@ -61,12 +73,13 @@ impl Client {
         let writer = stream.try_clone().context("cloning the client stream")?;
         Ok(Client {
             transport: Transport::Wire { reader: BufReader::new(stream), writer, codec },
+            next_corr: 1,
         })
     }
 
     /// Wrap an in-process coordinator — same typed dispatch, no sockets.
     pub fn in_process(coord: Arc<Coordinator>) -> Client {
-        Client { transport: Transport::Local(coord) }
+        Client { transport: Transport::Local(coord), next_corr: 1 }
     }
 
     /// Wire protocol version: `Some(0)` / `Some(1)` over TCP, `None`
@@ -120,15 +133,235 @@ impl Client {
     /// An empty batch is refused on every transport (the v0 fallback
     /// would otherwise vacuously succeed where v1 errors).
     pub fn predict_batch(&mut self, rows: &[PredictRow]) -> Result<Vec<Prediction>> {
+        self.predict_batch_with_progress(rows, |_, _| {})
+    }
+
+    /// [`Client::predict_batch`] with a progress callback: `on_row(i,
+    /// prediction)` fires once per row. Over v0's row-per-round-trip
+    /// degradation it fires as each round-trip lands — real progress
+    /// through a long batch; over v1/in-process the reply is one unit,
+    /// so the callback runs when it arrives (use
+    /// [`Client::predict_stream`] for genuine streaming).
+    pub fn predict_batch_with_progress(
+        &mut self,
+        rows: &[PredictRow],
+        mut on_row: impl FnMut(usize, &Prediction),
+    ) -> Result<Vec<Prediction>> {
         anyhow::ensure!(!rows.is_empty(), "empty batch");
         if self.wire_version() == Some(0) {
-            return rows
-                .iter()
-                .map(|row| self.predict(row.tenant.as_deref(), &row.features))
-                .collect();
+            let mut out = Vec::with_capacity(rows.len());
+            for (i, row) in rows.iter().enumerate() {
+                let p = self.predict(row.tenant.as_deref(), &row.features)?;
+                on_row(i, &p);
+                out.push(p);
+            }
+            return Ok(out);
         }
         match self.call(Request::BatchPredict { rows: rows.to_vec() })? {
-            Response::Batch(ps) => Ok(ps),
+            Response::Batch(ps) => {
+                for (i, p) in ps.iter().enumerate() {
+                    on_row(i, p);
+                }
+                Ok(ps)
+            }
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// Streamed batch prediction (DESIGN.md §20): rows are answered as
+    /// dies finish, `on_row(index, prediction)` firing in *completion*
+    /// order; returns the reassembled row-order predictions plus the
+    /// total conversion passes reported by the end-of-stream frame.
+    /// Needs the v1 wire (correlation envelopes) or in-process; v0 has
+    /// no stream frame.
+    pub fn predict_stream(
+        &mut self,
+        rows: &[PredictRow],
+        mut on_row: impl FnMut(usize, &Prediction),
+    ) -> Result<(Vec<Prediction>, u64)> {
+        anyhow::ensure!(!rows.is_empty(), "empty batch");
+        anyhow::ensure!(
+            self.wire_version() != Some(0),
+            "streamed prediction needs the v1 framed protocol (v0 has no \
+             stream frame; use predict_batch)"
+        );
+        let corr = self.next_corr;
+        self.next_corr += 1;
+        match &mut self.transport {
+            Transport::Local(coord) => {
+                // in-process: poll the per-row completion channels the
+                // same way the reactor's worker does
+                let rxs = coord.submit_batch(rows)?;
+                let mut pending: Vec<Option<_>> = rxs.into_iter().map(Some).collect();
+                let mut out: Vec<Option<Prediction>> = vec![None; rows.len()];
+                let mut open = pending.len();
+                let mut passes: u64 = 0;
+                while open > 0 {
+                    let mut moved = false;
+                    for (i, slot) in pending.iter_mut().enumerate() {
+                        let Some(rx) = slot else { continue };
+                        match rx.try_recv() {
+                            Ok(resp) => {
+                                passes += resp.passes as u64;
+                                let p = resp.to_prediction();
+                                on_row(i, &p);
+                                out[i] = Some(p);
+                                *slot = None;
+                                open -= 1;
+                                moved = true;
+                            }
+                            Err(std::sync::mpsc::TryRecvError::Empty) => {}
+                            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                                anyhow::bail!("batch row {i}: worker dropped the request");
+                            }
+                        }
+                    }
+                    if !moved {
+                        std::thread::sleep(std::time::Duration::from_micros(200));
+                    }
+                }
+                let preds = out
+                    .into_iter()
+                    .map(|p| p.expect("every open row resolved"))
+                    .collect();
+                Ok((preds, passes))
+            }
+            Transport::Wire { reader, writer, .. } => {
+                let req = Request::BatchStream { rows: rows.to_vec() };
+                let (ty, payload) = frame::encode_correlated_request(corr, &req);
+                frame::write_frame(writer, ty, &payload).context("sending the stream request")?;
+                let mut out: Vec<Option<Prediction>> = vec![None; rows.len()];
+                let passes;
+                loop {
+                    let (ty, payload) = frame::read_frame(reader)
+                        .context("reading a stream frame")?
+                        .context("server closed the connection mid-stream")?;
+                    match ty {
+                        frame::R_STREAM_ROW => {
+                            let (c, idx, p) = frame::decode_stream_row(&payload)
+                                .map_err(|e| anyhow::anyhow!(e))?;
+                            anyhow::ensure!(
+                                c == corr,
+                                "stream row for correlation id {c} (want {corr})"
+                            );
+                            let i = idx as usize;
+                            anyhow::ensure!(i < out.len(), "stream row index {i} out of range");
+                            on_row(i, &p);
+                            out[i] = Some(p);
+                        }
+                        frame::R_STREAM_END => {
+                            let (c, n, total) = frame::decode_stream_end(&payload)
+                                .map_err(|e| anyhow::anyhow!(e))?;
+                            anyhow::ensure!(
+                                c == corr,
+                                "stream end for correlation id {c} (want {corr})"
+                            );
+                            anyhow::ensure!(
+                                n as usize == rows.len(),
+                                "stream ended after {n} of {} rows",
+                                rows.len()
+                            );
+                            passes = total;
+                            break;
+                        }
+                        frame::R_CORR => {
+                            let (c, resp) = frame::decode_correlated_response(&payload)
+                                .map_err(|e| anyhow::anyhow!(e))?;
+                            anyhow::ensure!(
+                                c == corr,
+                                "reply for correlation id {c} (want {corr})"
+                            );
+                            return Err(unexpected(resp));
+                        }
+                        other => anyhow::bail!("unexpected frame 0x{other:02X} mid-stream"),
+                    }
+                }
+                let preds = out
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, p)| p.with_context(|| format!("row {i} missing from the stream")))
+                    .collect::<Result<Vec<_>>>()?;
+                Ok((preds, passes))
+            }
+        }
+    }
+
+    /// Fire one correlation-wrapped request without waiting for the
+    /// reply (v1 wire only) — many may be in flight on one connection.
+    /// Returns the id to match against [`Client::recv_pipelined`].
+    pub fn send_pipelined(&mut self, req: &Request) -> Result<u64> {
+        anyhow::ensure!(
+            self.wire_version() == Some(1),
+            "pipelined requests need the v1 framed protocol"
+        );
+        let corr = self.next_corr;
+        self.next_corr += 1;
+        match &mut self.transport {
+            Transport::Wire { writer, .. } => {
+                let (ty, payload) = frame::encode_correlated_request(corr, req);
+                frame::write_frame(writer, ty, &payload)
+                    .context("sending the pipelined request")?;
+                Ok(corr)
+            }
+            Transport::Local(_) => unreachable!("gated on wire_version above"),
+        }
+    }
+
+    /// Collect the next pipelined reply (v1 wire only). Replies arrive
+    /// in *completion* order, not send order — match by the echoed id.
+    pub fn recv_pipelined(&mut self) -> Result<(u64, Response)> {
+        anyhow::ensure!(
+            self.wire_version() == Some(1),
+            "pipelined requests need the v1 framed protocol"
+        );
+        match &mut self.transport {
+            Transport::Wire { reader, .. } => {
+                let (ty, payload) = frame::read_frame(reader)
+                    .context("reading a pipelined reply")?
+                    .context("server closed the connection")?;
+                anyhow::ensure!(
+                    ty == frame::R_CORR,
+                    "expected a correlated reply, got frame 0x{ty:02X}"
+                );
+                let (corr, resp) =
+                    frame::decode_correlated_response(&payload).map_err(|e| anyhow::anyhow!(e))?;
+                Ok((corr, resp))
+            }
+            Transport::Local(_) => unreachable!("gated on wire_version above"),
+        }
+    }
+
+    /// HELLO handshake (DESIGN.md §20): present `token`, bind the
+    /// connection to the tenant scope it grants. Returns the granted
+    /// scope (`["*"]` = unrestricted). Needs v1 or in-process; v0 has
+    /// no hello frame.
+    pub fn hello(&mut self, token: &str) -> Result<Vec<String>> {
+        anyhow::ensure!(
+            self.wire_version() != Some(0),
+            "the HELLO handshake needs the v1 framed protocol (v0 has no hello frame)"
+        );
+        match self.call(Request::Hello { token: token.to_string() })? {
+            Response::HelloOk { tenants } => Ok(tenants),
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// Stream one labelled OS-ELM row into a registered tenant's heads
+    /// (shared-P update, DESIGN.md §14/§20). `targets` carries one
+    /// value per head. Needs v1 or in-process; v0 has no tenant-update
+    /// frame.
+    pub fn tenant_update(&mut self, name: &str, features: &[f64], targets: &[f64]) -> Result<()> {
+        anyhow::ensure!(
+            self.wire_version() != Some(0),
+            "live tenant updates need the v1 framed protocol (v0 has no tenant-update frame)"
+        );
+        let req = Request::TenantUpdate {
+            name: name.to_string(),
+            features: features.to_vec(),
+            targets: targets.to_vec(),
+        };
+        match self.call(req)? {
+            Response::Updated { .. } => Ok(()),
             other => Err(unexpected(other)),
         }
     }

@@ -369,6 +369,18 @@ pub struct SystemConfig {
     /// once at startup — the ring never reallocates after boot —
     /// `velm serve --trace-cap N` overrides the 512 default.
     pub trace_cap: usize,
+    /// Connection-reactor worker pool size (DESIGN.md §20): how many
+    /// dispatch threads drain decoded v1 requests into the
+    /// coordinator. The server's thread count is `reactor_workers + 2`
+    /// (accept + poll loop) regardless of how many connections are
+    /// open — connections are table entries, not threads.
+    pub reactor_workers: usize,
+    /// Connection auth tokens (DESIGN.md §20), each
+    /// `"token=name,name"` (that token's Hello scopes the connection
+    /// to those tenants) or `"token=*"` (unrestricted). Empty = no
+    /// tokens configured; connections that skip Hello stay
+    /// unrestricted either way, preserving pre-handshake clients.
+    pub auth_tokens: Vec<String>,
     /// Fleet-health settings: probe cadence, drift thresholds,
     /// recovery/quarantine policy.
     pub fleet: crate::fleet::FleetConfig,
@@ -395,6 +407,8 @@ impl Default for SystemConfig {
             die_geoms: Vec::new(),
             read_timeout: Some(std::time::Duration::from_secs(120)),
             trace_cap: crate::coordinator::trace::DEFAULT_TRACE_CAPACITY,
+            reactor_workers: 4,
+            auth_tokens: Vec::new(),
             fleet: crate::fleet::FleetConfig::default(),
             governor: crate::governor::GovernorConfig::default(),
         }

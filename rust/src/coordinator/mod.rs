@@ -24,6 +24,7 @@
 pub mod batcher;
 pub mod hist;
 pub mod metrics;
+pub mod reactor;
 pub mod request;
 pub mod router;
 pub mod server;
@@ -248,6 +249,14 @@ pub struct Coordinator {
     /// (`SystemConfig::read_timeout`): idle/dead clients drain instead
     /// of pinning a connection thread each.
     pub read_timeout: Option<std::time::Duration>,
+    /// Token -> scope table parsed from `SystemConfig::auth_tokens`
+    /// (DESIGN.md §20). Consulted by [`Request::Hello`]; empty means no
+    /// tokens are configured and every connection stays unrestricted.
+    auth: std::collections::BTreeMap<String, reactor::Scope>,
+    /// Reactor worker-pool width (`SystemConfig::reactor_workers`): the
+    /// TCP serve path runs exactly `reactor_workers + 2` threads no
+    /// matter how many connections are open (DESIGN.md §20).
+    pub reactor_workers: usize,
 }
 
 impl Coordinator {
@@ -475,6 +484,7 @@ impl Coordinator {
                 .expect("spawning governor");
             (stop, handle)
         });
+        let auth = reactor::parse_auth_tokens(&sys.auth_tokens)?;
         // the ensure above pinned train_x's width to vd, so vd IS the
         // dimension submit() must validate against
         Ok(Coordinator {
@@ -492,7 +502,16 @@ impl Coordinator {
             governor,
             governor_thread,
             read_timeout: sys.read_timeout,
+            auth,
+            reactor_workers: sys.reactor_workers,
         })
+    }
+
+    /// Look up an auth token in the `SystemConfig::auth_tokens` table
+    /// (DESIGN.md §20). `None` = unknown token; the caller should
+    /// refuse the handshake and leave the connection's scope unchanged.
+    pub fn resolve_token(&self, token: &str) -> Option<reactor::Scope> {
+        self.auth.get(token).cloned()
     }
 
     /// The one typed entry point every caller shares (DESIGN.md §15):
@@ -549,6 +568,25 @@ impl Coordinator {
             Request::Timeline { last } => {
                 Response::Timeline(self.metrics.timeline.recent(last))
             }
+            Request::Hello { token } => match self.resolve_token(&token) {
+                Some(scope) => Response::HelloOk { tenants: scope.listing() },
+                None => Response::Error(reactor::UNKNOWN_TOKEN_MSG.into()),
+            },
+            Request::TenantUpdate { name, features, targets } => {
+                match self.tenant_update(&name, &features, &targets) {
+                    Ok(()) => Response::Updated { name },
+                    Err(e) => Response::Error(format!("{e:#}")),
+                }
+            }
+            // Blocking transports answer a stream request like a
+            // buffered batch; only the reactor emits row-by-row frames
+            // (DESIGN.md §20).
+            Request::BatchStream { rows } => match self.classify_batch(&rows) {
+                Ok(resps) => {
+                    Response::Batch(resps.iter().map(|r| r.to_prediction()).collect())
+                }
+                Err(e) => Response::Error(format!("{e:#}")),
+            },
         }
     }
 
@@ -1077,6 +1115,8 @@ mod tests {
             die_geoms: Vec::new(),
             read_timeout: None,
             trace_cap: 512,
+            reactor_workers: 4,
+            auth_tokens: Vec::new(),
             fleet: Default::default(),
             governor: Default::default(),
         };
@@ -1231,6 +1271,95 @@ mod tests {
             }
             other => panic!("timeline dispatched to {other:?}"),
         }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn streaming_verbs_dispatch_through_handle() {
+        // DESIGN.md §20: Hello resolves tokens against the auth table,
+        // TenantUpdate rides the shared-P OS-ELM path, and BatchStream
+        // on a blocking transport answers exactly like BatchPredict.
+        let (mut sys, chip, xs, ys) = tiny_system();
+        sys.n_chips = 1; // one die -> deterministic scores across calls
+        sys.auth_tokens = vec!["admin=*".into(), "slope-key=slope,aux".into()];
+        let coord = Coordinator::start(&sys, &chip, &xs, &ys, 1e-2, 10).unwrap();
+        let reg_y = regression_targets(&xs);
+        coord
+            .register_tenant(
+                TenantSpec::regression("slope", xs.clone(), &reg_y, 1e-3, 12).unwrap(),
+            )
+            .unwrap();
+        match coord.handle(Request::Hello { token: "admin".into() }) {
+            Response::HelloOk { tenants } => assert_eq!(tenants, vec!["*".to_string()]),
+            other => panic!("hello dispatched to {other:?}"),
+        }
+        match coord.handle(Request::Hello { token: "slope-key".into() }) {
+            // scope listings come back sorted (BTreeSet order)
+            Response::HelloOk { tenants } => {
+                assert_eq!(tenants, vec!["aux".to_string(), "slope".to_string()])
+            }
+            other => panic!("hello dispatched to {other:?}"),
+        }
+        match coord.handle(Request::Hello { token: "wrong".into() }) {
+            Response::Error(e) => assert!(e.contains("unknown auth token"), "{e}"),
+            other => panic!("bad hello dispatched to {other:?}"),
+        }
+        let rows: Vec<PredictRow> = (0..6)
+            .map(|i| PredictRow {
+                tenant: if i % 2 == 0 { None } else { Some("slope".into()) },
+                features: xs[i].clone(),
+            })
+            .collect();
+        let buffered = match coord.handle(Request::BatchPredict { rows: rows.clone() }) {
+            Response::Batch(ps) => ps,
+            other => panic!("batch dispatched to {other:?}"),
+        };
+        match coord.handle(Request::BatchStream { rows }) {
+            Response::Batch(ps) => {
+                assert_eq!(ps.len(), buffered.len());
+                for (s, b) in ps.iter().zip(&buffered) {
+                    assert_eq!(s.label, b.label);
+                    assert_eq!(s.score.to_bits(), b.score.to_bits());
+                }
+            }
+            other => panic!("stream dispatched to {other:?}"),
+        }
+        // live updates move the head: drag the fit toward an offset
+        // target and watch the same row's score follow (DESIGN.md §14)
+        let before = coord.classify_tenant(Some("slope"), xs[0].clone()).unwrap().score;
+        let target = before + 5.0;
+        for _ in 0..30 {
+            match coord.handle(Request::TenantUpdate {
+                name: "slope".into(),
+                features: xs[0].clone(),
+                targets: vec![target],
+            }) {
+                Response::Updated { name } => assert_eq!(name, "slope"),
+                other => panic!("update dispatched to {other:?}"),
+            }
+        }
+        let after = coord.classify_tenant(Some("slope"), xs[0].clone()).unwrap().score;
+        assert!(
+            (target - after).abs() < (target - before).abs(),
+            "updates must pull the head toward the target: before={before} after={after}"
+        );
+        // typed errors: unknown tenant, wrong head count
+        assert!(matches!(
+            coord.handle(Request::TenantUpdate {
+                name: "nosuch".into(),
+                features: xs[0].clone(),
+                targets: vec![0.0],
+            }),
+            Response::Error(_)
+        ));
+        assert!(matches!(
+            coord.handle(Request::TenantUpdate {
+                name: "slope".into(),
+                features: xs[0].clone(),
+                targets: vec![0.0, 1.0],
+            }),
+            Response::Error(_)
+        ));
         coord.shutdown();
     }
 

@@ -1,0 +1,866 @@
+//! Multiplexed connection reactor (DESIGN.md §20): the v1 serve path.
+//!
+//! The historic front end burned one OS thread per TCP connection and
+//! answered one request at a time per connection, so the fleet's
+//! throughput ceiling was the transport, not the hardware. This module
+//! replaces it with a readiness-polling reactor:
+//!
+//!   * an **accept thread** that hands fresh sockets — switched to
+//!     nonblocking mode — to the poll loop over a channel;
+//!   * one **poll loop** thread owning every connection: it drains
+//!     readable bytes into per-connection buffers, cuts complete frames
+//!     out with [`frame::take_frame`], dispatches decoded requests to
+//!     the worker pool, and drains completed replies back out through
+//!     buffered partial writes;
+//!   * a small **fixed worker pool** (`SystemConfig::reactor_workers`)
+//!     sharing one job channel — the only threads that ever block on
+//!     the batcher.
+//!
+//! Total thread count is `workers + 2` no matter how many connections
+//! are open. Connections whose first byte is not [`frame::FRAME_MAGIC`]
+//! are handed to the legacy blocking v0 path in `server.rs` (those
+//! sockets leave nonblocking mode first and do cost a thread each —
+//! the compatibility tax is metered in [`ReactorGauges::legacy_conns`]).
+//!
+//! **Correlation ids.** A v1 client may wrap any request in a
+//! `T_CORR` envelope carrying a caller-chosen `u64` id; the reactor
+//! dispatches envelopes immediately — many may be in flight on one
+//! connection — and answers each with an `R_CORR` envelope echoing the
+//! id, in *completion* order. Bare (uncorrelated) requests keep the
+//! historic strict ordering: a per-connection FIFO dispatches one at a
+//! time so replies land in request order.
+//!
+//! **Streaming batches.** A correlated `BatchStream` request answers
+//! with one `R_STREAM_ROW` frame per row *as each die finishes*
+//! (completion order, row index inside the frame), terminated by an
+//! `R_STREAM_END` frame carrying the row count and total conversion
+//! passes. An uncorrelated `BatchStream` (or one on a blocking
+//! transport) degrades to a buffered `Response::Batch`.
+//!
+//! **Auth scoping.** `Hello{token}` binds the connection to the
+//! [`Scope`] its token grants (`SystemConfig::auth_tokens`);
+//! REGISTER / UNREGISTER / TenantUpdate outside the granted tenant set
+//! and DRAIN outside an unrestricted scope are refused before they
+//! reach the dispatcher. Connections that never shake hands stay
+//! unrestricted, preserving the pre-auth surface.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::protocol::frame;
+use crate::protocol::{Request, Response};
+use crate::sync::{AtomicU64, AtomicUsize, Mutex, Ordering};
+
+use super::request::ClassifyResponse;
+use super::Coordinator;
+
+/// Refusal message for an unknown `Hello` token — shared with
+/// `Coordinator::handle` so the wire and in-process paths agree.
+pub const UNKNOWN_TOKEN_MSG: &str =
+    "unknown auth token (configure SystemConfig::auth_tokens / velm serve --auth-token)";
+
+/// The tenant scope an auth token grants a connection (DESIGN.md §20).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Scope {
+    /// Full surface: every tenant plus admin verbs (DRAIN).
+    Unrestricted,
+    /// Mutating verbs allowed only for the named tenants; admin verbs
+    /// refused. Prediction stays open — scoping guards writes.
+    Tenants(BTreeSet<String>),
+}
+
+impl Scope {
+    /// May this scope mutate (register/unregister/update) `name`?
+    pub fn allows_tenant(&self, name: &str) -> bool {
+        match self {
+            Scope::Unrestricted => true,
+            Scope::Tenants(set) => set.contains(name),
+        }
+    }
+
+    /// May this scope use admin verbs (DRAIN)?
+    pub fn allows_admin(&self) -> bool {
+        matches!(self, Scope::Unrestricted)
+    }
+
+    /// The scope as the handshake reports it: `["*"]` when
+    /// unrestricted, the sorted tenant names otherwise.
+    pub fn listing(&self) -> Vec<String> {
+        match self {
+            Scope::Unrestricted => vec!["*".to_string()],
+            Scope::Tenants(set) => set.iter().cloned().collect(),
+        }
+    }
+
+    /// `Some(message)` when this scope refuses `req`, `None` when the
+    /// request may proceed to the dispatcher.
+    pub fn refusal(&self, req: &Request) -> Option<String> {
+        match req {
+            Request::Register { name, .. }
+            | Request::Unregister { name }
+            | Request::TenantUpdate { name, .. } => {
+                if self.allows_tenant(name) {
+                    None
+                } else {
+                    Some(format!(
+                        "tenant '{name}' is outside this connection's scope; \
+                         present a token that grants it (HELLO)"
+                    ))
+                }
+            }
+            Request::Drain { .. } => {
+                if self.allows_admin() {
+                    None
+                } else {
+                    Some(
+                        "DRAIN needs an unrestricted connection (admin token, \
+                         or a server with no auth table)"
+                            .to_string(),
+                    )
+                }
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Parse `SystemConfig::auth_tokens` entries (`"token=name,name"` or
+/// `"token=*"`) into the token table `Coordinator::resolve_token`
+/// consults. An empty slice yields an empty table: no handshake is
+/// possible and every connection stays unrestricted.
+pub fn parse_auth_tokens(entries: &[String]) -> Result<BTreeMap<String, Scope>> {
+    let mut table = BTreeMap::new();
+    for entry in entries {
+        let (token, grant) = entry.split_once('=').with_context(|| {
+            format!("auth token entry '{entry}' is not 'token=name,...' or 'token=*'")
+        })?;
+        let token = token.trim();
+        anyhow::ensure!(!token.is_empty(), "auth token entry '{entry}' has an empty token");
+        let grant = grant.trim();
+        let scope = if grant == "*" {
+            Scope::Unrestricted
+        } else {
+            let mut set = BTreeSet::new();
+            for name in grant.split(',') {
+                let name = name.trim();
+                anyhow::ensure!(
+                    !name.is_empty(),
+                    "auth token entry '{entry}' names an empty tenant"
+                );
+                set.insert(name.to_string());
+            }
+            Scope::Tenants(set)
+        };
+        anyhow::ensure!(
+            table.insert(token.to_string(), scope).is_none(),
+            "duplicate auth token '{token}'"
+        );
+    }
+    Ok(table)
+}
+
+/// Observability mirrors maintained by the poll loop (single writer;
+/// readers are tests, the bench harness and operators).
+#[derive(Debug, Default)]
+pub struct ReactorGauges {
+    /// Connections currently registered with the poll loop.
+    pub open_conns: AtomicUsize,
+    /// High-water mark of `open_conns` over the reactor's lifetime.
+    pub peak_conns: AtomicUsize,
+    /// Requests dispatched and not yet fully answered, summed across
+    /// connections (correlated in flight + FIFO backlog).
+    pub in_flight: AtomicUsize,
+    /// High-water mark of `in_flight`.
+    pub peak_in_flight: AtomicUsize,
+    /// Idle connections reaped by `read_timeout`.
+    pub reaped: AtomicU64,
+    /// Connections handed to the legacy blocking v0 path (each costs a
+    /// thread — the compatibility tax the reactor retires for v1).
+    pub legacy_conns: AtomicU64,
+}
+
+/// How the reactor is shaped; `server.rs` builds this from
+/// `SystemConfig` (`reactor_workers`, `read_timeout`).
+#[derive(Clone, Debug)]
+pub struct ReactorConfig {
+    /// Worker pool width (floored at 1).
+    pub workers: usize,
+    /// Idle-connection reaping: a connection with no in-flight work,
+    /// an empty write buffer and no bytes read for this long is
+    /// closed. `None` = never reap.
+    pub read_timeout: Option<Duration>,
+    /// Accept exactly this many connections then stop (tests/bench);
+    /// `None` = serve forever.
+    pub max_conns: Option<usize>,
+}
+
+/// A running reactor: its bound address, gauges, and threads.
+pub struct ReactorHandle {
+    /// The listener's bound address (ephemeral port resolved).
+    pub addr: SocketAddr,
+    /// Live observability mirrors.
+    pub gauges: Arc<ReactorGauges>,
+    workers: usize,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl ReactorHandle {
+    /// Threads this reactor runs: the worker pool plus the accept and
+    /// poll threads. Constant in the number of connections — the bound
+    /// the bench validator asserts (DESIGN.md §20).
+    pub fn thread_count(&self) -> usize {
+        self.workers + 2
+    }
+
+    /// Tear the handle into its join handles (for `server::serve_n`'s
+    /// historic return shape).
+    pub fn into_threads(self) -> Vec<JoinHandle<()>> {
+        self.threads
+    }
+
+    /// Block until the reactor drains: only meaningful with
+    /// `max_conns` set, otherwise this never returns.
+    pub fn join(self) {
+        for t in self.threads {
+            let _ = t.join();
+        }
+    }
+}
+
+/// One unit of work for the pool: a decoded request plus the routing
+/// facts the completion needs to find its way back.
+struct Job {
+    conn: u64,
+    corr: Option<u64>,
+    /// True when this job occupies its connection's uncorrelated FIFO
+    /// slot (its completion releases the slot).
+    fifo: bool,
+    req: Request,
+}
+
+/// One completion flowing back to the poll loop: encoded frame bytes
+/// ready for the connection's write buffer. Streamed rows arrive with
+/// `last == false`; the frame that ends the request (normal reply,
+/// error, or stream end) has `last == true` and releases the in-flight
+/// accounting.
+struct Done {
+    conn: u64,
+    bytes: Vec<u8>,
+    last: bool,
+    fifo: bool,
+}
+
+/// Per-connection state owned by the poll loop.
+struct Conn {
+    stream: TcpStream,
+    read_buf: Vec<u8>,
+    write_buf: Vec<u8>,
+    write_pos: usize,
+    scope: Scope,
+    /// First byte seen and it was v1 magic.
+    sniffed: bool,
+    /// Correlated requests dispatched, reply pending.
+    in_flight: usize,
+    /// Uncorrelated backlog: dispatched one at a time so replies keep
+    /// the historic request order.
+    fifo: VecDeque<Request>,
+    fifo_busy: bool,
+    /// Peer sent quit: stop reading, flush, then close.
+    closing: bool,
+    last_activity: Instant,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, now: Instant) -> Self {
+        Conn {
+            stream,
+            read_buf: Vec::new(),
+            write_buf: Vec::new(),
+            write_pos: 0,
+            scope: Scope::Unrestricted,
+            sniffed: false,
+            in_flight: 0,
+            fifo: VecDeque::new(),
+            fifo_busy: false,
+            closing: false,
+            last_activity: now,
+        }
+    }
+
+    /// No request is anywhere between decode and final reply.
+    fn idle(&self) -> bool {
+        self.in_flight == 0 && !self.fifo_busy && self.fifo.is_empty()
+    }
+
+    /// Satellite 1 (ISSUE 10): a connection with in-flight correlated
+    /// requests — or unflushed reply bytes — is ACTIVE, never reaped,
+    /// even when the socket itself has been quiet past the timeout
+    /// (a slow batch in the batcher window must not kill its reply).
+    fn reapable(&self, now: Instant, timeout: Duration) -> bool {
+        !self.closing
+            && self.idle()
+            && self.write_buf.is_empty()
+            && now.duration_since(self.last_activity) >= timeout
+    }
+
+    fn depth(&self) -> usize {
+        self.in_flight + usize::from(self.fifo_busy) + self.fifo.len()
+    }
+}
+
+enum Verdict {
+    Keep,
+    Close,
+    /// First byte was not v1 magic: hand the socket (plus any buffered
+    /// bytes) to the legacy blocking v0 path.
+    Legacy,
+}
+
+/// Bind `addr` and start the reactor: `workers + 2` threads total.
+pub fn spawn(coord: Arc<Coordinator>, addr: &str, cfg: ReactorConfig) -> Result<ReactorHandle> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    let local = listener.local_addr().context("resolving bound address")?;
+    let gauges = Arc::new(ReactorGauges::default());
+    let workers = cfg.workers.max(1);
+
+    let (accept_tx, accept_rx) = mpsc::channel::<TcpStream>();
+    let (jobs_tx, jobs_rx) = mpsc::channel::<Job>();
+    let (done_tx, done_rx) = mpsc::channel::<Done>();
+    let jobs_rx = Arc::new(Mutex::new(jobs_rx));
+
+    let mut threads = Vec::with_capacity(workers + 2);
+    for i in 0..workers {
+        let coord2 = Arc::clone(&coord);
+        let jobs2 = Arc::clone(&jobs_rx);
+        let done2 = done_tx.clone();
+        threads.push(
+            std::thread::Builder::new()
+                .name(format!("velm-reactor-worker-{i}"))
+                .spawn(move || worker_loop(coord2, jobs2, done2))
+                .context("spawning reactor worker")?,
+        );
+    }
+    drop(done_tx); // the poll loop detects worker death via Disconnected
+
+    let max_conns = cfg.max_conns;
+    threads.push(
+        std::thread::Builder::new()
+            .name("velm-reactor-accept".into())
+            .spawn(move || accept_loop(listener, accept_tx, max_conns))
+            .context("spawning reactor accept thread")?,
+    );
+
+    let gauges2 = Arc::clone(&gauges);
+    let read_timeout = cfg.read_timeout;
+    threads.push(
+        std::thread::Builder::new()
+            .name("velm-reactor-poll".into())
+            .spawn(move || poll_loop(coord, accept_rx, jobs_tx, done_rx, read_timeout, gauges2))
+            .context("spawning reactor poll thread")?,
+    );
+
+    Ok(ReactorHandle { addr: local, gauges, workers, threads })
+}
+
+/// Accept thread: the only place that blocks on the listener. Sockets
+/// go nonblocking before the poll loop ever sees them.
+fn accept_loop(listener: TcpListener, tx: mpsc::Sender<TcpStream>, max: Option<usize>) {
+    let mut accepted = 0usize;
+    loop {
+        if let Some(m) = max {
+            if accepted >= m {
+                return; // dropping `tx` tells the poll loop to drain
+            }
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let _ = stream.set_nodelay(true); // request/reply: defeat Nagle
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                accepted += 1;
+                if tx.send(stream).is_err() {
+                    return; // poll loop is gone
+                }
+            }
+            // Transient accept failures (e.g. the peer aborting in the
+            // backlog) should not kill the listener.
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+/// Worker: pull one job, answer it, push encoded completion frames.
+/// The shared-receiver lock is held only for the duration of `recv`.
+fn worker_loop(
+    coord: Arc<Coordinator>,
+    jobs: Arc<Mutex<mpsc::Receiver<Job>>>,
+    done_tx: mpsc::Sender<Done>,
+) {
+    loop {
+        let job = match jobs.lock().unwrap().recv() {
+            Ok(j) => j,
+            Err(_) => return, // poll loop dropped the sender: drain done
+        };
+        let Job { conn, corr, fifo, req } = job;
+        match (corr, req) {
+            (Some(corr), Request::BatchStream { rows }) => {
+                stream_batch(&coord, conn, corr, fifo, rows, &done_tx);
+            }
+            (corr, req) => {
+                let resp = coord.handle(req);
+                let bytes = respond_bytes(corr, &resp);
+                let _ = done_tx.send(Done { conn, bytes, last: true, fifo });
+            }
+        }
+    }
+}
+
+/// Streamed batch: submit once, then emit one `R_STREAM_ROW` per row
+/// in *completion* order as dies finish, closing with `R_STREAM_END`
+/// (rows emitted + total conversion passes). DESIGN.md §20.
+fn stream_batch(
+    coord: &Coordinator,
+    conn: u64,
+    corr: u64,
+    fifo: bool,
+    rows: Vec<crate::protocol::PredictRow>,
+    done_tx: &mpsc::Sender<Done>,
+) {
+    let rxs = match coord.submit_batch(&rows) {
+        Ok(rxs) => rxs,
+        Err(e) => {
+            let bytes = respond_bytes(Some(corr), &Response::Error(format!("{e:#}")));
+            let _ = done_tx.send(Done { conn, bytes, last: true, fifo });
+            return;
+        }
+    };
+    let mut pending: Vec<Option<mpsc::Receiver<ClassifyResponse>>> =
+        rxs.into_iter().map(Some).collect();
+    let mut open = pending.len();
+    let mut emitted: u32 = 0;
+    let mut passes: u64 = 0;
+    while open > 0 {
+        let mut progressed = false;
+        for (i, slot) in pending.iter_mut().enumerate() {
+            let Some(rx) = slot else { continue };
+            match rx.try_recv() {
+                Ok(resp) => {
+                    passes += resp.passes as u64;
+                    let (ty, payload) =
+                        frame::encode_stream_row(corr, i as u32, &resp.to_prediction());
+                    let bytes = frame_or_error(ty, &payload, Some(corr));
+                    let _ = done_tx.send(Done { conn, bytes, last: false, fifo: false });
+                    emitted += 1;
+                    *slot = None;
+                    open -= 1;
+                    progressed = true;
+                }
+                Err(mpsc::TryRecvError::Empty) => {}
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    // A die dropped the row mid-flight; the end frame's
+                    // row count tells the client how many arrived.
+                    *slot = None;
+                    open -= 1;
+                    progressed = true;
+                }
+            }
+        }
+        if !progressed {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    let (ty, payload) = frame::encode_stream_end(corr, emitted, passes);
+    let bytes = frame_or_error(ty, &payload, Some(corr));
+    let _ = done_tx.send(Done { conn, bytes, last: true, fifo });
+}
+
+/// Encode `resp` as a bare or correlation-wrapped reply frame.
+fn respond_bytes(corr: Option<u64>, resp: &Response) -> Vec<u8> {
+    let (ty, payload) = match corr {
+        Some(c) => frame::encode_correlated_response(c, resp),
+        None => frame::encode_response(resp),
+    };
+    frame_or_error(ty, &payload, corr)
+}
+
+/// Render a frame, degrading an oversize payload to a (small) typed
+/// error so the connection keeps its framing instead of dying.
+fn frame_or_error(ty: u8, payload: &[u8], corr: Option<u64>) -> Vec<u8> {
+    match frame::frame_bytes(ty, payload) {
+        Ok(b) => b,
+        Err(_) => {
+            let resp = Response::Error(format!(
+                "reply exceeds the {} MiB frame cap",
+                frame::MAX_FRAME_LEN / (1024 * 1024)
+            ));
+            let (ty2, p2) = match corr {
+                Some(c) => frame::encode_correlated_response(c, &resp),
+                None => frame::encode_response(&resp),
+            };
+            frame::frame_bytes(ty2, &p2).expect("error frames are small")
+        }
+    }
+}
+
+/// The poll loop: sole owner of the connection table. Every iteration
+/// admits new sockets, drains completions into write buffers, services
+/// each connection's nonblocking reads/writes, and reaps idle peers.
+fn poll_loop(
+    coord: Arc<Coordinator>,
+    accept_rx: mpsc::Receiver<TcpStream>,
+    jobs_tx: mpsc::Sender<Job>,
+    done_rx: mpsc::Receiver<Done>,
+    read_timeout: Option<Duration>,
+    gauges: Arc<ReactorGauges>,
+) {
+    let mut conns: BTreeMap<u64, Conn> = BTreeMap::new();
+    let mut legacy: Vec<JoinHandle<()>> = Vec::new();
+    let mut next_id: u64 = 0;
+    let mut accept_open = true;
+    let mut peak_conns = 0usize;
+    let mut peak_in_flight = 0usize;
+    loop {
+        let mut progress = false;
+        let now = Instant::now();
+        // 1. admit fresh sockets
+        while accept_open {
+            match accept_rx.try_recv() {
+                Ok(stream) => {
+                    conns.insert(next_id, Conn::new(stream, now));
+                    next_id += 1;
+                    progress = true;
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => accept_open = false,
+            }
+        }
+        // 2. drain completions into write buffers
+        while let Ok(done) = done_rx.try_recv() {
+            progress = true;
+            // the connection may have died while its job was in flight
+            let Some(conn) = conns.get_mut(&done.conn) else { continue };
+            conn.write_buf.extend_from_slice(&done.bytes);
+            conn.last_activity = now;
+            if done.last {
+                if done.fifo {
+                    conn.fifo_busy = false;
+                    pump_fifo(done.conn, conn, &jobs_tx);
+                } else {
+                    conn.in_flight = conn.in_flight.saturating_sub(1);
+                }
+            }
+        }
+        // 3. service every connection
+        let ids: Vec<u64> = conns.keys().copied().collect();
+        for id in ids {
+            let conn = conns.get_mut(&id).expect("id harvested this iteration");
+            let (verdict, moved) = service_conn(id, conn, &coord, &jobs_tx, now);
+            progress |= moved;
+            match verdict {
+                Verdict::Keep => {
+                    if let Some(timeout) = read_timeout {
+                        if conn.reapable(now, timeout) {
+                            conns.remove(&id);
+                            // relaxed-ok: monotone observability counter;
+                            // no reader orders other state by it.
+                            gauges.reaped.fetch_add(1, Ordering::Relaxed);
+                            progress = true;
+                        }
+                    }
+                }
+                Verdict::Close => {
+                    conns.remove(&id);
+                    progress = true;
+                }
+                Verdict::Legacy => {
+                    let conn = conns.remove(&id).expect("id harvested this iteration");
+                    // relaxed-ok: monotone observability counter;
+                    // no reader orders other state by it.
+                    gauges.legacy_conns.fetch_add(1, Ordering::Relaxed);
+                    progress = true;
+                    if conn.stream.set_nonblocking(false).is_ok() {
+                        let coord2 = Arc::clone(&coord);
+                        let (stream, prefix) = (conn.stream, conn.read_buf);
+                        if let Ok(h) = std::thread::Builder::new()
+                            .name("velm-v0-conn".into())
+                            .spawn(move || super::server::serve_v0_conn(coord2, stream, prefix))
+                        {
+                            legacy.push(h);
+                        }
+                    }
+                }
+            }
+        }
+        // 4. refresh gauges (single writer: this loop)
+        let in_flight: usize = conns.values().map(Conn::depth).sum();
+        peak_conns = peak_conns.max(conns.len());
+        peak_in_flight = peak_in_flight.max(in_flight);
+        // relaxed-ok: observability mirrors of poll-loop-local state;
+        // readers (tests, bench, operators) tolerate a stale value and
+        // order nothing by them.
+        gauges.open_conns.store(conns.len(), Ordering::Relaxed);
+        gauges.peak_conns.store(peak_conns, Ordering::Relaxed);
+        gauges.in_flight.store(in_flight, Ordering::Relaxed);
+        gauges.peak_in_flight.store(peak_in_flight, Ordering::Relaxed);
+        if !accept_open && conns.is_empty() {
+            break; // bounded serve drained (accept thread exited)
+        }
+        if !progress {
+            // nothing readable, writable or completed: nap briefly
+            // instead of spinning a core
+            std::thread::sleep(Duration::from_micros(500));
+        }
+    }
+    drop(jobs_tx); // workers drain outstanding jobs and exit
+    for h in legacy {
+        let _ = h.join();
+    }
+}
+
+/// Dispatch the next queued uncorrelated request if the slot is free.
+fn pump_fifo(id: u64, conn: &mut Conn, jobs_tx: &mpsc::Sender<Job>) {
+    if conn.fifo_busy {
+        return;
+    }
+    let Some(req) = conn.fifo.pop_front() else { return };
+    conn.fifo_busy = true;
+    if jobs_tx.send(Job { conn: id, corr: None, fifo: true, req }).is_err() {
+        conn.fifo_busy = false;
+        queue_response(conn, None, &Response::Error("reactor is shutting down".into()));
+    }
+}
+
+/// Append one encoded reply frame to the connection's write buffer.
+fn queue_response(conn: &mut Conn, corr: Option<u64>, resp: &Response) {
+    let bytes = respond_bytes(corr, resp);
+    conn.write_buf.extend_from_slice(&bytes);
+}
+
+/// One connection's turn: nonblocking read into the buffer, cut and
+/// dispatch complete frames, then flush as much of the write buffer as
+/// the socket accepts. Returns the verdict plus whether anything moved.
+fn service_conn(
+    id: u64,
+    conn: &mut Conn,
+    coord: &Coordinator,
+    jobs_tx: &mpsc::Sender<Job>,
+    now: Instant,
+) -> (Verdict, bool) {
+    let mut progress = false;
+    // read: drain the socket into the partial-frame buffer
+    let mut tmp = [0u8; 8192];
+    loop {
+        match conn.stream.read(&mut tmp) {
+            Ok(0) => return (Verdict::Close, true), // peer hung up
+            Ok(n) => {
+                conn.read_buf.extend_from_slice(&tmp[..n]);
+                conn.last_activity = now;
+                progress = true;
+                if n < tmp.len() {
+                    break; // likely drained; next iteration catches more
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return (Verdict::Close, true),
+        }
+    }
+    // sniff: the first byte selects v1 (stay here) or v0 (legacy path)
+    if !conn.sniffed {
+        match conn.read_buf.first() {
+            Some(&b) if b == frame::FRAME_MAGIC => conn.sniffed = true,
+            Some(_) => return (Verdict::Legacy, true),
+            None => {}
+        }
+    }
+    // parse: cut complete frames out of the buffer and dispatch
+    if conn.sniffed && !conn.closing {
+        loop {
+            match frame::take_frame(&conn.read_buf) {
+                // bad magic or oversize: the stream is desynced beyond
+                // recovery — no reply could be framed reliably
+                Err(_) => return (Verdict::Close, true),
+                Ok(None) => break, // partial frame: wait for more bytes
+                Ok(Some((ty, payload, used))) => {
+                    conn.read_buf.drain(..used);
+                    progress = true;
+                    if !handle_frame(id, conn, ty, &payload, coord, jobs_tx) {
+                        break; // quit: flush and close below
+                    }
+                }
+            }
+        }
+    }
+    // write: flush as much as the socket accepts, tracking the offset
+    while conn.write_pos < conn.write_buf.len() {
+        match conn.stream.write(&conn.write_buf[conn.write_pos..]) {
+            Ok(0) => return (Verdict::Close, true),
+            Ok(n) => {
+                conn.write_pos += n;
+                conn.last_activity = now;
+                progress = true;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return (Verdict::Close, true),
+        }
+    }
+    if conn.write_pos > 0 && conn.write_pos == conn.write_buf.len() {
+        conn.write_buf.clear();
+        conn.write_pos = 0;
+    }
+    if conn.closing && conn.idle() && conn.write_buf.is_empty() {
+        return (Verdict::Close, true); // quit acknowledged, all flushed
+    }
+    (Verdict::Keep, progress)
+}
+
+/// Route one decoded frame: correlated envelopes dispatch immediately
+/// (many in flight), Hello binds the scope inline, quit marks the
+/// connection closing, everything else queues on the strict FIFO.
+/// Returns false when reading should stop (quit).
+fn handle_frame(
+    id: u64,
+    conn: &mut Conn,
+    ty: u8,
+    payload: &[u8],
+    coord: &Coordinator,
+    jobs_tx: &mpsc::Sender<Job>,
+) -> bool {
+    if ty == frame::T_CORR {
+        match frame::decode_correlated_request(payload) {
+            Err(msg) => queue_response(conn, None, &Response::Error(msg)),
+            Ok((corr, req)) => {
+                if let Some(msg) = conn.scope.refusal(&req) {
+                    queue_response(conn, Some(corr), &Response::Error(msg));
+                } else {
+                    conn.in_flight += 1;
+                    let job = Job { conn: id, corr: Some(corr), fifo: false, req };
+                    if jobs_tx.send(job).is_err() {
+                        conn.in_flight -= 1;
+                        queue_response(
+                            conn,
+                            Some(corr),
+                            &Response::Error("reactor is shutting down".into()),
+                        );
+                    }
+                }
+            }
+        }
+        return true;
+    }
+    match frame::decode_request(ty, payload) {
+        Err(msg) => queue_response(conn, None, &Response::Error(msg)),
+        Ok(None) => {
+            conn.closing = true;
+            return false;
+        }
+        Ok(Some(Request::Hello { token })) => match coord.resolve_token(&token) {
+            Some(scope) => {
+                let tenants = scope.listing();
+                conn.scope = scope;
+                queue_response(conn, None, &Response::HelloOk { tenants });
+            }
+            None => queue_response(conn, None, &Response::Error(UNKNOWN_TOKEN_MSG.into())),
+        },
+        Ok(Some(req)) => {
+            if let Some(msg) = conn.scope.refusal(&req) {
+                queue_response(conn, None, &Response::Error(msg));
+            } else {
+                conn.fifo.push_back(req);
+                pump_fifo(id, conn, jobs_tx);
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auth_tokens_parse_into_scopes() {
+        let table = parse_auth_tokens(&[
+            "root=*".to_string(),
+            "lab= alpha , beta ".to_string(),
+        ])
+        .unwrap();
+        assert_eq!(table.len(), 2);
+        assert_eq!(table["root"], Scope::Unrestricted);
+        let Scope::Tenants(set) = &table["lab"] else { panic!("scoped token") };
+        assert!(set.contains("alpha") && set.contains("beta"));
+        assert_eq!(table["lab"].listing(), vec!["alpha".to_string(), "beta".to_string()]);
+        assert_eq!(table["root"].listing(), vec!["*".to_string()]);
+        // empty config = empty table (no handshake possible)
+        assert!(parse_auth_tokens(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn malformed_auth_tokens_are_refused() {
+        for bad in ["no-equals", "=alpha", "tok=", "tok=a,,b", " =x"] {
+            assert!(
+                parse_auth_tokens(&[bad.to_string()]).is_err(),
+                "entry '{bad}' must be refused"
+            );
+        }
+        let dup = ["t=*".to_string(), "t=alpha".to_string()];
+        let err = parse_auth_tokens(&dup).unwrap_err().to_string();
+        assert!(err.contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn scope_gates_mutating_verbs_only() {
+        let mut set = BTreeSet::new();
+        set.insert("mine".to_string());
+        let scoped = Scope::Tenants(set);
+        // writes to the granted tenant pass
+        assert!(scoped
+            .refusal(&Request::TenantUpdate {
+                name: "mine".into(),
+                features: vec![],
+                targets: vec![],
+            })
+            .is_none());
+        // writes to any other tenant are refused
+        let msg = scoped
+            .refusal(&Request::Unregister { name: "other".into() })
+            .expect("out-of-scope write refused");
+        assert!(msg.contains("outside this connection's scope"), "{msg}");
+        assert!(scoped.refusal(&Request::Register {
+            name: "other".into(),
+            dataset: "d".into(),
+            seed: 1,
+        }).is_some());
+        // admin verbs need an unrestricted scope
+        assert!(scoped.refusal(&Request::Drain { die: 0 }).is_some());
+        assert!(Scope::Unrestricted.refusal(&Request::Drain { die: 0 }).is_none());
+        // reads stay open: scoping guards writes, not predictions
+        assert!(scoped
+            .refusal(&Request::Predict { tenant: Some("other".into()), features: vec![] })
+            .is_none());
+        assert!(scoped.refusal(&Request::Stats).is_none());
+    }
+
+    #[test]
+    fn oversize_replies_degrade_to_typed_errors() {
+        // A payload over the frame cap must not kill the framing: the
+        // helper swaps in a small typed error, correlated or not.
+        let huge = vec![0u8; frame::MAX_FRAME_LEN as usize + 1];
+        let bytes = frame_or_error(frame::R_CORR, &huge, Some(7));
+        let (ty, payload) = frame::read_frame(&mut std::io::BufReader::new(&bytes[..]))
+            .unwrap()
+            .expect("a frame");
+        assert_eq!(ty, frame::R_CORR);
+        let (corr, resp) = frame::decode_correlated_response(&payload).unwrap();
+        assert_eq!(corr, 7);
+        assert!(matches!(resp, Response::Error(e) if e.contains("frame cap")));
+    }
+}

@@ -7,29 +7,27 @@
 //! [`crate::client::Client`] uses, so wire and in-process callers
 //! share one code path.
 //!
-//! Per connection (std::net, one thread each — no tokio in the offline
-//! vendor set):
-//!
-//!   1. apply `SystemConfig::read_timeout` so an idle or dead client is
-//!      disconnected instead of pinning its thread forever;
-//!   2. sniff the first byte: [`frame::FRAME_MAGIC`] selects the v1
-//!      [`FrameCodec`], anything else (every ASCII command letter) the
-//!      v0 [`LineCodec`] — that is the entire version negotiation;
-//!   3. loop: decode a request, dispatch through `Coordinator::handle`,
-//!      encode the response. Malformed input answers `ERR ...` (v0) or
-//!      an error frame (v1) without dropping the connection; QUIT, EOF,
-//!      an I/O error or the read timeout end it.
+//! Since PR 10 the serve path is the multiplexed connection reactor
+//! (DESIGN.md §20, [`super::reactor`]): `reactor_workers + 2` threads
+//! serve every v1 connection, each connection carrying multiple
+//! in-flight correlated requests. Version negotiation still sniffs the
+//! first byte — [`frame::FRAME_MAGIC`] keeps the connection on the
+//! reactor, anything else (every ASCII command letter) hands the
+//! socket to the blocking v0 path below, which costs one thread per
+//! connection and applies `SystemConfig::read_timeout` the historic
+//! way.
 //!
 //! [`frame::FRAME_MAGIC`]: crate::protocol::frame::FRAME_MAGIC
 
-use std::io::BufReader;
-use std::net::{TcpListener, TcpStream};
+use std::io::{BufReader, Read};
+use std::net::TcpStream;
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use crate::protocol::{line, Codec, Decoded, FrameCodec, LineCodec, Response};
+use crate::protocol::{line, Codec, Decoded, LineCodec, Response};
 
+use super::reactor;
 use super::Coordinator;
 
 /// Handle one v0 protocol line — the thin shim that keeps the historic
@@ -43,22 +41,21 @@ pub fn handle_line(coord: &Coordinator, line: &str) -> Option<String> {
     }
 }
 
-fn serve_conn(coord: Arc<Coordinator>, stream: TcpStream) {
-    let _ = stream.set_nodelay(true); // request/response pattern: defeat Nagle
+/// Legacy blocking v0 connection, entered when the reactor's sniff
+/// sees a non-magic first byte. `prefix` carries whatever the reactor
+/// already buffered; the socket arrives back in blocking mode (the
+/// reactor flipped it before handing over). Costs one thread per
+/// connection — the compatibility tax the reactor meters as
+/// `legacy_conns`.
+pub(crate) fn serve_v0_conn(coord: Arc<Coordinator>, stream: TcpStream, prefix: Vec<u8>) {
     // dead-client hygiene: never let an idle connection pin this thread
     let _ = stream.set_read_timeout(coord.read_timeout);
-    // codec negotiation: peek (don't consume) the first byte
-    let mut first = [0u8; 1];
-    let mut codec: Box<dyn Codec> = match stream.peek(&mut first) {
-        Ok(0) | Err(_) => return, // closed or timed out before a byte arrived
-        Ok(_) if first[0] == crate::protocol::frame::FRAME_MAGIC => Box::new(FrameCodec),
-        Ok(_) => Box::new(LineCodec),
-    };
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
-    let mut reader = BufReader::new(stream);
+    let mut codec: Box<dyn Codec> = Box::new(LineCodec);
+    let mut reader = BufReader::new(std::io::Cursor::new(prefix).chain(stream));
     loop {
         let resp = match codec.read_request(&mut reader) {
             Err(_) => break, // I/O error, or idle past the read timeout
@@ -72,43 +69,42 @@ fn serve_conn(coord: Arc<Coordinator>, stream: TcpStream) {
     }
 }
 
-/// Serve forever on `addr` (e.g. "127.0.0.1:7177"). Blocks the caller;
-/// spawns one thread per connection.
+/// Serve forever on `addr` (e.g. "127.0.0.1:7177") through the
+/// connection reactor. Blocks the caller; total thread count is
+/// `coord.reactor_workers + 2` regardless of connection count (plus
+/// one thread per legacy v0 connection).
 pub fn serve(coord: Arc<Coordinator>, addr: &str) -> Result<()> {
-    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-    eprintln!("velm serving on {addr}");
-    for stream in listener.incoming() {
-        match stream {
-            Ok(s) => {
-                let c = Arc::clone(&coord);
-                std::thread::spawn(move || serve_conn(c, s));
-            }
-            Err(e) => eprintln!("accept error: {e}"),
-        }
-    }
+    let cfg = reactor::ReactorConfig {
+        workers: coord.reactor_workers,
+        read_timeout: coord.read_timeout,
+        max_conns: None,
+    };
+    let handle = reactor::spawn(Arc::clone(&coord), addr, cfg)?;
+    eprintln!(
+        "velm serving on {} ({} reactor threads)",
+        handle.addr,
+        handle.thread_count()
+    );
+    handle.join();
     Ok(())
 }
 
-/// Serve a bounded number of connections (for tests / examples), then
-/// return. Binds to an ephemeral port and reports it via the return.
-pub fn serve_n(coord: Arc<Coordinator>, conns: usize) -> Result<(std::net::SocketAddr, JoinHandleVec)> {
-    let listener = TcpListener::bind("127.0.0.1:0").context("binding ephemeral")?;
-    let addr = listener.local_addr()?;
-    let mut handles = Vec::new();
-    let accept_thread = std::thread::spawn(move || {
-        let mut taken = Vec::new();
-        for stream in listener.incoming().take(conns) {
-            if let Ok(s) = stream {
-                let c = Arc::clone(&coord);
-                taken.push(std::thread::spawn(move || serve_conn(c, s)));
-            }
-        }
-        for t in taken {
-            let _ = t.join();
-        }
-    });
-    handles.push(accept_thread);
-    Ok((addr, JoinHandleVec(handles)))
+/// Serve a bounded number of connections (for tests / examples)
+/// through the reactor, then return. Binds to an ephemeral port and
+/// reports it via the return; `.join()` on the handle bundle blocks
+/// until every accepted connection has drained.
+pub fn serve_n(
+    coord: Arc<Coordinator>,
+    conns: usize,
+) -> Result<(std::net::SocketAddr, JoinHandleVec)> {
+    let cfg = reactor::ReactorConfig {
+        workers: coord.reactor_workers,
+        read_timeout: coord.read_timeout,
+        max_conns: Some(conns),
+    };
+    let handle = reactor::spawn(coord, "127.0.0.1:0", cfg)?;
+    let addr = handle.addr;
+    Ok((addr, JoinHandleVec(handle.into_threads())))
 }
 
 /// Joinable bundle returned by [`serve_n`].

@@ -13,6 +13,15 @@
 //! compares two reports and fails CI when throughput or end-to-end p99
 //! regresses beyond a budget.
 //!
+//! With `--connections N` the benchmark instead adds the reactor
+//! multiplexing leg (schema v3 — the `BENCH_8.json` artifact): the same
+//! fleet is fronted by the connection reactor (DESIGN.md §20) and
+//! driven from `N` real TCP connections, each keeping several
+//! correlated requests in flight. The leg records the server-side
+//! thread count next to the connection count, and the schema validator
+//! re-asserts the reactor's core claim on every committed report: the
+//! thread count is bounded by the pool size, independent of `N`.
+//!
 //! The report deliberately reuses the observability layer instead of
 //! measuring on its own: the per-stage percentiles come from the same
 //! histograms `STATS` serves, and the energy figures from the same
@@ -24,11 +33,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::client::Client;
 use crate::config::{ChipConfig, SystemConfig, Transfer};
-use crate::coordinator::Coordinator;
+use crate::coordinator::{reactor, Coordinator};
 use crate::datasets::synth;
 use crate::governor::GovernorConfig;
-use crate::protocol::{Segment, StageStats, StatsSnapshot};
+use crate::protocol::{Request, Response, Segment, StageStats, StatsSnapshot};
+use crate::sync::Ordering;
 use crate::util::json::Value;
 
 /// Schema tag stamped into every report; bump with the field set.
@@ -36,6 +47,13 @@ pub const BENCH_SCHEMA: &str = "velm-bench-serve/1";
 
 /// Schema tag for reports carrying the governor comparison leg.
 pub const BENCH_SCHEMA_V2: &str = "velm-bench-serve/2";
+
+/// Schema tag for reports carrying the reactor multiplexing leg.
+pub const BENCH_SCHEMA_V3: &str = "velm-bench-serve/3";
+
+/// Correlated requests each bench connection keeps in flight on the
+/// reactor leg — the multiplexing depth `BENCH_8.json` records.
+const REACTOR_DEPTH: usize = 4;
 
 /// One benchmark run's shape.
 #[derive(Clone, Debug)]
@@ -61,6 +79,11 @@ pub struct BenchConfig {
     /// service rate. The governed comparison leg always keeps its
     /// hand-driven idle-heavy trace — its fJ accounting is pinned.
     pub arrival: Option<f64>,
+    /// `Some(n)` adds the reactor multiplexing leg (schema v3,
+    /// `BENCH_8.json`): `n` real TCP connections through the
+    /// connection reactor, each pipelining [`REACTOR_DEPTH`]
+    /// correlated requests. Mutually exclusive with `governor`.
+    pub connections: Option<usize>,
 }
 
 impl BenchConfig {
@@ -76,6 +99,7 @@ impl BenchConfig {
             max_train: 200,
             governor: false,
             arrival: None,
+            connections: None,
         }
     }
 
@@ -106,6 +130,32 @@ pub struct GovernorLeg {
     pub points: Vec<u32>,
 }
 
+/// The reactor multiplexing leg of a v3 report: `connections` real TCP
+/// clients through the connection reactor (DESIGN.md §20), each with
+/// `in_flight_depth` correlated requests pipelined. The headline pair
+/// is `thread_count` vs `connections`: the reactor serves every
+/// connection from `pool_workers + 2` threads.
+#[derive(Clone, Debug)]
+pub struct ReactorLeg {
+    pub connections: u64,
+    /// Reactor worker-pool size the fleet was configured with.
+    pub pool_workers: u64,
+    /// Total server-side threads the reactor spawned — bounded by
+    /// `pool_workers + 2` (workers + acceptor + poll loop) no matter
+    /// how many connections dialled in.
+    pub thread_count: u64,
+    /// Correlated requests each connection kept in flight.
+    pub in_flight_depth: u64,
+    /// Peak simultaneous in-flight requests the poll loop observed
+    /// across all connections.
+    pub peak_in_flight: u64,
+    /// Peak simultaneous open connections.
+    pub peak_conns: u64,
+    pub responses: u64,
+    pub elapsed_us: u64,
+    pub throughput_rps: f64,
+}
+
 /// What one run produced: wall-clock plus the coordinator's final
 /// snapshot (stage histograms, energy ledger, counters), and the
 /// governor comparison leg when the run asked for one.
@@ -116,6 +166,7 @@ pub struct BenchReport {
     pub elapsed_us: u64,
     pub snapshot: StatsSnapshot,
     pub governor: Option<GovernorLeg>,
+    pub reactor: Option<ReactorLeg>,
 }
 
 impl BenchReport {
@@ -141,7 +192,13 @@ impl BenchReport {
                 ("mean_us".into(), Value::Num(s.mean_us())),
             ])
         };
-        let schema = if self.governor.is_some() { BENCH_SCHEMA_V2 } else { BENCH_SCHEMA };
+        let schema = if self.reactor.is_some() {
+            BENCH_SCHEMA_V3
+        } else if self.governor.is_some() {
+            BENCH_SCHEMA_V2
+        } else {
+            BENCH_SCHEMA
+        };
         let s = &self.snapshot;
         let mut fields = vec![
             ("schema".into(), Value::Str(schema.into())),
@@ -215,6 +272,22 @@ impl BenchReport {
                 ]),
             ));
         }
+        if let Some(r) = &self.reactor {
+            fields.push((
+                "reactor".into(),
+                Value::Obj(vec![
+                    ("connections".into(), u(r.connections)),
+                    ("pool_workers".into(), u(r.pool_workers)),
+                    ("thread_count".into(), u(r.thread_count)),
+                    ("in_flight_depth".into(), u(r.in_flight_depth)),
+                    ("peak_in_flight".into(), u(r.peak_in_flight)),
+                    ("peak_conns".into(), u(r.peak_conns)),
+                    ("responses".into(), u(r.responses)),
+                    ("elapsed_us".into(), u(r.elapsed_us)),
+                    ("throughput_rps".into(), Value::Num(r.throughput_rps)),
+                ]),
+            ));
+        }
         let mut out = String::new();
         Value::Obj(fields).write(&mut out);
         out
@@ -226,13 +299,19 @@ impl BenchReport {
 /// and self-consistent. Schema v2 ([`BENCH_SCHEMA_V2`]) additionally
 /// requires the governor comparison leg, and requires it to actually
 /// demonstrate the saving: positive `fj_saved` and less energy than the
-/// baseline leg for the same request count. CI runs this over the
-/// committed `BENCH_6.json`/`BENCH_7.json` after regenerating them.
+/// baseline leg for the same request count. Schema v3
+/// ([`BENCH_SCHEMA_V3`]) requires the reactor multiplexing leg instead,
+/// and asserts the reactor's core claim: the server thread count is
+/// bounded by the pool size (`pool_workers + 2`), independent of the
+/// connection count. CI runs this over the committed
+/// `BENCH_6.json`/`BENCH_7.json`/`BENCH_8.json` after regenerating them.
 pub fn validate_bench_json(text: &str) -> Result<(), String> {
     let v = Value::parse(text)?;
     let schema = v.get("schema").and_then(Value::as_str).ok_or("missing 'schema'")?;
-    if schema != BENCH_SCHEMA && schema != BENCH_SCHEMA_V2 {
-        return Err(format!("schema '{schema}' != '{BENCH_SCHEMA}' or '{BENCH_SCHEMA_V2}'"));
+    if schema != BENCH_SCHEMA && schema != BENCH_SCHEMA_V2 && schema != BENCH_SCHEMA_V3 {
+        return Err(format!(
+            "schema '{schema}' != '{BENCH_SCHEMA}', '{BENCH_SCHEMA_V2}' or '{BENCH_SCHEMA_V3}'"
+        ));
     }
     v.get("dataset").and_then(Value::as_str).ok_or("missing 'dataset'")?;
     let u = |k: &str| v.get(k).and_then(Value::as_u64).ok_or(format!("missing '{k}'"));
@@ -271,6 +350,51 @@ pub fn validate_bench_json(text: &str) -> Result<(), String> {
         su("p90_us")?;
         if count > 0 && p50 > p99 {
             return Err(format!("stage '{key}': p50 {p50} > p99 {p99}"));
+        }
+    }
+    match (schema == BENCH_SCHEMA_V3, v.get("reactor")) {
+        (false, None) => {}
+        (false, Some(_)) => return Err("a reactor block needs schema v3".into()),
+        (true, None) => return Err("schema v3 requires the 'reactor' block".into()),
+        (true, Some(r)) => {
+            let ru = |k: &str| {
+                r.get(k)
+                    .and_then(Value::as_u64)
+                    .ok_or(format!("reactor block missing '{k}'"))
+            };
+            let connections = ru("connections")?;
+            if connections == 0 {
+                return Err("reactor leg drove no connections".into());
+            }
+            if ru("in_flight_depth")? == 0 {
+                return Err("reactor leg must keep at least one request in flight".into());
+            }
+            if ru("responses")? == 0 {
+                return Err("reactor leg served no rows".into());
+            }
+            if ru("elapsed_us")? == 0 {
+                return Err("reactor elapsed_us must be positive".into());
+            }
+            r.get("throughput_rps")
+                .and_then(Value::as_f64)
+                .filter(|x| x.is_finite() && *x >= 0.0)
+                .ok_or("reactor block missing 'throughput_rps'")?;
+            ru("peak_in_flight")?;
+            ru("peak_conns")?;
+            // the reactor's core claim, re-asserted on every committed
+            // report: server threads are a function of the pool size,
+            // never of how many connections dialled in
+            let (pool, threads) = (ru("pool_workers")?, ru("thread_count")?);
+            if pool == 0 {
+                return Err("reactor pool_workers must be positive".into());
+            }
+            if threads > pool + 2 {
+                return Err(format!(
+                    "reactor thread_count {threads} exceeds pool bound {} \
+                     (workers + acceptor + poll loop) at {connections} connections",
+                    pool + 2
+                ));
+            }
         }
     }
     match (schema == BENCH_SCHEMA_V2, v.get("governor")) {
@@ -321,8 +445,8 @@ pub fn validate_bench_json(text: &str) -> Result<(), String> {
 /// Regression gate over two bench reports (`velm bench gate`): compare
 /// the current report against a previous one and fail when throughput
 /// drops, or end-to-end p99 rises, by more than `max_regress`
-/// (a fraction: 0.10 allows 10%). Either schema version is accepted —
-/// the gated figures live in the baseline body of both. Returns a
+/// (a fraction: 0.10 allows 10%). Any schema version is accepted —
+/// the gated figures live in the baseline body of all three. Returns a
 /// printable comparison on success.
 pub fn gate_bench_json(
     current: &str,
@@ -335,7 +459,7 @@ pub fn gate_bench_json(
             .get("schema")
             .and_then(Value::as_str)
             .ok_or(format!("{which}: missing 'schema'"))?;
-        if schema != BENCH_SCHEMA && schema != BENCH_SCHEMA_V2 {
+        if schema != BENCH_SCHEMA && schema != BENCH_SCHEMA_V2 && schema != BENCH_SCHEMA_V3 {
             return Err(format!("{which}: unknown schema '{schema}'"));
         }
         let rps = v
@@ -373,6 +497,10 @@ pub fn gate_bench_json(
 /// request count as an idle-heavy trace and lands in the report's
 /// comparison leg.
 pub fn run(cfg: &BenchConfig) -> Result<BenchReport> {
+    anyhow::ensure!(
+        !(cfg.governor && cfg.connections.is_some()),
+        "--governor and --connections are separate comparison legs; run one at a time"
+    );
     let (snapshot, elapsed_us, requests) = drive(cfg, false)?;
     let governor = if cfg.governor {
         let (gs, ge, _) = drive(cfg, true)?;
@@ -393,12 +521,17 @@ pub fn run(cfg: &BenchConfig) -> Result<BenchReport> {
     } else {
         None
     };
+    let reactor = match cfg.connections {
+        Some(n) => Some(drive_reactor(cfg, n.max(1))?),
+        None => None,
+    };
     Ok(BenchReport {
         dataset: cfg.dataset.clone(),
         requests,
         elapsed_us,
         snapshot,
         governor,
+        reactor,
     })
 }
 
@@ -542,6 +675,101 @@ fn open_loop(
     })
 }
 
+/// The reactor multiplexing leg (`--connections N`, DESIGN.md §20):
+/// boot the same fleet shape, put the connection reactor in front of
+/// it, and drive it from `conns` real TCP connections. Each connection
+/// keeps [`REACTOR_DEPTH`] correlated requests in flight — replies are
+/// reaped in completion order while later rows are already on the wire,
+/// so queue pressure comes from the pipeline, not from per-row
+/// round-trip latency. The leg's point is the thread accounting: the
+/// server side stays at `reactor_workers + 2` threads regardless of
+/// `conns`, which the schema validator re-asserts on every committed
+/// `BENCH_8.json`.
+fn drive_reactor(cfg: &BenchConfig, conns: usize) -> Result<ReactorLeg> {
+    let mut ds = synth::by_name(&cfg.dataset, cfg.seed)
+        .with_context(|| format!("unknown dataset {}", cfg.dataset))?;
+    if cfg.max_train > 0 && ds.train_x.len() > cfg.max_train {
+        ds.train_x.truncate(cfg.max_train);
+        ds.train_y.truncate(cfg.max_train);
+    }
+    let sys = SystemConfig {
+        n_chips: cfg.chips.max(1),
+        max_wait: Duration::from_millis(1),
+        seed: cfg.seed,
+        artifact_dir: "/nonexistent".into(),
+        ..SystemConfig::default()
+    };
+    let chip = ChipConfig::default()
+        .with_dims(ds.d(), 24)
+        .with_b(10)
+        .with_mode(Transfer::Quadratic);
+    let coord = Arc::new(Coordinator::start(&sys, &chip, &ds.train_x, &ds.train_y, 0.1, 10)?);
+    let rcfg = reactor::ReactorConfig {
+        workers: coord.reactor_workers,
+        read_timeout: coord.read_timeout,
+        max_conns: Some(conns),
+    };
+    let handle = reactor::spawn(Arc::clone(&coord), "127.0.0.1:0", rcfg)?;
+    let (addr, gauges) = (handle.addr, Arc::clone(&handle.gauges));
+    let pool_workers = coord.reactor_workers as u64;
+    let thread_count = handle.thread_count() as u64;
+    let per = (cfg.requests / conns).max(REACTOR_DEPTH);
+    let xs = &ds.train_x;
+    let t0 = Instant::now();
+    std::thread::scope(|scope| -> Result<()> {
+        let mut joins = Vec::new();
+        for c in 0..conns {
+            joins.push(scope.spawn(move || -> Result<()> {
+                let mut client = Client::connect(addr)?;
+                let (mut sent, mut got, mut in_flight) = (0usize, 0usize, 0usize);
+                while got < per {
+                    // top the pipeline back up to full depth, then
+                    // reap exactly one reply (completion order)
+                    while sent < per && in_flight < REACTOR_DEPTH {
+                        client.send_pipelined(&Request::Predict {
+                            tenant: None,
+                            features: xs[(c * per + sent) % xs.len()].clone(),
+                        })?;
+                        sent += 1;
+                        in_flight += 1;
+                    }
+                    match client.recv_pipelined()? {
+                        (_, Response::Predict(_)) => got += 1,
+                        (_, other) => anyhow::bail!("unexpected reactor reply: {other:?}"),
+                    }
+                    in_flight -= 1;
+                }
+                Ok(())
+            }));
+        }
+        for j in joins {
+            j.join().map_err(|_| anyhow::anyhow!("reactor bench client panicked"))??;
+        }
+        Ok(())
+    })?;
+    let elapsed_us = (t0.elapsed().as_micros() as u64).max(1);
+    handle.join(); // every client hung up; the reactor drains and exits
+    // relaxed-ok: the poll loop exited at the join above — these gauges
+    // are quiesced counters now, not racing telemetry
+    let peak_in_flight = gauges.peak_in_flight.load(Ordering::Relaxed) as u64;
+    let peak_conns = gauges.peak_conns.load(Ordering::Relaxed) as u64;
+    if let Ok(coord) = Arc::try_unwrap(coord) {
+        coord.shutdown();
+    }
+    let responses = (per * conns) as u64;
+    Ok(ReactorLeg {
+        connections: conns as u64,
+        pool_workers,
+        thread_count,
+        in_flight_depth: REACTOR_DEPTH as u64,
+        peak_in_flight,
+        peak_conns,
+        responses,
+        elapsed_us,
+        throughput_rps: responses as f64 / (elapsed_us as f64 * 1e-6),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -634,6 +862,81 @@ mod tests {
         let text = std::fs::read_to_string(path)
             .unwrap_or_else(|e| panic!("reading {path}: {e}"));
         validate_bench_json(&text).unwrap_or_else(|e| panic!("{path}: {e}"));
+    }
+
+    #[test]
+    fn committed_reactor_bench_artifact_passes_the_schema() {
+        // BENCH_8.json (the reactor multiplexing leg, schema v3) is
+        // regenerated by CI via `velm bench serve --smoke
+        // --connections 16`; whatever is committed must parse and must
+        // uphold the thread bound the validator asserts
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_8.json");
+        let text = std::fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("reading {path}: {e}"));
+        validate_bench_json(&text).unwrap_or_else(|e| panic!("{path}: {e}"));
+    }
+
+    #[test]
+    fn reactor_leg_multiplexes_connections_over_a_bounded_pool() {
+        let cfg = BenchConfig {
+            requests: 48,
+            concurrency: 2,
+            chips: 1,
+            max_train: 120,
+            connections: Some(6),
+            ..BenchConfig::smoke()
+        };
+        let report = run(&cfg).unwrap();
+        let r = report.reactor.as_ref().expect("reactor leg");
+        assert_eq!(r.connections, 6);
+        assert_eq!(r.responses, 48, "every pipelined row must answer: {r:?}");
+        assert_eq!(r.in_flight_depth, REACTOR_DEPTH as u64);
+        // the reactor's whole point: 6 connections, workers + 2 threads
+        assert_eq!(
+            r.thread_count,
+            r.pool_workers + 2,
+            "reactor threads = workers + acceptor + poll loop: {r:?}"
+        );
+        assert!(r.peak_conns >= 2, "connections must overlap: {r:?}");
+        assert!(r.peak_in_flight >= 2, "requests must pipeline: {r:?}");
+        let json = report.to_json();
+        assert!(json.contains(BENCH_SCHEMA_V3), "{json}");
+        validate_bench_json(&json).unwrap();
+    }
+
+    #[test]
+    fn validator_polices_the_reactor_block() {
+        // v3 without the block, and the block outside v3, both fail
+        let base = r#""dataset":"d","requests":1,"responses":1,"elapsed_us":1,
+            "throughput_rps":1.0,"conversions":1,"energy_fj":10,"macs":1,
+            "pj_per_mac":0.1,
+            "stages":{"total":{"count":1,"p50_us":1,"p90_us":1,"p99_us":1},
+                      "queue":{"count":1,"p50_us":1,"p90_us":1,"p99_us":1},
+                      "batch_wait":{"count":1,"p50_us":1,"p90_us":1,"p99_us":1},
+                      "compute":{"count":1,"p50_us":1,"p90_us":1,"p99_us":1}}"#;
+        let err =
+            validate_bench_json(&format!(r#"{{"schema":"velm-bench-serve/3",{base}}}"#))
+                .unwrap_err();
+        assert!(err.contains("reactor"), "{err}");
+        let err = validate_bench_json(&format!(
+            r#"{{"schema":"velm-bench-serve/1",{base},"reactor":{{}}}}"#
+        ))
+        .unwrap_err();
+        assert!(err.contains("schema v3"), "{err}");
+        // a report claiming more threads than the pool bound is refused
+        // no matter the connection count — that's the claim CI re-checks
+        let cfg = BenchConfig {
+            requests: 16,
+            concurrency: 2,
+            chips: 1,
+            max_train: 120,
+            connections: Some(2),
+            ..BenchConfig::smoke()
+        };
+        let mut report = run(&cfg).unwrap();
+        report.reactor.as_mut().unwrap().thread_count = 999;
+        let err = validate_bench_json(&report.to_json()).unwrap_err();
+        assert!(err.contains("thread_count"), "{err}");
     }
 
     #[test]

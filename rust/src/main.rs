@@ -38,6 +38,7 @@ fn usage() -> &'static str {
              [--point FILE] [--phys-d K] [--phys-l N] [--virtual-l L]\n\
              [--geoms K1xL1,K2xL2,...] [--tenant NAME=DATASET ...]\n\
              [--governor] [--governor-bits B1,B2,...] [--governor-tick-ms MS]\n\
+             [--reactor-workers N] [--auth-token TOK=T1,T2|TOK=* ...]\n\
              [--read-timeout-ms MS] [--trace-cap N]  TCP front end (tuned point via FILE;\n\
                                                      virtual dies via --phys-d/--phys-l/\n\
                                                      --virtual-l; heterogeneous per-die\n\
@@ -50,14 +51,22 @@ fn usage() -> &'static str {
                                                      file's Pareto front; idle clients\n\
                                                      dropped after --read-timeout-ms,\n\
                                                      0 = never; --trace-cap sizes the\n\
-                                                     flight-recorder ring, default 512)\n\
+                                                     flight-recorder ring, default 512;\n\
+                                                     every v1 connection is served by the\n\
+                                                     multiplexed reactor: --reactor-workers\n\
+                                                     sizes its dispatch pool, default 4;\n\
+                                                     repeatable --auth-token entries give\n\
+                                                     HELLO tokens a tenant scope, * = all)\n\
        client VERB [--addr HOST:PORT] [--v0]         typed client SDK against a running\n\
                                                      fleet; VERB is one of ping |\n\
                                                      stats [--format human|json|prom] |\n\
                                                      health | models | governor |\n\
                                                      drain --die N |\n\
                                                      predict --features 1,2 [--tenant T] |\n\
-                                                     batch --row [tenant:]1,2 ... |\n\
+                                                     batch --row [tenant:]1,2 ... [--stream] |\n\
+                                                     hello --token TOK |\n\
+                                                     update NAME --features 1,2\n\
+                                                       --targets t1[,t2...] |\n\
                                                      trace [--last N] |\n\
                                                      timeline [--last N] [--out FILE]\n\
                                                        [--check] |\n\
@@ -65,8 +74,14 @@ fn usage() -> &'static str {
                                                      unregister NAME   (--v0 forces the\n\
                                                      ASCII line protocol; default is the\n\
                                                      v1 framed protocol with one-round-\n\
-                                                     trip batches; trace, timeline and the\n\
-                                                     json/prom stats formats need v1.\n\
+                                                     trip batches; trace, timeline, the\n\
+                                                     json/prom stats formats, hello,\n\
+                                                     update and batch --stream need v1 —\n\
+                                                     --stream prints rows in completion\n\
+                                                     order as dies finish; update streams\n\
+                                                     one labelled OS-ELM row into a\n\
+                                                     registered tenant; --token runs the\n\
+                                                     HELLO handshake before the verb.\n\
                                                      timeline exports the fleet profile as\n\
                                                      Chrome trace-event JSON: open the\n\
                                                      --out file at https://ui.perfetto.dev\n\
@@ -75,12 +90,17 @@ fn usage() -> &'static str {
        bench serve [--smoke] [--out FILE]            serving benchmark against an in-\n\
              [--requests N] [--concurrency N]        process fleet; reduces the\n\
              [--chips N] [--dataset NAME]            observability snapshot into a\n\
-             [--governor]                            versioned JSON report (BENCH_6.json;\n\
+             [--governor] [--connections N]          versioned JSON report (BENCH_6.json;\n\
              [--arrival poisson:RATE]                --governor adds the governor-enabled\n\
                                                      idle-heavy comparison leg and writes\n\
                                                      schema v2 to BENCH_7.json; --arrival\n\
                                                      switches the closed loop to open-loop\n\
-                                                     Poisson arrivals at RATE req/s)\n\
+                                                     Poisson arrivals at RATE req/s;\n\
+                                                     --connections adds the reactor\n\
+                                                     multiplexing leg — N pipelined TCP\n\
+                                                     connections over a bounded thread\n\
+                                                     pool — and writes schema v3 to\n\
+                                                     BENCH_8.json)\n\
        bench gate --current FILE --previous FILE     fail if throughput drops or p99 rises\n\
              [--max-regress 0.10]                    beyond the budget between two reports\n\
        sweep --what ratio|beta-bits|counter-bits     quick design-space sweep (Fig. 7)\n\
@@ -228,6 +248,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // flight-recorder sizing (DESIGN.md §16): the ring allocates once
     // at boot and never grows, so capacity is a serve-time choice
     sys.trace_cap = args.get_usize("trace-cap", sys.trace_cap).map_err(anyhow::Error::msg)?;
+    // connection reactor sizing (DESIGN.md §20): every v1 connection is
+    // multiplexed over this worker pool, so threads stay
+    // `--reactor-workers + 2` no matter how many clients dial in
+    sys.reactor_workers = args
+        .get_usize("reactor-workers", sys.reactor_workers)
+        .map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(sys.reactor_workers > 0, "--reactor-workers must be positive");
+    // per-connection auth scoping (DESIGN.md §20): repeatable
+    // `--auth-token TOKEN=tenant1,tenant2` (or `TOKEN=*` for an
+    // unrestricted scope); clients present tokens via the HELLO frame
+    sys.auth_tokens.extend(args.get_all("auth-token"));
     // heterogeneous fleets (DESIGN.md §13): per-die fabricated geometry
     if let Some(geoms) = args.get("geoms") {
         sys.die_geoms = geoms
@@ -400,6 +431,12 @@ fn cmd_client(args: &Args) -> Result<()> {
             .unwrap_or_default();
         println!("{prefix}label {} score {:.6}{tenant}", p.label, p.score);
     };
+    // `--token TOK` on any verb runs the HELLO handshake first, binding
+    // this connection to the token's tenant scope (DESIGN.md §20)
+    if let Some(token) = args.get("token") {
+        let tenants = client.hello(token)?;
+        println!("hello ok: scope {}", tenants.join(","));
+    }
     match verb {
         "ping" => {
             client.ping()?;
@@ -492,10 +529,46 @@ fn cmd_client(args: &Args) -> Result<()> {
                 !rows.is_empty(),
                 "batch wants at least one --row [tenant:]x1,x2,..."
             );
-            let preds = client.predict_batch(&rows)?;
-            for (i, p) in preds.iter().enumerate() {
-                show(&format!("row {i}: "), p);
+            if args.flag("stream") {
+                // streamed replies (v1 only, DESIGN.md §20): rows print
+                // in completion order as their dies finish, not in
+                // submission order
+                let (preds, passes) = client.predict_stream(&rows, |i, p| {
+                    show(&format!("row {i} (streamed): "), p);
+                })?;
+                println!("stream end: {} rows, {passes} conversion passes", preds.len());
+            } else {
+                let preds = client.predict_batch(&rows)?;
+                for (i, p) in preds.iter().enumerate() {
+                    show(&format!("row {i}: "), p);
+                }
             }
+        }
+        "hello" => {
+            // bare handshake check: `--token` above already ran it;
+            // without the flag this explains what the verb needs
+            anyhow::ensure!(
+                args.get("token").is_some(),
+                "hello wants --token TOKEN (scope comes from `velm serve --auth-token`)"
+            );
+        }
+        "update" => {
+            // one labelled OS-ELM row into a registered tenant's heads
+            // via the shared-P update path (DESIGN.md §14, §20)
+            let name = args
+                .positional
+                .get(1)
+                .context("update wants: update NAME --features x1,x2 --targets t1[,t2...]")?;
+            let features = args
+                .get_f64_list("features")
+                .map_err(anyhow::Error::msg)?
+                .context("update wants --features x1,x2,...")?;
+            let targets = args
+                .get_f64_list("targets")
+                .map_err(anyhow::Error::msg)?
+                .context("update wants --targets t1[,t2...] (one value per head)")?;
+            client.tenant_update(name, &features, &targets)?;
+            println!("updated {name} with one labelled row");
         }
         "register" => {
             let name = args.positional.get(1).context("register wants: register NAME DATASET")?;
@@ -512,8 +585,8 @@ fn cmd_client(args: &Args) -> Result<()> {
         }
         other => bail!(
             "unknown client verb '{other}' \
-             (ping|predict|batch|register|unregister|models|stats|health|governor|drain|\
-             trace|timeline)"
+             (ping|predict|batch|hello|update|register|unregister|models|stats|health|\
+             governor|drain|trace|timeline)"
         ),
     }
     Ok(())
@@ -558,6 +631,13 @@ fn cmd_bench(args: &Args) -> Result<()> {
         );
         cfg.arrival = Some(rate);
     }
+    // reactor multiplexing leg (DESIGN.md §20): `--connections N`
+    // drives N real TCP connections through the connection reactor,
+    // each pipelining correlated requests — schema v3, BENCH_8.json
+    let conns = args.get_usize("connections", 0).map_err(anyhow::Error::msg)?;
+    if conns > 0 {
+        cfg.connections = Some(conns);
+    }
     println!(
         "bench serve: {} requests x {} {} clients on {} ({} dies){} ...",
         cfg.requests,
@@ -568,7 +648,13 @@ fn cmd_bench(args: &Args) -> Result<()> {
         },
         cfg.dataset,
         cfg.chips,
-        if cfg.governor { " + governor comparison leg" } else { "" }
+        if cfg.governor {
+            " + governor comparison leg"
+        } else if cfg.connections.is_some() {
+            " + reactor multiplexing leg"
+        } else {
+            ""
+        }
     );
     let report = velm::loadgen::run(&cfg)?;
     let s = &report.snapshot;
@@ -592,9 +678,30 @@ fn cmd_bench(args: &Args) -> Result<()> {
             g.responses, g.throughput_rps, g.p99_us, g.energy_fj, g.fj_saved, g.lowers, g.raises
         );
     }
+    if let Some(r) = &report.reactor {
+        println!(
+            "reactor leg: {} connections x {} in flight over {} server threads \
+             (pool {} + acceptor + poll loop): {} rows, {:.1} req/s, \
+             peak {} in flight / {} conns",
+            r.connections,
+            r.in_flight_depth,
+            r.thread_count,
+            r.pool_workers,
+            r.responses,
+            r.throughput_rps,
+            r.peak_in_flight,
+            r.peak_conns
+        );
+    }
     let json = report.to_json();
     velm::loadgen::validate_bench_json(&json).map_err(anyhow::Error::msg)?;
-    let default_out = if cfg.governor { "BENCH_7.json" } else { "BENCH_6.json" };
+    let default_out = if cfg.connections.is_some() {
+        "BENCH_8.json"
+    } else if cfg.governor {
+        "BENCH_7.json"
+    } else {
+        "BENCH_6.json"
+    };
     let out = args.get_or("out", default_out);
     std::fs::write(&out, json + "\n").with_context(|| format!("writing {out}"))?;
     println!("report written to {out}");

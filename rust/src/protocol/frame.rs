@@ -51,6 +51,16 @@ const T_TRACE: u8 = 0x0B;
 const T_SNAPSHOT: u8 = 0x0C;
 const T_GOVERNOR: u8 = 0x0D;
 const T_TIMELINE: u8 = 0x0E;
+/// `Hello{token}` handshake binding a connection to a tenant scope
+/// (DESIGN.md §20). Sent bare — never inside a correlation envelope.
+pub const T_HELLO: u8 = 0x0F;
+/// One labelled OS-ELM row streamed into a tenant's heads.
+pub const T_TENANT_UPDATE: u8 = 0x10;
+/// `BatchPredict` asking for streamed per-row replies.
+pub const T_BATCH_STREAM: u8 = 0x11;
+/// Correlation envelope: `u64` id + one inner request frame, so a
+/// connection can carry many in-flight requests at once.
+pub const T_CORR: u8 = 0x12;
 
 // Response frame types (high bit set).
 const R_PONG: u8 = 0x81;
@@ -66,6 +76,16 @@ const R_TRACE: u8 = 0x8A;
 const R_SNAPSHOT: u8 = 0x8B;
 const R_GOVERNOR: u8 = 0x8C;
 const R_TIMELINE: u8 = 0x8D;
+/// Hello accepted: the granted tenant scope (`*` = unrestricted).
+pub const R_HELLO: u8 = 0x8E;
+/// TenantUpdate applied on every die.
+pub const R_UPDATED: u8 = 0x8F;
+/// Correlation envelope: `u64` id + one inner response frame.
+pub const R_CORR: u8 = 0x90;
+/// One streamed BatchPredict row: corr id + row index + prediction.
+pub const R_STREAM_ROW: u8 = 0x91;
+/// End of a streamed BatchPredict: corr id + row count + passes.
+pub const R_STREAM_END: u8 = 0x92;
 const R_ERROR: u8 = 0xFF;
 
 // --- payload writers ---
@@ -313,6 +333,24 @@ pub fn encode_request(req: &Request) -> (u8, Vec<u8>) {
             put_u32(&mut buf, *last as u32);
             T_TIMELINE
         }
+        Request::Hello { token } => {
+            put_str(&mut buf, token);
+            T_HELLO
+        }
+        Request::TenantUpdate { name, features, targets } => {
+            put_str(&mut buf, name);
+            put_features(&mut buf, features);
+            put_features(&mut buf, targets);
+            T_TENANT_UPDATE
+        }
+        Request::BatchStream { rows } => {
+            put_u32(&mut buf, rows.len() as u32);
+            for row in rows {
+                put_tenant(&mut buf, row.tenant.as_deref());
+                put_features(&mut buf, &row.features);
+            }
+            T_BATCH_STREAM
+        }
     };
     (ty, buf)
 }
@@ -349,6 +387,27 @@ pub fn decode_request(ty: u8, payload: &[u8]) -> Result<Option<Request>, String>
         T_SNAPSHOT => Request::Snapshot,
         T_GOVERNOR => Request::Governor,
         T_TIMELINE => Request::Timeline { last: c.u32()? as usize },
+        T_HELLO => Request::Hello { token: c.str()? },
+        T_TENANT_UPDATE => Request::TenantUpdate {
+            name: c.str()?,
+            features: c.features()?,
+            targets: c.features()?,
+        },
+        T_BATCH_STREAM => {
+            let n = c.u32()? as usize;
+            let mut rows = Vec::new();
+            for _ in 0..n {
+                rows.push(PredictRow { tenant: c.tenant()?, features: c.features()? });
+            }
+            Request::BatchStream { rows }
+        }
+        T_CORR => {
+            return Err(
+                "correlation envelopes are transport frames; \
+                 decode via decode_correlated_request"
+                    .into(),
+            )
+        }
         other => return Err(format!("unknown request frame type {other:#04x}")),
     };
     c.done()?;
@@ -422,6 +481,17 @@ pub fn encode_response(resp: &Response) -> (u8, Vec<u8>) {
         Response::Error(e) => {
             put_str(&mut buf, e);
             R_ERROR
+        }
+        Response::HelloOk { tenants } => {
+            put_u32(&mut buf, tenants.len() as u32);
+            for t in tenants {
+                put_str(&mut buf, t);
+            }
+            R_HELLO
+        }
+        Response::Updated { name } => {
+            put_str(&mut buf, name);
+            R_UPDATED
         }
     };
     (ty, buf)
@@ -617,15 +687,182 @@ pub fn decode_response(ty: u8, payload: &[u8]) -> Result<Response, String> {
             Response::Timeline(es)
         }
         R_ERROR => Response::Error(c.str()?),
+        R_HELLO => {
+            // an empty string is 4 bytes, the hostile-count bound
+            let n = c.u32()? as usize;
+            if n > c.remaining() / 4 {
+                return Err(format!("tenant scope count {n} exceeds the frame"));
+            }
+            let mut tenants = Vec::new();
+            for _ in 0..n {
+                tenants.push(c.str()?);
+            }
+            Response::HelloOk { tenants }
+        }
+        R_UPDATED => Response::Updated { name: c.str()? },
+        R_CORR => {
+            return Err(
+                "correlation envelopes are transport frames; \
+                 decode via decode_correlated_response"
+                    .into(),
+            )
+        }
+        R_STREAM_ROW | R_STREAM_END => {
+            return Err(
+                "stream frames are transport frames; decode via \
+                 decode_stream_row / decode_stream_end"
+                    .into(),
+            )
+        }
         other => return Err(format!("unknown response frame type {other:#04x}")),
     };
     c.done()?;
     Ok(resp)
 }
 
+// --- correlation envelopes and stream frames (DESIGN.md §20) ---
+
+/// Encode a correlated request: `[corr: u64][inner type: u8][inner
+/// payload]` under [`T_CORR`]. The reactor echoes `corr` on the
+/// matching [`R_CORR`] (or stream) frames, so responses arriving in
+/// completion order can be matched back to their requests.
+pub fn encode_correlated_request(corr: u64, req: &Request) -> (u8, Vec<u8>) {
+    let (ity, ipayload) = encode_request(req);
+    let mut buf = Vec::with_capacity(9 + ipayload.len());
+    put_u64(&mut buf, corr);
+    buf.push(ity);
+    buf.extend_from_slice(&ipayload);
+    (T_CORR, buf)
+}
+
+/// Decode a correlated request envelope. Nested envelopes, handshakes
+/// and quits may not ride inside one: a correlation id spans exactly
+/// one dispatchable request.
+pub fn decode_correlated_request(payload: &[u8]) -> Result<(u64, Request), String> {
+    let mut c = Cur::new(payload);
+    let corr = c.u64()?;
+    let ity = c.u8()?;
+    match ity {
+        T_CORR => return Err("nested correlation envelopes are not allowed".into()),
+        T_HELLO => return Err("Hello may not ride a correlation envelope".into()),
+        T_QUIT => return Err("Quit may not ride a correlation envelope".into()),
+        _ => {}
+    }
+    let inner = c.take(c.remaining())?;
+    match decode_request(ity, inner)? {
+        Some(req) => Ok((corr, req)),
+        None => Err("Quit may not ride a correlation envelope".into()),
+    }
+}
+
+/// Encode a correlated response envelope under [`R_CORR`].
+pub fn encode_correlated_response(corr: u64, resp: &Response) -> (u8, Vec<u8>) {
+    let (ity, ipayload) = encode_response(resp);
+    let mut buf = Vec::with_capacity(9 + ipayload.len());
+    put_u64(&mut buf, corr);
+    buf.push(ity);
+    buf.extend_from_slice(&ipayload);
+    (R_CORR, buf)
+}
+
+/// Decode a correlated response envelope.
+pub fn decode_correlated_response(payload: &[u8]) -> Result<(u64, Response), String> {
+    let mut c = Cur::new(payload);
+    let corr = c.u64()?;
+    let ity = c.u8()?;
+    if ity == R_CORR {
+        return Err("nested correlation envelopes are not allowed".into());
+    }
+    let inner = c.take(c.remaining())?;
+    Ok((corr, decode_response(ity, inner)?))
+}
+
+/// Encode one streamed BatchPredict row: `[corr][row index][prediction]`
+/// under [`R_STREAM_ROW`]. Rows are emitted in completion order; the
+/// index places each back in its submitted position.
+pub fn encode_stream_row(corr: u64, index: u32, p: &Prediction) -> (u8, Vec<u8>) {
+    let mut buf = Vec::new();
+    put_u64(&mut buf, corr);
+    put_u32(&mut buf, index);
+    put_prediction(&mut buf, p);
+    (R_STREAM_ROW, buf)
+}
+
+/// Decode one streamed BatchPredict row.
+pub fn decode_stream_row(payload: &[u8]) -> Result<(u64, u32, Prediction), String> {
+    let mut c = Cur::new(payload);
+    let corr = c.u64()?;
+    let index = c.u32()?;
+    let p = prediction(&mut c)?;
+    c.done()?;
+    Ok((corr, index, p))
+}
+
+/// Encode the end-of-stream frame: `[corr][row count][total passes]`
+/// under [`R_STREAM_END`].
+pub fn encode_stream_end(corr: u64, rows: u32, passes: u64) -> (u8, Vec<u8>) {
+    let mut buf = Vec::new();
+    put_u64(&mut buf, corr);
+    put_u32(&mut buf, rows);
+    put_u64(&mut buf, passes);
+    (R_STREAM_END, buf)
+}
+
+/// Decode the end-of-stream frame into (corr, row count, passes).
+pub fn decode_stream_end(payload: &[u8]) -> Result<(u64, u32, u64), String> {
+    let mut c = Cur::new(payload);
+    let corr = c.u64()?;
+    let rows = c.u32()?;
+    let passes = c.u64()?;
+    c.done()?;
+    Ok((corr, rows, passes))
+}
+
 // --- transport ---
 
-fn write_frame(w: &mut dyn Write, ty: u8, payload: &[u8]) -> std::io::Result<()> {
+/// Incremental frame parser over a byte buffer (the reactor's
+/// nonblocking read path): `Ok(Some((type, payload, consumed)))` when
+/// a whole frame is buffered, `Ok(None)` when more bytes are needed.
+/// Bad magic and an oversized length prefix are hard errors — the
+/// stream cannot be resynchronised. Feeding a buffer one byte at a
+/// time yields exactly the frames [`read_frame`] would.
+pub fn take_frame(buf: &[u8]) -> std::io::Result<Option<(u8, Vec<u8>, usize)>> {
+    let Some(&first) = buf.first() else {
+        return Ok(None);
+    };
+    if first != FRAME_MAGIC {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("bad frame magic {first:#04x}"),
+        ));
+    }
+    if buf.len() < 6 {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(buf[2..6].try_into().unwrap());
+    if len > MAX_FRAME_LEN {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame of {len} bytes exceeds the {MAX_FRAME_LEN} byte cap"),
+        ));
+    }
+    let total = 6 + len as usize;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    Ok(Some((buf[1], buf[6..total].to_vec(), total)))
+}
+
+/// Render one frame to owned bytes — the reactor's write-buffer path
+/// (its nonblocking sockets never see a blocking `Write` call).
+pub fn frame_bytes(ty: u8, payload: &[u8]) -> std::io::Result<Vec<u8>> {
+    let mut buf = Vec::with_capacity(6 + payload.len());
+    write_frame(&mut buf, ty, payload)?;
+    Ok(buf)
+}
+
+/// Write one `[magic][type][len][payload]` frame and flush.
+pub fn write_frame(w: &mut dyn Write, ty: u8, payload: &[u8]) -> std::io::Result<()> {
     // enforce the cap on encode too: a huge batch must fail fast here
     // with a cause, not as a silent `as u32` wrap (a corrupted length
     // prefix desyncs the peer) or an opaque hangup from the reader side
@@ -651,7 +888,7 @@ fn write_frame(w: &mut dyn Write, ty: u8, payload: &[u8]) -> std::io::Result<()>
 /// Read one frame. `Ok(None)` = clean EOF before a new frame; a
 /// truncated header/payload, a bad magic byte or an oversized length
 /// prefix are hard errors (the stream cannot be resynchronised).
-fn read_frame(r: &mut dyn BufRead) -> std::io::Result<Option<(u8, Vec<u8>)>> {
+pub fn read_frame(r: &mut dyn BufRead) -> std::io::Result<Option<(u8, Vec<u8>)>> {
     let mut head = [0u8; 6];
     // distinguish clean EOF (no first byte) from a truncated header
     let n = r.read(&mut head[..1])?;
@@ -1045,5 +1282,126 @@ mod tests {
         payload[0..4].copy_from_slice(&99u32.to_le_bytes());
         let err = decode_response(R_SNAPSHOT, &payload).unwrap_err();
         assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn hello_tenant_update_and_batch_stream_frames_roundtrip() {
+        for req in [
+            Request::Hello { token: "alpha-key".into() },
+            Request::Hello { token: String::new() },
+            Request::TenantUpdate {
+                name: "slope".into(),
+                features: vec![0.5, -0.25, 1.0],
+                targets: vec![0.125],
+            },
+            Request::BatchStream {
+                rows: vec![
+                    PredictRow { tenant: None, features: vec![1.0, 2.0] },
+                    PredictRow { tenant: Some("digits".into()), features: vec![] },
+                ],
+            },
+        ] {
+            let (ty, payload) = encode_request(&req);
+            assert_eq!(decode_request(ty, &payload).unwrap(), Some(req));
+            let mut trailing = payload.clone();
+            trailing.push(0);
+            assert!(decode_request(ty, &trailing).is_err());
+        }
+        for resp in [
+            Response::HelloOk { tenants: vec!["*".into()] },
+            Response::HelloOk { tenants: vec!["a".into(), "b".into()] },
+            Response::HelloOk { tenants: vec![] },
+            Response::Updated { name: "slope".into() },
+        ] {
+            let (ty, payload) = encode_response(&resp);
+            assert_eq!(decode_response(ty, &payload).unwrap(), resp);
+            let mut trailing = payload.clone();
+            trailing.push(0);
+            assert!(decode_response(ty, &trailing).is_err());
+        }
+        // a hostile scope count must fail fast, not allocate
+        let mut payload = Vec::new();
+        put_u32(&mut payload, u32::MAX);
+        let err = decode_response(R_HELLO, &payload).unwrap_err();
+        assert!(err.contains("scope count"), "{err}");
+    }
+
+    #[test]
+    fn correlation_envelopes_roundtrip_and_reject_nesting() {
+        let req = Request::Predict { tenant: Some("slope".into()), features: vec![0.5] };
+        let (ty, payload) = encode_correlated_request(7, &req);
+        assert_eq!(ty, T_CORR);
+        assert_eq!(decode_correlated_request(&payload).unwrap(), (7, req.clone()));
+
+        let resp = Response::Predict(Prediction { label: 1, score: 0.25, tenant: None });
+        let (rty, rpayload) = encode_correlated_response(7, &resp);
+        assert_eq!(rty, R_CORR);
+        assert_eq!(decode_correlated_response(&rpayload).unwrap(), (7, resp));
+
+        // nesting, handshake and quit are refused inside an envelope
+        let (_, nested) = encode_correlated_request(8, &req);
+        let mut outer = Vec::new();
+        put_u64(&mut outer, 9);
+        outer.push(T_CORR);
+        outer.extend_from_slice(&nested);
+        assert!(decode_correlated_request(&outer).is_err());
+        for bad in [T_HELLO, T_QUIT] {
+            let mut env = Vec::new();
+            put_u64(&mut env, 1);
+            env.push(bad);
+            assert!(decode_correlated_request(&env).is_err());
+        }
+        let mut env = Vec::new();
+        put_u64(&mut env, 1);
+        env.push(R_CORR);
+        assert!(decode_correlated_response(&env).is_err());
+        // and a truncated envelope (no inner type byte) is rejected
+        let mut short = Vec::new();
+        put_u64(&mut short, 1);
+        assert!(decode_correlated_request(&short).is_err());
+    }
+
+    #[test]
+    fn stream_row_and_end_frames_roundtrip() {
+        let p = Prediction { label: -1, score: 0.75, tenant: Some("slope".into()) };
+        let (ty, payload) = encode_stream_row(11, 3, &p);
+        assert_eq!(ty, R_STREAM_ROW);
+        assert_eq!(decode_stream_row(&payload).unwrap(), (11, 3, p));
+        let mut trailing = payload.clone();
+        trailing.push(0);
+        assert!(decode_stream_row(&trailing).is_err());
+
+        let (ty, payload) = encode_stream_end(11, 64, 384);
+        assert_eq!(ty, R_STREAM_END);
+        assert_eq!(decode_stream_end(&payload).unwrap(), (11, 64, 384));
+        let mut trailing = payload.clone();
+        trailing.push(0);
+        assert!(decode_stream_end(&trailing).is_err());
+        assert!(decode_stream_end(&payload[..11]).is_err());
+    }
+
+    #[test]
+    fn take_frame_parses_incrementally_and_reports_consumption() {
+        let req = Request::Predict { tenant: None, features: vec![0.5, -0.5] };
+        let (ty, payload) = encode_request(&req);
+        let bytes = frame_bytes(ty, &payload).unwrap();
+        // every strict prefix needs more bytes; the full buffer parses
+        for n in 0..bytes.len() {
+            assert!(take_frame(&bytes[..n]).unwrap().is_none(), "prefix {n}");
+        }
+        let (got_ty, got_payload, consumed) = take_frame(&bytes).unwrap().unwrap();
+        assert_eq!((got_ty, consumed), (ty, bytes.len()));
+        assert_eq!(decode_request(got_ty, &got_payload).unwrap(), Some(req));
+        // trailing bytes of a second frame are left unconsumed
+        let mut two = bytes.clone();
+        two.extend_from_slice(&bytes);
+        let (_, _, consumed) = take_frame(&two).unwrap().unwrap();
+        assert_eq!(consumed, bytes.len());
+        assert!(take_frame(&two[consumed..]).unwrap().is_some());
+        // bad magic and oversized prefixes are hard errors
+        assert!(take_frame(b"PING\n").is_err());
+        let mut huge = vec![FRAME_MAGIC, T_PING];
+        huge.extend_from_slice(&(MAX_FRAME_LEN + 1).to_le_bytes());
+        assert!(take_frame(&huge).is_err());
     }
 }

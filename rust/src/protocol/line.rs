@@ -148,6 +148,8 @@ pub fn format_response(resp: &Response) -> String {
         }
         Response::Snapshot(_) => "ERR snapshot responses need the v1 framed protocol".into(),
         Response::Timeline(_) => "ERR timeline responses need the v1 framed protocol".into(),
+        Response::HelloOk { .. } => "ERR hello responses need the v1 framed protocol".into(),
+        Response::Updated { .. } => "ERR update responses need the v1 framed protocol".into(),
         Response::Registered { name, task, score } => {
             format!("OK registered {name} ({task}, mean train score {score:.4})")
         }
@@ -186,6 +188,15 @@ pub fn format_request(req: &Request) -> Result<String, String> {
         Request::Governor => Ok("GOVERNOR".into()),
         Request::Timeline { .. } => {
             Err("protocol v0 has no timeline frame; use the v1 framed protocol".into())
+        }
+        Request::Hello { .. } => {
+            Err("protocol v0 has no hello frame; use the v1 framed protocol".into())
+        }
+        Request::TenantUpdate { .. } => {
+            Err("protocol v0 has no tenant-update frame; use the v1 framed protocol".into())
+        }
+        Request::BatchStream { .. } => {
+            Err("protocol v0 has no stream frame; send rows as PREDICT lines".into())
         }
     }
 }
@@ -244,6 +255,13 @@ pub fn parse_response(line: &str, expect: &Request) -> Response {
         Request::Governor => Response::Governor(body.to_string()),
         Request::Timeline { .. } => {
             Response::Error("protocol v0 has no timeline frame".into())
+        }
+        Request::Hello { .. } => Response::Error("protocol v0 has no hello frame".into()),
+        Request::TenantUpdate { .. } => {
+            Response::Error("protocol v0 has no tenant-update frame".into())
+        }
+        Request::BatchStream { .. } => {
+            Response::Error("protocol v0 has no stream frame".into())
         }
     }
 }
@@ -479,6 +497,38 @@ mod tests {
             }
             other => panic!("bad register parse: {other:?}"),
         }
+    }
+
+    #[test]
+    fn streaming_verbs_answer_capability_errors_on_v0() {
+        // the reactor-era verbs (DESIGN.md §20) are v1-only: v0 answers
+        // a capability line, never a parse panic or a silent drop
+        let hello = Request::Hello { token: "k".into() };
+        let update = Request::TenantUpdate {
+            name: "slope".into(),
+            features: vec![0.5],
+            targets: vec![1.0],
+        };
+        let stream = Request::BatchStream { rows: vec![] };
+        for (req, want) in [
+            (&hello, "protocol v0 has no hello frame; use the v1 framed protocol"),
+            (
+                &update,
+                "protocol v0 has no tenant-update frame; use the v1 framed protocol",
+            ),
+            (&stream, "protocol v0 has no stream frame; send rows as PREDICT lines"),
+        ] {
+            assert_eq!(format_request(req).unwrap_err(), want);
+            assert!(matches!(parse_response("OK whatever", req), Response::Error(_)));
+        }
+        assert_eq!(
+            format_response(&Response::HelloOk { tenants: vec!["*".into()] }),
+            "ERR hello responses need the v1 framed protocol"
+        );
+        assert_eq!(
+            format_response(&Response::Updated { name: "slope".into() }),
+            "ERR update responses need the v1 framed protocol"
+        );
     }
 
     #[test]

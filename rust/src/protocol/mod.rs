@@ -92,6 +92,24 @@ pub enum Request {
     /// fleet profiler (DESIGN.md §19), oldest first — the raw material
     /// for Chrome trace-event export (v1 only; v0 has no spelling).
     Timeline { last: usize },
+    /// Connection handshake (DESIGN.md §20): present `token` and bind
+    /// the connection to the tenant scope it grants. Outside a
+    /// connection (in-process, library) it validates the token and
+    /// reports the scope. v1 only; never rides a correlation envelope.
+    Hello { token: String },
+    /// One labelled OS-ELM row streamed into a registered tenant's
+    /// heads via the shared-P update path (DESIGN.md §14, §20).
+    /// `targets` carries one value per head.
+    TenantUpdate {
+        name: String,
+        features: Vec<f64>,
+        targets: Vec<f64>,
+    },
+    /// [`Request::BatchPredict`] asking for streamed replies: the
+    /// reactor answers each row as its die finishes (`R_STREAM_ROW`
+    /// frames in completion order, then `R_STREAM_END`). Blocking
+    /// transports answer it like a buffered batch (v1 only).
+    BatchStream { rows: Vec<PredictRow> },
 }
 
 /// One scored row, as the protocol reports it.
@@ -135,6 +153,11 @@ pub enum Response {
     /// Timeline profiler dump, oldest first (v1 only).
     Timeline(Vec<TimelineEvent>),
     Error(String),
+    /// Handshake accepted: the granted tenant scope, `["*"]` when the
+    /// token is unrestricted (DESIGN.md §20).
+    HelloOk { tenants: Vec<String> },
+    /// A [`Request::TenantUpdate`] was applied on every die.
+    Updated { name: String },
 }
 
 /// Outcome of reading one request off a transport.

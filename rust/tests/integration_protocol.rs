@@ -7,19 +7,28 @@
 //!     submission (observed via `Metrics`), not B;
 //!   * golden strings pin the v0 line grammar so the protocol redesign
 //!     cannot silently break pre-protocol clients;
-//!   * idle connections are reaped by `SystemConfig::read_timeout`.
+//!   * idle connections are reaped by `SystemConfig::read_timeout`;
+//!   * the multiplexed connection reactor (DESIGN.md §20): 64
+//!     concurrent v1 connections with 4 correlated requests in flight
+//!     each answer bit-identically to the blocking path from a thread
+//!     pool that does not grow with the connection count; streamed
+//!     batch replies reassemble bit-exactly and start before the full
+//!     batch lands; live `TenantUpdate` rows move a registered head and
+//!     are refused outside the connection's HELLO scope; in-flight
+//!     requests keep a connection alive across the read timeout.
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::atomic::Ordering;
-use std::sync::Arc;
+use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
 
 use velm::client::Client;
 use velm::config::{ChipConfig, SystemConfig};
-use velm::coordinator::{server, Coordinator};
+use velm::coordinator::{reactor, server, Coordinator};
 use velm::datasets::synth;
-use velm::protocol::PredictRow;
+use velm::protocol::{PredictRow, Prediction, Request, Response};
 use velm::registry::TenantSpec;
 
 /// One-die fleet (deterministic scores across paths) on brightdata,
@@ -217,6 +226,283 @@ fn golden_v0_line_grammar() {
     // dispatch-level errors still read "ERR <context chain>"
     let wrong_dim = server::handle_line(&coord, "CLASSIFY 1,2").unwrap();
     assert!(wrong_dim.starts_with("ERR expected"), "{wrong_dim}");
+}
+
+#[test]
+fn sixty_four_multiplexed_connections_share_the_reactor_pool() {
+    let (coord, ds) = start_system();
+    let rcfg = reactor::ReactorConfig {
+        workers: coord.reactor_workers,
+        read_timeout: coord.read_timeout,
+        max_conns: Some(65),
+    };
+    let handle = reactor::spawn(Arc::clone(&coord), "127.0.0.1:0", rcfg).expect("reactor");
+    let addr = handle.addr;
+    let gauges = Arc::clone(&handle.gauges);
+    // the server's thread count is fixed before any client dials in,
+    // and 65 connections will not grow it
+    assert_eq!(handle.thread_count(), coord.reactor_workers + 2);
+
+    // interleaved multi-tenant traffic, answered first over a blocking
+    // single-in-flight connection as the bit-exact reference
+    let rows: Vec<PredictRow> = ds
+        .test_x
+        .iter()
+        .take(4)
+        .enumerate()
+        .map(|(i, x)| PredictRow {
+            tenant: if i % 2 == 0 { Some("slope".into()) } else { None },
+            features: x.clone(),
+        })
+        .collect();
+    let mut reference = Client::connect(addr).expect("reference connect");
+    let expected: Vec<Prediction> = rows
+        .iter()
+        .map(|r| reference.predict(r.tenant.as_deref(), &r.features).expect("reference"))
+        .collect();
+
+    // 64 concurrent connections, each with all 4 correlated requests
+    // in flight before it reads a single reply. The first barrier holds
+    // every connection open at once; the second keeps them open until
+    // the slowest has been fully answered, so the peak gauges must see
+    // the whole fleet of connections simultaneously.
+    let barrier = Barrier::new(64);
+    let results: Vec<Vec<Prediction>> = std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for _ in 0..64 {
+            let (rows, barrier) = (&rows, &barrier);
+            joins.push(scope.spawn(move || {
+                let mut c = Client::connect(addr).expect("connect");
+                barrier.wait();
+                let corrs: Vec<u64> = rows
+                    .iter()
+                    .map(|r| {
+                        c.send_pipelined(&Request::Predict {
+                            tenant: r.tenant.clone(),
+                            features: r.features.clone(),
+                        })
+                        .expect("send")
+                    })
+                    .collect();
+                // replies arrive in completion order — match by id
+                let mut by_corr = HashMap::new();
+                for _ in 0..corrs.len() {
+                    let (id, resp) = c.recv_pipelined().expect("recv");
+                    match resp {
+                        Response::Predict(p) => {
+                            assert!(by_corr.insert(id, p).is_none(), "duplicate id {id}")
+                        }
+                        other => panic!("unexpected reply: {other:?}"),
+                    }
+                }
+                barrier.wait();
+                corrs
+                    .iter()
+                    .map(|id| by_corr.remove(id).expect("every id answered exactly once"))
+                    .collect::<Vec<_>>()
+            }));
+        }
+        joins.into_iter().map(|j| j.join().expect("client thread")).collect()
+    });
+    for preds in &results {
+        for (i, (p, e)) in preds.iter().zip(&expected).enumerate() {
+            // bit-exact against the blocking single-in-flight path
+            assert_eq!(p.score.to_bits(), e.score.to_bits(), "row {i}: score diverged");
+            assert_eq!(p.label, e.label, "row {i}: label diverged");
+            assert_eq!(p.tenant, e.tenant, "row {i}: tenant diverged");
+        }
+    }
+    drop(reference);
+    handle.join();
+    // the reactor's own gauges agree: the whole fleet of connections
+    // was open at once, requests were genuinely in flight together,
+    // and no connection fell back to a legacy v0 thread
+    assert!(
+        gauges.peak_conns.load(Ordering::Relaxed) >= 65,
+        "expected 65 simultaneous connections, saw peak {}",
+        gauges.peak_conns.load(Ordering::Relaxed)
+    );
+    assert!(
+        gauges.peak_in_flight.load(Ordering::Relaxed) >= 4,
+        "expected pipelined requests in flight, saw peak {}",
+        gauges.peak_in_flight.load(Ordering::Relaxed)
+    );
+    assert_eq!(gauges.legacy_conns.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn streamed_batch_replies_reassemble_bit_exactly_and_start_early() {
+    let (coord, ds) = start_system();
+    let (addr, srv) = server::serve_n(Arc::clone(&coord), 2).expect("serve");
+    let rows: Vec<PredictRow> = ds
+        .test_x
+        .iter()
+        .take(10)
+        .enumerate()
+        .map(|(i, x)| PredictRow {
+            tenant: if i % 3 == 0 { Some("slope".into()) } else { None },
+            features: x.clone(),
+        })
+        .collect();
+    // the buffered reply is the reference
+    let mut blocking = Client::connect(addr).expect("connect");
+    let buffered = blocking.predict_batch(&rows).expect("batch");
+    // the streamed reply: per-row frames as dies finish, then an
+    // end-of-stream frame carrying the row count and total passes
+    let mut streaming = Client::connect(addr).expect("connect");
+    let t0 = Instant::now();
+    let mut first_row_at = None;
+    let mut streamed_order = Vec::new();
+    let (streamed, passes) = streaming
+        .predict_stream(&rows, |i, _| {
+            first_row_at.get_or_insert_with(|| t0.elapsed());
+            streamed_order.push(i);
+        })
+        .expect("stream");
+    let total = t0.elapsed();
+    assert_eq!(streamed_order.len(), rows.len(), "one callback per row");
+    assert!(passes >= rows.len() as u64, "every row costs at least one pass");
+    assert_eq!(streamed.len(), buffered.len());
+    for (i, (s, b)) in streamed.iter().zip(&buffered).enumerate() {
+        assert_eq!(s.score.to_bits(), b.score.to_bits(), "row {i}: score diverged");
+        assert_eq!(s.label, b.label, "row {i}: label diverged");
+        assert_eq!(s.tenant, b.tenant, "row {i}: tenant diverged");
+    }
+    let first = first_row_at.expect("at least one streamed row");
+    assert!(
+        first < total,
+        "first streamed row ({first:?}) must land before the full batch ({total:?})"
+    );
+    drop(blocking);
+    drop(streaming);
+    srv.join();
+}
+
+#[test]
+fn tenant_updates_stream_in_scope_and_are_refused_outside_it() {
+    // a fleet with auth tokens: "root" unrestricted, "viewer" scoped to
+    // a tenant that is NOT the one under test
+    let ds = synth::brightdata(1).with_test_subsample(20, 1);
+    let mut cfg = ChipConfig::default().with_b(10);
+    cfg.d = ds.d();
+    let sys = SystemConfig {
+        n_chips: 1,
+        artifact_dir: "/nonexistent".into(),
+        max_wait: Duration::from_millis(1),
+        auth_tokens: vec!["root=*".into(), "viewer=aux".into()],
+        ..Default::default()
+    };
+    let coord = Arc::new(
+        Coordinator::start(&sys, &cfg, &ds.train_x, &ds.train_y, 0.1, 10).expect("start"),
+    );
+    let reg_y: Vec<f64> = ds.train_x.iter().map(|x| 0.5 * x[0] - 0.25 * x[1]).collect();
+    coord
+        .register_tenant(
+            TenantSpec::regression("slope", ds.train_x.clone(), &reg_y, 1e-3, 12).unwrap(),
+        )
+        .unwrap();
+    let (addr, srv) = server::serve_n(Arc::clone(&coord), 3).expect("serve");
+
+    let mut admin = Client::connect(addr).expect("connect");
+    assert_eq!(admin.hello("root").expect("hello"), vec!["*".to_string()]);
+    let x = ds.train_x[0].clone();
+    let before = admin.predict(Some("slope"), &x).expect("predict").score;
+    let target = before + 4.0;
+    // live traffic: labelled OS-ELM rows stream into the registered
+    // head over the same connection and measurably move it
+    for _ in 0..30 {
+        admin.tenant_update("slope", &x, &[target]).expect("update");
+    }
+    let after = admin.predict(Some("slope"), &x).expect("predict").score;
+    assert!(
+        (target - after).abs() < (target - before).abs(),
+        "updates must move the head toward the target: \
+         before {before}, after {after}, target {target}"
+    );
+
+    // an out-of-scope connection's update is refused — and the refusal
+    // does not disturb the head
+    let mut viewer = Client::connect(addr).expect("connect");
+    assert_eq!(viewer.hello("viewer").expect("hello"), vec!["aux".to_string()]);
+    let err = viewer.tenant_update("slope", &x, &[0.0]).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("outside this connection's scope"),
+        "{err:#}"
+    );
+    let unmoved = admin.predict(Some("slope"), &x).expect("predict").score;
+    assert_eq!(unmoved.to_bits(), after.to_bits(), "a refused update must not touch the head");
+
+    // an unknown token is a typed error, not a hangup
+    let mut nobody = Client::connect(addr).expect("connect");
+    let err = nobody.hello("wrong").unwrap_err();
+    assert!(format!("{err:#}").contains("unknown auth token"), "{err:#}");
+    nobody.ping().expect("the connection survives a refused handshake");
+
+    drop(admin);
+    drop(viewer);
+    drop(nobody);
+    srv.join();
+}
+
+#[test]
+fn in_flight_requests_keep_a_connection_alive_past_the_read_timeout() {
+    let ds = synth::brightdata(1).with_test_subsample(5, 1);
+    let mut cfg = ChipConfig::default().with_b(10);
+    cfg.d = ds.d();
+    let sys = SystemConfig {
+        n_chips: 1,
+        artifact_dir: "/nonexistent".into(),
+        // a batch window far past the read timeout: the lone correlated
+        // request waits in the batcher while the socket sits quiet —
+        // the regression was counting that wait as "idle"
+        max_wait: Duration::from_millis(250),
+        read_timeout: Some(Duration::from_millis(80)),
+        ..Default::default()
+    };
+    let coord = Arc::new(
+        Coordinator::start(&sys, &cfg, &ds.train_x, &ds.train_y, 0.1, 10).expect("start"),
+    );
+    let rcfg = reactor::ReactorConfig {
+        workers: 2,
+        read_timeout: coord.read_timeout,
+        max_conns: Some(1),
+    };
+    let handle = reactor::spawn(Arc::clone(&coord), "127.0.0.1:0", rcfg).expect("reactor");
+    let gauges = Arc::clone(&handle.gauges);
+    let mut c = Client::connect(handle.addr).expect("connect");
+    let t0 = Instant::now();
+    let corr = c
+        .send_pipelined(&Request::Predict { tenant: None, features: ds.test_x[0].clone() })
+        .expect("send");
+    let (id, resp) = c
+        .recv_pipelined()
+        .expect("an in-flight request must be answered, not reaped");
+    assert_eq!(id, corr);
+    assert!(matches!(resp, Response::Predict(_)), "{resp:?}");
+    assert!(
+        t0.elapsed() >= Duration::from_millis(150),
+        "the batch window must actually have straddled the read timeout: {:?}",
+        t0.elapsed()
+    );
+    assert_eq!(
+        gauges.reaped.load(Ordering::Relaxed),
+        0,
+        "a connection with an in-flight request must not be reaped"
+    );
+    // ...and once truly idle, the same connection reaps on schedule
+    let t1 = Instant::now();
+    assert!(
+        c.recv_pipelined().is_err(),
+        "an idle connection must be closed by the server"
+    );
+    assert!(
+        t1.elapsed() >= Duration::from_millis(50),
+        "hung up before the timeout: {:?}",
+        t1.elapsed()
+    );
+    drop(c);
+    handle.join();
+    assert_eq!(gauges.reaped.load(Ordering::Relaxed), 1, "the idle connection reaps");
 }
 
 #[test]

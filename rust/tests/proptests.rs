@@ -357,7 +357,7 @@ fn arb_snapshot(rng: &mut Prng) -> StatsSnapshot {
 }
 
 fn arb_request(rng: &mut Prng) -> Request {
-    match rng.usize(13) {
+    match rng.usize(16) {
         0 => Request::Ping,
         1 => Request::Stats,
         2 => Request::Health,
@@ -378,12 +378,23 @@ fn arb_request(rng: &mut Prng) -> Request {
         9 => Request::Trace { last: rng.usize(1024) },
         10 => Request::Governor,
         11 => Request::Timeline { last: rng.usize(4096) },
-        _ => Request::Snapshot,
+        12 => Request::Snapshot,
+        13 => Request::Hello { token: arb_string(rng) },
+        14 => Request::TenantUpdate {
+            name: arb_string(rng),
+            features: arb_features(rng),
+            targets: (0..1 + rng.usize(3)).map(|_| rng.range(-1.0, 1.0)).collect(),
+        },
+        _ => Request::BatchStream {
+            rows: (0..rng.usize(5))
+                .map(|_| PredictRow { tenant: arb_tenant(rng), features: arb_features(rng) })
+                .collect(),
+        },
     }
 }
 
 fn arb_response(rng: &mut Prng) -> Response {
-    match rng.usize(14) {
+    match rng.usize(16) {
         0 => Response::Pong,
         1 => Response::Stats(arb_string(rng)),
         2 => Response::Health(arb_string(rng)),
@@ -401,6 +412,10 @@ fn arb_response(rng: &mut Prng) -> Response {
         10 => Response::Snapshot(arb_snapshot(rng)),
         11 => Response::Governor(arb_string(rng)),
         12 => Response::Timeline((0..rng.usize(5)).map(|_| arb_timeline_event(rng)).collect()),
+        13 => Response::HelloOk {
+            tenants: (0..1 + rng.usize(3)).map(|_| arb_string(rng)).collect(),
+        },
+        14 => Response::Updated { name: arb_string(rng) },
         _ => Response::Error(arb_string(rng)),
     }
 }
@@ -455,6 +470,127 @@ fn prop_v1_truncated_payloads_never_panic() {
             frame::decode_request(ty, &payload[..cut]).is_err(),
             &format!("truncation at {cut} of {} accepted for {req:?}", payload.len()),
         )
+    });
+}
+
+#[test]
+fn prop_v1_correlation_envelope_roundtrips_and_rejects_nesting() {
+    // correlation-id echo (DESIGN.md §20): the id rides the envelope
+    // bit-exactly, truncation and trailing bytes are refused, and an
+    // envelope inside an envelope is refused outright
+    check("v1-corr-envelope", 300, |rng| {
+        let corr = rng.next_u64();
+        let req = match arb_request(rng) {
+            // HELLO is transport-level and never rides the envelope
+            Request::Hello { .. } => Request::Ping,
+            other => other,
+        };
+        let (ty, payload) = frame::encode_correlated_request(corr, &req);
+        ensure(ty == frame::T_CORR, "wrong envelope tag")?;
+        let (c2, r2) = frame::decode_correlated_request(&payload)?;
+        ensure(c2 == corr && r2 == req, &format!("corrupted envelope: {req:?} -> {r2:?}"))?;
+        let cut = rng.usize(payload.len());
+        ensure(
+            frame::decode_correlated_request(&payload[..cut]).is_err(),
+            "truncated envelope accepted",
+        )?;
+        let mut junk = payload.clone();
+        junk.push(rng.usize(256) as u8);
+        ensure(
+            frame::decode_correlated_request(&junk).is_err(),
+            "trailing bytes accepted",
+        )?;
+        let (_, nested) = frame::encode_correlated_request(corr, &Request::Ping);
+        let mut twice = corr.to_le_bytes().to_vec();
+        twice.push(frame::T_CORR);
+        twice.extend_from_slice(&nested);
+        ensure(
+            frame::decode_correlated_request(&twice).is_err(),
+            "nested envelope accepted",
+        )
+    });
+}
+
+#[test]
+fn prop_v1_correlated_responses_roundtrip() {
+    check("v1-corr-response", 300, |rng| {
+        let corr = rng.next_u64();
+        let resp = arb_response(rng);
+        let (ty, payload) = frame::encode_correlated_response(corr, &resp);
+        ensure(ty == frame::R_CORR, "wrong envelope tag")?;
+        let (c2, r2) = frame::decode_correlated_response(&payload)?;
+        ensure(c2 == corr && r2 == resp, &format!("corrupted: {resp:?} -> {r2:?}"))?;
+        let mut junk = payload.clone();
+        junk.push(rng.usize(256) as u8);
+        ensure(
+            frame::decode_correlated_response(&junk).is_err(),
+            "trailing bytes accepted",
+        )
+    });
+}
+
+#[test]
+fn prop_v1_stream_frames_roundtrip() {
+    // streaming-reply frames (DESIGN.md §20): per-row frames carry
+    // (corr, row index, prediction) bit-exactly; the end-of-stream
+    // frame carries (corr, row count, passes); truncation and trailing
+    // bytes are refused on both
+    check("v1-stream-frames", 300, |rng| {
+        let corr = rng.next_u64();
+        let index = rng.usize(1 << 20) as u32;
+        let p = arb_prediction(rng);
+        let (ty, payload) = frame::encode_stream_row(corr, index, &p);
+        ensure(ty == frame::R_STREAM_ROW, "wrong row tag")?;
+        let (c2, i2, p2) = frame::decode_stream_row(&payload)?;
+        ensure(
+            c2 == corr && i2 == index && p2 == p,
+            &format!("corrupted stream row: {p:?} -> {p2:?}"),
+        )?;
+        let cut = rng.usize(payload.len());
+        ensure(
+            frame::decode_stream_row(&payload[..cut]).is_err(),
+            "truncated row accepted",
+        )?;
+        let (rows, passes) = (rng.usize(1 << 16) as u32, rng.next_u64());
+        let (ty, end) = frame::encode_stream_end(corr, rows, passes);
+        ensure(ty == frame::R_STREAM_END, "wrong end tag")?;
+        let (c3, r3, p3) = frame::decode_stream_end(&end)?;
+        ensure(c3 == corr && r3 == rows && p3 == passes, "corrupted stream end")?;
+        let mut junk = end.clone();
+        junk.push(rng.usize(256) as u8);
+        ensure(frame::decode_stream_end(&junk).is_err(), "trailing bytes accepted")
+    });
+}
+
+#[test]
+fn prop_v1_frames_reassemble_from_single_byte_reads() {
+    // the reactor's incremental parser: a frame delivered one byte at a
+    // time must decode identically to the same frame read in one piece
+    check("v1-partial-read-fuzz", 150, |rng| {
+        let corr = rng.next_u64();
+        let req = match arb_request(rng) {
+            Request::Hello { .. } => Request::Ping,
+            other => other,
+        };
+        let (ty, payload) = frame::encode_correlated_request(corr, &req);
+        let wire = frame::frame_bytes(ty, &payload).map_err(|e| e.to_string())?;
+        let mut buf = Vec::new();
+        let mut out = None;
+        for (i, b) in wire.iter().enumerate() {
+            buf.push(*b);
+            match frame::take_frame(&buf).map_err(|e| e.to_string())? {
+                None => ensure(i + 1 < wire.len(), "frame complete, parser still hungry")?,
+                Some((t2, p2, used)) => {
+                    ensure(i + 1 == wire.len(), "parser finished early")?;
+                    ensure(used == wire.len(), "wrong consumed count")?;
+                    out = Some((t2, p2));
+                }
+            }
+        }
+        let (t2, p2) = out.ok_or_else(|| "no frame produced".to_string())?;
+        ensure(t2 == ty && p2 == payload, "byte-at-a-time reassembly differs")?;
+        let (c2, r2) = frame::decode_correlated_request(&p2)?;
+        ensure(c2 == corr && r2 == req, "decoded frame differs from the original")
     });
 }
 
